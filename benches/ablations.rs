@@ -1,0 +1,199 @@
+//! Ablation benches for the design choices DESIGN.md §8 calls out:
+//!
+//! 1. **M3 vs masked matmul** — the paper argues (§3) that handling model
+//!    independence by masking a dense block-diagonal matmul "wastes
+//!    resources"; we measure both native implementations.
+//! 2. **Batch-size locality** (§2.2/§5): fused pool-epoch time at fixed
+//!    total work across batch sizes.
+//! 3. **Group-width `W` sensitivity** — padding efficiency vs. kernel
+//!    regularity in the fused layout.
+//! 4. **Thread scaling** of the fused engine.
+//!
+//! Run: cargo bench --bench ablations [-- --quick]
+
+use parallel_mlps::bench_harness::{measure, BenchArgs};
+use parallel_mlps::coordinator::{train_parallel_native, BatchSet, SweepConfig};
+use parallel_mlps::data;
+use parallel_mlps::metrics::Table;
+use parallel_mlps::nn::init::init_pool;
+use parallel_mlps::nn::loss::Loss;
+use parallel_mlps::nn::parallel::ParallelEngine;
+use parallel_mlps::pool::PoolLayout;
+use parallel_mlps::tensor::{matmul, Tensor};
+use parallel_mlps::util::rng::Rng;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let reps = if args.quick { 3 } else { 8 };
+    let mut report = String::new();
+
+    ablation_m3_vs_masked(&mut report, reps);
+    ablation_batch_locality(&mut report, if args.quick { 2 } else { 4 });
+    ablation_group_width(&mut report, if args.quick { 2 } else { 4 });
+    ablation_threads(&mut report, if args.quick { 2 } else { 4 });
+
+    args.emit(&report);
+}
+
+/// §3: M3 (contiguous segmented reduction) vs a dense block-diagonal
+/// "masked" matmul that computes every (slot, hidden) pair and multiplies
+/// by the mask — the strategy the paper rejects.
+fn ablation_m3_vs_masked(report: &mut String, reps: usize) {
+    let mut rng = Rng::new(2);
+    let spec = SweepConfig::bench_pool();
+    let lay = PoolLayout::build(&spec);
+    let (b, o) = (32usize, 2usize);
+    let h_pad = lay.h_pad();
+    let m_pad = lay.m_pad();
+    let mut hact = Tensor::zeros(&[b, h_pad]);
+    rng.fill_normal(hact.data_mut(), 0.0, 1.0);
+    let mut w2 = Tensor::zeros(&[o, h_pad]);
+    rng.fill_normal(w2.data_mut(), 0.0, 1.0);
+    // dense mask [h_pad, m_pad]
+    let mut mask = Tensor::zeros(&[h_pad, m_pad]);
+    for (pos, &s) in lay.seg_slot.iter().enumerate() {
+        if s != parallel_mlps::pool::PAD_SLOT {
+            mask.set2(pos, s as usize, 1.0);
+        }
+    }
+    let spans: Vec<(usize, usize, usize)> = (0..lay.n_models())
+        .map(|m| {
+            let (s, e) = lay.span(m);
+            (lay.slot[m], s, e)
+        })
+        .collect();
+
+    let mut y_m3 = vec![0.0f32; b * m_pad * o];
+    let m3 = measure("M3 segmented reduction", 2, reps, || {
+        for bi in 0..b {
+            let hrow = &hact.data()[bi * h_pad..(bi + 1) * h_pad];
+            for &(slot, start, end) in &spans {
+                for oi in 0..o {
+                    let wrow = &w2.data()[oi * h_pad + start..oi * h_pad + end];
+                    y_m3[(bi * m_pad + slot) * o + oi] =
+                        matmul::dot(&hrow[start..end], wrow);
+                }
+            }
+        }
+        std::hint::black_box(y_m3[0]);
+    });
+
+    // masked: S[b,o,h] = H'[b,h]*W2[o,h] (materialized), then S @ mask
+    let mut s_buf = vec![0.0f32; b * o * h_pad];
+    let mut y_masked = vec![0.0f32; b * o * m_pad];
+    let masked = measure("masked block-diagonal matmul", 2, reps, || {
+        for bi in 0..b {
+            for oi in 0..o {
+                let hrow = &hact.data()[bi * h_pad..(bi + 1) * h_pad];
+                let wrow = &w2.data()[oi * h_pad..(oi + 1) * h_pad];
+                let srow = &mut s_buf[(bi * o + oi) * h_pad..(bi * o + oi + 1) * h_pad];
+                for i in 0..h_pad {
+                    srow[i] = hrow[i] * wrow[i];
+                }
+            }
+        }
+        matmul::matmul_nn(&s_buf, mask.data(), &mut y_masked, b * o, h_pad, m_pad, 1);
+        std::hint::black_box(y_masked[0]);
+    });
+
+    // correctness cross-check while we're here
+    let mut max_diff = 0.0f32;
+    for bi in 0..b {
+        for s in 0..m_pad {
+            for oi in 0..o {
+                let a = y_m3[(bi * m_pad + s) * o + oi];
+                let c = y_masked[(bi * o + oi) * m_pad + s];
+                max_diff = max_diff.max((a - c).abs());
+            }
+        }
+    }
+    assert!(max_diff < 1e-3, "m3 vs masked disagree: {max_diff}");
+
+    report.push_str("### Ablation: M3 vs masked block-diagonal matmul (200-model pool)\n\n```\n");
+    report.push_str(&m3.summary());
+    report.push('\n');
+    report.push_str(&masked.summary());
+    report.push_str(&format!(
+        "\nmasked/M3 time ratio: {:.2}x (paper predicts masking wastes work)\n```\n\n",
+        masked.stats.mean() / m3.stats.mean()
+    ));
+}
+
+/// §2.2: larger batches amortize locality — fixed total work, varying B.
+fn ablation_batch_locality(report: &mut String, epochs: usize) {
+    let mut rng = Rng::new(3);
+    let spec = SweepConfig::bench_pool();
+    let lay = PoolLayout::build(&spec);
+    let (n, f, o) = (2048usize, 10usize, 2usize);
+    let ds = data::random_regression(n, f, o, &mut rng);
+    let mut t = Table::new(
+        "Ablation: batch-size locality (fused native, fixed 2048 samples)",
+        &["batch", "pool-epoch s", "samples/s"],
+    );
+    for &b in &[16usize, 32, 64, 128, 256] {
+        let fused = init_pool(5, &lay, f, o);
+        let mut engine = ParallelEngine::new(lay.clone(), fused, Loss::Mse, f, o, b, 1);
+        let batches = BatchSet::new(&ds, b, true);
+        let oc = train_parallel_native(&mut engine, &batches, epochs + 1, 1, 0.01);
+        let s = oc.avg_timed_epoch_s();
+        t.row(vec![
+            b.to_string(),
+            format!("{s:.4}"),
+            format!("{:.0}", batches.n_samples as f64 / s),
+        ]);
+    }
+    report.push_str(&t.to_markdown());
+    report.push('\n');
+}
+
+/// Group width sweep: padding vs regularity in the fused layout.
+fn ablation_group_width(report: &mut String, epochs: usize) {
+    let mut rng = Rng::new(4);
+    let spec = SweepConfig::bench_pool();
+    let (n, f, o, b) = (1024usize, 10usize, 2usize, 32usize);
+    let ds = data::random_regression(n, f, o, &mut rng);
+    let mut t = Table::new(
+        "Ablation: group width W (fused native)",
+        &["W", "G", "H_pad", "pad_eff", "pool-epoch s"],
+    );
+    for &w in &[32usize, 64, 128, 256] {
+        let g = PoolLayout::default_group_models(&spec, w);
+        let lay = PoolLayout::build_with(&spec, w, g);
+        let fused = init_pool(5, &lay, f, o);
+        let mut engine = ParallelEngine::new(lay.clone(), fused, Loss::Mse, f, o, b, 1);
+        let batches = BatchSet::new(&ds, b, true);
+        let oc = train_parallel_native(&mut engine, &batches, epochs + 1, 1, 0.01);
+        t.row(vec![
+            w.to_string(),
+            g.to_string(),
+            lay.h_pad().to_string(),
+            format!("{:.3}", lay.padding_efficiency()),
+            format!("{:.4}", oc.avg_timed_epoch_s()),
+        ]);
+    }
+    report.push_str(&t.to_markdown());
+    report.push('\n');
+}
+
+/// Thread scaling of the fused engine (1 core here, so this documents the
+/// scheduler overhead floor; on multi-core boxes it shows the speedup).
+fn ablation_threads(report: &mut String, epochs: usize) {
+    let mut rng = Rng::new(5);
+    let spec = SweepConfig::bench_pool();
+    let lay = PoolLayout::build(&spec);
+    let (n, f, o, b) = (1024usize, 10usize, 2usize, 64usize);
+    let ds = data::random_regression(n, f, o, &mut rng);
+    let mut t = Table::new(
+        "Ablation: thread scaling (fused native)",
+        &["threads", "pool-epoch s"],
+    );
+    for &threads in &[1usize, 2, 4, 8] {
+        let fused = init_pool(5, &lay, f, o);
+        let mut engine = ParallelEngine::new(lay.clone(), fused, Loss::Mse, f, o, b, threads);
+        let batches = BatchSet::new(&ds, b, true);
+        let oc = train_parallel_native(&mut engine, &batches, epochs + 1, 1, 0.01);
+        t.row(vec![threads.to_string(), format!("{:.4}", oc.avg_timed_epoch_s())]);
+    }
+    report.push_str(&t.to_markdown());
+    report.push('\n');
+}

@@ -1,0 +1,126 @@
+//! Microbenchmarks over the native substrate: matmul kernels, M3 stage
+//! costs, activation throughput, scatter-add — the per-op numbers that
+//! explain (or refute) the end-to-end tables.
+//!
+//! Run: `cargo bench --bench microbench [-- --quick]`
+
+use parallel_mlps::bench_harness::{measure, BenchArgs};
+use parallel_mlps::data;
+use parallel_mlps::metrics::Timer;
+use parallel_mlps::nn::act::ALL_ACTS;
+use parallel_mlps::nn::init::{extract_model, init_pool};
+use parallel_mlps::nn::loss::Loss;
+use parallel_mlps::nn::mlp::MlpTrainer;
+use parallel_mlps::nn::optimizer::OptimizerKind;
+use parallel_mlps::nn::parallel::ParallelEngine;
+use parallel_mlps::pool::{PoolLayout, PoolSpec};
+use parallel_mlps::tensor::{matmul, scatter, Tensor};
+use parallel_mlps::util::rng::Rng;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let reps = if args.quick { 3 } else { 10 };
+    let mut rng = Rng::new(1);
+    let mut results = Vec::new();
+
+    // --- matmul kernels at MLP-relevant shapes -----------------------------
+    for &(m, k, n, tag) in &[
+        (32usize, 10usize, 2560usize, "fwd fused (B x F x H_pad)"),
+        (32, 10, 11, "fwd one model (B x F x h)"),
+        (2560, 32, 10, "dW1 fused (H_pad x B x F)"),
+    ] {
+        let mut a = Tensor::zeros(&[m, k]);
+        rng.fill_normal(a.data_mut(), 0.0, 1.0);
+        let mut b = Tensor::zeros(&[n, k]);
+        rng.fill_normal(b.data_mut(), 0.0, 1.0);
+        results.push(measure(&format!("matmul_nt {tag} [{m}x{k}x{n}]"), 2, reps, || {
+            let c = matmul::nt(&a, &b, 1);
+            std::hint::black_box(c.data()[0]);
+        }));
+    }
+
+    // --- activation throughput (71k elements, per function) ---------------
+    let mut xs = vec![0.0f32; 71_680];
+    rng.fill_normal(&mut xs, 0.0, 1.0);
+    let mut out = vec![0.0f32; xs.len()];
+    for act in ALL_ACTS {
+        results.push(measure(&format!("act {:<11} 71k elems", act.name()), 1, reps, || {
+            act.apply_slice(&xs, &mut out);
+            std::hint::black_box(out[0]);
+        }));
+    }
+
+    // --- scatter-add: paper semantics vs contiguous segment sum -----------
+    let src = Tensor::from_vec(xs[..32 * 2200].to_vec(), &[32, 2200]);
+    let spec = PoolSpec::from_grid(&[2, 4, 8, 16, 25], &ALL_ACTS, 4).unwrap();
+    let lay = PoolLayout::build(&spec);
+    let mut index = vec![0u32; 32 * 2200];
+    let mut spans = Vec::new();
+    {
+        let mut col = 0usize;
+        for m in 0..lay.n_models() {
+            let h = lay.spec().models()[m].0 as usize;
+            spans.push((col, col + h));
+            for r in 0..32 {
+                for c in col..col + h {
+                    index[r * 2200 + c] = lay.slot[m] as u32;
+                }
+            }
+            col += h;
+        }
+    }
+    results.push(measure("scatter_add_dim1 (indexed, paper form)", 1, reps, || {
+        let r = scatter::scatter_add_dim1(&src, &index, lay.m_pad());
+        std::hint::black_box(r.data()[0]);
+    }));
+    results.push(measure("segment_sum (contiguous, fused layout)", 1, reps, || {
+        let mut o = vec![0.0f32; spans.len()];
+        for row in 0..32 {
+            scatter::segment_sum_contiguous(
+                &src.data()[row * 2200..(row + 1) * 2200],
+                &spans,
+                &mut o,
+            );
+        }
+        std::hint::black_box(o[0]);
+    }));
+
+    // --- fused step vs sequential steps, end to end -------------------------
+    let f = 10;
+    let o = 2;
+    let b = 32;
+    let fused = init_pool(7, &lay, f, o);
+    let mut engine = ParallelEngine::new(lay.clone(), fused.clone(), Loss::Mse, f, o, b, 1);
+    let ds = data::random_regression(b, f, o, &mut rng);
+    let (x, y) = ds.batch(0, b);
+    results.push(measure("fused step (200 models, 1 batch)", 2, reps, || {
+        std::hint::black_box(engine.step(&x, &y, 0.01).len());
+    }));
+    let mut trainers: Vec<MlpTrainer> = (0..spec.n_models())
+        .map(|m| {
+            MlpTrainer::new(
+                extract_model(&fused, &lay, m),
+                spec.models()[m].1,
+                Loss::Mse,
+                OptimizerKind::Sgd,
+                1,
+            )
+        })
+        .collect();
+    results.push(measure("sequential steps (200 models, 1 batch)", 2, reps, || {
+        for t in trainers.iter_mut() {
+            std::hint::black_box(t.step(&x, &y, 0.01));
+        }
+    }));
+
+    // --- report -------------------------------------------------------------
+    let t = Timer::new();
+    let mut report = String::from("## microbench\n\n```\n");
+    for r in &results {
+        report.push_str(&r.summary());
+        report.push('\n');
+    }
+    report.push_str("```\n");
+    args.emit(&report);
+    eprintln!("(reporting took {:.2}s)", t.elapsed_s());
+}

@@ -1,0 +1,33 @@
+//! Table 1 reproduction — CPU, native engines.
+//!
+//! Paper layout: rows = features {5,10,50,100}, cols = samples {100, 1k,
+//! 10k} × batch {32,128,256}; sections Parallel / Sequential / ratio %.
+//!
+//! Run:  cargo bench --bench table1_cpu [-- --quick]
+//!       cargo bench --bench table1_cpu -- --paper-scale --samples 100
+//! Knobs: --samples/--features/--batches a,b,c  --epochs N --warmup N
+//!        --threads N --out FILE --max-samples-sequential N
+
+use parallel_mlps::bench_harness::BenchArgs;
+use parallel_mlps::coordinator::{render_paper_table, run_table, SweepConfig, TableKind};
+use parallel_mlps::pool::PoolSpec;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let pool = if args.paper_scale {
+        PoolSpec::paper_full() // h=1..100 x 10 acts x 10 reps = 10,000 models
+    } else {
+        SweepConfig::bench_pool() // scaled default: 200 models
+    };
+    let n_models = pool.n_models();
+    let mut cfg = SweepConfig::paper_grid(pool);
+    args.apply(&mut cfg);
+    eprintln!(
+        "table1: pool {} models, grid {:?} x {:?} x {:?}, epochs {} (warmup {})",
+        n_models, cfg.samples, cfg.features, cfg.batches, cfg.epochs, cfg.warmup
+    );
+    let cells = run_table(TableKind::NativeCpu, &cfg, None).expect("native sweep");
+    let title = format!("Table 1 (CPU, native engines, {n_models} models)");
+    let md = render_paper_table(&title, &cfg, &cells);
+    args.emit(&md);
+}

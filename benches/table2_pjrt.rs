@@ -1,0 +1,36 @@
+//! Table 2 reproduction — the accelerator analog: XLA CPU PJRT device.
+//!
+//! Parallel = ONE fused AOT artifact execution per batch (the Pallas M3
+//! train step); Sequential = one tiny artifact execution per model per
+//! batch. Per-execute dispatch overhead plays the role of CUDA kernel
+//! launch cost, reproducing the paper's GPU-side gap (0.017%–0.486%).
+//!
+//! Run:  cargo bench --bench table2_pjrt [-- --quick]
+//! Requires artifacts (`make artifacts`); pool is the manifest's "bench"
+//! pool (200 models) — sequential steps bake relu (timing-neutral).
+
+use parallel_mlps::bench_harness::{artifacts_dir, BenchArgs};
+use parallel_mlps::coordinator::{render_paper_table, run_table, SweepConfig, TableKind};
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let mut cfg = SweepConfig::paper_grid(SweepConfig::bench_pool());
+    args.apply(&mut cfg);
+    let dir = args
+        .args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(artifacts_dir);
+    eprintln!(
+        "table2: artifacts {}, grid {:?} x {:?} x {:?}, epochs {} (warmup {})",
+        dir.display(),
+        cfg.samples,
+        cfg.features,
+        cfg.batches,
+        cfg.epochs,
+        cfg.warmup
+    );
+    let cells = run_table(TableKind::Pjrt, &cfg, Some(&dir)).expect("pjrt sweep");
+    let md = render_paper_table("Table 2 (PJRT device engines, 200 models)", &cfg, &cells);
+    args.emit(&md);
+}

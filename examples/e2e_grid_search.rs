@@ -1,0 +1,180 @@
+//! END-TO-END driver — the full three-layer system on a real workload.
+//!
+//! Pipeline (Python never runs — artifacts are prebuilt by `make artifacts`):
+//!   1. synthesize a hard 4-class task (interleaved spirals lifted to 16-D),
+//!      split train/val/test, standardize;
+//!   2. load the AOT "e2e" pool (120 MLPs: h=1..12 × 10 activations) and
+//!      train ALL of them simultaneously through the PJRT fused train-step
+//!      artifact (Pallas M3 kernel inside), logging the loss curve;
+//!   3. evaluate every model on the validation set via the eval artifact,
+//!      rank, and pick the winner;
+//!   4. retrain the winner from the same init with the native sequential
+//!      engine and assert both paths agree — the fused grid search found
+//!      the same model a classical loop would have;
+//!   5. report test accuracy + timings, and write CSVs.
+//!
+//!     cargo run --release --example e2e_grid_search
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+
+use parallel_mlps::bench_harness::artifacts_dir;
+use parallel_mlps::coordinator::{train_parallel_pjrt, BatchSet};
+use parallel_mlps::data;
+use parallel_mlps::metrics::{Curve, Timer};
+use parallel_mlps::nn::init::{extract_model, init_pool};
+use parallel_mlps::nn::loss::Loss;
+use parallel_mlps::nn::mlp::MlpTrainer;
+use parallel_mlps::nn::optimizer::OptimizerKind;
+use parallel_mlps::runtime::{PjrtParallelEngine, PjrtRuntime};
+use parallel_mlps::selection::{best_per_act, rank_models, report};
+use parallel_mlps::util::rng::Rng;
+
+const F: usize = 16;
+const O: usize = 4;
+const B: usize = 64;
+const EPOCHS: usize = 60;
+const WARMUP: usize = 2;
+const LR: f32 = 0.35;
+const SEED: u64 = 2022;
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir();
+    println!("== ParallelMLPs end-to-end grid search ==");
+    println!("artifacts: {}", dir.display());
+    let rt = PjrtRuntime::new(&dir)?;
+    let layout = rt.manifest.layout("e2e")?;
+    let spec = layout.spec().clone();
+    println!(
+        "pool: {} models (h=1..12 x 10 activations), H_pad={}, platform={}",
+        spec.n_models(),
+        layout.h_pad(),
+        rt.platform()
+    );
+
+    // 1. data
+    let mut rng = Rng::new(SEED);
+    let ds = data::spirals(4000, F, O, &mut rng);
+    let mut split = ds.split(0.7, 0.15, &mut rng);
+    let (mean, std) = split.train.standardize();
+    split.val.standardize_with(&mean, &std);
+    split.test.standardize_with(&mean, &std);
+    println!(
+        "data: spirals {}x{F} -> {} classes (train {}, val {}, test {})",
+        ds.len(),
+        O,
+        split.train.len(),
+        split.val.len(),
+        split.test.len()
+    );
+
+    // 2. fused training of all 120 models through the PJRT artifact
+    let fused0 = init_pool(SEED, &layout, F, O);
+    let mut engine = PjrtParallelEngine::new(&rt, "e2e", F, B, Loss::Ce, &fused0)?;
+    let batches = BatchSet::new(&split.train, B, true);
+    let t_train = Timer::new();
+    let outcome = train_parallel_pjrt(&mut engine, &batches, EPOCHS, WARMUP, LR)?;
+    let train_s = t_train.elapsed_s();
+    println!(
+        "\ntrained {} models x {EPOCHS} epochs in {train_s:.2}s \
+         (avg pool-epoch {:.3}s, {} batches/epoch)",
+        spec.n_models(),
+        outcome.avg_timed_epoch_s(),
+        batches.n_batches()
+    );
+    let mut curve = Curve::new("mean_train_loss");
+    for &(e, v) in &outcome.train_curve.points {
+        curve.push(e, v);
+    }
+    std::fs::write("e2e_loss_curve.csv", curve.to_csv())?;
+    println!(
+        "loss curve: {:.4} -> {:.4} (e2e_loss_curve.csv)",
+        curve.first().unwrap_or(f64::NAN),
+        curve.last().unwrap_or(f64::NAN)
+    );
+
+    // 3. validate every model with the eval artifact, in B-sized chunks
+    let (val_losses, val_accs) = eval_dataset(&engine, &split.val)?;
+    let ranked = rank_models(&spec, &val_losses, &val_accs, Loss::Ce);
+    println!("\n{}", report(&ranked, Loss::Ce, 10));
+    println!("best architecture per activation:");
+    for (act, r) in best_per_act(&ranked) {
+        println!("  {:<11} h={:<3} val_acc={:.3}", act.name(), r.hidden, r.val_metric);
+    }
+    let best = ranked[0].clone();
+
+    // 4. cross-check: retrain the winner sequentially from the same init
+    let t_seq = Timer::new();
+    let mut seq = MlpTrainer::new(
+        extract_model(&fused0, &layout, best.index),
+        best.act,
+        Loss::Ce,
+        OptimizerKind::Sgd,
+        1,
+    );
+    for _ in 0..EPOCHS {
+        for (x, y) in &batches.batches {
+            seq.step(x, y, LR);
+        }
+    }
+    let seq_s = t_seq.elapsed_s();
+    let fused_best = extract_model(&engine.params_fused()?, &layout, best.index);
+    let diff = fused_best.max_abs_diff(&seq.params);
+    println!(
+        "\nwinner retrained sequentially in {seq_s:.2}s; fused-vs-sequential \
+         param diff {diff:.2e} (must be < 1e-2 after {EPOCHS} epochs of drift)"
+    );
+    anyhow::ensure!(diff < 1e-2, "fused and sequential training diverged: {diff}");
+
+    // 5. test accuracy of the winner (native forward on extracted params)
+    let (test_loss, test_acc) = seq.evaluate(&split.test.x, &split.test.targets);
+    println!(
+        "\nwinner {}-{}-{} ({}): val_acc={:.3} test_acc={:.3} test_loss={:.4}",
+        F,
+        best.hidden,
+        O,
+        best.act.name(),
+        best.val_metric,
+        test_acc,
+        test_loss
+    );
+    println!(
+        "fused grid search: {} models in {train_s:.2}s via one PJRT artifact per batch. \
+         (Dispatch-bound sequential-vs-fused timing is Table 2's subject — \
+         `cargo bench --bench table2_pjrt`.)",
+        spec.n_models(),
+    );
+    anyhow::ensure!(test_acc > 0.6, "spirals should be learnable: {test_acc}");
+    println!("\nE2E OK");
+    Ok(())
+}
+
+/// Evaluate the whole dataset through the fixed-batch eval artifact,
+/// weighting by real rows (last chunk padded by wrapping).
+fn eval_dataset(
+    engine: &PjrtParallelEngine,
+    ds: &data::Dataset,
+) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+    let n_models = engine.layout.n_models();
+    let mut lsum = vec![0.0f32; n_models];
+    let mut msum = vec![0.0f32; n_models];
+    let mut total = 0usize;
+    let mut start = 0;
+    while start + B <= ds.len() {
+        let (x, y) = ds.batch(start, B);
+        let (l, m) = engine.evaluate(&x, &y)?;
+        for i in 0..n_models {
+            lsum[i] += l[i] * B as f32;
+            msum[i] += m[i] * B as f32;
+        }
+        total += B;
+        start += B;
+    }
+    anyhow::ensure!(total > 0, "validation set smaller than one batch");
+    let inv = 1.0 / total as f32;
+    Ok((
+        lsum.iter().map(|v| v * inv).collect(),
+        msum.iter().map(|v| v * inv).collect(),
+    ))
+}
+

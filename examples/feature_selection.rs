@@ -1,0 +1,95 @@
+//! Feature selection via ParallelMLPs (paper §7 future work): repeat the
+//! SAME architecture with different per-model input masks applied before
+//! the first projection, train the whole population fused, and rank the
+//! feature subsets by validation loss.
+//!
+//! Workload: Friedman #1 — features 0..5 carry signal, 5..10 are pure
+//! noise. The informative subsets must rank above the noise subsets.
+//!
+//!     cargo run --release --example feature_selection
+
+use parallel_mlps::coordinator::{eval_in_batches_native, train_parallel_native, BatchSet};
+use parallel_mlps::data;
+use parallel_mlps::metrics::Table;
+use parallel_mlps::nn::act::Act;
+use parallel_mlps::nn::init::init_pool;
+use parallel_mlps::nn::loss::Loss;
+use parallel_mlps::nn::parallel::ParallelEngine;
+use parallel_mlps::pool::{PoolLayout, PoolSpec};
+use parallel_mlps::util::rng::Rng;
+
+const F: usize = 10;
+const H: u32 = 12;
+const EPOCHS: usize = 120;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(404);
+    let ds = data::friedman1(2000, F, 0.3, &mut rng);
+    let mut split = ds.split(0.7, 0.3, &mut rng);
+    let (mean, std) = split.train.standardize();
+    split.val.standardize_with(&mean, &std);
+
+    // candidate feature subsets, one model per subset (same arch: H relu)
+    let subsets: Vec<(&str, Vec<bool>)> = vec![
+        ("all 10", vec![true; F]),
+        ("informative 0..5", mask(&[0, 1, 2, 3, 4])),
+        ("noise 5..10", mask(&[5, 6, 7, 8, 9])),
+        ("half informative 0..3", mask(&[0, 1, 2])),
+        ("interaction pair 0,1", mask(&[0, 1])),
+        ("quadratic feat 2", mask(&[2])),
+        ("linear feats 3,4", mask(&[3, 4])),
+        ("mixed 0,1,7,9", mask(&[0, 1, 7, 9])),
+    ];
+    let spec = PoolSpec::new(vec![(H, Act::Relu); subsets.len()])?;
+    let layout = PoolLayout::build(&spec);
+    println!(
+        "Feature selection: {} candidate subsets, each a {F}-{H}-1 relu MLP, trained fused",
+        subsets.len()
+    );
+
+    let fused = init_pool(404, &layout, F, 1);
+    let mut engine = ParallelEngine::new(layout, fused, Loss::Mse, F, 1, 50, 2);
+    engine.set_feature_masks(&subsets.iter().map(|(_, m)| m.clone()).collect::<Vec<_>>());
+
+    let batches = BatchSet::new(&split.train, 50, true);
+    let oc = train_parallel_native(&mut engine, &batches, EPOCHS, 2, 0.02);
+    println!(
+        "trained {} epochs in {:.1}s (avg {:.3}s)\n",
+        EPOCHS,
+        oc.total_s(),
+        oc.avg_timed_epoch_s()
+    );
+
+    let (val_losses, _) = eval_in_batches_native(&mut engine, &split.val, 50);
+    let mut ranked: Vec<(usize, f32)> =
+        val_losses.iter().copied().enumerate().collect();
+    ranked.sort_by(|a, b| a.1.total_cmp(&b.1));
+
+    let mut t = Table::new("Feature subsets ranked by val MSE", &["rank", "subset", "val_mse"]);
+    for (rank, (i, l)) in ranked.iter().enumerate() {
+        t.row(vec![(rank + 1).to_string(), subsets[*i].0.to_string(), format!("{l:.4}")]);
+    }
+    println!("{}", t.to_markdown());
+
+    let best = subsets[ranked[0].0].0;
+    let pos = |name: &str| ranked.iter().position(|(i, _)| subsets[*i].0 == name).unwrap();
+    println!("best subset: {best}");
+    anyhow::ensure!(
+        pos("informative 0..5") < pos("noise 5..10"),
+        "informative features must beat pure noise"
+    );
+    anyhow::ensure!(
+        ranked[0].0 == 0 || subsets[ranked[0].0].0.contains("informative"),
+        "winner should use the informative features: {best}"
+    );
+    println!("\nfeature_selection OK");
+    Ok(())
+}
+
+fn mask(keep: &[usize]) -> Vec<bool> {
+    let mut m = vec![false; F];
+    for &k in keep {
+        m[k] = true;
+    }
+    m
+}

@@ -1,0 +1,66 @@
+//! Quickstart: train a small heterogeneous pool of MLPs *in parallel* on
+//! a synthetic classification task and print the best architectures.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! This uses the native fused engine (no artifacts required) — the
+//! 30-second tour of the library. See `e2e_grid_search` for the full
+//! AOT/PJRT pipeline.
+
+use parallel_mlps::config::ExperimentConfig;
+use parallel_mlps::coordinator::run_experiment;
+use parallel_mlps::data::SynthKind;
+use parallel_mlps::nn::act::{Act, ALL_ACTS};
+use parallel_mlps::nn::loss::Loss;
+use parallel_mlps::selection::report;
+
+fn main() -> anyhow::Result<()> {
+    // a pool of 10 hidden sizes x 10 activations = 100 MLPs, trained at once
+    let cfg = ExperimentConfig {
+        name: "quickstart".into(),
+        dataset: SynthKind::Spirals,
+        samples: 1200,
+        features: 8,
+        out: 3,
+        hidden_sizes: (1..=10).collect(),
+        acts: ALL_ACTS.to_vec(),
+        repeats: 1,
+        epochs: 40,
+        warmup_epochs: 2,
+        batch: 32,
+        lr: 0.25,
+        loss: Loss::Ce,
+        seed: 7,
+        ..Default::default()
+    };
+    println!(
+        "Training {} MLPs (h=1..10 x {} activations) on {} in parallel...",
+        cfg.pool_spec()?.n_models(),
+        cfg.acts.len(),
+        cfg.dataset.name()
+    );
+    let rep = run_experiment(&cfg)?;
+    println!(
+        "done: {} epochs, avg epoch {:.3}s, total {:.2}s\n",
+        rep.outcome.epoch_times.len(),
+        rep.outcome.avg_timed_epoch_s(),
+        rep.outcome.total_s()
+    );
+    println!("{}", report(&rep.ranked, cfg.loss, 10));
+
+    let best = &rep.ranked[0];
+    println!(
+        "winner: {}-{}-{} with {} (val acc {:.1}%)",
+        cfg.features,
+        best.hidden,
+        cfg.out,
+        best.act.name(),
+        best.val_metric * 100.0
+    );
+    // the spiral task is non-linear: identity-activation models can't win
+    assert!(
+        best.act != Act::Identity,
+        "a linear model should not win on spirals"
+    );
+    Ok(())
+}

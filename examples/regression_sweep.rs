@@ -1,0 +1,80 @@
+//! Regression workload (paper §5: "ParallelMLPs can be applied for both
+//! classification and regression tasks"): Friedman #1 benchmark, MSE loss,
+//! with the optimizer-extension knob (momentum) exercised natively.
+//!
+//!     cargo run --release --example regression_sweep
+
+use parallel_mlps::config::ExperimentConfig;
+use parallel_mlps::coordinator::run_experiment;
+use parallel_mlps::data::SynthKind;
+use parallel_mlps::nn::act::Act;
+use parallel_mlps::nn::loss::Loss;
+use parallel_mlps::nn::optimizer::OptimizerKind;
+use parallel_mlps::selection::report;
+
+fn main() -> anyhow::Result<()> {
+    let base = ExperimentConfig {
+        name: "friedman1".into(),
+        dataset: SynthKind::Friedman1,
+        samples: 1500,
+        features: 10, // 5 informative + 5 noise dims
+        out: 1,
+        noise: 0.5,
+        hidden_sizes: vec![1, 2, 4, 8, 16, 32, 50],
+        acts: vec![Act::Relu, Act::Tanh, Act::Gelu, Act::Sigmoid, Act::Identity],
+        repeats: 2,
+        epochs: 100,
+        warmup_epochs: 2,
+        batch: 50,
+        lr: 0.02,
+        loss: Loss::Mse,
+        seed: 1717,
+        ..Default::default()
+    };
+    println!(
+        "Friedman#1 regression: {} models (7 widths x 5 acts x 2 repeats)",
+        base.pool_spec()?.n_models()
+    );
+    let rep = run_experiment(&base)?;
+    println!(
+        "trained in {:.1}s (avg epoch {:.3}s)\n",
+        rep.outcome.total_s(),
+        rep.outcome.avg_timed_epoch_s()
+    );
+    println!("{}", report(&rep.ranked, base.loss, 10));
+
+    let best = &rep.ranked[0];
+    let worst = rep.ranked.last().unwrap();
+    println!(
+        "best: h={} {} (val_mse {:.4}); worst: h={} {} (val_mse {:.4})",
+        best.hidden,
+        best.act.name(),
+        best.val_loss,
+        worst.hidden,
+        worst.act.name(),
+        worst.val_loss
+    );
+    // friedman1 is nonlinear: a linear (identity) model must not win
+    anyhow::ensure!(best.act != Act::Identity, "linear model won a nonlinear task");
+    // capacity should help: the winner needs more than 1 hidden unit
+    anyhow::ensure!(best.hidden > 1, "h=1 should underfit friedman1");
+
+    // extension: momentum on the sequential engine for the winner
+    let mom = ExperimentConfig {
+        optimizer: OptimizerKind::Momentum { beta: 0.9 },
+        strategy: parallel_mlps::config::Strategy::NativeSequential,
+        hidden_sizes: vec![best.hidden],
+        acts: vec![best.act],
+        repeats: 1,
+        epochs: 40,
+        lr: 0.002, // momentum multiplies the effective step by ~1/(1-beta)
+        ..base.clone()
+    };
+    let rep2 = run_experiment(&mom)?;
+    println!(
+        "\nwinner refit with momentum (sequential engine): val_mse {:.4}",
+        rep2.ranked[0].val_loss
+    );
+    println!("\nregression_sweep OK");
+    Ok(())
+}

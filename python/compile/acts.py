@@ -1,0 +1,79 @@
+"""Activation-function registry — the cross-language contract.
+
+The activation *order* here is normative: `rust/src/nn/act.rs` mirrors it
+and `artifacts/manifest.json` refers to activations by these ids. The set
+is the paper's ten (§4.2): Identity, Sigmoid, Tanh, ReLU, ELU, SeLU, GeLU,
+LeakyReLU, Hardshrink, Mish.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SELU_LAMBDA = 1.0507009873554805
+SELU_ALPHA = 1.6732632423543772
+LEAKY_SLOPE = 0.01
+HARDSHRINK_LAMBDA = 0.5
+
+
+def identity(x):
+    return x
+
+
+def sigmoid(x):
+    return jax.nn.sigmoid(x)
+
+
+def tanh(x):
+    return jnp.tanh(x)
+
+
+def relu(x):
+    return jax.nn.relu(x)
+
+
+def elu(x):
+    return jax.nn.elu(x, alpha=1.0)
+
+
+def selu(x):
+    return SELU_LAMBDA * jnp.where(x > 0, x, SELU_ALPHA * jnp.expm1(x))
+
+
+def gelu(x):
+    # exact (erf-based) GELU, matching torch's default and the Rust mirror
+    return jax.nn.gelu(x, approximate=False)
+
+
+def leaky_relu(x):
+    return jnp.where(x >= 0, x, LEAKY_SLOPE * x)
+
+
+def hardshrink(x):
+    return jnp.where(jnp.abs(x) > HARDSHRINK_LAMBDA, x, 0.0)
+
+
+def mish(x):
+    return x * jnp.tanh(jax.nn.softplus(x))
+
+
+# id -> (name, fn); order is the contract.
+ACTIVATIONS = [
+    ("identity", identity),
+    ("sigmoid", sigmoid),
+    ("tanh", tanh),
+    ("relu", relu),
+    ("elu", elu),
+    ("selu", selu),
+    ("gelu", gelu),
+    ("leaky_relu", leaky_relu),
+    ("hardshrink", hardshrink),
+    ("mish", mish),
+]
+
+ACT_NAMES = [name for name, _ in ACTIVATIONS]
+ACT_IDS = {name: i for i, (name, _) in enumerate(ACTIVATIONS)}
+
+
+def act_fn(act_id: int):
+    return ACTIVATIONS[act_id][1]

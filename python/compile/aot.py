@@ -1,0 +1,182 @@
+"""AOT driver — lower every spec'd program to HLO text + manifest.json.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Incremental: the manifest records a hash of the compile-path sources; if it
+matches and every artifact file exists, this script is a no-op, keeping
+``make artifacts`` cheap and Python strictly out of the run path.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, specs
+from .pool import build_layout
+
+SRC_FILES = (
+    "acts.py",
+    "pool.py",
+    "model.py",
+    "specs.py",
+    "aot.py",
+    "kernels/m3.py",
+    "kernels/ref.py",
+)
+
+
+def spec_hash() -> str:
+    here = pathlib.Path(__file__).parent
+    h = hashlib.sha256()
+    h.update(jax.__version__.encode())
+    for rel in SRC_FILES:
+        h.update(rel.encode())
+        h.update((here / rel).read_bytes())
+    return h.hexdigest()
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.float32)
+
+
+def build_fn_and_args(spec: specs.ArtifactSpec, layouts):
+    f, b, o = spec.features, spec.batch, spec.out
+    if spec.kind.startswith("parallel"):
+        lay = layouts[spec.pool_name]
+        w1 = f32(lay.h_pad, f)
+        b1 = f32(lay.h_pad)
+        w2 = f32(o, lay.h_pad)
+        b2 = f32(lay.m_pad, o)
+        oh = f32(lay.n_groups, lay.group_width, lay.group_models)
+        x = f32(b, f)
+        y = f32(b, o)
+        lr = f32()
+        if spec.kind == "parallel_train":
+            return model.make_parallel_train_step(lay, spec.loss), (w1, b1, w2, b2, oh, x, y, lr)
+        if spec.kind == "parallel_eval":
+            return model.make_parallel_eval(lay, spec.loss), (w1, b1, w2, b2, oh, x, y)
+        if spec.kind == "parallel_predict":
+            return model.make_parallel_predict(lay), (w1, b1, w2, b2, oh, x)
+    else:
+        h = spec.hidden
+        w1 = f32(h, f)
+        b1 = f32(h)
+        w2 = f32(o, h)
+        b2 = f32(o)
+        x = f32(b, f)
+        y = f32(b, o)
+        lr = f32()
+        if spec.kind == "seq_train":
+            return model.make_sequential_train_step(spec.act, spec.loss), (w1, b1, w2, b2, x, y, lr)
+        if spec.kind == "seq_eval":
+            return model.make_sequential_eval(spec.act, spec.loss), (w1, b1, w2, b2, x, y)
+    raise ValueError(f"unknown kind {spec.kind!r}")
+
+
+def shapes_of(tree):
+    return [list(s.shape) for s in tree]
+
+
+def pool_manifest_entry(lay):
+    return {
+        "models": [[h, a] for h, a in lay.spec.models],
+        "group_width": lay.group_width,
+        "group_models": lay.group_models,
+        "n_groups": lay.n_groups,
+        "h_pad": lay.h_pad,
+        "m_pad": lay.m_pad,
+        "checksum": f"{lay.checksum():016x}",
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest_path = out_dir / "manifest.json"
+    digest = spec_hash()
+
+    if manifest_path.exists() and not args.force and args.only is None:
+        try:
+            old = json.loads(manifest_path.read_text())
+        except json.JSONDecodeError:
+            old = {}
+        if old.get("spec_hash") == digest and all(
+            (out_dir / a["file"]).exists() for a in old.get("artifacts", [])
+        ):
+            print(f"artifacts up to date ({len(old['artifacts'])} programs), skipping")
+            return 0
+
+    all_specs = specs.build_specs()
+    if args.only is not None:
+        all_specs = tuple(s for s in all_specs if args.only in s.name)
+
+    layouts = {name: build_layout(pool) for name, pool in specs.POOLS.items()}
+
+    entries = []
+    t_all = time.time()
+    for i, spec in enumerate(all_specs):
+        fn, shape_args = build_fn_and_args(spec, layouts)
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*shape_args)
+        text = to_hlo_text(lowered)
+        fname = f"{spec.name}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        entry = {
+            "name": spec.name,
+            "kind": spec.kind,
+            "file": fname,
+            "features": spec.features,
+            "batch": spec.batch,
+            "out": spec.out,
+            "loss": spec.loss,
+            "inputs": shapes_of(shape_args),
+        }
+        if spec.kind.startswith("parallel"):
+            entry["pool"] = spec.pool_name
+        else:
+            entry["hidden"] = spec.hidden
+            entry["act"] = spec.act
+        entries.append(entry)
+        print(
+            f"[{i + 1}/{len(all_specs)}] {spec.name}: {len(text) / 1024:.0f} KiB "
+            f"in {time.time() - t0:.2f}s"
+        )
+
+    manifest = {
+        "version": 1,
+        "spec_hash": digest if args.only is None else "partial",
+        "pools": {name: pool_manifest_entry(lay) for name, lay in layouts.items()},
+        "artifacts": entries,
+    }
+    manifest_path.write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {len(entries)} artifacts in {time.time() - t_all:.1f}s -> {manifest_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,145 @@
+"""L1 — the paper's Modified Matrix Multiplication (M3) as Pallas kernels.
+
+M3 replaces the output projection's matmul with (i) a broadcast
+element-wise multiply and (ii) a segmented scatter-add, so every fused
+model keeps an independent gradient path (paper §3, Fig. 2).
+
+TPU adaptation (DESIGN.md §5): the scatter-add is realized as a matmul
+against a per-group one-hot segment matrix — a scatter with contiguous
+segments *is* a one-hot matmul, and that form runs on the MXU instead of
+fighting the vector unit with dynamic indices. The grid tiles
+(batch-block × model-group); each grid step holds one `[Bb,W]` activation
+tile, one `[O,W]` weight tile and one `[W,G]` one-hot tile in VMEM.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO (see /opt/xla-example).
+
+Shapes (from the pool layout, DESIGN.md §4):
+    hact   [B, H_pad]      activated hidden, padded group layout
+    w2     [O, H_pad]      fused output weights
+    onehot [NG, W, G]      scatter matrix per group
+    y      [B, M_pad, O]   independent per-slot outputs
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def batch_block(batch: int, cap: int = 128) -> int:
+    """Largest divisor of `batch` that is <= cap (VMEM-friendly tile)."""
+    bb = min(batch, cap)
+    while batch % bb != 0:
+        bb -= 1
+    return bb
+
+
+def _fwd_kernel(h_ref, w_ref, oh_ref, y_ref):
+    h = h_ref[...]  # (Bb, W)
+    w = w_ref[...]  # (O, W)
+    oh = oh_ref[0]  # (W, G)
+    bb, width = h.shape
+    o = w.shape[0]
+    # paper step (i): broadcast element-wise multiply (VPU work)
+    s = h[:, None, :] * w[None, :, :]  # (Bb, O, W)
+    # paper step (ii): scatter-add == one-hot matmul (MXU work)
+    y = jnp.dot(s.reshape(bb * o, width), oh, preferred_element_type=jnp.float32)
+    y_ref[...] = y.reshape(bb, o, -1).transpose(0, 2, 1)  # (Bb, G, O)
+
+
+def _bwd_kernel(h_ref, w_ref, oh_ref, dy_ref, dh_ref, dw_ref):
+    h = h_ref[...]  # (Bb, W)
+    w = w_ref[...]  # (O, W)
+    oh = oh_ref[0]  # (W, G)
+    dy = dy_ref[...]  # (Bb, G, O)
+    bb, width = h.shape
+    o = w.shape[0]
+    g = oh.shape[1]
+    # gather the cotangent back onto hidden rows:
+    #   t[w, b, o] = sum_i onehot[w, i] * dy[b, i, o]
+    t = jnp.dot(oh, dy.transpose(1, 0, 2).reshape(g, bb * o), preferred_element_type=jnp.float32)
+    t = t.reshape(width, bb, o)
+    # dH'[b, w] = sum_o t[w, b, o] * W2[o, w]
+    dh_ref[...] = (t.transpose(1, 0, 2) * w.T[None, :, :]).sum(axis=-1)
+    # dW2[o, w] = sum_b H'[b, w] * t[w, b, o]   (accumulated over batch blocks)
+    contrib = (t * h.T[:, :, None]).sum(axis=1).T  # (O, W)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        dw_ref[...] = jnp.zeros_like(dw_ref)
+
+    dw_ref[...] += contrib
+
+
+def m3_forward(hact, w2, onehot, *, batch_block_cap: int = 128):
+    batch, h_pad = hact.shape
+    out_dim = w2.shape[0]
+    ng, width, g = onehot.shape
+    assert h_pad == ng * width, (h_pad, ng, width)
+    bb = batch_block(batch, batch_block_cap)
+    grid = (ng, batch // bb)
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, width), lambda gi, bi: (bi, gi)),
+            pl.BlockSpec((out_dim, width), lambda gi, bi: (0, gi)),
+            pl.BlockSpec((1, width, g), lambda gi, bi: (gi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, g, out_dim), lambda gi, bi: (bi, gi, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, ng * g, out_dim), hact.dtype),
+        interpret=True,
+    )(hact, w2, onehot)
+
+
+def m3_backward(hact, w2, onehot, dy, *, batch_block_cap: int = 128):
+    batch, h_pad = hact.shape
+    out_dim = w2.shape[0]
+    ng, width, g = onehot.shape
+    bb = batch_block(batch, batch_block_cap)
+    grid = (ng, batch // bb)
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, width), lambda gi, bi: (bi, gi)),
+            pl.BlockSpec((out_dim, width), lambda gi, bi: (0, gi)),
+            pl.BlockSpec((1, width, g), lambda gi, bi: (gi, 0, 0)),
+            pl.BlockSpec((bb, g, out_dim), lambda gi, bi: (bi, gi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, width), lambda gi, bi: (bi, gi)),
+            pl.BlockSpec((out_dim, width), lambda gi, bi: (0, gi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, h_pad), hact.dtype),
+            jax.ShapeDtypeStruct((out_dim, h_pad), w2.dtype),
+        ],
+        interpret=True,
+    )(hact, w2, onehot, dy)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def m3(hact, w2, onehot):
+    """Differentiable M3: per-slot outputs `[B, M_pad, O]`.
+
+    The one-hot scatter matrix is data (built by the Rust coordinator from
+    the pool layout), not a parameter; its cotangent is zero.
+    """
+    return m3_forward(hact, w2, onehot)
+
+
+def _m3_fwd(hact, w2, onehot):
+    return m3_forward(hact, w2, onehot), (hact, w2, onehot)
+
+
+def _m3_bwd(res, dy):
+    hact, w2, onehot = res
+    dh, dw2 = m3_backward(hact, w2, onehot, dy)
+    return dh, dw2, jnp.zeros_like(onehot)
+
+
+m3.defvjp(_m3_fwd, _m3_bwd)

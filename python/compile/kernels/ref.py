@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for the M3 kernel and the fused pool forward.
+
+Two independent formulations guard against a bug hiding in the one-hot
+construction itself:
+
+* `m3_ref` — flatten the per-group one-hot into the full block-diagonal
+  scatter matrix `P[H_pad, M_pad]` and contract with one einsum. This is
+  exactly the "masked matmul" the paper rejects for performance (§3) but
+  embraces as a definitionally-obvious oracle.
+* `m3_loop_ref` — the definition itself: per model slot, a tiny dense
+  matmul over that model's hidden span.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..pool import PoolLayout
+
+
+def flatten_onehot(onehot: np.ndarray) -> np.ndarray:
+    """[NG, W, G] -> block-diagonal [H_pad, M_pad]."""
+    ng, w, g = onehot.shape
+    full = np.zeros((ng * w, ng * g), dtype=onehot.dtype)
+    for gi in range(ng):
+        full[gi * w : (gi + 1) * w, gi * g : (gi + 1) * g] = onehot[gi]
+    return full
+
+
+def m3_ref(hact, w2, onehot):
+    """y[b,m,o] = sum_h hact[b,h] * w2[o,h] * P[h,m]."""
+    p = flatten_onehot(np.asarray(onehot))
+    s = hact[:, None, :] * w2[None, :, :]  # (B, O, H)
+    y = jnp.einsum("boh,hm->bmo", s, jnp.asarray(p))
+    return y
+
+
+def m3_loop_ref(hact, w2, layout: PoolLayout):
+    """Definitional: per real slot, a dense matmul over the model's span."""
+    batch = hact.shape[0]
+    out_dim = w2.shape[0]
+    y = np.zeros((batch, layout.m_pad, out_dim), dtype=np.float32)
+    hact = np.asarray(hact)
+    w2 = np.asarray(w2)
+    for m in range(layout.n_models):
+        h, _ = layout.spec.models[m]
+        start = layout.hidden_start[m]
+        s = layout.slot[m]
+        y[:, s, :] = hact[:, start : start + h] @ w2[:, start : start + h].T
+    return jnp.asarray(y)
+
+
+def m3_vjp_ref(hact, w2, onehot, dy):
+    """Reference cotangents via the flattened scatter matrix."""
+    p = jnp.asarray(flatten_onehot(np.asarray(onehot)))
+    # t[b,h,o] = sum_m P[h,m] dy[b,m,o]
+    t = jnp.einsum("hm,bmo->bho", p, dy)
+    dh = jnp.einsum("bho,oh->bh", t, w2)
+    dw2 = jnp.einsum("bho,bh->oh", t, hact)
+    return dh, dw2
+
+
+def segment_check(layout: PoolLayout) -> None:
+    """Invariants every layout must satisfy (shared with rust proptests)."""
+    seg = layout.seg_slot
+    assert seg.shape == (layout.h_pad,)
+    # each real slot's rows are contiguous and sized h
+    for m in range(layout.n_models):
+        h, _ = layout.spec.models[m]
+        s = layout.slot[m]
+        rows = np.nonzero(seg == s)[0]
+        assert len(rows) == h, (m, h, rows)
+        assert rows[0] == layout.hidden_start[m]
+        assert (np.diff(rows) == 1).all()
+    # slots unique
+    assert len(set(layout.slot)) == layout.n_models
+    # act segments tile [0, H_pad) exactly
+    pos = 0
+    for _, start, length in layout.act_segments:
+        assert start == pos
+        pos += length
+    assert pos == layout.h_pad

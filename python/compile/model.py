@@ -1,0 +1,147 @@
+"""L2 — the fused ParallelMLP compute graph (build-time JAX).
+
+Builds, for a static ``(pool layout, F, B, O, loss)``, the jittable
+functions the Rust coordinator executes via PJRT:
+
+* ``parallel_train_step``  — fused fwd + bwd + SGD for every model in the
+  pool at once. The total loss is the *sum* of per-model losses, so
+  ``d total / d theta_m = d loss_m / d theta_m`` — gradients never mix
+  across models (the paper's independence claim, verified in tests).
+* ``parallel_eval`` / ``parallel_predict`` — validation metrics / raw
+  outputs per model.
+* ``sequential_train_step`` / ``sequential_eval`` — the paper's baseline:
+  one small dense MLP, lowered per ``(h, act, F, B, O, loss)``.
+
+Parameter layout (see DESIGN.md §4; pads are zero and provably inert):
+
+    w1  [H_pad, F]   fused hidden weights (padded group layout)
+    b1  [H_pad]      fused hidden biases
+    w2  [O, H_pad]   fused output weights
+    b2  [M_pad, O]   per-slot output biases
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .acts import act_fn
+from .kernels.m3 import m3
+from .pool import PoolLayout
+
+LOSSES = ("mse", "ce")
+
+
+def apply_activations(h, layout: PoolLayout):
+    """Split -> activate -> concat over the layout's static act segments."""
+    parts = []
+    for act_id, start, length in layout.act_segments:
+        parts.append(act_fn(act_id)(h[:, start : start + length]))
+    return jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+
+
+def pool_forward(w1, b1, w2, b2, onehot, x, layout: PoolLayout):
+    """x [B,F] -> per-slot outputs [B, M_pad, O]."""
+    h = x @ w1.T + b1[None, :]
+    hact = apply_activations(h, layout)
+    return m3(hact, w2, onehot) + b2[None, :, :]
+
+
+def slot_mask_from_onehot(onehot):
+    """[M_pad] 1.0 for real slots — a slot is real iff it owns >=1 hidden row."""
+    ng, _, g = onehot.shape
+    colsum = onehot.sum(axis=1).reshape(ng * g)
+    return jnp.minimum(colsum, 1.0)
+
+
+def per_model_loss(y, targets, loss: str):
+    """y [B, M_pad, O], targets [B, O] -> [M_pad] mean loss per slot."""
+    if loss == "mse":
+        return ((y - targets[:, None, :]) ** 2).mean(axis=(0, 2))
+    if loss == "ce":
+        logp = jax.nn.log_softmax(y, axis=-1)
+        return -(targets[:, None, :] * logp).sum(axis=-1).mean(axis=0)
+    raise ValueError(f"unknown loss {loss!r}")
+
+
+def per_model_metric(y, targets, loss: str):
+    """Accuracy for CE, loss for MSE — the model-selection signal."""
+    if loss == "ce":
+        pred = jnp.argmax(y, axis=-1)  # [B, M_pad]
+        true = jnp.argmax(targets, axis=-1)  # [B]
+        return (pred == true[:, None]).mean(axis=0).astype(jnp.float32)
+    return per_model_loss(y, targets, loss)
+
+
+def make_parallel_train_step(layout: PoolLayout, loss: str):
+    def step(w1, b1, w2, b2, onehot, x, targets, lr):
+        mask = slot_mask_from_onehot(onehot)
+
+        def total_loss(params):
+            w1_, b1_, w2_, b2_ = params
+            y = pool_forward(w1_, b1_, w2_, b2_, onehot, x, layout)
+            lm = per_model_loss(y, targets, loss)
+            return (lm * mask).sum(), lm * mask
+
+        (_, lm), grads = jax.value_and_grad(total_loss, has_aux=True)((w1, b1, w2, b2))
+        new = tuple(p - lr * g for p, g in zip((w1, b1, w2, b2), grads))
+        return (*new, lm)
+
+    return step
+
+
+def make_parallel_eval(layout: PoolLayout, loss: str):
+    def evaluate(w1, b1, w2, b2, onehot, x, targets):
+        mask = slot_mask_from_onehot(onehot)
+        y = pool_forward(w1, b1, w2, b2, onehot, x, layout)
+        return per_model_loss(y, targets, loss) * mask, per_model_metric(y, targets, loss) * mask
+
+    return evaluate
+
+
+def make_parallel_predict(layout: PoolLayout):
+    def predict(w1, b1, w2, b2, onehot, x):
+        return pool_forward(w1, b1, w2, b2, onehot, x, layout)
+
+    return predict
+
+
+# --- sequential baseline (one plain MLP) ---------------------------------
+
+
+def mlp_forward(w1, b1, w2, b2, x, act_id: int):
+    h = x @ w1.T + b1[None, :]
+    return act_fn(act_id)(h) @ w2.T + b2[None, :]
+
+
+def mlp_loss(y, targets, loss: str):
+    if loss == "mse":
+        return ((y - targets) ** 2).mean()
+    if loss == "ce":
+        logp = jax.nn.log_softmax(y, axis=-1)
+        return -(targets * logp).sum(axis=-1).mean()
+    raise ValueError(f"unknown loss {loss!r}")
+
+
+def make_sequential_train_step(act_id: int, loss: str):
+    def step(w1, b1, w2, b2, x, targets, lr):
+        def f(params):
+            y = mlp_forward(*params, x, act_id)
+            return mlp_loss(y, targets, loss)
+
+        lv, grads = jax.value_and_grad(f)((w1, b1, w2, b2))
+        new = tuple(p - lr * g for p, g in zip((w1, b1, w2, b2), grads))
+        return (*new, lv)
+
+    return step
+
+
+def make_sequential_eval(act_id: int, loss: str):
+    def evaluate(w1, b1, w2, b2, x, targets):
+        y = mlp_forward(w1, b1, w2, b2, x, act_id)
+        lv = mlp_loss(y, targets, loss)
+        if loss == "ce":
+            acc = (jnp.argmax(y, -1) == jnp.argmax(targets, -1)).mean().astype(jnp.float32)
+            return lv, acc
+        return lv, lv
+
+    return evaluate

@@ -1,0 +1,250 @@
+"""Pool layout compiler — fuses a heterogeneous MLP pool into one layout.
+
+This is the build-time half of the cross-language contract; the runtime
+half lives in ``rust/src/pool/layout.rs`` and MUST produce bit-identical
+results (asserted through the FNV-1a checksum recorded in the manifest).
+
+A *pool* is a list of models ``(hidden_size h, activation id a)`` that all
+share the same input dim F and output dim O. The layout:
+
+* stable-sorts models by ``(act_id, h)`` so every activation owns
+  contiguous hidden segments and group padding is minimal;
+* packs consecutive sorted models into *groups* of at most ``G`` models
+  whose hidden sizes sum to at most ``W`` (the group width). Every group is
+  padded to exactly ``W`` hidden rows and ``G`` model slots, giving the
+  static shapes the Pallas kernel's BlockSpecs need;
+* records, for every original model, its output *slot* ``g*G + i`` and its
+  hidden span ``[g*W + off, g*W + off + h)`` in the padded layout.
+
+Padded hidden rows get zero one-hot columns in the M3 scatter stage, so
+they contribute nothing to any model's output or gradient (tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from .acts import ACT_NAMES
+
+PAD_SLOT = 0xFFFFFFFF  # seg_slot value for padded hidden positions
+
+
+def _round_up(x: int, to: int) -> int:
+    return ((x + to - 1) // to) * to
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSpec:
+    """An ordered list of (hidden, act_id) models sharing (F, O)."""
+
+    models: Tuple[Tuple[int, int], ...]
+
+    def __post_init__(self):
+        assert len(self.models) > 0, "empty pool"
+        for h, a in self.models:
+            assert h >= 1, f"hidden size must be >= 1, got {h}"
+            assert 0 <= a < len(ACT_NAMES), f"bad act id {a}"
+
+    @staticmethod
+    def from_grid(hidden_sizes: Sequence[int], act_ids: Sequence[int], repeats: int = 1) -> "PoolSpec":
+        """The paper's grid: every (act, h) pair, repeated. Act-major order."""
+        models = []
+        for a in act_ids:
+            for h in hidden_sizes:
+                for _ in range(repeats):
+                    models.append((int(h), int(a)))
+        return PoolSpec(tuple(models))
+
+    @property
+    def n_models(self) -> int:
+        return len(self.models)
+
+    @property
+    def total_hidden(self) -> int:
+        return sum(h for h, _ in self.models)
+
+
+@dataclasses.dataclass
+class GroupInfo:
+    start_model: int  # first sorted-model index in this group
+    n_models: int  # real models in this group (<= G)
+    span: int  # real hidden rows used (<= W)
+
+
+@dataclasses.dataclass
+class PoolLayout:
+    spec: PoolSpec
+    group_width: int  # W — padded hidden rows per group
+    group_models: int  # G — model slots per group
+    n_groups: int  # NG
+    order: List[int]  # sorted position -> original model index
+    # per ORIGINAL model index:
+    slot: List[int]  # output slot = g*G + i
+    hidden_start: List[int]  # start row in the padded hidden layout
+    groups: List[GroupInfo]
+    seg_slot: np.ndarray  # [H_pad] u32: slot id per padded hidden row (PAD_SLOT = none)
+    act_segments: List[Tuple[int, int, int]]  # (act_id, start, length) over padded rows
+
+    @property
+    def n_models(self) -> int:
+        return self.spec.n_models
+
+    @property
+    def h_pad(self) -> int:
+        return self.n_groups * self.group_width
+
+    @property
+    def m_pad(self) -> int:
+        return self.n_groups * self.group_models
+
+    def onehot(self, dtype=np.float32) -> np.ndarray:
+        """[NG, W, G] scatter matrix: onehot[g, w, i] = 1 iff padded hidden
+        row g*W+w belongs to the model in slot g*G+i."""
+        ng, w, g = self.n_groups, self.group_width, self.group_models
+        out = np.zeros((ng, w, g), dtype=dtype)
+        for pos in range(self.h_pad):
+            s = int(self.seg_slot[pos])
+            if s == PAD_SLOT:
+                continue
+            grp, row = divmod(pos, w)
+            assert s // g == grp
+            out[grp, row, s % g] = 1.0
+        return out
+
+    def slot_mask(self, dtype=np.float32) -> np.ndarray:
+        """[M_pad] 1.0 for slots holding a real model, else 0.0."""
+        mask = np.zeros((self.m_pad,), dtype=dtype)
+        for s in self.slot:
+            mask[s] = 1.0
+        return mask
+
+    def checksum(self) -> int:
+        """FNV-1a 64 over the layout arrays — the cross-language assert."""
+        acc = 0xCBF29CE484222325
+        prime = 0x100000001B3
+        mask64 = (1 << 64) - 1
+
+        def feed_u32(val: int):
+            nonlocal acc
+            for byte in int(val & 0xFFFFFFFF).to_bytes(4, "little"):
+                acc = ((acc ^ byte) * prime) & mask64
+
+        feed_u32(self.group_width)
+        feed_u32(self.group_models)
+        feed_u32(self.n_groups)
+        for v in self.seg_slot:
+            feed_u32(int(v))
+        for m in range(self.n_models):
+            feed_u32(self.slot[m])
+            feed_u32(self.hidden_start[m])
+            feed_u32(self.spec.models[m][0])
+            feed_u32(self.spec.models[m][1])
+        for act, start, length in self.act_segments:
+            feed_u32(act)
+            feed_u32(start)
+            feed_u32(length)
+        return acc
+
+
+def default_group_width(spec: PoolSpec) -> int:
+    """W default: wide groups (up to 512 hidden rows) so the kernel grid
+    stays short — on CPU-PJRT every grid step pays a full-buffer
+    dynamic-update-slice in the interpret lowering, and on TPU a
+    [128,512]f32 activation tile (256 KiB) still sits comfortably in VMEM.
+    Must hold the widest model; small pools shrink to their total width.
+    Mirrored in layout.rs."""
+    max_h = max(h for h, _ in spec.models)
+    total = sum(h for h, _ in spec.models)
+    return _round_up(max(max_h, min(512, total)), 8)
+
+
+def default_group_models(spec: PoolSpec, group_width: int) -> int:
+    """G default: the max group size a width-first dry pack produces, so
+    padding stays low for pools of many narrow models while dummy output
+    slots stay bounded (clamped to [1, 64]). Mirrored in layout.rs."""
+    order = sorted(
+        range(spec.n_models), key=lambda m: (spec.models[m][1], spec.models[m][0], m)
+    )
+    best = 1
+    cur = 0
+    span = 0
+    for m in order:
+        h = spec.models[m][0]
+        if span + h > group_width:
+            best = max(best, cur)
+            cur = 0
+            span = 0
+        cur += 1
+        span += h
+    return min(max(best, cur, 1), 64)
+
+
+def build_layout(
+    spec: PoolSpec,
+    group_width: int | None = None,
+    group_models: int | None = None,
+) -> PoolLayout:
+    w = group_width if group_width is not None else default_group_width(spec)
+    max_h = max(h for h, _ in spec.models)
+    assert w >= max_h, f"group_width {w} < widest model {max_h}"
+    g = group_models if group_models is not None else default_group_models(spec, w)
+    assert g >= 1
+
+    # stable sort by (act, h)
+    order = sorted(range(spec.n_models), key=lambda m: (spec.models[m][1], spec.models[m][0], m))
+
+    # greedy packing in sorted order
+    groups: List[GroupInfo] = []
+    cur = GroupInfo(start_model=0, n_models=0, span=0)
+    for k, m in enumerate(order):
+        h = spec.models[m][0]
+        if cur.n_models >= g or cur.span + h > w:
+            groups.append(cur)
+            cur = GroupInfo(start_model=k, n_models=0, span=0)
+        cur.n_models += 1
+        cur.span += h
+    groups.append(cur)
+    ng = len(groups)
+
+    slot = [0] * spec.n_models
+    hidden_start = [0] * spec.n_models
+    seg_slot = np.full((ng * w,), PAD_SLOT, dtype=np.uint32)
+    # act per padded row; group tail pad inherits the group's last act
+    act_rows = np.zeros((ng * w,), dtype=np.uint32)
+    for grp_idx, grp in enumerate(groups):
+        off = 0
+        last_act = 0
+        for i in range(grp.n_models):
+            m = order[grp.start_model + i]
+            h, act = spec.models[m]
+            s = grp_idx * g + i
+            slot[m] = s
+            hidden_start[m] = grp_idx * w + off
+            seg_slot[grp_idx * w + off : grp_idx * w + off + h] = s
+            act_rows[grp_idx * w + off : grp_idx * w + off + h] = act
+            off += h
+            last_act = act
+        act_rows[grp_idx * w + off : (grp_idx + 1) * w] = last_act
+
+    # merge contiguous equal-act runs
+    act_segments: List[Tuple[int, int, int]] = []
+    start = 0
+    for pos in range(1, ng * w + 1):
+        if pos == ng * w or act_rows[pos] != act_rows[start]:
+            act_segments.append((int(act_rows[start]), start, pos - start))
+            start = pos
+
+    return PoolLayout(
+        spec=spec,
+        group_width=w,
+        group_models=g,
+        n_groups=ng,
+        order=order,
+        slot=slot,
+        hidden_start=hidden_start,
+        groups=groups,
+        seg_slot=seg_slot,
+        act_segments=act_segments,
+    )

@@ -1,0 +1,155 @@
+"""Artifact specs — every HLO program `make artifacts` lowers.
+
+Groups:
+* ``bench`` — the paper's evaluation grid (Tables 1–2), scaled for a CPU
+  PJRT device (DESIGN.md §2): features x batch sweep for the fused
+  parallel train step, plus per-(h, act=relu) sequential baseline steps.
+  Samples counts live at run time (the coordinator loops batches), so they
+  don't appear in shapes.
+* ``smoke`` — tiny configs the Rust integration tests use to prove
+  parallel == sequential == native numerics.
+* ``e2e`` — the end-to-end grid-search example's pool (classification).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from .acts import ACT_IDS
+from .pool import PoolSpec
+
+RELU = ACT_IDS["relu"]
+ALL_ACTS = tuple(range(10))
+
+# --- paper evaluation grid (§4.3), scaled per DESIGN.md §2 ----------------
+BENCH_FEATURES = (5, 10, 50, 100)
+BENCH_BATCHES = (32, 128, 256)
+BENCH_OUT = 2
+BENCH_HIDDEN = (2, 4, 8, 16, 25)
+BENCH_REPEATS = 4  # 5 h x 10 acts x 4 reps = 200 models
+BENCH_POOL = PoolSpec.from_grid(BENCH_HIDDEN, ALL_ACTS, repeats=BENCH_REPEATS)
+
+# --- smoke pool: heterogeneous, every path exercised -----------------------
+SMOKE_FEATURES = 4
+SMOKE_BATCH = 8
+SMOKE_OUT = 2
+SMOKE_MODELS = ((2, 1), (3, 3), (2, 2), (1, 0), (4, 6), (2, 9), (3, 3), (5, 5))
+SMOKE_POOL = PoolSpec(SMOKE_MODELS)
+
+# --- e2e grid-search example pool ------------------------------------------
+E2E_FEATURES = 16
+E2E_BATCH = 64
+E2E_OUT = 4
+E2E_HIDDEN = tuple(range(1, 13))
+E2E_POOL = PoolSpec.from_grid(E2E_HIDDEN, ALL_ACTS, repeats=1)  # 120 models
+
+
+@dataclasses.dataclass(frozen=True)
+class ArtifactSpec:
+    name: str
+    kind: str  # parallel_train | parallel_eval | parallel_predict | seq_train | seq_eval
+    features: int
+    batch: int
+    out: int
+    loss: str  # mse | ce
+    pool_name: Optional[str] = None  # parallel kinds
+    hidden: Optional[int] = None  # seq kinds
+    act: Optional[int] = None  # seq kinds
+
+
+POOLS = {
+    "bench": BENCH_POOL,
+    "smoke": SMOKE_POOL,
+    "e2e": E2E_POOL,
+}
+
+
+def build_specs() -> Tuple[ArtifactSpec, ...]:
+    specs = []
+
+    # Table 1/2 grid: parallel fused step per (F, B)
+    for f in BENCH_FEATURES:
+        for b in BENCH_BATCHES:
+            specs.append(
+                ArtifactSpec(
+                    name=f"bench_par_f{f}_b{b}",
+                    kind="parallel_train",
+                    features=f,
+                    batch=b,
+                    out=BENCH_OUT,
+                    loss="mse",
+                    pool_name="bench",
+                )
+            )
+            # sequential baseline per distinct hidden size (relu-baked —
+            # activation choice is timing-neutral elementwise work; all 10
+            # activations are exercised by the smoke artifacts + natively)
+            for h in BENCH_HIDDEN:
+                specs.append(
+                    ArtifactSpec(
+                        name=f"bench_seq_f{f}_b{b}_h{h}",
+                        kind="seq_train",
+                        features=f,
+                        batch=b,
+                        out=BENCH_OUT,
+                        loss="mse",
+                        hidden=h,
+                        act=RELU,
+                    )
+                )
+
+    # smoke: parallel train/eval/predict (mse) + ce train + per-model seq steps
+    for kind in ("parallel_train", "parallel_eval", "parallel_predict"):
+        specs.append(
+            ArtifactSpec(
+                name=f"smoke_{kind}",
+                kind=kind,
+                features=SMOKE_FEATURES,
+                batch=SMOKE_BATCH,
+                out=SMOKE_OUT,
+                loss="mse",
+                pool_name="smoke",
+            )
+        )
+    specs.append(
+        ArtifactSpec(
+            name="smoke_parallel_train_ce",
+            kind="parallel_train",
+            features=SMOKE_FEATURES,
+            batch=SMOKE_BATCH,
+            out=SMOKE_OUT,
+            loss="ce",
+            pool_name="smoke",
+        )
+    )
+    for h, a in sorted(set(SMOKE_MODELS)):
+        specs.append(
+            ArtifactSpec(
+                name=f"smoke_seq_h{h}_a{a}",
+                kind="seq_train",
+                features=SMOKE_FEATURES,
+                batch=SMOKE_BATCH,
+                out=SMOKE_OUT,
+                loss="mse",
+                hidden=h,
+                act=a,
+            )
+        )
+
+    # e2e grid search: classification pool
+    for kind in ("parallel_train", "parallel_eval", "parallel_predict"):
+        specs.append(
+            ArtifactSpec(
+                name=f"e2e_{kind}",
+                kind=kind,
+                features=E2E_FEATURES,
+                batch=E2E_BATCH,
+                out=E2E_OUT,
+                loss="ce",
+                pool_name="e2e",
+            )
+        )
+
+    names = [s.name for s in specs]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    return tuple(specs)

@@ -1,0 +1,89 @@
+"""AOT pipeline: every spec lowers to parseable HLO text; the manifest is
+consistent with the specs and pool layouts."""
+import json
+import pathlib
+
+import pytest
+
+from compile import aot, specs
+from compile.pool import build_layout
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_spec_names_unique_and_nonempty():
+    all_specs = specs.build_specs()
+    assert len(all_specs) > 50
+    names = [s.name for s in all_specs]
+    assert len(names) == len(set(names))
+
+
+def test_bench_grid_covers_paper_axes():
+    """Tables 1-2 sweep features x batch; every cell needs artifacts."""
+    all_specs = specs.build_specs()
+    par = {(s.features, s.batch) for s in all_specs if s.name.startswith("bench_par")}
+    assert par == {(f, b) for f in specs.BENCH_FEATURES for b in specs.BENCH_BATCHES}
+    for f in specs.BENCH_FEATURES:
+        for b in specs.BENCH_BATCHES:
+            seq_h = {
+                s.hidden
+                for s in all_specs
+                if s.kind == "seq_train" and s.name.startswith(f"bench_seq_f{f}_b{b}_")
+            }
+            assert seq_h == set(specs.BENCH_HIDDEN)
+
+
+def test_bench_pool_structure():
+    assert specs.BENCH_POOL.n_models == len(specs.BENCH_HIDDEN) * 10 * specs.BENCH_REPEATS
+
+
+def test_lower_one_of_each_kind_produces_hlo():
+    layouts = {name: build_layout(p) for name, p in specs.POOLS.items()}
+    seen = set()
+    for spec in specs.build_specs():
+        if spec.kind in seen or not spec.name.startswith("smoke"):
+            continue
+        seen.add(spec.kind)
+        fn, shape_args = aot.build_fn_and_args(spec, layouts)
+        import jax
+
+        text = aot.to_hlo_text(jax.jit(fn).lower(*shape_args))
+        assert text.startswith("HloModule"), spec.name
+        assert "ENTRY" in text
+    assert {"parallel_train", "parallel_eval", "parallel_predict", "seq_train"} <= seen
+
+
+@pytest.mark.skipif(not (ART / "manifest.json").exists(), reason="run `make artifacts` first")
+def test_manifest_consistent_with_disk():
+    manifest = json.loads((ART / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    for entry in manifest["artifacts"]:
+        f = ART / entry["file"]
+        assert f.exists(), entry["name"]
+        head = f.read_text()[:64]
+        assert head.startswith("HloModule")
+    # pool checksums in the manifest match a fresh layout build
+    for name, pentry in manifest["pools"].items():
+        lay = build_layout(specs.POOLS[name])
+        assert pentry["checksum"] == f"{lay.checksum():016x}"
+        assert pentry["h_pad"] == lay.h_pad
+        assert pentry["m_pad"] == lay.m_pad
+
+
+@pytest.mark.skipif(not (ART / "manifest.json").exists(), reason="run `make artifacts` first")
+def test_manifest_input_shapes_match_layout():
+    manifest = json.loads((ART / "manifest.json").read_text())
+    pools = manifest["pools"]
+    for entry in manifest["artifacts"]:
+        if entry["kind"] != "parallel_train":
+            continue
+        p = pools[entry["pool"]]
+        w1, b1, w2, b2, oh, x, y, lr = entry["inputs"]
+        assert w1 == [p["h_pad"], entry["features"]]
+        assert b1 == [p["h_pad"]]
+        assert w2 == [entry["out"], p["h_pad"]]
+        assert b2 == [p["m_pad"], entry["out"]]
+        assert oh == [p["n_groups"], p["group_width"], p["group_models"]]
+        assert x == [entry["batch"], entry["features"]]
+        assert y == [entry["batch"], entry["out"]]
+        assert lr == []

@@ -1,0 +1,158 @@
+"""L1 correctness: Pallas M3 kernel vs pure-jnp oracles (CORE signal).
+
+Hypothesis sweeps pool shapes, batch sizes, output dims and group knobs;
+every case checks the forward against both oracles and the custom-VJP
+against the flattened-scatter reference.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.m3 import batch_block, m3, m3_backward, m3_forward
+from compile.pool import PoolSpec, build_layout
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def rand_case(rng, layout, batch, out_dim):
+    hact = rng.normal(size=(batch, layout.h_pad)).astype(np.float32)
+    w2 = rng.normal(size=(out_dim, layout.h_pad)).astype(np.float32)
+    return jnp.asarray(hact), jnp.asarray(w2), jnp.asarray(layout.onehot())
+
+
+def test_batch_block_divides():
+    for b in (1, 2, 7, 8, 32, 96, 128, 256, 384):
+        bb = batch_block(b)
+        assert b % bb == 0 and bb <= 128
+
+
+def test_paper_figure2_scatter_example():
+    """Paper §3: S=[[1..6]], I=[[0,1,1,2,2,2]] -> R=[[1,5,15]].
+
+    Encoded as a 3-model pool (h=1,2,3), O=1, W2=1, H'=[1..6]."""
+    spec = PoolSpec(((1, 0), (2, 0), (3, 0)))
+    lay = build_layout(spec, group_width=8, group_models=4)
+    hact = np.zeros((1, lay.h_pad), dtype=np.float32)
+    src = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]
+    # place the six values on the three models' hidden rows in slot order
+    vals = iter(src)
+    for m in range(3):
+        h = spec.models[m][0]
+        st_ = lay.hidden_start[m]
+        for i in range(h):
+            hact[0, st_ + i] = next(vals)
+    w2 = np.ones((1, lay.h_pad), dtype=np.float32)
+    y = m3_forward(jnp.asarray(hact), jnp.asarray(w2), jnp.asarray(lay.onehot()))
+    got = [float(y[0, lay.slot[m], 0]) for m in range(3)]
+    assert got == [1.0, 5.0, 15.0]
+
+
+def test_forward_matches_both_oracles():
+    rng = np.random.default_rng(1)
+    spec = PoolSpec.from_grid([1, 2, 5, 9], range(10), repeats=1)
+    lay = build_layout(spec)
+    hact, w2, oh = rand_case(rng, lay, batch=32, out_dim=3)
+    y = m3_forward(hact, w2, oh)
+    np.testing.assert_allclose(y, ref.m3_ref(hact, w2, oh), **TOL)
+    mask = lay.slot_mask()[None, :, None]
+    np.testing.assert_allclose(y * mask, ref.m3_loop_ref(hact, w2, lay) * mask, **TOL)
+
+
+def test_dummy_slots_emit_zero():
+    rng = np.random.default_rng(2)
+    spec = PoolSpec(((3, 0), (3, 1), (3, 2)))
+    lay = build_layout(spec, group_width=8, group_models=4)
+    assert lay.m_pad > lay.n_models
+    hact, w2, oh = rand_case(rng, lay, batch=8, out_dim=2)
+    y = np.asarray(m3_forward(hact, w2, oh))
+    mask = lay.slot_mask()
+    for s in range(lay.m_pad):
+        if mask[s] == 0.0:
+            assert np.all(y[:, s, :] == 0.0)
+
+
+def test_backward_matches_reference():
+    rng = np.random.default_rng(3)
+    spec = PoolSpec.from_grid([2, 3, 4], [0, 4, 7], repeats=2)
+    lay = build_layout(spec)
+    hact, w2, oh = rand_case(rng, lay, batch=16, out_dim=2)
+    dy = jnp.asarray(rng.normal(size=(16, lay.m_pad, 2)).astype(np.float32))
+    dh, dw2 = m3_backward(hact, w2, oh, dy)
+    dh_r, dw2_r = ref.m3_vjp_ref(hact, w2, oh, dy)
+    np.testing.assert_allclose(dh, dh_r, **TOL)
+    np.testing.assert_allclose(dw2, dw2_r, **TOL)
+
+
+def test_custom_vjp_through_jax_grad():
+    rng = np.random.default_rng(4)
+    spec = PoolSpec(((2, 1), (3, 3), (2, 2), (1, 0)))
+    lay = build_layout(spec)
+    hact, w2, oh = rand_case(rng, lay, batch=8, out_dim=2)
+    tgt = jnp.asarray(rng.normal(size=(8, lay.m_pad, 2)).astype(np.float32))
+
+    def loss_kernel(h_, w_):
+        return ((m3(h_, w_, oh) - tgt) ** 2).sum()
+
+    def loss_ref(h_, w_):
+        return ((ref.m3_ref(h_, w_, oh) - tgt) ** 2).sum()
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1))(hact, w2)
+    gr = jax.grad(loss_ref, argnums=(0, 1))(hact, w2)
+    np.testing.assert_allclose(gk[0], gr[0], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gk[1], gr[1], rtol=1e-4, atol=1e-4)
+
+
+def test_gradient_independence_across_models():
+    """The paper's core claim: perturbing model A's cotangent never moves
+    model B's parameter gradient."""
+    rng = np.random.default_rng(5)
+    spec = PoolSpec(((2, 0), (3, 0), (4, 0)))
+    lay = build_layout(spec)
+    hact, w2, oh = rand_case(rng, lay, batch=8, out_dim=2)
+    base = np.zeros((8, lay.m_pad, 2), dtype=np.float32)
+    dy_a = base.copy()
+    dy_a[:, lay.slot[0], :] = 1.0
+    _, dw2_a = m3_backward(hact, w2, oh, jnp.asarray(dy_a))
+    dw2_a = np.asarray(dw2_a)
+    # gradient support must be exactly model 0's hidden span
+    for m in range(3):
+        h = spec.models[m][0]
+        cols = dw2_a[:, lay.hidden_start[m] : lay.hidden_start[m] + h]
+        if m == 0:
+            assert np.abs(cols).max() > 0
+        else:
+            assert np.abs(cols).max() == 0
+
+
+@st.composite
+def kernel_cases(draw):
+    n = draw(st.integers(1, 12))
+    models = tuple((draw(st.integers(1, 13)), draw(st.integers(0, 9))) for _ in range(n))
+    batch = draw(st.sampled_from([1, 2, 4, 8, 16, 32]))
+    out_dim = draw(st.integers(1, 5))
+    gw = draw(st.sampled_from([None, 16, 24, 32]))
+    gm = draw(st.sampled_from([None, 1, 3, 8]))
+    return models, batch, out_dim, gw, gm
+
+
+@settings(max_examples=40, deadline=None)
+@given(kernel_cases(), st.integers(0, 2**31 - 1))
+def test_hypothesis_forward_and_vjp(case, seed):
+    models, batch, out_dim, gw, gm = case
+    spec = PoolSpec(models)
+    if gw is not None and gw < max(h for h, _ in models):
+        gw = None
+    lay = build_layout(spec, group_width=gw, group_models=gm)
+    rng = np.random.default_rng(seed)
+    hact, w2, oh = rand_case(rng, lay, batch, out_dim)
+    y = m3_forward(hact, w2, oh)
+    np.testing.assert_allclose(y, ref.m3_ref(hact, w2, oh), rtol=1e-4, atol=1e-4)
+    dy = jnp.asarray(rng.normal(size=y.shape).astype(np.float32))
+    dh, dw2 = m3_backward(hact, w2, oh, dy)
+    dh_r, dw2_r = ref.m3_vjp_ref(hact, w2, oh, dy)
+    np.testing.assert_allclose(dh, dh_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(dw2, dw2_r, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,232 @@
+"""L2 correctness: the fused ParallelMLP train step is *exactly* training
+every model independently — checked against a per-model jnp reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.acts import ACTIVATIONS, act_fn
+from compile.pool import PoolSpec, build_layout
+
+F, B, O = 4, 8, 2
+
+
+def init_pool_params(rng, lay, f, o):
+    """Random fused params with zeroed pads (the rust init contract)."""
+    w1 = np.zeros((lay.h_pad, f), dtype=np.float32)
+    b1 = np.zeros((lay.h_pad,), dtype=np.float32)
+    w2 = np.zeros((o, lay.h_pad), dtype=np.float32)
+    b2 = np.zeros((lay.m_pad, o), dtype=np.float32)
+    for m in range(lay.n_models):
+        h, _ = lay.spec.models[m]
+        s, hs = lay.slot[m], lay.hidden_start[m]
+        w1[hs : hs + h] = rng.normal(size=(h, f)).astype(np.float32)
+        b1[hs : hs + h] = rng.normal(size=(h,)).astype(np.float32)
+        w2[:, hs : hs + h] = rng.normal(size=(o, h)).astype(np.float32)
+        b2[s] = rng.normal(size=(o,)).astype(np.float32)
+    return tuple(map(jnp.asarray, (w1, b1, w2, b2)))
+
+
+def extract_model(lay, params, m):
+    """Pull model m's dense (w1, b1, w2, b2) out of the fused layout."""
+    w1, b1, w2, b2 = map(np.asarray, params)
+    h, _ = lay.spec.models[m]
+    s, hs = lay.slot[m], lay.hidden_start[m]
+    return (
+        jnp.asarray(w1[hs : hs + h]),
+        jnp.asarray(b1[hs : hs + h]),
+        jnp.asarray(w2[:, hs : hs + h]),
+        jnp.asarray(b2[s]),
+    )
+
+
+def seq_reference_step(params_m, act_id, loss, x, y, lr):
+    """One SGD step of a single dense MLP in plain jnp."""
+
+    def f(p):
+        return model.mlp_loss(model.mlp_forward(*p, x, act_id), y, loss)
+
+    lv, g = jax.value_and_grad(f)(params_m)
+    return tuple(p - lr * gi for p, gi in zip(params_m, g)), lv
+
+
+@pytest.mark.parametrize("loss", ["mse", "ce"])
+def test_fused_step_equals_per_model_steps(loss):
+    rng = np.random.default_rng(7)
+    spec = PoolSpec(((2, 1), (3, 3), (2, 2), (1, 0), (4, 6), (2, 9)))
+    lay = build_layout(spec)
+    params = init_pool_params(rng, lay, F, O)
+    oh = jnp.asarray(lay.onehot())
+    x = jnp.asarray(rng.normal(size=(B, F)).astype(np.float32))
+    if loss == "ce":
+        labels = rng.integers(0, O, size=B)
+        y = jnp.asarray(np.eye(O, dtype=np.float32)[labels])
+    else:
+        y = jnp.asarray(rng.normal(size=(B, O)).astype(np.float32))
+    lr = jnp.float32(0.05)
+
+    step = model.make_parallel_train_step(lay, loss)
+    *new_params, lm = step(*params, oh, x, y, lr)
+
+    for m in range(lay.n_models):
+        pm = extract_model(lay, params, m)
+        (w1n, b1n, w2n, b2n), lv = seq_reference_step(
+            pm, spec.models[m][1], loss, x, y, lr
+        )
+        got = extract_model(lay, new_params, m)
+        np.testing.assert_allclose(got[0], w1n, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(got[1], b1n, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(got[2], w2n, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(got[3], b2n, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(lm[lay.slot[m]], lv, rtol=1e-4, atol=1e-5)
+
+
+def test_pad_params_stay_zero_after_steps():
+    rng = np.random.default_rng(8)
+    spec = PoolSpec(((3, 4), (2, 5), (5, 8)))
+    lay = build_layout(spec, group_width=8, group_models=4)
+    params = init_pool_params(rng, lay, F, O)
+    oh = jnp.asarray(lay.onehot())
+    step = model.make_parallel_train_step(lay, "mse")
+    x = jnp.asarray(rng.normal(size=(B, F)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(B, O)).astype(np.float32))
+    cur = params
+    for _ in range(3):
+        *cur, _ = step(*cur, oh, x, y, jnp.float32(0.1))
+    w1, b1, w2, b2 = map(np.asarray, cur)
+    real_rows = np.zeros(lay.h_pad, dtype=bool)
+    for m in range(lay.n_models):
+        h = spec.models[m][0]
+        real_rows[lay.hidden_start[m] : lay.hidden_start[m] + h] = True
+    assert np.all(w1[~real_rows] == 0)
+    assert np.all(b1[~real_rows] == 0)
+    assert np.all(w2[:, ~real_rows] == 0)
+    mask = lay.slot_mask().astype(bool)
+    assert np.all(b2[~mask] == 0)
+
+
+def test_sequential_step_matches_reference():
+    rng = np.random.default_rng(9)
+    h, act_id = 5, 6
+    params = (
+        jnp.asarray(rng.normal(size=(h, F)).astype(np.float32)),
+        jnp.asarray(rng.normal(size=(h,)).astype(np.float32)),
+        jnp.asarray(rng.normal(size=(O, h)).astype(np.float32)),
+        jnp.asarray(rng.normal(size=(O,)).astype(np.float32)),
+    )
+    x = jnp.asarray(rng.normal(size=(B, F)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(B, O)).astype(np.float32))
+    step = model.make_sequential_train_step(act_id, "mse")
+    *new, lv = step(*params, x, y, jnp.float32(0.01))
+    ref_new, ref_lv = seq_reference_step(params, act_id, "mse", x, y, jnp.float32(0.01))
+    for a, b in zip(new, ref_new):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(lv, ref_lv, rtol=1e-5)
+
+
+def test_eval_metrics():
+    rng = np.random.default_rng(10)
+    spec = PoolSpec(((2, 3), (3, 3)))
+    lay = build_layout(spec)
+    params = init_pool_params(rng, lay, F, O)
+    oh = jnp.asarray(lay.onehot())
+    x = jnp.asarray(rng.normal(size=(B, F)).astype(np.float32))
+    labels = rng.integers(0, O, size=B)
+    y = jnp.asarray(np.eye(O, dtype=np.float32)[labels])
+    ev = model.make_parallel_eval(lay, "ce")
+    lm, acc = ev(*params, oh, x, y)
+    assert lm.shape == (lay.m_pad,) and acc.shape == (lay.m_pad,)
+    for m in range(lay.n_models):
+        a = float(acc[lay.slot[m]])
+        assert 0.0 <= a <= 1.0
+
+
+def test_training_reduces_loss_learnable_task():
+    """Sanity: the fused pool actually learns a separable task."""
+    rng = np.random.default_rng(11)
+    spec = PoolSpec.from_grid([4, 8], [3, 2], repeats=1)
+    lay = build_layout(spec)
+    params = init_pool_params(rng, lay, F, O)
+    oh = jnp.asarray(lay.onehot())
+    n = 64
+    x = rng.normal(size=(n, F)).astype(np.float32)
+    w_true = rng.normal(size=(F, O)).astype(np.float32)
+    y = (x @ w_true).astype(np.float32)
+    step = jax.jit(model.make_parallel_train_step(lay, "mse"))
+    first = last = None
+    cur = params
+    for ep in range(60):
+        for i in range(0, n, B):
+            xb = jnp.asarray(x[i : i + B])
+            yb = jnp.asarray(y[i : i + B])
+            *cur, lm = step(*cur, oh, xb, yb, jnp.float32(0.05))
+        tot = float(jnp.asarray(lm).sum())
+        first = tot if first is None else first
+        last = tot
+    assert last < first * 0.2, (first, last)
+
+
+@pytest.mark.parametrize("act_id", range(10))
+def test_each_activation_trains_without_nan(act_id):
+    rng = np.random.default_rng(100 + act_id)
+    spec = PoolSpec(((3, act_id), (5, act_id)))
+    lay = build_layout(spec)
+    params = init_pool_params(rng, lay, F, O)
+    oh = jnp.asarray(lay.onehot())
+    step = model.make_parallel_train_step(lay, "mse")
+    x = jnp.asarray(rng.normal(size=(B, F)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(B, O)).astype(np.float32))
+    cur = params
+    for _ in range(5):
+        *cur, lm = step(*cur, oh, x, y, jnp.float32(0.05))
+    assert np.isfinite(np.asarray(lm)).all()
+    for p in cur:
+        assert np.isfinite(np.asarray(p)).all()
+
+
+def test_activation_values_match_definitions():
+    """Spot-check the registry against closed-form values."""
+    x = jnp.asarray([-2.0, -0.4, 0.0, 0.4, 2.0], dtype=jnp.float32)
+    vals = {name: np.asarray(fn(x)) for name, fn in ACTIVATIONS}
+    np.testing.assert_allclose(vals["identity"], x)
+    np.testing.assert_allclose(vals["relu"], np.maximum(np.asarray(x), 0))
+    np.testing.assert_allclose(
+        vals["leaky_relu"], np.where(np.asarray(x) >= 0, x, 0.01 * np.asarray(x))
+    )
+    np.testing.assert_allclose(
+        vals["hardshrink"], np.where(np.abs(np.asarray(x)) > 0.5, x, 0.0)
+    )
+    np.testing.assert_allclose(
+        vals["sigmoid"], 1 / (1 + np.exp(-np.asarray(x))), rtol=1e-6
+    )
+    sp = np.log1p(np.exp(np.asarray(x)))
+    np.testing.assert_allclose(vals["mish"], np.asarray(x) * np.tanh(sp), rtol=1e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.lists(st.tuples(st.integers(1, 7), st.integers(0, 9)), min_size=1, max_size=6),
+    st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_fused_equals_per_model(models, seed):
+    rng = np.random.default_rng(seed)
+    spec = PoolSpec(tuple(models))
+    lay = build_layout(spec)
+    params = init_pool_params(rng, lay, F, O)
+    oh = jnp.asarray(lay.onehot())
+    x = jnp.asarray(rng.normal(size=(B, F)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(B, O)).astype(np.float32))
+    step = model.make_parallel_train_step(lay, "mse")
+    *new_params, lm = step(*params, oh, x, y, jnp.float32(0.03))
+    for m in range(lay.n_models):
+        pm = extract_model(lay, params, m)
+        ref_new, ref_lv = seq_reference_step(
+            pm, spec.models[m][1], "mse", x, y, jnp.float32(0.03)
+        )
+        got = extract_model(lay, new_params, m)
+        for a, b in zip(got, ref_new):
+            np.testing.assert_allclose(a, b, rtol=2e-4, atol=1e-5)
+        np.testing.assert_allclose(lm[lay.slot[m]], ref_lv, rtol=2e-4, atol=1e-5)

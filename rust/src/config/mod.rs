@@ -1,0 +1,259 @@
+//! Experiment configuration: a minimal TOML-subset parser plus the typed
+//! `ExperimentConfig` the `pmlp train` subcommand consumes.
+mod toml;
+
+pub use toml::{parse_toml, TomlValue};
+
+use crate::data::SynthKind;
+use crate::nn::act::{Act, ALL_ACTS};
+use crate::nn::loss::Loss;
+use crate::nn::optimizer::OptimizerKind;
+use crate::pool::PoolSpec;
+
+/// Which of the 2×2 engine/strategy cells to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    NativeParallel,
+    NativeSequential,
+    PjrtParallel,
+    PjrtSequential,
+}
+
+impl Strategy {
+    pub fn from_name(name: &str) -> Option<Strategy> {
+        Some(match name {
+            "native_parallel" => Strategy::NativeParallel,
+            "native_sequential" => Strategy::NativeSequential,
+            "pjrt_parallel" => Strategy::PjrtParallel,
+            "pjrt_sequential" => Strategy::PjrtSequential,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::NativeParallel => "native_parallel",
+            Strategy::NativeSequential => "native_sequential",
+            Strategy::PjrtParallel => "pjrt_parallel",
+            Strategy::PjrtSequential => "pjrt_sequential",
+        }
+    }
+
+    pub fn is_parallel(self) -> bool {
+        matches!(self, Strategy::NativeParallel | Strategy::PjrtParallel)
+    }
+
+    pub fn is_native(self) -> bool {
+        matches!(self, Strategy::NativeParallel | Strategy::NativeSequential)
+    }
+}
+
+/// A full experiment: dataset × pool × training hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub seed: u64,
+    // dataset
+    pub dataset: SynthKind,
+    pub samples: usize,
+    pub features: usize,
+    pub out: usize,
+    pub noise: f32,
+    pub teacher_hidden: usize,
+    // pool
+    pub hidden_sizes: Vec<u32>,
+    pub acts: Vec<Act>,
+    pub repeats: usize,
+    // training
+    pub strategy: Strategy,
+    pub loss: Loss,
+    pub optimizer: OptimizerKind,
+    pub epochs: usize,
+    pub warmup_epochs: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub threads: usize,
+    pub shuffle: bool,
+    pub train_frac: f64,
+    pub val_frac: f64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "experiment".into(),
+            seed: 42,
+            dataset: SynthKind::Blobs,
+            samples: 1000,
+            features: 10,
+            out: 2,
+            noise: 0.1,
+            teacher_hidden: 8,
+            hidden_sizes: (1..=10).collect(),
+            acts: ALL_ACTS.to_vec(),
+            repeats: 1,
+            strategy: Strategy::NativeParallel,
+            loss: Loss::Ce,
+            optimizer: OptimizerKind::Sgd,
+            epochs: 12,
+            warmup_epochs: 2,
+            batch: 32,
+            lr: 0.05,
+            threads: 0, // 0 = auto
+            shuffle: false,
+            train_frac: 0.7,
+            val_frac: 0.15,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn pool_spec(&self) -> anyhow::Result<PoolSpec> {
+        PoolSpec::from_grid(&self.hidden_sizes, &self.acts, self.repeats)
+    }
+
+    pub fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            crate::util::threadpool::num_threads()
+        } else {
+            self.threads
+        }
+    }
+
+    /// Load from a TOML file (flat `[experiment]` table; see
+    /// `examples/configs/`).
+    pub fn from_toml_str(text: &str) -> anyhow::Result<ExperimentConfig> {
+        let doc = parse_toml(text).map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
+        let mut cfg = ExperimentConfig::default();
+        let tbl = doc.get("experiment").cloned().unwrap_or(TomlValue::Table(Default::default()));
+        let t = match &tbl {
+            TomlValue::Table(t) => t,
+            _ => anyhow::bail!("[experiment] must be a table"),
+        };
+        macro_rules! set {
+            ($key:literal, $field:expr, $conv:expr) => {
+                if let Some(v) = t.get($key) {
+                    $field = $conv(v)
+                        .ok_or_else(|| anyhow::anyhow!(concat!("bad value for ", $key)))?;
+                }
+            };
+        }
+        set!("name", cfg.name, |v: &TomlValue| v.as_str().map(|s| s.to_string()));
+        set!("seed", cfg.seed, |v: &TomlValue| v.as_int().map(|i| i as u64));
+        set!("dataset", cfg.dataset, |v: &TomlValue| v.as_str().and_then(SynthKind::from_name));
+        set!("samples", cfg.samples, |v: &TomlValue| v.as_int().map(|i| i as usize));
+        set!("features", cfg.features, |v: &TomlValue| v.as_int().map(|i| i as usize));
+        set!("out", cfg.out, |v: &TomlValue| v.as_int().map(|i| i as usize));
+        set!("noise", cfg.noise, |v: &TomlValue| v.as_float().map(|f| f as f32));
+        set!("teacher_hidden", cfg.teacher_hidden, |v: &TomlValue| v
+            .as_int()
+            .map(|i| i as usize));
+        set!("repeats", cfg.repeats, |v: &TomlValue| v.as_int().map(|i| i as usize));
+        set!("strategy", cfg.strategy, |v: &TomlValue| v.as_str().and_then(Strategy::from_name));
+        set!("loss", cfg.loss, |v: &TomlValue| v.as_str().and_then(Loss::from_name));
+        set!("optimizer", cfg.optimizer, |v: &TomlValue| v
+            .as_str()
+            .and_then(OptimizerKind::from_name));
+        set!("epochs", cfg.epochs, |v: &TomlValue| v.as_int().map(|i| i as usize));
+        set!("warmup_epochs", cfg.warmup_epochs, |v: &TomlValue| v.as_int().map(|i| i as usize));
+        set!("batch", cfg.batch, |v: &TomlValue| v.as_int().map(|i| i as usize));
+        set!("lr", cfg.lr, |v: &TomlValue| v.as_float().map(|f| f as f32));
+        set!("threads", cfg.threads, |v: &TomlValue| v.as_int().map(|i| i as usize));
+        set!("shuffle", cfg.shuffle, |v: &TomlValue| v.as_bool());
+        set!("train_frac", cfg.train_frac, |v: &TomlValue| v.as_float());
+        set!("val_frac", cfg.val_frac, |v: &TomlValue| v.as_float());
+        if let Some(v) = t.get("hidden_sizes") {
+            cfg.hidden_sizes = v
+                .as_int_array()
+                .ok_or_else(|| anyhow::anyhow!("hidden_sizes must be an int array"))?
+                .into_iter()
+                .map(|i| i as u32)
+                .collect();
+        }
+        if let Some(v) = t.get("acts") {
+            let names =
+                v.as_str_array().ok_or_else(|| anyhow::anyhow!("acts must be a string array"))?;
+            cfg.acts = names
+                .iter()
+                .map(|n| {
+                    Act::from_name(n).ok_or_else(|| anyhow::anyhow!("unknown activation {n:?}"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+        }
+        anyhow::ensure!(cfg.epochs >= 1, "epochs must be >= 1");
+        anyhow::ensure!(cfg.batch >= 1, "batch must be >= 1");
+        anyhow::ensure!(!cfg.hidden_sizes.is_empty(), "hidden_sizes empty");
+        anyhow::ensure!(!cfg.acts.is_empty(), "acts empty");
+        Ok(cfg)
+    }
+
+    pub fn from_toml_file(path: &std::path::Path) -> anyhow::Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_toml_str(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        let cfg = ExperimentConfig::default();
+        let pool = cfg.pool_spec().unwrap();
+        assert_eq!(pool.n_models(), 10 * 10);
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let text = r#"
+[experiment]
+name = "demo"
+seed = 7
+dataset = "moons"
+samples = 500
+features = 8
+out = 2
+hidden_sizes = [1, 2, 4]
+acts = ["relu", "tanh"]
+repeats = 2
+strategy = "native_parallel"
+loss = "ce"
+optimizer = "sgd"
+epochs = 10
+batch = 16
+lr = 0.1
+shuffle = true
+"#;
+        let cfg = ExperimentConfig::from_toml_str(text).unwrap();
+        assert_eq!(cfg.name, "demo");
+        assert_eq!(cfg.dataset, SynthKind::Moons);
+        assert_eq!(cfg.hidden_sizes, vec![1, 2, 4]);
+        assert_eq!(cfg.acts, vec![Act::Relu, Act::Tanh]);
+        assert_eq!(cfg.pool_spec().unwrap().n_models(), 12);
+        assert!(cfg.shuffle);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(ExperimentConfig::from_toml_str("[experiment]\ndataset = \"nope\"\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[experiment]\nacts = [\"zzz\"]\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[experiment]\nepochs = 0\n").is_err());
+    }
+
+    #[test]
+    fn strategy_names() {
+        for s in [
+            Strategy::NativeParallel,
+            Strategy::NativeSequential,
+            Strategy::PjrtParallel,
+            Strategy::PjrtSequential,
+        ] {
+            assert_eq!(Strategy::from_name(s.name()), Some(s));
+        }
+        assert!(Strategy::NativeParallel.is_parallel());
+        assert!(!Strategy::PjrtSequential.is_parallel());
+        assert!(Strategy::NativeSequential.is_native());
+    }
+}

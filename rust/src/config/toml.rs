@@ -1,0 +1,261 @@
+//! Minimal TOML-subset parser (offline environment: no `toml` crate).
+//!
+//! Supported grammar — everything our configs need and nothing more:
+//! `[section]` headers (one level), `key = value` with string / integer /
+//! float / boolean / homogeneous arrays, `#` comments, blank lines.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+    Table(BTreeMap<String, TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`lr = 1` is fine).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_int_array(&self) -> Option<Vec<i64>> {
+        match self {
+            TomlValue::Array(items) => items.iter().map(|v| v.as_int()).collect(),
+            _ => None,
+        }
+    }
+
+    pub fn as_str_array(&self) -> Option<Vec<String>> {
+        match self {
+            TomlValue::Array(items) => {
+                items.iter().map(|v| v.as_str().map(|s| s.to_string())).collect()
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Parse into a map of `section -> Table` (top-level keys live in `""`).
+pub fn parse_toml(text: &str) -> Result<BTreeMap<String, TomlValue>, String> {
+    let mut root: BTreeMap<String, TomlValue> = BTreeMap::new();
+    let mut section = String::new();
+    root.insert(String::new(), TomlValue::Table(BTreeMap::new()));
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty section name", lineno + 1));
+            }
+            section = name.to_string();
+            root.entry(section.clone()).or_insert_with(|| TomlValue::Table(BTreeMap::new()));
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let value = parse_value(value.trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        match root.get_mut(section.as_str()) {
+            Some(TomlValue::Table(t)) => {
+                t.insert(key.to_string(), value);
+            }
+            _ => unreachable!("sections are always tables"),
+        }
+    }
+    Ok(root)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside of a string starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote not supported".into());
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items = split_top_level(inner)?;
+        return Ok(TomlValue::Array(
+            items.iter().map(|i| parse_value(i.trim())).collect::<Result<Vec<_>, _>>()?,
+        ));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+/// Split an array body on commas (no nested arrays needed by our configs,
+/// but strings may contain commas).
+fn split_top_level(s: &str) -> Result<Vec<String>, String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                out.push(cur.trim().to_string());
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if in_str {
+        return Err("unterminated string in array".into());
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_sections() {
+        let doc = parse_toml(
+            "top = 1\n[sec]\na = \"x\"\nb = 2\nc = 2.5\nd = true\ne = [1, 2, 3]\n",
+        )
+        .unwrap();
+        let top = doc.get("").unwrap();
+        if let TomlValue::Table(t) = top {
+            assert_eq!(t.get("top").unwrap().as_int(), Some(1));
+        } else {
+            panic!()
+        }
+        let sec = doc.get("sec").unwrap();
+        if let TomlValue::Table(t) = sec {
+            assert_eq!(t.get("a").unwrap().as_str(), Some("x"));
+            assert_eq!(t.get("b").unwrap().as_int(), Some(2));
+            assert_eq!(t.get("c").unwrap().as_float(), Some(2.5));
+            assert_eq!(t.get("d").unwrap().as_bool(), Some(true));
+            assert_eq!(t.get("e").unwrap().as_int_array(), Some(vec![1, 2, 3]));
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let doc = parse_toml("# header\n\na = 1 # trailing\nb = \"has # inside\"\n").unwrap();
+        if let TomlValue::Table(t) = doc.get("").unwrap() {
+            assert_eq!(t.get("a").unwrap().as_int(), Some(1));
+            assert_eq!(t.get("b").unwrap().as_str(), Some("has # inside"));
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn string_arrays() {
+        let doc = parse_toml("a = [\"x\", \"y,z\"]\n").unwrap();
+        if let TomlValue::Table(t) = doc.get("").unwrap() {
+            assert_eq!(
+                t.get("a").unwrap().as_str_array(),
+                Some(vec!["x".to_string(), "y,z".to_string()])
+            );
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = parse_toml("i = 5\nf = 5.0\nn = -3\nexp = 1e-3\n").unwrap();
+        if let TomlValue::Table(t) = doc.get("").unwrap() {
+            assert_eq!(t.get("i").unwrap().as_int(), Some(5));
+            assert_eq!(t.get("i").unwrap().as_float(), Some(5.0)); // int coerces
+            assert_eq!(t.get("f").unwrap().as_int(), None);
+            assert_eq!(t.get("n").unwrap().as_int(), Some(-3));
+            assert_eq!(t.get("exp").unwrap().as_float(), Some(1e-3));
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse_toml("[unterminated\n").is_err());
+        assert!(parse_toml("novalue\n").is_err());
+        assert!(parse_toml("a = \"open\n").is_err());
+        assert!(parse_toml("a = [1, 2\n").is_err());
+        assert!(parse_toml("a = zzz\n").is_err());
+    }
+}

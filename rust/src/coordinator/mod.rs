@@ -1,0 +1,243 @@
+//! The coordinator: experiment orchestration over the 2×2 engine grid.
+//!
+//! Owns dataset preparation, pool init, the epoch/batch loop with the
+//! paper's warm-up discipline (§4.3: first epochs excluded from timing),
+//! per-epoch timing, loss curves, and validation — everything the CLI,
+//! examples and benches share. Python is never involved.
+mod sweep;
+mod trainer;
+
+pub use sweep::{render_paper_table, run_table, SweepCell, SweepConfig, TableKind};
+pub use trainer::{
+    train_parallel_native, train_parallel_pjrt, train_sequential_native, train_sequential_pjrt,
+    BatchSet, TrainOutcome,
+};
+
+use crate::config::{ExperimentConfig, Strategy};
+use crate::data::{self, Dataset, Split};
+use crate::metrics::Timer;
+use crate::nn::init::{extract_model, init_pool};
+use crate::nn::mlp::MlpTrainer;
+use crate::nn::parallel::ParallelEngine;
+use crate::pool::PoolLayout;
+use crate::selection::{rank_models, RankedModel};
+use crate::util::rng::Rng;
+
+/// Everything a finished experiment reports.
+#[derive(Debug)]
+pub struct ExperimentReport {
+    pub outcome: TrainOutcome,
+    pub ranked: Vec<RankedModel>,
+    pub n_train: usize,
+    pub n_val: usize,
+    pub n_test: usize,
+    pub setup_s: f64,
+}
+
+/// Synthesize the configured dataset.
+pub fn build_dataset(cfg: &ExperimentConfig, rng: &mut Rng) -> Dataset {
+    use crate::data::SynthKind::*;
+    match cfg.dataset {
+        RandomRegression => data::random_regression(cfg.samples, cfg.features, cfg.out, rng),
+        Blobs => data::blobs(cfg.samples, cfg.features, cfg.out, rng),
+        Moons => data::moons(cfg.samples, cfg.features, cfg.noise, rng),
+        Spirals => data::spirals(cfg.samples, cfg.features, cfg.out, rng),
+        Xor => data::xor_table(cfg.samples, cfg.features, rng),
+        Friedman1 => data::friedman1(cfg.samples, cfg.features, cfg.noise, rng),
+        TeacherMlp => {
+            data::teacher_mlp(cfg.samples, cfg.features, cfg.out, cfg.teacher_hidden, rng)
+        }
+    }
+}
+
+/// Split + standardize (train stats applied to val/test).
+pub fn prepare_split(cfg: &ExperimentConfig, rng: &mut Rng) -> Split {
+    let ds = build_dataset(cfg, rng);
+    let mut split = ds.split(cfg.train_frac, cfg.val_frac, rng);
+    let (mean, std) = split.train.standardize();
+    split.val.standardize_with(&mean, &std);
+    split.test.standardize_with(&mean, &std);
+    split
+}
+
+/// Run a full native experiment per the config (the `pmlp train` path).
+/// PJRT strategies are driven by the examples/benches where an artifact
+/// pool exists; this entry point covers the native 2 strategies.
+pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<ExperimentReport> {
+    anyhow::ensure!(
+        cfg.strategy.is_native(),
+        "run_experiment covers native strategies; use the pjrt drivers for {}",
+        cfg.strategy.name()
+    );
+    let setup = Timer::new();
+    let mut rng = Rng::new(cfg.seed);
+    let split = prepare_split(cfg, &mut rng);
+    let spec = cfg.pool_spec()?;
+    let layout = PoolLayout::build(&spec);
+    let threads = cfg.effective_threads();
+    let out_dim = split.train.out_dim();
+    anyhow::ensure!(
+        out_dim == cfg.out || cfg.dataset == crate::data::SynthKind::Moons
+            || cfg.dataset == crate::data::SynthKind::Xor
+            || cfg.dataset == crate::data::SynthKind::Friedman1,
+        "config out={} but dataset produced {}",
+        cfg.out,
+        out_dim
+    );
+    let fused = init_pool(cfg.seed, &layout, cfg.features, out_dim);
+    let batches = BatchSet::new(&split.train, cfg.batch, false);
+    let setup_s = setup.elapsed_s();
+
+    let outcome = match cfg.strategy {
+        Strategy::NativeParallel => {
+            let mut engine = ParallelEngine::new(
+                layout.clone(),
+                fused,
+                cfg.loss,
+                cfg.features,
+                out_dim,
+                cfg.batch,
+                threads,
+            );
+            let oc = train_parallel_native(
+                &mut engine,
+                &batches,
+                cfg.epochs,
+                cfg.warmup_epochs,
+                cfg.lr,
+            );
+            // validation on the trained fused engine
+            let (vl, vm) = eval_in_batches_native(&mut engine, &split.val, cfg.batch);
+            TrainOutcome { val_losses: Some(vl), val_metrics: Some(vm), ..oc }
+        }
+        Strategy::NativeSequential => {
+            let mut trainers: Vec<MlpTrainer> = (0..spec.n_models())
+                .map(|m| {
+                    MlpTrainer::new(
+                        extract_model(&fused, &layout, m),
+                        spec.models()[m].1,
+                        cfg.loss,
+                        cfg.optimizer,
+                        1, // one model at a time: single-threaded small matmuls
+                    )
+                })
+                .collect();
+            let oc = train_sequential_native(
+                &mut trainers,
+                &batches,
+                cfg.epochs,
+                cfg.warmup_epochs,
+                cfg.lr,
+            );
+            let mut vl = Vec::with_capacity(trainers.len());
+            let mut vm = Vec::with_capacity(trainers.len());
+            for t in &trainers {
+                let (l, m_) = t.evaluate(&split.val.x, &split.val.targets);
+                vl.push(l);
+                vm.push(m_);
+            }
+            TrainOutcome { val_losses: Some(vl), val_metrics: Some(vm), ..oc }
+        }
+        _ => unreachable!(),
+    };
+
+    let ranked = rank_models(
+        &spec,
+        outcome.val_losses.as_ref().expect("val"),
+        outcome.val_metrics.as_ref().expect("val"),
+        cfg.loss,
+    );
+    Ok(ExperimentReport {
+        outcome,
+        ranked,
+        n_train: split.train.len(),
+        n_val: split.val.len(),
+        n_test: split.test.len(),
+        setup_s,
+    })
+}
+
+/// Evaluate a native fused engine over a dataset in batches, averaging
+/// per-model losses/metrics weighted by batch size.
+pub fn eval_in_batches_native(
+    engine: &mut ParallelEngine,
+    ds: &Dataset,
+    batch: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let n_models = engine.layout.n_models();
+    let mut lsum = vec![0.0f32; n_models];
+    let mut msum = vec![0.0f32; n_models];
+    let mut total = 0usize;
+    let mut start = 0;
+    while start < ds.len() {
+        let (x, y) = ds.batch(start, batch.min(engine.batch_cap()));
+        let rows = x.rows();
+        let (l, m_) = engine.evaluate(&x, &y);
+        for i in 0..n_models {
+            lsum[i] += l[i] * rows as f32;
+            msum[i] += m_[i] * rows as f32;
+        }
+        total += rows;
+        start += rows;
+    }
+    let inv = 1.0 / total.max(1) as f32;
+    (lsum.iter().map(|v| v * inv).collect(), msum.iter().map(|v| v * inv).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthKind;
+    use crate::nn::loss::Loss;
+
+    fn quick_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            samples: 200,
+            features: 6,
+            out: 2,
+            dataset: SynthKind::Blobs,
+            hidden_sizes: vec![2, 4],
+            acts: vec![crate::nn::act::Act::Relu, crate::nn::act::Act::Tanh],
+            repeats: 1,
+            epochs: 4,
+            warmup_epochs: 1,
+            batch: 25,
+            lr: 0.1,
+            loss: Loss::Ce,
+            threads: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn native_parallel_experiment_end_to_end() {
+        let cfg = quick_cfg();
+        let rep = run_experiment(&cfg).unwrap();
+        assert_eq!(rep.ranked.len(), 4);
+        assert_eq!(rep.outcome.epoch_times.len(), 4);
+        assert!(rep.outcome.avg_timed_epoch_s() > 0.0);
+        // blobs are separable: the best model should beat chance
+        assert!(rep.ranked[0].val_metric > 0.6, "{:?}", rep.ranked[0]);
+    }
+
+    #[test]
+    fn native_sequential_matches_parallel_ranking_signal() {
+        let mut cfg = quick_cfg();
+        let rep_par = run_experiment(&cfg).unwrap();
+        cfg.strategy = Strategy::NativeSequential;
+        let rep_seq = run_experiment(&cfg).unwrap();
+        // identical init/data/lr -> identical val losses (tolerance)
+        let vp = rep_par.outcome.val_losses.as_ref().unwrap();
+        let vs = rep_seq.outcome.val_losses.as_ref().unwrap();
+        for (a, b) in vp.iter().zip(vs) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn pjrt_strategy_rejected_here() {
+        let mut cfg = quick_cfg();
+        cfg.strategy = Strategy::PjrtParallel;
+        assert!(run_experiment(&cfg).is_err());
+    }
+}

@@ -1,0 +1,312 @@
+//! The paper's evaluation sweeps (Tables 1 and 2): samples × features ×
+//! batch, Parallel vs Sequential, on the native (CPU) or PJRT (device)
+//! engines. Produces the same three-section table layout the paper prints:
+//! Parallel seconds, Sequential seconds, Parallel/Sequential %.
+
+use super::trainer::{
+    train_parallel_native, train_parallel_pjrt, train_sequential_native, train_sequential_pjrt,
+    BatchSet,
+};
+use crate::data;
+use crate::metrics::{fmt_pct, fmt_secs, Table};
+use crate::nn::init::{extract_model, init_pool};
+use crate::nn::loss::Loss;
+use crate::nn::mlp::MlpTrainer;
+use crate::nn::optimizer::OptimizerKind;
+use crate::nn::parallel::ParallelEngine;
+use crate::pool::{PoolLayout, PoolSpec};
+use crate::runtime::{PjrtParallelEngine, PjrtRuntime, PjrtSequentialEngine};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TableKind {
+    /// Table 1 — native Rust engines (the paper's CPU column).
+    NativeCpu,
+    /// Table 2 — PJRT device engines (the paper's GPU column analog).
+    Pjrt,
+}
+
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub samples: Vec<usize>,
+    pub features: Vec<usize>,
+    pub batches: Vec<usize>,
+    pub out: usize,
+    pub epochs: usize,
+    pub warmup: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub threads: usize,
+    /// native pool (Table 1); the PJRT sweep always uses the manifest's
+    /// "bench" pool (that's what the artifacts were lowered for)
+    pub pool: PoolSpec,
+    /// skip cells whose estimated sequential cost would dominate the run
+    pub max_samples_sequential: usize,
+}
+
+impl SweepConfig {
+    /// The paper's grid with the scaled default pool (DESIGN.md §2).
+    pub fn paper_grid(pool: PoolSpec) -> SweepConfig {
+        SweepConfig {
+            samples: vec![100, 1000, 10000],
+            features: vec![5, 10, 50, 100],
+            batches: vec![32, 128, 256],
+            out: 2,
+            epochs: 3,
+            warmup: 1,
+            lr: 0.01,
+            seed: 42,
+            threads: crate::util::threadpool::num_threads(),
+            pool,
+            max_samples_sequential: usize::MAX,
+        }
+    }
+
+    /// The artifact bench pool (mirrors python/compile/specs.py).
+    pub fn bench_pool() -> PoolSpec {
+        PoolSpec::from_grid(&[2, 4, 8, 16, 25], &crate::nn::act::ALL_ACTS, 4).expect("bench pool")
+    }
+
+    /// A fast smoke grid for tests/CI.
+    pub fn quick(pool: PoolSpec) -> SweepConfig {
+        SweepConfig {
+            samples: vec![100],
+            features: vec![5, 10],
+            batches: vec![32],
+            epochs: 2,
+            warmup: 1,
+            ..Self::paper_grid(pool)
+        }
+    }
+}
+
+/// One (samples, features, batch) cell's measurements.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    pub samples: usize,
+    pub features: usize,
+    pub batch: usize,
+    /// average timed pool-epoch seconds
+    pub parallel_s: f64,
+    pub sequential_s: f64,
+}
+
+impl SweepCell {
+    pub fn ratio(&self) -> f64 {
+        self.parallel_s / self.sequential_s
+    }
+}
+
+/// Run the full sweep; logs progress to stderr.
+pub fn run_table(
+    kind: TableKind,
+    cfg: &SweepConfig,
+    artifacts_dir: Option<&std::path::Path>,
+) -> anyhow::Result<Vec<SweepCell>> {
+    let rt = match kind {
+        TableKind::NativeCpu => None,
+        TableKind::Pjrt => {
+            let dir = artifacts_dir
+                .ok_or_else(|| anyhow::anyhow!("pjrt sweep needs --artifacts dir"))?;
+            Some(PjrtRuntime::new(dir)?)
+        }
+    };
+    let mut cells = Vec::new();
+    for &f in &cfg.features {
+        for &n in &cfg.samples {
+            for &b in &cfg.batches {
+                if b > n {
+                    continue;
+                }
+                let cell = run_cell(kind, cfg, rt.as_ref(), n, f, b)?;
+                log::info!(
+                    "cell n={n} f={f} b={b}: parallel={:.3}s sequential={:.3}s ratio={:.3}%",
+                    cell.parallel_s,
+                    cell.sequential_s,
+                    cell.ratio() * 100.0
+                );
+                eprintln!(
+                    "[sweep {:?}] n={n} f={f} b={b}: par={:.3}s seq={:.3}s ({:.3}%)",
+                    kind,
+                    cell.parallel_s,
+                    cell.sequential_s,
+                    cell.ratio() * 100.0
+                );
+                cells.push(cell);
+            }
+        }
+    }
+    Ok(cells)
+}
+
+fn run_cell(
+    kind: TableKind,
+    cfg: &SweepConfig,
+    rt: Option<&PjrtRuntime>,
+    n: usize,
+    f: usize,
+    b: usize,
+) -> anyhow::Result<SweepCell> {
+    let mut rng = Rng::new(cfg.seed ^ (n as u64) << 32 ^ (f as u64) << 16 ^ b as u64);
+    let ds = data::random_regression(n, f, cfg.out, &mut rng);
+    // PJRT artifacts bake the batch shape: drop the ragged tail everywhere
+    // so both engines and both tables train on identical batches.
+    let batches = BatchSet::new(&ds, b, true);
+
+    match kind {
+        TableKind::NativeCpu => {
+            let layout = PoolLayout::build(&cfg.pool);
+            let fused = init_pool(cfg.seed, &layout, f, cfg.out);
+            let mut engine = ParallelEngine::new(
+                layout.clone(),
+                fused.clone(),
+                Loss::Mse,
+                f,
+                cfg.out,
+                b,
+                cfg.threads,
+            );
+            let par =
+                train_parallel_native(&mut engine, &batches, cfg.epochs, cfg.warmup, cfg.lr);
+            let seq_s = if n <= cfg.max_samples_sequential {
+                let mut trainers: Vec<MlpTrainer> = (0..cfg.pool.n_models())
+                    .map(|m| {
+                        MlpTrainer::new(
+                            extract_model(&fused, &layout, m),
+                            cfg.pool.models()[m].1,
+                            Loss::Mse,
+                            OptimizerKind::Sgd,
+                            1,
+                        )
+                    })
+                    .collect();
+                train_sequential_native(&mut trainers, &batches, cfg.epochs, cfg.warmup, cfg.lr)
+                    .avg_timed_epoch_s()
+            } else {
+                f64::NAN
+            };
+            Ok(SweepCell {
+                samples: n,
+                features: f,
+                batch: b,
+                parallel_s: par.avg_timed_epoch_s(),
+                sequential_s: seq_s,
+            })
+        }
+        TableKind::Pjrt => {
+            let rt = rt.expect("runtime present for pjrt sweep");
+            let layout = rt.manifest.layout("bench")?;
+            let fused = init_pool(cfg.seed, &layout, f, cfg.out);
+            let mut engine = PjrtParallelEngine::new(rt, "bench", f, b, Loss::Mse, &fused)?;
+            let par =
+                train_parallel_pjrt(&mut engine, &batches, cfg.epochs, cfg.warmup, cfg.lr)?;
+            let seq_s = if n <= cfg.max_samples_sequential {
+                let mut seq = PjrtSequentialEngine::new(
+                    rt, &layout, f, b, cfg.out, Loss::Mse, &fused, false,
+                )?;
+                train_sequential_pjrt(&mut seq, &batches, cfg.epochs, cfg.warmup, cfg.lr)?
+                    .avg_timed_epoch_s()
+            } else {
+                f64::NAN
+            };
+            Ok(SweepCell {
+                samples: n,
+                features: f,
+                batch: b,
+                parallel_s: par.avg_timed_epoch_s(),
+                sequential_s: seq_s,
+            })
+        }
+    }
+}
+
+/// Render cells in the paper's layout: one row per feature count, one
+/// column per (samples, batch) pair, three sections.
+pub fn render_paper_table(title: &str, cfg: &SweepConfig, cells: &[SweepCell]) -> String {
+    let mut cols: Vec<(usize, usize)> = Vec::new();
+    for &n in &cfg.samples {
+        for &b in &cfg.batches {
+            if b <= n && cells.iter().any(|c| c.samples == n && c.batch == b) {
+                cols.push((n, b));
+            }
+        }
+    }
+    let mut header: Vec<String> = vec!["Features".into()];
+    header.extend(cols.iter().map(|(n, b)| format!("n={n} b={b}")));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+
+    let lookup = |f: usize, n: usize, b: usize| {
+        cells.iter().find(|c| c.features == f && c.samples == n && c.batch == b)
+    };
+    let mut out = String::new();
+    for (section, getter) in [
+        ("Parallel (seconds / pool-epoch)", 0usize),
+        ("Sequential (seconds / pool-epoch)", 1),
+        ("Parallel/Sequential (%)", 2),
+    ] {
+        let mut t = Table::new(&format!("{title} — {section}"), &header_refs);
+        for &f in &cfg.features {
+            if !cells.iter().any(|c| c.features == f) {
+                continue;
+            }
+            let mut row = vec![f.to_string()];
+            for &(n, b) in &cols {
+                row.push(match lookup(f, n, b) {
+                    Some(c) => match getter {
+                        0 => fmt_secs(c.parallel_s),
+                        1 => fmt_secs(c.sequential_s),
+                        _ => fmt_pct(c.ratio()),
+                    },
+                    None => "-".into(),
+                });
+            }
+            t.row(row);
+        }
+        out.push_str(&t.to_markdown());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::act::Act;
+
+    fn tiny_pool() -> PoolSpec {
+        PoolSpec::from_grid(&[1, 2], &[Act::Relu, Act::Tanh], 1).unwrap()
+    }
+
+    #[test]
+    fn native_quick_sweep_runs() {
+        let cfg = SweepConfig::quick(tiny_pool());
+        let cells = run_table(TableKind::NativeCpu, &cfg, None).unwrap();
+        assert_eq!(cells.len(), 2); // 2 features x 1 samples x 1 batch
+        for c in &cells {
+            assert!(c.parallel_s > 0.0 && c.sequential_s > 0.0);
+            assert!(c.ratio().is_finite());
+        }
+    }
+
+    #[test]
+    fn table_renders_paper_layout() {
+        let cfg = SweepConfig::quick(tiny_pool());
+        let cells = vec![
+            SweepCell { samples: 100, features: 5, batch: 32, parallel_s: 0.1, sequential_s: 1.0 },
+            SweepCell { samples: 100, features: 10, batch: 32, parallel_s: 0.2, sequential_s: 1.5 },
+        ];
+        let md = render_paper_table("Table 1 (CPU)", &cfg, &cells);
+        assert!(md.contains("Parallel (seconds"));
+        assert!(md.contains("Sequential (seconds"));
+        assert!(md.contains("Parallel/Sequential (%)"));
+        assert!(md.contains("n=100 b=32"));
+        assert!(md.contains("10.000")); // 0.1/1.0 = 10%
+    }
+
+    #[test]
+    fn bench_pool_matches_specs_py() {
+        let p = SweepConfig::bench_pool();
+        assert_eq!(p.n_models(), 200);
+        assert_eq!(p.total_hidden(), 55 * 40);
+    }
+}

@@ -1,0 +1,277 @@
+//! Epoch/batch training loops for all four engines, with the paper's
+//! timing discipline: per-epoch wall times recorded, first `warmup`
+//! epochs excluded from the reported average (§4.3).
+
+use crate::data::Dataset;
+use crate::metrics::{Curve, Timer};
+use crate::nn::mlp::MlpTrainer;
+use crate::nn::parallel::ParallelEngine;
+use crate::runtime::{PjrtParallelEngine, PjrtSequentialEngine};
+use crate::tensor::Tensor;
+
+/// Pre-materialized batches — the analog of the paper storing all samples
+/// on the GPU up front so batch creation never hits the timing loop.
+pub struct BatchSet {
+    pub batches: Vec<(Tensor, Tensor)>,
+    pub batch: usize,
+    pub n_samples: usize,
+}
+
+impl BatchSet {
+    /// `drop_ragged` drops a final partial batch (required by the
+    /// fixed-shape PJRT artifacts; native engines accept either way).
+    pub fn new(ds: &Dataset, batch: usize, drop_ragged: bool) -> BatchSet {
+        let mut batches = Vec::new();
+        let mut start = 0;
+        let mut n_samples = 0;
+        while start < ds.len() {
+            let (x, y) = ds.batch(start, batch);
+            let rows = x.rows();
+            if rows < batch && drop_ragged {
+                break;
+            }
+            n_samples += rows;
+            batches.push((x, y));
+            start += rows;
+        }
+        assert!(!batches.is_empty(), "dataset smaller than one batch");
+        BatchSet { batches, batch, n_samples }
+    }
+
+    pub fn n_batches(&self) -> usize {
+        self.batches.len()
+    }
+}
+
+/// The result of a training run, common to all engines.
+#[derive(Debug, Default)]
+pub struct TrainOutcome {
+    /// wall seconds per epoch (including warm-up epochs)
+    pub epoch_times: Vec<f64>,
+    pub warmup_epochs: usize,
+    /// final per-model training losses (original pool order)
+    pub final_losses: Vec<f32>,
+    /// mean-over-models training loss per epoch
+    pub train_curve: Curve,
+    /// filled by the caller after validation
+    pub val_losses: Option<Vec<f32>>,
+    pub val_metrics: Option<Vec<f32>>,
+}
+
+impl TrainOutcome {
+    /// Mean epoch time excluding warm-up (the paper's reported number).
+    pub fn avg_timed_epoch_s(&self) -> f64 {
+        let timed = &self.epoch_times[self.warmup_epochs.min(self.epoch_times.len())..];
+        if timed.is_empty() {
+            return self.epoch_times.iter().copied().sum::<f64>()
+                / self.epoch_times.len().max(1) as f64;
+        }
+        timed.iter().copied().sum::<f64>() / timed.len() as f64
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.epoch_times.iter().sum()
+    }
+}
+
+fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f32>() / xs.len() as f32
+    }
+}
+
+/// Fused native engine: epochs × batches, one `step` per batch.
+pub fn train_parallel_native(
+    engine: &mut ParallelEngine,
+    batches: &BatchSet,
+    epochs: usize,
+    warmup: usize,
+    lr: f32,
+) -> TrainOutcome {
+    let mut out = TrainOutcome { warmup_epochs: warmup, ..Default::default() };
+    out.train_curve = Curve::new("train_loss");
+    for epoch in 0..epochs {
+        let t = Timer::new();
+        let mut last = Vec::new();
+        for (x, y) in &batches.batches {
+            last = engine.step(x, y, lr);
+        }
+        out.epoch_times.push(t.elapsed_s());
+        out.train_curve.push(epoch, mean(&last) as f64);
+        out.final_losses = last;
+    }
+    out
+}
+
+/// Native sequential baseline: models outer, epochs inner — exactly "one
+/// model at a time". Per-(model, epoch) times are summed into pool-epoch
+/// times so the two strategies report the same unit.
+pub fn train_sequential_native(
+    trainers: &mut [MlpTrainer],
+    batches: &BatchSet,
+    epochs: usize,
+    warmup: usize,
+    lr: f32,
+) -> TrainOutcome {
+    let mut out = TrainOutcome { warmup_epochs: warmup, ..Default::default() };
+    out.train_curve = Curve::new("train_loss");
+    out.epoch_times = vec![0.0; epochs];
+    out.final_losses = vec![0.0; trainers.len()];
+    let mut per_epoch_losses = vec![0.0f32; epochs];
+    for (m, trainer) in trainers.iter_mut().enumerate() {
+        for (epoch, epoch_time) in out.epoch_times.iter_mut().enumerate() {
+            let t = Timer::new();
+            let mut last = 0.0;
+            for (x, y) in &batches.batches {
+                last = trainer.step(x, y, lr);
+            }
+            *epoch_time += t.elapsed_s();
+            per_epoch_losses[epoch] += last;
+            if epoch == epochs - 1 {
+                out.final_losses[m] = last;
+            }
+        }
+    }
+    for (epoch, s) in per_epoch_losses.iter().enumerate() {
+        out.train_curve.push(epoch, (*s / trainers.len() as f32) as f64);
+    }
+    out
+}
+
+/// Fused PJRT engine: one artifact execution per batch. Batch literals are
+/// pre-built once (data "device-resident" before the clock starts).
+pub fn train_parallel_pjrt(
+    engine: &mut PjrtParallelEngine,
+    batches: &BatchSet,
+    epochs: usize,
+    warmup: usize,
+    lr: f32,
+) -> anyhow::Result<TrainOutcome> {
+    use crate::runtime::literal_of;
+    let lits: Vec<(xla::Literal, xla::Literal)> = batches
+        .batches
+        .iter()
+        .map(|(x, y)| Ok((literal_of(x)?, literal_of(y)?)))
+        .collect::<anyhow::Result<_>>()?;
+    let mut out = TrainOutcome { warmup_epochs: warmup, ..Default::default() };
+    out.train_curve = Curve::new("train_loss");
+    for epoch in 0..epochs {
+        let t = Timer::new();
+        let mut last = Vec::new();
+        for (x, y) in &lits {
+            last = engine.step_literals(x, y, lr)?;
+        }
+        out.epoch_times.push(t.elapsed_s());
+        out.train_curve.push(epoch, mean(&last) as f64);
+        out.final_losses = last;
+    }
+    Ok(out)
+}
+
+/// Sequential PJRT baseline: models outer, epochs inner, one tiny artifact
+/// execution per (model, batch) — the dispatch-bound regime of Table 2.
+pub fn train_sequential_pjrt(
+    engine: &mut PjrtSequentialEngine,
+    batches: &BatchSet,
+    epochs: usize,
+    warmup: usize,
+    lr: f32,
+) -> anyhow::Result<TrainOutcome> {
+    use crate::runtime::literal_of;
+    let lits: Vec<(xla::Literal, xla::Literal)> = batches
+        .batches
+        .iter()
+        .map(|(x, y)| Ok((literal_of(x)?, literal_of(y)?)))
+        .collect::<anyhow::Result<_>>()?;
+    let mut out = TrainOutcome { warmup_epochs: warmup, ..Default::default() };
+    out.train_curve = Curve::new("train_loss");
+    out.epoch_times = vec![0.0; epochs];
+    out.final_losses = vec![0.0; engine.n_models()];
+    let mut per_epoch_losses = vec![0.0f32; epochs];
+    for m in 0..engine.n_models() {
+        for epoch in 0..epochs {
+            let t = Timer::new();
+            let mut last = 0.0;
+            for (x, y) in &lits {
+                last = engine.step_model(m, x, y, lr)?;
+            }
+            out.epoch_times[epoch] += t.elapsed_s();
+            per_epoch_losses[epoch] += last;
+            if epoch == epochs - 1 {
+                out.final_losses[m] = last;
+            }
+        }
+    }
+    for (epoch, s) in per_epoch_losses.iter().enumerate() {
+        out.train_curve.push(epoch, (*s / engine.n_models() as f32) as f64);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::nn::act::Act;
+    use crate::nn::init::{extract_model, init_pool};
+    use crate::nn::loss::Loss;
+    use crate::nn::optimizer::OptimizerKind;
+    use crate::pool::{PoolLayout, PoolSpec};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn batchset_ragged_handling() {
+        let mut rng = Rng::new(1);
+        let ds = data::random_regression(10, 3, 2, &mut rng);
+        let keep = BatchSet::new(&ds, 4, false);
+        assert_eq!(keep.n_batches(), 3);
+        assert_eq!(keep.n_samples, 10);
+        let drop = BatchSet::new(&ds, 4, true);
+        assert_eq!(drop.n_batches(), 2);
+        assert_eq!(drop.n_samples, 8);
+    }
+
+    #[test]
+    fn outcome_timing_discipline() {
+        let oc = TrainOutcome {
+            epoch_times: vec![10.0, 1.0, 1.0, 1.0],
+            warmup_epochs: 1,
+            ..Default::default()
+        };
+        assert!((oc.avg_timed_epoch_s() - 1.0).abs() < 1e-12);
+        assert!((oc.total_s() - 13.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn native_loops_agree() {
+        // one fused run vs per-model sequential runs over the same batches
+        let spec = PoolSpec::new(vec![(2, Act::Relu), (3, Act::Tanh)]).unwrap();
+        let layout = PoolLayout::build(&spec);
+        let mut rng = Rng::new(2);
+        let ds = data::random_regression(32, 4, 2, &mut rng);
+        let batches = BatchSet::new(&ds, 8, false);
+        let fused = init_pool(9, &layout, 4, 2);
+        let mut engine =
+            ParallelEngine::new(layout.clone(), fused.clone(), Loss::Mse, 4, 2, 8, 2);
+        let oc_par = train_parallel_native(&mut engine, &batches, 3, 1, 0.05);
+        let mut trainers: Vec<MlpTrainer> = (0..2)
+            .map(|m| {
+                MlpTrainer::new(
+                    extract_model(&fused, &layout, m),
+                    spec.models()[m].1,
+                    Loss::Mse,
+                    OptimizerKind::Sgd,
+                    1,
+                )
+            })
+            .collect();
+        let oc_seq = train_sequential_native(&mut trainers, &batches, 3, 1, 0.05);
+        for (a, b) in oc_par.final_losses.iter().zip(&oc_seq.final_losses) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        assert_eq!(oc_par.epoch_times.len(), 3);
+        assert_eq!(oc_seq.epoch_times.len(), 3);
+    }
+}

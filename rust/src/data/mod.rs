@@ -1,0 +1,14 @@
+//! Synthetic dataset substrate.
+//!
+//! The paper evaluates on *controlled* datasets parameterized by
+//! (samples, features) — `random_regression` reproduces those timing
+//! workloads. The learnable generators (blobs, moons, spirals, xor,
+//! friedman1, teacher nets) back the model-selection examples, where the
+//! pool has to actually rank architectures.
+mod dataset;
+mod synth;
+
+pub use dataset::{Dataset, Split};
+pub use synth::{
+    blobs, friedman1, moons, random_regression, spirals, teacher_mlp, xor_table, SynthKind,
+};

@@ -1,0 +1,305 @@
+//! Synthetic data generators.
+//!
+//! `random_regression` is the paper's controlled timing workload (§4.3):
+//! random features, random targets — training dynamics don't matter for
+//! timing, only shapes. The rest are learnable tasks for the selection
+//! examples, all embeddable into an arbitrary feature dim `F` via a random
+//! linear lift so one pool config serves many tasks.
+
+use super::dataset::{one_hot, Dataset};
+use crate::tensor::{matmul, Tensor};
+use crate::util::rng::Rng;
+
+/// Named generator for configs/CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SynthKind {
+    RandomRegression,
+    Blobs,
+    Moons,
+    Spirals,
+    Xor,
+    Friedman1,
+    TeacherMlp,
+}
+
+impl SynthKind {
+    pub fn from_name(name: &str) -> Option<SynthKind> {
+        Some(match name {
+            "random_regression" => SynthKind::RandomRegression,
+            "blobs" => SynthKind::Blobs,
+            "moons" => SynthKind::Moons,
+            "spirals" => SynthKind::Spirals,
+            "xor" => SynthKind::Xor,
+            "friedman1" => SynthKind::Friedman1,
+            "teacher_mlp" => SynthKind::TeacherMlp,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SynthKind::RandomRegression => "random_regression",
+            SynthKind::Blobs => "blobs",
+            SynthKind::Moons => "moons",
+            SynthKind::Spirals => "spirals",
+            SynthKind::Xor => "xor",
+            SynthKind::Friedman1 => "friedman1",
+            SynthKind::TeacherMlp => "teacher_mlp",
+        }
+    }
+}
+
+/// Paper §4.3 controlled dataset: random X `[n, features]`, random
+/// regression targets `[n, out]`.
+pub fn random_regression(n: usize, features: usize, out: usize, rng: &mut Rng) -> Dataset {
+    let mut x = Tensor::zeros(&[n, features]);
+    rng.fill_normal(x.data_mut(), 0.0, 1.0);
+    let mut y = Tensor::zeros(&[n, out]);
+    rng.fill_normal(y.data_mut(), 0.0, 1.0);
+    Dataset::new(x, y, None)
+}
+
+/// Lift 2-D points into `features` dims with a random orthogonal-ish map
+/// plus small noise — keeps the task learnable while exercising wide F.
+fn lift_2d(points: &[(f32, f32)], features: usize, noise: f32, rng: &mut Rng) -> Tensor {
+    assert!(features >= 2);
+    let n = points.len();
+    let mut base = Tensor::zeros(&[n, 2]);
+    for (i, &(a, b)) in points.iter().enumerate() {
+        base.set2(i, 0, a);
+        base.set2(i, 1, b);
+    }
+    if features == 2 {
+        return base;
+    }
+    let mut proj = Tensor::zeros(&[2, features]);
+    rng.fill_normal(proj.data_mut(), 0.0, 1.0);
+    let mut x = matmul::nn(&base, &proj, 1);
+    for v in x.data_mut() {
+        *v += noise * rng.normal();
+    }
+    x
+}
+
+/// Gaussian blobs — `n_classes` isotropic clusters.
+pub fn blobs(n: usize, features: usize, n_classes: usize, rng: &mut Rng) -> Dataset {
+    let mut centers = Tensor::zeros(&[n_classes, features]);
+    rng.fill_normal(centers.data_mut(), 0.0, 3.0);
+    let mut x = Tensor::zeros(&[n, features]);
+    let mut labels = vec![0usize; n];
+    for i in 0..n {
+        let c = i % n_classes;
+        labels[i] = c;
+        for j in 0..features {
+            x.set2(i, j, centers.at2(c, j) + rng.normal());
+        }
+    }
+    Dataset::new(x, one_hot(&labels, n_classes), Some(n_classes))
+}
+
+/// Two interleaved half-moons (binary), lifted to `features` dims.
+pub fn moons(n: usize, features: usize, noise: f32, rng: &mut Rng) -> Dataset {
+    let mut pts = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = rng.uniform() as f32 * std::f32::consts::PI;
+        if i % 2 == 0 {
+            pts.push((t.cos() + noise * rng.normal(), t.sin() + noise * rng.normal()));
+            labels.push(0);
+        } else {
+            pts.push((
+                1.0 - t.cos() + noise * rng.normal(),
+                0.5 - t.sin() + noise * rng.normal(),
+            ));
+            labels.push(1);
+        }
+    }
+    let x = lift_2d(&pts, features, noise, rng);
+    Dataset::new(x, one_hot(&labels, 2), Some(2))
+}
+
+/// `n_classes` interleaved spirals, lifted to `features` dims.
+pub fn spirals(n: usize, features: usize, n_classes: usize, rng: &mut Rng) -> Dataset {
+    let mut pts = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % n_classes;
+        let t = 0.3 + 2.2 * rng.uniform() as f32;
+        let angle =
+            t * 2.5 + (c as f32) * 2.0 * std::f32::consts::PI / n_classes as f32;
+        pts.push((
+            t * angle.cos() + 0.05 * rng.normal(),
+            t * angle.sin() + 0.05 * rng.normal(),
+        ));
+        labels.push(c);
+    }
+    let x = lift_2d(&pts, features, 0.02, rng);
+    Dataset::new(x, one_hot(&labels, n_classes), Some(n_classes))
+}
+
+/// Continuous XOR: sign(x0)*sign(x1) decides the class.
+pub fn xor_table(n: usize, features: usize, rng: &mut Rng) -> Dataset {
+    let mut pts = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let a = rng.uniform_in(-1.0, 1.0);
+        let b = rng.uniform_in(-1.0, 1.0);
+        pts.push((a, b));
+        labels.push(usize::from(a * b > 0.0));
+    }
+    let x = lift_2d(&pts, features, 0.02, rng);
+    Dataset::new(x, one_hot(&labels, 2), Some(2))
+}
+
+/// Friedman #1 regression (needs >= 5 features; extras are noise).
+pub fn friedman1(n: usize, features: usize, noise: f32, rng: &mut Rng) -> Dataset {
+    assert!(features >= 5, "friedman1 needs >= 5 features");
+    let mut x = Tensor::zeros(&[n, features]);
+    for v in x.data_mut() {
+        *v = rng.uniform() as f32;
+    }
+    let mut y = Tensor::zeros(&[n, 1]);
+    for i in 0..n {
+        let r = x.row(i);
+        let v = 10.0 * (std::f32::consts::PI * r[0] * r[1]).sin()
+            + 20.0 * (r[2] - 0.5).powi(2)
+            + 10.0 * r[3]
+            + 5.0 * r[4]
+            + noise * rng.normal();
+        y.set2(i, 0, v);
+    }
+    Dataset::new(x, y, None)
+}
+
+/// Targets produced by a random "teacher" MLP — a task where the *right*
+/// hidden size exists, so model selection has a signal to find.
+pub fn teacher_mlp(
+    n: usize,
+    features: usize,
+    out: usize,
+    teacher_hidden: usize,
+    rng: &mut Rng,
+) -> Dataset {
+    let mut x = Tensor::zeros(&[n, features]);
+    rng.fill_normal(x.data_mut(), 0.0, 1.0);
+    let mut w1 = Tensor::zeros(&[teacher_hidden, features]);
+    rng.fill_normal(w1.data_mut(), 0.0, (1.0 / features as f32).sqrt());
+    let mut w2 = Tensor::zeros(&[out, teacher_hidden]);
+    rng.fill_normal(w2.data_mut(), 0.0, (1.0 / teacher_hidden as f32).sqrt());
+    let mut h = matmul::nt(&x, &w1, 1);
+    for v in h.data_mut() {
+        *v = v.tanh();
+    }
+    let y = matmul::nt(&h, &w2, 1);
+    Dataset::new(x, y, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let mut rng = Rng::new(1);
+        let d = random_regression(100, 10, 2, &mut rng);
+        assert_eq!((d.len(), d.features(), d.out_dim()), (100, 10, 2));
+        let d = blobs(60, 8, 3, &mut rng);
+        assert_eq!((d.len(), d.features(), d.out_dim()), (60, 8, 3));
+        let d = moons(50, 2, 0.05, &mut rng);
+        assert_eq!((d.len(), d.features(), d.out_dim()), (50, 2, 2));
+        let d = spirals(90, 4, 3, &mut rng);
+        assert_eq!(d.out_dim(), 3);
+        let d = xor_table(40, 6, &mut rng);
+        assert_eq!(d.out_dim(), 2);
+        let d = friedman1(30, 7, 0.1, &mut rng);
+        assert_eq!(d.out_dim(), 1);
+        let d = teacher_mlp(30, 5, 2, 4, &mut rng);
+        assert_eq!(d.out_dim(), 2);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = blobs(20, 4, 2, &mut Rng::new(7));
+        let b = blobs(20, 4, 2, &mut Rng::new(7));
+        assert_eq!(a.x.data(), b.x.data());
+        assert_eq!(a.targets.data(), b.targets.data());
+    }
+
+    #[test]
+    fn blobs_balanced_classes() {
+        let mut rng = Rng::new(2);
+        let d = blobs(90, 4, 3, &mut rng);
+        let labels = d.labels();
+        for c in 0..3 {
+            assert_eq!(labels.iter().filter(|&&l| l == c).count(), 30);
+        }
+    }
+
+    #[test]
+    fn blobs_linearly_separable_by_centroid() {
+        // nearest-centroid classification should beat 90% on blobs
+        let mut rng = Rng::new(3);
+        let d = blobs(300, 6, 3, &mut rng);
+        let labels = d.labels();
+        let mut cent = vec![vec![0.0f32; 6]; 3];
+        let mut cnt = [0usize; 3];
+        for i in 0..d.len() {
+            let c = labels[i];
+            cnt[c] += 1;
+            for j in 0..6 {
+                cent[c][j] += d.x.at2(i, j);
+            }
+        }
+        for c in 0..3 {
+            cent[c].iter_mut().for_each(|v| *v /= cnt[c] as f32);
+        }
+        let mut hits = 0;
+        for i in 0..d.len() {
+            let mut best = (f32::INFINITY, 0usize);
+            for (c, ce) in cent.iter().enumerate() {
+                let dist: f32 =
+                    (0..6).map(|j| (d.x.at2(i, j) - ce[j]).powi(2)).sum();
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            if best.1 == labels[i] {
+                hits += 1;
+            }
+        }
+        assert!(hits as f32 / d.len() as f32 > 0.9);
+    }
+
+    #[test]
+    fn xor_is_not_linearly_biased() {
+        let mut rng = Rng::new(4);
+        let d = xor_table(400, 2, &mut rng);
+        let labels = d.labels();
+        let pos = labels.iter().filter(|&&l| l == 1).count();
+        assert!(pos > 120 && pos < 280, "pos={pos}");
+    }
+
+    #[test]
+    fn friedman_rejects_narrow_features() {
+        let mut rng = Rng::new(5);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            friedman1(10, 4, 0.0, &mut rng)
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn kind_names_round_trip() {
+        for k in [
+            SynthKind::RandomRegression,
+            SynthKind::Blobs,
+            SynthKind::Moons,
+            SynthKind::Spirals,
+            SynthKind::Xor,
+            SynthKind::Friedman1,
+            SynthKind::TeacherMlp,
+        ] {
+            assert_eq!(SynthKind::from_name(k.name()), Some(k));
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! ParallelMLPs — see README.md / DESIGN.md.
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod nn;
+pub mod pool;
+pub mod runtime;
+pub mod selection;
+pub mod tensor;
+pub mod util;

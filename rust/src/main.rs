@@ -1,0 +1,210 @@
+//! `pmlp` — the ParallelMLPs coordinator CLI.
+//!
+//! Subcommands:
+//! * `selftest`   — runtime smoke: manifest, PJRT, 4-way engine agreement
+//! * `train`      — run a config-driven experiment (`--config file.toml`)
+//! * `bench`      — regenerate a paper table (`--table 1|2`)
+//! * `inspect`    — pool/layout accounting (the §5 memory note) + artifacts
+//!
+//! Python never runs here: artifacts must already exist (`make artifacts`).
+
+use std::path::PathBuf;
+
+use parallel_mlps::bench_harness::{artifacts_dir, BenchArgs};
+use parallel_mlps::config::ExperimentConfig;
+use parallel_mlps::coordinator::{render_paper_table, run_experiment, run_table, SweepConfig, TableKind};
+use parallel_mlps::metrics::Table;
+use parallel_mlps::nn::init::init_pool;
+use parallel_mlps::nn::loss::Loss;
+use parallel_mlps::pool::{PoolLayout, PoolSpec};
+use parallel_mlps::runtime::{PjrtParallelEngine, PjrtRuntime, PjrtSequentialEngine};
+use parallel_mlps::selection::report;
+use parallel_mlps::util::cli::Args;
+
+const USAGE: &str = "\
+pmlp — ParallelMLPs coordinator (Farias et al., 2022 reproduction)
+
+USAGE:
+  pmlp selftest [--artifacts DIR]
+  pmlp train --config FILE [--top K]
+  pmlp bench --table 1|2 [--quick] [--samples a,b] [--features a,b]
+             [--batches a,b] [--epochs N] [--warmup N] [--threads N]
+             [--paper-scale] [--out FILE] [--artifacts DIR]
+  pmlp inspect [--pool bench|smoke|e2e|paper] [--features N] [--out-dim N]
+               [--artifacts DIR]
+";
+
+fn main() {
+    let code = match real_main() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let args = Args::from_env(&["quick", "paper-scale", "verbose"])
+        .map_err(|e| anyhow::anyhow!("{e}\n{USAGE}"))?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "selftest" => selftest(&args),
+        "train" => train(&args),
+        "bench" => bench(&args),
+        "inspect" => inspect(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+fn artifacts_from(args: &Args) -> PathBuf {
+    args.get("artifacts").map(PathBuf::from).unwrap_or_else(artifacts_dir)
+}
+
+/// Smoke the whole runtime: manifest validation (cross-language layout
+/// checksums), PJRT compile+execute, and a fused-vs-sequential agreement
+/// check on the smoke pool.
+fn selftest(args: &Args) -> anyhow::Result<()> {
+    let dir = artifacts_from(args);
+    println!("artifacts: {}", dir.display());
+    let rt = PjrtRuntime::new(&dir)?;
+    println!("manifest OK: {} pools, {} artifacts (checksums agree)", rt.manifest.pools.len(), rt.manifest.artifacts.len());
+    println!("PJRT platform: {}", rt.platform());
+
+    // fused PJRT == native fused == native sequential, a few steps
+    let layout = rt.manifest.layout("smoke")?;
+    let (f, b, o) = (4usize, 8usize, 2usize);
+    let fused = init_pool(7, &layout, f, o);
+    let mut pjrt = PjrtParallelEngine::new(&rt, "smoke", f, b, Loss::Mse, &fused)?;
+    let mut native = parallel_mlps::nn::parallel::ParallelEngine::new(
+        layout.clone(),
+        fused.clone(),
+        Loss::Mse,
+        f,
+        o,
+        b,
+        2,
+    );
+    let mut seq = PjrtSequentialEngine::new(&rt, &layout, f, b, o, Loss::Mse, &fused, true)?;
+    let mut rng = parallel_mlps::util::rng::Rng::new(99);
+    let ds = parallel_mlps::data::random_regression(b * 2, f, o, &mut rng);
+    let (x1, y1) = ds.batch(0, b);
+    let (x2, y2) = ds.batch(b, b);
+    let mut max_diff = 0f32;
+    for (x, y) in [(&x1, &y1), (&x2, &y2)] {
+        let lp = pjrt.step(x, y, 0.05)?;
+        let ln = native.step(x, y, 0.05);
+        let ls = seq.step_all(x, y, 0.05)?;
+        for i in 0..lp.len() {
+            max_diff = max_diff.max((lp[i] - ln[i]).abs()).max((lp[i] - ls[i]).abs());
+        }
+    }
+    anyhow::ensure!(max_diff < 1e-4, "engine disagreement: max loss diff {max_diff}");
+    println!("engine agreement OK: max per-model loss diff {max_diff:.2e} over 2 steps x 3 engines");
+    println!("selftest PASSED");
+    Ok(())
+}
+
+fn train(args: &Args) -> anyhow::Result<()> {
+    let cfg_path = args
+        .get("config")
+        .ok_or_else(|| anyhow::anyhow!("train requires --config FILE\n{USAGE}"))?;
+    let cfg = ExperimentConfig::from_toml_file(std::path::Path::new(cfg_path))?;
+    let top_k: usize = args.get_parse_or("top", 10).map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "experiment {:?}: {} models on {}({} samples, {} features), strategy {}",
+        cfg.name,
+        cfg.pool_spec()?.n_models(),
+        cfg.dataset.name(),
+        cfg.samples,
+        cfg.features,
+        cfg.strategy.name()
+    );
+    let rep = run_experiment(&cfg)?;
+    println!(
+        "trained {} epochs in {:.3}s (avg timed epoch {:.3}s; setup {:.3}s)",
+        rep.outcome.epoch_times.len(),
+        rep.outcome.total_s(),
+        rep.outcome.avg_timed_epoch_s(),
+        rep.setup_s
+    );
+    println!(
+        "splits: train={} val={} test={}",
+        rep.n_train, rep.n_val, rep.n_test
+    );
+    println!("{}", report(&rep.ranked, cfg.loss, top_k));
+    Ok(())
+}
+
+fn bench(args: &Args) -> anyhow::Result<()> {
+    let table: usize = args.get_parse_or("table", 1).map_err(|e| anyhow::anyhow!(e))?;
+    let bargs = BenchArgs::from_env();
+    let pool = if bargs.paper_scale {
+        PoolSpec::paper_full()
+    } else {
+        SweepConfig::bench_pool()
+    };
+    let mut cfg = SweepConfig::paper_grid(pool);
+    bargs.apply(&mut cfg);
+    let (kind, title) = match table {
+        1 => (TableKind::NativeCpu, "Table 1 (CPU / native engines)"),
+        2 => (TableKind::Pjrt, "Table 2 (PJRT device engines)"),
+        _ => anyhow::bail!("--table must be 1 or 2"),
+    };
+    let dir = artifacts_from(args);
+    let cells = run_table(kind, &cfg, Some(&dir))?;
+    let md = render_paper_table(title, &cfg, &cells);
+    bargs.emit(&md);
+    Ok(())
+}
+
+/// Pool accounting: the §5 memory-feasibility note, per pool.
+fn inspect(args: &Args) -> anyhow::Result<()> {
+    let features: usize = args.get_parse_or("features", 100).map_err(|e| anyhow::anyhow!(e))?;
+    let out: usize = args.get_parse_or("out-dim", 2).map_err(|e| anyhow::anyhow!(e))?;
+    let which = args.get_or("pool", "all");
+    let mut t = Table::new(
+        &format!("Pool accounting (F={features}, O={out})"),
+        &[
+            "pool", "models", "hidden", "H_pad", "M_pad", "groups", "W", "G", "pad_eff",
+            "param_MB",
+        ],
+    );
+    let mut add = |name: &str, spec: &PoolSpec| {
+        let lay = PoolLayout::build(spec);
+        t.row(vec![
+            name.to_string(),
+            spec.n_models().to_string(),
+            spec.total_hidden().to_string(),
+            lay.h_pad().to_string(),
+            lay.m_pad().to_string(),
+            lay.n_groups.to_string(),
+            lay.group_width.to_string(),
+            lay.group_models.to_string(),
+            format!("{:.3}", lay.padding_efficiency()),
+            format!("{:.2}", lay.fused_param_bytes(features, out) as f64 / 1e6),
+        ]);
+    };
+    if which == "paper" || which == "all" {
+        add("paper (10k)", &PoolSpec::paper_full());
+    }
+    let dir = artifacts_from(args);
+    if let Ok(rt) = parallel_mlps::runtime::Manifest::load(&dir) {
+        for (name, entry) in &rt.pools {
+            if which == "all" || which == name {
+                add(name, &entry.spec);
+            }
+        }
+        println!("{}", t.to_markdown());
+        println!("artifacts in manifest: {}", rt.artifacts.len());
+    } else {
+        println!("{}", t.to_markdown());
+        println!("(no artifact manifest found at {})", dir.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,267 @@
+//! Timers, running statistics and report writers (markdown/CSV) — the
+//! observability substrate the coordinator and benches share.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Wall-clock stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let e = self.elapsed_s();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Welford running mean/variance plus min/max.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Welford {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// A markdown table builder matching the paper's row/column layout.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "### {}\n", self.title);
+        }
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let inner: Vec<String> = cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect();
+            format!("| {} |", inner.join(" | "))
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header, &widths));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        let _ = writeln!(out, "| {} |", sep.join(" | "));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join(","));
+        }
+        out
+    }
+}
+
+/// Format seconds the way the paper's tables do (3 decimals).
+pub fn fmt_secs(s: f64) -> String {
+    format!("{s:.3}")
+}
+
+/// Format a percentage with 3 decimals (paper's ratio rows).
+pub fn fmt_pct(frac: f64) -> String {
+    format!("{:.3}", frac * 100.0)
+}
+
+/// A loss-curve recorder that can dump CSV (epoch, value...).
+#[derive(Clone, Debug, Default)]
+pub struct Curve {
+    pub name: String,
+    pub points: Vec<(usize, f64)>,
+}
+
+impl Curve {
+    pub fn new(name: &str) -> Curve {
+        Curve { name: name.to_string(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, epoch: usize, v: f64) {
+        self.points.push((epoch, v));
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = format!("epoch,{}\n", self.name);
+        for (e, v) in &self.points {
+            let _ = writeln!(out, "{e},{v}");
+        }
+        out
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+
+    pub fn first(&self) -> Option<f64> {
+        self.points.first().map(|&(_, v)| v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean: f64 = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var: f64 =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.var() - var).abs() < 1e-12);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 10.0);
+        assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn welford_single_sample() {
+        let mut w = Welford::new();
+        w.push(3.0);
+        assert_eq!(w.mean(), 3.0);
+        assert_eq!(w.var(), 0.0);
+    }
+
+    #[test]
+    fn table_markdown_and_csv() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2.5".into()]);
+        t.row(vec!["x".into(), "y".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| a | "));
+        assert!(md.lines().count() >= 5);
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().next().unwrap(), "a,b");
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_secs(1.23456), "1.235");
+        assert_eq!(fmt_pct(0.0391), "3.910");
+    }
+
+    #[test]
+    fn curve_csv() {
+        let mut c = Curve::new("loss");
+        c.push(0, 1.5);
+        c.push(1, 0.7);
+        assert_eq!(c.first(), Some(1.5));
+        assert_eq!(c.last(), Some(0.7));
+        assert!(c.to_csv().starts_with("epoch,loss\n0,1.5\n"));
+    }
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::new();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_s() >= 0.004);
+    }
+}

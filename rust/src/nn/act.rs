@@ -1,0 +1,322 @@
+//! The paper's ten activation functions (§4.2) with exact derivatives.
+//!
+//! The id order is the cross-language contract mirrored from
+//! `python/compile/acts.py`; artifacts and manifests refer to activations
+//! by these ids.
+
+pub const SELU_LAMBDA: f32 = 1.050_701;
+pub const SELU_ALPHA: f32 = 1.673_263_2;
+pub const LEAKY_SLOPE: f32 = 0.01;
+pub const HARDSHRINK_LAMBDA: f32 = 0.5;
+
+const FRAC_1_SQRT_2: f32 = std::f32::consts::FRAC_1_SQRT_2;
+const INV_SQRT_2PI: f32 = 0.398_942_3; // 1/sqrt(2π)
+
+/// erf via Abramowitz & Stegun 7.1.26 (|err| <= 1.5e-7) — enough to match
+/// XLA's erf within the cross-engine tolerance.
+pub fn erf(x: f32) -> f32 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let poly = t
+        * (0.254_829_592
+            + t * (-0.284_496_736 + t * (1.421_413_741 + t * (-1.453_152_027 + t * 1.061_405_429))));
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+/// Standard normal CDF.
+#[inline]
+fn phi_cdf(x: f32) -> f32 {
+    0.5 * (1.0 + erf(x * FRAC_1_SQRT_2))
+}
+
+/// Standard normal PDF.
+#[inline]
+fn phi_pdf(x: f32) -> f32 {
+    INV_SQRT_2PI * (-0.5 * x * x).exp()
+}
+
+#[inline]
+fn sigmoid_f(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[inline]
+fn softplus_f(x: f32) -> f32 {
+    // numerically stable log(1 + e^x)
+    if x > 20.0 {
+        x
+    } else if x < -20.0 {
+        x.exp()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+/// Activation ids — order is normative (see python/compile/acts.py).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Act {
+    Identity = 0,
+    Sigmoid = 1,
+    Tanh = 2,
+    Relu = 3,
+    Elu = 4,
+    Selu = 5,
+    Gelu = 6,
+    LeakyRelu = 7,
+    Hardshrink = 8,
+    Mish = 9,
+}
+
+pub const ALL_ACTS: [Act; 10] = [
+    Act::Identity,
+    Act::Sigmoid,
+    Act::Tanh,
+    Act::Relu,
+    Act::Elu,
+    Act::Selu,
+    Act::Gelu,
+    Act::LeakyRelu,
+    Act::Hardshrink,
+    Act::Mish,
+];
+
+impl Act {
+    pub fn from_id(id: u8) -> Option<Act> {
+        ALL_ACTS.get(id as usize).copied()
+    }
+
+    pub fn id(self) -> u8 {
+        self as u8
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Act::Identity => "identity",
+            Act::Sigmoid => "sigmoid",
+            Act::Tanh => "tanh",
+            Act::Relu => "relu",
+            Act::Elu => "elu",
+            Act::Selu => "selu",
+            Act::Gelu => "gelu",
+            Act::LeakyRelu => "leaky_relu",
+            Act::Hardshrink => "hardshrink",
+            Act::Mish => "mish",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Act> {
+        ALL_ACTS.into_iter().find(|a| a.name() == name)
+    }
+
+    /// σ(x)
+    #[inline]
+    pub fn apply(self, x: f32) -> f32 {
+        match self {
+            Act::Identity => x,
+            Act::Sigmoid => sigmoid_f(x),
+            Act::Tanh => x.tanh(),
+            Act::Relu => x.max(0.0),
+            Act::Elu => {
+                if x > 0.0 {
+                    x
+                } else {
+                    x.exp_m1()
+                }
+            }
+            Act::Selu => {
+                if x > 0.0 {
+                    SELU_LAMBDA * x
+                } else {
+                    SELU_LAMBDA * SELU_ALPHA * x.exp_m1()
+                }
+            }
+            Act::Gelu => x * phi_cdf(x),
+            Act::LeakyRelu => {
+                if x >= 0.0 {
+                    x
+                } else {
+                    LEAKY_SLOPE * x
+                }
+            }
+            Act::Hardshrink => {
+                if x.abs() > HARDSHRINK_LAMBDA {
+                    x
+                } else {
+                    0.0
+                }
+            }
+            Act::Mish => x * softplus_f(x).tanh(),
+        }
+    }
+
+    /// dσ/dx evaluated at pre-activation `x`.
+    #[inline]
+    pub fn grad(self, x: f32) -> f32 {
+        match self {
+            Act::Identity => 1.0,
+            Act::Sigmoid => {
+                let s = sigmoid_f(x);
+                s * (1.0 - s)
+            }
+            Act::Tanh => {
+                let t = x.tanh();
+                1.0 - t * t
+            }
+            Act::Relu => {
+                if x > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Act::Elu => {
+                if x > 0.0 {
+                    1.0
+                } else {
+                    x.exp()
+                }
+            }
+            Act::Selu => {
+                if x > 0.0 {
+                    SELU_LAMBDA
+                } else {
+                    SELU_LAMBDA * SELU_ALPHA * x.exp()
+                }
+            }
+            Act::Gelu => phi_cdf(x) + x * phi_pdf(x),
+            Act::LeakyRelu => {
+                if x >= 0.0 {
+                    1.0
+                } else {
+                    LEAKY_SLOPE
+                }
+            }
+            Act::Hardshrink => {
+                if x.abs() > HARDSHRINK_LAMBDA {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Act::Mish => {
+                let sp = softplus_f(x);
+                let t = sp.tanh();
+                t + x * (1.0 - t * t) * sigmoid_f(x)
+            }
+        }
+    }
+
+    /// Apply over a slice.
+    pub fn apply_slice(self, xs: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(xs.len(), out.len());
+        for (o, &x) in out.iter_mut().zip(xs) {
+            *o = self.apply(x);
+        }
+    }
+
+    /// `out[i] = upstream[i] * σ'(pre[i])` — the backward fuse.
+    pub fn grad_slice(self, pre: &[f32], upstream: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(pre.len(), upstream.len());
+        debug_assert_eq!(pre.len(), out.len());
+        for i in 0..pre.len() {
+            out[i] = upstream[i] * self.grad(pre[i]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_round_trip() {
+        for (i, a) in ALL_ACTS.iter().enumerate() {
+            assert_eq!(a.id() as usize, i);
+            assert_eq!(Act::from_id(i as u8), Some(*a));
+            assert_eq!(Act::from_name(a.name()), Some(*a));
+        }
+        assert_eq!(Act::from_id(10), None);
+        assert_eq!(Act::from_name("swish"), None);
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        // erf(0)=0, erf(1)=0.8427008, erf(-1)=-erf(1), erf(2)=0.9953223
+        assert!((erf(0.0)).abs() < 1e-7);
+        assert!((erf(1.0) - 0.842_700_8).abs() < 1e-5);
+        assert!((erf(-1.0) + 0.842_700_8).abs() < 1e-5);
+        assert!((erf(2.0) - 0.995_322_3).abs() < 1e-5);
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(Act::Relu.apply(-1.0), 0.0);
+        assert_eq!(Act::Relu.apply(2.0), 2.0);
+        assert!((Act::Sigmoid.apply(0.0) - 0.5).abs() < 1e-7);
+        assert!((Act::Tanh.apply(0.0)).abs() < 1e-7);
+        assert_eq!(Act::Hardshrink.apply(0.4), 0.0);
+        assert_eq!(Act::Hardshrink.apply(0.6), 0.6);
+        assert_eq!(Act::LeakyRelu.apply(-1.0), -0.01);
+        // mish(0) = 0, gelu(0) = 0
+        assert!((Act::Mish.apply(0.0)).abs() < 1e-7);
+        assert!((Act::Gelu.apply(0.0)).abs() < 1e-7);
+        // selu(1) = lambda
+        assert!((Act::Selu.apply(1.0) - SELU_LAMBDA).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let eps = 1e-3f64;
+        for act in ALL_ACTS {
+            for &x in &[-2.5f32, -1.0, -0.49, -0.2, 0.2, 0.51, 1.0, 2.5] {
+                // skip the hardshrink/relu kinks where FD is undefined
+                if matches!(act, Act::Hardshrink) && (x.abs() - 0.5).abs() < 2e-3 {
+                    continue;
+                }
+                let f = |v: f64| act.apply(v as f32) as f64;
+                let fd = (f(x as f64 + eps) - f(x as f64 - eps)) / (2.0 * eps);
+                let an = act.grad(x) as f64;
+                assert!(
+                    (fd - an).abs() < 5e-3,
+                    "{}: x={x} fd={fd} analytic={an}",
+                    act.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn slices_match_scalar() {
+        let xs = [-1.0f32, 0.0, 1.0, 2.0];
+        let up = [1.0f32, 2.0, 3.0, 4.0];
+        for act in ALL_ACTS {
+            let mut out = [0.0f32; 4];
+            act.apply_slice(&xs, &mut out);
+            for i in 0..4 {
+                assert_eq!(out[i], act.apply(xs[i]));
+            }
+            let mut g = [0.0f32; 4];
+            act.grad_slice(&xs, &up, &mut g);
+            for i in 0..4 {
+                assert_eq!(g[i], up[i] * act.grad(xs[i]));
+            }
+        }
+    }
+
+    #[test]
+    fn extreme_inputs_stay_finite() {
+        for act in ALL_ACTS {
+            for &x in &[-80.0f32, -30.0, 30.0, 80.0] {
+                assert!(act.apply(x).is_finite(), "{} apply({x})", act.name());
+                assert!(act.grad(x).is_finite(), "{} grad({x})", act.name());
+            }
+        }
+    }
+}

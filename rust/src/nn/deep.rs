@@ -1,0 +1,509 @@
+//! Fig. 3 / §7 extension: fused training of TWO-hidden-layer MLPs.
+//!
+//! The paper's future-work figure shows two independent deep MLPs
+//! (4-1-2-2 and 4-2-3-2) fused as one network: the first projection is a
+//! plain fused matmul, and *every* subsequent layer needs M3-style
+//! masked propagation so layer-2 neurons only see their own model's
+//! layer-1 neurons. Natively the masking degenerates into per-model
+//! span-to-span dense blocks — the same contiguity trick as `parallel.rs`,
+//! one level deeper.
+//!
+//! This engine is deliberately compact (single-threaded inner loops, no
+//! scratch reuse): it exists to prove the extension trains correctly —
+//! verified against an explicit per-model two-layer reference below.
+
+use crate::nn::act::Act;
+use crate::nn::loss::{self, Loss};
+use crate::tensor::{matmul, Tensor};
+use crate::util::rng::Rng;
+
+/// One deep model: F -> h1 -(act)-> h2 -(act)-> O (shared activation per
+/// model, like the paper's per-model activation choice).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DeepModel {
+    pub h1: u32,
+    pub h2: u32,
+    pub act: Act,
+}
+
+/// A fused pool of two-hidden-layer MLPs (unpadded concatenated layout —
+/// the native engine needs no group padding).
+#[derive(Clone, Debug)]
+pub struct DeepPool {
+    pub models: Vec<DeepModel>,
+    pub features: usize,
+    pub out: usize,
+    /// per model: (start1, end1) span in the fused h1 axis
+    span1: Vec<(usize, usize)>,
+    /// per model: (start2, end2) span in the fused h2 axis
+    span2: Vec<(usize, usize)>,
+    h1_total: usize,
+    h2_total: usize,
+}
+
+/// Fused parameters for the deep pool.
+#[derive(Clone, Debug)]
+pub struct DeepParams {
+    pub w1: Tensor, // [H1, F]
+    pub b1: Tensor, // [H1]
+    pub w2: Tensor, // [H2, H1]  (block-diagonal support; off-blocks stay 0)
+    pub b2: Tensor, // [H2]
+    pub w3: Tensor, // [M*O? no — [O, H2] with per-model output bias]
+    pub b3: Tensor, // [M, O]
+}
+
+impl DeepPool {
+    pub fn new(models: Vec<DeepModel>, features: usize, out: usize) -> anyhow::Result<DeepPool> {
+        anyhow::ensure!(!models.is_empty(), "empty deep pool");
+        for m in &models {
+            anyhow::ensure!(m.h1 >= 1 && m.h2 >= 1, "hidden sizes must be >= 1");
+        }
+        let mut span1 = Vec::with_capacity(models.len());
+        let mut span2 = Vec::with_capacity(models.len());
+        let (mut c1, mut c2) = (0usize, 0usize);
+        for m in &models {
+            span1.push((c1, c1 + m.h1 as usize));
+            span2.push((c2, c2 + m.h2 as usize));
+            c1 += m.h1 as usize;
+            c2 += m.h2 as usize;
+        }
+        Ok(DeepPool { models, features, out, span1, span2, h1_total: c1, h2_total: c2 })
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.models.len()
+    }
+
+    /// Deterministic per-model init (same scheme as the shallow engines).
+    pub fn init(&self, seed: u64) -> DeepParams {
+        let mut params = DeepParams {
+            w1: Tensor::zeros(&[self.h1_total, self.features]),
+            b1: Tensor::zeros(&[self.h1_total]),
+            w2: Tensor::zeros(&[self.h2_total, self.h1_total]),
+            b2: Tensor::zeros(&[self.h2_total]),
+            w3: Tensor::zeros(&[self.out, self.h2_total]),
+            b3: Tensor::zeros(&[self.n_models(), self.out]),
+        };
+        let mut root = Rng::new(seed ^ 0xDEE9);
+        for (m, model) in self.models.iter().enumerate() {
+            let mut rng = root.fork(m as u64);
+            let (s1, e1) = self.span1[m];
+            let (s2, e2) = self.span2[m];
+            let k1 = 1.0 / (self.features as f32).sqrt();
+            let k2 = 1.0 / (model.h1 as f32).sqrt();
+            let k3 = 1.0 / (model.h2 as f32).sqrt();
+            for r in s1..e1 {
+                rng.fill_uniform(&mut params.w1.row_mut(r)[..], -k1, k1);
+                params.b1.data_mut()[r] = rng.uniform_in(-k1, k1);
+            }
+            for r in s2..e2 {
+                // only this model's h1 block is connected (Fig. 3)
+                let row = params.w2.row_mut(r);
+                for v in row[s1..e1].iter_mut() {
+                    *v = rng.uniform_in(-k2, k2);
+                }
+                params.b2.data_mut()[r] = rng.uniform_in(-k2, k2);
+            }
+            for o in 0..self.out {
+                let h1t = self.h1_total;
+                let _ = h1t;
+                let row =
+                    &mut params.w3.data_mut()[o * self.h2_total + s2..o * self.h2_total + e2];
+                for v in row.iter_mut() {
+                    *v = rng.uniform_in(-k3, k3);
+                }
+            }
+            for v in params.b3.row_mut(m).iter_mut() {
+                *v = rng.uniform_in(-k3, k3);
+            }
+        }
+        params
+    }
+
+    /// Fused forward: logits `[B, M, O]`. All inter-model blocks of `w2`
+    /// are structurally zero, so each model's path stays independent.
+    pub fn forward(&self, p: &DeepParams, x: &Tensor) -> Tensor {
+        let (pre1, h1, pre2, h2) = self.forward_parts(p, x);
+        let _ = (pre1, pre2);
+        self.output_from_h2(p, &h2, x.rows(), &h1)
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn forward_parts(&self, p: &DeepParams, x: &Tensor) -> (Tensor, Tensor, Tensor, Tensor) {
+        let b = x.rows();
+        // layer 1 (fused dense)
+        let mut pre1 = matmul::nt(x, &p.w1, 1);
+        crate::nn::mlp::add_bias_rows_vec(&mut pre1, p.b1.data());
+        let mut h1 = Tensor::zeros(&[b, self.h1_total]);
+        self.apply_acts(&pre1, &mut h1, &self.span1);
+        // layer 2: per-model span1 -> span2 dense blocks (M3 one level deep)
+        let mut pre2 = Tensor::zeros(&[b, self.h2_total]);
+        for bi in 0..b {
+            let h1row = h1.row(bi);
+            for (m, _) in self.models.iter().enumerate() {
+                let (s1, e1) = self.span1[m];
+                let (s2, e2) = self.span2[m];
+                for r2 in s2..e2 {
+                    let wrow = &p.w2.row(r2)[s1..e1];
+                    let v = matmul::dot(&h1row[s1..e1], wrow) + p.b2.data()[r2];
+                    pre2.set2(bi, r2, v);
+                }
+            }
+        }
+        let mut h2 = Tensor::zeros(&[b, self.h2_total]);
+        self.apply_acts(&pre2, &mut h2, &self.span2);
+        (pre1, h1, pre2, h2)
+    }
+
+    fn output_from_h2(&self, p: &DeepParams, h2: &Tensor, b: usize, _h1: &Tensor) -> Tensor {
+        let mut y = Tensor::zeros(&[b, self.n_models(), self.out]);
+        for bi in 0..b {
+            for (m, _) in self.models.iter().enumerate() {
+                let (s2, e2) = self.span2[m];
+                for o in 0..self.out {
+                    let wrow = &p.w3.data()[o * self.h2_total + s2..o * self.h2_total + e2];
+                    let v = matmul::dot(&h2.row(bi)[s2..e2], wrow) + p.b3.at2(m, o);
+                    y.set3(bi, m, o, v);
+                }
+            }
+        }
+        y
+    }
+
+    fn apply_acts(&self, pre: &Tensor, out: &mut Tensor, spans: &[(usize, usize)]) {
+        for bi in 0..pre.rows() {
+            let prow = pre.row(bi);
+            for (m, model) in self.models.iter().enumerate() {
+                let (s, e) = spans[m];
+                let orow = &mut out.row_mut(bi)[s..e];
+                model.act.apply_slice(&prow[s..e], orow);
+            }
+        }
+    }
+
+    /// One fused SGD step; returns per-model losses. The gradient math is
+    /// the shallow engine's, applied twice, with layer-2 grads restricted
+    /// to each model's (span2 x span1) block.
+    pub fn step(&self, p: &mut DeepParams, x: &Tensor, targets: &Tensor, loss: Loss, lr: f32) -> Vec<f32> {
+        let b = x.rows();
+        let (pre1, h1, pre2, h2) = self.forward_parts(p, x);
+        let y = self.output_from_h2(p, &h2, b, &h1);
+
+        // per-model losses + dlogits
+        let mut losses = vec![0.0f32; self.n_models()];
+        let mut dy = Tensor::zeros(&[b, self.n_models(), self.out]);
+        for (m, lm) in losses.iter_mut().enumerate() {
+            let mut single = Tensor::zeros(&[b, self.out]);
+            for bi in 0..b {
+                for o in 0..self.out {
+                    single.set2(bi, o, y.at3(bi, m, o));
+                }
+            }
+            *lm = loss::mlp_loss(loss, &single, targets);
+            let mut dsingle = Tensor::zeros(&[b, self.out]);
+            loss::mlp_loss_grad(loss, &single, targets, &mut dsingle);
+            for bi in 0..b {
+                for o in 0..self.out {
+                    dy.set3(bi, m, o, dsingle.at2(bi, o));
+                }
+            }
+        }
+
+        // grads
+        let mut dw3 = Tensor::zeros(&[self.out, self.h2_total]);
+        let mut db3 = Tensor::zeros(&[self.n_models(), self.out]);
+        let mut dh2 = Tensor::zeros(&[b, self.h2_total]);
+        for bi in 0..b {
+            for (m, _) in self.models.iter().enumerate() {
+                let (s2, e2) = self.span2[m];
+                for o in 0..self.out {
+                    let g = dy.at3(bi, m, o);
+                    *db3.row_mut(m).get_mut(o).unwrap() += g;
+                    for r2 in s2..e2 {
+                        dw3.data_mut()[o * self.h2_total + r2] += g * h2.at2(bi, r2);
+                        dh2.data_mut()[bi * self.h2_total + r2] += g * p.w3.data()[o * self.h2_total + r2];
+                    }
+                }
+            }
+        }
+        // dpre2 = dh2 * act'(pre2)
+        let mut dpre2 = Tensor::zeros(&[b, self.h2_total]);
+        self.grad_acts(&pre2, &dh2, &mut dpre2, &self.span2);
+        // layer-2 block grads + dh1
+        let mut dw2 = Tensor::zeros(&[self.h2_total, self.h1_total]);
+        let mut db2 = vec![0.0f32; self.h2_total];
+        let mut dh1 = Tensor::zeros(&[b, self.h1_total]);
+        for bi in 0..b {
+            for (m, _) in self.models.iter().enumerate() {
+                let (s1, e1) = self.span1[m];
+                let (s2, e2) = self.span2[m];
+                for r2 in s2..e2 {
+                    let g = dpre2.at2(bi, r2);
+                    if g == 0.0 {
+                        continue;
+                    }
+                    db2[r2] += g;
+                    let wrow = &p.w2.row(r2)[s1..e1];
+                    let dh1row = &mut dh1.row_mut(bi)[s1..e1];
+                    matmul::axpy(g, wrow, dh1row);
+                    let dwrow = &mut dw2.row_mut(r2)[s1..e1];
+                    matmul::axpy(g, &h1.row(bi)[s1..e1], dwrow);
+                }
+            }
+        }
+        // dpre1 = dh1 * act'(pre1); dW1 = dpre1^T X; db1
+        let mut dpre1 = Tensor::zeros(&[b, self.h1_total]);
+        self.grad_acts(&pre1, &dh1, &mut dpre1, &self.span1);
+        let dw1 = matmul::tn(&dpre1, x, 1);
+        let db1 = crate::nn::mlp::col_sums(&dpre1);
+
+        // SGD
+        p.w1.saxpy_neg(lr, &dw1);
+        for (v, g) in p.b1.data_mut().iter_mut().zip(&db1) {
+            *v -= lr * g;
+        }
+        p.w2.saxpy_neg(lr, &dw2);
+        for (v, g) in p.b2.data_mut().iter_mut().zip(&db2) {
+            *v -= lr * g;
+        }
+        p.w3.saxpy_neg(lr, &dw3);
+        p.b3.saxpy_neg(lr, &db3);
+        losses
+    }
+
+    fn grad_acts(&self, pre: &Tensor, upstream: &Tensor, out: &mut Tensor, spans: &[(usize, usize)]) {
+        for bi in 0..pre.rows() {
+            for (m, model) in self.models.iter().enumerate() {
+                let (s, e) = spans[m];
+                model.act.grad_slice(
+                    &pre.row(bi)[s..e],
+                    &upstream.row(bi)[s..e],
+                    &mut out.row_mut(bi)[s..e],
+                );
+            }
+        }
+    }
+
+    /// Extract one model's dense two-layer params (for the reference).
+    pub fn extract(&self, p: &DeepParams, m: usize) -> (Tensor, Tensor, Tensor, Tensor, Tensor, Tensor) {
+        let (s1, e1) = self.span1[m];
+        let (s2, e2) = self.span2[m];
+        let (h1, h2) = (e1 - s1, e2 - s2);
+        let mut w1 = Tensor::zeros(&[h1, self.features]);
+        let mut b1 = Tensor::zeros(&[h1]);
+        for r in 0..h1 {
+            w1.row_mut(r).copy_from_slice(p.w1.row(s1 + r));
+            b1.data_mut()[r] = p.b1.data()[s1 + r];
+        }
+        let mut w2 = Tensor::zeros(&[h2, h1]);
+        let mut b2 = Tensor::zeros(&[h2]);
+        for r in 0..h2 {
+            w2.row_mut(r).copy_from_slice(&p.w2.row(s2 + r)[s1..e1]);
+            b2.data_mut()[r] = p.b2.data()[s2 + r];
+        }
+        let mut w3 = Tensor::zeros(&[self.out, h2]);
+        for o in 0..self.out {
+            w3.data_mut()[o * h2..(o + 1) * h2]
+                .copy_from_slice(&p.w3.data()[o * self.h2_total + s2..o * self.h2_total + e2]);
+        }
+        let mut b3 = Tensor::zeros(&[self.out]);
+        b3.data_mut().copy_from_slice(p.b3.row(m));
+        (w1, b1, w2, b2, w3, b3)
+    }
+}
+
+/// Dense two-layer reference trainer for one model (the oracle).
+pub struct DeepRef {
+    pub w1: Tensor,
+    pub b1: Tensor,
+    pub w2: Tensor,
+    pub b2: Tensor,
+    pub w3: Tensor,
+    pub b3: Tensor,
+    pub act: Act,
+}
+
+impl DeepRef {
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let mut pre1 = matmul::nt(x, &self.w1, 1);
+        crate::nn::mlp::add_bias_rows_vec(&mut pre1, self.b1.data());
+        let mut h1 = Tensor::zeros(pre1.shape());
+        self.act.apply_slice(pre1.data(), h1.data_mut());
+        let mut pre2 = matmul::nt(&h1, &self.w2, 1);
+        crate::nn::mlp::add_bias_rows_vec(&mut pre2, self.b2.data());
+        let mut h2 = Tensor::zeros(pre2.shape());
+        self.act.apply_slice(pre2.data(), h2.data_mut());
+        let mut y = matmul::nt(&h2, &self.w3, 1);
+        crate::nn::mlp::add_bias_rows_vec(&mut y, self.b3.data());
+        y
+    }
+
+    pub fn step(&mut self, x: &Tensor, targets: &Tensor, loss: Loss, lr: f32) -> f32 {
+        let mut pre1 = matmul::nt(x, &self.w1, 1);
+        crate::nn::mlp::add_bias_rows_vec(&mut pre1, self.b1.data());
+        let mut h1 = Tensor::zeros(pre1.shape());
+        self.act.apply_slice(pre1.data(), h1.data_mut());
+        let mut pre2 = matmul::nt(&h1, &self.w2, 1);
+        crate::nn::mlp::add_bias_rows_vec(&mut pre2, self.b2.data());
+        let mut h2 = Tensor::zeros(pre2.shape());
+        self.act.apply_slice(pre2.data(), h2.data_mut());
+        let mut y = matmul::nt(&h2, &self.w3, 1);
+        crate::nn::mlp::add_bias_rows_vec(&mut y, self.b3.data());
+
+        let lv = loss::mlp_loss(loss, &y, targets);
+        let mut dy = Tensor::zeros(y.shape());
+        loss::mlp_loss_grad(loss, &y, targets, &mut dy);
+
+        let dw3 = matmul::tn(&dy, &h2, 1);
+        let db3 = crate::nn::mlp::col_sums(&dy);
+        let dh2 = matmul::nn(&dy, &self.w3, 1);
+        let mut dpre2 = Tensor::zeros(pre2.shape());
+        self.act.grad_slice(pre2.data(), dh2.data(), dpre2.data_mut());
+        let dw2 = matmul::tn(&dpre2, &h1, 1);
+        let db2 = crate::nn::mlp::col_sums(&dpre2);
+        let dh1 = matmul::nn(&dpre2, &self.w2, 1);
+        let mut dpre1 = Tensor::zeros(pre1.shape());
+        self.act.grad_slice(pre1.data(), dh1.data(), dpre1.data_mut());
+        let dw1 = matmul::tn(&dpre1, x, 1);
+        let db1 = crate::nn::mlp::col_sums(&dpre1);
+
+        self.w1.saxpy_neg(lr, &dw1);
+        for (v, g) in self.b1.data_mut().iter_mut().zip(&db1) {
+            *v -= lr * g;
+        }
+        self.w2.saxpy_neg(lr, &dw2);
+        for (v, g) in self.b2.data_mut().iter_mut().zip(&db2) {
+            *v -= lr * g;
+        }
+        self.w3.saxpy_neg(lr, &dw3);
+        for (v, g) in self.b3.data_mut().iter_mut().zip(&db3) {
+            *v -= lr * g;
+        }
+        lv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn figure3_pool() -> DeepPool {
+        // Fig. 3: 4-1-2-2 (red) and 4-2-3-2 (blue)
+        DeepPool::new(
+            vec![
+                DeepModel { h1: 1, h2: 2, act: Act::Tanh },
+                DeepModel { h1: 2, h2: 3, act: Act::Tanh },
+            ],
+            4,
+            2,
+        )
+        .unwrap()
+    }
+
+    fn data(n: usize) -> (Tensor, Tensor) {
+        let mut rng = Rng::new(77);
+        let mut x = Tensor::zeros(&[n, 4]);
+        rng.fill_normal(x.data_mut(), 0.0, 1.0);
+        let mut y = Tensor::zeros(&[n, 2]);
+        rng.fill_normal(y.data_mut(), 0.0, 1.0);
+        (x, y)
+    }
+
+    #[test]
+    fn figure3_shapes() {
+        let pool = figure3_pool();
+        assert_eq!(pool.h1_total, 3); // 1 + 2
+        assert_eq!(pool.h2_total, 5); // 2 + 3
+        let p = pool.init(1);
+        assert_eq!(p.w2.shape(), &[5, 3]);
+        // cross-model blocks of w2 are zero (independence structure)
+        // model 0: rows 0..2 connect cols 0..1 only
+        for r in 0..2 {
+            for c in 1..3 {
+                assert_eq!(p.w2.at2(r, c), 0.0);
+            }
+        }
+        // model 1: rows 2..5 connect cols 1..3 only
+        for r in 2..5 {
+            assert_eq!(p.w2.at2(r, 0), 0.0);
+        }
+    }
+
+    #[test]
+    fn fused_deep_step_matches_dense_reference() {
+        let pool = figure3_pool();
+        let mut p = pool.init(5);
+        let (x, y) = data(8);
+        // build dense refs BEFORE training
+        let mut refs: Vec<DeepRef> = (0..2)
+            .map(|m| {
+                let (w1, b1, w2, b2, w3, b3) = pool.extract(&p, m);
+                DeepRef { w1, b1, w2, b2, w3, b3, act: pool.models[m].act }
+            })
+            .collect();
+        let mut fused_losses = Vec::new();
+        for _ in 0..4 {
+            fused_losses = pool.step(&mut p, &x, &y, Loss::Mse, 0.05);
+        }
+        for (m, r) in refs.iter_mut().enumerate() {
+            let mut lv = 0.0;
+            for _ in 0..4 {
+                lv = r.step(&x, &y, Loss::Mse, 0.05);
+            }
+            let (w1, b1, w2, b2, w3, b3) = pool.extract(&p, m);
+            assert!(w1.max_abs_diff(&r.w1) < 1e-5, "model {m} w1");
+            assert!(b1.max_abs_diff(&r.b1) < 1e-5, "model {m} b1");
+            assert!(w2.max_abs_diff(&r.w2) < 1e-5, "model {m} w2");
+            assert!(b2.max_abs_diff(&r.b2) < 1e-5, "model {m} b2");
+            assert!(w3.max_abs_diff(&r.w3) < 1e-5, "model {m} w3");
+            assert!(b3.max_abs_diff(&r.b3) < 1e-5, "model {m} b3");
+            assert!((fused_losses[m] - lv).abs() < 1e-5, "model {m} loss");
+        }
+    }
+
+    #[test]
+    fn cross_model_blocks_stay_zero_through_training() {
+        let pool = figure3_pool();
+        let mut p = pool.init(9);
+        let (x, y) = data(8);
+        for _ in 0..6 {
+            pool.step(&mut p, &x, &y, Loss::Mse, 0.1);
+        }
+        for r in 0..2 {
+            for c in 1..3 {
+                assert_eq!(p.w2.at2(r, c), 0.0, "gradient leaked across models");
+            }
+        }
+        for r in 2..5 {
+            assert_eq!(p.w2.at2(r, 0), 0.0);
+        }
+    }
+
+    #[test]
+    fn deep_pool_learns() {
+        let pool = DeepPool::new(
+            vec![
+                DeepModel { h1: 6, h2: 4, act: Act::Tanh },
+                DeepModel { h1: 3, h2: 3, act: Act::Relu },
+            ],
+            4,
+            2,
+        )
+        .unwrap();
+        let mut p = pool.init(3);
+        let mut rng = Rng::new(31);
+        let mut x = Tensor::zeros(&[64, 4]);
+        rng.fill_normal(x.data_mut(), 0.0, 1.0);
+        let mut w = Tensor::zeros(&[4, 2]);
+        rng.fill_normal(w.data_mut(), 0.0, 1.0);
+        let y = matmul::nn(&x, &w, 1);
+        let first = pool.step(&mut p, &x, &y, Loss::Mse, 0.05);
+        let mut last = first.clone();
+        for _ in 0..400 {
+            last = pool.step(&mut p, &x, &y, Loss::Mse, 0.05);
+        }
+        for m in 0..2 {
+            assert!(last[m] < first[m] * 0.3, "model {m}: {} -> {}", first[m], last[m]);
+        }
+    }
+}

@@ -1,0 +1,256 @@
+//! Parameter containers + deterministic initialization.
+//!
+//! Init is defined *per original model* from a forked RNG stream keyed by
+//! the model's index, so every engine (native fused, native sequential,
+//! PJRT fused, PJRT sequential) starts from bit-identical parameters — the
+//! precondition for the 4-way equivalence tests.
+//!
+//! Scheme: PyTorch `nn.Linear` default — `U(-1/sqrt(fan_in), 1/sqrt(fan_in))`
+//! for weights and biases (the paper's PyTorch baseline used exactly this).
+
+use crate::nn::act::Act;
+use crate::pool::PoolLayout;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// One dense MLP's parameters (Fig. 1 shapes: `w1 [h,F]`, `w2 [O,h]`).
+#[derive(Clone, Debug)]
+pub struct ModelParams {
+    pub w1: Tensor,
+    pub b1: Tensor,
+    pub w2: Tensor,
+    pub b2: Tensor,
+}
+
+impl ModelParams {
+    pub fn hidden(&self) -> usize {
+        self.w1.shape()[0]
+    }
+
+    pub fn features(&self) -> usize {
+        self.w1.shape()[1]
+    }
+
+    pub fn out(&self) -> usize {
+        self.w2.shape()[0]
+    }
+
+    pub fn max_abs_diff(&self, other: &ModelParams) -> f32 {
+        self.w1
+            .max_abs_diff(&other.w1)
+            .max(self.b1.max_abs_diff(&other.b1))
+            .max(self.w2.max_abs_diff(&other.w2))
+            .max(self.b2.max_abs_diff(&other.b2))
+    }
+}
+
+/// The fused pool parameters in the padded layout (pads are zero).
+#[derive(Clone, Debug)]
+pub struct FusedParams {
+    pub w1: Tensor, // [H_pad, F]
+    pub b1: Tensor, // [H_pad]
+    pub w2: Tensor, // [O, H_pad]
+    pub b2: Tensor, // [M_pad, O]
+}
+
+impl FusedParams {
+    pub fn zeros(layout: &PoolLayout, features: usize, out: usize) -> FusedParams {
+        FusedParams {
+            w1: Tensor::zeros(&[layout.h_pad(), features]),
+            b1: Tensor::zeros(&[layout.h_pad()]),
+            w2: Tensor::zeros(&[out, layout.h_pad()]),
+            b2: Tensor::zeros(&[layout.m_pad(), out]),
+        }
+    }
+
+    pub fn all_finite(&self) -> bool {
+        self.w1.all_finite() && self.b1.all_finite() && self.w2.all_finite() && self.b2.all_finite()
+    }
+}
+
+/// Deterministic init of one model (independent of any pool/layout).
+pub fn init_model(seed: u64, model_idx: usize, h: usize, features: usize, out: usize) -> ModelParams {
+    let mut root = Rng::new(seed);
+    let mut rng = root.fork(model_idx as u64);
+    let k1 = 1.0 / (features as f32).sqrt();
+    let k2 = 1.0 / (h as f32).sqrt();
+    let mut w1 = Tensor::zeros(&[h, features]);
+    rng.fill_uniform(w1.data_mut(), -k1, k1);
+    let mut b1 = Tensor::zeros(&[h]);
+    rng.fill_uniform(b1.data_mut(), -k1, k1);
+    let mut w2 = Tensor::zeros(&[out, h]);
+    rng.fill_uniform(w2.data_mut(), -k2, k2);
+    let mut b2 = Tensor::zeros(&[out]);
+    rng.fill_uniform(b2.data_mut(), -k2, k2);
+    ModelParams { w1, b1, w2, b2 }
+}
+
+/// Fused init: every model initialized as `init_model(seed, m, ...)` and
+/// placed into the padded layout.
+pub fn init_pool(seed: u64, layout: &PoolLayout, features: usize, out: usize) -> FusedParams {
+    let mut fused = FusedParams::zeros(layout, features, out);
+    for m in 0..layout.n_models() {
+        let (h, _) = layout.spec().models()[m];
+        let dense = init_model(seed, m, h as usize, features, out);
+        insert_model(&mut fused, layout, m, &dense);
+    }
+    fused
+}
+
+/// Write one model's dense params into the fused layout.
+pub fn insert_model(fused: &mut FusedParams, layout: &PoolLayout, m: usize, dense: &ModelParams) {
+    let (start, end) = layout.span(m);
+    let h = end - start;
+    let features = fused.w1.shape()[1];
+    let out = fused.w2.shape()[0];
+    assert_eq!(dense.hidden(), h);
+    assert_eq!(dense.features(), features);
+    assert_eq!(dense.out(), out);
+    let h_pad = layout.h_pad();
+    for r in 0..h {
+        fused.w1.row_mut(start + r).copy_from_slice(dense.w1.row(r));
+        fused.b1.data_mut()[start + r] = dense.b1.data()[r];
+    }
+    for o in 0..out {
+        let src = &dense.w2.data()[o * h..(o + 1) * h];
+        fused.w2.data_mut()[o * h_pad + start..o * h_pad + end].copy_from_slice(src);
+    }
+    let s = layout.slot[m];
+    fused.b2.row_mut(s).copy_from_slice(dense.b2.data());
+}
+
+/// Extract one model's dense params back out of the fused layout.
+pub fn extract_model(fused: &FusedParams, layout: &PoolLayout, m: usize) -> ModelParams {
+    let (start, end) = layout.span(m);
+    let h = end - start;
+    let features = fused.w1.shape()[1];
+    let out = fused.w2.shape()[0];
+    let h_pad = layout.h_pad();
+    let mut w1 = Tensor::zeros(&[h, features]);
+    let mut b1 = Tensor::zeros(&[h]);
+    for r in 0..h {
+        w1.row_mut(r).copy_from_slice(fused.w1.row(start + r));
+        b1.data_mut()[r] = fused.b1.data()[start + r];
+    }
+    let mut w2 = Tensor::zeros(&[out, h]);
+    for o in 0..out {
+        w2.data_mut()[o * h..(o + 1) * h]
+            .copy_from_slice(&fused.w2.data()[o * h_pad + start..o * h_pad + end]);
+    }
+    let s = layout.slot[m];
+    let mut b2 = Tensor::zeros(&[out]);
+    b2.data_mut().copy_from_slice(fused.b2.row(s));
+    ModelParams { w1, b1, w2, b2 }
+}
+
+/// Assert pads are exactly zero (used by tests and failure injection).
+pub fn pads_are_zero(fused: &FusedParams, layout: &PoolLayout) -> bool {
+    let mut real = vec![false; layout.h_pad()];
+    for m in 0..layout.n_models() {
+        let (start, end) = layout.span(m);
+        real[start..end].iter_mut().for_each(|x| *x = true);
+    }
+    let features = fused.w1.shape()[1];
+    let out = fused.w2.shape()[0];
+    for row in 0..layout.h_pad() {
+        if real[row] {
+            continue;
+        }
+        if fused.b1.data()[row] != 0.0 {
+            return false;
+        }
+        for c in 0..features {
+            if fused.w1.at2(row, c) != 0.0 {
+                return false;
+            }
+        }
+        for o in 0..out {
+            if fused.w2.at2(o, row) != 0.0 {
+                return false;
+            }
+        }
+    }
+    let mask = layout.slot_mask();
+    for s in 0..layout.m_pad() {
+        if mask[s] == 0.0 && fused.b2.row(s).iter().any(|&x| x != 0.0) {
+            return false;
+        }
+    }
+    true
+}
+
+/// Helper used everywhere a pool needs one: layout for a spec + init.
+pub fn act_of(layout: &PoolLayout, m: usize) -> Act {
+    layout.spec().models()[m].1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pool::PoolSpec;
+
+    fn lay() -> PoolLayout {
+        let spec = PoolSpec::new(vec![
+            (2, Act::Sigmoid),
+            (3, Act::Relu),
+            (2, Act::Tanh),
+            (1, Act::Identity),
+        ])
+        .unwrap();
+        PoolLayout::build(&spec)
+    }
+
+    #[test]
+    fn init_is_deterministic_and_model_keyed() {
+        let a = init_model(42, 3, 5, 4, 2);
+        let b = init_model(42, 3, 5, 4, 2);
+        assert_eq!(a.w1.data(), b.w1.data());
+        let c = init_model(42, 4, 5, 4, 2);
+        assert_ne!(a.w1.data(), c.w1.data());
+        let d = init_model(43, 3, 5, 4, 2);
+        assert_ne!(a.w1.data(), d.w1.data());
+    }
+
+    #[test]
+    fn init_bounds() {
+        let p = init_model(1, 0, 8, 16, 2);
+        let k1 = 1.0 / 4.0;
+        assert!(p.w1.data().iter().all(|&x| x.abs() <= k1));
+        let k2 = 1.0 / (8f32).sqrt();
+        assert!(p.w2.data().iter().all(|&x| x.abs() <= k2));
+    }
+
+    #[test]
+    fn insert_extract_round_trip() {
+        let layout = lay();
+        let fused = init_pool(7, &layout, 4, 2);
+        for m in 0..layout.n_models() {
+            let dense = extract_model(&fused, &layout, m);
+            let want = init_model(7, m, layout.spec().models()[m].0 as usize, 4, 2);
+            assert_eq!(dense.max_abs_diff(&want), 0.0, "model {m}");
+        }
+    }
+
+    #[test]
+    fn pool_init_pads_zero() {
+        let layout = lay();
+        let fused = init_pool(3, &layout, 4, 2);
+        assert!(pads_are_zero(&fused, &layout));
+        assert!(fused.all_finite());
+    }
+
+    #[test]
+    fn init_independent_of_layout_knobs() {
+        // same models, different grouping -> same dense params
+        let spec = PoolSpec::new(vec![(2, Act::Relu), (3, Act::Relu), (4, Act::Relu)]).unwrap();
+        let l1 = PoolLayout::build_with(&spec, 16, 2);
+        let l2 = PoolLayout::build_with(&spec, 8, 1);
+        let f1 = init_pool(5, &l1, 4, 2);
+        let f2 = init_pool(5, &l2, 4, 2);
+        for m in 0..3 {
+            let a = extract_model(&f1, &l1, m);
+            let b = extract_model(&f2, &l2, m);
+            assert_eq!(a.max_abs_diff(&b), 0.0);
+        }
+    }
+}

@@ -1,0 +1,390 @@
+//! Losses (MSE, softmax cross-entropy) for both the fused pool layout and
+//! single dense MLPs, with analytic gradients.
+//!
+//! Pool semantics mirror `python/compile/model.py`: per-model mean loss;
+//! the fused training objective is the *sum* over models, which keeps
+//! gradients independent per model.
+
+use crate::pool::PoolLayout;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Loss {
+    Mse,
+    Ce,
+}
+
+impl Loss {
+    pub fn name(self) -> &'static str {
+        match self {
+            Loss::Mse => "mse",
+            Loss::Ce => "ce",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Loss> {
+        match name {
+            "mse" => Some(Loss::Mse),
+            "ce" => Some(Loss::Ce),
+            _ => None,
+        }
+    }
+}
+
+/// Row-wise softmax into `out` (numerically stable).
+pub fn softmax_row(logits: &[f32], out: &mut [f32]) {
+    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for (o, &l) in out.iter_mut().zip(logits) {
+        let e = (l - max).exp();
+        *o = e;
+        sum += e;
+    }
+    let inv = 1.0 / sum;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+fn log_softmax_row(logits: &[f32], out: &mut [f32]) {
+    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for &l in logits {
+        sum += (l - max).exp();
+    }
+    let lse = max + sum.ln();
+    for (o, &l) in out.iter_mut().zip(logits) {
+        *o = l - lse;
+    }
+}
+
+/// Per-model loss over fused outputs.
+///
+/// `logits [B, M_pad, O]`, `targets [B, O]` → `losses [M_pad]` (0 on dummy
+/// slots). For CE, `targets` must be one-hot (or a distribution).
+pub fn pool_loss(loss: Loss, logits: &Tensor, targets: &Tensor, layout: &PoolLayout) -> Vec<f32> {
+    let (b, m_pad, o) = (logits.shape()[0], logits.shape()[1], logits.shape()[2]);
+    assert_eq!(targets.shape(), &[b, o]);
+    assert_eq!(m_pad, layout.m_pad());
+    let mut out = vec![0.0f32; m_pad];
+    let ld = logits.data();
+    let td = targets.data();
+    let mut scratch = vec![0.0f32; o];
+    for &s in &layout.slot {
+        let mut acc = 0.0f32;
+        for bi in 0..b {
+            let row = &ld[(bi * m_pad + s) * o..(bi * m_pad + s + 1) * o];
+            let trow = &td[bi * o..(bi + 1) * o];
+            match loss {
+                Loss::Mse => {
+                    for j in 0..o {
+                        let d = row[j] - trow[j];
+                        acc += d * d;
+                    }
+                }
+                Loss::Ce => {
+                    log_softmax_row(row, &mut scratch);
+                    for j in 0..o {
+                        acc -= trow[j] * scratch[j];
+                    }
+                }
+            }
+        }
+        out[s] = match loss {
+            Loss::Mse => acc / (b * o) as f32,
+            Loss::Ce => acc / b as f32,
+        };
+    }
+    out
+}
+
+/// Gradient of the *summed* per-model losses w.r.t. fused logits.
+/// Only REAL slots are written; `dlogits` must arrive with dummy-slot
+/// entries already zero (scratch buffers are zero-initialized and dummy
+/// entries are never touched), preserving gradient independence without
+/// spending O(B x M_pad) on zeroing every step.
+pub fn pool_loss_grad(
+    loss: Loss,
+    logits: &Tensor,
+    targets: &Tensor,
+    layout: &PoolLayout,
+    dlogits: &mut Tensor,
+) {
+    let (b, m_pad, o) = (logits.shape()[0], logits.shape()[1], logits.shape()[2]);
+    assert_eq!(dlogits.shape(), logits.shape());
+    let ld = logits.data();
+    let td = targets.data();
+    let dd = dlogits.data_mut();
+    let mut sm = vec![0.0f32; o];
+    let mse_scale = 2.0 / (b * o) as f32;
+    let ce_scale = 1.0 / b as f32;
+    for bi in 0..b {
+        let trow = &td[bi * o..(bi + 1) * o];
+        for &s in &layout.slot {
+            let base = (bi * m_pad + s) * o;
+            let row = &ld[base..base + o];
+            match loss {
+                Loss::Mse => {
+                    for j in 0..o {
+                        dd[base + j] = mse_scale * (row[j] - trow[j]);
+                    }
+                }
+                Loss::Ce => {
+                    softmax_row(row, &mut sm);
+                    for j in 0..o {
+                        dd[base + j] = ce_scale * (sm[j] - trow[j]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Per-model selection metric: accuracy for CE, loss for MSE.
+pub fn pool_metric(loss: Loss, logits: &Tensor, targets: &Tensor, layout: &PoolLayout) -> Vec<f32> {
+    match loss {
+        Loss::Mse => pool_loss(loss, logits, targets, layout),
+        Loss::Ce => {
+            let (b, m_pad, o) = (logits.shape()[0], logits.shape()[1], logits.shape()[2]);
+            let ld = logits.data();
+            let td = targets.data();
+            let mut out = vec![0.0f32; m_pad];
+            for bi in 0..b {
+                let trow = &td[bi * o..(bi + 1) * o];
+                let true_cls = argmax(trow);
+                for &s in &layout.slot {
+                    let row = &ld[(bi * m_pad + s) * o..(bi * m_pad + s + 1) * o];
+                    if argmax(row) == true_cls {
+                        out[s] += 1.0;
+                    }
+                }
+            }
+            for &s in &layout.slot {
+                out[s] /= b as f32;
+            }
+            out
+        }
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Scalar loss for a single dense MLP (`logits [B, O]`).
+pub fn mlp_loss(loss: Loss, logits: &Tensor, targets: &Tensor) -> f32 {
+    let (b, o) = (logits.shape()[0], logits.shape()[1]);
+    assert_eq!(targets.shape(), &[b, o]);
+    let mut scratch = vec![0.0f32; o];
+    let mut acc = 0.0f32;
+    for bi in 0..b {
+        let row = logits.row(bi);
+        let trow = targets.row(bi);
+        match loss {
+            Loss::Mse => {
+                for j in 0..o {
+                    let d = row[j] - trow[j];
+                    acc += d * d;
+                }
+            }
+            Loss::Ce => {
+                log_softmax_row(row, &mut scratch);
+                for j in 0..o {
+                    acc -= trow[j] * scratch[j];
+                }
+            }
+        }
+    }
+    match loss {
+        Loss::Mse => acc / (b * o) as f32,
+        Loss::Ce => acc / b as f32,
+    }
+}
+
+/// dLoss/dlogits for a single dense MLP.
+pub fn mlp_loss_grad(loss: Loss, logits: &Tensor, targets: &Tensor, dlogits: &mut Tensor) {
+    let (b, o) = (logits.shape()[0], logits.shape()[1]);
+    assert_eq!(dlogits.shape(), logits.shape());
+    let mut sm = vec![0.0f32; o];
+    for bi in 0..b {
+        let row = logits.row(bi);
+        let trow = targets.row(bi);
+        match loss {
+            Loss::Mse => {
+                let scale = 2.0 / (b * o) as f32;
+                for j in 0..o {
+                    dlogits.set2(bi, j, scale * (row[j] - trow[j]));
+                }
+            }
+            Loss::Ce => {
+                softmax_row(row, &mut sm);
+                let scale = 1.0 / b as f32;
+                for j in 0..o {
+                    dlogits.set2(bi, j, scale * (sm[j] - trow[j]));
+                }
+            }
+        }
+    }
+}
+
+/// Accuracy of a single MLP's logits against one-hot targets.
+pub fn mlp_accuracy(logits: &Tensor, targets: &Tensor) -> f32 {
+    let b = logits.shape()[0];
+    let mut hits = 0usize;
+    for bi in 0..b {
+        if argmax(logits.row(bi)) == argmax(targets.row(bi)) {
+            hits += 1;
+        }
+    }
+    hits as f32 / b as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::act::Act;
+    use crate::pool::PoolSpec;
+    use crate::util::rng::Rng;
+
+    fn tiny_layout() -> PoolLayout {
+        let spec = PoolSpec::new(vec![(2, Act::Relu), (3, Act::Tanh)]).unwrap();
+        PoolLayout::build(&spec)
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut out = [0.0f32; 4];
+        softmax_row(&[1.0, 2.0, 3.0, 4.0], &mut out);
+        let s: f32 = out.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(out[3] > out[2] && out[2] > out[1]);
+    }
+
+    #[test]
+    fn softmax_stable_for_huge_logits() {
+        let mut out = [0.0f32; 2];
+        softmax_row(&[1000.0, 999.0], &mut out);
+        assert!(out.iter().all(|x| x.is_finite()));
+        assert!((out[0] + out[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mse_known_value() {
+        let logits = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let targets = Tensor::from_vec(vec![0.0, 2.0, 3.0, 0.0], &[2, 2]);
+        // sq errs: 1,0,0,16 -> mean over 4 = 4.25
+        assert!((mlp_loss(Loss::Mse, &logits, &targets) - 4.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ce_perfect_prediction_low_loss() {
+        let logits = Tensor::from_vec(vec![10.0, -10.0, -10.0, 10.0], &[2, 2]);
+        let targets = Tensor::from_vec(vec![1.0, 0.0, 0.0, 1.0], &[2, 2]);
+        assert!(mlp_loss(Loss::Ce, &logits, &targets) < 1e-3);
+        assert_eq!(mlp_accuracy(&logits, &targets), 1.0);
+    }
+
+    #[test]
+    fn grads_match_finite_differences() {
+        let mut rng = Rng::new(6);
+        let (b, o) = (4, 3);
+        for loss in [Loss::Mse, Loss::Ce] {
+            let mut logits = Tensor::zeros(&[b, o]);
+            rng.fill_normal(logits.data_mut(), 0.0, 1.0);
+            let mut targets = Tensor::zeros(&[b, o]);
+            if loss == Loss::Ce {
+                for bi in 0..b {
+                    targets.set2(bi, rng.below(o), 1.0);
+                }
+            } else {
+                rng.fill_normal(targets.data_mut(), 0.0, 1.0);
+            }
+            let mut grad = Tensor::zeros(&[b, o]);
+            mlp_loss_grad(loss, &logits, &targets, &mut grad);
+            let eps = 1e-3f32;
+            for idx in 0..b * o {
+                let mut lp = logits.clone();
+                lp.data_mut()[idx] += eps;
+                let mut lm = logits.clone();
+                lm.data_mut()[idx] -= eps;
+                let fd = (mlp_loss(loss, &lp, &targets) - mlp_loss(loss, &lm, &targets))
+                    / (2.0 * eps);
+                assert!(
+                    (fd - grad.data()[idx]).abs() < 2e-3,
+                    "{loss:?} idx={idx} fd={fd} an={}",
+                    grad.data()[idx]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pool_loss_matches_per_slot_mlp_loss() {
+        let lay = tiny_layout();
+        let mut rng = Rng::new(7);
+        let (b, o) = (5, 2);
+        let mut logits = Tensor::zeros(&[b, lay.m_pad(), o]);
+        rng.fill_normal(logits.data_mut(), 0.0, 1.0);
+        let mut targets = Tensor::zeros(&[b, o]);
+        rng.fill_normal(targets.data_mut(), 0.0, 1.0);
+        let lm = pool_loss(Loss::Mse, &logits, &targets, &lay);
+        for m in 0..lay.n_models() {
+            let s = lay.slot[m];
+            let mut single = Tensor::zeros(&[b, o]);
+            for bi in 0..b {
+                for j in 0..o {
+                    single.set2(bi, j, logits.at3(bi, s, j));
+                }
+            }
+            let want = mlp_loss(Loss::Mse, &single, &targets);
+            assert!((lm[s] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn pool_grad_zero_on_dummy_slots() {
+        let lay = tiny_layout();
+        let (b, o) = (3, 2);
+        let mut rng = Rng::new(8);
+        let mut logits = Tensor::zeros(&[b, lay.m_pad(), o]);
+        rng.fill_normal(logits.data_mut(), 0.0, 1.0);
+        let mut targets = Tensor::zeros(&[b, o]);
+        rng.fill_normal(targets.data_mut(), 0.0, 1.0);
+        let mut d = Tensor::zeros(&[b, lay.m_pad(), o]);
+        pool_loss_grad(Loss::Mse, &logits, &targets, &lay, &mut d);
+        let mask = lay.slot_mask();
+        for s in 0..lay.m_pad() {
+            if mask[s] == 0.0 {
+                for bi in 0..b {
+                    for j in 0..o {
+                        assert_eq!(d.at3(bi, s, j), 0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_metric_accuracy_bounds() {
+        let lay = tiny_layout();
+        let (b, o) = (8, 2);
+        let mut rng = Rng::new(9);
+        let mut logits = Tensor::zeros(&[b, lay.m_pad(), o]);
+        rng.fill_normal(logits.data_mut(), 0.0, 1.0);
+        let mut targets = Tensor::zeros(&[b, o]);
+        for bi in 0..b {
+            targets.set2(bi, rng.below(o), 1.0);
+        }
+        let acc = pool_metric(Loss::Ce, &logits, &targets, &lay);
+        for m in 0..lay.n_models() {
+            let a = acc[lay.slot[m]];
+            assert!((0.0..=1.0).contains(&a));
+        }
+    }
+}

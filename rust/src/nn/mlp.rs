@@ -1,0 +1,221 @@
+//! Native sequential baseline: one dense MLP trained the classic way
+//! (Fig. 1). This is the paper's "Sequential" strategy — small matmuls,
+//! one model at a time — and also the reference the fused engines are
+//! checked against.
+
+use crate::nn::act::Act;
+use crate::nn::init::ModelParams;
+use crate::nn::loss::{self, Loss};
+use crate::nn::optimizer::{Optimizer, OptimizerKind};
+use crate::tensor::{matmul, Tensor};
+
+/// A single MLP with its optimizer state and scratch buffers.
+pub struct MlpTrainer {
+    pub params: ModelParams,
+    pub act: Act,
+    pub loss: Loss,
+    opt: Optimizer,
+    threads: usize,
+}
+
+impl MlpTrainer {
+    pub fn new(params: ModelParams, act: Act, loss: Loss, opt: OptimizerKind, threads: usize) -> Self {
+        let n = params.w1.len() + params.b1.len() + params.w2.len() + params.b2.len();
+        MlpTrainer { params, act, loss, opt: Optimizer::new(opt, n), threads }
+    }
+
+    /// Forward to logits `[B, O]` (allocates — sequential path is the
+    /// baseline whose per-op overhead we *want* to exhibit).
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let h = self.hidden_pre(x);
+        let mut ha = Tensor::zeros(h.shape());
+        self.act.apply_slice(h.data(), ha.data_mut());
+        let mut logits = matmul::nt(&ha, &self.params.w2, self.threads);
+        add_bias_rows(&mut logits, &self.params.b2);
+        logits
+    }
+
+    fn hidden_pre(&self, x: &Tensor) -> Tensor {
+        let mut h = matmul::nt(x, &self.params.w1, self.threads);
+        add_bias_rows_vec(&mut h, self.params.b1.data());
+        h
+    }
+
+    /// One SGD/momentum/adam step on a batch; returns the batch loss.
+    pub fn step(&mut self, x: &Tensor, targets: &Tensor, lr: f32) -> f32 {
+        let b = x.rows();
+        let pre = self.hidden_pre(x); // [B, h]
+        let mut ha = Tensor::zeros(pre.shape());
+        self.act.apply_slice(pre.data(), ha.data_mut());
+        let mut logits = matmul::nt(&ha, &self.params.w2, self.threads);
+        add_bias_rows(&mut logits, &self.params.b2);
+
+        let lv = loss::mlp_loss(self.loss, &logits, targets);
+        let mut dlogits = Tensor::zeros(logits.shape());
+        loss::mlp_loss_grad(self.loss, &logits, targets, &mut dlogits);
+
+        // dW2 = dlogitsᵀ · Ha ; db2 = column sums of dlogits
+        let dw2 = matmul::tn(&dlogits, &ha, self.threads);
+        let db2 = col_sums(&dlogits);
+        // dHa = dlogits · W2 ; dPre = dHa ⊙ σ'(pre)
+        let dha = matmul::nn(&dlogits, &self.params.w2, self.threads);
+        let mut dpre = Tensor::zeros(pre.shape());
+        self.act.grad_slice(pre.data(), dha.data(), dpre.data_mut());
+        // dW1 = dPreᵀ · X ; db1 = column sums of dPre
+        let dw1 = matmul::tn(&dpre, x, self.threads);
+        let db1 = col_sums(&dpre);
+
+        debug_assert_eq!(dw1.shape(), self.params.w1.shape());
+        debug_assert_eq!(dw2.shape(), self.params.w2.shape());
+        let _ = b;
+
+        // flat optimizer step over (w1, b1, w2, b2)
+        let grads: Vec<f32> = dw1
+            .data()
+            .iter()
+            .chain(db1.iter())
+            .chain(dw2.data().iter())
+            .chain(db2.iter())
+            .copied()
+            .collect();
+        let mut flat: Vec<f32> = self
+            .params
+            .w1
+            .data()
+            .iter()
+            .chain(self.params.b1.data().iter())
+            .chain(self.params.w2.data().iter())
+            .chain(self.params.b2.data().iter())
+            .copied()
+            .collect();
+        self.opt.step(&mut flat, &grads, lr);
+        let (n1, n2, n3) = (self.params.w1.len(), self.params.b1.len(), self.params.w2.len());
+        self.params.w1.data_mut().copy_from_slice(&flat[..n1]);
+        self.params.b1.data_mut().copy_from_slice(&flat[n1..n1 + n2]);
+        self.params.w2.data_mut().copy_from_slice(&flat[n1 + n2..n1 + n2 + n3]);
+        self.params.b2.data_mut().copy_from_slice(&flat[n1 + n2 + n3..]);
+        lv
+    }
+
+    /// (loss, metric) on a dataset slice.
+    pub fn evaluate(&self, x: &Tensor, targets: &Tensor) -> (f32, f32) {
+        let logits = self.forward(x);
+        let lv = loss::mlp_loss(self.loss, &logits, targets);
+        let metric = match self.loss {
+            Loss::Ce => loss::mlp_accuracy(&logits, targets),
+            Loss::Mse => lv,
+        };
+        (lv, metric)
+    }
+}
+
+/// `m[r, :] += bias_rowvec` where bias is `[cols]`.
+pub fn add_bias_rows_vec(m: &mut Tensor, bias: &[f32]) {
+    let cols = m.cols();
+    assert_eq!(bias.len(), cols);
+    for r in 0..m.rows() {
+        let row = m.row_mut(r);
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// `m[r, :] += bias` where bias is a `[cols]` tensor.
+pub fn add_bias_rows(m: &mut Tensor, bias: &Tensor) {
+    add_bias_rows_vec(m, bias.data());
+}
+
+/// Column sums of a 2-D tensor.
+pub fn col_sums(m: &Tensor) -> Vec<f32> {
+    let (rows, cols) = (m.rows(), m.cols());
+    let mut out = vec![0.0f32; cols];
+    for r in 0..rows {
+        for (o, &v) in out.iter_mut().zip(m.row(r)) {
+            *o += v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::init::init_model;
+    use crate::util::rng::Rng;
+
+    fn toy_data(rng: &mut Rng, n: usize, f: usize, o: usize) -> (Tensor, Tensor) {
+        let mut x = Tensor::zeros(&[n, f]);
+        rng.fill_normal(x.data_mut(), 0.0, 1.0);
+        // linear teacher
+        let mut w = Tensor::zeros(&[f, o]);
+        rng.fill_normal(w.data_mut(), 0.0, 1.0);
+        let y = matmul::nn(&x, &w, 1);
+        (x, y)
+    }
+
+    #[test]
+    fn figure1_shapes() {
+        // 4-3-2 MLP from Fig. 1: w1 [3,4], w2 [2,3]
+        let p = init_model(0, 0, 3, 4, 2);
+        assert_eq!(p.w1.shape(), &[3, 4]);
+        assert_eq!(p.w2.shape(), &[2, 3]);
+        let t = MlpTrainer::new(p, Act::Tanh, Loss::Mse, OptimizerKind::Sgd, 1);
+        let x = Tensor::zeros(&[5, 4]);
+        let y = t.forward(&x);
+        assert_eq!(y.shape(), &[5, 2]);
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let mut rng = Rng::new(21);
+        let (x, y) = toy_data(&mut rng, 64, 4, 2);
+        let p = init_model(1, 0, 8, 4, 2);
+        let mut t = MlpTrainer::new(p, Act::Tanh, Loss::Mse, OptimizerKind::Sgd, 1);
+        let first = t.step(&x, &y, 0.05);
+        let mut last = first;
+        for _ in 0..300 {
+            last = t.step(&x, &y, 0.05);
+        }
+        assert!(last < first * 0.2, "first={first} last={last}");
+    }
+
+    #[test]
+    fn step_gradient_matches_finite_difference() {
+        let mut rng = Rng::new(22);
+        let (x, y) = toy_data(&mut rng, 8, 3, 2);
+        let p = init_model(2, 0, 4, 3, 2);
+        // analytic: loss drop along the gradient direction for small lr
+        let mut t = MlpTrainer::new(p.clone(), Act::Sigmoid, Loss::Mse, OptimizerKind::Sgd, 1);
+        let l0 = loss::mlp_loss(Loss::Mse, &t.forward(&x), &y);
+        t.step(&x, &y, 1e-3);
+        let l1 = loss::mlp_loss(Loss::Mse, &t.forward(&x), &y);
+        assert!(l1 < l0, "gradient step should descend: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn eval_metrics_ce() {
+        let mut rng = Rng::new(23);
+        let n = 32;
+        let mut x = Tensor::zeros(&[n, 4]);
+        rng.fill_normal(x.data_mut(), 0.0, 1.0);
+        let mut y = Tensor::zeros(&[n, 3]);
+        for i in 0..n {
+            y.set2(i, rng.below(3), 1.0);
+        }
+        let p = init_model(3, 0, 5, 4, 3);
+        let t = MlpTrainer::new(p, Act::Relu, Loss::Ce, OptimizerKind::Sgd, 1);
+        let (lv, acc) = t.evaluate(&x, &y);
+        assert!(lv > 0.0);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn col_sums_and_bias() {
+        let m = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(col_sums(&m), vec![4.0, 6.0]);
+        let mut m2 = m.clone();
+        add_bias_rows_vec(&mut m2, &[10.0, 20.0]);
+        assert_eq!(m2.data(), &[11.0, 22.0, 13.0, 24.0]);
+    }
+}

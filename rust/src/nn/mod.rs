@@ -1,0 +1,9 @@
+//! Neural-network substrate: activations, losses, init, optimizers, and
+//! the two native training engines (fused parallel + sequential baseline).
+pub mod act;
+pub mod deep;
+pub mod init;
+pub mod loss;
+pub mod mlp;
+pub mod optimizer;
+pub mod parallel;

@@ -1,0 +1,146 @@
+//! Optimizers for the native engines.
+//!
+//! The AOT artifacts bake plain SGD (matching the paper's timing setup);
+//! natively we also ship Momentum and Adam as extensions — the pool trains
+//! per-model-independently under any elementwise optimizer, which the
+//! equivalence tests exploit.
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OptimizerKind {
+    Sgd,
+    Momentum { beta: f32 },
+    Adam { beta1: f32, beta2: f32, eps: f32 },
+}
+
+impl OptimizerKind {
+    pub fn from_name(name: &str) -> Option<OptimizerKind> {
+        match name {
+            "sgd" => Some(OptimizerKind::Sgd),
+            "momentum" => Some(OptimizerKind::Momentum { beta: 0.9 }),
+            "adam" => Some(OptimizerKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimizerKind::Sgd => "sgd",
+            OptimizerKind::Momentum { .. } => "momentum",
+            OptimizerKind::Adam { .. } => "adam",
+        }
+    }
+}
+
+/// Optimizer state over a flat parameter vector of length `n`.
+#[derive(Clone, Debug)]
+pub struct Optimizer {
+    kind: OptimizerKind,
+    m: Vec<f32>, // momentum / first moment
+    v: Vec<f32>, // second moment (adam)
+    t: u64,
+}
+
+impl Optimizer {
+    pub fn new(kind: OptimizerKind, n: usize) -> Optimizer {
+        let (m, v) = match kind {
+            OptimizerKind::Sgd => (Vec::new(), Vec::new()),
+            OptimizerKind::Momentum { .. } => (vec![0.0; n], Vec::new()),
+            OptimizerKind::Adam { .. } => (vec![0.0; n], vec![0.0; n]),
+        };
+        Optimizer { kind, m, v, t: 0 }
+    }
+
+    pub fn kind(&self) -> OptimizerKind {
+        self.kind
+    }
+
+    /// In-place update of `params` given `grads` (same length as `n`).
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        self.t += 1;
+        match self.kind {
+            OptimizerKind::Sgd => {
+                for (p, &g) in params.iter_mut().zip(grads) {
+                    *p -= lr * g;
+                }
+            }
+            OptimizerKind::Momentum { beta } => {
+                assert_eq!(self.m.len(), params.len());
+                for ((p, &g), mv) in params.iter_mut().zip(grads).zip(self.m.iter_mut()) {
+                    *mv = beta * *mv + g;
+                    *p -= lr * *mv;
+                }
+            }
+            OptimizerKind::Adam { beta1, beta2, eps } => {
+                assert_eq!(self.m.len(), params.len());
+                let bc1 = 1.0 - beta1.powi(self.t as i32);
+                let bc2 = 1.0 - beta2.powi(self.t as i32);
+                for i in 0..params.len() {
+                    let g = grads[i];
+                    self.m[i] = beta1 * self.m[i] + (1.0 - beta1) * g;
+                    self.v[i] = beta2 * self.v[i] + (1.0 - beta2) * g * g;
+                    let mhat = self.m[i] / bc1;
+                    let vhat = self.v[i] / bc2;
+                    params[i] -= lr * mhat / (vhat.sqrt() + eps);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_is_plain_descent() {
+        let mut opt = Optimizer::new(OptimizerKind::Sgd, 2);
+        let mut p = [1.0f32, -1.0];
+        opt.step(&mut p, &[0.5, -0.5], 0.1);
+        assert_eq!(p, [0.95, -0.95]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = Optimizer::new(OptimizerKind::Momentum { beta: 0.9 }, 1);
+        let mut p = [0.0f32];
+        opt.step(&mut p, &[1.0], 0.1); // v=1, p=-0.1
+        opt.step(&mut p, &[1.0], 0.1); // v=1.9, p=-0.29
+        assert!((p[0] + 0.29).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adam_bias_correction_first_step() {
+        let kind = OptimizerKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+        let mut opt = Optimizer::new(kind, 1);
+        let mut p = [0.0f32];
+        opt.step(&mut p, &[0.3], 0.01);
+        // first adam step moves by ~lr regardless of grad scale
+        assert!((p[0] + 0.01).abs() < 1e-4, "{}", p[0]);
+    }
+
+    #[test]
+    fn all_optimizers_minimize_quadratic() {
+        for kind in [
+            OptimizerKind::Sgd,
+            OptimizerKind::Momentum { beta: 0.9 },
+            OptimizerKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+        ] {
+            let mut opt = Optimizer::new(kind, 1);
+            let mut p = [5.0f32];
+            for _ in 0..200 {
+                let g = [2.0 * p[0]]; // d/dp p^2
+                opt.step(&mut p, &g, 0.05);
+            }
+            assert!(p[0].abs() < 0.1, "{:?} ended at {}", kind, p[0]);
+        }
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for n in ["sgd", "momentum", "adam"] {
+            assert_eq!(OptimizerKind::from_name(n).unwrap().name(), n);
+        }
+        assert!(OptimizerKind::from_name("lbfgs").is_none());
+    }
+}

@@ -1,0 +1,648 @@
+//! Native fused ParallelMLP engine — the paper's contribution on CPU.
+//!
+//! One big `X·W1ᵀ` for all models, per-segment activations, then the M3
+//! output projection: a broadcast elementwise multiply fused with a
+//! *contiguous* segmented reduction (the layout guarantees each model's
+//! hidden rows are adjacent, so the scatter-add of the paper degenerates
+//! into cache-friendly span sums — exactly the locality argument of §2.2).
+//!
+//! Locality engineering (the reason fused beats sequential on CPU):
+//! * `W1` is stored transposed (`[F, H_pad]`), so the forward projection
+//!   and its weight gradient are long contiguous axpy streams over the
+//!   *fused* hidden axis — an amortization tiny per-model matrices cannot
+//!   express. This is the paper's "bigger matrices → better locality"
+//!   claim made concrete.
+//! * Scratch buffers are allocated once and reused across steps (the
+//!   paper's "keep everything resident" discipline, CPU edition).
+
+use crate::nn::act::Act;
+use crate::nn::init::FusedParams;
+use crate::nn::loss::{self, Loss};
+use crate::pool::{PoolLayout, PAD_SLOT};
+use crate::tensor::{matmul, Tensor};
+use crate::util::threadpool::{parallel_chunks, SendPtr};
+
+pub struct ParallelEngine {
+    pub layout: PoolLayout,
+    pub loss: Loss,
+    features: usize,
+    out: usize,
+    threads: usize,
+    batch_cap: usize,
+    // parameters (w1 kept transposed for streaming access)
+    w1t: Tensor, // [F, H_pad]
+    b1: Tensor,  // [H_pad]
+    w2: Tensor,  // [O, H_pad]
+    b2: Tensor,  // [M_pad, O]
+    // layout-derived, precomputed once
+    spans: Vec<(usize, usize, usize)>, // (slot, start, end) per model, sorted by start
+    segments: Vec<(Act, usize, usize)>,
+    /// optional per-model input-feature masks (paper §7 future work:
+    /// "creating a mask tensor to be applied to the inputs before the
+    /// first input-to-hidden projection"); stored in the w1t layout
+    w1t_mask: Option<Tensor>, // [F, H_pad] of 0/1
+    // scratch (capacity batch_cap)
+    pre: Tensor,     // [B, H_pad]
+    hact: Tensor,    // [B, H_pad]
+    logits: Tensor,  // [B, M_pad, O]
+    dlogits: Tensor, // [B, M_pad, O]
+    dhact: Tensor,   // [B, H_pad] (also reused as dpre)
+    dw1t: Tensor,    // [F, H_pad]
+    dw2: Tensor,     // [O, H_pad]
+}
+
+impl ParallelEngine {
+    pub fn new(
+        layout: PoolLayout,
+        params: FusedParams,
+        loss: Loss,
+        features: usize,
+        out: usize,
+        batch_cap: usize,
+        threads: usize,
+    ) -> Self {
+        let h_pad = layout.h_pad();
+        let m_pad = layout.m_pad();
+        assert_eq!(params.w1.shape(), &[h_pad, features]);
+        assert_eq!(params.w2.shape(), &[out, h_pad]);
+        // transpose W1 into the streaming layout
+        let mut w1t = Tensor::zeros(&[features, h_pad]);
+        for h in 0..h_pad {
+            for j in 0..features {
+                w1t.set2(j, h, params.w1.at2(h, j));
+            }
+        }
+        let mut spans: Vec<(usize, usize, usize)> = (0..layout.n_models())
+            .map(|m| {
+                let (s, e) = layout.span(m);
+                (layout.slot[m], s, e)
+            })
+            .collect();
+        spans.sort_by_key(|&(_, start, _)| start);
+        let segments = layout.real_act_segments();
+        ParallelEngine {
+            loss,
+            features,
+            out,
+            threads,
+            batch_cap,
+            w1t,
+            b1: params.b1,
+            w2: params.w2,
+            b2: params.b2,
+            spans,
+            segments,
+            pre: Tensor::zeros(&[batch_cap, h_pad]),
+            hact: Tensor::zeros(&[batch_cap, h_pad]),
+            logits: Tensor::zeros(&[batch_cap, m_pad, out]),
+            dlogits: Tensor::zeros(&[batch_cap, m_pad, out]),
+            dhact: Tensor::zeros(&[batch_cap, h_pad]),
+            dw1t: Tensor::zeros(&[features, h_pad]),
+            dw2: Tensor::zeros(&[out, h_pad]),
+            w1t_mask: None,
+            layout,
+        }
+    }
+
+    /// Paper §7: per-model input-feature masks. Masking inputs is
+    /// algebraically identical to masking the corresponding W1 columns
+    /// (`(x ⊙ m)·w = x·(w ⊙ m)`), so the fused engine zeroes the masked
+    /// `w1` entries and keeps their gradients zeroed — every model sees
+    /// only its own feature subset while training stays fused.
+    pub fn set_feature_masks(&mut self, masks: &[Vec<bool>]) {
+        assert_eq!(masks.len(), self.layout.n_models(), "one mask per model");
+        let h_pad = self.layout.h_pad();
+        let mut mask = Tensor::zeros(&[self.features, h_pad]);
+        for m in 0..self.layout.n_models() {
+            assert_eq!(masks[m].len(), self.features, "mask width = features");
+            let (start, end) = self.layout.span(m);
+            for (j, &keep) in masks[m].iter().enumerate() {
+                if keep {
+                    for hrow in start..end {
+                        mask.set2(j, hrow, 1.0);
+                    }
+                }
+            }
+        }
+        // apply immediately so masked weights start at zero
+        for (w, &mk) in self.w1t.data_mut().iter_mut().zip(mask.data()) {
+            *w *= mk;
+        }
+        self.w1t_mask = Some(mask);
+    }
+
+    pub fn batch_cap(&self) -> usize {
+        self.batch_cap
+    }
+
+    /// The parameters in the standard fused layout (w1 `[H_pad, F]`).
+    pub fn params_fused(&self) -> FusedParams {
+        let h_pad = self.layout.h_pad();
+        let mut w1 = Tensor::zeros(&[h_pad, self.features]);
+        for h in 0..h_pad {
+            for j in 0..self.features {
+                w1.set2(h, j, self.w1t.at2(j, h));
+            }
+        }
+        FusedParams { w1, b1: self.b1.clone(), w2: self.w2.clone(), b2: self.b2.clone() }
+    }
+
+    /// Fused forward for `x [B, F]` (B <= batch_cap); returns logits
+    /// `[B, M_pad, O]` (copy of the internal scratch).
+    pub fn forward(&mut self, x: &Tensor) -> Tensor {
+        let b = x.rows();
+        self.forward_internal(x);
+        let mut out = Tensor::zeros(&[b, self.layout.m_pad(), self.out]);
+        out.data_mut()
+            .copy_from_slice(&self.logits.data()[..b * self.layout.m_pad() * self.out]);
+        out
+    }
+
+    fn forward_internal(&mut self, x: &Tensor) {
+        let b = x.rows();
+        assert!(b <= self.batch_cap, "batch {b} exceeds capacity {}", self.batch_cap);
+        assert_eq!(x.cols(), self.features);
+        let h_pad = self.layout.h_pad();
+        let m_pad = self.layout.m_pad();
+        let o = self.out;
+        let f = self.features;
+
+        // (1) fused hidden projection, streaming form:
+        //     pre[b, :] = b1 + Σ_j x[b, j] · W1T[j, :]
+        // (2) per-segment activations (split–activate–concat)
+        let b1 = self.b1.data();
+        let w1t = self.w1t.data();
+        let xd = x.data();
+        let segments = &self.segments;
+        {
+            let pre = SendPtr(self.pre.data_mut().as_mut_ptr());
+            let hact = SendPtr(self.hact.data_mut().as_mut_ptr());
+            parallel_chunks(b, self.threads, 1, move |r0, r1| {
+                for bi in r0..r1 {
+                    let prow = unsafe {
+                        std::slice::from_raw_parts_mut(pre.ptr().add(bi * h_pad), h_pad)
+                    };
+                    prow.copy_from_slice(b1);
+                    for j in 0..f {
+                        let xv = xd[bi * f + j];
+                        if xv != 0.0 {
+                            matmul::axpy(xv, &w1t[j * h_pad..(j + 1) * h_pad], prow);
+                        }
+                    }
+                    let hrow = unsafe {
+                        std::slice::from_raw_parts_mut(hact.ptr().add(bi * h_pad), h_pad)
+                    };
+                    for &(act, start, len) in segments {
+                        act.apply_slice(&prow[start..start + len], &mut hrow[start..start + len]);
+                    }
+                }
+            });
+        }
+
+        // (3)+(4) M3: broadcast multiply + contiguous segmented reduction
+        let spans = &self.spans;
+        let w2 = self.w2.data();
+        let b2 = self.b2.data();
+        {
+            let hact = self.hact.data();
+            let logits = SendPtr(self.logits.data_mut().as_mut_ptr());
+            parallel_chunks(b, self.threads, 1, move |r0, r1| {
+                for bi in r0..r1 {
+                    let hrow = &hact[bi * h_pad..(bi + 1) * h_pad];
+                    let lrow = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            logits.ptr().add(bi * m_pad * o),
+                            m_pad * o,
+                        )
+                    };
+                    lrow.iter_mut().for_each(|v| *v = 0.0);
+                    for &(slot, start, end) in spans {
+                        for oi in 0..o {
+                            let wrow = &w2[oi * h_pad + start..oi * h_pad + end];
+                            lrow[slot * o + oi] =
+                                matmul::dot(&hrow[start..end], wrow) + b2[slot * o + oi];
+                        }
+                    }
+                }
+            });
+        }
+    }
+
+    /// One fused SGD step on a batch; returns per-model losses in the
+    /// ORIGINAL model order.
+    pub fn step(&mut self, x: &Tensor, targets: &Tensor, lr: f32) -> Vec<f32> {
+        let b = x.rows();
+        self.forward_internal(x);
+        let h_pad = self.layout.h_pad();
+        let m_pad = self.layout.m_pad();
+        let o = self.out;
+        let f = self.features;
+
+        // loss + dlogits (on the b-row prefix of the scratch)
+        let logits_view =
+            Tensor::from_vec(self.logits.data()[..b * m_pad * o].to_vec(), &[b, m_pad, o]);
+        let per_slot = loss::pool_loss(self.loss, &logits_view, targets, &self.layout);
+        let mut dl_view = Tensor::zeros(&[b, m_pad, o]);
+        loss::pool_loss_grad(self.loss, &logits_view, targets, &self.layout, &mut dl_view);
+        self.dlogits.data_mut()[..b * m_pad * o].copy_from_slice(dl_view.data());
+
+        // db2[s, :] = Σ_b dlogits[b, s, :]
+        let mut db2 = vec![0.0f32; m_pad * o];
+        {
+            let dl = self.dlogits.data();
+            for bi in 0..b {
+                for (acc, &g) in db2.iter_mut().zip(&dl[bi * m_pad * o..(bi + 1) * m_pad * o]) {
+                    *acc += g;
+                }
+            }
+        }
+
+        // dhact[b, h] = Σ_o dlogits[b, seg(h), o] * w2[o, h]  (gather form)
+        let seg = &self.layout.seg_slot;
+        let w2 = self.w2.data();
+        {
+            let dl = self.dlogits.data();
+            let dh = SendPtr(self.dhact.data_mut().as_mut_ptr());
+            parallel_chunks(b, self.threads, 1, move |r0, r1| {
+                for bi in r0..r1 {
+                    let dlrow = &dl[bi * m_pad * o..(bi + 1) * m_pad * o];
+                    let dhrow = unsafe {
+                        std::slice::from_raw_parts_mut(dh.ptr().add(bi * h_pad), h_pad)
+                    };
+                    for h in 0..h_pad {
+                        let s = seg[h];
+                        if s == PAD_SLOT {
+                            dhrow[h] = 0.0;
+                            continue;
+                        }
+                        let s = s as usize;
+                        let mut acc = 0.0f32;
+                        for oi in 0..o {
+                            acc += dlrow[s * o + oi] * w2[oi * h_pad + h];
+                        }
+                        dhrow[h] = acc;
+                    }
+                }
+            });
+        }
+
+        // dW2[o, h] = Σ_b hact[b, h] * dlogits[b, seg(h), o]
+        self.dw2.fill(0.0);
+        {
+            let hact = self.hact.data();
+            let dl = self.dlogits.data();
+            let dw2 = SendPtr(self.dw2.data_mut().as_mut_ptr());
+            parallel_chunks(h_pad, self.threads, 64, move |h0, h1| {
+                for bi in 0..b {
+                    let hrow = &hact[bi * h_pad..(bi + 1) * h_pad];
+                    let dlrow = &dl[bi * m_pad * o..(bi + 1) * m_pad * o];
+                    for h in h0..h1 {
+                        let s = seg[h];
+                        if s == PAD_SLOT {
+                            continue;
+                        }
+                        let s = s as usize;
+                        let hv = hrow[h];
+                        for oi in 0..o {
+                            // SAFETY: h-ranges are disjoint across threads
+                            unsafe {
+                                *dw2.ptr().add(oi * h_pad + h) += hv * dlrow[s * o + oi];
+                            }
+                        }
+                    }
+                }
+            });
+        }
+
+        // dpre = dhact ⊙ σ'(pre) per segment (reuse dhact in place)
+        let segments = &self.segments;
+        {
+            let pre = self.pre.data();
+            let dh = SendPtr(self.dhact.data_mut().as_mut_ptr());
+            parallel_chunks(b, self.threads, 1, move |r0, r1| {
+                for bi in r0..r1 {
+                    let prow = &pre[bi * h_pad..(bi + 1) * h_pad];
+                    let dhrow = unsafe {
+                        std::slice::from_raw_parts_mut(dh.ptr().add(bi * h_pad), h_pad)
+                    };
+                    for &(act, start, len) in segments {
+                        for i in start..start + len {
+                            dhrow[i] *= act.grad(prow[i]);
+                        }
+                    }
+                }
+            });
+        }
+
+        // dW1T[j, :] = Σ_b x[b, j] · dPre[b, :]   (long contiguous axpys)
+        // db1 = column sums of dPre
+        self.dw1t.fill(0.0);
+        let mut db1 = vec![0.0f32; h_pad];
+        {
+            let xd = x.data();
+            let dpre = self.dhact.data();
+            let dw1t = SendPtr(self.dw1t.data_mut().as_mut_ptr());
+            parallel_chunks(f, self.threads, 1, move |j0, j1| {
+                for bi in 0..b {
+                    let drow = &dpre[bi * h_pad..(bi + 1) * h_pad];
+                    for j in j0..j1 {
+                        let xv = xd[bi * f + j];
+                        if xv != 0.0 {
+                            let grow = unsafe {
+                                std::slice::from_raw_parts_mut(
+                                    dw1t.ptr().add(j * h_pad),
+                                    h_pad,
+                                )
+                            };
+                            matmul::axpy(xv, drow, grow);
+                        }
+                    }
+                }
+            });
+            for bi in 0..b {
+                for (acc, &g) in db1.iter_mut().zip(&dpre[bi * h_pad..(bi + 1) * h_pad]) {
+                    *acc += g;
+                }
+            }
+        }
+
+        // SGD update (masked W1 entries stay exactly zero)
+        self.w1t.saxpy_neg(lr, &self.dw1t);
+        if let Some(mask) = &self.w1t_mask {
+            for (w, &mk) in self.w1t.data_mut().iter_mut().zip(mask.data()) {
+                *w *= mk;
+            }
+        }
+        for (p, &g) in self.b1.data_mut().iter_mut().zip(&db1) {
+            *p -= lr * g;
+        }
+        self.w2.saxpy_neg(lr, &self.dw2);
+        for (p, &g) in self.b2.data_mut().iter_mut().zip(&db2) {
+            *p -= lr * g;
+        }
+
+        // per-model losses in original order
+        (0..self.layout.n_models()).map(|m| per_slot[self.layout.slot[m]]).collect()
+    }
+
+    /// (losses, metrics) per model in ORIGINAL order for a batch.
+    pub fn evaluate(&mut self, x: &Tensor, targets: &Tensor) -> (Vec<f32>, Vec<f32>) {
+        let logits = self.forward(x);
+        let lm = loss::pool_loss(self.loss, &logits, targets, &self.layout);
+        let mm = loss::pool_metric(self.loss, &logits, targets, &self.layout);
+        let to_orig = |v: &[f32]| -> Vec<f32> {
+            (0..self.layout.n_models()).map(|m| v[self.layout.slot[m]]).collect()
+        };
+        (to_orig(&lm), to_orig(&mm))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::act::Act;
+    use crate::nn::init::{extract_model, init_pool};
+    use crate::nn::mlp::MlpTrainer;
+    use crate::nn::optimizer::OptimizerKind;
+    use crate::pool::PoolSpec;
+    use crate::util::rng::Rng;
+
+    const F: usize = 4;
+    const O: usize = 2;
+    const B: usize = 8;
+
+    fn smoke_spec() -> PoolSpec {
+        PoolSpec::new(vec![
+            (2, Act::Sigmoid),
+            (3, Act::Relu),
+            (2, Act::Tanh),
+            (1, Act::Identity),
+            (4, Act::Gelu),
+            (2, Act::Mish),
+        ])
+        .unwrap()
+    }
+
+    fn data(rng: &mut Rng, n: usize) -> (Tensor, Tensor) {
+        let mut x = Tensor::zeros(&[n, F]);
+        rng.fill_normal(x.data_mut(), 0.0, 1.0);
+        let mut y = Tensor::zeros(&[n, O]);
+        rng.fill_normal(y.data_mut(), 0.0, 1.0);
+        (x, y)
+    }
+
+    #[test]
+    fn params_round_trip_through_transpose() {
+        let spec = smoke_spec();
+        let layout = PoolLayout::build(&spec);
+        let fused0 = init_pool(3, &layout, F, O);
+        let engine = ParallelEngine::new(layout, fused0.clone(), Loss::Mse, F, O, B, 1);
+        let back = engine.params_fused();
+        assert_eq!(back.w1.max_abs_diff(&fused0.w1), 0.0);
+        assert_eq!(back.b2.max_abs_diff(&fused0.b2), 0.0);
+    }
+
+    #[test]
+    fn fused_step_equals_per_model_sequential_steps() {
+        // THE paper claim: fused training == independent training.
+        let spec = smoke_spec();
+        let layout = PoolLayout::build(&spec);
+        let fused0 = init_pool(11, &layout, F, O);
+        let mut engine =
+            ParallelEngine::new(layout.clone(), fused0.clone(), Loss::Mse, F, O, B, 2);
+        let mut rng = Rng::new(50);
+        let (x, y) = data(&mut rng, B);
+
+        let losses = engine.step(&x, &y, 0.05);
+        let trained = engine.params_fused();
+
+        for m in 0..spec.n_models() {
+            let dense0 = extract_model(&fused0, &layout, m);
+            let mut seq = MlpTrainer::new(
+                dense0,
+                spec.models()[m].1,
+                Loss::Mse,
+                OptimizerKind::Sgd,
+                1,
+            );
+            let lv = seq.step(&x, &y, 0.05);
+            let fused_m = extract_model(&trained, &layout, m);
+            let diff = fused_m.max_abs_diff(&seq.params);
+            assert!(diff < 2e-5, "model {m}: params diff {diff}");
+            assert!((losses[m] - lv).abs() < 1e-5, "model {m}: loss {} vs {lv}", losses[m]);
+        }
+    }
+
+    #[test]
+    fn multi_step_equivalence_ce() {
+        let spec = smoke_spec();
+        let layout = PoolLayout::build(&spec);
+        let fused0 = init_pool(13, &layout, F, O);
+        let mut engine = ParallelEngine::new(layout.clone(), fused0.clone(), Loss::Ce, F, O, B, 3);
+        let mut rng = Rng::new(51);
+        let mut x = Tensor::zeros(&[B, F]);
+        rng.fill_normal(x.data_mut(), 0.0, 1.0);
+        let mut y = Tensor::zeros(&[B, O]);
+        for bi in 0..B {
+            y.set2(bi, rng.below(O), 1.0);
+        }
+        for _ in 0..5 {
+            engine.step(&x, &y, 0.1);
+        }
+        let trained = engine.params_fused();
+        for m in 0..spec.n_models() {
+            let mut seq = MlpTrainer::new(
+                extract_model(&fused0, &layout, m),
+                spec.models()[m].1,
+                Loss::Ce,
+                OptimizerKind::Sgd,
+                1,
+            );
+            for _ in 0..5 {
+                seq.step(&x, &y, 0.1);
+            }
+            let fused_m = extract_model(&trained, &layout, m);
+            let diff = fused_m.max_abs_diff(&seq.params);
+            assert!(diff < 1e-4, "model {m}: diff {diff}");
+        }
+    }
+
+    #[test]
+    fn pads_stay_zero_through_training() {
+        let spec = smoke_spec();
+        let layout = PoolLayout::build(&spec);
+        let fused0 = init_pool(17, &layout, F, O);
+        let mut engine = ParallelEngine::new(layout.clone(), fused0, Loss::Mse, F, O, B, 2);
+        let mut rng = Rng::new(52);
+        let (x, y) = data(&mut rng, B);
+        for _ in 0..4 {
+            engine.step(&x, &y, 0.1);
+        }
+        assert!(crate::nn::init::pads_are_zero(&engine.params_fused(), &layout));
+    }
+
+    #[test]
+    fn partial_batches_supported() {
+        let spec = smoke_spec();
+        let layout = PoolLayout::build(&spec);
+        let fused0 = init_pool(19, &layout, F, O);
+        let mut engine = ParallelEngine::new(layout, fused0, Loss::Mse, F, O, B, 2);
+        let mut rng = Rng::new(53);
+        let (x, y) = data(&mut rng, 3); // 3 < capacity 8
+        let losses = engine.step(&x, &y, 0.05);
+        assert_eq!(losses.len(), 6);
+        assert!(losses.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let spec = smoke_spec();
+        let layout = PoolLayout::build(&spec);
+        let fused0 = init_pool(23, &layout, F, O);
+        let mut rng = Rng::new(54);
+        let (x, y) = data(&mut rng, B);
+        let run = |threads: usize| {
+            let mut e =
+                ParallelEngine::new(layout.clone(), fused0.clone(), Loss::Mse, F, O, B, threads);
+            e.step(&x, &y, 0.05);
+            e.params_fused().w1
+        };
+        let a = run(1);
+        let b_ = run(4);
+        assert!(a.max_abs_diff(&b_) < 1e-6);
+    }
+
+    #[test]
+    fn feature_masks_zero_masked_weights_and_stay_zero() {
+        // §7: same arch repeated with different feature subsets
+        let spec = PoolSpec::new(vec![(3, Act::Relu); 3]).unwrap();
+        let layout = PoolLayout::build(&spec);
+        let fused0 = init_pool(41, &layout, F, O);
+        let mut engine = ParallelEngine::new(layout.clone(), fused0, Loss::Mse, F, O, B, 1);
+        let masks = vec![
+            vec![true, true, true, true],    // all features
+            vec![true, true, false, false],  // first half
+            vec![false, false, true, true],  // second half
+        ];
+        engine.set_feature_masks(&masks);
+        let mut rng = Rng::new(60);
+        let (x, y) = data(&mut rng, B);
+        for _ in 0..5 {
+            engine.step(&x, &y, 0.1);
+        }
+        let trained = engine.params_fused();
+        for m in 0..3 {
+            let dense = extract_model(&trained, &layout, m);
+            for (j, &keep) in masks[m].iter().enumerate() {
+                for r in 0..3 {
+                    let w = dense.w1.at2(r, j);
+                    if keep {
+                        // unmasked weights train away from zero (generic data)
+                        continue;
+                    }
+                    assert_eq!(w, 0.0, "model {m} masked feature {j} leaked: {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn masked_model_equals_training_on_masked_data() {
+        // (x ⊙ m)·w == x·(w ⊙ m): fused-with-mask == sequential on masked X
+        let spec = PoolSpec::new(vec![(2, Act::Tanh)]).unwrap();
+        let layout = PoolLayout::build(&spec);
+        let fused0 = init_pool(42, &layout, F, O);
+        let mut engine =
+            ParallelEngine::new(layout.clone(), fused0.clone(), Loss::Mse, F, O, B, 1);
+        let mask = vec![vec![true, false, true, false]];
+        engine.set_feature_masks(&mask);
+        let mut rng = Rng::new(61);
+        let (x, y) = data(&mut rng, B);
+        for _ in 0..4 {
+            engine.step(&x, &y, 0.05);
+        }
+        // sequential twin: zero the masked features in the data AND the
+        // matching init weights
+        let mut dense0 = extract_model(&fused0, &layout, 0);
+        for r in 0..2 {
+            dense0.w1.set2(r, 1, 0.0);
+            dense0.w1.set2(r, 3, 0.0);
+        }
+        let mut xm = x.clone();
+        for bi in 0..B {
+            xm.set2(bi, 1, 0.0);
+            xm.set2(bi, 3, 0.0);
+        }
+        let mut seq = MlpTrainer::new(dense0, Act::Tanh, Loss::Mse, OptimizerKind::Sgd, 1);
+        for _ in 0..4 {
+            seq.step(&xm, &y, 0.05);
+        }
+        let fused_m = extract_model(&engine.params_fused(), &layout, 0);
+        // masked columns: fused keeps 0, sequential drifts only via masked
+        // data (grad through zeroed x is 0 too) -> should agree everywhere
+        let diff = fused_m.max_abs_diff(&seq.params);
+        assert!(diff < 1e-5, "masked fused vs masked-data sequential: {diff}");
+    }
+
+    #[test]
+    fn evaluate_returns_original_order() {
+        let spec = smoke_spec();
+        let layout = PoolLayout::build(&spec);
+        let fused0 = init_pool(29, &layout, F, O);
+        let mut engine = ParallelEngine::new(layout.clone(), fused0.clone(), Loss::Mse, F, O, B, 2);
+        let mut rng = Rng::new(55);
+        let (x, y) = data(&mut rng, B);
+        let (lm, _) = engine.evaluate(&x, &y);
+        assert_eq!(lm.len(), spec.n_models());
+        // cross-check model 1 against its dense twin
+        let seq = MlpTrainer::new(
+            extract_model(&fused0, &layout, 1),
+            spec.models()[1].1,
+            Loss::Mse,
+            OptimizerKind::Sgd,
+            1,
+        );
+        let (lv, _) = seq.evaluate(&x, &y);
+        assert!((lm[1] - lv).abs() < 1e-5);
+    }
+}

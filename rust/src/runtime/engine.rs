@@ -1,0 +1,389 @@
+//! PJRT execution engines.
+//!
+//! `PjrtParallelEngine` runs the fused train step artifact — ONE
+//! `execute` per batch for the whole pool (the paper's Parallel strategy
+//! on an accelerator-style device). `PjrtSequentialEngine` runs one small
+//! artifact per model per batch — thousands of dispatches (the paper's
+//! Sequential strategy, whose dispatch overhead is the point).
+//!
+//! Parameters stay as `Literal`s between steps; on the CPU PJRT device
+//! "device memory" is host memory, so the tuple-decompose round-trip each
+//! step is a memcpy — the analog of the paper keeping tensors GPU-resident.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{ArtifactEntry, Manifest};
+use crate::nn::init::{extract_model, FusedParams, ModelParams};
+use crate::nn::loss::Loss;
+use crate::pool::PoolLayout;
+use crate::tensor::Tensor;
+
+/// Client + artifact registry + compiled-executable cache.
+pub struct PjrtRuntime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+}
+
+impl PjrtRuntime {
+    /// Load the manifest from `dir`, validate it, connect the CPU client.
+    pub fn new(dir: &Path) -> anyhow::Result<PjrtRuntime> {
+        let manifest = Manifest::load(dir)?;
+        manifest.validate()?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        Ok(PjrtRuntime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn executable(&self, name: &str) -> anyhow::Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {name:?}"))?;
+        let path = self.manifest.dir.join(&entry.file);
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let exe = self
+            .client
+            .compile(&XlaComputation::from_proto(&proto))
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+/// f32 slice -> Literal with the given dims.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> anyhow::Result<Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal dims {:?} vs data {}", dims, data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+        .map_err(|e| anyhow::anyhow!("literal: {e}"))
+}
+
+pub fn literal_of(t: &Tensor) -> anyhow::Result<Literal> {
+    literal_f32(t.data(), t.shape())
+}
+
+pub fn tensor_of(lit: &Literal, dims: &[usize]) -> anyhow::Result<Tensor> {
+    let v = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal->vec: {e}"))?;
+    Ok(Tensor::from_vec(v, dims))
+}
+
+fn run(
+    exe: &PjRtLoadedExecutable,
+    args: &[&Literal],
+) -> anyhow::Result<Vec<Literal>> {
+    let outs = exe.execute(args).map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+    let lit = outs[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("fetch: {e}"))?;
+    // multi-output programs come back as one tuple buffer; single-output
+    // programs (predict) come back as the bare array.
+    let shape = lit.shape().map_err(|e| anyhow::anyhow!("shape: {e}"))?;
+    match shape {
+        xla::Shape::Tuple(_) => lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e}")),
+        _ => Ok(vec![lit]),
+    }
+}
+
+/// The fused pool on PJRT: one artifact execution trains every model.
+pub struct PjrtParallelEngine {
+    pub layout: PoolLayout,
+    pub loss: Loss,
+    pub features: usize,
+    pub batch: usize,
+    pub out: usize,
+    exe_train: Rc<PjRtLoadedExecutable>,
+    exe_eval: Option<Rc<PjRtLoadedExecutable>>,
+    exe_predict: Option<Rc<PjRtLoadedExecutable>>,
+    // device-resident state
+    params: Vec<Literal>, // w1, b1, w2, b2
+    onehot: Literal,
+}
+
+impl PjrtParallelEngine {
+    /// Build from a pool name; locates train/eval/predict artifacts with
+    /// matching (features, batch, loss).
+    pub fn new(
+        rt: &PjrtRuntime,
+        pool: &str,
+        features: usize,
+        batch: usize,
+        loss: Loss,
+        init: &FusedParams,
+    ) -> anyhow::Result<PjrtParallelEngine> {
+        let train = rt
+            .manifest
+            .find_parallel("parallel_train", pool, features, batch, loss.name())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no parallel_train artifact for pool={pool} F={features} B={batch} loss={}",
+                    loss.name()
+                )
+            })?
+            .clone();
+        let layout = rt.manifest.layout(pool)?;
+        let out = train.out;
+        Self::from_artifact(rt, &train, layout, loss, init, out)
+    }
+
+    fn from_artifact(
+        rt: &PjrtRuntime,
+        train: &ArtifactEntry,
+        layout: PoolLayout,
+        loss: Loss,
+        init: &FusedParams,
+        out: usize,
+    ) -> anyhow::Result<PjrtParallelEngine> {
+        let exe_train = rt.executable(&train.name)?;
+        let pool = train.pool.clone().unwrap_or_default();
+        let find = |kind: &str| {
+            rt.manifest
+                .find_parallel(kind, &pool, train.features, train.batch, train.loss.as_str())
+                .or_else(|| {
+                    // eval/predict may be lowered under a different loss tag
+                    rt.manifest
+                        .artifacts
+                        .values()
+                        .find(|a| {
+                            a.kind == kind
+                                && a.pool.as_deref() == Some(pool.as_str())
+                                && a.features == train.features
+                                && a.batch == train.batch
+                        })
+                })
+                .map(|a| a.name.clone())
+        };
+        let exe_eval = find("parallel_eval").map(|n| rt.executable(&n)).transpose()?;
+        let exe_predict = find("parallel_predict").map(|n| rt.executable(&n)).transpose()?;
+        let params = vec![
+            literal_of(&init.w1)?,
+            literal_of(&init.b1)?,
+            literal_of(&init.w2)?,
+            literal_of(&init.b2)?,
+        ];
+        let oh = layout.onehot();
+        let onehot = literal_f32(
+            &oh,
+            &[layout.n_groups, layout.group_width, layout.group_models],
+        )?;
+        Ok(PjrtParallelEngine {
+            layout,
+            loss,
+            features: train.features,
+            batch: train.batch,
+            out,
+            exe_train,
+            exe_eval,
+            exe_predict,
+            params,
+            onehot,
+        })
+    }
+
+    /// One fused SGD step; returns per-model losses in ORIGINAL order.
+    /// `x` must have exactly the artifact's baked batch size.
+    pub fn step(&mut self, x: &Tensor, targets: &Tensor, lr: f32) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(
+            x.rows() == self.batch,
+            "artifact baked for batch {}, got {}",
+            self.batch,
+            x.rows()
+        );
+        let xl = literal_of(x)?;
+        let yl = literal_of(targets)?;
+        self.step_literals(&xl, &yl, lr)
+    }
+
+    /// Step with pre-built batch literals (the batch-cache hot path).
+    pub fn step_literals(&mut self, x: &Literal, y: &Literal, lr: f32) -> anyhow::Result<Vec<f32>> {
+        let lrl = literal_f32(&[lr], &[])?;
+        let args: Vec<&Literal> = vec![
+            &self.params[0],
+            &self.params[1],
+            &self.params[2],
+            &self.params[3],
+            &self.onehot,
+            x,
+            y,
+            &lrl,
+        ];
+        let mut outs = run(&self.exe_train, &args)?;
+        anyhow::ensure!(outs.len() == 5, "train step returned {} leaves", outs.len());
+        let lm = outs.pop().expect("5 leaves");
+        // remaining four are the updated params, in order
+        self.params = outs;
+        let per_slot = lm.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok((0..self.layout.n_models()).map(|m| per_slot[self.layout.slot[m]]).collect())
+    }
+
+    /// (losses, metrics) per model in ORIGINAL order for one batch.
+    pub fn evaluate(&self, x: &Tensor, targets: &Tensor) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let exe = self
+            .exe_eval
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no parallel_eval artifact for this pool"))?;
+        let xl = literal_of(x)?;
+        let yl = literal_of(targets)?;
+        let args: Vec<&Literal> = vec![
+            &self.params[0],
+            &self.params[1],
+            &self.params[2],
+            &self.params[3],
+            &self.onehot,
+            &xl,
+            &yl,
+        ];
+        let outs = run(exe, &args)?;
+        anyhow::ensure!(outs.len() == 2, "eval returned {} leaves", outs.len());
+        let lm = outs[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mm = outs[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let map = |v: &[f32]| -> Vec<f32> {
+            (0..self.layout.n_models()).map(|m| v[self.layout.slot[m]]).collect()
+        };
+        Ok((map(&lm), map(&mm)))
+    }
+
+    /// Raw per-slot outputs `[B, M_pad, O]` for one batch.
+    pub fn predict(&self, x: &Tensor) -> anyhow::Result<Tensor> {
+        let exe = self
+            .exe_predict
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no parallel_predict artifact for this pool"))?;
+        let xl = literal_of(x)?;
+        let args: Vec<&Literal> = vec![
+            &self.params[0],
+            &self.params[1],
+            &self.params[2],
+            &self.params[3],
+            &self.onehot,
+            &xl,
+        ];
+        let outs = run(exe, &args)?;
+        tensor_of(&outs[0], &[self.batch, self.layout.m_pad(), self.out])
+    }
+
+    /// Copy the device-resident params back into a `FusedParams`.
+    pub fn params_fused(&self) -> anyhow::Result<FusedParams> {
+        let h_pad = self.layout.h_pad();
+        Ok(FusedParams {
+            w1: tensor_of(&self.params[0], &[h_pad, self.features])?,
+            b1: tensor_of(&self.params[1], &[h_pad])?,
+            w2: tensor_of(&self.params[2], &[self.out, h_pad])?,
+            b2: tensor_of(&self.params[3], &[self.layout.m_pad(), self.out])?,
+        })
+    }
+
+    /// Dense params of one model (original index).
+    pub fn extract(&self, m: usize) -> anyhow::Result<ModelParams> {
+        Ok(extract_model(&self.params_fused()?, &self.layout, m))
+    }
+}
+
+/// The sequential baseline on PJRT: one tiny artifact execution per model
+/// per batch. Dispatch overhead is the *subject* of Table 2.
+pub struct PjrtSequentialEngine {
+    pub features: usize,
+    pub batch: usize,
+    pub out: usize,
+    pub loss: Loss,
+    /// (exe, params) per model, in ORIGINAL pool order.
+    models: Vec<(Rc<PjRtLoadedExecutable>, Vec<Literal>)>,
+}
+
+impl PjrtSequentialEngine {
+    /// Build for a pool spec: every model needs a seq_train artifact with
+    /// matching (h, F, B, loss); `exact_act` also matches the activation
+    /// (numerics mode) vs. any-act (timing mode, relu-baked artifacts).
+    pub fn new(
+        rt: &PjrtRuntime,
+        layout: &PoolLayout,
+        features: usize,
+        batch: usize,
+        out: usize,
+        loss: Loss,
+        init: &FusedParams,
+        exact_act: bool,
+    ) -> anyhow::Result<PjrtSequentialEngine> {
+        let mut models = Vec::with_capacity(layout.n_models());
+        for m in 0..layout.n_models() {
+            let (h, act) = layout.spec().models()[m];
+            let want_act = if exact_act { Some(act.id()) } else { None };
+            let entry = rt
+                .manifest
+                .find_sequential(h as usize, want_act, features, batch, loss.name())
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "no seq_train artifact for h={h} act={want_act:?} F={features} B={batch}"
+                    )
+                })?
+                .clone();
+            let exe = rt.executable(&entry.name)?;
+            let dense = extract_model(init, layout, m);
+            let params = vec![
+                literal_of(&dense.w1)?,
+                literal_of(&dense.b1)?,
+                literal_of(&dense.w2)?,
+                literal_of(&dense.b2)?,
+            ];
+            models.push((exe, params));
+        }
+        Ok(PjrtSequentialEngine { features, batch, out, loss, models })
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.models.len()
+    }
+
+    /// One SGD step for model `m`; returns its batch loss.
+    pub fn step_model(&mut self, m: usize, x: &Literal, y: &Literal, lr: f32) -> anyhow::Result<f32> {
+        let lrl = literal_f32(&[lr], &[])?;
+        let (exe, params) = &mut self.models[m];
+        let args: Vec<&Literal> =
+            vec![&params[0], &params[1], &params[2], &params[3], x, y, &lrl];
+        let mut outs = run(exe, &args)?;
+        anyhow::ensure!(outs.len() == 5, "seq step returned {} leaves", outs.len());
+        let lv = outs.pop().expect("5 leaves");
+        *params = outs;
+        lv.get_first_element::<f32>().map_err(|e| anyhow::anyhow!("{e}"))
+    }
+
+    /// One step of EVERY model on the same batch (the sequential sweep's
+    /// inner loop); returns per-model losses.
+    pub fn step_all(&mut self, x: &Tensor, y: &Tensor, lr: f32) -> anyhow::Result<Vec<f32>> {
+        let xl = literal_of(x)?;
+        let yl = literal_of(y)?;
+        (0..self.n_models()).map(|m| self.step_model(m, &xl, &yl, lr)).collect()
+    }
+
+    /// Dense params of model `m` (shapes from the artifact registry).
+    pub fn extract(&self, m: usize, hidden: usize) -> anyhow::Result<ModelParams> {
+        let (_, params) = &self.models[m];
+        Ok(ModelParams {
+            w1: tensor_of(&params[0], &[hidden, self.features])?,
+            b1: tensor_of(&params[1], &[hidden])?,
+            w2: tensor_of(&params[2], &[self.out, hidden])?,
+            b2: tensor_of(&params[3], &[self.out])?,
+        })
+    }
+}

@@ -1,0 +1,240 @@
+//! `artifacts/manifest.json` — parsing + cross-language validation.
+//!
+//! The manifest is written by `python/compile/aot.py`. Validation rebuilds
+//! every pool's layout with the Rust compiler and compares the FNV-1a
+//! checksum: a mismatch means the two layout compilers diverged and the
+//! artifacts must not be trusted.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::nn::act::Act;
+use crate::pool::{PoolLayout, PoolSpec};
+use crate::util::json::{self};
+
+#[derive(Clone, Debug)]
+pub struct PoolEntry {
+    pub spec: PoolSpec,
+    pub group_width: usize,
+    pub group_models: usize,
+    pub n_groups: usize,
+    pub h_pad: usize,
+    pub m_pad: usize,
+    pub checksum: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: String,
+    pub file: String,
+    pub features: usize,
+    pub batch: usize,
+    pub out: usize,
+    pub loss: String,
+    pub pool: Option<String>,
+    pub hidden: Option<usize>,
+    pub act: Option<u8>,
+    pub inputs: Vec<Vec<usize>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub pools: BTreeMap<String, PoolEntry>,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display()))?;
+        let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        anyhow::ensure!(
+            doc.req("version")?.as_usize() == Some(1),
+            "unsupported manifest version"
+        );
+
+        let mut pools = BTreeMap::new();
+        for (name, p) in doc.req("pools")?.as_obj().ok_or_else(|| anyhow::anyhow!("pools"))? {
+            let models = p
+                .req("models")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("pool models"))?
+                .iter()
+                .map(|m| -> anyhow::Result<(u32, Act)> {
+                    let pair = m.as_arr().ok_or_else(|| anyhow::anyhow!("model pair"))?;
+                    let h = pair[0].as_usize().ok_or_else(|| anyhow::anyhow!("h"))? as u32;
+                    let a = pair[1].as_usize().ok_or_else(|| anyhow::anyhow!("act"))? as u8;
+                    Ok((h, Act::from_id(a).ok_or_else(|| anyhow::anyhow!("bad act id {a}"))?))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let checksum_hex =
+                p.req("checksum")?.as_str().ok_or_else(|| anyhow::anyhow!("checksum"))?;
+            pools.insert(
+                name.clone(),
+                PoolEntry {
+                    spec: PoolSpec::new(models)?,
+                    group_width: p.req("group_width")?.as_usize().unwrap_or(0),
+                    group_models: p.req("group_models")?.as_usize().unwrap_or(0),
+                    n_groups: p.req("n_groups")?.as_usize().unwrap_or(0),
+                    h_pad: p.req("h_pad")?.as_usize().unwrap_or(0),
+                    m_pad: p.req("m_pad")?.as_usize().unwrap_or(0),
+                    checksum: u64::from_str_radix(checksum_hex, 16)
+                        .map_err(|e| anyhow::anyhow!("checksum hex: {e}"))?,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in doc.req("artifacts")?.as_arr().ok_or_else(|| anyhow::anyhow!("artifacts"))? {
+            let name =
+                a.req("name")?.as_str().ok_or_else(|| anyhow::anyhow!("name"))?.to_string();
+            let inputs = a
+                .req("inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("inputs"))?
+                .iter()
+                .map(|shape| -> anyhow::Result<Vec<usize>> {
+                    shape
+                        .as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("dim")))
+                        .collect()
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name,
+                    kind: a.req("kind")?.as_str().unwrap_or("").to_string(),
+                    file: a.req("file")?.as_str().unwrap_or("").to_string(),
+                    features: a.req("features")?.as_usize().unwrap_or(0),
+                    batch: a.req("batch")?.as_usize().unwrap_or(0),
+                    out: a.req("out")?.as_usize().unwrap_or(0),
+                    loss: a.req("loss")?.as_str().unwrap_or("").to_string(),
+                    pool: a.get("pool").and_then(|v| v.as_str()).map(|s| s.to_string()),
+                    hidden: a.get("hidden").and_then(|v| v.as_usize()),
+                    act: a.get("act").and_then(|v| v.as_usize()).map(|v| v as u8),
+                    inputs,
+                },
+            );
+        }
+
+        Ok(Manifest { dir: dir.to_path_buf(), pools, artifacts })
+    }
+
+    /// Rebuild every pool layout natively and assert checksums + dims
+    /// match what the Python compiler recorded.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, entry) in &self.pools {
+            let lay = PoolLayout::build(&entry.spec);
+            anyhow::ensure!(
+                lay.checksum() == entry.checksum,
+                "pool {name:?}: layout checksum mismatch (rust {:016x} vs manifest {:016x}) — \
+                 the two layout compilers diverged",
+                lay.checksum(),
+                entry.checksum
+            );
+            anyhow::ensure!(lay.h_pad() == entry.h_pad, "pool {name:?}: h_pad mismatch");
+            anyhow::ensure!(lay.m_pad() == entry.m_pad, "pool {name:?}: m_pad mismatch");
+            anyhow::ensure!(
+                lay.group_width == entry.group_width && lay.group_models == entry.group_models,
+                "pool {name:?}: group knobs mismatch"
+            );
+        }
+        for (name, a) in &self.artifacts {
+            anyhow::ensure!(
+                self.dir.join(&a.file).exists(),
+                "artifact {name:?}: file {} missing",
+                a.file
+            );
+            if let Some(pool) = &a.pool {
+                anyhow::ensure!(self.pools.contains_key(pool), "artifact {name:?}: pool {pool:?}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Layout for a named pool (built natively; call `validate` first).
+    pub fn layout(&self, pool: &str) -> anyhow::Result<PoolLayout> {
+        let entry =
+            self.pools.get(pool).ok_or_else(|| anyhow::anyhow!("unknown pool {pool:?}"))?;
+        Ok(PoolLayout::build(&entry.spec))
+    }
+
+    /// Find a parallel artifact by (kind, pool, features, batch, loss).
+    pub fn find_parallel(
+        &self,
+        kind: &str,
+        pool: &str,
+        features: usize,
+        batch: usize,
+        loss: &str,
+    ) -> Option<&ArtifactEntry> {
+        self.artifacts.values().find(|a| {
+            a.kind == kind
+                && a.pool.as_deref() == Some(pool)
+                && a.features == features
+                && a.batch == batch
+                && a.loss == loss
+        })
+    }
+
+    /// Find a sequential train-step artifact; `exact_act` requires the
+    /// baked activation to match (numerics), otherwise any same-h artifact
+    /// works (timing — activation cost is shape-independent).
+    pub fn find_sequential(
+        &self,
+        hidden: usize,
+        act: Option<u8>,
+        features: usize,
+        batch: usize,
+        loss: &str,
+    ) -> Option<&ArtifactEntry> {
+        self.artifacts.values().find(|a| {
+            a.kind == "seq_train"
+                && a.hidden == Some(hidden)
+                && a.features == features
+                && a.batch == batch
+                && a.loss == loss
+                && (act.is_none() || a.act == act)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_and_validates_live_manifest() {
+        let Some(m) = repo_artifacts() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        m.validate().expect("manifest validation — layout compilers must agree");
+        assert!(m.pools.contains_key("smoke"));
+        assert!(m.pools.contains_key("bench"));
+        assert!(m.artifacts.len() > 50);
+    }
+
+    #[test]
+    fn finders_work_on_live_manifest() {
+        let Some(m) = repo_artifacts() else {
+            return;
+        };
+        assert!(m.find_parallel("parallel_train", "smoke", 4, 8, "mse").is_some());
+        assert!(m.find_parallel("parallel_train", "smoke", 4, 8, "zzz").is_none());
+        // smoke pool has a (3, relu=3) model with an exact seq artifact
+        assert!(m.find_sequential(3, Some(3), 4, 8, "mse").is_some());
+        assert!(m.find_sequential(3, Some(9), 4, 8, "mse").is_none());
+    }
+}

@@ -1,0 +1,8 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) and exposes train/eval/predict engines that execute
+//! them. Python never runs here — HLO text in, numbers out.
+mod engine;
+mod manifest;
+
+pub use engine::{literal_f32, literal_of, tensor_of, PjrtParallelEngine, PjrtRuntime, PjrtSequentialEngine};
+pub use manifest::{ArtifactEntry, Manifest, PoolEntry};

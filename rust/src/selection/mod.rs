@@ -1,0 +1,172 @@
+//! Model selection over a trained pool — the *purpose* of ParallelMLPs:
+//! train the whole (h × activation) grid at once, then pick winners by
+//! validation metric (§5: "performing a very efficient grid-search in the
+//! discrete hyper-parameter space").
+
+use crate::nn::act::Act;
+use crate::nn::loss::Loss;
+use crate::pool::PoolSpec;
+
+/// One model's standing after evaluation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RankedModel {
+    /// original pool index
+    pub index: usize,
+    pub hidden: u32,
+    pub act: Act,
+    pub val_loss: f32,
+    /// accuracy for CE, loss for MSE
+    pub val_metric: f32,
+}
+
+/// Rank all models best-first: CE maximizes accuracy (loss breaks ties),
+/// MSE minimizes loss. NaN losses rank last (diverged models).
+pub fn rank_models(
+    spec: &PoolSpec,
+    val_losses: &[f32],
+    val_metrics: &[f32],
+    loss: Loss,
+) -> Vec<RankedModel> {
+    assert_eq!(val_losses.len(), spec.n_models());
+    assert_eq!(val_metrics.len(), spec.n_models());
+    let mut ranked: Vec<RankedModel> = (0..spec.n_models())
+        .map(|m| RankedModel {
+            index: m,
+            hidden: spec.models()[m].0,
+            act: spec.models()[m].1,
+            val_loss: val_losses[m],
+            val_metric: val_metrics[m],
+        })
+        .collect();
+    let key = |r: &RankedModel| -> (f32, f32) {
+        // smaller key = better; NaN -> +inf
+        let l = if r.val_loss.is_finite() { r.val_loss } else { f32::INFINITY };
+        match loss {
+            Loss::Ce => {
+                let acc = if r.val_metric.is_finite() { r.val_metric } else { -1.0 };
+                (-acc, l)
+            }
+            Loss::Mse => (l, l),
+        }
+    };
+    ranked.sort_by(|a, b| {
+        let (ka, kb) = (key(a), key(b));
+        ka.partial_cmp(&kb).unwrap_or(std::cmp::Ordering::Equal).then(a.index.cmp(&b.index))
+    });
+    ranked
+}
+
+/// Best-first top-k slice.
+pub fn top_k(ranked: &[RankedModel], k: usize) -> &[RankedModel] {
+    &ranked[..k.min(ranked.len())]
+}
+
+/// Aggregate: best metric per hidden size (the "distribution of models"
+/// the paper proposes investigating in §6).
+pub fn best_per_hidden(ranked: &[RankedModel]) -> Vec<(u32, RankedModel)> {
+    let mut seen = std::collections::BTreeMap::new();
+    for r in ranked {
+        seen.entry(r.hidden).or_insert_with(|| r.clone());
+    }
+    seen.into_iter().collect()
+}
+
+/// Aggregate: best metric per activation.
+pub fn best_per_act(ranked: &[RankedModel]) -> Vec<(Act, RankedModel)> {
+    let mut out: Vec<(Act, RankedModel)> = Vec::new();
+    for r in ranked {
+        if !out.iter().any(|(a, _)| *a == r.act) {
+            out.push((r.act, r.clone()));
+        }
+    }
+    out
+}
+
+/// Render a ranking as a markdown table.
+pub fn report(ranked: &[RankedModel], loss: Loss, k: usize) -> String {
+    let metric_name = match loss {
+        Loss::Ce => "val_acc",
+        Loss::Mse => "val_mse",
+    };
+    let mut t = crate::metrics::Table::new(
+        &format!("Top-{} models", k.min(ranked.len())),
+        &["rank", "model", "hidden", "act", "val_loss", metric_name],
+    );
+    for (i, r) in top_k(ranked, k).iter().enumerate() {
+        t.row(vec![
+            (i + 1).to_string(),
+            r.index.to_string(),
+            r.hidden.to_string(),
+            r.act.name().to_string(),
+            format!("{:.5}", r.val_loss),
+            format!("{:.5}", r.val_metric),
+        ]);
+    }
+    t.to_markdown()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> PoolSpec {
+        PoolSpec::new(vec![
+            (1, Act::Relu),
+            (2, Act::Relu),
+            (3, Act::Tanh),
+            (4, Act::Tanh),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn mse_ranks_by_loss_ascending() {
+        let s = spec();
+        let losses = [0.5, 0.1, 0.3, 0.2];
+        let ranked = rank_models(&s, &losses, &losses, Loss::Mse);
+        let order: Vec<usize> = ranked.iter().map(|r| r.index).collect();
+        assert_eq!(order, vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn ce_ranks_by_accuracy_descending() {
+        let s = spec();
+        let losses = [0.7, 0.6, 0.5, 0.4];
+        let accs = [0.5, 0.9, 0.9, 0.6];
+        let ranked = rank_models(&s, &losses, &accs, Loss::Ce);
+        // 1 and 2 tie on acc; 2 has lower loss
+        assert_eq!(ranked[0].index, 2);
+        assert_eq!(ranked[1].index, 1);
+        assert_eq!(ranked[3].index, 0);
+    }
+
+    #[test]
+    fn nan_ranks_last() {
+        let s = spec();
+        let losses = [f32::NAN, 0.1, 0.2, 0.3];
+        let ranked = rank_models(&s, &losses, &losses, Loss::Mse);
+        assert_eq!(ranked.last().unwrap().index, 0);
+    }
+
+    #[test]
+    fn aggregates() {
+        let s = spec();
+        let losses = [0.4, 0.3, 0.2, 0.1];
+        let ranked = rank_models(&s, &losses, &losses, Loss::Mse);
+        let by_h = best_per_hidden(&ranked);
+        assert_eq!(by_h.len(), 4);
+        let by_a = best_per_act(&ranked);
+        assert_eq!(by_a.len(), 2);
+        assert_eq!(by_a[0].0, Act::Tanh); // tanh models are best here
+    }
+
+    #[test]
+    fn report_renders() {
+        let s = spec();
+        let losses = [0.4, 0.3, 0.2, 0.1];
+        let ranked = rank_models(&s, &losses, &losses, Loss::Mse);
+        let md = report(&ranked, Loss::Mse, 2);
+        assert!(md.contains("Top-2"));
+        assert!(md.contains("tanh"));
+    }
+}

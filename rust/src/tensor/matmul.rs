@@ -1,0 +1,255 @@
+//! Blocked, threaded matmul kernels — the native engines' MXU.
+//!
+//! Three orientation variants cover every product the MLP needs without
+//! ever materializing a transpose:
+//!
+//! * `nt`: `C[m,n] = A[m,k] · B[n,k]ᵀ` — forward projections (`X·W1ᵀ`)
+//! * `nn`: `C[m,n] = A[m,k] · B[k,n]`  — backward data grads (`dY·W2`)
+//! * `tn`: `C[m,n] = A[k,m]ᵀ · B[k,n]` — weight grads (`dHᵀ·X`)
+//!
+//! Inner loops are contiguous-slice dot/axpy so LLVM autovectorizes them;
+//! threading splits output rows (nt/nn) or uses per-thread accumulators
+//! (tn, whose k-loop crosses thread boundaries otherwise).
+
+use super::Tensor;
+use crate::util::threadpool::{parallel_chunks, SendPtr};
+
+/// Unrolled dot product over two contiguous slices.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4 independent accumulators: break the fp dependency chain so the
+    // compiler can keep several FMA pipes busy.
+    let chunks = a.len() / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let o = i * 8;
+        s0 += a[o] * b[o] + a[o + 4] * b[o + 4];
+        s1 += a[o + 1] * b[o + 1] + a[o + 5] * b[o + 5];
+        s2 += a[o + 2] * b[o + 2] + a[o + 6] * b[o + 6];
+        s3 += a[o + 3] * b[o + 3] + a[o + 7] * b[o + 7];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..a.len() {
+        tail += a[i] * b[i];
+    }
+    s0 + s1 + s2 + s3 + tail
+}
+
+/// `y += alpha * x` over contiguous slices.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `C[m,n] = A[m,k] · B[n,k]ᵀ`, threaded over rows of C.
+pub fn matmul_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, threads: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(c.len(), m * n);
+    let cp = SendPtr(c.as_mut_ptr());
+    parallel_chunks(m, threads, 8, move |r0, r1| {
+        for i in r0..r1 {
+            let arow = &a[i * k..(i + 1) * k];
+            // SAFETY: rows [r0, r1) are owned exclusively by this chunk
+            let crow = unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(i * n), n) };
+            for (j, cv) in crow.iter_mut().enumerate() {
+                *cv = dot(arow, &b[j * k..(j + 1) * k]);
+            }
+        }
+    });
+}
+
+/// `C[m,n] = A[m,k] · B[k,n]`, threaded over rows of C.
+pub fn matmul_nn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, threads: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    let cp = SendPtr(c.as_mut_ptr());
+    parallel_chunks(m, threads, 8, move |r0, r1| {
+        for i in r0..r1 {
+            let crow = unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(i * n), n) };
+            crow.iter_mut().for_each(|x| *x = 0.0);
+            let arow = &a[i * k..(i + 1) * k];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av != 0.0 {
+                    axpy(av, &b[kk * n..(kk + 1) * n], crow);
+                }
+            }
+        }
+    });
+}
+
+/// `C[m,n] = A[k,m]ᵀ · B[k,n]`, threaded over columns-of-A chunks (each
+/// thread owns a disjoint row range of C).
+pub fn matmul_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, threads: usize) {
+    assert_eq!(a.len(), k * m);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    let cp = SendPtr(c.as_mut_ptr());
+    parallel_chunks(m, threads, 8, move |m0, m1| {
+        // zero this thread's C rows
+        for i in m0..m1 {
+            let crow = unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(i * n), n) };
+            crow.iter_mut().for_each(|x| *x = 0.0);
+        }
+        for kk in 0..k {
+            let brow = &b[kk * n..(kk + 1) * n];
+            let arow = &a[kk * m..(kk + 1) * m];
+            for i in m0..m1 {
+                let av = arow[i];
+                if av != 0.0 {
+                    let crow = unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(i * n), n) };
+                    axpy(av, brow, crow);
+                }
+            }
+        }
+    });
+}
+
+/// Tensor-level wrappers (allocate the output).
+pub fn nt(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let n = b.rows();
+    assert_eq!(b.cols(), k, "nt: inner dims {k} vs {}", b.cols());
+    let mut c = Tensor::zeros(&[m, n]);
+    matmul_nt(a.data(), b.data(), c.data_mut(), m, k, n, threads);
+    c
+}
+
+pub fn nn(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let n = b.cols();
+    assert_eq!(b.rows(), k, "nn: inner dims {k} vs {}", b.rows());
+    let mut c = Tensor::zeros(&[m, n]);
+    matmul_nn(a.data(), b.data(), c.data_mut(), m, k, n, threads);
+    c
+}
+
+pub fn tn(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+    let (k, m) = (a.rows(), a.cols());
+    let n = b.cols();
+    assert_eq!(b.rows(), k, "tn: inner dims {k} vs {}", b.rows());
+    let mut c = Tensor::zeros(&[m, n]);
+    matmul_tn(a.data(), b.data(), c.data_mut(), m, k, n, threads);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_nt(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k, n) = (a.rows(), a.cols(), b.rows());
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a.at2(i, kk) * b.at2(j, kk);
+                }
+                c.set2(i, j, s);
+            }
+        }
+        c
+    }
+
+    fn rand_t(rng: &mut Rng, shape: &[usize]) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(t.data_mut(), 0.0, 1.0);
+        t
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::new(1);
+        for len in [0, 1, 3, 7, 8, 9, 31, 64, 100] {
+            let mut a = vec![0.0; len];
+            let mut b = vec![0.0; len];
+            rng.fill_normal(&mut a, 0.0, 1.0);
+            rng.fill_normal(&mut b, 0.0, 1.0);
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - want).abs() < 1e-3, "len={len}");
+        }
+    }
+
+    #[test]
+    fn nt_matches_naive() {
+        let mut rng = Rng::new(2);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (8, 16, 4), (17, 33, 9), (64, 10, 64)] {
+            let a = rand_t(&mut rng, &[m, k]);
+            let b = rand_t(&mut rng, &[n, k]);
+            for threads in [1, 4] {
+                let c = nt(&a, &b, threads);
+                assert!(c.max_abs_diff(&naive_nt(&a, &b)) < 1e-4, "{m}x{k}x{n} t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn nn_matches_nt_of_transpose() {
+        let mut rng = Rng::new(3);
+        let (m, k, n) = (9, 13, 6);
+        let a = rand_t(&mut rng, &[m, k]);
+        let b = rand_t(&mut rng, &[k, n]);
+        // build bT and compare against nt
+        let mut bt = Tensor::zeros(&[n, k]);
+        for i in 0..k {
+            for j in 0..n {
+                bt.set2(j, i, b.at2(i, j));
+            }
+        }
+        for threads in [1, 3] {
+            let c = nn(&a, &b, threads);
+            assert!(c.max_abs_diff(&naive_nt(&a, &bt)) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn tn_matches_explicit_transpose() {
+        let mut rng = Rng::new(4);
+        let (k, m, n) = (11, 7, 5);
+        let a = rand_t(&mut rng, &[k, m]);
+        let b = rand_t(&mut rng, &[k, n]);
+        let mut at = Tensor::zeros(&[m, k]);
+        for i in 0..k {
+            for j in 0..m {
+                at.set2(j, i, a.at2(i, j));
+            }
+        }
+        let mut bt = Tensor::zeros(&[n, k]);
+        for i in 0..k {
+            for j in 0..n {
+                bt.set2(j, i, b.at2(i, j));
+            }
+        }
+        for threads in [1, 4] {
+            let c = tn(&a, &b, threads);
+            assert!(c.max_abs_diff(&naive_nt(&at, &bt)) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn identity_roundtrip() {
+        let mut eye = Tensor::zeros(&[4, 4]);
+        for i in 0..4 {
+            eye.set2(i, i, 1.0);
+        }
+        let mut rng = Rng::new(5);
+        let x = rand_t(&mut rng, &[4, 4]);
+        let y = nn(&x, &eye, 1);
+        assert!(y.max_abs_diff(&x) < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dim_mismatch_panics() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 4]);
+        nt(&a, &b, 1); // inner dims 3 vs 4
+    }
+}

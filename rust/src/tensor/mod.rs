@@ -1,0 +1,12 @@
+//! Dense f32 tensor substrate for the native engines.
+//!
+//! Row-major, CPU-only, deliberately small: the three matmul variants the
+//! MLP fwd/bwd needs (`NT`, `NN`, `TN`), broadcastable elementwise helpers
+//! and the paper's Scatter-Add. Loops are written so LLVM autovectorizes
+//! them (`-C target-cpu=native`); blocking/threading lives in `matmul.rs`.
+pub mod matmul;
+pub mod scatter;
+
+mod dense;
+
+pub use dense::Tensor;

@@ -1,0 +1,114 @@
+//! Scatter-Add — the paper's §3 primitive (Ahn et al., 2005).
+//!
+//! `scatter_add(dim, src, index)` exactly as the paper defines it for 2-D
+//! tensors, plus the segmented reduction the fused native engine uses on
+//! its hot path (where segment contiguity lets us skip the index tensor).
+
+use super::Tensor;
+
+/// Paper semantics, dim = 1: `R[i, I[i,j]] += S[i,j]`.
+/// `out_cols` is the result width (max index + 1 in the paper's example).
+pub fn scatter_add_dim1(src: &Tensor, index: &[u32], out_cols: usize) -> Tensor {
+    assert_eq!(src.shape().len(), 2);
+    assert_eq!(index.len(), src.len(), "index must cover src");
+    let (rows, cols) = (src.rows(), src.cols());
+    let mut out = Tensor::zeros(&[rows, out_cols]);
+    for i in 0..rows {
+        for j in 0..cols {
+            let tgt = index[i * cols + j] as usize;
+            assert!(tgt < out_cols, "index {tgt} out of bounds {out_cols}");
+            let v = src.at2(i, j);
+            out.data_mut()[i * out_cols + tgt] += v;
+        }
+    }
+    out
+}
+
+/// Paper semantics, dim = 0: `R[I[i,j], j] += S[i,j]`.
+pub fn scatter_add_dim0(src: &Tensor, index: &[u32], out_rows: usize) -> Tensor {
+    assert_eq!(src.shape().len(), 2);
+    assert_eq!(index.len(), src.len());
+    let (rows, cols) = (src.rows(), src.cols());
+    let mut out = Tensor::zeros(&[out_rows, cols]);
+    for i in 0..rows {
+        for j in 0..cols {
+            let tgt = index[i * cols + j] as usize;
+            assert!(tgt < out_rows);
+            let v = src.at2(i, j);
+            out.data_mut()[tgt * cols + j] += v;
+        }
+    }
+    out
+}
+
+/// Segmented sum over contiguous spans: `out[s] = Σ src[start_s..end_s)`.
+/// The fused layout guarantees contiguity, so the hot path never touches
+/// a scatter index — this is the locality the paper's design banks on.
+#[inline]
+pub fn segment_sum_contiguous(src: &[f32], spans: &[(usize, usize)], out: &mut [f32]) {
+    assert_eq!(spans.len(), out.len());
+    for (o, &(start, end)) in out.iter_mut().zip(spans) {
+        let mut s = 0.0f32;
+        for v in &src[start..end] {
+            s += v;
+        }
+        *o = s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_figure_example() {
+        // Paper §3: D=1, S=[[1,2,3,4,5,6]], I=[[0,1,1,2,2,2]] -> [[1,5,15]]
+        let s = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[1, 6]);
+        let i = [0u32, 1, 1, 2, 2, 2];
+        let r = scatter_add_dim1(&s, &i, 3);
+        assert_eq!(r.data(), &[1.0, 5.0, 15.0]);
+    }
+
+    #[test]
+    fn dim0_semantics() {
+        // R[I[i,j], j] += S[i,j]
+        let s = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let i = [0u32, 1, 0, 1];
+        let r = scatter_add_dim0(&s, &i, 2);
+        // col0: rows 0,1 both target row I=0 -> 1+3 ; col1: 2+4 to row 1
+        assert_eq!(r.data(), &[4.0, 0.0, 0.0, 6.0]);
+    }
+
+    #[test]
+    fn duplicate_indices_accumulate() {
+        let s = Tensor::from_vec(vec![1.0; 8], &[1, 8]);
+        let i = [0u32; 8];
+        let r = scatter_add_dim1(&s, &i, 1);
+        assert_eq!(r.data(), &[8.0]);
+    }
+
+    #[test]
+    fn segment_sum_matches_scatter() {
+        let src = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let spans = [(0usize, 1usize), (1, 3), (3, 6)];
+        let mut out = [0.0f32; 3];
+        segment_sum_contiguous(&src, &spans, &mut out);
+        assert_eq!(out, [1.0, 5.0, 15.0]);
+    }
+
+    #[test]
+    fn empty_segment_is_zero() {
+        let src = [1.0f32, 2.0];
+        let spans = [(0usize, 0usize), (0, 2)];
+        let mut out = [9.0f32; 2];
+        segment_sum_contiguous(&src, &spans, &mut out);
+        assert_eq!(out, [0.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_index_panics() {
+        let s = Tensor::from_vec(vec![1.0], &[1, 1]);
+        scatter_add_dim1(&s, &[5], 3);
+    }
+}

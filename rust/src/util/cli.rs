@@ -1,0 +1,132 @@
+//! Tiny CLI argument parser (no clap offline): `--key value`, `--flag`,
+//! positional subcommands, typed getters with defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `args` (excluding argv[0]). `bool_flags` lists options that
+    /// take no value; everything else starting with `--` consumes one.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, bool_flags: &[&str]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                if bool_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("option --{name} expects a value"))?;
+                    out.options.insert(name.to_string(), v);
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(bool_flags: &[&str]) -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1), bool_flags)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("option --{name}: cannot parse {s:?}")),
+        }
+    }
+
+    pub fn get_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        Ok(self.get_parse(name)?.unwrap_or(default))
+    }
+
+    /// Comma-separated list, e.g. `--features 5,10,50`.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str) -> Result<Option<Vec<T>>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .split(',')
+                .map(|p| p.trim().parse::<T>().map_err(|_| format!("--{name}: bad item {p:?}")))
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), &["verbose", "force"]).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["bench", "--table", "1", "--verbose", "--epochs", "5"]);
+        assert_eq!(a.positional, vec!["bench"]);
+        assert_eq!(a.get("table"), Some("1"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get_parse_or::<usize>("epochs", 1).unwrap(), 5);
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse(&["--lr=0.05", "--name=x"]);
+        assert_eq!(a.get_parse_or::<f32>("lr", 0.0).unwrap(), 0.05);
+        assert_eq!(a.get("name"), Some("x"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--features", "5,10, 50"]);
+        assert_eq!(a.get_list::<usize>("features").unwrap().unwrap(), vec![5, 10, 50]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::parse(["--table".to_string()].into_iter(), &[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = parse(&["--epochs", "abc"]);
+        assert!(a.get_parse::<usize>("epochs").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_or("mode", "fast"), "fast");
+        assert_eq!(a.get_parse_or::<u64>("seed", 42).unwrap(), 42);
+    }
+}

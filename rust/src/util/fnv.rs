@@ -1,0 +1,71 @@
+//! FNV-1a 64-bit — the cross-language layout checksum (mirrors
+//! `python/compile/pool.py::PoolLayout.checksum`).
+
+pub const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+#[derive(Clone, Debug)]
+pub struct Fnv1a64 {
+    acc: u64,
+}
+
+impl Default for Fnv1a64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv1a64 {
+    pub fn new() -> Self {
+        Self { acc: FNV_OFFSET }
+    }
+
+    pub fn feed_byte(&mut self, b: u8) {
+        self.acc = (self.acc ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+
+    /// Little-endian u32 — the unit the layout checksum is defined over.
+    pub fn feed_u32(&mut self, v: u32) {
+        for b in v.to_le_bytes() {
+            self.feed_byte(b);
+        }
+    }
+
+    pub fn feed_bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.feed_byte(b);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // FNV-1a("") = offset basis
+        assert_eq!(Fnv1a64::new().finish(), FNV_OFFSET);
+        // FNV-1a("a") = 0xaf63dc4c8601ec8c
+        let mut h = Fnv1a64::new();
+        h.feed_byte(b'a');
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+        // FNV-1a("foobar") = 0x85944171f73967e8
+        let mut h = Fnv1a64::new();
+        h.feed_bytes(b"foobar");
+        assert_eq!(h.finish(), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn u32_is_little_endian() {
+        let mut a = Fnv1a64::new();
+        a.feed_u32(0x0403_0201);
+        let mut b = Fnv1a64::new();
+        b.feed_bytes(&[1, 2, 3, 4]);
+        assert_eq!(a.finish(), b.finish());
+    }
+}

@@ -1,0 +1,7 @@
+//! Small self-built substrates the offline environment forces us to own:
+//! PRNG, JSON parser, thread pool, CLI argument parser and hashing.
+pub mod cli;
+pub mod fnv;
+pub mod json;
+pub mod rng;
+pub mod threadpool;

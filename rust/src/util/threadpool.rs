@@ -1,0 +1,133 @@
+//! Scoped data-parallel helpers over `std::thread` (no rayon offline).
+//!
+//! The native engines split batch/model ranges across workers; these
+//! helpers own the chunking so callers write `parallel_for(0..n, f)`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: `PMLP_THREADS` env var or all cores.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("PMLP_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(chunk_start, chunk_end)` over disjoint chunks of `0..len` on up
+/// to `threads` scoped workers. `f` must be `Sync`-safe over disjoint
+/// ranges (callers hand out `&mut` slices via raw-splitting or atomics).
+pub fn parallel_chunks<F>(len: usize, threads: usize, min_chunk: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if len == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(len.div_ceil(min_chunk.max(1))).max(1);
+    if threads == 1 {
+        f(0, len);
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    // dynamic scheduling: workers pull chunks, so ragged work (heterogeneous
+    // model sizes!) balances itself
+    let chunk = (len / (threads * 4)).max(min_chunk).max(1);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let start = next.fetch_add(chunk, Ordering::Relaxed);
+                if start >= len {
+                    break;
+                }
+                let end = (start + chunk).min(len);
+                f(start, end);
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..len` in parallel, collecting results in order.
+pub fn parallel_map<T, F>(len: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); len];
+    {
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        parallel_chunks(len, threads, 1, move |start, end| {
+            for i in start..end {
+                // SAFETY: chunks are disjoint, so each index is written once
+                unsafe { *out_ptr.ptr().add(i) = f(i) };
+            }
+        });
+    }
+    out
+}
+
+/// A `Send`/`Sync` raw-pointer wrapper for disjoint-range writes.
+///
+/// Access goes through `ptr()` (not the field) so closures capture the
+/// whole wrapper — edition-2021 disjoint capture would otherwise capture
+/// the raw pointer itself, which is not `Send`/`Sync`.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+
+impl<T> SendPtr<T> {
+    #[inline]
+    pub fn ptr(&self) -> *mut T {
+        self.0
+    }
+}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        let n = 1000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_chunks(n, 8, 1, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn empty_and_tiny_ranges() {
+        parallel_chunks(0, 8, 1, |_, _| panic!("should not run"));
+        let count = AtomicU64::new(0);
+        parallel_chunks(1, 8, 1, |s, e| {
+            count.fetch_add((e - s) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let v = parallel_map(100, 4, |i| i * i);
+        assert_eq!(v, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let v = parallel_map(10, 1, |i| i + 1);
+        assert_eq!(v[9], 10);
+    }
+
+    #[test]
+    fn num_threads_env_override() {
+        // only checks it doesn't panic and returns >= 1
+        assert!(num_threads() >= 1);
+    }
+}

@@ -1,0 +1,105 @@
+//! CLI integration: drive the `pmlp` binary end-to-end as a user would.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn pmlp() -> PathBuf {
+    // cargo puts integration-test binaries next to the main ones
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // debug/ or release/
+    p.push(format!("pmlp{}", std::env::consts::EXE_SUFFIX));
+    p
+}
+
+fn have_artifacts() -> bool {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn help_prints_usage() {
+    let out = Command::new(pmlp()).arg("help").output().unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("USAGE"));
+    assert!(stdout.contains("selftest"));
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let out = Command::new(pmlp()).arg("zap").output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn selftest_passes() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let out = Command::new(pmlp()).arg("selftest").output().unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("selftest PASSED"), "{stdout}");
+}
+
+#[test]
+fn inspect_reports_pools() {
+    let out = Command::new(pmlp()).arg("inspect").output().unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("paper (10k)"));
+    assert!(stdout.contains("pad_eff"));
+}
+
+#[test]
+fn train_with_config_file() {
+    let tmp = std::env::temp_dir().join(format!("pmlp_cfg_{}.toml", std::process::id()));
+    std::fs::write(
+        &tmp,
+        r#"
+[experiment]
+name = "cli_test"
+dataset = "blobs"
+samples = 150
+features = 6
+out = 2
+hidden_sizes = [2, 4]
+acts = ["relu"]
+epochs = 5
+warmup_epochs = 1
+batch = 25
+lr = 0.2
+loss = "ce"
+strategy = "native_parallel"
+threads = 2
+seed = 5
+"#,
+    )
+    .unwrap();
+    let out = Command::new(pmlp())
+        .args(["train", "--config", tmp.to_str().unwrap(), "--top", "3"])
+        .output()
+        .unwrap();
+    std::fs::remove_file(&tmp).ok();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("Top-"), "{stdout}");
+    assert!(stdout.contains("relu"), "{stdout}");
+}
+
+#[test]
+fn train_rejects_missing_config() {
+    let out = Command::new(pmlp()).args(["train"]).output().unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--config"), "{stderr}");
+}
+
+#[test]
+fn bench_rejects_bad_table() {
+    let out = Command::new(pmlp()).args(["bench", "--table", "9"]).output().unwrap();
+    assert!(!out.status.success());
+}

@@ -1,0 +1,66 @@
+//! Cross-language layout contract: the Rust layout compiler must produce
+//! the exact checksums the Python compiler recorded in the live manifest,
+//! for every pool — plus golden-value spot checks that don't need
+//! artifacts at all.
+
+use std::path::Path;
+
+use parallel_mlps::nn::act::{Act, ALL_ACTS};
+use parallel_mlps::pool::{PoolLayout, PoolSpec};
+use parallel_mlps::runtime::Manifest;
+
+#[test]
+fn live_manifest_checksums_agree() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let Ok(m) = Manifest::load(&dir) else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    assert!(!m.pools.is_empty());
+    for (name, entry) in &m.pools {
+        let lay = PoolLayout::build(&entry.spec);
+        assert_eq!(
+            lay.checksum(),
+            entry.checksum,
+            "pool {name}: rust layout checksum != python layout checksum"
+        );
+        assert_eq!(lay.h_pad(), entry.h_pad, "pool {name}");
+        assert_eq!(lay.m_pad(), entry.m_pad, "pool {name}");
+        assert_eq!(lay.n_groups, entry.n_groups, "pool {name}");
+    }
+}
+
+#[test]
+fn smoke_pool_structure_matches_specs_py() {
+    // mirror of python/compile/specs.py SMOKE_MODELS
+    let models = [(2u32, 1u8), (3, 3), (2, 2), (1, 0), (4, 6), (2, 9), (3, 3), (5, 5)];
+    let spec = PoolSpec::new(
+        models.iter().map(|&(h, a)| (h, Act::from_id(a).unwrap())).collect(),
+    )
+    .unwrap();
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let Ok(m) = Manifest::load(&dir) else { return };
+    let entry = &m.pools["smoke"];
+    assert_eq!(entry.spec.models(), spec.models(), "smoke pool drifted from specs.py");
+}
+
+#[test]
+fn bench_pool_structure_matches_specs_py() {
+    let spec = PoolSpec::from_grid(&[2, 4, 8, 16, 25], &ALL_ACTS, 4).unwrap();
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let Ok(m) = Manifest::load(&dir) else { return };
+    let entry = &m.pools["bench"];
+    assert_eq!(entry.spec.models(), spec.models(), "bench pool drifted from specs.py");
+    assert_eq!(entry.spec.n_models(), 200);
+}
+
+#[test]
+fn e2e_pool_structure_matches_specs_py() {
+    let hs: Vec<u32> = (1..=12).collect();
+    let spec = PoolSpec::from_grid(&hs, &ALL_ACTS, 1).unwrap();
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let Ok(m) = Manifest::load(&dir) else { return };
+    let entry = &m.pools["e2e"];
+    assert_eq!(entry.spec.models(), spec.models(), "e2e pool drifted from specs.py");
+    assert_eq!(entry.spec.n_models(), 120);
+}

@@ -1,0 +1,171 @@
+//! The paper's central correctness claim, end-to-end across the 2×2
+//! engine grid: fused training is EXACTLY independent per-model training.
+//!
+//! All four engines start from identical init (seeded per original model
+//! index) and see identical batches; after several epochs the trained
+//! parameters must agree within float tolerance.
+
+use std::path::Path;
+
+use parallel_mlps::coordinator::BatchSet;
+use parallel_mlps::data;
+use parallel_mlps::nn::init::{extract_model, init_pool};
+use parallel_mlps::nn::loss::Loss;
+use parallel_mlps::nn::mlp::MlpTrainer;
+use parallel_mlps::nn::optimizer::OptimizerKind;
+use parallel_mlps::nn::parallel::ParallelEngine;
+use parallel_mlps::runtime::{PjrtParallelEngine, PjrtRuntime, PjrtSequentialEngine};
+use parallel_mlps::util::rng::Rng;
+
+const F: usize = 4;
+const B: usize = 8;
+const O: usize = 2;
+const LR: f32 = 0.05;
+const EPOCHS: usize = 3;
+const SEED: u64 = 1234;
+
+fn artifacts() -> Option<PjrtRuntime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match PjrtRuntime::new(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping pjrt tests: {e} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+/// Train all four engines on the same workload; return per-engine fused
+/// params flattened per model for comparison.
+#[test]
+fn four_way_engine_equivalence() {
+    let Some(rt) = artifacts() else { return };
+    let layout = rt.manifest.layout("smoke").expect("smoke pool");
+    let spec = layout.spec().clone();
+    let fused0 = init_pool(SEED, &layout, F, O);
+
+    let mut rng = Rng::new(SEED);
+    let ds = data::random_regression(B * 4, F, O, &mut rng);
+    let batches = BatchSet::new(&ds, B, true);
+
+    // 1. native fused
+    let mut native =
+        ParallelEngine::new(layout.clone(), fused0.clone(), Loss::Mse, F, O, B, 2);
+    // 2. pjrt fused (Pallas M3 artifact)
+    let mut pjrt = PjrtParallelEngine::new(&rt, "smoke", F, B, Loss::Mse, &fused0).unwrap();
+    // 3. pjrt sequential (per-model artifacts, exact activations)
+    let mut pseq =
+        PjrtSequentialEngine::new(&rt, &layout, F, B, O, Loss::Mse, &fused0, true).unwrap();
+    // 4. native sequential
+    let mut nseq: Vec<MlpTrainer> = (0..spec.n_models())
+        .map(|m| {
+            MlpTrainer::new(
+                extract_model(&fused0, &layout, m),
+                spec.models()[m].1,
+                Loss::Mse,
+                OptimizerKind::Sgd,
+                1,
+            )
+        })
+        .collect();
+
+    for _ in 0..EPOCHS {
+        for (x, y) in &batches.batches {
+            native.step(x, y, LR);
+            pjrt.step(x, y, LR).unwrap();
+            pseq.step_all(x, y, LR).unwrap();
+            for t in nseq.iter_mut() {
+                t.step(x, y, LR);
+            }
+        }
+    }
+
+    let pjrt_fused = pjrt.params_fused().unwrap();
+    let native_fused = native.params_fused();
+    for m in 0..spec.n_models() {
+        let h = spec.models()[m].0 as usize;
+        let a = extract_model(&native_fused, &layout, m);
+        let b_ = extract_model(&pjrt_fused, &layout, m);
+        let c = pseq.extract(m, h).unwrap();
+        let d = &nseq[m].params;
+        let ab = a.max_abs_diff(&b_);
+        let ac = a.max_abs_diff(&c);
+        let ad = a.max_abs_diff(d);
+        assert!(ab < 1e-4, "model {m}: native-fused vs pjrt-fused diff {ab}");
+        assert!(ac < 1e-4, "model {m}: native-fused vs pjrt-seq diff {ac}");
+        assert!(ad < 1e-4, "model {m}: native-fused vs native-seq diff {ad}");
+    }
+}
+
+#[test]
+fn pjrt_fused_ce_loss_matches_native() {
+    let Some(rt) = artifacts() else { return };
+    let layout = rt.manifest.layout("smoke").expect("smoke pool");
+    let fused0 = init_pool(77, &layout, F, O);
+    let mut rng = Rng::new(5150);
+    let mut x = parallel_mlps::tensor::Tensor::zeros(&[B, F]);
+    rng.fill_normal(x.data_mut(), 0.0, 1.0);
+    let mut y = parallel_mlps::tensor::Tensor::zeros(&[B, O]);
+    for bi in 0..B {
+        y.set2(bi, rng.below(O), 1.0);
+    }
+    let mut native = ParallelEngine::new(layout.clone(), fused0.clone(), Loss::Ce, F, O, B, 2);
+    let mut pjrt = PjrtParallelEngine::new(&rt, "smoke", F, B, Loss::Ce, &fused0).unwrap();
+    for _ in 0..4 {
+        let ln = native.step(&x, &y, 0.1);
+        let lp = pjrt.step(&x, &y, 0.1).unwrap();
+        for (a, b) in ln.iter().zip(&lp) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_eval_and_predict_consistent() {
+    let Some(rt) = artifacts() else { return };
+    let layout = rt.manifest.layout("smoke").expect("smoke pool");
+    let fused0 = init_pool(31, &layout, F, O);
+    let mut rng = Rng::new(6);
+    let ds = data::random_regression(B, F, O, &mut rng);
+    let (x, y) = ds.batch(0, B);
+
+    let pjrt = PjrtParallelEngine::new(&rt, "smoke", F, B, Loss::Mse, &fused0).unwrap();
+    let (pl, pm) = pjrt.evaluate(&x, &y).unwrap();
+    let mut native = ParallelEngine::new(layout.clone(), fused0, Loss::Mse, F, O, B, 2);
+    let (nl, nm) = native.evaluate(&x, &y);
+    for i in 0..pl.len() {
+        assert!((pl[i] - nl[i]).abs() < 1e-4);
+        assert!((pm[i] - nm[i]).abs() < 1e-4);
+    }
+
+    // predict: per-slot outputs match native forward
+    let yp = pjrt.predict(&x).unwrap();
+    let yn = native.forward(&x);
+    assert!(yp.max_abs_diff(&yn) < 1e-4);
+}
+
+#[test]
+fn training_converges_on_learnable_task_via_pjrt() {
+    // E2E sanity on the artifact path: losses decrease on a teacher task.
+    let Some(rt) = artifacts() else { return };
+    let layout = rt.manifest.layout("smoke").expect("smoke pool");
+    let fused0 = init_pool(8, &layout, F, O);
+    let mut rng = Rng::new(9);
+    let ds = data::teacher_mlp(64, F, O, 3, &mut rng);
+    let batches = BatchSet::new(&ds, B, true);
+    let mut pjrt = PjrtParallelEngine::new(&rt, "smoke", F, B, Loss::Mse, &fused0).unwrap();
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for epoch in 0..30 {
+        let mut acc = 0.0;
+        for (x, y) in &batches.batches {
+            let lm = pjrt.step(x, y, 0.05).unwrap();
+            acc = lm.iter().sum::<f32>() / lm.len() as f32;
+        }
+        if epoch == 0 {
+            first = acc;
+        }
+        last = acc;
+    }
+    assert!(last < first * 0.5, "first={first} last={last}");
+}

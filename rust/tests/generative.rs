@@ -1,0 +1,138 @@
+//! Generative (property-style) integration tests: many random pools,
+//! datasets and hyper-parameters; for each, the fused native engine must
+//! reproduce per-model sequential training exactly — the paper's
+//! independence claim swept across the configuration space.
+
+use parallel_mlps::coordinator::BatchSet;
+use parallel_mlps::data;
+use parallel_mlps::nn::act::{Act, ALL_ACTS};
+use parallel_mlps::nn::init::{extract_model, init_pool};
+use parallel_mlps::nn::loss::Loss;
+use parallel_mlps::nn::mlp::MlpTrainer;
+use parallel_mlps::nn::optimizer::OptimizerKind;
+use parallel_mlps::nn::parallel::ParallelEngine;
+use parallel_mlps::pool::{PoolLayout, PoolSpec};
+use parallel_mlps::util::rng::Rng;
+
+fn random_pool(rng: &mut Rng) -> PoolSpec {
+    let n = 1 + rng.below(10);
+    let models: Vec<(u32, Act)> = (0..n)
+        .map(|_| (1 + rng.below(9) as u32, ALL_ACTS[rng.below(10)]))
+        .collect();
+    PoolSpec::new(models).unwrap()
+}
+
+#[test]
+fn fused_equals_sequential_across_random_configs() {
+    let mut meta = Rng::new(0xF00D);
+    for trial in 0..12 {
+        let seed = meta.next_u64();
+        let mut rng = Rng::new(seed);
+        let spec = random_pool(&mut rng);
+        let f = 2 + rng.below(6);
+        let o = 1 + rng.below(3);
+        let b = [4usize, 8, 16][rng.below(3)];
+        let n = b * (2 + rng.below(3));
+        let lr = [0.01f32, 0.05, 0.1][rng.below(3)];
+        let loss = if rng.below(2) == 0 { Loss::Mse } else { Loss::Ce };
+        let epochs = 1 + rng.below(3);
+
+        let layout = PoolLayout::build(&spec);
+        let fused0 = init_pool(seed, &layout, f, o);
+        let ds = if loss == Loss::Ce {
+            data::blobs(n, f, o.max(2), &mut rng)
+        } else {
+            data::random_regression(n, f, o, &mut rng)
+        };
+        // CE blobs force out >= 2
+        let o = ds.out_dim();
+        let fused0 = if fused0.w2.shape()[0] != o { init_pool(seed, &layout, f, o) } else { fused0 };
+        let batches = BatchSet::new(&ds, b, true);
+
+        let mut engine =
+            ParallelEngine::new(layout.clone(), fused0.clone(), loss, f, o, b, 2);
+        for _ in 0..epochs {
+            for (x, y) in &batches.batches {
+                engine.step(x, y, lr);
+            }
+        }
+        let trained = engine.params_fused();
+
+        for m in 0..spec.n_models() {
+            let mut seq = MlpTrainer::new(
+                extract_model(&fused0, &layout, m),
+                spec.models()[m].1,
+                loss,
+                OptimizerKind::Sgd,
+                1,
+            );
+            for _ in 0..epochs {
+                for (x, y) in &batches.batches {
+                    seq.step(x, y, lr);
+                }
+            }
+            let got = extract_model(&trained, &layout, m);
+            let diff = got.max_abs_diff(&seq.params);
+            assert!(
+                diff < 5e-4,
+                "trial {trial} (seed {seed:#x}): model {m} of {:?} diverged by {diff} \
+                 (f={f} o={o} b={b} lr={lr} loss={loss:?} epochs={epochs})",
+                spec.models()[m]
+            );
+        }
+    }
+}
+
+#[test]
+fn random_layout_knobs_do_not_change_training() {
+    // explicit (W, G) choices are a pure performance knob: results match
+    let mut meta = Rng::new(0xBEEF);
+    for _ in 0..6 {
+        let seed = meta.next_u64();
+        let mut rng = Rng::new(seed);
+        let spec = random_pool(&mut rng);
+        let max_h = spec.max_hidden() as usize;
+        let w = max_h.max(4 + rng.below(24)).div_ceil(4) * 4;
+        let g = 1 + rng.below(8);
+        let (f, o, b) = (4usize, 2usize, 8usize);
+        let ds = data::random_regression(16, f, o, &mut rng);
+        let batches = BatchSet::new(&ds, b, true);
+
+        let run = |layout: PoolLayout| {
+            let fused0 = init_pool(seed, &layout, f, o);
+            let mut e = ParallelEngine::new(layout.clone(), fused0, Loss::Mse, f, o, b, 1);
+            for (x, y) in &batches.batches {
+                e.step(x, y, 0.05);
+            }
+            (0..layout.n_models())
+                .map(|m| extract_model(&e.params_fused(), &layout, m))
+                .collect::<Vec<_>>()
+        };
+        let a = run(PoolLayout::build(&spec));
+        let b_ = run(PoolLayout::build_with(&spec, w, g));
+        for (m, (pa, pb)) in a.iter().zip(&b_).enumerate() {
+            let diff = pa.max_abs_diff(pb);
+            assert!(diff < 1e-5, "seed {seed:#x} model {m}: layout knobs changed results ({diff})");
+        }
+    }
+}
+
+#[test]
+fn evaluation_is_pure() {
+    // evaluate() must not mutate parameters
+    let mut rng = Rng::new(77);
+    let spec = random_pool(&mut rng);
+    let layout = PoolLayout::build(&spec);
+    let fused0 = init_pool(1, &layout, 4, 2);
+    let mut e = ParallelEngine::new(layout.clone(), fused0.clone(), Loss::Mse, 4, 2, 8, 1);
+    let ds = data::random_regression(8, 4, 2, &mut rng);
+    let (x, y) = ds.batch(0, 8);
+    let before = e.params_fused();
+    for _ in 0..3 {
+        e.evaluate(&x, &y);
+        e.forward(&x);
+    }
+    let after = e.params_fused();
+    assert_eq!(before.w1.max_abs_diff(&after.w1), 0.0);
+    assert_eq!(before.b2.max_abs_diff(&after.b2), 0.0);
+}

@@ -1,0 +1,195 @@
+//! System-level integration: manifests, sweeps, configs, selection and
+//! failure injection (corrupted manifests/pools must be rejected loudly).
+
+use std::path::Path;
+
+use parallel_mlps::config::{ExperimentConfig, Strategy};
+use parallel_mlps::coordinator::{render_paper_table, run_experiment, run_table, SweepConfig, TableKind};
+use parallel_mlps::data::SynthKind;
+use parallel_mlps::nn::act::Act;
+use parallel_mlps::nn::loss::Loss;
+use parallel_mlps::pool::PoolSpec;
+use parallel_mlps::runtime::{Manifest, PjrtRuntime};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn pjrt_quick_sweep_produces_paper_shape() {
+    // A miniature Table 2: parallel must beat sequential by a wide margin
+    // on the dispatch-bound PJRT device.
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts missing");
+        return;
+    }
+    let mut cfg = SweepConfig::quick(SweepConfig::bench_pool());
+    cfg.features = vec![5];
+    cfg.samples = vec![100];
+    let cells = run_table(TableKind::Pjrt, &cfg, Some(&artifacts_dir())).unwrap();
+    assert_eq!(cells.len(), 1);
+    let c = &cells[0];
+    assert!(
+        c.ratio() < 0.5,
+        "parallel should be far faster than sequential on pjrt: ratio {}",
+        c.ratio()
+    );
+    let md = render_paper_table("mini", &cfg, &cells);
+    assert!(md.contains("Parallel/Sequential"));
+}
+
+#[test]
+fn native_quick_sweep_parallel_wins() {
+    let mut cfg = SweepConfig::quick(SweepConfig::bench_pool());
+    cfg.features = vec![10];
+    cfg.samples = vec![200];
+    cfg.epochs = 3;
+    cfg.warmup = 1;
+    let cells = run_table(TableKind::NativeCpu, &cfg, None).unwrap();
+    let c = &cells[0];
+    assert!(
+        c.ratio() < 1.0,
+        "fused native should beat sequential native: ratio {}",
+        c.ratio()
+    );
+}
+
+#[test]
+fn corrupted_manifest_checksum_is_rejected() {
+    // failure injection: flip the recorded checksum and expect validation
+    // to refuse (this is the guard against layout-compiler divergence).
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let tmp = std::env::temp_dir().join(format!("pmlp_corrupt_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    // flip the first hex digit of the first checksum (keeping length 16)
+    let key = "\"checksum\": \"";
+    let pos = text.find(key).unwrap() + key.len();
+    let old = text.as_bytes()[pos] as char;
+    let new = if old == '0' { '1' } else { '0' };
+    let mut corrupted = text.clone();
+    corrupted.replace_range(pos..pos + 1, &new.to_string());
+    assert_ne!(text, corrupted);
+    std::fs::write(tmp.join("manifest.json"), corrupted).unwrap();
+    // artifact files referenced must exist for validate(); copy the HLOs
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let p = entry.unwrap().path();
+        if p.extension().map(|e| e == "txt").unwrap_or(false) {
+            std::fs::copy(&p, tmp.join(p.file_name().unwrap())).unwrap();
+        }
+    }
+    let m = Manifest::load(&tmp).unwrap();
+    let err = m.validate().unwrap_err().to_string();
+    assert!(err.contains("checksum mismatch"), "{err}");
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn missing_artifact_file_is_rejected() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let tmp = std::env::temp_dir().join(format!("pmlp_missing_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    std::fs::copy(dir.join("manifest.json"), tmp.join("manifest.json")).unwrap();
+    // no HLO files copied -> every artifact is missing
+    let m = Manifest::load(&tmp).unwrap();
+    let err = m.validate().unwrap_err().to_string();
+    assert!(err.contains("missing"), "{err}");
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn runtime_rejects_unknown_pool_and_artifact() {
+    if !artifacts_dir().join("manifest.json").exists() {
+        return;
+    }
+    let rt = PjrtRuntime::new(&artifacts_dir()).unwrap();
+    assert!(rt.manifest.layout("not_a_pool").is_err());
+    assert!(rt.executable("not_an_artifact").is_err());
+}
+
+#[test]
+fn config_driven_experiment_selects_sensible_model() {
+    // blobs are easy: after a few epochs the best model should have high
+    // accuracy, and selection must return it first.
+    let cfg = ExperimentConfig {
+        name: "it_blobs".into(),
+        dataset: SynthKind::Blobs,
+        samples: 300,
+        features: 8,
+        out: 3,
+        hidden_sizes: vec![1, 4, 8],
+        acts: vec![Act::Relu, Act::Tanh],
+        repeats: 1,
+        epochs: 15,
+        warmup_epochs: 2,
+        batch: 30,
+        lr: 0.2,
+        loss: Loss::Ce,
+        strategy: Strategy::NativeParallel,
+        threads: 2,
+        seed: 3,
+        ..Default::default()
+    };
+    let rep = run_experiment(&cfg).unwrap();
+    assert_eq!(rep.ranked.len(), 6);
+    assert!(
+        rep.ranked[0].val_metric > 0.8,
+        "best model should classify blobs: {:?}",
+        rep.ranked[0]
+    );
+    // larger-hidden models should generally beat h=1 on 3-class blobs
+    assert!(rep.ranked[0].hidden >= 4, "{:?}", rep.ranked);
+}
+
+#[test]
+fn sequential_strategy_produces_same_ranking_losses() {
+    let base = ExperimentConfig {
+        dataset: SynthKind::TeacherMlp,
+        samples: 120,
+        features: 5,
+        out: 2,
+        teacher_hidden: 4,
+        hidden_sizes: vec![2, 4],
+        acts: vec![Act::Tanh],
+        epochs: 6,
+        warmup_epochs: 1,
+        batch: 20,
+        lr: 0.05,
+        loss: Loss::Mse,
+        threads: 2,
+        seed: 11,
+        ..Default::default()
+    };
+    let par = run_experiment(&base).unwrap();
+    let seq = run_experiment(&ExperimentConfig {
+        strategy: Strategy::NativeSequential,
+        ..base
+    })
+    .unwrap();
+    let vp = par.outcome.val_losses.unwrap();
+    let vs = seq.outcome.val_losses.unwrap();
+    for (a, b) in vp.iter().zip(&vs) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+    // and the ranking order matches
+    let op: Vec<usize> = par.ranked.iter().map(|r| r.index).collect();
+    let os: Vec<usize> = seq.ranked.iter().map(|r| r.index).collect();
+    assert_eq!(op, os);
+}
+
+#[test]
+fn paper_full_pool_layout_scales() {
+    // the 10,000-model pool compiles a layout quickly and passes checks
+    let spec = PoolSpec::paper_full();
+    let lay = parallel_mlps::pool::PoolLayout::build(&spec);
+    assert_eq!(lay.n_models(), 10_000);
+    assert!(lay.padding_efficiency() > 0.5, "{}", lay.padding_efficiency());
+    // §5 memory note: fused params at F=100 fit easily in host RAM
+    assert!(lay.fused_param_bytes(100, 2) < 1 << 30);
+}

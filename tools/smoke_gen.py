@@ -1,0 +1,36 @@
+"""Toolchain smoke: lower a 2-output jax fn (incl. a pallas piece) to HLO text
+with return_tuple=False, to verify PJRT untuples into multiple output buffers."""
+import sys
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+from jax.experimental import pallas as pl
+
+
+def kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] @ y_ref[...] + 2.0
+
+
+def fn(x, y):
+    a = pl.pallas_call(
+        kernel, out_shape=jax.ShapeDtypeStruct((2, 2), jnp.float32), interpret=True
+    )(x, y)
+    b = x + y
+    return a, b
+
+
+def main():
+    out = sys.argv[1] if len(sys.argv) > 1 else "/tmp/smoke2.hlo.txt"
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    lowered = jax.jit(fn).lower(spec, spec)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    with open(out, "w") as f:
+        f.write(comp.as_hlo_text())
+    print("wrote", out)
+
+
+if __name__ == "__main__":
+    main()
