@@ -12,7 +12,7 @@
 //! Run: cargo bench --bench ablations [-- --quick]
 
 use parallel_mlps::bench_harness::{measure, BenchArgs};
-use parallel_mlps::coordinator::{train_parallel_native, BatchSet, SweepConfig};
+use parallel_mlps::coordinator::{BatchSet, SweepConfig, TrainSession};
 use parallel_mlps::data;
 use parallel_mlps::metrics::Table;
 use parallel_mlps::nn::init::init_pool;
@@ -133,8 +133,14 @@ fn ablation_batch_locality(report: &mut String, epochs: usize) {
     for &b in &[16usize, 32, 64, 128, 256] {
         let fused = init_pool(5, &lay, f, o);
         let mut engine = ParallelEngine::new(lay.clone(), fused, Loss::Mse, f, o, b, 1);
-        let batches = BatchSet::new(&ds, b, true);
-        let oc = train_parallel_native(&mut engine, &batches, epochs + 1, 1, 0.01);
+        let batches = BatchSet::new(&ds, b, true).expect("bench batches");
+        let oc = TrainSession::builder()
+            .epochs(epochs + 1)
+            .warmup(1)
+            .lr(0.01)
+            .run_with_batches(&mut engine, &batches)
+            .expect("native fused session")
+            .outcome;
         let s = oc.avg_timed_epoch_s();
         t.row(vec![
             b.to_string(),
@@ -161,8 +167,14 @@ fn ablation_group_width(report: &mut String, epochs: usize) {
         let lay = PoolLayout::build_with(&spec, w, g);
         let fused = init_pool(5, &lay, f, o);
         let mut engine = ParallelEngine::new(lay.clone(), fused, Loss::Mse, f, o, b, 1);
-        let batches = BatchSet::new(&ds, b, true);
-        let oc = train_parallel_native(&mut engine, &batches, epochs + 1, 1, 0.01);
+        let batches = BatchSet::new(&ds, b, true).expect("bench batches");
+        let oc = TrainSession::builder()
+            .epochs(epochs + 1)
+            .warmup(1)
+            .lr(0.01)
+            .run_with_batches(&mut engine, &batches)
+            .expect("native fused session")
+            .outcome;
         t.row(vec![
             w.to_string(),
             g.to_string(),
@@ -190,8 +202,14 @@ fn ablation_threads(report: &mut String, epochs: usize) {
     for &threads in &[1usize, 2, 4, 8] {
         let fused = init_pool(5, &lay, f, o);
         let mut engine = ParallelEngine::new(lay.clone(), fused, Loss::Mse, f, o, b, threads);
-        let batches = BatchSet::new(&ds, b, true);
-        let oc = train_parallel_native(&mut engine, &batches, epochs + 1, 1, 0.01);
+        let batches = BatchSet::new(&ds, b, true).expect("bench batches");
+        let oc = TrainSession::builder()
+            .epochs(epochs + 1)
+            .warmup(1)
+            .lr(0.01)
+            .run_with_batches(&mut engine, &batches)
+            .expect("native fused session")
+            .outcome;
         t.row(vec![threads.to_string(), format!("{:.4}", oc.avg_timed_epoch_s())]);
     }
     report.push_str(&t.to_markdown());

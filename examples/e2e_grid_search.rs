@@ -19,7 +19,7 @@
 
 
 use parallel_mlps::bench_harness::artifacts_dir;
-use parallel_mlps::coordinator::{train_parallel_pjrt, BatchSet};
+use parallel_mlps::coordinator::{BatchSet, TrainSession};
 use parallel_mlps::data;
 use parallel_mlps::metrics::{Curve, Timer};
 use parallel_mlps::nn::init::{extract_model, init_pool};
@@ -71,9 +71,14 @@ fn main() -> anyhow::Result<()> {
     // 2. fused training of all 120 models through the PJRT artifact
     let fused0 = init_pool(SEED, &layout, F, O);
     let mut engine = PjrtParallelEngine::new(&rt, "e2e", F, B, Loss::Ce, &fused0)?;
-    let batches = BatchSet::new(&split.train, B, true);
+    let batches = BatchSet::new(&split.train, B, true)?;
     let t_train = Timer::new();
-    let outcome = train_parallel_pjrt(&mut engine, &batches, EPOCHS, WARMUP, LR)?;
+    let outcome = TrainSession::builder()
+        .epochs(EPOCHS)
+        .warmup(WARMUP)
+        .lr(LR)
+        .run_with_batches(&mut engine, &batches)?
+        .outcome;
     let train_s = t_train.elapsed_s();
     println!(
         "\ntrained {} models x {EPOCHS} epochs in {train_s:.2}s \
@@ -104,6 +109,8 @@ fn main() -> anyhow::Result<()> {
     let best = ranked[0].clone();
 
     // 4. cross-check: retrain the winner sequentially from the same init
+    // (a single MlpTrainer is itself a one-model PoolEngine, so the same
+    // TrainSession loop drives the classical baseline)
     let t_seq = Timer::new();
     let mut seq = MlpTrainer::new(
         extract_model(&fused0, &layout, best.index),
@@ -112,11 +119,10 @@ fn main() -> anyhow::Result<()> {
         OptimizerKind::Sgd,
         1,
     );
-    for _ in 0..EPOCHS {
-        for (x, y) in &batches.batches {
-            seq.step(x, y, LR);
-        }
-    }
+    TrainSession::builder()
+        .epochs(EPOCHS)
+        .lr(LR)
+        .run_with_batches(&mut seq, &batches)?;
     let seq_s = t_seq.elapsed_s();
     let fused_best = extract_model(&engine.params_fused()?, &layout, best.index);
     let diff = fused_best.max_abs_diff(&seq.params);

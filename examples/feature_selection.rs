@@ -8,7 +8,7 @@
 //!
 //!     cargo run --release --example feature_selection
 
-use parallel_mlps::coordinator::{eval_in_batches_native, train_parallel_native, BatchSet};
+use parallel_mlps::coordinator::{eval_in_batches_native, TrainSession};
 use parallel_mlps::data;
 use parallel_mlps::metrics::Table;
 use parallel_mlps::nn::act::Act;
@@ -51,8 +51,14 @@ fn main() -> anyhow::Result<()> {
     let mut engine = ParallelEngine::new(layout, fused, Loss::Mse, F, 1, 50, 2);
     engine.set_feature_masks(&subsets.iter().map(|(_, m)| m.clone()).collect::<Vec<_>>());
 
-    let batches = BatchSet::new(&split.train, 50, true);
-    let oc = train_parallel_native(&mut engine, &batches, EPOCHS, 2, 0.02);
+    let oc = TrainSession::builder()
+        .train_data(&split.train)
+        .batches(50, true)
+        .epochs(EPOCHS)
+        .warmup(2)
+        .lr(0.02)
+        .run(&mut engine)?
+        .outcome;
     println!(
         "trained {} epochs in {:.1}s (avg {:.3}s)\n",
         EPOCHS,

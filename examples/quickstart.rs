@@ -1,18 +1,24 @@
 //! Quickstart: train a small heterogeneous pool of MLPs *in parallel* on
-//! a synthetic classification task and print the best architectures.
+//! a synthetic classification task and print the best architectures —
+//! the 30-second tour of the unified `PoolEngine` + `TrainSession` API.
 //!
 //!     cargo run --release --example quickstart
 //!
-//! This uses the native fused engine (no artifacts required) — the
-//! 30-second tour of the library. See `e2e_grid_search` for the full
-//! AOT/PJRT pipeline.
+//! This uses the native fused engine (no artifacts required). See
+//! `e2e_grid_search` for the full AOT/PJRT pipeline, and swap
+//! `ParallelEngine` for `DeepEngine`/`SequentialEngine` to change the
+//! execution strategy without touching the loop.
 
 use parallel_mlps::config::ExperimentConfig;
-use parallel_mlps::coordinator::run_experiment;
+use parallel_mlps::coordinator::{prepare_split, EarlyStop, ProgressLog, TrainSession};
 use parallel_mlps::data::SynthKind;
 use parallel_mlps::nn::act::{Act, ALL_ACTS};
+use parallel_mlps::nn::init::init_pool;
 use parallel_mlps::nn::loss::Loss;
-use parallel_mlps::selection::report;
+use parallel_mlps::nn::parallel::ParallelEngine;
+use parallel_mlps::pool::PoolLayout;
+use parallel_mlps::selection::{rank_models, report};
+use parallel_mlps::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     // a pool of 10 hidden sizes x 10 activations = 100 MLPs, trained at once
@@ -25,30 +31,54 @@ fn main() -> anyhow::Result<()> {
         hidden_sizes: (1..=10).collect(),
         acts: ALL_ACTS.to_vec(),
         repeats: 1,
-        epochs: 40,
-        warmup_epochs: 2,
-        batch: 32,
-        lr: 0.25,
         loss: Loss::Ce,
         seed: 7,
         ..Default::default()
     };
+    let spec = cfg.pool_spec()?;
     println!(
         "Training {} MLPs (h=1..10 x {} activations) on {} in parallel...",
-        cfg.pool_spec()?.n_models(),
+        spec.n_models(),
         cfg.acts.len(),
         cfg.dataset.name()
     );
-    let rep = run_experiment(&cfg)?;
+
+    // 1. data -> split, 2. fused pool init, 3. one engine + one session
+    let mut rng = Rng::new(cfg.seed);
+    let split = prepare_split(&cfg, &mut rng);
+    let layout = PoolLayout::build(&spec);
+    let fused = init_pool(cfg.seed, &layout, cfg.features, cfg.out);
+    let mut engine =
+        ParallelEngine::new(layout, fused, cfg.loss, cfg.features, cfg.out, 32, cfg.effective_threads());
+
+    let rep = TrainSession::builder()
+        .split(&split)
+        .batches(32, false)
+        .epochs(40)
+        .warmup(2)
+        .lr(0.25)
+        .eval_every(1) // untimed validation pass per epoch
+        .observer(Box::new(EarlyStop::new(6)))
+        .observer(Box::new(ProgressLog))
+        .run(&mut engine)?;
     println!(
-        "done: {} epochs, avg epoch {:.3}s, total {:.2}s\n",
+        "done: {} epochs{}, avg epoch {:.3}s, total {:.2}s\n",
         rep.outcome.epoch_times.len(),
+        if rep.stopped_early { " (early-stopped)" } else { "" },
         rep.outcome.avg_timed_epoch_s(),
         rep.outcome.total_s()
     );
-    println!("{}", report(&rep.ranked, cfg.loss, 10));
 
-    let best = &rep.ranked[0];
+    // 4. rank every model by validation metric
+    let ranked = rank_models(
+        &spec,
+        rep.outcome.val_losses.as_ref().expect("val split present"),
+        rep.outcome.val_metrics.as_ref().expect("val split present"),
+        cfg.loss,
+    );
+    println!("{}", report(&ranked, cfg.loss, 10));
+
+    let best = &ranked[0];
     println!(
         "winner: {}-{}-{} with {} (val acc {:.1}%)",
         cfg.features,
@@ -58,7 +88,7 @@ fn main() -> anyhow::Result<()> {
         best.val_metric * 100.0
     );
     // the spiral task is non-linear: identity-activation models can't win
-    assert!(
+    anyhow::ensure!(
         best.act != Act::Identity,
         "a linear model should not win on spirals"
     );

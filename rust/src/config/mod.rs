@@ -10,14 +10,26 @@ use crate::nn::loss::Loss;
 use crate::nn::optimizer::OptimizerKind;
 use crate::pool::PoolSpec;
 
-/// Which of the 2×2 engine/strategy cells to run.
+/// Which engine/strategy cell to run: the paper's 2×2 grid plus the
+/// deep (two-hidden-layer) fused native pool — five strategies, all
+/// behind the same `PoolEngine` trait.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Strategy {
     NativeParallel,
     NativeSequential,
     PjrtParallel,
     PjrtSequential,
+    DeepNative,
 }
+
+/// All strategies, for CLI help and sweeps.
+pub const ALL_STRATEGIES: [Strategy; 5] = [
+    Strategy::NativeParallel,
+    Strategy::NativeSequential,
+    Strategy::PjrtParallel,
+    Strategy::PjrtSequential,
+    Strategy::DeepNative,
+];
 
 impl Strategy {
     pub fn from_name(name: &str) -> Option<Strategy> {
@@ -26,6 +38,7 @@ impl Strategy {
             "native_sequential" => Strategy::NativeSequential,
             "pjrt_parallel" => Strategy::PjrtParallel,
             "pjrt_sequential" => Strategy::PjrtSequential,
+            "deep_native" => Strategy::DeepNative,
             _ => return None,
         })
     }
@@ -36,15 +49,28 @@ impl Strategy {
             Strategy::NativeSequential => "native_sequential",
             Strategy::PjrtParallel => "pjrt_parallel",
             Strategy::PjrtSequential => "pjrt_sequential",
+            Strategy::DeepNative => "deep_native",
         }
     }
 
+    /// Fused strategies: one step trains every model.
     pub fn is_parallel(self) -> bool {
-        matches!(self, Strategy::NativeParallel | Strategy::PjrtParallel)
+        matches!(
+            self,
+            Strategy::NativeParallel | Strategy::PjrtParallel | Strategy::DeepNative
+        )
     }
 
+    /// Strategies that run without PJRT artifacts.
     pub fn is_native(self) -> bool {
-        matches!(self, Strategy::NativeParallel | Strategy::NativeSequential)
+        matches!(
+            self,
+            Strategy::NativeParallel | Strategy::NativeSequential | Strategy::DeepNative
+        )
+    }
+
+    pub fn is_deep(self) -> bool {
+        matches!(self, Strategy::DeepNative)
     }
 }
 
@@ -62,6 +88,9 @@ pub struct ExperimentConfig {
     pub teacher_hidden: usize,
     // pool
     pub hidden_sizes: Vec<u32>,
+    /// second hidden layer per grid entry (deep_native only); must match
+    /// `hidden_sizes` in length. Defaults to `hidden_sizes` (h2 = h1).
+    pub hidden2_sizes: Option<Vec<u32>>,
     pub acts: Vec<Act>,
     pub repeats: usize,
     // training
@@ -72,6 +101,10 @@ pub struct ExperimentConfig {
     pub warmup_epochs: usize,
     pub batch: usize,
     pub lr: f32,
+    /// early-stop patience in epochs (None = train to `epochs`)
+    pub early_stop: Option<usize>,
+    /// log one line per epoch to stderr (the `ProgressLog` observer)
+    pub progress: bool,
     pub threads: usize,
     pub shuffle: bool,
     pub train_frac: f64,
@@ -90,6 +123,7 @@ impl Default for ExperimentConfig {
             noise: 0.1,
             teacher_hidden: 8,
             hidden_sizes: (1..=10).collect(),
+            hidden2_sizes: None,
             acts: ALL_ACTS.to_vec(),
             repeats: 1,
             strategy: Strategy::NativeParallel,
@@ -99,6 +133,8 @@ impl Default for ExperimentConfig {
             warmup_epochs: 2,
             batch: 32,
             lr: 0.05,
+            early_stop: None,
+            progress: false,
             threads: 0, // 0 = auto
             shuffle: false,
             train_frac: 0.7,
@@ -110,6 +146,31 @@ impl Default for ExperimentConfig {
 impl ExperimentConfig {
     pub fn pool_spec(&self) -> anyhow::Result<PoolSpec> {
         PoolSpec::from_grid(&self.hidden_sizes, &self.acts, self.repeats)
+    }
+
+    /// The deep (two-hidden-layer) pool for `deep_native`: the same
+    /// act-major grid enumeration as `pool_spec`, with h2 paired to h1
+    /// positionally (`hidden2_sizes`, default h2 = h1).
+    pub fn deep_models(&self) -> anyhow::Result<Vec<crate::nn::deep::DeepModel>> {
+        let h2s = self.hidden2_sizes.as_ref().unwrap_or(&self.hidden_sizes);
+        anyhow::ensure!(
+            h2s.len() == self.hidden_sizes.len(),
+            "hidden2_sizes has {} entries but hidden_sizes has {}",
+            h2s.len(),
+            self.hidden_sizes.len()
+        );
+        anyhow::ensure!(!self.hidden_sizes.is_empty(), "hidden_sizes empty");
+        anyhow::ensure!(!self.acts.is_empty(), "acts empty");
+        let mut models = Vec::new();
+        for &a in &self.acts {
+            for (&h1, &h2) in self.hidden_sizes.iter().zip(h2s) {
+                anyhow::ensure!(h1 >= 1 && h2 >= 1, "hidden sizes must be >= 1");
+                for _ in 0..self.repeats.max(1) {
+                    models.push(crate::nn::deep::DeepModel { h1, h2, act: a });
+                }
+            }
+        }
+        Ok(models)
     }
 
     pub fn effective_threads(&self) -> usize {
@@ -158,6 +219,10 @@ impl ExperimentConfig {
         set!("warmup_epochs", cfg.warmup_epochs, |v: &TomlValue| v.as_int().map(|i| i as usize));
         set!("batch", cfg.batch, |v: &TomlValue| v.as_int().map(|i| i as usize));
         set!("lr", cfg.lr, |v: &TomlValue| v.as_float().map(|f| f as f32));
+        // early_stop = 0 disables; N >= 1 is the patience
+        set!("early_stop", cfg.early_stop, |v: &TomlValue| v
+            .as_int()
+            .map(|i| if i <= 0 { None } else { Some(i as usize) }));
         set!("threads", cfg.threads, |v: &TomlValue| v.as_int().map(|i| i as usize));
         set!("shuffle", cfg.shuffle, |v: &TomlValue| v.as_bool());
         set!("train_frac", cfg.train_frac, |v: &TomlValue| v.as_float());
@@ -169,6 +234,15 @@ impl ExperimentConfig {
                 .into_iter()
                 .map(|i| i as u32)
                 .collect();
+        }
+        if let Some(v) = t.get("hidden2_sizes") {
+            cfg.hidden2_sizes = Some(
+                v.as_int_array()
+                    .ok_or_else(|| anyhow::anyhow!("hidden2_sizes must be an int array"))?
+                    .into_iter()
+                    .map(|i| i as u32)
+                    .collect(),
+            );
         }
         if let Some(v) = t.get("acts") {
             let names =
@@ -244,16 +318,58 @@ shuffle = true
 
     #[test]
     fn strategy_names() {
-        for s in [
-            Strategy::NativeParallel,
-            Strategy::NativeSequential,
-            Strategy::PjrtParallel,
-            Strategy::PjrtSequential,
-        ] {
+        for s in ALL_STRATEGIES {
             assert_eq!(Strategy::from_name(s.name()), Some(s));
         }
         assert!(Strategy::NativeParallel.is_parallel());
         assert!(!Strategy::PjrtSequential.is_parallel());
         assert!(Strategy::NativeSequential.is_native());
+        assert!(Strategy::DeepNative.is_native());
+        assert!(Strategy::DeepNative.is_deep());
+        assert!(!Strategy::PjrtParallel.is_native());
+    }
+
+    #[test]
+    fn deep_models_grid() {
+        let cfg = ExperimentConfig {
+            hidden_sizes: vec![2, 4],
+            hidden2_sizes: Some(vec![3, 5]),
+            acts: vec![Act::Relu, Act::Tanh],
+            repeats: 1,
+            ..Default::default()
+        };
+        let models = cfg.deep_models().unwrap();
+        assert_eq!(models.len(), 4);
+        assert_eq!((models[0].h1, models[0].h2), (2, 3));
+        assert_eq!((models[1].h1, models[1].h2), (4, 5));
+        assert_eq!(models[2].act, Act::Tanh);
+        // default: h2 = h1
+        let cfg2 = ExperimentConfig {
+            hidden_sizes: vec![3],
+            acts: vec![Act::Relu],
+            ..Default::default()
+        };
+        let m2 = cfg2.deep_models().unwrap();
+        assert_eq!((m2[0].h1, m2[0].h2), (3, 3));
+        // mismatched lengths rejected
+        let bad = ExperimentConfig {
+            hidden_sizes: vec![1, 2],
+            hidden2_sizes: Some(vec![1]),
+            ..Default::default()
+        };
+        assert!(bad.deep_models().is_err());
+    }
+
+    #[test]
+    fn parse_early_stop_and_hidden2() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[experiment]\nearly_stop = 5\nhidden_sizes = [2, 3]\nhidden2_sizes = [4, 6]\nstrategy = \"deep_native\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.early_stop, Some(5));
+        assert_eq!(cfg.hidden2_sizes, Some(vec![4, 6]));
+        assert_eq!(cfg.strategy, Strategy::DeepNative);
+        let off = ExperimentConfig::from_toml_str("[experiment]\nearly_stop = 0\n").unwrap();
+        assert_eq!(off.early_stop, None);
     }
 }

@@ -1,0 +1,599 @@
+//! The unified engine abstraction.
+//!
+//! Every execution strategy — native fused, native sequential, PJRT
+//! fused, PJRT sequential, and the deep (two-hidden-layer) fused pool —
+//! sits behind one [`PoolEngine`] trait, so the coordinator owns exactly
+//! ONE epoch/batch loop (`TrainSession` in `trainer.rs`) instead of one
+//! per strategy.
+//!
+//! The design wrinkle is the paper's *sequential* baseline: it trains
+//! models outer, epochs inner ("one model at a time"), while the fused
+//! engines train the whole pool per step. The trait models this with
+//! **units**: an engine exposes `n_units()` independently-trained units
+//! (1 for fused engines, `n_models()` for sequential ones), and the
+//! generic loop runs `units × epochs × batches`. With one unit it
+//! degenerates to the classic fused loop; with `n_models` units it is
+//! exactly the paper's sequential discipline, per-(model, epoch) times
+//! summed into pool-epoch times so both report the same §4.3 unit.
+
+use crate::coordinator::trainer::BatchSet;
+use crate::nn::act::Act;
+use crate::nn::deep::{DeepParams, DeepPool, DeepRef};
+use crate::nn::init::{extract_model, FusedParams, ModelParams};
+use crate::nn::loss::{self, Loss};
+use crate::nn::mlp::MlpTrainer;
+use crate::nn::optimizer::OptimizerKind;
+use crate::nn::parallel::ParallelEngine;
+use crate::pool::{PoolLayout, PoolSpec};
+use crate::runtime::{PjrtParallelEngine, PjrtSequentialEngine};
+use crate::tensor::Tensor;
+
+/// What one optimization step reports back to the loop.
+#[derive(Clone, Debug)]
+pub struct StepStats {
+    /// Batch losses for the models this unit trains: every model (in
+    /// original pool order) for fused engines, exactly one for
+    /// sequential engines.
+    pub losses: Vec<f32>,
+}
+
+/// Batch-shape constraints an engine imposes on the session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchShape {
+    /// Any batch size (native sequential, deep).
+    Any,
+    /// Up to this many rows per batch (native fused scratch capacity).
+    Max(usize),
+    /// Exactly this many rows per batch (PJRT artifacts bake the shape).
+    Exact(usize),
+}
+
+/// Parameters extracted for one model, engine-agnostic.
+#[derive(Clone, Debug)]
+pub enum ExtractedModel {
+    /// One-hidden-layer MLP (the paper's Fig. 1 shape).
+    Shallow(ModelParams),
+    /// Two-hidden-layer MLP (the Fig. 3 deep extension), carried as the
+    /// dense reference type so callers can evaluate/train it directly.
+    Deep(DeepRef),
+}
+
+impl ExtractedModel {
+    /// The shallow params, when this is a shallow model.
+    pub fn shallow(self) -> Option<ModelParams> {
+        match self {
+            ExtractedModel::Shallow(p) => Some(p),
+            ExtractedModel::Deep(_) => None,
+        }
+    }
+
+    /// The dense deep reference, when this is a deep model.
+    pub fn deep(self) -> Option<DeepRef> {
+        match self {
+            ExtractedModel::Shallow(_) => None,
+            ExtractedModel::Deep(r) => Some(r),
+        }
+    }
+}
+
+/// A pool-training execution strategy. Object-safe: the coordinator
+/// drives `Box<dyn PoolEngine>` through one generic loop.
+pub trait PoolEngine {
+    /// Strategy name (matches `config::Strategy` names where one exists).
+    fn name(&self) -> &'static str;
+
+    /// Number of models in the pool (original order everywhere).
+    fn n_models(&self) -> usize;
+
+    /// Independently-trained units: 1 = one step trains every model
+    /// (fused); `n_models()` = one model at a time (sequential).
+    fn n_units(&self) -> usize {
+        1
+    }
+
+    /// Shape constraint batches must satisfy.
+    fn batch_shape(&self) -> BatchShape {
+        BatchShape::Any
+    }
+
+    /// Stage batches engine-side before the timed loop starts (the
+    /// paper's "data device-resident before the clock" discipline; PJRT
+    /// engines pre-build literals here). Called once per session.
+    fn prepare(&mut self, _batches: &BatchSet) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// One optimization step for `unit` on batch `batch_idx` (which is
+    /// `(x, y)` of the prepared [`BatchSet`]; engines with a staged copy
+    /// may use the index instead of the tensors).
+    fn step(
+        &mut self,
+        unit: usize,
+        batch_idx: usize,
+        x: &Tensor,
+        y: &Tensor,
+        lr: f32,
+    ) -> anyhow::Result<StepStats>;
+
+    /// (losses, metrics) on one batch for the models of `unit`, same
+    /// ordering convention as [`StepStats::losses`]. Must not mutate
+    /// parameters.
+    fn eval(&mut self, unit: usize, x: &Tensor, y: &Tensor) -> anyhow::Result<(Vec<f32>, Vec<f32>)>;
+
+    /// Dense parameters of model `m` (original index).
+    fn extract(&self, m: usize) -> anyhow::Result<ExtractedModel>;
+}
+
+// ---------------------------------------------------------------------------
+// Native fused (the paper's Parallel strategy on CPU)
+// ---------------------------------------------------------------------------
+
+impl PoolEngine for ParallelEngine {
+    fn name(&self) -> &'static str {
+        "native_parallel"
+    }
+
+    fn n_models(&self) -> usize {
+        self.layout.n_models()
+    }
+
+    fn batch_shape(&self) -> BatchShape {
+        BatchShape::Max(self.batch_cap())
+    }
+
+    fn step(
+        &mut self,
+        _unit: usize,
+        _batch_idx: usize,
+        x: &Tensor,
+        y: &Tensor,
+        lr: f32,
+    ) -> anyhow::Result<StepStats> {
+        Ok(StepStats { losses: ParallelEngine::step(self, x, y, lr) })
+    }
+
+    fn eval(&mut self, _unit: usize, x: &Tensor, y: &Tensor) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        Ok(ParallelEngine::evaluate(self, x, y))
+    }
+
+    fn extract(&self, m: usize) -> anyhow::Result<ExtractedModel> {
+        Ok(ExtractedModel::Shallow(extract_model(&self.params_fused(), &self.layout, m)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native sequential (one model at a time)
+// ---------------------------------------------------------------------------
+
+/// A single dense trainer is a one-model pool.
+impl PoolEngine for MlpTrainer {
+    fn name(&self) -> &'static str {
+        "native_sequential"
+    }
+
+    fn n_models(&self) -> usize {
+        1
+    }
+
+    fn step(
+        &mut self,
+        _unit: usize,
+        _batch_idx: usize,
+        x: &Tensor,
+        y: &Tensor,
+        lr: f32,
+    ) -> anyhow::Result<StepStats> {
+        Ok(StepStats { losses: vec![MlpTrainer::step(self, x, y, lr)] })
+    }
+
+    fn eval(&mut self, _unit: usize, x: &Tensor, y: &Tensor) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let (l, m) = MlpTrainer::evaluate(self, x, y);
+        Ok((vec![l], vec![m]))
+    }
+
+    fn extract(&self, _m: usize) -> anyhow::Result<ExtractedModel> {
+        Ok(ExtractedModel::Shallow(self.params.clone()))
+    }
+}
+
+/// A slice of per-model trainers is the paper's Sequential strategy:
+/// unit `u` trains exactly model `u`.
+impl PoolEngine for [MlpTrainer] {
+    fn name(&self) -> &'static str {
+        "native_sequential"
+    }
+
+    fn n_models(&self) -> usize {
+        self.len()
+    }
+
+    fn n_units(&self) -> usize {
+        self.len()
+    }
+
+    fn step(
+        &mut self,
+        unit: usize,
+        _batch_idx: usize,
+        x: &Tensor,
+        y: &Tensor,
+        lr: f32,
+    ) -> anyhow::Result<StepStats> {
+        Ok(StepStats { losses: vec![self[unit].step(x, y, lr)] })
+    }
+
+    fn eval(&mut self, unit: usize, x: &Tensor, y: &Tensor) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let (l, m) = self[unit].evaluate(x, y);
+        Ok((vec![l], vec![m]))
+    }
+
+    fn extract(&self, m: usize) -> anyhow::Result<ExtractedModel> {
+        Ok(ExtractedModel::Shallow(self[m].params.clone()))
+    }
+}
+
+/// Owned native-sequential strategy, buildable straight from a pool
+/// (every trainer starts from the shared fused init, so sequential and
+/// fused runs are bit-comparable).
+pub struct SequentialEngine {
+    pub trainers: Vec<MlpTrainer>,
+}
+
+impl SequentialEngine {
+    pub fn from_pool(
+        spec: &PoolSpec,
+        layout: &PoolLayout,
+        fused: &FusedParams,
+        loss: Loss,
+        optimizer: OptimizerKind,
+    ) -> SequentialEngine {
+        let trainers = (0..spec.n_models())
+            .map(|m| {
+                MlpTrainer::new(
+                    extract_model(fused, layout, m),
+                    spec.models()[m].1,
+                    loss,
+                    optimizer,
+                    1, // one model at a time: single-threaded small matmuls
+                )
+            })
+            .collect();
+        SequentialEngine { trainers }
+    }
+}
+
+impl PoolEngine for SequentialEngine {
+    fn name(&self) -> &'static str {
+        "native_sequential"
+    }
+
+    fn n_models(&self) -> usize {
+        self.trainers.len()
+    }
+
+    fn n_units(&self) -> usize {
+        self.trainers.len()
+    }
+
+    fn step(
+        &mut self,
+        unit: usize,
+        batch_idx: usize,
+        x: &Tensor,
+        y: &Tensor,
+        lr: f32,
+    ) -> anyhow::Result<StepStats> {
+        self.trainers.as_mut_slice().step(unit, batch_idx, x, y, lr)
+    }
+
+    fn eval(&mut self, unit: usize, x: &Tensor, y: &Tensor) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        self.trainers.as_mut_slice().eval(unit, x, y)
+    }
+
+    fn extract(&self, m: usize) -> anyhow::Result<ExtractedModel> {
+        self.trainers.as_slice().extract(m)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT fused / sequential (artifact execution)
+// ---------------------------------------------------------------------------
+
+impl PoolEngine for PjrtParallelEngine {
+    fn name(&self) -> &'static str {
+        "pjrt_parallel"
+    }
+
+    fn n_models(&self) -> usize {
+        self.layout.n_models()
+    }
+
+    fn batch_shape(&self) -> BatchShape {
+        BatchShape::Exact(self.batch)
+    }
+
+    fn prepare(&mut self, batches: &BatchSet) -> anyhow::Result<()> {
+        self.prepare_batches(&batches.batches)
+    }
+
+    fn step(
+        &mut self,
+        _unit: usize,
+        batch_idx: usize,
+        x: &Tensor,
+        y: &Tensor,
+        lr: f32,
+    ) -> anyhow::Result<StepStats> {
+        let losses = if self.has_prepared(batch_idx) {
+            self.step_prepared(batch_idx, lr)?
+        } else {
+            PjrtParallelEngine::step(self, x, y, lr)?
+        };
+        Ok(StepStats { losses })
+    }
+
+    fn eval(&mut self, _unit: usize, x: &Tensor, y: &Tensor) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        PjrtParallelEngine::evaluate(self, x, y)
+    }
+
+    fn extract(&self, m: usize) -> anyhow::Result<ExtractedModel> {
+        Ok(ExtractedModel::Shallow(PjrtParallelEngine::extract(self, m)?))
+    }
+}
+
+impl PoolEngine for PjrtSequentialEngine {
+    fn name(&self) -> &'static str {
+        "pjrt_sequential"
+    }
+
+    fn n_models(&self) -> usize {
+        PjrtSequentialEngine::n_models(self)
+    }
+
+    fn n_units(&self) -> usize {
+        PjrtSequentialEngine::n_models(self)
+    }
+
+    fn batch_shape(&self) -> BatchShape {
+        BatchShape::Exact(self.batch)
+    }
+
+    fn prepare(&mut self, batches: &BatchSet) -> anyhow::Result<()> {
+        self.prepare_batches(&batches.batches)
+    }
+
+    fn step(
+        &mut self,
+        unit: usize,
+        batch_idx: usize,
+        x: &Tensor,
+        y: &Tensor,
+        lr: f32,
+    ) -> anyhow::Result<StepStats> {
+        let loss = if self.has_prepared(batch_idx) {
+            self.step_model_prepared(unit, batch_idx, lr)?
+        } else {
+            let xl = crate::runtime::literal_of(x)?;
+            let yl = crate::runtime::literal_of(y)?;
+            self.step_model(unit, &xl, &yl, lr)?
+        };
+        Ok(StepStats { losses: vec![loss] })
+    }
+
+    /// PJRT sequential has no eval artifact: extract the model and
+    /// evaluate natively. This re-extracts per call (so per evaluation
+    /// chunk) — acceptable because eval is never on the timed path; cache
+    /// extraction here if validation ever becomes hot.
+    fn eval(&mut self, unit: usize, x: &Tensor, y: &Tensor) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let (params, act) = self.extract_with_act(unit)?;
+        let trainer = MlpTrainer::new(params, act, self.loss, OptimizerKind::Sgd, 1);
+        let (l, m) = trainer.evaluate(x, y);
+        Ok((vec![l], vec![m]))
+    }
+
+    fn extract(&self, m: usize) -> anyhow::Result<ExtractedModel> {
+        Ok(ExtractedModel::Shallow(self.extract_with_act(m)?.0))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deep native (Fig. 3 / §7): the fifth strategy, first-class at last
+// ---------------------------------------------------------------------------
+
+/// The fused two-hidden-layer pool as a [`PoolEngine`]: owns its
+/// parameters (unlike [`DeepPool`], which is a pure function of them).
+pub struct DeepEngine {
+    pool: DeepPool,
+    params: DeepParams,
+    loss: Loss,
+}
+
+impl DeepEngine {
+    pub fn new(pool: DeepPool, seed: u64, loss: Loss) -> DeepEngine {
+        let params = pool.init(seed);
+        DeepEngine { pool, params, loss }
+    }
+
+    pub fn from_params(pool: DeepPool, params: DeepParams, loss: Loss) -> DeepEngine {
+        DeepEngine { pool, params, loss }
+    }
+
+    pub fn pool(&self) -> &DeepPool {
+        &self.pool
+    }
+
+    pub fn params(&self) -> &DeepParams {
+        &self.params
+    }
+}
+
+impl PoolEngine for DeepEngine {
+    fn name(&self) -> &'static str {
+        "deep_native"
+    }
+
+    fn n_models(&self) -> usize {
+        self.pool.n_models()
+    }
+
+    fn step(
+        &mut self,
+        _unit: usize,
+        _batch_idx: usize,
+        x: &Tensor,
+        y: &Tensor,
+        lr: f32,
+    ) -> anyhow::Result<StepStats> {
+        Ok(StepStats { losses: self.pool.step(&mut self.params, x, y, self.loss, lr) })
+    }
+
+    fn eval(&mut self, _unit: usize, x: &Tensor, y: &Tensor) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let logits = self.pool.forward(&self.params, x);
+        let mut losses = Vec::with_capacity(self.pool.n_models());
+        let mut metrics = Vec::with_capacity(self.pool.n_models());
+        for m in 0..self.pool.n_models() {
+            let single = self.pool.model_logits(&logits, m);
+            let lv = loss::mlp_loss(self.loss, &single, y);
+            let metric = match self.loss {
+                Loss::Ce => loss::mlp_accuracy(&single, y),
+                Loss::Mse => lv,
+            };
+            losses.push(lv);
+            metrics.push(metric);
+        }
+        Ok((losses, metrics))
+    }
+
+    fn extract(&self, m: usize) -> anyhow::Result<ExtractedModel> {
+        anyhow::ensure!(m < self.pool.n_models(), "model index {m} out of range");
+        let (w1, b1, w2, b2, w3, b3) = self.pool.extract(&self.params, m);
+        let act = self.pool.models[m].act;
+        Ok(ExtractedModel::Deep(DeepRef { w1, b1, w2, b2, w3, b3, act }))
+    }
+}
+
+/// Per-model deep specs (h1, act) as a [`PoolSpec`] so the standard
+/// ranking/report pipeline works on deep pools (hidden = h1).
+pub fn deep_ranking_spec(pool: &DeepPool) -> anyhow::Result<PoolSpec> {
+    let models: Vec<(u32, Act)> = pool.models.iter().map(|m| (m.h1, m.act)).collect();
+    PoolSpec::new(models)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::nn::deep::DeepModel;
+    use crate::nn::init::init_pool;
+    use crate::util::rng::Rng;
+
+    fn tiny_layout() -> (PoolSpec, PoolLayout) {
+        let spec = PoolSpec::new(vec![(2, Act::Relu), (3, Act::Tanh)]).unwrap();
+        let layout = PoolLayout::build(&spec);
+        (spec, layout)
+    }
+
+    #[test]
+    fn trait_units_and_names() {
+        let (spec, layout) = tiny_layout();
+        let fused = init_pool(1, &layout, 4, 2);
+        let par = ParallelEngine::new(layout.clone(), fused.clone(), Loss::Mse, 4, 2, 8, 1);
+        assert_eq!(PoolEngine::name(&par), "native_parallel");
+        assert_eq!(PoolEngine::n_models(&par), 2);
+        assert_eq!(par.n_units(), 1);
+        assert_eq!(par.batch_shape(), BatchShape::Max(8));
+
+        let seq =
+            SequentialEngine::from_pool(&spec, &layout, &fused, Loss::Mse, OptimizerKind::Sgd);
+        assert_eq!(PoolEngine::name(&seq), "native_sequential");
+        assert_eq!(seq.n_units(), 2);
+        assert_eq!(seq.batch_shape(), BatchShape::Any);
+    }
+
+    #[test]
+    fn fused_and_sequential_agree_through_the_trait() {
+        let (spec, layout) = tiny_layout();
+        let fused = init_pool(5, &layout, 4, 2);
+        let mut rng = Rng::new(9);
+        let ds = data::random_regression(16, 4, 2, &mut rng);
+        let (x, y) = ds.batch(0, 8);
+
+        let mut par: Box<dyn PoolEngine> = Box::new(ParallelEngine::new(
+            layout.clone(),
+            fused.clone(),
+            Loss::Mse,
+            4,
+            2,
+            8,
+            1,
+        ));
+        let mut seq: Box<dyn PoolEngine> = Box::new(SequentialEngine::from_pool(
+            &spec,
+            &layout,
+            &fused,
+            Loss::Mse,
+            OptimizerKind::Sgd,
+        ));
+        let lp = par.step(0, 0, &x, &y, 0.05).unwrap().losses;
+        let mut ls = Vec::new();
+        for unit in 0..seq.n_units() {
+            ls.push(seq.step(unit, 0, &x, &y, 0.05).unwrap().losses[0]);
+        }
+        for (a, b) in lp.iter().zip(&ls) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        // extracted params agree too
+        for m in 0..2 {
+            let a = par.extract(m).unwrap().shallow().unwrap();
+            let b = seq.extract(m).unwrap().shallow().unwrap();
+            assert!(a.max_abs_diff(&b) < 2e-5, "model {m}");
+        }
+    }
+
+    #[test]
+    fn deep_engine_steps_and_evals() {
+        let pool = DeepPool::new(
+            vec![
+                DeepModel { h1: 2, h2: 3, act: Act::Tanh },
+                DeepModel { h1: 1, h2: 2, act: Act::Relu },
+            ],
+            4,
+            2,
+        )
+        .unwrap();
+        let mut engine = DeepEngine::new(pool, 3, Loss::Mse);
+        assert_eq!(engine.name(), "deep_native");
+        assert_eq!(engine.n_models(), 2);
+        let mut rng = Rng::new(4);
+        let mut x = Tensor::zeros(&[8, 4]);
+        rng.fill_normal(x.data_mut(), 0.0, 1.0);
+        let mut w = Tensor::zeros(&[4, 2]);
+        rng.fill_normal(w.data_mut(), 0.0, 1.0);
+        let y = crate::tensor::matmul::nn(&x, &w, 1);
+        let s0 = engine.step(0, 0, &x, &y, 0.05).unwrap();
+        assert_eq!(s0.losses.len(), 2);
+        let (el, em) = engine.eval(0, &x, &y).unwrap();
+        assert_eq!(el.len(), 2);
+        assert_eq!(em.len(), 2);
+        assert!(el.iter().all(|l| l.is_finite()));
+        // a step must change what eval reports (params actually train)
+        for _ in 0..20 {
+            engine.step(0, 0, &x, &y, 0.05).unwrap();
+        }
+        let (el2, _) = engine.eval(0, &x, &y).unwrap();
+        assert!(el2[0] < el[0], "{} -> {}", el[0], el2[0]);
+        assert!(matches!(engine.extract(0).unwrap(), ExtractedModel::Deep(_)));
+    }
+
+    #[test]
+    fn deep_ranking_spec_mirrors_pool() {
+        let pool = DeepPool::new(
+            vec![DeepModel { h1: 5, h2: 2, act: Act::Gelu }],
+            3,
+            1,
+        )
+        .unwrap();
+        let spec = deep_ranking_spec(&pool).unwrap();
+        assert_eq!(spec.models(), &[(5, Act::Gelu)]);
+    }
+}

@@ -1,25 +1,38 @@
-//! The coordinator: experiment orchestration over the 2×2 engine grid.
+//! The coordinator: experiment orchestration over the five-strategy
+//! engine grid (native fused/sequential, PJRT fused/sequential, deep
+//! native), all behind the [`PoolEngine`] trait and one generic
+//! [`TrainSession`] loop.
 //!
-//! Owns dataset preparation, pool init, the epoch/batch loop with the
-//! paper's warm-up discipline (§4.3: first epochs excluded from timing),
-//! per-epoch timing, loss curves, and validation — everything the CLI,
-//! examples and benches share. Python is never involved.
+//! Owns dataset preparation, pool init, the single epoch/batch loop with
+//! the paper's warm-up discipline (§4.3: first epochs excluded from
+//! timing), per-epoch timing, loss curves, observers (early-stop,
+//! progress logging) and validation — everything the CLI, examples and
+//! benches share. Python is never involved.
+pub mod engine;
 mod sweep;
 mod trainer;
 
+pub use engine::{
+    deep_ranking_spec, BatchShape, DeepEngine, ExtractedModel, PoolEngine, SequentialEngine,
+    StepStats,
+};
 pub use sweep::{render_paper_table, run_table, SweepCell, SweepConfig, TableKind};
+#[allow(deprecated)]
 pub use trainer::{
     train_parallel_native, train_parallel_pjrt, train_sequential_native, train_sequential_pjrt,
-    BatchSet, TrainOutcome,
+};
+pub use trainer::{
+    eval_on_dataset, BatchSet, Control, EarlyStop, EpochCtx, Observer, ProgressLog,
+    SessionReport, TrainOutcome, TrainSession,
 };
 
 use crate::config::{ExperimentConfig, Strategy};
 use crate::data::{self, Dataset, Split};
 use crate::metrics::Timer;
-use crate::nn::init::{extract_model, init_pool};
-use crate::nn::mlp::MlpTrainer;
+use crate::nn::deep::DeepPool;
+use crate::nn::init::init_pool;
 use crate::nn::parallel::ParallelEngine;
-use crate::pool::PoolLayout;
+use crate::pool::{PoolLayout, PoolSpec};
 use crate::selection::{rank_models, RankedModel};
 use crate::util::rng::Rng;
 
@@ -32,6 +45,8 @@ pub struct ExperimentReport {
     pub n_val: usize,
     pub n_test: usize,
     pub setup_s: f64,
+    /// true when early stopping cut any unit short
+    pub stopped_early: bool,
 }
 
 /// Synthesize the configured dataset.
@@ -60,9 +75,52 @@ pub fn prepare_split(cfg: &ExperimentConfig, rng: &mut Rng) -> Split {
     split
 }
 
-/// Run a full native experiment per the config (the `pmlp train` path).
-/// PJRT strategies are driven by the examples/benches where an artifact
-/// pool exists; this entry point covers the native 2 strategies.
+/// Build the engine for a native strategy (no artifacts needed), plus
+/// the spec the ranking/report pipeline should speak in.
+pub fn build_native_engine(
+    cfg: &ExperimentConfig,
+    out_dim: usize,
+) -> anyhow::Result<(Box<dyn PoolEngine>, PoolSpec)> {
+    anyhow::ensure!(
+        cfg.strategy.is_native(),
+        "no native engine for strategy {}; drive PJRT strategies through PjrtRuntime",
+        cfg.strategy.name()
+    );
+    if cfg.strategy.is_deep() {
+        let pool = DeepPool::new(cfg.deep_models()?, cfg.features, out_dim)?;
+        let spec = deep_ranking_spec(&pool)?;
+        let engine = DeepEngine::new(pool, cfg.seed, cfg.loss);
+        return Ok((Box::new(engine), spec));
+    }
+    let spec = cfg.pool_spec()?;
+    let layout = PoolLayout::build(&spec);
+    let fused = init_pool(cfg.seed, &layout, cfg.features, out_dim);
+    let engine: Box<dyn PoolEngine> = match cfg.strategy {
+        Strategy::NativeParallel => Box::new(ParallelEngine::new(
+            layout.clone(),
+            fused,
+            cfg.loss,
+            cfg.features,
+            out_dim,
+            cfg.batch,
+            cfg.effective_threads(),
+        )),
+        Strategy::NativeSequential => Box::new(SequentialEngine::from_pool(
+            &spec,
+            &layout,
+            &fused,
+            cfg.loss,
+            cfg.optimizer,
+        )),
+        _ => unreachable!("is_native + !is_deep covers exactly these"),
+    };
+    Ok((engine, spec))
+}
+
+/// Run a full native experiment per the config (the `pmlp train` path):
+/// every native strategy (including `deep_native`) routes through the
+/// `PoolEngine` trait and the one `TrainSession` loop. PJRT strategies
+/// are driven by the examples/benches where an artifact pool exists.
 pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<ExperimentReport> {
     anyhow::ensure!(
         cfg.strategy.is_native(),
@@ -72,81 +130,42 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<ExperimentReport
     let setup = Timer::new();
     let mut rng = Rng::new(cfg.seed);
     let split = prepare_split(cfg, &mut rng);
-    let spec = cfg.pool_spec()?;
-    let layout = PoolLayout::build(&spec);
-    let threads = cfg.effective_threads();
     let out_dim = split.train.out_dim();
     anyhow::ensure!(
-        out_dim == cfg.out || cfg.dataset == crate::data::SynthKind::Moons
+        out_dim == cfg.out
+            || cfg.dataset == crate::data::SynthKind::Moons
             || cfg.dataset == crate::data::SynthKind::Xor
             || cfg.dataset == crate::data::SynthKind::Friedman1,
         "config out={} but dataset produced {}",
         cfg.out,
         out_dim
     );
-    let fused = init_pool(cfg.seed, &layout, cfg.features, out_dim);
-    let batches = BatchSet::new(&split.train, cfg.batch, false);
+    let (mut engine, spec) = build_native_engine(cfg, out_dim)?;
     let setup_s = setup.elapsed_s();
 
-    let outcome = match cfg.strategy {
-        Strategy::NativeParallel => {
-            let mut engine = ParallelEngine::new(
-                layout.clone(),
-                fused,
-                cfg.loss,
-                cfg.features,
-                out_dim,
-                cfg.batch,
-                threads,
-            );
-            let oc = train_parallel_native(
-                &mut engine,
-                &batches,
-                cfg.epochs,
-                cfg.warmup_epochs,
-                cfg.lr,
-            );
-            // validation on the trained fused engine
-            let (vl, vm) = eval_in_batches_native(&mut engine, &split.val, cfg.batch);
-            TrainOutcome { val_losses: Some(vl), val_metrics: Some(vm), ..oc }
-        }
-        Strategy::NativeSequential => {
-            let mut trainers: Vec<MlpTrainer> = (0..spec.n_models())
-                .map(|m| {
-                    MlpTrainer::new(
-                        extract_model(&fused, &layout, m),
-                        spec.models()[m].1,
-                        cfg.loss,
-                        cfg.optimizer,
-                        1, // one model at a time: single-threaded small matmuls
-                    )
-                })
-                .collect();
-            let oc = train_sequential_native(
-                &mut trainers,
-                &batches,
-                cfg.epochs,
-                cfg.warmup_epochs,
-                cfg.lr,
-            );
-            let mut vl = Vec::with_capacity(trainers.len());
-            let mut vm = Vec::with_capacity(trainers.len());
-            for t in &trainers {
-                let (l, m_) = t.evaluate(&split.val.x, &split.val.targets);
-                vl.push(l);
-                vm.push(m_);
-            }
-            TrainOutcome { val_losses: Some(vl), val_metrics: Some(vm), ..oc }
-        }
-        _ => unreachable!(),
-    };
+    let mut session = TrainSession::builder()
+        .split(&split)
+        .batches(cfg.batch, false)
+        .epochs(cfg.epochs)
+        .warmup(cfg.warmup_epochs)
+        .lr(cfg.lr);
+    if let Some(patience) = cfg.early_stop {
+        // early stopping watches the (untimed) per-epoch validation loss
+        session = session.eval_every(1).observer(Box::new(EarlyStop::new(patience)));
+    }
+    if cfg.progress {
+        session = session.observer(Box::new(ProgressLog));
+    }
+    let report = session.run(engine.as_mut())?;
 
-    let ranked = rank_models(
-        &spec,
-        outcome.val_losses.as_ref().expect("val"),
-        outcome.val_metrics.as_ref().expect("val"),
-        cfg.loss,
-    );
+    let outcome = report.outcome;
+    // an empty validation split (val_frac = 0, or a tiny dataset) yields
+    // no val stats; rank on zero vectors like the seed did rather than
+    // failing the whole run
+    let zeros = || vec![0.0f32; spec.n_models()];
+    let vl = outcome.val_losses.clone().unwrap_or_else(zeros);
+    let vm = outcome.val_metrics.clone().unwrap_or_else(zeros);
+    let ranked = rank_models(&spec, &vl, &vm, cfg.loss);
     Ok(ExperimentReport {
         outcome,
         ranked,
@@ -154,34 +173,23 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<ExperimentReport
         n_val: split.val.len(),
         n_test: split.test.len(),
         setup_s,
+        stopped_early: report.stopped_early,
     })
 }
 
 /// Evaluate a native fused engine over a dataset in batches, averaging
-/// per-model losses/metrics weighted by batch size.
+/// per-model losses/metrics weighted by batch size. An empty dataset
+/// yields all-zero vectors (matching the historical behavior).
 pub fn eval_in_batches_native(
     engine: &mut ParallelEngine,
     ds: &Dataset,
     batch: usize,
 ) -> (Vec<f32>, Vec<f32>) {
-    let n_models = engine.layout.n_models();
-    let mut lsum = vec![0.0f32; n_models];
-    let mut msum = vec![0.0f32; n_models];
-    let mut total = 0usize;
-    let mut start = 0;
-    while start < ds.len() {
-        let (x, y) = ds.batch(start, batch.min(engine.batch_cap()));
-        let rows = x.rows();
-        let (l, m_) = engine.evaluate(&x, &y);
-        for i in 0..n_models {
-            lsum[i] += l[i] * rows as f32;
-            msum[i] += m_[i] * rows as f32;
-        }
-        total += rows;
-        start += rows;
+    if ds.is_empty() {
+        let n = engine.layout.n_models();
+        return (vec![0.0; n], vec![0.0; n]);
     }
-    let inv = 1.0 / total.max(1) as f32;
-    (lsum.iter().map(|v| v * inv).collect(), msum.iter().map(|v| v * inv).collect())
+    eval_on_dataset(engine, 0, ds, batch).expect("native evaluation cannot fail")
 }
 
 #[cfg(test)]
@@ -232,6 +240,18 @@ mod tests {
         for (a, b) in vp.iter().zip(vs) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn deep_native_experiment_end_to_end() {
+        let mut cfg = quick_cfg();
+        cfg.strategy = Strategy::DeepNative;
+        cfg.early_stop = Some(3);
+        let rep = run_experiment(&cfg).unwrap();
+        assert_eq!(rep.ranked.len(), 4);
+        assert!(rep.outcome.val_losses.is_some());
+        assert!(rep.outcome.epoch_times.len() <= 4);
+        assert!(rep.ranked[0].val_metric.is_finite());
     }
 
     #[test]

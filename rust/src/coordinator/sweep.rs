@@ -3,15 +3,12 @@
 //! engines. Produces the same three-section table layout the paper prints:
 //! Parallel seconds, Sequential seconds, Parallel/Sequential %.
 
-use super::trainer::{
-    train_parallel_native, train_parallel_pjrt, train_sequential_native, train_sequential_pjrt,
-    BatchSet,
-};
+use super::engine::SequentialEngine;
+use super::trainer::{BatchSet, TrainSession};
 use crate::data;
 use crate::metrics::{fmt_pct, fmt_secs, Table};
-use crate::nn::init::{extract_model, init_pool};
+use crate::nn::init::init_pool;
 use crate::nn::loss::Loss;
-use crate::nn::mlp::MlpTrainer;
 use crate::nn::optimizer::OptimizerKind;
 use crate::nn::parallel::ParallelEngine;
 use crate::pool::{PoolLayout, PoolSpec};
@@ -151,9 +148,12 @@ fn run_cell(
     let ds = data::random_regression(n, f, cfg.out, &mut rng);
     // PJRT artifacts bake the batch shape: drop the ragged tail everywhere
     // so both engines and both tables train on identical batches.
-    let batches = BatchSet::new(&ds, b, true);
+    let batches = BatchSet::new(&ds, b, true)?;
+    // both strategies of a cell run the same session settings through the
+    // one generic loop; only the engine differs
+    let session = || TrainSession::builder().epochs(cfg.epochs).warmup(cfg.warmup).lr(cfg.lr);
 
-    match kind {
+    let (parallel_s, sequential_s) = match kind {
         TableKind::NativeCpu => {
             let layout = PoolLayout::build(&cfg.pool);
             let fused = init_pool(cfg.seed, &layout, f, cfg.out);
@@ -166,58 +166,39 @@ fn run_cell(
                 b,
                 cfg.threads,
             );
-            let par =
-                train_parallel_native(&mut engine, &batches, cfg.epochs, cfg.warmup, cfg.lr);
+            let par = session().run_with_batches(&mut engine, &batches)?.outcome;
             let seq_s = if n <= cfg.max_samples_sequential {
-                let mut trainers: Vec<MlpTrainer> = (0..cfg.pool.n_models())
-                    .map(|m| {
-                        MlpTrainer::new(
-                            extract_model(&fused, &layout, m),
-                            cfg.pool.models()[m].1,
-                            Loss::Mse,
-                            OptimizerKind::Sgd,
-                            1,
-                        )
-                    })
-                    .collect();
-                train_sequential_native(&mut trainers, &batches, cfg.epochs, cfg.warmup, cfg.lr)
-                    .avg_timed_epoch_s()
+                let mut seq = SequentialEngine::from_pool(
+                    &cfg.pool,
+                    &layout,
+                    &fused,
+                    Loss::Mse,
+                    OptimizerKind::Sgd,
+                );
+                session().run_with_batches(&mut seq, &batches)?.outcome.avg_timed_epoch_s()
             } else {
                 f64::NAN
             };
-            Ok(SweepCell {
-                samples: n,
-                features: f,
-                batch: b,
-                parallel_s: par.avg_timed_epoch_s(),
-                sequential_s: seq_s,
-            })
+            (par.avg_timed_epoch_s(), seq_s)
         }
         TableKind::Pjrt => {
             let rt = rt.expect("runtime present for pjrt sweep");
             let layout = rt.manifest.layout("bench")?;
             let fused = init_pool(cfg.seed, &layout, f, cfg.out);
             let mut engine = PjrtParallelEngine::new(rt, "bench", f, b, Loss::Mse, &fused)?;
-            let par =
-                train_parallel_pjrt(&mut engine, &batches, cfg.epochs, cfg.warmup, cfg.lr)?;
+            let par = session().run_with_batches(&mut engine, &batches)?.outcome;
             let seq_s = if n <= cfg.max_samples_sequential {
                 let mut seq = PjrtSequentialEngine::new(
                     rt, &layout, f, b, cfg.out, Loss::Mse, &fused, false,
                 )?;
-                train_sequential_pjrt(&mut seq, &batches, cfg.epochs, cfg.warmup, cfg.lr)?
-                    .avg_timed_epoch_s()
+                session().run_with_batches(&mut seq, &batches)?.outcome.avg_timed_epoch_s()
             } else {
                 f64::NAN
             };
-            Ok(SweepCell {
-                samples: n,
-                features: f,
-                batch: b,
-                parallel_s: par.avg_timed_epoch_s(),
-                sequential_s: seq_s,
-            })
+            (par.avg_timed_epoch_s(), seq_s)
         }
-    }
+    };
+    Ok(SweepCell { samples: n, features: f, batch: b, parallel_s, sequential_s })
 }
 
 /// Render cells in the paper's layout: one row per feature count, one

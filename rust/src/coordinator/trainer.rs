@@ -1,8 +1,15 @@
-//! Epoch/batch training loops for all four engines, with the paper's
-//! timing discipline: per-epoch wall times recorded, first `warmup`
-//! epochs excluded from the reported average (§4.3).
+//! `TrainSession` — the ONE epoch/batch training loop, generic over
+//! [`PoolEngine`](super::engine::PoolEngine), with the paper's timing
+//! discipline: per-epoch wall times recorded, first `warmup` epochs
+//! excluded from the reported average (§4.3).
+//!
+//! Every strategy (native fused, native sequential, PJRT fused, PJRT
+//! sequential, deep native) runs through [`TrainSession::run`] /
+//! [`TrainSession::run_with_batches`]; the historical per-strategy
+//! `train_*` free functions survive as thin deprecated shims.
 
-use crate::data::Dataset;
+use crate::coordinator::engine::{BatchShape, PoolEngine};
+use crate::data::{Dataset, Split};
 use crate::metrics::{Curve, Timer};
 use crate::nn::mlp::MlpTrainer;
 use crate::nn::parallel::ParallelEngine;
@@ -20,7 +27,9 @@ pub struct BatchSet {
 impl BatchSet {
     /// `drop_ragged` drops a final partial batch (required by the
     /// fixed-shape PJRT artifacts; native engines accept either way).
-    pub fn new(ds: &Dataset, batch: usize, drop_ragged: bool) -> BatchSet {
+    /// Errors when no full batch can be formed.
+    pub fn new(ds: &Dataset, batch: usize, drop_ragged: bool) -> anyhow::Result<BatchSet> {
+        anyhow::ensure!(batch >= 1, "batch size must be >= 1");
         let mut batches = Vec::new();
         let mut start = 0;
         let mut n_samples = 0;
@@ -34,8 +43,13 @@ impl BatchSet {
             batches.push((x, y));
             start += rows;
         }
-        assert!(!batches.is_empty(), "dataset smaller than one batch");
-        BatchSet { batches, batch, n_samples }
+        anyhow::ensure!(
+            !batches.is_empty(),
+            "dataset ({} samples) is smaller than one batch of {batch}{}",
+            ds.len(),
+            if drop_ragged { " (ragged tail dropped)" } else { "" }
+        );
+        Ok(BatchSet { batches, batch, n_samples })
     }
 
     pub fn n_batches(&self) -> usize {
@@ -53,7 +67,7 @@ pub struct TrainOutcome {
     pub final_losses: Vec<f32>,
     /// mean-over-models training loss per epoch
     pub train_curve: Curve,
-    /// filled by the caller after validation
+    /// filled when the session has a validation set
     pub val_losses: Option<Vec<f32>>,
     pub val_metrics: Option<Vec<f32>>,
 }
@@ -74,15 +88,553 @@ impl TrainOutcome {
     }
 }
 
-fn mean(xs: &[f32]) -> f32 {
-    if xs.is_empty() {
-        0.0
+/// Mean over the finite entries only, so a single diverged (NaN/inf)
+/// model cannot poison the pool-wide signal observers act on. NaN when
+/// every entry is non-finite.
+fn finite_mean(xs: &[f32]) -> f32 {
+    let mut sum = 0.0f32;
+    let mut n = 0usize;
+    for &x in xs {
+        if x.is_finite() {
+            sum += x;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        f32::NAN
     } else {
-        xs.iter().sum::<f32>() / xs.len() as f32
+        sum / n as f32
     }
 }
 
+// ---------------------------------------------------------------------------
+// Observers
+// ---------------------------------------------------------------------------
+
+/// What the loop should do after an observer callback.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Control {
+    Continue,
+    /// Stop training the current unit (fused engines: the whole pool).
+    Stop,
+}
+
+/// Everything an observer sees after one (unit, epoch).
+#[derive(Debug)]
+pub struct EpochCtx<'a> {
+    pub engine: &'a str,
+    pub unit: usize,
+    pub n_units: usize,
+    pub epoch: usize,
+    pub epochs: usize,
+    /// last-batch losses for this unit's models
+    pub losses: &'a [f32],
+    /// mean of `losses`
+    pub train_loss: f32,
+    /// mean validation loss/metric, when the session evaluated this epoch
+    pub val_loss: Option<f32>,
+    pub val_metric: Option<f32>,
+    pub epoch_time_s: f64,
+}
+
+/// Per-epoch hook. Units run to completion one after another, so
+/// observers get `on_unit_start` to reset any per-unit state.
+pub trait Observer {
+    fn on_unit_start(&mut self, _unit: usize) {}
+    fn on_epoch(&mut self, ctx: &EpochCtx) -> Control;
+}
+
+/// Stop when the watched loss has not improved for `patience`
+/// consecutive *watched* epochs.
+///
+/// The watched stream is validation loss when the session produces one;
+/// sessions that never validate fall back to training loss. The two are
+/// not comparable, so once a validation loss has been seen the baseline
+/// resets and epochs without one (e.g. `eval_every(3)`) are ignored
+/// rather than mixed in. The watched loss is the mean over the unit's
+/// *finite* per-model losses, so one diverged model in a fused pool does
+/// not force-stop the healthy majority; if EVERY model diverges the mean
+/// is NaN and burns patience each epoch.
+pub struct EarlyStop {
+    patience: usize,
+    min_delta: f32,
+    best: f32,
+    bad: usize,
+    saw_val: bool,
+}
+
+impl EarlyStop {
+    pub fn new(patience: usize) -> EarlyStop {
+        EarlyStop::with_min_delta(patience, 0.0)
+    }
+
+    pub fn with_min_delta(patience: usize, min_delta: f32) -> EarlyStop {
+        EarlyStop {
+            patience: patience.max(1),
+            min_delta,
+            best: f32::INFINITY,
+            bad: 0,
+            saw_val: false,
+        }
+    }
+}
+
+impl Observer for EarlyStop {
+    fn on_unit_start(&mut self, _unit: usize) {
+        self.best = f32::INFINITY;
+        self.bad = 0;
+        self.saw_val = false;
+    }
+
+    fn on_epoch(&mut self, ctx: &EpochCtx) -> Control {
+        let v = match ctx.val_loss {
+            Some(v) => {
+                if !self.saw_val {
+                    // switch streams: train-loss history is not comparable
+                    self.saw_val = true;
+                    self.best = f32::INFINITY;
+                    self.bad = 0;
+                }
+                v
+            }
+            None if self.saw_val => return Control::Continue,
+            None => ctx.train_loss,
+        };
+        if v.is_finite() && v < self.best - self.min_delta {
+            self.best = v;
+            self.bad = 0;
+            Control::Continue
+        } else {
+            // non-finite losses (diverged models) also burn patience
+            self.bad += 1;
+            if self.bad >= self.patience {
+                Control::Stop
+            } else {
+                Control::Continue
+            }
+        }
+    }
+}
+
+/// Log one line per epoch to stderr.
+pub struct ProgressLog;
+
+impl Observer for ProgressLog {
+    fn on_epoch(&mut self, ctx: &EpochCtx) -> Control {
+        let unit = if ctx.n_units > 1 {
+            format!(" model {}/{}", ctx.unit + 1, ctx.n_units)
+        } else {
+            String::new()
+        };
+        match ctx.val_loss {
+            Some(v) => eprintln!(
+                "[{}]{unit} epoch {}/{}: train {:.4} val {:.4} ({:.3}s)",
+                ctx.engine,
+                ctx.epoch + 1,
+                ctx.epochs,
+                ctx.train_loss,
+                v,
+                ctx.epoch_time_s
+            ),
+            None => eprintln!(
+                "[{}]{unit} epoch {}/{}: train {:.4} ({:.3}s)",
+                ctx.engine,
+                ctx.epoch + 1,
+                ctx.epochs,
+                ctx.train_loss,
+                ctx.epoch_time_s
+            ),
+        }
+        Control::Continue
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TrainSession
+// ---------------------------------------------------------------------------
+
+/// What a finished session reports beyond the [`TrainOutcome`].
+pub struct SessionReport {
+    pub outcome: TrainOutcome,
+    /// engine name the session ran on
+    pub engine: String,
+    pub n_models: usize,
+    /// epochs actually executed, per unit (short when early-stopped)
+    pub epochs_run: Vec<usize>,
+    /// true when any unit stopped before `epochs`
+    pub stopped_early: bool,
+}
+
+/// Builder for one training run over any [`PoolEngine`].
+///
+/// ```text
+/// TrainSession::builder()
+///     .split(&split)              // train + val datasets
+///     .batches(64, false)         // batch size, drop_ragged
+///     .epochs(40)
+///     .warmup(2)                  // §4.3 timing warm-up
+///     .lr(0.1)
+///     .eval_every(1)              // untimed val pass per epoch
+///     .observer(Box::new(EarlyStop::new(5)))
+///     .run(&mut engine)?          // -> SessionReport
+/// ```
+pub struct TrainSession<'a> {
+    train: Option<&'a Dataset>,
+    val: Option<&'a Dataset>,
+    batch: usize,
+    /// whether `.batches()` was called (vs. the default), so `run` can
+    /// tell a deliberate batch choice from an unset one
+    batch_explicit: bool,
+    drop_ragged: bool,
+    epochs: usize,
+    warmup: usize,
+    lr: f32,
+    /// 0 = validate only once, after training; k = every k epochs
+    eval_every: usize,
+    observers: Vec<Box<dyn Observer>>,
+}
+
+impl<'a> TrainSession<'a> {
+    /// Defaults: batch 32 (kept ragged), 10 epochs, no warm-up epochs,
+    /// lr 0.05, final-only validation, no observers.
+    pub fn builder() -> TrainSession<'a> {
+        TrainSession {
+            train: None,
+            val: None,
+            batch: 32,
+            batch_explicit: false,
+            drop_ragged: false,
+            epochs: 10,
+            warmup: 0,
+            lr: 0.05,
+            eval_every: 0,
+            observers: Vec::new(),
+        }
+    }
+
+    /// Train on `split.train`, validate on `split.val`.
+    pub fn split(mut self, split: &'a Split) -> Self {
+        self.train = Some(&split.train);
+        self.val = Some(&split.val);
+        self
+    }
+
+    pub fn train_data(mut self, ds: &'a Dataset) -> Self {
+        self.train = Some(ds);
+        self
+    }
+
+    pub fn val_data(mut self, ds: &'a Dataset) -> Self {
+        self.val = Some(ds);
+        self
+    }
+
+    pub fn batches(mut self, batch: usize, drop_ragged: bool) -> Self {
+        self.batch = batch;
+        self.batch_explicit = true;
+        self.drop_ragged = drop_ragged;
+        self
+    }
+
+    pub fn epochs(mut self, epochs: usize) -> Self {
+        self.epochs = epochs;
+        self
+    }
+
+    pub fn warmup(mut self, warmup: usize) -> Self {
+        self.warmup = warmup;
+        self
+    }
+
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    pub fn eval_every(mut self, every: usize) -> Self {
+        self.eval_every = every;
+        self
+    }
+
+    pub fn observer(mut self, obs: Box<dyn Observer>) -> Self {
+        self.observers.push(obs);
+        self
+    }
+
+    /// Build batches from the configured train dataset, then run. For
+    /// fixed-shape (PJRT) engines the artifact's baked batch size is
+    /// used when no `.batches()` was configured; an explicitly
+    /// configured mismatch is an error, not a silent override.
+    pub fn run<E: PoolEngine + ?Sized>(self, engine: &mut E) -> anyhow::Result<SessionReport> {
+        let train = self
+            .train
+            .ok_or_else(|| anyhow::anyhow!("TrainSession needs a train dataset (.split/.train_data)"))?;
+        let (batch, drop_ragged) = match engine.batch_shape() {
+            BatchShape::Exact(b) => {
+                anyhow::ensure!(
+                    !self.batch_explicit || self.batch == b,
+                    "engine {} bakes batch {b} but the session configured batch {}",
+                    engine.name(),
+                    self.batch
+                );
+                (b, true)
+            }
+            _ => (self.batch, self.drop_ragged),
+        };
+        let batches = BatchSet::new(train, batch, drop_ragged)?;
+        self.run_with_batches(engine, &batches)
+    }
+
+    /// Run on pre-materialized batches. This contains the crate's single
+    /// epoch/batch loop; `units` generalizes the fused (epochs outer) and
+    /// sequential (models outer, per-(model, epoch) times summed into
+    /// pool-epoch times) disciplines. `epochs == 0` is a no-op session
+    /// (final validation only).
+    ///
+    /// Caveat: with a multi-unit engine AND early stopping, units that
+    /// stop early no longer contribute to later pool-epoch times, so
+    /// `avg_timed_epoch_s` mixes unit counts across epochs; consult
+    /// `SessionReport::epochs_run` before comparing timings.
+    pub fn run_with_batches<E: PoolEngine + ?Sized>(
+        mut self,
+        engine: &mut E,
+        batches: &BatchSet,
+    ) -> anyhow::Result<SessionReport> {
+        anyhow::ensure!(!batches.batches.is_empty(), "empty batch set");
+        if let Some(v) = self.val {
+            if v.is_empty() {
+                self.val = None;
+            }
+        }
+        let n_models = engine.n_models();
+        let units = engine.n_units();
+        anyhow::ensure!(
+            units == 1 || units == n_models,
+            "engine {}: n_units must be 1 or n_models ({units} vs {n_models})",
+            engine.name()
+        );
+        match engine.batch_shape() {
+            BatchShape::Exact(b) => {
+                anyhow::ensure!(
+                    batches.batches.iter().all(|(x, _)| x.rows() == b),
+                    "engine {} requires exact batches of {b} rows (build the BatchSet with \
+                     batch={b}, drop_ragged=true)",
+                    engine.name()
+                );
+            }
+            BatchShape::Max(cap) => {
+                anyhow::ensure!(
+                    batches.batches.iter().all(|(x, _)| x.rows() <= cap),
+                    "engine {} accepts at most {cap} rows per batch",
+                    engine.name()
+                );
+            }
+            BatchShape::Any => {}
+        }
+        engine.prepare(batches)?;
+
+        let epochs = self.epochs;
+        let mut epoch_times = vec![0.0f64; epochs];
+        let mut loss_sums = vec![0.0f32; epochs];
+        let mut loss_counts = vec![0usize; epochs];
+        let mut final_losses = vec![0.0f32; n_models];
+        let mut epochs_run = vec![0usize; units];
+        let mut stopped_early = false;
+        let mut val_losses = self.val.map(|_| vec![f32::NAN; n_models]);
+        let mut val_metrics = self.val.map(|_| vec![f32::NAN; n_models]);
+
+        for unit in 0..units {
+            for obs in &mut self.observers {
+                obs.on_unit_start(unit);
+            }
+            let mut evaluated_last = false;
+            for epoch in 0..epochs {
+                // -- the crate's one and only epoch/batch loop ------------
+                let t = Timer::new();
+                let mut last: Vec<f32> = Vec::new();
+                for (bi, (x, y)) in batches.batches.iter().enumerate() {
+                    last = engine.step(unit, bi, x, y, self.lr)?.losses;
+                }
+                let dt = t.elapsed_s();
+                // ---------------------------------------------------------
+                epoch_times[epoch] += dt;
+                epochs_run[unit] = epoch + 1;
+                if units == 1 {
+                    anyhow::ensure!(
+                        last.len() == n_models,
+                        "engine {} returned {} losses for {n_models} models",
+                        engine.name(),
+                        last.len()
+                    );
+                    final_losses.copy_from_slice(&last);
+                } else {
+                    anyhow::ensure!(!last.is_empty(), "engine returned no losses");
+                    final_losses[unit] = last[0];
+                }
+                let train_loss = finite_mean(&last);
+                loss_sums[epoch] += last.iter().sum::<f32>();
+                loss_counts[epoch] += last.len();
+
+                // untimed validation pass (outside the epoch timer)
+                let mut epoch_val: Option<(f32, f32)> = None;
+                evaluated_last = false;
+                if self.eval_every > 0 && (epoch + 1) % self.eval_every == 0 {
+                    if let Some(val) = self.val {
+                        let (vl, vm) = eval_on_dataset(engine, unit, val, batches.batch)?;
+                        epoch_val = Some((finite_mean(&vl), finite_mean(&vm)));
+                        store_val(&mut val_losses, &mut val_metrics, units, unit, &vl, &vm)?;
+                        evaluated_last = true;
+                    }
+                }
+
+                let ctx = EpochCtx {
+                    engine: engine.name(),
+                    unit,
+                    n_units: units,
+                    epoch,
+                    epochs,
+                    losses: &last,
+                    train_loss,
+                    val_loss: epoch_val.map(|(l, _)| l),
+                    val_metric: epoch_val.map(|(_, m)| m),
+                    epoch_time_s: dt,
+                };
+                let mut stop = false;
+                for obs in &mut self.observers {
+                    if obs.on_epoch(&ctx) == Control::Stop {
+                        stop = true;
+                    }
+                }
+                if stop {
+                    stopped_early = true;
+                    break;
+                }
+            }
+            // final validation for this unit if the loop didn't just do it
+            if !evaluated_last {
+                if let Some(val) = self.val {
+                    let (vl, vm) = eval_on_dataset(engine, unit, val, batches.batch)?;
+                    store_val(&mut val_losses, &mut val_metrics, units, unit, &vl, &vm)?;
+                }
+            }
+        }
+
+        let ran = epochs_run.iter().copied().max().unwrap_or(0);
+        epoch_times.truncate(ran);
+        let mut train_curve = Curve::new("train_loss");
+        for (e, (&s, &c)) in loss_sums.iter().zip(&loss_counts).enumerate().take(ran) {
+            if c > 0 {
+                train_curve.push(e, (s / c as f32) as f64);
+            }
+        }
+        Ok(SessionReport {
+            outcome: TrainOutcome {
+                epoch_times,
+                warmup_epochs: self.warmup,
+                final_losses,
+                train_curve,
+                val_losses,
+                val_metrics,
+            },
+            engine: engine.name().to_string(),
+            n_models,
+            epochs_run,
+            stopped_early,
+        })
+    }
+}
+
+fn store_val(
+    val_losses: &mut Option<Vec<f32>>,
+    val_metrics: &mut Option<Vec<f32>>,
+    units: usize,
+    unit: usize,
+    vl: &[f32],
+    vm: &[f32],
+) -> anyhow::Result<()> {
+    if let (Some(ls), Some(ms)) = (val_losses.as_mut(), val_metrics.as_mut()) {
+        if units == 1 {
+            anyhow::ensure!(
+                vl.len() == ls.len() && vm.len() == ms.len(),
+                "engine eval returned {} losses / {} metrics for {} models",
+                vl.len(),
+                vm.len(),
+                ls.len()
+            );
+            ls.copy_from_slice(vl);
+            ms.copy_from_slice(vm);
+        } else {
+            anyhow::ensure!(
+                !vl.is_empty() && !vm.is_empty(),
+                "engine eval returned no losses for unit {unit}"
+            );
+            ls[unit] = vl[0];
+            ms[unit] = vm[0];
+        }
+    }
+    Ok(())
+}
+
+/// Evaluate one unit over a dataset in engine-compatible chunks,
+/// weighting per-model losses/metrics by real rows.
+///
+/// Fixed-shape (PJRT) engines cannot execute a partial batch, so for
+/// `BatchShape::Exact` the ragged tail of the dataset is excluded from
+/// the average — same truncation the artifact pipeline has always had.
+/// Size validation sets in multiples of the baked batch to avoid it.
+pub fn eval_on_dataset<E: PoolEngine + ?Sized>(
+    engine: &mut E,
+    unit: usize,
+    ds: &Dataset,
+    batch: usize,
+) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+    let (chunk, drop_ragged) = match engine.batch_shape() {
+        BatchShape::Any => (batch, false),
+        BatchShape::Max(cap) => (batch.min(cap), false),
+        BatchShape::Exact(b) => (b, true),
+    };
+    anyhow::ensure!(chunk >= 1, "evaluation chunk must be >= 1");
+    let mut lsum: Vec<f32> = Vec::new();
+    let mut msum: Vec<f32> = Vec::new();
+    let mut total = 0usize;
+    let mut start = 0usize;
+    while start < ds.len() {
+        let (x, y) = ds.batch(start, chunk);
+        let rows = x.rows();
+        if rows < chunk && drop_ragged {
+            break;
+        }
+        let (l, m) = engine.eval(unit, &x, &y)?;
+        if lsum.is_empty() {
+            lsum = vec![0.0; l.len()];
+            msum = vec![0.0; m.len()];
+        }
+        for i in 0..l.len() {
+            lsum[i] += l[i] * rows as f32;
+            msum[i] += m[i] * rows as f32;
+        }
+        total += rows;
+        start += rows;
+    }
+    anyhow::ensure!(
+        total > 0,
+        "evaluation set ({} samples) is smaller than one engine batch of {chunk}",
+        ds.len()
+    );
+    let inv = 1.0 / total as f32;
+    Ok((lsum.iter().map(|v| v * inv).collect(), msum.iter().map(|v| v * inv).collect()))
+}
+
+// ---------------------------------------------------------------------------
+// Deprecated per-strategy shims (kept so out-of-tree callers compile)
+// ---------------------------------------------------------------------------
+
+fn shim_session(epochs: usize, warmup: usize, lr: f32) -> TrainSession<'static> {
+    TrainSession::builder().epochs(epochs).warmup(warmup).lr(lr)
+}
+
 /// Fused native engine: epochs × batches, one `step` per batch.
+#[deprecated(note = "use TrainSession::builder().run(&mut engine) (PoolEngine API)")]
 pub fn train_parallel_native(
     engine: &mut ParallelEngine,
     batches: &BatchSet,
@@ -90,24 +642,16 @@ pub fn train_parallel_native(
     warmup: usize,
     lr: f32,
 ) -> TrainOutcome {
-    let mut out = TrainOutcome { warmup_epochs: warmup, ..Default::default() };
-    out.train_curve = Curve::new("train_loss");
-    for epoch in 0..epochs {
-        let t = Timer::new();
-        let mut last = Vec::new();
-        for (x, y) in &batches.batches {
-            last = engine.step(x, y, lr);
-        }
-        out.epoch_times.push(t.elapsed_s());
-        out.train_curve.push(epoch, mean(&last) as f64);
-        out.final_losses = last;
-    }
-    out
+    shim_session(epochs, warmup, lr)
+        .run_with_batches(engine, batches)
+        .expect("native fused training cannot fail")
+        .outcome
 }
 
 /// Native sequential baseline: models outer, epochs inner — exactly "one
 /// model at a time". Per-(model, epoch) times are summed into pool-epoch
 /// times so the two strategies report the same unit.
+#[deprecated(note = "use TrainSession::builder().run(&mut engine) (PoolEngine API)")]
 pub fn train_sequential_native(
     trainers: &mut [MlpTrainer],
     batches: &BatchSet,
@@ -115,33 +659,15 @@ pub fn train_sequential_native(
     warmup: usize,
     lr: f32,
 ) -> TrainOutcome {
-    let mut out = TrainOutcome { warmup_epochs: warmup, ..Default::default() };
-    out.train_curve = Curve::new("train_loss");
-    out.epoch_times = vec![0.0; epochs];
-    out.final_losses = vec![0.0; trainers.len()];
-    let mut per_epoch_losses = vec![0.0f32; epochs];
-    for (m, trainer) in trainers.iter_mut().enumerate() {
-        for (epoch, epoch_time) in out.epoch_times.iter_mut().enumerate() {
-            let t = Timer::new();
-            let mut last = 0.0;
-            for (x, y) in &batches.batches {
-                last = trainer.step(x, y, lr);
-            }
-            *epoch_time += t.elapsed_s();
-            per_epoch_losses[epoch] += last;
-            if epoch == epochs - 1 {
-                out.final_losses[m] = last;
-            }
-        }
-    }
-    for (epoch, s) in per_epoch_losses.iter().enumerate() {
-        out.train_curve.push(epoch, (*s / trainers.len() as f32) as f64);
-    }
-    out
+    shim_session(epochs, warmup, lr)
+        .run_with_batches(trainers, batches)
+        .expect("native sequential training cannot fail")
+        .outcome
 }
 
-/// Fused PJRT engine: one artifact execution per batch. Batch literals are
-/// pre-built once (data "device-resident" before the clock starts).
+/// Fused PJRT engine: one artifact execution per batch. Batch literals
+/// are pre-built once (data "device-resident" before the clock starts).
+#[deprecated(note = "use TrainSession::builder().run(&mut engine) (PoolEngine API)")]
 pub fn train_parallel_pjrt(
     engine: &mut PjrtParallelEngine,
     batches: &BatchSet,
@@ -149,29 +675,12 @@ pub fn train_parallel_pjrt(
     warmup: usize,
     lr: f32,
 ) -> anyhow::Result<TrainOutcome> {
-    use crate::runtime::literal_of;
-    let lits: Vec<(xla::Literal, xla::Literal)> = batches
-        .batches
-        .iter()
-        .map(|(x, y)| Ok((literal_of(x)?, literal_of(y)?)))
-        .collect::<anyhow::Result<_>>()?;
-    let mut out = TrainOutcome { warmup_epochs: warmup, ..Default::default() };
-    out.train_curve = Curve::new("train_loss");
-    for epoch in 0..epochs {
-        let t = Timer::new();
-        let mut last = Vec::new();
-        for (x, y) in &lits {
-            last = engine.step_literals(x, y, lr)?;
-        }
-        out.epoch_times.push(t.elapsed_s());
-        out.train_curve.push(epoch, mean(&last) as f64);
-        out.final_losses = last;
-    }
-    Ok(out)
+    Ok(shim_session(epochs, warmup, lr).run_with_batches(engine, batches)?.outcome)
 }
 
-/// Sequential PJRT baseline: models outer, epochs inner, one tiny artifact
-/// execution per (model, batch) — the dispatch-bound regime of Table 2.
+/// Sequential PJRT baseline: one tiny artifact execution per (model,
+/// batch) — the dispatch-bound regime of Table 2.
+#[deprecated(note = "use TrainSession::builder().run(&mut engine) (PoolEngine API)")]
 pub fn train_sequential_pjrt(
     engine: &mut PjrtSequentialEngine,
     batches: &BatchSet,
@@ -179,43 +688,16 @@ pub fn train_sequential_pjrt(
     warmup: usize,
     lr: f32,
 ) -> anyhow::Result<TrainOutcome> {
-    use crate::runtime::literal_of;
-    let lits: Vec<(xla::Literal, xla::Literal)> = batches
-        .batches
-        .iter()
-        .map(|(x, y)| Ok((literal_of(x)?, literal_of(y)?)))
-        .collect::<anyhow::Result<_>>()?;
-    let mut out = TrainOutcome { warmup_epochs: warmup, ..Default::default() };
-    out.train_curve = Curve::new("train_loss");
-    out.epoch_times = vec![0.0; epochs];
-    out.final_losses = vec![0.0; engine.n_models()];
-    let mut per_epoch_losses = vec![0.0f32; epochs];
-    for m in 0..engine.n_models() {
-        for epoch in 0..epochs {
-            let t = Timer::new();
-            let mut last = 0.0;
-            for (x, y) in &lits {
-                last = engine.step_model(m, x, y, lr)?;
-            }
-            out.epoch_times[epoch] += t.elapsed_s();
-            per_epoch_losses[epoch] += last;
-            if epoch == epochs - 1 {
-                out.final_losses[m] = last;
-            }
-        }
-    }
-    for (epoch, s) in per_epoch_losses.iter().enumerate() {
-        out.train_curve.push(epoch, (*s / engine.n_models() as f32) as f64);
-    }
-    Ok(out)
+    Ok(shim_session(epochs, warmup, lr).run_with_batches(engine, batches)?.outcome)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::engine::SequentialEngine;
     use crate::data;
     use crate::nn::act::Act;
-    use crate::nn::init::{extract_model, init_pool};
+    use crate::nn::init::init_pool;
     use crate::nn::loss::Loss;
     use crate::nn::optimizer::OptimizerKind;
     use crate::pool::{PoolLayout, PoolSpec};
@@ -225,12 +707,22 @@ mod tests {
     fn batchset_ragged_handling() {
         let mut rng = Rng::new(1);
         let ds = data::random_regression(10, 3, 2, &mut rng);
-        let keep = BatchSet::new(&ds, 4, false);
+        let keep = BatchSet::new(&ds, 4, false).unwrap();
         assert_eq!(keep.n_batches(), 3);
         assert_eq!(keep.n_samples, 10);
-        let drop = BatchSet::new(&ds, 4, true);
+        let drop = BatchSet::new(&ds, 4, true).unwrap();
         assert_eq!(drop.n_batches(), 2);
         assert_eq!(drop.n_samples, 8);
+    }
+
+    #[test]
+    fn batchset_too_small_is_error_not_panic() {
+        let mut rng = Rng::new(2);
+        let ds = data::random_regression(3, 3, 2, &mut rng);
+        let err = BatchSet::new(&ds, 8, true).unwrap_err().to_string();
+        assert!(err.contains("smaller than one batch"), "{err}");
+        // without ragged-drop a small dataset still forms one short batch
+        assert_eq!(BatchSet::new(&ds, 8, false).unwrap().n_batches(), 1);
     }
 
     #[test]
@@ -245,33 +737,214 @@ mod tests {
     }
 
     #[test]
+    fn builder_defaults() {
+        let s = TrainSession::builder();
+        assert_eq!(s.batch, 32);
+        assert!(!s.batch_explicit);
+        assert!(!s.drop_ragged);
+        assert_eq!(s.epochs, 10);
+        assert_eq!(s.warmup, 0);
+        assert!((s.lr - 0.05).abs() < 1e-9);
+        assert_eq!(s.eval_every, 0);
+        assert!(s.observers.is_empty());
+        assert!(s.train.is_none());
+        assert!(s.val.is_none());
+    }
+
+    #[test]
+    fn run_requires_train_dataset() {
+        let spec = PoolSpec::new(vec![(2, Act::Relu)]).unwrap();
+        let layout = PoolLayout::build(&spec);
+        let fused = init_pool(1, &layout, 3, 2);
+        let mut engine = ParallelEngine::new(layout, fused, Loss::Mse, 3, 2, 8, 1);
+        let err = TrainSession::builder().run(&mut engine).unwrap_err().to_string();
+        assert!(err.contains("train dataset"), "{err}");
+    }
+
+    fn early_ctx(train_loss: f32, val_loss: Option<f32>) -> EpochCtx<'static> {
+        EpochCtx {
+            engine: "test",
+            unit: 0,
+            n_units: 1,
+            epoch: 0,
+            epochs: 10,
+            losses: &[],
+            train_loss,
+            val_loss,
+            val_metric: None,
+            epoch_time_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn early_stop_triggers_on_flat_loss() {
+        let mut es = EarlyStop::new(2);
+        es.on_unit_start(0);
+        assert_eq!(es.on_epoch(&early_ctx(1.0, None)), Control::Continue); // improves vs inf
+        assert_eq!(es.on_epoch(&early_ctx(1.0, None)), Control::Continue); // bad = 1
+        assert_eq!(es.on_epoch(&early_ctx(1.0, None)), Control::Stop); // bad = 2
+    }
+
+    #[test]
+    fn early_stop_does_not_trigger_while_improving() {
+        let mut es = EarlyStop::new(2);
+        es.on_unit_start(0);
+        for v in [1.0f32, 0.9, 0.8, 0.7, 0.6] {
+            assert_eq!(es.on_epoch(&early_ctx(v, None)), Control::Continue);
+        }
+        // prefers validation loss over training loss
+        assert_eq!(es.on_epoch(&early_ctx(0.1, Some(0.65))), Control::Continue);
+        assert_eq!(es.on_epoch(&early_ctx(0.1, Some(0.7))), Control::Continue);
+        assert_eq!(es.on_epoch(&early_ctx(0.1, Some(0.7))), Control::Stop);
+    }
+
+    #[test]
+    fn early_stop_ignores_train_epochs_once_val_is_seen() {
+        // eval_every > 1: train-only epochs must not reset (or burn)
+        // patience once the validation stream has started
+        let mut es = EarlyStop::new(2);
+        es.on_unit_start(0);
+        assert_eq!(es.on_epoch(&early_ctx(1.0, None)), Control::Continue);
+        assert_eq!(es.on_epoch(&early_ctx(0.5, None)), Control::Continue);
+        // first val resets the baseline (train history not comparable)
+        assert_eq!(es.on_epoch(&early_ctx(0.1, Some(0.9))), Control::Continue);
+        assert_eq!(es.on_epoch(&early_ctx(0.05, None)), Control::Continue); // ignored
+        assert_eq!(es.on_epoch(&early_ctx(0.9, Some(0.95))), Control::Continue); // bad = 1
+        assert_eq!(es.on_epoch(&early_ctx(0.01, None)), Control::Continue); // ignored
+        assert_eq!(es.on_epoch(&early_ctx(0.9, Some(0.95))), Control::Stop); // bad = 2
+    }
+
+    #[test]
+    fn early_stop_resets_per_unit() {
+        let mut es = EarlyStop::new(1);
+        es.on_unit_start(0);
+        assert_eq!(es.on_epoch(&early_ctx(1.0, None)), Control::Continue);
+        assert_eq!(es.on_epoch(&early_ctx(1.0, None)), Control::Stop);
+        es.on_unit_start(1);
+        assert_eq!(es.on_epoch(&early_ctx(1.0, None)), Control::Continue);
+    }
+
+    #[test]
     fn native_loops_agree() {
-        // one fused run vs per-model sequential runs over the same batches
+        // one fused run vs per-model sequential runs over the same
+        // batches, both through the generic session loop
         let spec = PoolSpec::new(vec![(2, Act::Relu), (3, Act::Tanh)]).unwrap();
         let layout = PoolLayout::build(&spec);
         let mut rng = Rng::new(2);
         let ds = data::random_regression(32, 4, 2, &mut rng);
-        let batches = BatchSet::new(&ds, 8, false);
+        let batches = BatchSet::new(&ds, 8, false).unwrap();
         let fused = init_pool(9, &layout, 4, 2);
         let mut engine =
             ParallelEngine::new(layout.clone(), fused.clone(), Loss::Mse, 4, 2, 8, 2);
-        let oc_par = train_parallel_native(&mut engine, &batches, 3, 1, 0.05);
-        let mut trainers: Vec<MlpTrainer> = (0..2)
-            .map(|m| {
-                MlpTrainer::new(
-                    extract_model(&fused, &layout, m),
-                    spec.models()[m].1,
-                    Loss::Mse,
-                    OptimizerKind::Sgd,
-                    1,
-                )
-            })
-            .collect();
-        let oc_seq = train_sequential_native(&mut trainers, &batches, 3, 1, 0.05);
+        let oc_par = TrainSession::builder()
+            .epochs(3)
+            .warmup(1)
+            .lr(0.05)
+            .run_with_batches(&mut engine, &batches)
+            .unwrap()
+            .outcome;
+        let mut seq =
+            SequentialEngine::from_pool(&spec, &layout, &fused, Loss::Mse, OptimizerKind::Sgd);
+        let oc_seq = TrainSession::builder()
+            .epochs(3)
+            .warmup(1)
+            .lr(0.05)
+            .run_with_batches(&mut seq, &batches)
+            .unwrap()
+            .outcome;
         for (a, b) in oc_par.final_losses.iter().zip(&oc_seq.final_losses) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
         }
         assert_eq!(oc_par.epoch_times.len(), 3);
         assert_eq!(oc_seq.epoch_times.len(), 3);
+        assert_eq!(oc_par.train_curve.points.len(), 3);
+        // curves agree: same models, same batches
+        for ((_, a), (_, b)) in oc_par.train_curve.points.iter().zip(&oc_seq.train_curve.points) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn deprecated_shims_still_work() {
+        #![allow(deprecated)]
+        let spec = PoolSpec::new(vec![(2, Act::Relu)]).unwrap();
+        let layout = PoolLayout::build(&spec);
+        let mut rng = Rng::new(3);
+        let ds = data::random_regression(16, 4, 2, &mut rng);
+        let batches = BatchSet::new(&ds, 8, false).unwrap();
+        let fused = init_pool(4, &layout, 4, 2);
+        let mut engine = ParallelEngine::new(layout.clone(), fused.clone(), Loss::Mse, 4, 2, 8, 1);
+        let oc = train_parallel_native(&mut engine, &batches, 2, 1, 0.05);
+        assert_eq!(oc.epoch_times.len(), 2);
+        assert_eq!(oc.warmup_epochs, 1);
+        let mut trainers = SequentialEngine::from_pool(
+            &spec,
+            &layout,
+            &fused,
+            Loss::Mse,
+            OptimizerKind::Sgd,
+        )
+        .trainers;
+        let oc2 = train_sequential_native(&mut trainers, &batches, 2, 1, 0.05);
+        assert_eq!(oc2.final_losses.len(), 1);
+    }
+
+    #[test]
+    fn session_early_stops_whole_pool() {
+        // lr = 0 -> losses are perfectly flat -> EarlyStop(1) fires after
+        // the second epoch
+        let spec = PoolSpec::new(vec![(2, Act::Relu), (2, Act::Tanh)]).unwrap();
+        let layout = PoolLayout::build(&spec);
+        let mut rng = Rng::new(8);
+        let ds = data::random_regression(16, 4, 2, &mut rng);
+        let fused = init_pool(4, &layout, 4, 2);
+        let mut engine = ParallelEngine::new(layout, fused, Loss::Mse, 4, 2, 8, 1);
+        let rep = TrainSession::builder()
+            .train_data(&ds)
+            .batches(8, false)
+            .epochs(10)
+            .lr(0.0)
+            .observer(Box::new(EarlyStop::new(1)))
+            .run(&mut engine)
+            .unwrap();
+        assert!(rep.stopped_early);
+        assert_eq!(rep.epochs_run, vec![2]);
+        assert_eq!(rep.outcome.epoch_times.len(), 2);
+        // and without the observer it runs to completion
+        let mut rng = Rng::new(8);
+        let ds2 = data::random_regression(16, 4, 2, &mut rng);
+        let spec2 = PoolSpec::new(vec![(2, Act::Relu), (2, Act::Tanh)]).unwrap();
+        let layout2 = PoolLayout::build(&spec2);
+        let fused2 = init_pool(4, &layout2, 4, 2);
+        let mut engine2 = ParallelEngine::new(layout2, fused2, Loss::Mse, 4, 2, 8, 1);
+        let rep2 = TrainSession::builder()
+            .train_data(&ds2)
+            .batches(8, false)
+            .epochs(4)
+            .lr(0.0)
+            .run(&mut engine2)
+            .unwrap();
+        assert!(!rep2.stopped_early);
+        assert_eq!(rep2.epochs_run, vec![4]);
+    }
+
+    #[test]
+    fn session_fills_validation_from_split() {
+        let spec = PoolSpec::new(vec![(2, Act::Relu), (3, Act::Tanh)]).unwrap();
+        let layout = PoolLayout::build(&spec);
+        let mut rng = Rng::new(12);
+        let ds = data::random_regression(64, 4, 2, &mut rng);
+        let split = ds.split(0.7, 0.15, &mut rng);
+        let fused = init_pool(6, &layout, 4, 2);
+        let mut engine = ParallelEngine::new(layout, fused, Loss::Mse, 4, 2, 16, 1);
+        let rep = TrainSession::builder()
+            .split(&split)
+            .batches(16, false)
+            .epochs(2)
+            .run(&mut engine)
+            .unwrap();
+        let vl = rep.outcome.val_losses.unwrap();
+        assert_eq!(vl.len(), 2);
+        assert!(vl.iter().all(|v| v.is_finite()));
     }
 }

@@ -1,4 +1,10 @@
-//! ParallelMLPs — see README.md / DESIGN.md.
+//! ParallelMLPs — embarrassingly parallel independent training of
+//! heterogeneous MLPs (Farias, Ludermir & Bastos-Filho, 2022).
+//!
+//! Five execution strategies (native fused, native sequential, PJRT
+//! fused, PJRT sequential, deep native) behind one [`coordinator::PoolEngine`]
+//! trait and one [`coordinator::TrainSession`] loop. See the repository
+//! `README.md` for the quickstart and the strategy table.
 pub mod bench_harness;
 pub mod config;
 pub mod coordinator;

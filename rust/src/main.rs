@@ -11,8 +11,9 @@
 use std::path::PathBuf;
 
 use parallel_mlps::bench_harness::{artifacts_dir, BenchArgs};
-use parallel_mlps::config::ExperimentConfig;
+use parallel_mlps::config::{ExperimentConfig, Strategy};
 use parallel_mlps::coordinator::{render_paper_table, run_experiment, run_table, SweepConfig, TableKind};
+use parallel_mlps::data::SynthKind;
 use parallel_mlps::metrics::Table;
 use parallel_mlps::nn::init::init_pool;
 use parallel_mlps::nn::loss::Loss;
@@ -26,12 +27,19 @@ pmlp — ParallelMLPs coordinator (Farias et al., 2022 reproduction)
 
 USAGE:
   pmlp selftest [--artifacts DIR]
-  pmlp train --config FILE [--top K]
+  pmlp train --config FILE [overrides] [--top K]
+  pmlp train --strategy native_parallel|native_sequential|deep_native
+             [--dataset NAME] [--samples N] [--features N] [--epochs N]
+             [--batch N] [--lr F] [--seed N] [--threads N]
+             [--early-stop N] [--verbose] [--top K]
   pmlp bench --table 1|2 [--quick] [--samples a,b] [--features a,b]
              [--batches a,b] [--epochs N] [--warmup N] [--threads N]
              [--paper-scale] [--out FILE] [--artifacts DIR]
   pmlp inspect [--pool bench|smoke|e2e|paper] [--features N] [--out-dim N]
                [--artifacts DIR]
+
+train runs every strategy through the unified PoolEngine/TrainSession
+API; --early-stop N adds patience-N early stopping on validation loss.
 ";
 
 fn main() {
@@ -110,28 +118,81 @@ fn selftest(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Build the experiment config from `--config` and/or CLI overrides.
+fn train_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_toml_file(std::path::Path::new(path))?,
+        None => {
+            anyhow::ensure!(
+                args.get("strategy").is_some(),
+                "train requires --config FILE (or at least --strategy NAME)\n{USAGE}"
+            );
+            ExperimentConfig::default()
+        }
+    };
+    if let Some(name) = args.get("strategy") {
+        cfg.strategy = Strategy::from_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown strategy {name:?}"))?;
+    }
+    if let Some(name) = args.get("dataset") {
+        cfg.dataset = SynthKind::from_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset {name:?}"))?;
+    }
+    let parse = |e: String| anyhow::anyhow!(e);
+    if let Some(v) = args.get_parse::<usize>("samples").map_err(parse)? {
+        cfg.samples = v;
+    }
+    if let Some(v) = args.get_parse::<usize>("features").map_err(parse)? {
+        cfg.features = v;
+    }
+    if let Some(v) = args.get_parse::<usize>("epochs").map_err(parse)? {
+        cfg.epochs = v;
+    }
+    if let Some(v) = args.get_parse::<usize>("batch").map_err(parse)? {
+        cfg.batch = v;
+    }
+    if let Some(v) = args.get_parse::<f32>("lr").map_err(parse)? {
+        cfg.lr = v;
+    }
+    if let Some(v) = args.get_parse::<u64>("seed").map_err(parse)? {
+        cfg.seed = v;
+    }
+    if let Some(v) = args.get_parse::<usize>("threads").map_err(parse)? {
+        cfg.threads = v;
+    }
+    if let Some(v) = args.get_parse::<usize>("early-stop").map_err(parse)? {
+        cfg.early_stop = if v == 0 { None } else { Some(v) };
+    }
+    if args.has_flag("verbose") {
+        cfg.progress = true;
+    }
+    Ok(cfg)
+}
+
 fn train(args: &Args) -> anyhow::Result<()> {
-    let cfg_path = args
-        .get("config")
-        .ok_or_else(|| anyhow::anyhow!("train requires --config FILE\n{USAGE}"))?;
-    let cfg = ExperimentConfig::from_toml_file(std::path::Path::new(cfg_path))?;
+    let cfg = train_config(args)?;
     let top_k: usize = args.get_parse_or("top", 10).map_err(|e| anyhow::anyhow!(e))?;
     println!(
-        "experiment {:?}: {} models on {}({} samples, {} features), strategy {}",
+        "experiment {:?}: {} models on {}({} samples, {} features), strategy {}{}",
         cfg.name,
         cfg.pool_spec()?.n_models(),
         cfg.dataset.name(),
         cfg.samples,
         cfg.features,
-        cfg.strategy.name()
+        cfg.strategy.name(),
+        match cfg.early_stop {
+            Some(p) => format!(", early-stop patience {p}"),
+            None => String::new(),
+        }
     );
     let rep = run_experiment(&cfg)?;
     println!(
-        "trained {} epochs in {:.3}s (avg timed epoch {:.3}s; setup {:.3}s)",
+        "trained {} epochs in {:.3}s (avg timed epoch {:.3}s; setup {:.3}s){}",
         rep.outcome.epoch_times.len(),
         rep.outcome.total_s(),
         rep.outcome.avg_timed_epoch_s(),
-        rep.setup_s
+        rep.setup_s,
+        if rep.stopped_early { " [early-stopped]" } else { "" }
     );
     println!(
         "splits: train={} val={} test={}",

@@ -170,6 +170,20 @@ impl DeepPool {
         y
     }
 
+    /// Per-model `[B, O]` logits slice of the fused `[B, M, O]` output —
+    /// shared by training and evaluation so the fused layout is decoded
+    /// in exactly one place.
+    pub fn model_logits(&self, y: &Tensor, m: usize) -> Tensor {
+        let b = y.shape()[0];
+        let mut single = Tensor::zeros(&[b, self.out]);
+        for bi in 0..b {
+            for o in 0..self.out {
+                single.set2(bi, o, y.at3(bi, m, o));
+            }
+        }
+        single
+    }
+
     fn apply_acts(&self, pre: &Tensor, out: &mut Tensor, spans: &[(usize, usize)]) {
         for bi in 0..pre.rows() {
             let prow = pre.row(bi);
@@ -193,12 +207,7 @@ impl DeepPool {
         let mut losses = vec![0.0f32; self.n_models()];
         let mut dy = Tensor::zeros(&[b, self.n_models(), self.out]);
         for (m, lm) in losses.iter_mut().enumerate() {
-            let mut single = Tensor::zeros(&[b, self.out]);
-            for bi in 0..b {
-                for o in 0..self.out {
-                    single.set2(bi, o, y.at3(bi, m, o));
-                }
-            }
+            let single = self.model_logits(&y, m);
             *lm = loss::mlp_loss(loss, &single, targets);
             let mut dsingle = Tensor::zeros(&[b, self.out]);
             loss::mlp_loss_grad(loss, &single, targets, &mut dsingle);
@@ -312,7 +321,10 @@ impl DeepPool {
     }
 }
 
-/// Dense two-layer reference trainer for one model (the oracle).
+/// Dense two-layer parameters + reference trainer for one model (the
+/// oracle the fused engine is checked against, and the extraction type
+/// `ExtractedModel::Deep` carries).
+#[derive(Clone, Debug)]
 pub struct DeepRef {
     pub w1: Tensor,
     pub b1: Tensor,

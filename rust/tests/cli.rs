@@ -92,10 +92,56 @@ seed = 5
 
 #[test]
 fn train_rejects_missing_config() {
+    // no --config and no --strategy: nothing to train
     let out = Command::new(pmlp()).args(["train"]).output().unwrap();
     assert!(!out.status.success());
     let stderr = String::from_utf8_lossy(&out.stderr);
     assert!(stderr.contains("--config"), "{stderr}");
+}
+
+#[test]
+fn train_deep_native_with_early_stop_end_to_end() {
+    // the acceptance path: config-free CLI run of the fifth strategy
+    // through the unified TrainSession + PoolEngine loop
+    let out = Command::new(pmlp())
+        .args([
+            "train",
+            "--strategy",
+            "deep_native",
+            "--early-stop",
+            "5",
+            "--dataset",
+            "blobs",
+            "--samples",
+            "200",
+            "--features",
+            "6",
+            "--epochs",
+            "6",
+            "--batch",
+            "25",
+            "--top",
+            "3",
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("deep_native"), "{stdout}");
+    assert!(stdout.contains("early-stop patience 5"), "{stdout}");
+    assert!(stdout.contains("Top-"), "{stdout}");
+}
+
+#[test]
+fn train_rejects_unknown_strategy() {
+    let out = Command::new(pmlp())
+        .args(["train", "--strategy", "warp_drive"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown strategy"), "{stderr}");
 }
 
 #[test]

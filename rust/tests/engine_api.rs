@@ -1,0 +1,242 @@
+//! Integration tests for the unified `PoolEngine` + `TrainSession` API:
+//! the paper's independence claim must survive the abstraction — driving
+//! native parallel and native sequential through the SAME generic loop
+//! yields identical losses, params and validation rankings.
+
+use parallel_mlps::config::{ExperimentConfig, Strategy};
+use parallel_mlps::coordinator::{
+    run_experiment, BatchSet, DeepEngine, EarlyStop, PoolEngine, SequentialEngine, TrainSession,
+};
+use parallel_mlps::data;
+use parallel_mlps::nn::act::Act;
+use parallel_mlps::nn::deep::{DeepModel, DeepPool, DeepRef};
+use parallel_mlps::nn::init::init_pool;
+use parallel_mlps::nn::loss::Loss;
+use parallel_mlps::nn::optimizer::OptimizerKind;
+use parallel_mlps::nn::parallel::ParallelEngine;
+use parallel_mlps::pool::{PoolLayout, PoolSpec};
+use parallel_mlps::util::rng::Rng;
+
+const F: usize = 5;
+const O: usize = 2;
+const B: usize = 8;
+const SEED: u64 = 2024;
+
+fn pool() -> PoolSpec {
+    PoolSpec::new(vec![
+        (2, Act::Sigmoid),
+        (3, Act::Relu),
+        (1, Act::Identity),
+        (4, Act::Tanh),
+    ])
+    .unwrap()
+}
+
+/// THE agreement test: both native strategies through `&mut dyn
+/// PoolEngine` + one `TrainSession`, seeded, to identical losses.
+#[test]
+fn engine_agreement_native_parallel_vs_sequential() {
+    let spec = pool();
+    let layout = PoolLayout::build(&spec);
+    let fused = init_pool(SEED, &layout, F, O);
+    let mut rng = Rng::new(SEED);
+    let ds = data::random_regression(48, F, O, &mut rng);
+    let split = ds.split(0.7, 0.15, &mut rng);
+    let batches = BatchSet::new(&split.train, B, true).unwrap();
+
+    let session = || {
+        TrainSession::builder()
+            .val_data(&split.val)
+            .epochs(4)
+            .warmup(1)
+            .lr(0.05)
+    };
+
+    let mut par: Box<dyn PoolEngine> = Box::new(ParallelEngine::new(
+        layout.clone(),
+        fused.clone(),
+        Loss::Mse,
+        F,
+        O,
+        B,
+        2,
+    ));
+    let rep_par = session().run_with_batches(par.as_mut(), &batches).unwrap();
+
+    let mut seq: Box<dyn PoolEngine> = Box::new(SequentialEngine::from_pool(
+        &spec,
+        &layout,
+        &fused,
+        Loss::Mse,
+        OptimizerKind::Sgd,
+    ));
+    let rep_seq = session().run_with_batches(seq.as_mut(), &batches).unwrap();
+
+    assert_eq!(rep_par.engine, "native_parallel");
+    assert_eq!(rep_seq.engine, "native_sequential");
+    assert_eq!(rep_par.n_models, rep_seq.n_models);
+    assert_eq!(rep_par.outcome.epoch_times.len(), rep_seq.outcome.epoch_times.len());
+
+    // identical final training losses per model
+    for (m, (a, b)) in rep_par
+        .outcome
+        .final_losses
+        .iter()
+        .zip(&rep_seq.outcome.final_losses)
+        .enumerate()
+    {
+        assert!((a - b).abs() < 1e-5, "model {m}: {a} vs {b}");
+    }
+    // identical validation losses per model
+    let vp = rep_par.outcome.val_losses.as_ref().unwrap();
+    let vs = rep_seq.outcome.val_losses.as_ref().unwrap();
+    for (m, (a, b)) in vp.iter().zip(vs).enumerate() {
+        assert!((a - b).abs() < 1e-4, "model {m} val: {a} vs {b}");
+    }
+    // identical trained parameters per model
+    for m in 0..spec.n_models() {
+        let a = par.extract(m).unwrap().shallow().unwrap();
+        let b = seq.extract(m).unwrap().shallow().unwrap();
+        let diff = a.max_abs_diff(&b);
+        assert!(diff < 1e-4, "model {m}: params diverged by {diff}");
+    }
+}
+
+/// The deep engine through the same generic loop matches the explicit
+/// per-model two-layer reference trainer.
+#[test]
+fn deep_engine_matches_dense_reference_through_session() {
+    let pool = DeepPool::new(
+        vec![
+            DeepModel { h1: 2, h2: 3, act: Act::Tanh },
+            DeepModel { h1: 3, h2: 2, act: Act::Relu },
+        ],
+        F,
+        O,
+    )
+    .unwrap();
+    let mut engine = DeepEngine::new(pool, 11, Loss::Mse);
+    // dense references from the same init, BEFORE training
+    let mut refs: Vec<DeepRef> = (0..2)
+        .map(|m| {
+            engine
+                .extract(m)
+                .unwrap()
+                .deep()
+                .expect("deep engine must extract deep params")
+        })
+        .collect();
+
+    let mut rng = Rng::new(77);
+    let ds = data::random_regression(32, F, O, &mut rng);
+    let batches = BatchSet::new(&ds, B, true).unwrap();
+    let rep = TrainSession::builder()
+        .epochs(3)
+        .lr(0.05)
+        .run_with_batches(&mut engine, &batches)
+        .unwrap();
+
+    for (m, r) in refs.iter_mut().enumerate() {
+        let mut last = 0.0;
+        for _ in 0..3 {
+            for (x, y) in &batches.batches {
+                last = r.step(x, y, Loss::Mse, 0.05);
+            }
+        }
+        assert!(
+            (rep.outcome.final_losses[m] - last).abs() < 1e-5,
+            "model {m}: fused {} vs reference {last}",
+            rep.outcome.final_losses[m]
+        );
+    }
+}
+
+/// Early stopping cuts training short on a stalled run and reports it.
+#[test]
+fn early_stop_triggers_and_reports() {
+    let spec = pool();
+    let layout = PoolLayout::build(&spec);
+    let fused = init_pool(3, &layout, F, O);
+    let mut rng = Rng::new(5);
+    let ds = data::random_regression(32, F, O, &mut rng);
+    // lr = 0: losses are flat, patience 2 stops after 3 epochs
+    let mut engine = ParallelEngine::new(layout, fused, Loss::Mse, F, O, B, 1);
+    let rep = TrainSession::builder()
+        .train_data(&ds)
+        .batches(B, true)
+        .epochs(20)
+        .lr(0.0)
+        .observer(Box::new(EarlyStop::new(2)))
+        .run(&mut engine)
+        .unwrap();
+    assert!(rep.stopped_early);
+    assert_eq!(rep.epochs_run, vec![3]);
+    assert_eq!(rep.outcome.epoch_times.len(), 3);
+    assert_eq!(rep.outcome.train_curve.points.len(), 3);
+}
+
+/// Early stopping on a healthy run with generous patience never fires.
+#[test]
+fn early_stop_does_not_trigger_when_improving() {
+    let spec = pool();
+    let layout = PoolLayout::build(&spec);
+    let fused = init_pool(4, &layout, F, O);
+    let mut rng = Rng::new(6);
+    let ds = data::teacher_mlp(48, F, O, 3, &mut rng);
+    let mut engine = ParallelEngine::new(layout, fused, Loss::Mse, F, O, B, 1);
+    let rep = TrainSession::builder()
+        .train_data(&ds)
+        .batches(B, true)
+        .epochs(6)
+        .lr(0.05)
+        .observer(Box::new(EarlyStop::new(6)))
+        .run(&mut engine)
+        .unwrap();
+    assert!(!rep.stopped_early);
+    assert_eq!(rep.epochs_run, vec![6]);
+}
+
+/// `run_experiment` routes every native strategy (including the new
+/// deep_native) through the same trait + session, with agreeing signals.
+#[test]
+fn all_native_strategies_route_through_run_experiment() {
+    let base = ExperimentConfig {
+        dataset: data::SynthKind::TeacherMlp,
+        samples: 120,
+        features: F,
+        out: O,
+        teacher_hidden: 4,
+        hidden_sizes: vec![2, 4],
+        acts: vec![Act::Tanh],
+        epochs: 5,
+        warmup_epochs: 1,
+        batch: 20,
+        lr: 0.05,
+        loss: Loss::Mse,
+        threads: 2,
+        seed: 11,
+        ..Default::default()
+    };
+    let par = run_experiment(&base).unwrap();
+    let seq = run_experiment(&ExperimentConfig {
+        strategy: Strategy::NativeSequential,
+        ..base.clone()
+    })
+    .unwrap();
+    let deep = run_experiment(&ExperimentConfig {
+        strategy: Strategy::DeepNative,
+        early_stop: Some(3),
+        ..base.clone()
+    })
+    .unwrap();
+    // shallow engines agree exactly
+    let vp = par.outcome.val_losses.as_ref().unwrap();
+    let vs = seq.outcome.val_losses.as_ref().unwrap();
+    for (a, b) in vp.iter().zip(vs) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+    // the deep pool is a different architecture — just require sane output
+    assert_eq!(deep.ranked.len(), 2);
+    assert!(deep.outcome.val_losses.as_ref().unwrap().iter().all(|v| v.is_finite()));
+    assert!(deep.outcome.epoch_times.len() <= 5);
+}

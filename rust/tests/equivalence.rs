@@ -46,7 +46,7 @@ fn four_way_engine_equivalence() {
 
     let mut rng = Rng::new(SEED);
     let ds = data::random_regression(B * 4, F, O, &mut rng);
-    let batches = BatchSet::new(&ds, B, true);
+    let batches = BatchSet::new(&ds, B, true).unwrap();
 
     // 1. native fused
     let mut native =
@@ -152,7 +152,7 @@ fn training_converges_on_learnable_task_via_pjrt() {
     let fused0 = init_pool(8, &layout, F, O);
     let mut rng = Rng::new(9);
     let ds = data::teacher_mlp(64, F, O, 3, &mut rng);
-    let batches = BatchSet::new(&ds, B, true);
+    let batches = BatchSet::new(&ds, B, true).unwrap();
     let mut pjrt = PjrtParallelEngine::new(&rt, "smoke", F, B, Loss::Mse, &fused0).unwrap();
     let mut first = f32::NAN;
     let mut last = f32::NAN;

@@ -47,7 +47,7 @@ fn fused_equals_sequential_across_random_configs() {
         // CE blobs force out >= 2
         let o = ds.out_dim();
         let fused0 = if fused0.w2.shape()[0] != o { init_pool(seed, &layout, f, o) } else { fused0 };
-        let batches = BatchSet::new(&ds, b, true);
+        let batches = BatchSet::new(&ds, b, true).unwrap();
 
         let mut engine =
             ParallelEngine::new(layout.clone(), fused0.clone(), loss, f, o, b, 2);
@@ -96,7 +96,7 @@ fn random_layout_knobs_do_not_change_training() {
         let g = 1 + rng.below(8);
         let (f, o, b) = (4usize, 2usize, 8usize);
         let ds = data::random_regression(16, f, o, &mut rng);
-        let batches = BatchSet::new(&ds, b, true);
+        let batches = BatchSet::new(&ds, b, true).unwrap();
 
         let run = |layout: PoolLayout| {
             let fused0 = init_pool(seed, &layout, f, o);

@@ -1,0 +1,125 @@
+//! Minimal offline drop-in for the `anyhow` crate.
+//!
+//! The repo must build with no network access, so instead of the
+//! crates.io dependency this vendored crate provides exactly the subset
+//! the codebase uses: `anyhow::Result`, `anyhow::Error`, and the
+//! `anyhow!` / `bail!` / `ensure!` macros, plus `?`-conversion from any
+//! `std::error::Error`. Error values carry a formatted message (no
+//! backtraces, no downcasting).
+
+use std::fmt;
+
+/// A formatted, type-erased error message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { msg: msg.to_string() }
+    }
+
+    /// The chain is just the message here (no source tracking).
+    pub fn to_string_chain(&self) -> String {
+        self.msg.clone()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e:#}` (alternate) prints the whole chain in real anyhow; with
+        // a single message they coincide.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`;
+// that is what makes this blanket `From` impl coherent (same trick as
+// the real anyhow).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                "condition failed: {}",
+                ::std::stringify!($cond)
+            ));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn display_and_debug() {
+        let e = crate::anyhow!("bad {} thing", 7);
+        assert_eq!(format!("{e}"), "bad 7 thing");
+        assert_eq!(format!("{e:#}"), "bad 7 thing");
+        assert_eq!(format!("{e:?}"), "bad 7 thing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> crate::Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn check(x: i32) -> crate::Result<i32> {
+            crate::ensure!(x >= 0, "negative: {x}");
+            if x > 10 {
+                crate::bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert!(check(5).is_ok());
+        assert!(check(-1).unwrap_err().to_string().contains("negative"));
+        assert!(check(11).unwrap_err().to_string().contains("too big"));
+    }
+}

@@ -1,0 +1,48 @@
+//! No-op stand-in for the `log` facade (offline build). The macros
+//! type-check their format arguments but emit nothing; swap in the real
+//! crate to attach a logger.
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => {{
+        if false {
+            let _ = ::std::format!($($arg)*);
+        }
+    }};
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {{
+        if false {
+            let _ = ::std::format!($($arg)*);
+        }
+    }};
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {{
+        if false {
+            let _ = ::std::format!($($arg)*);
+        }
+    }};
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {{
+        if false {
+            let _ = ::std::format!($($arg)*);
+        }
+    }};
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => {{
+        if false {
+            let _ = ::std::format!($($arg)*);
+        }
+    }};
+}
