@@ -1,0 +1,47 @@
+//! Micro-batched serving bench — the inference-side perf table: rows/s
+//! and p50/p99 latency for max_batch 1/8/64 on a synthetic winner.
+//!
+//! ```sh
+//! cargo bench --bench serve_bench -- --quick
+//! cargo bench --bench serve_bench -- --out BENCH_serve.json
+//! ```
+
+use parallel_mlps::bench_harness::BenchArgs;
+use parallel_mlps::serve::bench::{render_reports, reports_json, run_load, synthetic_model, LoadSpec};
+use parallel_mlps::serve::ServeConfig;
+
+fn main() {
+    let bargs = BenchArgs::from_env();
+    let (rows_per_client, clients, depth, hidden) =
+        if bargs.quick { (128, 2, 8, 64) } else { (1024, 4, 16, 256) };
+    let model = synthetic_model(hidden, 64, 8, 42);
+    let spec = LoadSpec { rows_per_client, clients, depth, seed: 42 };
+    let mut reports = Vec::new();
+    for max_batch in [1usize, 8, 64] {
+        let cfg = ServeConfig { max_batch, queue_cap: 4096, threads: 1 };
+        match run_load(&model, cfg, &spec) {
+            Ok(r) => {
+                eprintln!(
+                    "max_batch {max_batch}: {:.0} rows/s (p50 {:.3} ms, p99 {:.3} ms)",
+                    r.rows_per_s, r.p50_ms, r.p99_ms
+                );
+                reports.push(r);
+            }
+            Err(e) => {
+                eprintln!("serve bench failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    println!(
+        "{}",
+        render_reports("serve: micro-batched vs per-row dispatch", &reports)
+    );
+    // --out writes the JSON record (BENCH_serve.json), not the markdown
+    if let Some(path) = &bargs.out_path {
+        match std::fs::write(path, reports_json(&model, &spec, &reports)) {
+            Ok(()) => eprintln!("json written to {path}"),
+            Err(e) => eprintln!("writing {path}: {e}"),
+        }
+    }
+}

@@ -122,6 +122,13 @@ pub trait PoolEngine {
 
     /// Dense parameters of model `m` (original index).
     fn extract(&self, m: usize) -> anyhow::Result<ExtractedModel>;
+
+    /// Dense parameters of every model (original order). Engines whose
+    /// per-model `extract` re-materializes shared state override this to
+    /// do that work once for the whole pool.
+    fn extract_all(&self) -> anyhow::Result<Vec<ExtractedModel>> {
+        (0..self.n_models()).map(|m| self.extract(m)).collect()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -158,6 +165,16 @@ impl PoolEngine for ParallelEngine {
 
     fn extract(&self, m: usize) -> anyhow::Result<ExtractedModel> {
         Ok(ExtractedModel::Shallow(extract_model(&self.params_fused(), &self.layout, m)))
+    }
+
+    /// `params_fused` rebuilds the full `[H_pad, F]` transpose, so doing
+    /// it once for the pool (instead of once per model) turns export on
+    /// a paper-scale pool from O(n_models x pool) into O(pool).
+    fn extract_all(&self) -> anyhow::Result<Vec<ExtractedModel>> {
+        let fused = self.params_fused();
+        Ok((0..self.layout.n_models())
+            .map(|m| ExtractedModel::Shallow(extract_model(&fused, &self.layout, m)))
+            .collect())
     }
 }
 
@@ -547,6 +564,20 @@ mod tests {
             let a = par.extract(m).unwrap().shallow().unwrap();
             let b = seq.extract(m).unwrap().shallow().unwrap();
             assert!(a.max_abs_diff(&b) < 2e-5, "model {m}");
+        }
+    }
+
+    #[test]
+    fn extract_all_matches_per_model_extract() {
+        let (_spec, layout) = tiny_layout();
+        let fused = init_pool(2, &layout, 4, 2);
+        let par = ParallelEngine::new(layout.clone(), fused, Loss::Mse, 4, 2, 8, 1);
+        let all = par.extract_all().unwrap();
+        assert_eq!(all.len(), 2);
+        for m in 0..2 {
+            let bulk = all[m].clone().shallow().unwrap();
+            let single = par.extract(m).unwrap().shallow().unwrap();
+            assert_eq!(bulk.max_abs_diff(&single), 0.0, "model {m}");
         }
     }
 

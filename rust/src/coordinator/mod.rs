@@ -117,11 +117,28 @@ pub fn build_native_engine(
     Ok((engine, spec))
 }
 
+/// A finished experiment plus the trained engine itself, for callers
+/// that need the weights afterwards (`pmlp export` checkpoints through
+/// the engine's `extract`).
+pub struct TrainedExperiment {
+    pub report: ExperimentReport,
+    pub engine: Box<dyn PoolEngine>,
+    /// the spec the ranking speaks in (hidden = h1 for deep pools)
+    pub spec: PoolSpec,
+    /// output dim the dataset actually produced (what the engine was built with)
+    pub out_dim: usize,
+}
+
 /// Run a full native experiment per the config (the `pmlp train` path):
 /// every native strategy (including `deep_native`) routes through the
 /// `PoolEngine` trait and the one `TrainSession` loop. PJRT strategies
 /// are driven by the examples/benches where an artifact pool exists.
 pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<ExperimentReport> {
+    Ok(run_experiment_trained(cfg)?.report)
+}
+
+/// Like [`run_experiment`], but hands back the trained engine too.
+pub fn run_experiment_trained(cfg: &ExperimentConfig) -> anyhow::Result<TrainedExperiment> {
     anyhow::ensure!(
         cfg.strategy.is_native(),
         "run_experiment covers native strategies; use the pjrt drivers for {}",
@@ -166,14 +183,19 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<ExperimentReport
     let vl = outcome.val_losses.clone().unwrap_or_else(zeros);
     let vm = outcome.val_metrics.clone().unwrap_or_else(zeros);
     let ranked = rank_models(&spec, &vl, &vm, cfg.loss);
-    Ok(ExperimentReport {
-        outcome,
-        ranked,
-        n_train: split.train.len(),
-        n_val: split.val.len(),
-        n_test: split.test.len(),
-        setup_s,
-        stopped_early: report.stopped_early,
+    Ok(TrainedExperiment {
+        report: ExperimentReport {
+            outcome,
+            ranked,
+            n_train: split.train.len(),
+            n_val: split.val.len(),
+            n_test: split.test.len(),
+            setup_s,
+            stopped_early: report.stopped_early,
+        },
+        engine,
+        spec,
+        out_dim,
     })
 }
 
@@ -252,6 +274,20 @@ mod tests {
         assert!(rep.outcome.val_losses.is_some());
         assert!(rep.outcome.epoch_times.len() <= 4);
         assert!(rep.ranked[0].val_metric.is_finite());
+    }
+
+    #[test]
+    fn trained_experiment_returns_usable_engine() {
+        let cfg = quick_cfg();
+        let trained = run_experiment_trained(&cfg).unwrap();
+        assert_eq!(trained.spec.n_models(), 4);
+        assert_eq!(trained.out_dim, 2);
+        // the engine survives the session: winners can be extracted
+        let best = trained.report.ranked[0].index;
+        assert!(matches!(
+            trained.engine.extract(best).unwrap(),
+            ExtractedModel::Shallow(_)
+        ));
     }
 
     #[test]

@@ -1,0 +1,506 @@
+//! `PoolCheckpoint` — the versioned binary snapshot of a trained pool.
+//!
+//! A checkpoint carries everything needed to rebuild the fused pool and
+//! slice winners out of it: the `PoolSpec`, the layout knobs (`W`, `G` —
+//! the layout itself is a deterministic function of spec + knobs, so it
+//! is rebuilt on load and cross-checked against the writer's layout
+//! checksum), the training dims/loss, the ranking from the last
+//! validation pass, and the four fused parameter tensors.
+//!
+//! Format (all integers little-endian):
+//!
+//! ```text
+//! magic    8 B   "PMLPCKPT"
+//! version  u32   1
+//! features u32   out u32   loss u8
+//! n_models u32   then per model: h u32, act u8
+//! group_width u32   group_models u32   layout_checksum u64
+//! n_ranked u32   then per entry: index u32, val_loss f32, val_metric f32
+//! 4 tensors (w1, b1, w2, b2): ndim u32, dims u32..., data f32...
+//! trailer  u64   FNV-1a 64 over every preceding byte
+//! ```
+//!
+//! Floats are written as raw IEEE-754 bit patterns, so the roundtrip is
+//! bit-exact (NaNs from diverged models survive unchanged). Any flipped
+//! byte anywhere in the file fails the trailer checksum before a single
+//! field is parsed.
+
+use std::path::Path;
+
+use crate::coordinator::engine::{ExtractedModel, PoolEngine};
+use crate::nn::act::Act;
+use crate::nn::init::{insert_model, FusedParams, ModelParams};
+use crate::nn::loss::Loss;
+use crate::pool::{PoolLayout, PoolSpec};
+use crate::selection::RankedModel;
+use crate::tensor::Tensor;
+use crate::util::fnv::Fnv1a64;
+
+pub const MAGIC: &[u8; 8] = b"PMLPCKPT";
+pub const VERSION: u32 = 1;
+
+/// Upper bound on `n_models * group_width` accepted at load time. The
+/// paper's full 10k-model pool needs ~5.1M; this leaves 3x headroom
+/// while keeping a crafted file from forcing a multi-GB layout build.
+pub const MAX_PADDED_ROWS: usize = 1 << 24;
+
+/// One row of the persisted ranking (best-first, original pool indices).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RankEntry {
+    pub index: usize,
+    pub val_loss: f32,
+    pub val_metric: f32,
+}
+
+/// A trained pool, frozen: spec + layout knobs + fused tensors + ranking.
+#[derive(Clone, Debug)]
+pub struct PoolCheckpoint {
+    layout: PoolLayout,
+    pub features: usize,
+    pub out: usize,
+    pub loss: Loss,
+    pub params: FusedParams,
+    /// best-first ranking recorded at export time (may be empty)
+    pub ranking: Vec<RankEntry>,
+}
+
+impl PoolCheckpoint {
+    pub fn new(
+        layout: PoolLayout,
+        features: usize,
+        out: usize,
+        loss: Loss,
+        params: FusedParams,
+        ranking: Vec<RankEntry>,
+    ) -> anyhow::Result<PoolCheckpoint> {
+        anyhow::ensure!(features >= 1 && out >= 1, "features/out must be >= 1");
+        let (h_pad, m_pad) = (layout.h_pad(), layout.m_pad());
+        anyhow::ensure!(
+            params.w1.shape() == &[h_pad, features]
+                && params.b1.shape() == &[h_pad]
+                && params.w2.shape() == &[out, h_pad]
+                && params.b2.shape() == &[m_pad, out],
+            "fused tensor shapes do not match the layout (H_pad={h_pad}, M_pad={m_pad}, F={features}, O={out})"
+        );
+        let mut seen = vec![false; layout.n_models()];
+        for e in &ranking {
+            anyhow::ensure!(
+                e.index < layout.n_models(),
+                "ranking entry index {} out of range ({} models)",
+                e.index,
+                layout.n_models()
+            );
+            anyhow::ensure!(
+                !seen[e.index],
+                "duplicate ranking entry for model {} (top-k names must be distinct models)",
+                e.index
+            );
+            seen[e.index] = true;
+        }
+        Ok(PoolCheckpoint { layout, features, out, loss, params, ranking })
+    }
+
+    /// Snapshot a trained engine through the `PoolEngine` trait: every
+    /// model is extracted and re-inserted into a fresh fused buffer, so
+    /// any shallow engine (native fused, native sequential, PJRT) can be
+    /// checkpointed after its `TrainSession` finishes.
+    pub fn from_engine(
+        engine: &dyn PoolEngine,
+        layout: &PoolLayout,
+        features: usize,
+        out: usize,
+        loss: Loss,
+        ranked: &[RankedModel],
+    ) -> anyhow::Result<PoolCheckpoint> {
+        anyhow::ensure!(
+            engine.n_models() == layout.n_models(),
+            "engine has {} models but layout has {}",
+            engine.n_models(),
+            layout.n_models()
+        );
+        let mut params = FusedParams::zeros(layout, features, out);
+        let extracted = engine.extract_all()?;
+        anyhow::ensure!(
+            extracted.len() == layout.n_models(),
+            "engine extract_all returned {} models for a {}-model layout",
+            extracted.len(),
+            layout.n_models()
+        );
+        for (m, extracted) in extracted.into_iter().enumerate() {
+            match extracted {
+                ExtractedModel::Shallow(dense) => insert_model(&mut params, layout, m, &dense),
+                ExtractedModel::Deep(_) => anyhow::bail!(
+                    "checkpoint format v{VERSION} stores single-hidden-layer pools; engine {} is deep",
+                    engine.name()
+                ),
+            }
+        }
+        let ranking = ranked
+            .iter()
+            .map(|r| RankEntry { index: r.index, val_loss: r.val_loss, val_metric: r.val_metric })
+            .collect();
+        PoolCheckpoint::new(layout.clone(), features, out, loss, params, ranking)
+    }
+
+    pub fn spec(&self) -> &PoolSpec {
+        self.layout.spec()
+    }
+
+    pub fn layout(&self) -> &PoolLayout {
+        &self.layout
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.layout.n_models()
+    }
+
+    /// Original index of the best-ranked model, when a ranking was saved.
+    pub fn winner(&self) -> Option<usize> {
+        self.ranking.first().map(|e| e.index)
+    }
+
+    /// Slice model `m` back out as standalone dense params + activation.
+    pub fn extract(&self, m: usize) -> anyhow::Result<(ModelParams, Act)> {
+        anyhow::ensure!(m < self.n_models(), "model index {m} out of range ({} models)", self.n_models());
+        Ok(crate::pool::extract_model(&self.params, &self.layout, m))
+    }
+
+    // -- serialization ----------------------------------------------------
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        push_u32(&mut b, VERSION);
+        push_u32(&mut b, self.features as u32);
+        push_u32(&mut b, self.out as u32);
+        b.push(loss_id(self.loss));
+        let models = self.spec().models();
+        push_u32(&mut b, models.len() as u32);
+        for &(h, act) in models {
+            push_u32(&mut b, h);
+            b.push(act.id());
+        }
+        push_u32(&mut b, self.layout.group_width as u32);
+        push_u32(&mut b, self.layout.group_models as u32);
+        push_u64(&mut b, self.layout.checksum());
+        push_u32(&mut b, self.ranking.len() as u32);
+        for e in &self.ranking {
+            push_u32(&mut b, e.index as u32);
+            push_f32(&mut b, e.val_loss);
+            push_f32(&mut b, e.val_metric);
+        }
+        for t in [&self.params.w1, &self.params.b1, &self.params.w2, &self.params.b2] {
+            push_tensor(&mut b, t);
+        }
+        let mut h = Fnv1a64::new();
+        h.feed_bytes(&b);
+        push_u64(&mut b, h.finish());
+        b
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<PoolCheckpoint> {
+        anyhow::ensure!(bytes.len() >= MAGIC.len() + 4 + 8, "too short to be a checkpoint ({} bytes)", bytes.len());
+        anyhow::ensure!(&bytes[..MAGIC.len()] == MAGIC, "not a pmlp checkpoint (bad magic)");
+        // verify the trailer before trusting a single field
+        let body = &bytes[..bytes.len() - 8];
+        let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().expect("8 bytes"));
+        let mut h = Fnv1a64::new();
+        h.feed_bytes(body);
+        let computed = h.finish();
+        anyhow::ensure!(
+            computed == stored,
+            "checkpoint checksum mismatch (corrupted file): stored {stored:016x}, computed {computed:016x}"
+        );
+
+        let mut r = Reader { b: body, pos: MAGIC.len() };
+        let version = r.u32()?;
+        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version} (this build reads v{VERSION})");
+        let features = r.u32()? as usize;
+        let out = r.u32()? as usize;
+        anyhow::ensure!(features >= 1 && out >= 1, "features/out must be >= 1");
+        let loss = loss_from_id(r.u8()?)?;
+        let n_models = r.u32()? as usize;
+        let mut models = Vec::with_capacity(n_models.min(1 << 20));
+        for _ in 0..n_models {
+            let h = r.u32()?;
+            let act_id = r.u8()?;
+            let act = Act::from_id(act_id)
+                .ok_or_else(|| anyhow::anyhow!("unknown activation id {act_id} in checkpoint"))?;
+            models.push((h, act));
+        }
+        let spec = PoolSpec::new(models)?;
+        let group_width = r.u32()? as usize;
+        let group_models = r.u32()? as usize;
+        anyhow::ensure!(
+            group_width >= spec.max_hidden() as usize && group_models >= 1,
+            "invalid layout knobs in checkpoint (W={group_width}, G={group_models})"
+        );
+        // FNV is not tamper-proof, so a crafted file can reach this point:
+        // bound the layout allocation (h_pad <= n_models * W, since every
+        // group holds at least one model) before building it
+        anyhow::ensure!(
+            spec.n_models().saturating_mul(group_width) <= MAX_PADDED_ROWS,
+            "checkpoint layout too large ({} models x W={group_width} exceeds {MAX_PADDED_ROWS} padded rows)",
+            spec.n_models()
+        );
+        let stored_layout_ck = r.u64()?;
+        let layout = PoolLayout::build_with(&spec, group_width, group_models);
+        anyhow::ensure!(
+            layout.checksum() == stored_layout_ck,
+            "layout checksum mismatch: checkpoint written by an incompatible layout algorithm"
+        );
+        let n_ranked = r.u32()? as usize;
+        anyhow::ensure!(n_ranked <= spec.n_models(), "ranking has {n_ranked} entries for {} models", spec.n_models());
+        let mut ranking = Vec::with_capacity(n_ranked);
+        for _ in 0..n_ranked {
+            ranking.push(RankEntry {
+                index: r.u32()? as usize,
+                val_loss: r.f32()?,
+                val_metric: r.f32()?,
+            });
+        }
+        let w1 = read_tensor(&mut r)?;
+        let b1 = read_tensor(&mut r)?;
+        let w2 = read_tensor(&mut r)?;
+        let b2 = read_tensor(&mut r)?;
+        anyhow::ensure!(r.pos == body.len(), "trailing bytes after checkpoint payload");
+        PoolCheckpoint::new(layout, features, out, loss, FusedParams { w1, b1, w2, b2 }, ranking)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .map_err(|e| anyhow::anyhow!("writing checkpoint {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<PoolCheckpoint> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading checkpoint {}: {e}", path.display()))?;
+        Self::from_bytes(&bytes)
+    }
+}
+
+/// Bit-level equality of two fused parameter sets (`==` on floats would
+/// call NaN != NaN, so diverged-but-identical pools need this instead).
+pub fn fused_bits_equal(a: &FusedParams, b: &FusedParams) -> bool {
+    let pair = |x: &Tensor, y: &Tensor| {
+        x.shape() == y.shape()
+            && x.data().iter().zip(y.data()).all(|(p, q)| p.to_bits() == q.to_bits())
+    };
+    pair(&a.w1, &b.w1) && pair(&a.b1, &b.b1) && pair(&a.w2, &b.w2) && pair(&a.b2, &b.b2)
+}
+
+fn loss_id(loss: Loss) -> u8 {
+    match loss {
+        Loss::Mse => 0,
+        Loss::Ce => 1,
+    }
+}
+
+fn loss_from_id(id: u8) -> anyhow::Result<Loss> {
+    match id {
+        0 => Ok(Loss::Mse),
+        1 => Ok(Loss::Ce),
+        other => anyhow::bail!("unknown loss id {other} in checkpoint"),
+    }
+}
+
+fn push_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f32(b: &mut Vec<u8>, v: f32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_tensor(b: &mut Vec<u8>, t: &Tensor) {
+    push_u32(b, t.shape().len() as u32);
+    for &d in t.shape() {
+        push_u32(b, d as u32);
+    }
+    for &v in t.data() {
+        push_f32(b, v);
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            n <= self.b.len() - self.pos,
+            "checkpoint truncated at byte {} (wanted {n} more)",
+            self.pos
+        );
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f32(&mut self) -> anyhow::Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+}
+
+fn read_tensor(r: &mut Reader) -> anyhow::Result<Tensor> {
+    let ndim = r.u32()? as usize;
+    anyhow::ensure!((1..=3).contains(&ndim), "tensor rank {ndim} out of range");
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(r.u32()? as usize);
+    }
+    let count = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| anyhow::anyhow!("tensor shape {shape:?} overflows"))?;
+    let bytes = count
+        .checked_mul(4)
+        .ok_or_else(|| anyhow::anyhow!("tensor shape {shape:?} overflows"))?;
+    let raw = r.take(bytes)?; // bounds-checked before any allocation
+    let mut data = Vec::with_capacity(count);
+    for chunk in raw.chunks_exact(4) {
+        data.push(f32::from_le_bytes(chunk.try_into().expect("4 bytes")));
+    }
+    Ok(Tensor::from_vec(data, &shape))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::init::init_pool;
+
+    fn tiny() -> (PoolLayout, FusedParams) {
+        let spec = PoolSpec::new(vec![(2, Act::Relu), (3, Act::Tanh), (1, Act::Identity)]).unwrap();
+        let layout = PoolLayout::build(&spec);
+        let fused = init_pool(5, &layout, 4, 2);
+        (layout, fused)
+    }
+
+    #[test]
+    fn bytes_roundtrip_and_stability() {
+        let (layout, fused) = tiny();
+        let ranking = vec![
+            RankEntry { index: 1, val_loss: 0.25, val_metric: 0.9 },
+            RankEntry { index: 0, val_loss: 0.5, val_metric: 0.8 },
+        ];
+        let ckpt =
+            PoolCheckpoint::new(layout, 4, 2, Loss::Ce, fused, ranking.clone()).unwrap();
+        let bytes = ckpt.to_bytes();
+        let back = PoolCheckpoint::from_bytes(&bytes).unwrap();
+        assert!(fused_bits_equal(&ckpt.params, &back.params));
+        assert_eq!(back.spec().models(), ckpt.spec().models());
+        assert_eq!(back.ranking, ranking);
+        assert_eq!(back.winner(), Some(1));
+        assert_eq!(back.features, 4);
+        assert_eq!(back.out, 2);
+        assert_eq!(back.loss.name(), "ce");
+        // serialization is canonical: re-encoding reproduces the bytes
+        assert_eq!(back.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn nan_params_survive_bit_exact() {
+        let (layout, mut fused) = tiny();
+        fused.w1.data_mut()[0] = f32::NAN;
+        fused.b2.data_mut()[0] = f32::INFINITY;
+        let ckpt = PoolCheckpoint::new(layout, 4, 2, Loss::Mse, fused, vec![]).unwrap();
+        let back = PoolCheckpoint::from_bytes(&ckpt.to_bytes()).unwrap();
+        assert!(fused_bits_equal(&ckpt.params, &back.params));
+    }
+
+    #[test]
+    fn every_flipped_byte_is_rejected() {
+        let (layout, fused) = tiny();
+        let ckpt = PoolCheckpoint::new(layout, 4, 2, Loss::Mse, fused, vec![]).unwrap();
+        let bytes = ckpt.to_bytes();
+        let n = bytes.len();
+        for pos in [0, 3, 8, 12, 21, n / 3, n / 2, n - 9, n - 1] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x40;
+            assert!(PoolCheckpoint::from_bytes(&bad).is_err(), "flip at {pos} accepted");
+        }
+        assert!(PoolCheckpoint::from_bytes(&bytes[..n - 3]).is_err());
+        assert!(PoolCheckpoint::from_bytes(b"PMLPCKPT").is_err());
+        assert!(PoolCheckpoint::from_bytes(b"NOTACKPTxxxxxxxxxxxxxxxxxxxx").is_err());
+    }
+
+    #[test]
+    fn oversized_layout_knobs_rejected_even_with_valid_checksum() {
+        // FNV is recomputable, so simulate an attacker patching the
+        // group_width field AND fixing up the trailer: the size cap must
+        // still reject the file before any layout allocation happens
+        let (layout, fused) = tiny();
+        let ckpt = PoolCheckpoint::new(layout, 4, 2, Loss::Mse, fused, vec![]).unwrap();
+        let mut b = ckpt.to_bytes();
+        // group_width offset: magic 8 + version 4 + F 4 + O 4 + loss 1
+        //                     + n_models 4 + 3 models x (4 + 1) = 40
+        b[40..44].copy_from_slice(&u32::MAX.to_le_bytes());
+        let body_len = b.len() - 8;
+        let mut h = Fnv1a64::new();
+        h.feed_bytes(&b[..body_len]);
+        let trailer = h.finish().to_le_bytes();
+        b[body_len..].copy_from_slice(&trailer);
+        let err = PoolCheckpoint::from_bytes(&b).unwrap_err().to_string();
+        assert!(err.contains("too large"), "{err}");
+    }
+
+    #[test]
+    fn extract_matches_direct_extraction() {
+        let (layout, fused) = tiny();
+        let ckpt =
+            PoolCheckpoint::new(layout.clone(), 4, 2, Loss::Mse, fused.clone(), vec![]).unwrap();
+        for m in 0..layout.n_models() {
+            let (dense, act) = ckpt.extract(m).unwrap();
+            let (want, want_act) = crate::pool::extract_model(&fused, &layout, m);
+            assert_eq!(dense.max_abs_diff(&want), 0.0);
+            assert_eq!(act, want_act);
+        }
+        assert!(ckpt.extract(99).is_err());
+    }
+
+    #[test]
+    fn duplicate_ranking_entries_rejected() {
+        let (layout, fused) = tiny();
+        let ranking = vec![
+            RankEntry { index: 1, val_loss: 0.1, val_metric: 0.1 },
+            RankEntry { index: 1, val_loss: 0.2, val_metric: 0.2 },
+        ];
+        let err = PoolCheckpoint::new(layout, 4, 2, Loss::Mse, fused, ranking)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate ranking"), "{err}");
+    }
+
+    #[test]
+    fn shape_validation_rejects_mismatched_params() {
+        let (layout, _) = tiny();
+        let wrong = FusedParams::zeros(&layout, 5, 2); // features 5, ckpt says 4
+        assert!(PoolCheckpoint::new(layout, 4, 2, Loss::Mse, wrong, vec![]).is_err());
+    }
+
+    #[test]
+    fn loss_ids_roundtrip() {
+        for loss in [Loss::Mse, Loss::Ce] {
+            assert_eq!(loss_from_id(loss_id(loss)).unwrap().name(), loss.name());
+        }
+        assert!(loss_from_id(9).is_err());
+    }
+}

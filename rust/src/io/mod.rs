@@ -1,0 +1,5 @@
+//! Persistence layer: the versioned, FNV-checksummed binary checkpoint
+//! that carries a trained pool from `TrainSession` to the serving side.
+pub mod checkpoint;
+
+pub use checkpoint::{fused_bits_equal, PoolCheckpoint, RankEntry};

@@ -3,16 +3,20 @@
 //!
 //! Five execution strategies (native fused, native sequential, PJRT
 //! fused, PJRT sequential, deep native) behind one [`coordinator::PoolEngine`]
-//! trait and one [`coordinator::TrainSession`] loop. See the repository
-//! `README.md` for the quickstart and the strategy table.
+//! trait and one [`coordinator::TrainSession`] loop, plus an inference
+//! subsystem ([`io`] checkpoints + the [`serve`] micro-batch engine) that
+//! turns the trained pool's winners into a serving system. See the
+//! repository `README.md` for the quickstart and the strategy table.
 pub mod bench_harness;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod io;
 pub mod metrics;
 pub mod nn;
 pub mod pool;
 pub mod runtime;
 pub mod selection;
+pub mod serve;
 pub mod tensor;
 pub mod util;

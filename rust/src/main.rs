@@ -1,25 +1,34 @@
 //! `pmlp` — the ParallelMLPs coordinator CLI.
 //!
 //! Subcommands:
-//! * `selftest`   — runtime smoke: manifest, PJRT, 4-way engine agreement
-//! * `train`      — run a config-driven experiment (`--config file.toml`)
-//! * `bench`      — regenerate a paper table (`--table 1|2`)
-//! * `inspect`    — pool/layout accounting (the §5 memory note) + artifacts
+//! * `selftest`    — runtime smoke: manifest, PJRT, 4-way engine agreement
+//! * `train`       — run a config-driven experiment (`--config file.toml`)
+//! * `rank`        — train, then print only the top-k ranking table
+//! * `export`      — train, checkpoint the pool, extract the top-k winners
+//! * `serve-bench` — offline load generator for the micro-batch server
+//! * `bench`       — regenerate a paper table (`--table 1|2`)
+//! * `inspect`     — pool/layout accounting (the §5 memory note) + artifacts
 //!
 //! Python never runs here: artifacts must already exist (`make artifacts`).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use parallel_mlps::bench_harness::{artifacts_dir, BenchArgs};
 use parallel_mlps::config::{ExperimentConfig, Strategy};
-use parallel_mlps::coordinator::{render_paper_table, run_experiment, run_table, SweepConfig, TableKind};
+use parallel_mlps::coordinator::{
+    render_paper_table, run_experiment, run_experiment_trained, run_table, SweepConfig, TableKind,
+};
 use parallel_mlps::data::SynthKind;
+use parallel_mlps::io::{fused_bits_equal, PoolCheckpoint};
 use parallel_mlps::metrics::Table;
 use parallel_mlps::nn::init::init_pool;
 use parallel_mlps::nn::loss::Loss;
 use parallel_mlps::pool::{PoolLayout, PoolSpec};
 use parallel_mlps::runtime::{PjrtParallelEngine, PjrtRuntime, PjrtSequentialEngine};
-use parallel_mlps::selection::report;
+use parallel_mlps::selection::{report, top_k_indices};
+use parallel_mlps::serve::bench::{render_reports, reports_json, run_load, synthetic_model, LoadSpec};
+use parallel_mlps::serve::{ModelRegistry, ServableModel, ServeConfig};
 use parallel_mlps::util::cli::Args;
 
 const USAGE: &str = "\
@@ -32,6 +41,11 @@ USAGE:
              [--dataset NAME] [--samples N] [--features N] [--epochs N]
              [--batch N] [--lr F] [--seed N] [--threads N]
              [--early-stop N] [--verbose] [--top K]
+  pmlp rank  (same flags as train) [--top K]
+  pmlp export --out FILE [--top K] (same training flags as train)
+  pmlp serve-bench [--ckpt FILE | --hidden N --features N --out-dim N]
+             [--rows N] [--clients N] [--depth N] [--batch-sizes a,b,c]
+             [--threads N] [--queue-cap N] [--seed N] [--out FILE.json]
   pmlp bench --table 1|2 [--quick] [--samples a,b] [--features a,b]
              [--batches a,b] [--epochs N] [--warmup N] [--threads N]
              [--paper-scale] [--out FILE] [--artifacts DIR]
@@ -40,6 +54,9 @@ USAGE:
 
 train runs every strategy through the unified PoolEngine/TrainSession
 API; --early-stop N adds patience-N early stopping on validation loss.
+export writes a versioned, FNV-checksummed pool checkpoint; serve-bench
+replays a synthetic load against the micro-batch server and reports
+rows/s plus p50/p99 latency per max_batch.
 ";
 
 fn main() {
@@ -60,6 +77,9 @@ fn real_main() -> anyhow::Result<()> {
     match cmd {
         "selftest" => selftest(&args),
         "train" => train(&args),
+        "rank" => rank(&args),
+        "export" => export(&args),
+        "serve-bench" => serve_bench(&args),
         "bench" => bench(&args),
         "inspect" => inspect(&args),
         "help" | "--help" | "-h" => {
@@ -199,6 +219,156 @@ fn train(args: &Args) -> anyhow::Result<()> {
         rep.n_train, rep.n_val, rep.n_test
     );
     println!("{}", report(&rep.ranked, cfg.loss, top_k));
+    Ok(())
+}
+
+/// Train, then print only the top-k ranking table — the §5 grid-search
+/// answer, machine-friendly (no progress prose around it).
+fn rank(args: &Args) -> anyhow::Result<()> {
+    let cfg = train_config(args)?;
+    let top_k: usize = args.get_parse_or("top", 10).map_err(|e| anyhow::anyhow!(e))?;
+    let rep = run_experiment(&cfg)?;
+    println!("{}", report(&rep.ranked, cfg.loss, top_k));
+    Ok(())
+}
+
+/// Train, snapshot the whole pool into a checkpoint, and report the
+/// top-k winners that are now servable from it.
+fn export(args: &Args) -> anyhow::Result<()> {
+    let cfg = train_config(args)?;
+    anyhow::ensure!(
+        !cfg.strategy.is_deep(),
+        "checkpoint format v1 stores single-hidden-layer pools; use --strategy native_parallel or native_sequential"
+    );
+    let out_path = PathBuf::from(args.get_or("out", "pool.ckpt"));
+    let top_k: usize = args.get_parse_or("top", 5).map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "training {} ({} models) for export...",
+        cfg.strategy.name(),
+        cfg.pool_spec()?.n_models()
+    );
+    let trained = run_experiment_trained(&cfg)?;
+    let layout = PoolLayout::build(&trained.spec);
+    let ckpt = PoolCheckpoint::from_engine(
+        trained.engine.as_ref(),
+        &layout,
+        cfg.features,
+        trained.out_dim,
+        cfg.loss,
+        &trained.report.ranked,
+    )?;
+    ckpt.save(&out_path)?;
+    // paranoid roundtrip before declaring success: reload and compare bits
+    let back = PoolCheckpoint::load(&out_path)?;
+    anyhow::ensure!(
+        fused_bits_equal(&ckpt.params, &back.params),
+        "checkpoint roundtrip mismatch (disk corruption?)"
+    );
+    println!(
+        "checkpoint: {} ({} models, {} bytes, fnv-checksummed, roundtrip verified)",
+        out_path.display(),
+        ckpt.n_models(),
+        std::fs::metadata(&out_path)?.len()
+    );
+    let mut registry = ModelRegistry::new();
+    let names = registry.load_top_k("pool", &ckpt, top_k)?;
+    println!(
+        "winners extracted: {names:?} (pool indices {:?})",
+        top_k_indices(&trained.report.ranked, top_k)
+    );
+    println!("{}", report(&trained.report.ranked, cfg.loss, top_k));
+    Ok(())
+}
+
+/// Offline load generator: replay single-row predict traffic against the
+/// micro-batch server at several `max_batch` settings and compare.
+fn serve_bench(args: &Args) -> anyhow::Result<()> {
+    let parse = |e: String| anyhow::anyhow!(e);
+    let rows: usize = args.get_parse_or("rows", 4096).map_err(parse)?;
+    let clients: usize = args.get_parse_or("clients", 4).map_err(parse)?;
+    let depth: usize = args.get_parse_or("depth", 16).map_err(parse)?;
+    // 0 = auto (all cores, honoring PMLP_THREADS) — matches `train`
+    let threads: usize = args.get_parse_or("threads", 0).map_err(parse)?;
+    let queue_cap: usize = args.get_parse_or("queue-cap", 1024).map_err(parse)?;
+    let seed: u64 = args.get_parse_or("seed", 42).map_err(parse)?;
+    let batch_sizes: Vec<usize> = args
+        .get_list("batch-sizes")
+        .map_err(parse)?
+        .unwrap_or_else(|| vec![1, 8, 64]);
+    anyhow::ensure!(clients >= 1 && rows >= clients, "need at least one row per client");
+    anyhow::ensure!(
+        !batch_sizes.is_empty() && batch_sizes.iter().all(|&b| b >= 1),
+        "--batch-sizes must be positive integers"
+    );
+
+    let model = match args.get("ckpt") {
+        Some(p) => {
+            let ckpt = PoolCheckpoint::load(Path::new(p))?;
+            let (winner, label) = match ckpt.winner() {
+                Some(w) => (w, "checkpoint winner"),
+                None => (0, "checkpoint stores no ranking; falling back to"),
+            };
+            let m = ServableModel::from_checkpoint(&ckpt, winner, format!("{p}#top1"))?;
+            println!(
+                "serving {label}: model {winner} (h={}, {}, F={}, O={})",
+                m.hidden(),
+                m.act.name(),
+                m.features(),
+                m.out()
+            );
+            Arc::new(m)
+        }
+        None => {
+            let hidden: usize = args.get_parse_or("hidden", 128).map_err(parse)?;
+            let features: usize = args.get_parse_or("features", 64).map_err(parse)?;
+            let out_dim: usize = args.get_parse_or("out-dim", 8).map_err(parse)?;
+            println!("serving synthetic winner: h={hidden}, relu, F={features}, O={out_dim}");
+            synthetic_model(hidden, features, out_dim, seed)
+        }
+    };
+
+    // round up so at least --rows total rows are served (the reports
+    // count actual rows, so no silent undershoot)
+    let spec = LoadSpec { rows_per_client: rows.div_ceil(clients), clients, depth, seed };
+    let mut reports = Vec::with_capacity(batch_sizes.len());
+    for &max_batch in &batch_sizes {
+        let cfg = ServeConfig { max_batch, queue_cap, threads };
+        let rep = run_load(&model, cfg, &spec)?;
+        eprintln!(
+            "max_batch {max_batch}: {:.0} rows/s (p50 {:.3} ms, p99 {:.3} ms, mean batch {:.1})",
+            rep.rows_per_s, rep.p50_ms, rep.p99_ms, rep.mean_batch
+        );
+        reports.push(rep);
+    }
+    println!(
+        "{}",
+        render_reports(
+            &format!(
+                "serve-bench: {clients} clients x {} rows, depth {depth}",
+                spec.rows_per_client
+            ),
+            &reports
+        )
+    );
+    if let Some(base) = reports.iter().find(|r| r.max_batch == 1) {
+        if let Some(best) = reports
+            .iter()
+            .filter(|r| r.max_batch > 1)
+            .max_by(|a, b| a.rows_per_s.total_cmp(&b.rows_per_s))
+        {
+            println!(
+                "micro-batching speedup vs batch=1: {:.2}x ({:.0} -> {:.0} rows/s)",
+                best.rows_per_s / base.rows_per_s,
+                base.rows_per_s,
+                best.rows_per_s
+            );
+        }
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, reports_json(&model, &spec, &reports))
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        eprintln!("report written to {path}");
+    }
     Ok(())
 }
 

@@ -10,7 +10,7 @@
 
 use crate::nn::act::Act;
 use crate::pool::PoolLayout;
-use crate::tensor::Tensor;
+use crate::tensor::{matmul, Tensor};
 use crate::util::rng::Rng;
 
 /// One dense MLP's parameters (Fig. 1 shapes: `w1 [h,F]`, `w2 [O,h]`).
@@ -41,6 +41,19 @@ impl ModelParams {
             .max(self.b1.max_abs_diff(&other.b1))
             .max(self.w2.max_abs_diff(&other.w2))
             .max(self.b2.max_abs_diff(&other.b2))
+    }
+
+    /// Dense forward to logits `[B, O]` — the one inference path: the
+    /// sequential trainer and the serving engine both run exactly this,
+    /// so a served prediction is bit-identical to an evaluated one.
+    pub fn forward(&self, x: &Tensor, act: Act, threads: usize) -> Tensor {
+        let mut pre = matmul::nt(x, &self.w1, threads);
+        crate::nn::mlp::add_bias_rows_vec(&mut pre, self.b1.data());
+        let mut hact = Tensor::zeros(pre.shape());
+        act.apply_slice(pre.data(), hact.data_mut());
+        let mut logits = matmul::nt(&hact, &self.w2, threads);
+        crate::nn::mlp::add_bias_rows(&mut logits, &self.b2);
+        logits
     }
 }
 

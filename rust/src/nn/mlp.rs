@@ -25,14 +25,10 @@ impl MlpTrainer {
     }
 
     /// Forward to logits `[B, O]` (allocates — sequential path is the
-    /// baseline whose per-op overhead we *want* to exhibit).
+    /// baseline whose per-op overhead we *want* to exhibit). Delegates
+    /// to [`ModelParams::forward`], the inference path serving shares.
     pub fn forward(&self, x: &Tensor) -> Tensor {
-        let h = self.hidden_pre(x);
-        let mut ha = Tensor::zeros(h.shape());
-        self.act.apply_slice(h.data(), ha.data_mut());
-        let mut logits = matmul::nt(&ha, &self.params.w2, self.threads);
-        add_bias_rows(&mut logits, &self.params.b2);
-        logits
+        self.params.forward(x, self.act, self.threads)
     }
 
     fn hidden_pre(&self, x: &Tensor) -> Tensor {

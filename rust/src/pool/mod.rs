@@ -5,3 +5,13 @@ mod spec;
 
 pub use layout::{PoolLayout, PAD_SLOT};
 pub use spec::PoolSpec;
+
+use crate::nn::act::Act;
+use crate::nn::init::{FusedParams, ModelParams};
+
+/// Slice one model's dense parameters — and its activation — out of the
+/// fused layout: the §5 "use the winner" step. Selection speaks original
+/// pool indices, so `m` is the index `selection::rank_models` reports.
+pub fn extract_model(fused: &FusedParams, layout: &PoolLayout, m: usize) -> (ModelParams, Act) {
+    (crate::nn::init::extract_model(fused, layout, m), layout.spec().models()[m].1)
+}

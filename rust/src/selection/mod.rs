@@ -61,6 +61,12 @@ pub fn top_k(ranked: &[RankedModel], k: usize) -> &[RankedModel] {
     &ranked[..k.min(ranked.len())]
 }
 
+/// Original-pool indices of the best-first top-k — what `pmlp export`
+/// hands to the checkpoint/registry side.
+pub fn top_k_indices(ranked: &[RankedModel], k: usize) -> Vec<usize> {
+    top_k(ranked, k).iter().map(|r| r.index).collect()
+}
+
 /// Aggregate: best metric per hidden size (the "distribution of models"
 /// the paper proposes investigating in §6).
 pub fn best_per_hidden(ranked: &[RankedModel]) -> Vec<(u32, RankedModel)> {
@@ -146,6 +152,15 @@ mod tests {
         let losses = [f32::NAN, 0.1, 0.2, 0.3];
         let ranked = rank_models(&s, &losses, &losses, Loss::Mse);
         assert_eq!(ranked.last().unwrap().index, 0);
+    }
+
+    #[test]
+    fn top_k_indices_follow_ranking() {
+        let s = spec();
+        let losses = [0.5, 0.1, 0.3, 0.2];
+        let ranked = rank_models(&s, &losses, &losses, Loss::Mse);
+        assert_eq!(top_k_indices(&ranked, 2), vec![1, 3]);
+        assert_eq!(top_k_indices(&ranked, 99).len(), 4);
     }
 
     #[test]

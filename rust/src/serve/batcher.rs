@@ -1,0 +1,306 @@
+//! The micro-batched serving engine: a bounded request queue plus a
+//! worker that coalesces single-row predict requests into one `[B, F]`
+//! fused forward.
+//!
+//! This is the inference-side mirror of the paper's locality argument
+//! (§2.2): B tiny `[1, F]` matmuls re-stream the weight matrices B times
+//! and pay B dispatches, while one coalesced `[B, F]` matmul reads the
+//! weights once and amortizes every wakeup. The per-row results are
+//! identical either way (each logit is an independent row·weight dot
+//! product), so batching is purely a throughput decision.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::serve::registry::ServableModel;
+use crate::tensor::Tensor;
+
+/// Serving knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// largest coalesced batch one fused forward serves
+    pub max_batch: usize,
+    /// bounded request queue: submitters block while it is full
+    pub queue_cap: usize,
+    /// threads for the coalesced matmul (0 = all cores via `PMLP_THREADS`)
+    pub threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: 64, queue_cap: 1024, threads: 1 }
+    }
+}
+
+struct Request {
+    row: Vec<f32>,
+    tx: mpsc::Sender<Vec<f32>>,
+}
+
+struct Inner {
+    queue: VecDeque<Request>,
+    shutdown: bool,
+}
+
+struct Shared {
+    inner: Mutex<Inner>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    queue_cap: usize,
+    features: usize,
+    rows: AtomicUsize,
+    batches: AtomicUsize,
+    max_batch_seen: AtomicUsize,
+}
+
+/// Counters the worker maintains while serving.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeStats {
+    pub rows: usize,
+    pub batches: usize,
+    /// largest coalesced batch actually executed
+    pub max_batch_seen: usize,
+}
+
+impl ServeStats {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.rows as f64 / self.batches as f64
+        }
+    }
+}
+
+/// A running micro-batch server for one model. Dropping (or calling
+/// [`Server::shutdown`]) drains every queued request, answers it, then
+/// stops the worker.
+pub struct Server {
+    shared: Arc<Shared>,
+    worker: Option<JoinHandle<()>>,
+}
+
+/// A cheap, cloneable request submitter.
+#[derive(Clone)]
+pub struct Client {
+    shared: Arc<Shared>,
+}
+
+/// An in-flight prediction; [`Ticket::wait`] blocks for the logits.
+pub struct Ticket {
+    rx: mpsc::Receiver<Vec<f32>>,
+}
+
+impl Ticket {
+    pub fn wait(self) -> anyhow::Result<Vec<f32>> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server shut down before answering"))
+    }
+}
+
+impl Server {
+    pub fn start(model: Arc<ServableModel>, cfg: ServeConfig) -> anyhow::Result<Server> {
+        anyhow::ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        anyhow::ensure!(cfg.queue_cap >= 1, "queue_cap must be >= 1");
+        let threads = if cfg.threads == 0 {
+            crate::util::threadpool::num_threads()
+        } else {
+            cfg.threads
+        };
+        let shared = Arc::new(Shared {
+            inner: Mutex::new(Inner { queue: VecDeque::new(), shutdown: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            queue_cap: cfg.queue_cap,
+            features: model.features(),
+            rows: AtomicUsize::new(0),
+            batches: AtomicUsize::new(0),
+            max_batch_seen: AtomicUsize::new(0),
+        });
+        let worker = {
+            let shared = shared.clone();
+            let max_batch = cfg.max_batch;
+            std::thread::Builder::new()
+                .name(format!("pmlp-serve-{}", model.name))
+                .spawn(move || worker_loop(&shared, &model, max_batch, threads))?
+        };
+        Ok(Server { shared, worker: Some(worker) })
+    }
+
+    pub fn client(&self) -> Client {
+        Client { shared: self.shared.clone() }
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            rows: self.shared.rows.load(Ordering::Relaxed),
+            batches: self.shared.batches.load(Ordering::Relaxed),
+            max_batch_seen: self.shared.max_batch_seen.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop accepting new requests, answer everything already queued,
+    /// join the worker and report the final counters.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.finish();
+        self.stats()
+    }
+
+    fn finish(&mut self) {
+        {
+            let mut inner = self.shared.inner.lock().unwrap();
+            inner.shutdown = true;
+        }
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+impl Client {
+    /// Enqueue one row, blocking while the queue is full; returns a
+    /// [`Ticket`] to wait on. Errors on width mismatch or after shutdown.
+    pub fn submit(&self, row: &[f32]) -> anyhow::Result<Ticket> {
+        anyhow::ensure!(
+            row.len() == self.shared.features,
+            "request has {} features, model expects {}",
+            row.len(),
+            self.shared.features
+        );
+        let (tx, rx) = mpsc::channel();
+        let mut inner = self.shared.inner.lock().unwrap();
+        loop {
+            anyhow::ensure!(!inner.shutdown, "server is shut down");
+            if inner.queue.len() < self.shared.queue_cap {
+                break;
+            }
+            inner = self.shared.not_full.wait(inner).unwrap();
+        }
+        inner.queue.push_back(Request { row: row.to_vec(), tx });
+        drop(inner);
+        self.shared.not_empty.notify_one();
+        Ok(Ticket { rx })
+    }
+
+    /// Synchronous predict: submit one row and wait for its logits.
+    pub fn predict(&self, row: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.submit(row)?.wait()
+    }
+}
+
+fn worker_loop(shared: &Shared, model: &ServableModel, max_batch: usize, threads: usize) {
+    let features = shared.features;
+    loop {
+        let mut batch: Vec<Request> = Vec::with_capacity(max_batch);
+        {
+            let mut inner = shared.inner.lock().unwrap();
+            while inner.queue.is_empty() {
+                if inner.shutdown {
+                    return; // queue drained, nothing can arrive anymore
+                }
+                inner = shared.not_empty.wait(inner).unwrap();
+            }
+            while batch.len() < max_batch {
+                match inner.queue.pop_front() {
+                    Some(r) => batch.push(r),
+                    None => break,
+                }
+            }
+        }
+        shared.not_full.notify_all();
+
+        // one fused matmul over the coalesced batch instead of B tiny ones
+        let b = batch.len();
+        let mut x = Tensor::zeros(&[b, features]);
+        for (i, r) in batch.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(&r.row);
+        }
+        let logits = model.predict(&x, threads);
+
+        shared.rows.fetch_add(b, Ordering::Relaxed);
+        shared.batches.fetch_add(1, Ordering::Relaxed);
+        shared.max_batch_seen.fetch_max(b, Ordering::Relaxed);
+        for (i, r) in batch.into_iter().enumerate() {
+            // a requester that dropped its ticket is not an error
+            let _ = r.tx.send(logits.row(i).to_vec());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::act::Act;
+    use crate::nn::init::init_model;
+    use crate::serve::registry::ServableModel;
+
+    fn toy_model() -> Arc<ServableModel> {
+        Arc::new(ServableModel::new("toy", 0, init_model(1, 0, 4, 3, 2), Act::Tanh))
+    }
+
+    #[test]
+    fn single_request_matches_direct_forward() {
+        let model = toy_model();
+        let server = Server::start(model.clone(), ServeConfig::default()).unwrap();
+        let client = server.client();
+        let row = [0.5f32, -1.0, 2.0];
+        let got = client.predict(&row).unwrap();
+        let want = model.predict(&Tensor::from_vec(row.to_vec(), &[1, 3]), 1);
+        assert_eq!(got.len(), 2);
+        for (g, w) in got.iter().zip(want.data()) {
+            assert!((g - w).abs() < 1e-6, "{g} vs {w}");
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.rows, 1);
+        assert_eq!(stats.batches, 1);
+        assert_eq!(stats.max_batch_seen, 1);
+    }
+
+    #[test]
+    fn rejects_wrong_feature_width() {
+        let server = Server::start(toy_model(), ServeConfig::default()).unwrap();
+        let err = server.client().submit(&[1.0, 2.0]).unwrap_err().to_string();
+        assert!(err.contains("features"), "{err}");
+    }
+
+    #[test]
+    fn pending_requests_are_answered_through_shutdown() {
+        let model = toy_model();
+        let server = Server::start(model, ServeConfig { max_batch: 4, queue_cap: 64, threads: 1 }).unwrap();
+        let client = server.client();
+        let tickets: Vec<Ticket> =
+            (0..16).map(|i| client.submit(&[i as f32, 0.0, 1.0]).unwrap()).collect();
+        let stats = server.shutdown(); // drains the queue before joining
+        assert_eq!(stats.rows, 16);
+        for t in tickets {
+            assert_eq!(t.wait().unwrap().len(), 2);
+        }
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors() {
+        let server = Server::start(toy_model(), ServeConfig::default()).unwrap();
+        let client = server.client();
+        drop(server);
+        let err = client.submit(&[0.0, 0.0, 0.0]).unwrap_err().to_string();
+        assert!(err.contains("shut down"), "{err}");
+        assert!(client.predict(&[0.0, 0.0, 0.0]).is_err());
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        assert!(Server::start(toy_model(), ServeConfig { max_batch: 0, queue_cap: 8, threads: 1 }).is_err());
+        assert!(Server::start(toy_model(), ServeConfig { max_batch: 8, queue_cap: 0, threads: 1 }).is_err());
+    }
+}

@@ -1,0 +1,265 @@
+//! Offline load generator for the serving engine: closed-loop clients
+//! with pipelined requests, per-request latency percentiles and rows/s —
+//! the numbers `pmlp serve-bench` and `benches/serve_bench.rs` report.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::metrics::Table;
+use crate::nn::act::Act;
+use crate::nn::init::init_model;
+use crate::serve::batcher::{ServeConfig, Server};
+use crate::serve::registry::ServableModel;
+use crate::util::rng::Rng;
+
+/// Shape of one load run.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadSpec {
+    /// rows each client sends over the run
+    pub rows_per_client: usize,
+    pub clients: usize,
+    /// async requests each client keeps in flight (1 = strict ping-pong)
+    pub depth: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        LoadSpec { rows_per_client: 1024, clients: 4, depth: 16, seed: 42 }
+    }
+}
+
+/// What one load run measured.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub max_batch: usize,
+    pub rows: usize,
+    pub wall_s: f64,
+    pub rows_per_s: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub batches: usize,
+    pub mean_batch: f64,
+}
+
+/// The synthetic "winner" `serve-bench` uses when no checkpoint is given.
+pub fn synthetic_model(hidden: usize, features: usize, out: usize, seed: u64) -> Arc<ServableModel> {
+    Arc::new(ServableModel::new(
+        "synthetic/relu",
+        0,
+        init_model(seed, 0, hidden, features, out),
+        Act::Relu,
+    ))
+}
+
+/// Drive `spec` against a fresh server for `model` and measure it.
+/// Latency is submit-to-response (queueing included), throughput is
+/// total rows over the whole run's wall time.
+pub fn run_load(
+    model: &Arc<ServableModel>,
+    cfg: ServeConfig,
+    spec: &LoadSpec,
+) -> anyhow::Result<LoadReport> {
+    anyhow::ensure!(
+        spec.clients >= 1 && spec.rows_per_client >= 1 && spec.depth >= 1,
+        "load spec fields must all be >= 1"
+    );
+    let server = Server::start(model.clone(), cfg)?;
+    let features = model.features();
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(spec.clients);
+    for c in 0..spec.clients {
+        let client = server.client();
+        let (rows, depth, seed) = (spec.rows_per_client, spec.depth, spec.seed);
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+            let mut root = Rng::new(seed);
+            let mut rng = root.fork(c as u64);
+            let mut lats = Vec::with_capacity(rows);
+            let mut row = vec![0.0f32; features];
+            let mut sent = 0usize;
+            while sent < rows {
+                let window = depth.min(rows - sent);
+                let mut tickets = Vec::with_capacity(window);
+                for _ in 0..window {
+                    for v in row.iter_mut() {
+                        *v = rng.uniform_in(-1.0, 1.0);
+                    }
+                    tickets.push((Instant::now(), client.submit(&row)?));
+                }
+                for (t, ticket) in tickets {
+                    ticket.wait()?;
+                    lats.push(t.elapsed().as_secs_f64());
+                }
+                sent += window;
+            }
+            Ok(lats)
+        }));
+    }
+    let mut lats: Vec<f64> = Vec::with_capacity(spec.clients * spec.rows_per_client);
+    for h in handles {
+        lats.extend(h.join().map_err(|_| anyhow::anyhow!("load client panicked"))??);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+    lats.sort_by(f64::total_cmp);
+    let rows = lats.len();
+    Ok(LoadReport {
+        max_batch: cfg.max_batch,
+        rows,
+        wall_s,
+        rows_per_s: rows as f64 / wall_s.max(1e-9),
+        p50_ms: percentile(&lats, 0.50) * 1e3,
+        p99_ms: percentile(&lats, 0.99) * 1e3,
+        batches: stats.batches,
+        mean_batch: stats.mean_batch(),
+    })
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice, `q` in [0, 1].
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+    sorted[idx]
+}
+
+/// Markdown table over several runs (one row per max_batch).
+pub fn render_reports(title: &str, reports: &[LoadReport]) -> String {
+    let mut t = Table::new(
+        title,
+        &["max_batch", "rows", "rows/s", "p50_ms", "p99_ms", "mean_batch", "batches"],
+    );
+    for r in reports {
+        t.row(vec![
+            r.max_batch.to_string(),
+            r.rows.to_string(),
+            format!("{:.0}", r.rows_per_s),
+            format!("{:.3}", r.p50_ms),
+            format!("{:.3}", r.p99_ms),
+            format!("{:.1}", r.mean_batch),
+            r.batches.to_string(),
+        ]);
+    }
+    t.to_markdown()
+}
+
+/// Escape a string for embedding in a JSON document (model names can
+/// carry user-supplied checkpoint paths).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON document for `BENCH_serve.json` (hand-built; the vendored JSON
+/// module is a parser only).
+pub fn reports_json(model: &ServableModel, spec: &LoadSpec, reports: &[LoadReport]) -> String {
+    let mut runs = String::new();
+    for (i, r) in reports.iter().enumerate() {
+        if i > 0 {
+            runs.push_str(",\n    ");
+        }
+        runs.push_str(&format!(
+            "{{\"max_batch\": {}, \"rows\": {}, \"rows_per_s\": {:.1}, \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \"mean_batch\": {:.2}, \"batches\": {}}}",
+            r.max_batch, r.rows, r.rows_per_s, r.p50_ms, r.p99_ms, r.mean_batch, r.batches
+        ));
+    }
+    format!(
+        "{{\n  \"bench\": \"serve\",\n  \"model\": {{\"name\": \"{}\", \"hidden\": {}, \"features\": {}, \"out\": {}, \"act\": \"{}\"}},\n  \"clients\": {},\n  \"depth\": {},\n  \"rows_per_client\": {},\n  \"runs\": [\n    {}\n  ]\n}}\n",
+        json_str(&model.name),
+        model.hidden(),
+        model.features(),
+        model.out(),
+        model.act.name(),
+        spec.clients,
+        spec.depth,
+        spec.rows_per_client,
+        runs
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        assert_eq!(percentile(&xs, 0.5), 51.0); // round(99 * 0.5) = 50
+        assert!(percentile(&[], 0.5).is_nan());
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+    }
+
+    #[test]
+    fn tiny_load_run_completes_and_counts_rows() {
+        let model = synthetic_model(8, 4, 2, 7);
+        let spec = LoadSpec { rows_per_client: 32, clients: 2, depth: 4, seed: 7 };
+        let rep = run_load(&model, ServeConfig { max_batch: 8, queue_cap: 64, threads: 1 }, &spec)
+            .unwrap();
+        assert_eq!(rep.rows, 64);
+        assert!(rep.rows_per_s > 0.0);
+        assert!(rep.p50_ms >= 0.0 && rep.p99_ms >= rep.p50_ms);
+        assert!(rep.mean_batch >= 1.0);
+        assert!(rep.batches >= 64 / 8);
+    }
+
+    #[test]
+    fn tiny_queue_still_serves_everything() {
+        // queue_cap 1 forces submitters to block on not_full constantly;
+        // correctness must not depend on queue headroom
+        let model = synthetic_model(4, 3, 2, 9);
+        let spec = LoadSpec { rows_per_client: 16, clients: 3, depth: 4, seed: 1 };
+        let rep = run_load(&model, ServeConfig { max_batch: 2, queue_cap: 1, threads: 1 }, &spec)
+            .unwrap();
+        assert_eq!(rep.rows, 48);
+    }
+
+    #[test]
+    fn json_report_parses_back() {
+        let model = synthetic_model(8, 4, 2, 7);
+        let spec = LoadSpec { rows_per_client: 8, clients: 1, depth: 2, seed: 7 };
+        let rep = run_load(&model, ServeConfig::default(), &spec).unwrap();
+        let doc = reports_json(&model, &spec, &[rep]);
+        let v = crate::util::json::parse(&doc).expect("self-emitted JSON must parse");
+        assert_eq!(v.req("bench").unwrap().as_str(), Some("serve"));
+        assert_eq!(v.req("runs").unwrap().as_arr().unwrap().len(), 1);
+        let run = &v.req("runs").unwrap().as_arr().unwrap()[0];
+        assert_eq!(run.req("rows").unwrap().as_usize(), Some(8));
+    }
+
+    #[test]
+    fn json_escapes_hostile_model_names() {
+        // model names carry user-supplied checkpoint paths; quotes and
+        // backslashes must not corrupt the document
+        let mut model = (*synthetic_model(8, 4, 2, 7)).clone();
+        model.name = "a\"b\\c\n.ckpt#top1".to_string();
+        let spec = LoadSpec { rows_per_client: 8, clients: 1, depth: 2, seed: 7 };
+        let doc = reports_json(&model, &spec, &[]);
+        let v = crate::util::json::parse(&doc).expect("escaped JSON must parse");
+        assert_eq!(
+            v.req("model").unwrap().req("name").unwrap().as_str(),
+            Some("a\"b\\c\n.ckpt#top1")
+        );
+    }
+
+    #[test]
+    fn markdown_renders_one_row_per_report() {
+        let model = synthetic_model(8, 4, 2, 3);
+        let spec = LoadSpec { rows_per_client: 8, clients: 1, depth: 1, seed: 3 };
+        let a = run_load(&model, ServeConfig { max_batch: 1, queue_cap: 8, threads: 1 }, &spec)
+            .unwrap();
+        let md = render_reports("serve", &[a]);
+        assert!(md.contains("max_batch"));
+        assert!(md.contains("rows/s"));
+    }
+}

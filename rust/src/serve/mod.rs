@@ -1,0 +1,19 @@
+//! The inference subsystem: serve the winners of a trained pool.
+//!
+//! Training answers "which (h, activation) wins?" (§5); this module
+//! answers "now serve it". Three pieces:
+//!
+//! * [`ServableModel`] / [`ModelRegistry`] (`registry`) — winners sliced
+//!   out of a checkpoint into compact dense params, addressable by name.
+//! * [`Server`] (`batcher`) — a bounded request queue plus a worker that
+//!   coalesces single-row predict requests into one `[B, F]` fused
+//!   forward: the serving-side version of the paper's "bigger matrices →
+//!   better locality" argument.
+//! * `bench` — an offline load generator reporting rows/s and p50/p99
+//!   latency for micro-batched vs. per-row dispatch.
+pub mod batcher;
+pub mod bench;
+pub mod registry;
+
+pub use batcher::{Client, ServeConfig, ServeStats, Server, Ticket};
+pub use registry::{ModelRegistry, ServableModel};

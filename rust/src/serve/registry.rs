@@ -1,0 +1,196 @@
+//! Servable models and the named registry the serving engine draws from.
+//!
+//! A `ServableModel` is one winner sliced out of a trained pool: compact
+//! dense parameters plus its activation, running the same dense forward
+//! as `MlpTrainer` (`ModelParams::forward`). The `ModelRegistry` maps
+//! serving names to models, typically loaded straight from a checkpoint's
+//! stored ranking (`pool/top1`, `pool/top2`, ...).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::io::checkpoint::PoolCheckpoint;
+use crate::nn::act::Act;
+use crate::nn::init::ModelParams;
+use crate::tensor::Tensor;
+
+/// One deployable model: dense params + activation + provenance.
+#[derive(Clone, Debug)]
+pub struct ServableModel {
+    pub name: String,
+    /// original pool index this model was extracted from
+    pub index: usize,
+    pub act: Act,
+    /// validation stats recorded at export time (NaN when unknown)
+    pub val_loss: f32,
+    pub val_metric: f32,
+    pub params: ModelParams,
+}
+
+impl ServableModel {
+    pub fn new(name: impl Into<String>, index: usize, params: ModelParams, act: Act) -> ServableModel {
+        ServableModel {
+            name: name.into(),
+            index,
+            act,
+            val_loss: f32::NAN,
+            val_metric: f32::NAN,
+            params,
+        }
+    }
+
+    /// Extract model `index` out of a checkpoint, carrying over its
+    /// validation stats when the checkpoint stored a ranking.
+    pub fn from_checkpoint(
+        ckpt: &PoolCheckpoint,
+        index: usize,
+        name: impl Into<String>,
+    ) -> anyhow::Result<ServableModel> {
+        let (params, act) = ckpt.extract(index)?;
+        let mut model = ServableModel::new(name, index, params, act);
+        if let Some(e) = ckpt.ranking.iter().find(|e| e.index == index) {
+            model.val_loss = e.val_loss;
+            model.val_metric = e.val_metric;
+        }
+        Ok(model)
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.params.hidden()
+    }
+
+    pub fn features(&self) -> usize {
+        self.params.features()
+    }
+
+    pub fn out(&self) -> usize {
+        self.params.out()
+    }
+
+    /// Dense forward over a coalesced `[B, F]` batch to logits `[B, O]`.
+    pub fn predict(&self, x: &Tensor, threads: usize) -> Tensor {
+        self.params.forward(x, self.act, threads)
+    }
+}
+
+/// Named servable models (shared handles, so a server can hold a model
+/// while the registry keeps serving lookups).
+#[derive(Debug, Default)]
+pub struct ModelRegistry {
+    models: BTreeMap<String, Arc<ServableModel>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Insert (or replace) a model under its own name.
+    pub fn insert(&mut self, model: ServableModel) -> Arc<ServableModel> {
+        let handle = Arc::new(model);
+        self.models.insert(handle.name.clone(), handle.clone());
+        handle
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<ServableModel>> {
+        self.models.get(name).cloned()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Load the checkpoint's top-k ranked models as `{prefix}/top{r}`
+    /// (1-based, best first). Checkpoints without a stored ranking fall
+    /// back to original pool order. Returns the registered names.
+    pub fn load_top_k(
+        &mut self,
+        prefix: &str,
+        ckpt: &PoolCheckpoint,
+        k: usize,
+    ) -> anyhow::Result<Vec<String>> {
+        let order: Vec<usize> = if ckpt.ranking.is_empty() {
+            (0..ckpt.n_models()).collect()
+        } else {
+            ckpt.ranking.iter().map(|e| e.index).collect()
+        };
+        let mut names = Vec::new();
+        for (r, &m) in order.iter().take(k).enumerate() {
+            let name = format!("{prefix}/top{}", r + 1);
+            self.insert(ServableModel::from_checkpoint(ckpt, m, name.clone())?);
+            names.push(name);
+        }
+        Ok(names)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::checkpoint::RankEntry;
+    use crate::nn::init::{init_model, init_pool};
+    use crate::nn::loss::Loss;
+    use crate::pool::{PoolLayout, PoolSpec};
+
+    fn ckpt_with_ranking() -> PoolCheckpoint {
+        let spec = PoolSpec::new(vec![(2, Act::Relu), (3, Act::Tanh), (1, Act::Identity)]).unwrap();
+        let layout = PoolLayout::build(&spec);
+        let fused = init_pool(3, &layout, 4, 2);
+        PoolCheckpoint::new(
+            layout,
+            4,
+            2,
+            Loss::Mse,
+            fused,
+            vec![
+                RankEntry { index: 2, val_loss: 0.1, val_metric: 0.1 },
+                RankEntry { index: 0, val_loss: 0.2, val_metric: 0.2 },
+                RankEntry { index: 1, val_loss: 0.3, val_metric: 0.3 },
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn top_k_names_follow_ranking() {
+        let ckpt = ckpt_with_ranking();
+        let mut reg = ModelRegistry::new();
+        let names = reg.load_top_k("pool", &ckpt, 2).unwrap();
+        assert_eq!(names, vec!["pool/top1", "pool/top2"]);
+        assert_eq!(reg.len(), 2);
+        let top1 = reg.get("pool/top1").unwrap();
+        assert_eq!(top1.index, 2);
+        assert_eq!(top1.hidden(), 1);
+        assert!((top1.val_loss - 0.1).abs() < 1e-6);
+        assert!(reg.get("pool/top3").is_none());
+        assert_eq!(reg.names(), vec!["pool/top1", "pool/top2"]);
+    }
+
+    #[test]
+    fn insert_replaces_same_name() {
+        let mut reg = ModelRegistry::new();
+        let a = init_model(1, 0, 2, 4, 2);
+        let b = init_model(2, 1, 3, 4, 2);
+        reg.insert(ServableModel::new("m", 0, a, Act::Relu));
+        reg.insert(ServableModel::new("m", 1, b, Act::Tanh));
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.get("m").unwrap().index, 1);
+    }
+
+    #[test]
+    fn predict_shapes() {
+        let params = init_model(4, 0, 5, 3, 2);
+        let model = ServableModel::new("p", 0, params, Act::Gelu);
+        let x = Tensor::zeros(&[7, 3]);
+        let y = model.predict(&x, 1);
+        assert_eq!(y.shape(), &[7, 2]);
+    }
+}

@@ -5,16 +5,35 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Number of worker threads to use: `PMLP_THREADS` env var or all cores.
+/// Number of worker threads to use: the `PMLP_THREADS` env var when it
+/// is a positive integer, else every available core. Invalid values —
+/// `0` included, which historically fell through to "auto" silently —
+/// are rejected with a warning so a typo'd deployment config is visible.
 pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("PMLP_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            if n >= 1 {
-                return n;
+    match std::env::var("PMLP_THREADS") {
+        Ok(v) => match parse_thread_override(&v) {
+            Ok(n) => n,
+            Err(msg) => {
+                eprintln!("warning: PMLP_THREADS: {msg}; using all cores");
+                default_threads()
             }
-        }
+        },
+        Err(_) => default_threads(),
     }
+}
+
+fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Parse a `PMLP_THREADS` value. `0` is an explicit error rather than an
+/// alias for auto: unset the variable to get auto.
+pub fn parse_thread_override(v: &str) -> Result<usize, String> {
+    match v.trim().parse::<usize>() {
+        Ok(0) => Err("0 is not a valid thread count (unset the variable for auto)".to_string()),
+        Ok(n) => Ok(n),
+        Err(_) => Err(format!("cannot parse {v:?} as a thread count")),
+    }
 }
 
 /// Run `f(chunk_start, chunk_end)` over disjoint chunks of `0..len` on up
@@ -129,5 +148,18 @@ mod tests {
     fn num_threads_env_override() {
         // only checks it doesn't panic and returns >= 1
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn thread_override_rejects_zero_and_garbage() {
+        // parse layer tested directly: mutating the env in tests races
+        // with parallel test threads
+        assert_eq!(parse_thread_override("4"), Ok(4));
+        assert_eq!(parse_thread_override(" 8 "), Ok(8));
+        let zero = parse_thread_override("0").unwrap_err();
+        assert!(zero.contains("0 is not a valid"), "{zero}");
+        assert!(parse_thread_override("-2").is_err());
+        assert!(parse_thread_override("many").is_err());
+        assert!(parse_thread_override("").is_err());
     }
 }

@@ -134,6 +134,92 @@ fn train_deep_native_with_early_stop_end_to_end() {
 }
 
 #[test]
+fn rank_prints_only_the_table() {
+    let out = Command::new(pmlp())
+        .args([
+            "rank", "--strategy", "native_parallel", "--dataset", "blobs", "--samples", "160",
+            "--features", "6", "--epochs", "3", "--batch", "20", "--top", "4",
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("Top-4"), "{stdout}");
+    assert!(stdout.contains("val_loss"), "{stdout}");
+    // rank is the machine-friendly view: no training prose around it
+    assert!(!stdout.contains("trained"), "{stdout}");
+}
+
+#[test]
+fn export_then_serve_bench_from_checkpoint() {
+    let ckpt = std::env::temp_dir().join(format!("pmlp_cli_ckpt_{}.bin", std::process::id()));
+    let out = Command::new(pmlp())
+        .args([
+            "export", "--strategy", "native_parallel", "--dataset", "blobs", "--samples", "160",
+            "--features", "6", "--epochs", "3", "--batch", "20", "--top", "3", "--out",
+            ckpt.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("checkpoint:"), "{stdout}");
+    assert!(stdout.contains("winners extracted"), "{stdout}");
+    let bytes = std::fs::read(&ckpt).unwrap();
+    assert!(bytes.starts_with(b"PMLPCKPT"), "bad magic in exported file");
+
+    // serve the exported winner under a quick load
+    let out2 = Command::new(pmlp())
+        .args([
+            "serve-bench", "--ckpt", ckpt.to_str().unwrap(), "--rows", "128", "--clients", "2",
+            "--depth", "8", "--batch-sizes", "1,4",
+        ])
+        .output()
+        .unwrap();
+    std::fs::remove_file(&ckpt).ok();
+    let stdout2 = String::from_utf8_lossy(&out2.stdout);
+    let stderr2 = String::from_utf8_lossy(&out2.stderr);
+    assert!(out2.status.success(), "stdout:\n{stdout2}\nstderr:\n{stderr2}");
+    assert!(stdout2.contains("checkpoint winner"), "{stdout2}");
+    assert!(stdout2.contains("rows/s"), "{stdout2}");
+}
+
+#[test]
+fn export_rejects_deep_strategy() {
+    let out = Command::new(pmlp())
+        .args(["export", "--strategy", "deep_native", "--out", "/tmp/should_not_exist.ckpt"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("single-hidden-layer"), "{stderr}");
+}
+
+#[test]
+fn serve_bench_synthetic_writes_json_report() {
+    let json = std::env::temp_dir().join(format!("pmlp_serve_{}.json", std::process::id()));
+    let out = Command::new(pmlp())
+        .args([
+            "serve-bench", "--rows", "96", "--clients", "2", "--depth", "8", "--batch-sizes",
+            "1,8", "--hidden", "32", "--features", "16", "--out-dim", "4", "--out",
+            json.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("max_batch"), "{stdout}");
+    let doc = std::fs::read_to_string(&json).unwrap();
+    std::fs::remove_file(&json).ok();
+    let v = parallel_mlps::util::json::parse(&doc).expect("serve-bench JSON must parse");
+    assert_eq!(v.req("bench").unwrap().as_str(), Some("serve"));
+    assert_eq!(v.req("runs").unwrap().as_arr().unwrap().len(), 2);
+}
+
+#[test]
 fn train_rejects_unknown_strategy() {
     let out = Command::new(pmlp())
         .args(["train", "--strategy", "warp_drive"])

@@ -1,0 +1,218 @@
+//! Inference subsystem end-to-end: checkpoint persistence and corruption
+//! detection, winner-extraction equivalence against the fused pool,
+//! registry loading, and micro-batched serving correctness/throughput.
+
+use std::sync::Arc;
+
+use parallel_mlps::io::{fused_bits_equal, PoolCheckpoint, RankEntry};
+use parallel_mlps::nn::act::Act;
+use parallel_mlps::nn::init::init_pool;
+use parallel_mlps::nn::loss::Loss;
+use parallel_mlps::nn::parallel::ParallelEngine;
+use parallel_mlps::pool::{PoolLayout, PoolSpec};
+use parallel_mlps::selection::rank_models;
+use parallel_mlps::serve::bench::{run_load, synthetic_model, LoadSpec};
+use parallel_mlps::serve::{ModelRegistry, ServableModel, ServeConfig, Server};
+use parallel_mlps::tensor::Tensor;
+use parallel_mlps::util::rng::Rng;
+
+const F: usize = 4;
+const O: usize = 2;
+const B: usize = 8;
+
+fn smoke_spec() -> PoolSpec {
+    PoolSpec::new(vec![
+        (2, Act::Sigmoid),
+        (3, Act::Relu),
+        (2, Act::Tanh),
+        (1, Act::Identity),
+        (4, Act::Gelu),
+    ])
+    .unwrap()
+}
+
+/// A small fused pool trained for a few steps, plus the batch it saw.
+fn trained_engine(steps: usize) -> (PoolSpec, PoolLayout, ParallelEngine, Tensor, Tensor) {
+    let spec = smoke_spec();
+    let layout = PoolLayout::build(&spec);
+    let fused = init_pool(7, &layout, F, O);
+    let mut engine = ParallelEngine::new(layout.clone(), fused, Loss::Mse, F, O, B, 1);
+    let mut rng = Rng::new(3);
+    let mut x = Tensor::zeros(&[B, F]);
+    rng.fill_normal(x.data_mut(), 0.0, 1.0);
+    let mut y = Tensor::zeros(&[B, O]);
+    rng.fill_normal(y.data_mut(), 0.0, 1.0);
+    for _ in 0..steps {
+        engine.step(&x, &y, 0.05);
+    }
+    (spec, layout, engine, x, y)
+}
+
+fn ckpt_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("pmlp_serve_test_{tag}_{}.ckpt", std::process::id()))
+}
+
+#[test]
+fn checkpoint_file_roundtrip_is_bit_exact() {
+    let (_spec, layout, engine, _x, _y) = trained_engine(3);
+    let ckpt = PoolCheckpoint::new(
+        layout,
+        F,
+        O,
+        Loss::Mse,
+        engine.params_fused(),
+        vec![RankEntry { index: 1, val_loss: 0.3, val_metric: 0.3 }],
+    )
+    .unwrap();
+    let path = ckpt_path("roundtrip");
+    ckpt.save(&path).unwrap();
+    let back = PoolCheckpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert!(fused_bits_equal(&ckpt.params, &back.params));
+    assert_eq!(back.spec().models(), ckpt.spec().models());
+    assert_eq!(back.ranking, ckpt.ranking);
+    assert_eq!(back.to_bytes(), ckpt.to_bytes());
+}
+
+#[test]
+fn checkpoint_flipped_byte_on_disk_is_rejected() {
+    let (_spec, layout, engine, _x, _y) = trained_engine(2);
+    let ckpt =
+        PoolCheckpoint::new(layout, F, O, Loss::Mse, engine.params_fused(), vec![]).unwrap();
+    let path = ckpt_path("corrupt");
+    ckpt.save(&path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01; // a single flipped bit in a tensor payload
+    std::fs::write(&path, &bytes).unwrap();
+    let err = PoolCheckpoint::load(&path).unwrap_err().to_string();
+    std::fs::remove_file(&path).ok();
+    assert!(err.contains("checksum"), "{err}");
+}
+
+#[test]
+fn extracted_winner_matches_fused_pool_forward() {
+    // the acceptance criterion: standalone forward of the extracted
+    // model == the fused pool's logits for that model's slot, per row
+    let (spec, layout, mut engine, x, y) = trained_engine(5);
+    let (vl, vm) = engine.evaluate(&x, &y);
+    let ranked = rank_models(&spec, &vl, &vm, Loss::Mse);
+    let ckpt = PoolCheckpoint::from_engine(&engine, &layout, F, O, Loss::Mse, &ranked).unwrap();
+
+    let fused_logits = engine.forward(&x); // [B, M_pad, O]
+    for m in 0..spec.n_models() {
+        let servable = ServableModel::from_checkpoint(&ckpt, m, format!("m{m}")).unwrap();
+        assert_eq!(servable.act, spec.models()[m].1);
+        assert_eq!(servable.hidden(), spec.models()[m].0 as usize);
+        let pred = servable.predict(&x, 1);
+        let slot = layout.slot[m];
+        for bi in 0..x.rows() {
+            for oi in 0..O {
+                let fused = fused_logits.at3(bi, slot, oi);
+                let standalone = pred.at2(bi, oi);
+                assert!(
+                    (fused - standalone).abs() < 1e-5,
+                    "model {m} row {bi} out {oi}: fused {fused} vs standalone {standalone}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn registry_serves_checkpoint_ranking() {
+    let (spec, layout, mut engine, x, y) = trained_engine(4);
+    let (vl, vm) = engine.evaluate(&x, &y);
+    let ranked = rank_models(&spec, &vl, &vm, Loss::Mse);
+    let ckpt = PoolCheckpoint::from_engine(&engine, &layout, F, O, Loss::Mse, &ranked).unwrap();
+    assert_eq!(ckpt.winner(), Some(ranked[0].index));
+
+    let mut registry = ModelRegistry::new();
+    let names = registry.load_top_k("pool", &ckpt, 3).unwrap();
+    assert_eq!(names, vec!["pool/top1", "pool/top2", "pool/top3"]);
+    let top1 = registry.get("pool/top1").unwrap();
+    assert_eq!(top1.index, ranked[0].index);
+    assert!((top1.val_loss - ranked[0].val_loss).abs() < 1e-6);
+    assert!(registry.get("pool/top4").is_none());
+}
+
+#[test]
+fn microbatched_predictions_match_direct_forward() {
+    let model = synthetic_model(16, 8, 3, 9);
+    let server =
+        Server::start(model.clone(), ServeConfig { max_batch: 4, queue_cap: 64, threads: 1 })
+            .unwrap();
+    let mut handles = Vec::new();
+    for c in 0..2u64 {
+        let client = server.client();
+        let model = model.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut root = Rng::new(31);
+            let mut rng = root.fork(c);
+            for _ in 0..16 {
+                let row: Vec<f32> = (0..8).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+                let got = client.predict(&row).unwrap();
+                let want = model.predict(&Tensor::from_vec(row.clone(), &[1, 8]), 1);
+                assert_eq!(got.len(), 3);
+                for (g, w) in got.iter().zip(want.data()) {
+                    assert!((g - w).abs() < 1e-6, "{g} vs {w}");
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.rows, 32);
+    assert!(stats.batches >= 1 && stats.batches <= 32);
+    assert!(stats.max_batch_seen >= 1 && stats.max_batch_seen <= 4);
+}
+
+#[test]
+fn microbatching_beats_per_row_dispatch() {
+    // the serve-side acceptance criterion: coalesced [B, F] forwards must
+    // out-throughput B individual [1, F] dispatches on the same load
+    let model = synthetic_model(256, 64, 8, 5);
+    let spec = LoadSpec { rows_per_client: 384, clients: 4, depth: 32, seed: 1 };
+    let unbatched = run_load(
+        &model,
+        ServeConfig { max_batch: 1, queue_cap: 4096, threads: 1 },
+        &spec,
+    )
+    .unwrap();
+    let batched = run_load(
+        &model,
+        ServeConfig { max_batch: 64, queue_cap: 4096, threads: 1 },
+        &spec,
+    )
+    .unwrap();
+    assert_eq!(unbatched.rows, 4 * 384);
+    assert_eq!(batched.rows, 4 * 384);
+    assert!(
+        batched.mean_batch > 1.0,
+        "load generator produced no coalescing: {batched:?}"
+    );
+    assert!(
+        batched.rows_per_s > unbatched.rows_per_s,
+        "micro-batched {:.0} rows/s <= per-row {:.0} rows/s",
+        batched.rows_per_s,
+        unbatched.rows_per_s
+    );
+}
+
+#[test]
+fn export_shape_survives_sequential_engine_too() {
+    // from_engine goes through the PoolEngine trait, so the sequential
+    // strategy checkpoints identically to the fused one
+    use parallel_mlps::coordinator::SequentialEngine;
+    use parallel_mlps::nn::optimizer::OptimizerKind;
+    let spec = smoke_spec();
+    let layout = PoolLayout::build(&spec);
+    let fused = init_pool(7, &layout, F, O);
+    let par = ParallelEngine::new(layout.clone(), fused.clone(), Loss::Mse, F, O, B, 1);
+    let seq = SequentialEngine::from_pool(&spec, &layout, &fused, Loss::Mse, OptimizerKind::Sgd);
+    let ck_par = PoolCheckpoint::from_engine(&par, &layout, F, O, Loss::Mse, &[]).unwrap();
+    let ck_seq = PoolCheckpoint::from_engine(&seq, &layout, F, O, Loss::Mse, &[]).unwrap();
+    assert!(fused_bits_equal(&ck_par.params, &ck_seq.params));
+}
