@@ -88,9 +88,15 @@ pub struct ExperimentConfig {
     pub teacher_hidden: usize,
     // pool
     pub hidden_sizes: Vec<u32>,
-    /// second hidden layer per grid entry (deep_native only); must match
-    /// `hidden_sizes` in length. Defaults to `hidden_sizes` (h2 = h1).
+    /// width of hidden layers 2.. per grid entry (deep_native only);
+    /// must match `hidden_sizes` in length. Defaults to `hidden_sizes`
+    /// (every layer as wide as the first).
     pub hidden2_sizes: Option<Vec<u32>>,
+    /// hidden-layer counts the deep_native grid enumerates (`--depths
+    /// 2,3` puts depth-2 AND depth-3 variants of every (h, act) cell in
+    /// one pool — ragged depths ride the identity passthrough). Defaults
+    /// to `[2]`, the historical two-hidden-layer pool.
+    pub depths: Option<Vec<u32>>,
     pub acts: Vec<Act>,
     pub repeats: usize,
     // training
@@ -124,6 +130,7 @@ impl Default for ExperimentConfig {
             teacher_hidden: 8,
             hidden_sizes: (1..=10).collect(),
             hidden2_sizes: None,
+            depths: None,
             acts: ALL_ACTS.to_vec(),
             repeats: 1,
             strategy: Strategy::NativeParallel,
@@ -148,10 +155,12 @@ impl ExperimentConfig {
         PoolSpec::from_grid(&self.hidden_sizes, &self.acts, self.repeats)
     }
 
-    /// The deep (two-hidden-layer) pool for `deep_native`: the same
-    /// act-major grid enumeration as `pool_spec`, with h2 paired to h1
-    /// positionally (`hidden2_sizes`, default h2 = h1).
-    pub fn deep_models(&self) -> anyhow::Result<Vec<crate::nn::deep::DeepModel>> {
+    /// The layer-stack pool for `deep_native`: the same act-major grid
+    /// enumeration as `pool_spec`, crossed with `depths` (default `[2]`,
+    /// the historical two-hidden-layer pool). Layer 1 is `hidden_sizes`;
+    /// layers 2.. are `hidden2_sizes` (paired positionally, default =
+    /// `hidden_sizes`). Mixed depths coexist in one pool.
+    pub fn stack_models(&self) -> anyhow::Result<Vec<crate::nn::stack::StackModel>> {
         let h2s = self.hidden2_sizes.as_ref().unwrap_or(&self.hidden_sizes);
         anyhow::ensure!(
             h2s.len() == self.hidden_sizes.len(),
@@ -161,12 +170,26 @@ impl ExperimentConfig {
         );
         anyhow::ensure!(!self.hidden_sizes.is_empty(), "hidden_sizes empty");
         anyhow::ensure!(!self.acts.is_empty(), "acts empty");
+        let default_depths = vec![2u32];
+        let depths = self.depths.as_ref().unwrap_or(&default_depths);
+        let max_depth = crate::nn::stack::MAX_STACK_DEPTH as u32;
+        // bound BEFORE building width vectors: a typo'd (or wrapped
+        // negative) TOML depth must be a config error, not an allocation
+        anyhow::ensure!(
+            !depths.is_empty() && depths.iter().all(|&d| (1..=max_depth).contains(&d)),
+            "depths must be a non-empty list of hidden-layer counts in 1..={max_depth}"
+        );
         let mut models = Vec::new();
         for &a in &self.acts {
             for (&h1, &h2) in self.hidden_sizes.iter().zip(h2s) {
                 anyhow::ensure!(h1 >= 1 && h2 >= 1, "hidden sizes must be >= 1");
-                for _ in 0..self.repeats.max(1) {
-                    models.push(crate::nn::deep::DeepModel { h1, h2, act: a });
+                for &d in depths {
+                    let mut hidden = Vec::with_capacity(d as usize);
+                    hidden.push(h1);
+                    hidden.resize(d as usize, h2);
+                    for _ in 0..self.repeats.max(1) {
+                        models.push(crate::nn::stack::StackModel { hidden: hidden.clone(), act: a });
+                    }
                 }
             }
         }
@@ -239,6 +262,15 @@ impl ExperimentConfig {
             cfg.hidden2_sizes = Some(
                 v.as_int_array()
                     .ok_or_else(|| anyhow::anyhow!("hidden2_sizes must be an int array"))?
+                    .into_iter()
+                    .map(|i| i as u32)
+                    .collect(),
+            );
+        }
+        if let Some(v) = t.get("depths") {
+            cfg.depths = Some(
+                v.as_int_array()
+                    .ok_or_else(|| anyhow::anyhow!("depths must be an int array"))?
                     .into_iter()
                     .map(|i| i as u32)
                     .collect(),
@@ -330,7 +362,7 @@ shuffle = true
     }
 
     #[test]
-    fn deep_models_grid() {
+    fn stack_models_grid() {
         let cfg = ExperimentConfig {
             hidden_sizes: vec![2, 4],
             hidden2_sizes: Some(vec![3, 5]),
@@ -338,37 +370,62 @@ shuffle = true
             repeats: 1,
             ..Default::default()
         };
-        let models = cfg.deep_models().unwrap();
+        // default depths = [2]: the historical two-hidden-layer pool
+        let models = cfg.stack_models().unwrap();
         assert_eq!(models.len(), 4);
-        assert_eq!((models[0].h1, models[0].h2), (2, 3));
-        assert_eq!((models[1].h1, models[1].h2), (4, 5));
+        assert_eq!(models[0].hidden, vec![2, 3]);
+        assert_eq!(models[1].hidden, vec![4, 5]);
         assert_eq!(models[2].act, Act::Tanh);
-        // default: h2 = h1
+        // default: every layer as wide as the first
         let cfg2 = ExperimentConfig {
             hidden_sizes: vec![3],
             acts: vec![Act::Relu],
             ..Default::default()
         };
-        let m2 = cfg2.deep_models().unwrap();
-        assert_eq!((m2[0].h1, m2[0].h2), (3, 3));
+        let m2 = cfg2.stack_models().unwrap();
+        assert_eq!(m2[0].hidden, vec![3, 3]);
         // mismatched lengths rejected
         let bad = ExperimentConfig {
             hidden_sizes: vec![1, 2],
             hidden2_sizes: Some(vec![1]),
             ..Default::default()
         };
-        assert!(bad.deep_models().is_err());
+        assert!(bad.stack_models().is_err());
     }
 
     #[test]
-    fn parse_early_stop_and_hidden2() {
+    fn stack_models_mixed_depths() {
+        let cfg = ExperimentConfig {
+            hidden_sizes: vec![4],
+            acts: vec![Act::Tanh],
+            depths: Some(vec![1, 2, 3]),
+            repeats: 1,
+            ..Default::default()
+        };
+        let models = cfg.stack_models().unwrap();
+        assert_eq!(models.len(), 3);
+        assert_eq!(models[0].hidden, vec![4]);
+        assert_eq!(models[1].hidden, vec![4, 4]);
+        assert_eq!(models[2].hidden, vec![4, 4, 4]);
+        // depth 0 and absurd depths (e.g. a wrapped negative TOML int)
+        // are config errors, not allocations
+        let bad = ExperimentConfig { depths: Some(vec![0]), ..cfg.clone() };
+        assert!(bad.stack_models().is_err());
+        let huge = ExperimentConfig { depths: Some(vec![u32::MAX]), ..cfg };
+        assert!(huge.stack_models().is_err());
+    }
+
+    #[test]
+    fn parse_early_stop_hidden2_and_depths() {
         let cfg = ExperimentConfig::from_toml_str(
-            "[experiment]\nearly_stop = 5\nhidden_sizes = [2, 3]\nhidden2_sizes = [4, 6]\nstrategy = \"deep_native\"\n",
+            "[experiment]\nearly_stop = 5\nhidden_sizes = [2, 3]\nhidden2_sizes = [4, 6]\ndepths = [2, 3]\nstrategy = \"deep_native\"\n",
         )
         .unwrap();
         assert_eq!(cfg.early_stop, Some(5));
         assert_eq!(cfg.hidden2_sizes, Some(vec![4, 6]));
+        assert_eq!(cfg.depths, Some(vec![2, 3]));
         assert_eq!(cfg.strategy, Strategy::DeepNative);
+        assert_eq!(cfg.stack_models().unwrap().len(), 4);
         let off = ExperimentConfig::from_toml_str("[experiment]\nearly_stop = 0\n").unwrap();
         assert_eq!(off.early_stop, None);
     }

@@ -1,7 +1,7 @@
 //! The unified engine abstraction.
 //!
 //! Every execution strategy — native fused, native sequential, PJRT
-//! fused, PJRT sequential, and the deep (two-hidden-layer) fused pool —
+//! fused, PJRT sequential, and the arbitrary-depth fused layer stack —
 //! sits behind one [`PoolEngine`] trait, so the coordinator owns exactly
 //! ONE epoch/batch loop (`TrainSession` in `trainer.rs`) instead of one
 //! per strategy.
@@ -18,12 +18,12 @@
 
 use crate::coordinator::trainer::BatchSet;
 use crate::nn::act::Act;
-use crate::nn::deep::{DeepParams, DeepPool, DeepRef};
 use crate::nn::init::{extract_model, FusedParams, ModelParams};
 use crate::nn::loss::{self, Loss};
 use crate::nn::mlp::MlpTrainer;
 use crate::nn::optimizer::OptimizerKind;
 use crate::nn::parallel::ParallelEngine;
+use crate::nn::stack::{DenseStack, LayerStack, StackParams};
 use crate::pool::{PoolLayout, PoolSpec};
 use crate::runtime::{PjrtParallelEngine, PjrtSequentialEngine};
 use crate::tensor::Tensor;
@@ -48,30 +48,49 @@ pub enum BatchShape {
     Exact(usize),
 }
 
-/// Parameters extracted for one model, engine-agnostic.
+/// Parameters extracted for one model, engine-agnostic. Both variants
+/// carry the model's activation, so extraction alone is enough to
+/// checkpoint or serve a model — no side-channel spec lookup.
 #[derive(Clone, Debug)]
 pub enum ExtractedModel {
     /// One-hidden-layer MLP (the paper's Fig. 1 shape).
-    Shallow(ModelParams),
-    /// Two-hidden-layer MLP (the Fig. 3 deep extension), carried as the
-    /// dense reference type so callers can evaluate/train it directly.
-    Deep(DeepRef),
+    Shallow(ModelParams, Act),
+    /// Arbitrary-depth MLP sliced out of a fused layer stack.
+    Stacked(DenseStack),
 }
 
 impl ExtractedModel {
     /// The shallow params, when this is a shallow model.
     pub fn shallow(self) -> Option<ModelParams> {
         match self {
-            ExtractedModel::Shallow(p) => Some(p),
-            ExtractedModel::Deep(_) => None,
+            ExtractedModel::Shallow(p, _) => Some(p),
+            ExtractedModel::Stacked(_) => None,
         }
     }
 
-    /// The dense deep reference, when this is a deep model.
-    pub fn deep(self) -> Option<DeepRef> {
+    /// The dense multi-layer params, when this came from a stack.
+    pub fn stacked(self) -> Option<DenseStack> {
         match self {
-            ExtractedModel::Shallow(_) => None,
-            ExtractedModel::Deep(r) => Some(r),
+            ExtractedModel::Shallow(..) => None,
+            ExtractedModel::Stacked(s) => Some(s),
+        }
+    }
+
+    /// The model's activation.
+    pub fn act(&self) -> Act {
+        match self {
+            ExtractedModel::Shallow(_, act) => *act,
+            ExtractedModel::Stacked(s) => s.act,
+        }
+    }
+
+    /// Every extracted model as a dense layer stack — the one
+    /// representation persistence and serving speak (a shallow model
+    /// becomes a depth-1 stack, bit-for-bit).
+    pub fn into_stack(self) -> DenseStack {
+        match self {
+            ExtractedModel::Shallow(p, act) => DenseStack::from_shallow(&p, act),
+            ExtractedModel::Stacked(s) => s,
         }
     }
 }
@@ -164,7 +183,8 @@ impl PoolEngine for ParallelEngine {
     }
 
     fn extract(&self, m: usize) -> anyhow::Result<ExtractedModel> {
-        Ok(ExtractedModel::Shallow(extract_model(&self.params_fused(), &self.layout, m)))
+        let (params, act) = crate::pool::extract_model(&self.params_fused(), &self.layout, m);
+        Ok(ExtractedModel::Shallow(params, act))
     }
 
     /// `params_fused` rebuilds the full `[H_pad, F]` transpose, so doing
@@ -173,7 +193,10 @@ impl PoolEngine for ParallelEngine {
     fn extract_all(&self) -> anyhow::Result<Vec<ExtractedModel>> {
         let fused = self.params_fused();
         Ok((0..self.layout.n_models())
-            .map(|m| ExtractedModel::Shallow(extract_model(&fused, &self.layout, m)))
+            .map(|m| {
+                let (params, act) = crate::pool::extract_model(&fused, &self.layout, m);
+                ExtractedModel::Shallow(params, act)
+            })
             .collect())
     }
 }
@@ -209,7 +232,7 @@ impl PoolEngine for MlpTrainer {
     }
 
     fn extract(&self, _m: usize) -> anyhow::Result<ExtractedModel> {
-        Ok(ExtractedModel::Shallow(self.params.clone()))
+        Ok(ExtractedModel::Shallow(self.params.clone(), self.act))
     }
 }
 
@@ -245,7 +268,7 @@ impl PoolEngine for [MlpTrainer] {
     }
 
     fn extract(&self, m: usize) -> anyhow::Result<ExtractedModel> {
-        Ok(ExtractedModel::Shallow(self[m].params.clone()))
+        Ok(ExtractedModel::Shallow(self[m].params.clone(), self[m].act))
     }
 }
 
@@ -354,7 +377,8 @@ impl PoolEngine for PjrtParallelEngine {
     }
 
     fn extract(&self, m: usize) -> anyhow::Result<ExtractedModel> {
-        Ok(ExtractedModel::Shallow(PjrtParallelEngine::extract(self, m)?))
+        let params = PjrtParallelEngine::extract(self, m)?;
+        Ok(ExtractedModel::Shallow(params, crate::nn::init::act_of(&self.layout, m)))
     }
 }
 
@@ -409,37 +433,48 @@ impl PoolEngine for PjrtSequentialEngine {
     }
 
     fn extract(&self, m: usize) -> anyhow::Result<ExtractedModel> {
-        Ok(ExtractedModel::Shallow(self.extract_with_act(m)?.0))
+        let (params, act) = self.extract_with_act(m)?;
+        Ok(ExtractedModel::Shallow(params, act))
     }
 }
 
 // ---------------------------------------------------------------------------
-// Deep native (Fig. 3 / §7): the fifth strategy, first-class at last
+// Deep native (Fig. 3 / §7): the arbitrary-depth fused layer stack
 // ---------------------------------------------------------------------------
 
-/// The fused two-hidden-layer pool as a [`PoolEngine`]: owns its
-/// parameters (unlike [`DeepPool`], which is a pure function of them).
+/// The fused layer-stack pool as a [`PoolEngine`]: owns its parameters
+/// (unlike [`LayerStack`], which is a pure function of them). Depth is
+/// unbounded and may differ per model (identity passthrough fills the
+/// ragged levels), so one engine covers everything from the paper's
+/// Fig. 3 two-layer sketch to N-layer pools.
 pub struct DeepEngine {
-    pool: DeepPool,
-    params: DeepParams,
+    stack: LayerStack,
+    params: StackParams,
     loss: Loss,
+    threads: usize,
 }
 
 impl DeepEngine {
-    pub fn new(pool: DeepPool, seed: u64, loss: Loss) -> DeepEngine {
-        let params = pool.init(seed);
-        DeepEngine { pool, params, loss }
+    pub fn new(stack: LayerStack, seed: u64, loss: Loss, threads: usize) -> DeepEngine {
+        let params = stack.init(seed);
+        DeepEngine { stack, params, loss, threads: threads.max(1) }
     }
 
-    pub fn from_params(pool: DeepPool, params: DeepParams, loss: Loss) -> DeepEngine {
-        DeepEngine { pool, params, loss }
+    pub fn from_params(
+        stack: LayerStack,
+        params: StackParams,
+        loss: Loss,
+        threads: usize,
+    ) -> anyhow::Result<DeepEngine> {
+        stack.validate(&params)?;
+        Ok(DeepEngine { stack, params, loss, threads: threads.max(1) })
     }
 
-    pub fn pool(&self) -> &DeepPool {
-        &self.pool
+    pub fn stack(&self) -> &LayerStack {
+        &self.stack
     }
 
-    pub fn params(&self) -> &DeepParams {
+    pub fn params(&self) -> &StackParams {
         &self.params
     }
 }
@@ -450,7 +485,7 @@ impl PoolEngine for DeepEngine {
     }
 
     fn n_models(&self) -> usize {
-        self.pool.n_models()
+        self.stack.n_models()
     }
 
     fn step(
@@ -461,15 +496,17 @@ impl PoolEngine for DeepEngine {
         y: &Tensor,
         lr: f32,
     ) -> anyhow::Result<StepStats> {
-        Ok(StepStats { losses: self.pool.step(&mut self.params, x, y, self.loss, lr) })
+        Ok(StepStats {
+            losses: self.stack.step(&mut self.params, x, y, self.loss, lr, self.threads),
+        })
     }
 
     fn eval(&mut self, _unit: usize, x: &Tensor, y: &Tensor) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
-        let logits = self.pool.forward(&self.params, x);
-        let mut losses = Vec::with_capacity(self.pool.n_models());
-        let mut metrics = Vec::with_capacity(self.pool.n_models());
-        for m in 0..self.pool.n_models() {
-            let single = self.pool.model_logits(&logits, m);
+        let logits = self.stack.forward(&self.params, x, self.threads);
+        let mut losses = Vec::with_capacity(self.stack.n_models());
+        let mut metrics = Vec::with_capacity(self.stack.n_models());
+        for m in 0..self.stack.n_models() {
+            let single = self.stack.model_logits(&logits, m);
             let lv = loss::mlp_loss(self.loss, &single, y);
             let metric = match self.loss {
                 Loss::Ce => loss::mlp_accuracy(&single, y),
@@ -482,17 +519,16 @@ impl PoolEngine for DeepEngine {
     }
 
     fn extract(&self, m: usize) -> anyhow::Result<ExtractedModel> {
-        anyhow::ensure!(m < self.pool.n_models(), "model index {m} out of range");
-        let (w1, b1, w2, b2, w3, b3) = self.pool.extract(&self.params, m);
-        let act = self.pool.models[m].act;
-        Ok(ExtractedModel::Deep(DeepRef { w1, b1, w2, b2, w3, b3, act }))
+        anyhow::ensure!(m < self.stack.n_models(), "model index {m} out of range");
+        Ok(ExtractedModel::Stacked(self.stack.extract(&self.params, m)))
     }
 }
 
-/// Per-model deep specs (h1, act) as a [`PoolSpec`] so the standard
-/// ranking/report pipeline works on deep pools (hidden = h1).
-pub fn deep_ranking_spec(pool: &DeepPool) -> anyhow::Result<PoolSpec> {
-    let models: Vec<(u32, Act)> = pool.models.iter().map(|m| (m.h1, m.act)).collect();
+/// Per-model stack specs (first hidden width, act) as a [`PoolSpec`] so
+/// the standard ranking/report pipeline works on stack pools.
+pub fn stack_ranking_spec(stack: &LayerStack) -> anyhow::Result<PoolSpec> {
+    let models: Vec<(u32, Act)> =
+        stack.models().iter().map(|m| (m.hidden[0], m.act)).collect();
     PoolSpec::new(models)
 }
 
@@ -500,8 +536,8 @@ pub fn deep_ranking_spec(pool: &DeepPool) -> anyhow::Result<PoolSpec> {
 mod tests {
     use super::*;
     use crate::data;
-    use crate::nn::deep::DeepModel;
     use crate::nn::init::init_pool;
+    use crate::nn::stack::StackModel;
     use crate::util::rng::Rng;
 
     fn tiny_layout() -> (PoolSpec, PoolLayout) {
@@ -583,18 +619,20 @@ mod tests {
 
     #[test]
     fn deep_engine_steps_and_evals() {
-        let pool = DeepPool::new(
+        // heterogeneous depths (2 and 3 hidden layers) in one pool
+        let stack = LayerStack::new(
             vec![
-                DeepModel { h1: 2, h2: 3, act: Act::Tanh },
-                DeepModel { h1: 1, h2: 2, act: Act::Relu },
+                StackModel { hidden: vec![2, 3], act: Act::Tanh },
+                StackModel { hidden: vec![1, 2, 2], act: Act::Relu },
             ],
             4,
             2,
         )
         .unwrap();
-        let mut engine = DeepEngine::new(pool, 3, Loss::Mse);
+        let mut engine = DeepEngine::new(stack, 3, Loss::Mse, 2);
         assert_eq!(engine.name(), "deep_native");
         assert_eq!(engine.n_models(), 2);
+        assert_eq!(engine.stack().depth(), 3);
         let mut rng = Rng::new(4);
         let mut x = Tensor::zeros(&[8, 4]);
         rng.fill_normal(x.data_mut(), 0.0, 1.0);
@@ -613,18 +651,35 @@ mod tests {
         }
         let (el2, _) = engine.eval(0, &x, &y).unwrap();
         assert!(el2[0] < el[0], "{} -> {}", el[0], el2[0]);
-        assert!(matches!(engine.extract(0).unwrap(), ExtractedModel::Deep(_)));
+        let extracted = engine.extract(1).unwrap();
+        assert_eq!(extracted.act(), Act::Relu);
+        let dense = extracted.stacked().unwrap();
+        assert_eq!(dense.hidden_widths(), vec![1, 2, 2]);
     }
 
     #[test]
-    fn deep_ranking_spec_mirrors_pool() {
-        let pool = DeepPool::new(
-            vec![DeepModel { h1: 5, h2: 2, act: Act::Gelu }],
+    fn stack_ranking_spec_mirrors_pool() {
+        let stack = LayerStack::new(
+            vec![StackModel { hidden: vec![5, 2], act: Act::Gelu }],
             3,
             1,
         )
         .unwrap();
-        let spec = deep_ranking_spec(&pool).unwrap();
+        let spec = stack_ranking_spec(&stack).unwrap();
         assert_eq!(spec.models(), &[(5, Act::Gelu)]);
+    }
+
+    #[test]
+    fn shallow_extraction_converts_to_depth1_stack() {
+        let (_spec, layout) = tiny_layout();
+        let fused = init_pool(8, &layout, 4, 2);
+        let engine = ParallelEngine::new(layout.clone(), fused, Loss::Mse, 4, 2, 8, 1);
+        let extracted = engine.extract(1).unwrap();
+        assert_eq!(extracted.act(), Act::Tanh);
+        let dense = extracted.into_stack();
+        assert_eq!(dense.n_hidden_layers(), 1);
+        assert_eq!(dense.hidden(), 3);
+        assert_eq!(dense.features(), 4);
+        assert_eq!(dense.out(), 2);
     }
 }

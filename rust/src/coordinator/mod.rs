@@ -1,7 +1,7 @@
 //! The coordinator: experiment orchestration over the five-strategy
-//! engine grid (native fused/sequential, PJRT fused/sequential, deep
-//! native), all behind the [`PoolEngine`] trait and one generic
-//! [`TrainSession`] loop.
+//! engine grid (native fused/sequential, PJRT fused/sequential, and the
+//! arbitrary-depth deep native layer stack), all behind the
+//! [`PoolEngine`] trait and one generic [`TrainSession`] loop.
 //!
 //! Owns dataset preparation, pool init, the single epoch/batch loop with
 //! the paper's warm-up discipline (§4.3: first epochs excluded from
@@ -13,7 +13,7 @@ mod sweep;
 mod trainer;
 
 pub use engine::{
-    deep_ranking_spec, BatchShape, DeepEngine, ExtractedModel, PoolEngine, SequentialEngine,
+    stack_ranking_spec, BatchShape, DeepEngine, ExtractedModel, PoolEngine, SequentialEngine,
     StepStats,
 };
 pub use sweep::{render_paper_table, run_table, SweepCell, SweepConfig, TableKind};
@@ -29,9 +29,9 @@ pub use trainer::{
 use crate::config::{ExperimentConfig, Strategy};
 use crate::data::{self, Dataset, Split};
 use crate::metrics::Timer;
-use crate::nn::deep::DeepPool;
 use crate::nn::init::init_pool;
 use crate::nn::parallel::ParallelEngine;
+use crate::nn::stack::LayerStack;
 use crate::pool::{PoolLayout, PoolSpec};
 use crate::selection::{rank_models, RankedModel};
 use crate::util::rng::Rng;
@@ -87,9 +87,9 @@ pub fn build_native_engine(
         cfg.strategy.name()
     );
     if cfg.strategy.is_deep() {
-        let pool = DeepPool::new(cfg.deep_models()?, cfg.features, out_dim)?;
-        let spec = deep_ranking_spec(&pool)?;
-        let engine = DeepEngine::new(pool, cfg.seed, cfg.loss);
+        let stack = LayerStack::new(cfg.stack_models()?, cfg.features, out_dim)?;
+        let spec = stack_ranking_spec(&stack)?;
+        let engine = DeepEngine::new(stack, cfg.seed, cfg.loss, cfg.effective_threads());
         return Ok((Box::new(engine), spec));
     }
     let spec = cfg.pool_spec()?;
@@ -286,7 +286,7 @@ mod tests {
         let best = trained.report.ranked[0].index;
         assert!(matches!(
             trained.engine.extract(best).unwrap(),
-            ExtractedModel::Shallow(_)
+            ExtractedModel::Shallow(..)
         ));
     }
 

@@ -1,24 +1,31 @@
 //! `PoolCheckpoint` — the versioned binary snapshot of a trained pool.
 //!
-//! A checkpoint carries everything needed to rebuild the fused pool and
-//! slice winners out of it: the `PoolSpec`, the layout knobs (`W`, `G` —
-//! the layout itself is a deterministic function of spec + knobs, so it
-//! is rebuilt on load and cross-checked against the writer's layout
-//! checksum), the training dims/loss, the ranking from the last
-//! validation pass, and the four fused parameter tensors.
+//! Since v2 a checkpoint speaks the crate's one pool representation, the
+//! arbitrary-depth [`LayerStack`]: per-model hidden widths + activation
+//! (the stack layout is a deterministic function of that list), the
+//! training dims/loss, the ranking from the last validation pass, and a
+//! **layer count followed by the per-layer fused tensor list** (layer 0
+//! dense, inner layers packed block-diagonal, output layer packed
+//! per-model blocks). Shallow pools are depth-1 stacks; deep pools of
+//! any (mixed) depth serialize through exactly the same path.
 //!
-//! Format (all integers little-endian):
+//! v2 format (all integers little-endian):
 //!
 //! ```text
 //! magic    8 B   "PMLPCKPT"
-//! version  u32   1
+//! version  u32   2
 //! features u32   out u32   loss u8
-//! n_models u32   then per model: h u32, act u8
-//! group_width u32   group_models u32   layout_checksum u64
+//! n_models u32   then per model: n_layers u32, h u32 x n_layers, act u8
 //! n_ranked u32   then per entry: index u32, val_loss f32, val_metric f32
-//! 4 tensors (w1, b1, w2, b2): ndim u32, dims u32..., data f32...
+//! n_layers u32   (= stack depth + 1)
+//! per layer: w tensor, b tensor   (ndim u32, dims u32..., data f32...)
 //! trailer  u64   FNV-1a 64 over every preceding byte
 //! ```
+//!
+//! v1 files (the shallow `PoolSpec` + layout-knob + `w1/b1/w2/b2`
+//! format) still load: the padded fused tensors are sliced per model and
+//! re-inserted into a depth-1 stack, float bits untouched, after the
+//! same layout-checksum cross-check the v1 reader always did.
 //!
 //! Floats are written as raw IEEE-754 bit patterns, so the roundtrip is
 //! bit-exact (NaNs from diverged models survive unchanged). Any flipped
@@ -27,22 +34,33 @@
 
 use std::path::Path;
 
-use crate::coordinator::engine::{ExtractedModel, PoolEngine};
+use crate::coordinator::engine::PoolEngine;
 use crate::nn::act::Act;
-use crate::nn::init::{insert_model, FusedParams, ModelParams};
+use crate::nn::init::FusedParams;
 use crate::nn::loss::Loss;
+use crate::nn::stack::{DenseStack, FusedLayer, LayerStack, StackModel, StackParams};
 use crate::pool::{PoolLayout, PoolSpec};
 use crate::selection::RankedModel;
 use crate::tensor::Tensor;
 use crate::util::fnv::Fnv1a64;
 
 pub const MAGIC: &[u8; 8] = b"PMLPCKPT";
-pub const VERSION: u32 = 1;
+/// Current write version.
+pub const VERSION: u32 = 2;
+/// Legacy shallow format, still readable.
+pub const V1: u32 = 1;
 
-/// Upper bound on `n_models * group_width` accepted at load time. The
+/// Upper bound on padded/fused hidden rows accepted at load time (for
+/// v1: `n_models * group_width`; for v2: total hidden rows across every
+/// model and layer, AND `n_models x max_depth` metadata entries). The
 /// paper's full 10k-model pool needs ~5.1M; this leaves 3x headroom
-/// while keeping a crafted file from forcing a multi-GB layout build.
+/// while keeping a crafted file from forcing a multi-GB allocation —
+/// tensors, layout arrays and stack span tables alike.
 pub const MAX_PADDED_ROWS: usize = 1 << 24;
+
+/// Upper bound on hidden layers per model accepted at load time (the
+/// stack-wide cap, re-exported for callers validating before a load).
+pub use crate::nn::stack::MAX_STACK_DEPTH;
 
 /// One row of the persisted ranking (best-first, original pool indices).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -52,106 +70,121 @@ pub struct RankEntry {
     pub val_metric: f32,
 }
 
-/// A trained pool, frozen: spec + layout knobs + fused tensors + ranking.
+/// A trained pool, frozen: model list + fused layer tensors + ranking.
 #[derive(Clone, Debug)]
 pub struct PoolCheckpoint {
-    layout: PoolLayout,
-    pub features: usize,
-    pub out: usize,
+    stack: LayerStack,
     pub loss: Loss,
-    pub params: FusedParams,
+    pub params: StackParams,
     /// best-first ranking recorded at export time (may be empty)
     pub ranking: Vec<RankEntry>,
 }
 
 impl PoolCheckpoint {
     pub fn new(
-        layout: PoolLayout,
-        features: usize,
-        out: usize,
+        stack: LayerStack,
         loss: Loss,
-        params: FusedParams,
+        params: StackParams,
         ranking: Vec<RankEntry>,
     ) -> anyhow::Result<PoolCheckpoint> {
-        anyhow::ensure!(features >= 1 && out >= 1, "features/out must be >= 1");
-        let (h_pad, m_pad) = (layout.h_pad(), layout.m_pad());
-        anyhow::ensure!(
-            params.w1.shape() == &[h_pad, features]
-                && params.b1.shape() == &[h_pad]
-                && params.w2.shape() == &[out, h_pad]
-                && params.b2.shape() == &[m_pad, out],
-            "fused tensor shapes do not match the layout (H_pad={h_pad}, M_pad={m_pad}, F={features}, O={out})"
-        );
-        let mut seen = vec![false; layout.n_models()];
-        for e in &ranking {
-            anyhow::ensure!(
-                e.index < layout.n_models(),
-                "ranking entry index {} out of range ({} models)",
-                e.index,
-                layout.n_models()
-            );
-            anyhow::ensure!(
-                !seen[e.index],
-                "duplicate ranking entry for model {} (top-k names must be distinct models)",
-                e.index
-            );
-            seen[e.index] = true;
-        }
-        Ok(PoolCheckpoint { layout, features, out, loss, params, ranking })
+        stack.validate(&params)?;
+        validate_ranking(&ranking, stack.n_models())?;
+        Ok(PoolCheckpoint { stack, loss, params, ranking })
     }
 
-    /// Snapshot a trained engine through the `PoolEngine` trait: every
-    /// model is extracted and re-inserted into a fresh fused buffer, so
-    /// any shallow engine (native fused, native sequential, PJRT) can be
-    /// checkpointed after its `TrainSession` finishes.
-    pub fn from_engine(
-        engine: &dyn PoolEngine,
+    /// Wrap a padded shallow pool (the v1 world: `PoolLayout` +
+    /// `FusedParams`) as a depth-1 stack checkpoint. Per-model floats
+    /// are copied verbatim; only the padding is dropped.
+    pub fn from_shallow(
         layout: &PoolLayout,
         features: usize,
         out: usize,
         loss: Loss,
+        fused: &FusedParams,
+        ranking: Vec<RankEntry>,
+    ) -> anyhow::Result<PoolCheckpoint> {
+        let (h_pad, m_pad) = (layout.h_pad(), layout.m_pad());
+        anyhow::ensure!(
+            fused.w1.shape() == &[h_pad, features]
+                && fused.b1.shape() == &[h_pad]
+                && fused.w2.shape() == &[out, h_pad]
+                && fused.b2.shape() == &[m_pad, out],
+            "fused tensor shapes do not match the layout (H_pad={h_pad}, M_pad={m_pad}, F={features}, O={out})"
+        );
+        let stack = LayerStack::shallow(layout.spec().models(), features, out)?;
+        let mut params = stack.zeros();
+        for m in 0..layout.n_models() {
+            let (dense, act) = crate::pool::extract_model(fused, layout, m);
+            stack.insert(&mut params, m, &DenseStack::from_shallow(&dense, act))?;
+        }
+        PoolCheckpoint::new(stack, loss, params, ranking)
+    }
+
+    /// Snapshot a trained engine through the `PoolEngine` trait: every
+    /// model is extracted as a dense stack and re-inserted into a fresh
+    /// fused pool, so ANY engine — shallow (native fused, native
+    /// sequential, PJRT) or deep of any depth — can be checkpointed
+    /// after its `TrainSession` finishes.
+    pub fn from_engine(
+        engine: &dyn PoolEngine,
+        loss: Loss,
         ranked: &[RankedModel],
     ) -> anyhow::Result<PoolCheckpoint> {
-        anyhow::ensure!(
-            engine.n_models() == layout.n_models(),
-            "engine has {} models but layout has {}",
-            engine.n_models(),
-            layout.n_models()
-        );
-        let mut params = FusedParams::zeros(layout, features, out);
         let extracted = engine.extract_all()?;
+        anyhow::ensure!(!extracted.is_empty(), "engine has no models to checkpoint");
         anyhow::ensure!(
-            extracted.len() == layout.n_models(),
-            "engine extract_all returned {} models for a {}-model layout",
+            extracted.len() == engine.n_models(),
+            "engine extract_all returned {} models for a {}-model pool",
             extracted.len(),
-            layout.n_models()
+            engine.n_models()
         );
-        for (m, extracted) in extracted.into_iter().enumerate() {
-            match extracted {
-                ExtractedModel::Shallow(dense) => insert_model(&mut params, layout, m, &dense),
-                ExtractedModel::Deep(_) => anyhow::bail!(
-                    "checkpoint format v{VERSION} stores single-hidden-layer pools; engine {} is deep",
-                    engine.name()
-                ),
-            }
+        let denses: Vec<DenseStack> = extracted.into_iter().map(|e| e.into_stack()).collect();
+        let (features, out) = (denses[0].features(), denses[0].out());
+        let models: Vec<StackModel> = denses
+            .iter()
+            .map(|d| StackModel { hidden: d.hidden_widths(), act: d.act })
+            .collect();
+        let stack = LayerStack::new(models, features, out)?;
+        let mut params = stack.zeros();
+        for (m, dense) in denses.iter().enumerate() {
+            stack.insert(&mut params, m, dense)?;
         }
         let ranking = ranked
             .iter()
             .map(|r| RankEntry { index: r.index, val_loss: r.val_loss, val_metric: r.val_metric })
             .collect();
-        PoolCheckpoint::new(layout.clone(), features, out, loss, params, ranking)
+        PoolCheckpoint::new(stack, loss, params, ranking)
     }
 
-    pub fn spec(&self) -> &PoolSpec {
-        self.layout.spec()
+    pub fn stack(&self) -> &LayerStack {
+        &self.stack
     }
 
-    pub fn layout(&self) -> &PoolLayout {
-        &self.layout
+    pub fn models(&self) -> &[StackModel] {
+        self.stack.models()
     }
 
     pub fn n_models(&self) -> usize {
-        self.layout.n_models()
+        self.stack.n_models()
+    }
+
+    pub fn features(&self) -> usize {
+        self.stack.features()
+    }
+
+    pub fn out(&self) -> usize {
+        self.stack.out()
+    }
+
+    /// Stack depth (max hidden layers over models).
+    pub fn depth(&self) -> usize {
+        self.stack.depth()
+    }
+
+    /// The (first hidden width, act) spec the ranking/report pipeline
+    /// speaks in.
+    pub fn ranking_spec(&self) -> anyhow::Result<PoolSpec> {
+        crate::coordinator::engine::stack_ranking_spec(&self.stack)
     }
 
     /// Original index of the best-ranked model, when a ranking was saved.
@@ -159,10 +192,15 @@ impl PoolCheckpoint {
         self.ranking.first().map(|e| e.index)
     }
 
-    /// Slice model `m` back out as standalone dense params + activation.
-    pub fn extract(&self, m: usize) -> anyhow::Result<(ModelParams, Act)> {
-        anyhow::ensure!(m < self.n_models(), "model index {m} out of range ({} models)", self.n_models());
-        Ok(crate::pool::extract_model(&self.params, &self.layout, m))
+    /// Slice model `m` back out as standalone dense multi-layer params
+    /// (activation included).
+    pub fn extract(&self, m: usize) -> anyhow::Result<DenseStack> {
+        anyhow::ensure!(
+            m < self.n_models(),
+            "model index {m} out of range ({} models)",
+            self.n_models()
+        );
+        Ok(self.stack.extract(&self.params, m))
     }
 
     // -- serialization ----------------------------------------------------
@@ -171,26 +209,28 @@ impl PoolCheckpoint {
         let mut b = Vec::new();
         b.extend_from_slice(MAGIC);
         push_u32(&mut b, VERSION);
-        push_u32(&mut b, self.features as u32);
-        push_u32(&mut b, self.out as u32);
+        push_u32(&mut b, self.features() as u32);
+        push_u32(&mut b, self.out() as u32);
         b.push(loss_id(self.loss));
-        let models = self.spec().models();
+        let models = self.stack.models();
         push_u32(&mut b, models.len() as u32);
-        for &(h, act) in models {
-            push_u32(&mut b, h);
-            b.push(act.id());
+        for model in models {
+            push_u32(&mut b, model.hidden.len() as u32);
+            for &h in &model.hidden {
+                push_u32(&mut b, h);
+            }
+            b.push(model.act.id());
         }
-        push_u32(&mut b, self.layout.group_width as u32);
-        push_u32(&mut b, self.layout.group_models as u32);
-        push_u64(&mut b, self.layout.checksum());
         push_u32(&mut b, self.ranking.len() as u32);
         for e in &self.ranking {
             push_u32(&mut b, e.index as u32);
             push_f32(&mut b, e.val_loss);
             push_f32(&mut b, e.val_metric);
         }
-        for t in [&self.params.w1, &self.params.b1, &self.params.w2, &self.params.b2] {
-            push_tensor(&mut b, t);
+        push_u32(&mut b, self.params.layers.len() as u32);
+        for layer in &self.params.layers {
+            push_tensor(&mut b, &layer.w);
+            push_tensor(&mut b, &layer.b);
         }
         let mut h = Fnv1a64::new();
         h.feed_bytes(&b);
@@ -199,7 +239,11 @@ impl PoolCheckpoint {
     }
 
     pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<PoolCheckpoint> {
-        anyhow::ensure!(bytes.len() >= MAGIC.len() + 4 + 8, "too short to be a checkpoint ({} bytes)", bytes.len());
+        anyhow::ensure!(
+            bytes.len() >= MAGIC.len() + 4 + 8,
+            "too short to be a checkpoint ({} bytes)",
+            bytes.len()
+        );
         anyhow::ensure!(&bytes[..MAGIC.len()] == MAGIC, "not a pmlp checkpoint (bad magic)");
         // verify the trailer before trusting a single field
         let body = &bytes[..bytes.len() - 8];
@@ -214,57 +258,13 @@ impl PoolCheckpoint {
 
         let mut r = Reader { b: body, pos: MAGIC.len() };
         let version = r.u32()?;
-        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version} (this build reads v{VERSION})");
-        let features = r.u32()? as usize;
-        let out = r.u32()? as usize;
-        anyhow::ensure!(features >= 1 && out >= 1, "features/out must be >= 1");
-        let loss = loss_from_id(r.u8()?)?;
-        let n_models = r.u32()? as usize;
-        let mut models = Vec::with_capacity(n_models.min(1 << 20));
-        for _ in 0..n_models {
-            let h = r.u32()?;
-            let act_id = r.u8()?;
-            let act = Act::from_id(act_id)
-                .ok_or_else(|| anyhow::anyhow!("unknown activation id {act_id} in checkpoint"))?;
-            models.push((h, act));
+        match version {
+            V1 => from_v1_body(&mut r),
+            VERSION => from_v2_body(&mut r),
+            other => anyhow::bail!(
+                "unsupported checkpoint version {other} (this build reads v{V1} and v{VERSION})"
+            ),
         }
-        let spec = PoolSpec::new(models)?;
-        let group_width = r.u32()? as usize;
-        let group_models = r.u32()? as usize;
-        anyhow::ensure!(
-            group_width >= spec.max_hidden() as usize && group_models >= 1,
-            "invalid layout knobs in checkpoint (W={group_width}, G={group_models})"
-        );
-        // FNV is not tamper-proof, so a crafted file can reach this point:
-        // bound the layout allocation (h_pad <= n_models * W, since every
-        // group holds at least one model) before building it
-        anyhow::ensure!(
-            spec.n_models().saturating_mul(group_width) <= MAX_PADDED_ROWS,
-            "checkpoint layout too large ({} models x W={group_width} exceeds {MAX_PADDED_ROWS} padded rows)",
-            spec.n_models()
-        );
-        let stored_layout_ck = r.u64()?;
-        let layout = PoolLayout::build_with(&spec, group_width, group_models);
-        anyhow::ensure!(
-            layout.checksum() == stored_layout_ck,
-            "layout checksum mismatch: checkpoint written by an incompatible layout algorithm"
-        );
-        let n_ranked = r.u32()? as usize;
-        anyhow::ensure!(n_ranked <= spec.n_models(), "ranking has {n_ranked} entries for {} models", spec.n_models());
-        let mut ranking = Vec::with_capacity(n_ranked);
-        for _ in 0..n_ranked {
-            ranking.push(RankEntry {
-                index: r.u32()? as usize,
-                val_loss: r.f32()?,
-                val_metric: r.f32()?,
-            });
-        }
-        let w1 = read_tensor(&mut r)?;
-        let b1 = read_tensor(&mut r)?;
-        let w2 = read_tensor(&mut r)?;
-        let b2 = read_tensor(&mut r)?;
-        anyhow::ensure!(r.pos == body.len(), "trailing bytes after checkpoint payload");
-        PoolCheckpoint::new(layout, features, out, loss, FusedParams { w1, b1, w2, b2 }, ranking)
     }
 
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
@@ -279,14 +279,199 @@ impl PoolCheckpoint {
     }
 }
 
-/// Bit-level equality of two fused parameter sets (`==` on floats would
-/// call NaN != NaN, so diverged-but-identical pools need this instead).
-pub fn fused_bits_equal(a: &FusedParams, b: &FusedParams) -> bool {
-    let pair = |x: &Tensor, y: &Tensor| {
-        x.shape() == y.shape()
-            && x.data().iter().zip(y.data()).all(|(p, q)| p.to_bits() == q.to_bits())
-    };
-    pair(&a.w1, &b.w1) && pair(&a.b1, &b.b1) && pair(&a.w2, &b.w2) && pair(&a.b2, &b.b2)
+fn validate_ranking(ranking: &[RankEntry], n_models: usize) -> anyhow::Result<()> {
+    let mut seen = vec![false; n_models];
+    for e in ranking {
+        anyhow::ensure!(
+            e.index < n_models,
+            "ranking entry index {} out of range ({n_models} models)",
+            e.index
+        );
+        anyhow::ensure!(
+            !seen[e.index],
+            "duplicate ranking entry for model {} (top-k names must be distinct models)",
+            e.index
+        );
+        seen[e.index] = true;
+    }
+    Ok(())
+}
+
+/// Parse the v2 body (cursor positioned after the version field).
+fn from_v2_body(r: &mut Reader) -> anyhow::Result<PoolCheckpoint> {
+    let features = r.u32()? as usize;
+    let out = r.u32()? as usize;
+    anyhow::ensure!(features >= 1 && out >= 1, "features/out must be >= 1");
+    let loss = loss_from_id(r.u8()?)?;
+    let n_models = r.u32()? as usize;
+    // 100x the paper's 10k pool; per-model Vec overhead makes the model
+    // list itself an amplification vector past this point
+    anyhow::ensure!(
+        n_models <= 1 << 20,
+        "checkpoint pool too large ({n_models} models exceeds {})",
+        1usize << 20
+    );
+    let mut models = Vec::with_capacity(n_models);
+    let mut total_hidden = 0usize;
+    let mut max_layers = 1usize;
+    for m in 0..n_models {
+        let n_layers = r.u32()? as usize;
+        anyhow::ensure!(
+            (1..=MAX_STACK_DEPTH).contains(&n_layers),
+            "model {m}: {n_layers} hidden layers out of range (1..={MAX_STACK_DEPTH})"
+        );
+        max_layers = max_layers.max(n_layers);
+        // FNV is not tamper-proof, so a crafted file can reach this
+        // point: bound BOTH the tensor rows and the per-level span
+        // metadata (n_models x depth entries) before building the stack
+        anyhow::ensure!(
+            n_models.saturating_mul(max_layers) <= MAX_PADDED_ROWS,
+            "checkpoint pool too large ({n_models} models x depth {max_layers} exceeds {MAX_PADDED_ROWS} span entries)"
+        );
+        let mut hidden = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let h = r.u32()?;
+            anyhow::ensure!(h >= 1, "model {m}: hidden width 0 in checkpoint");
+            total_hidden = total_hidden.saturating_add(h as usize);
+            hidden.push(h);
+        }
+        anyhow::ensure!(
+            total_hidden <= MAX_PADDED_ROWS,
+            "checkpoint pool too large (> {MAX_PADDED_ROWS} hidden rows)"
+        );
+        let act_id = r.u8()?;
+        let act = Act::from_id(act_id)
+            .ok_or_else(|| anyhow::anyhow!("unknown activation id {act_id} in checkpoint"))?;
+        models.push(StackModel { hidden, act });
+    }
+    let n_ranked = r.u32()? as usize;
+    anyhow::ensure!(
+        n_ranked <= models.len(),
+        "ranking has {n_ranked} entries for {} models",
+        models.len()
+    );
+    let mut ranking = Vec::with_capacity(n_ranked);
+    for _ in 0..n_ranked {
+        ranking.push(RankEntry {
+            index: r.u32()? as usize,
+            val_loss: r.f32()?,
+            val_metric: r.f32()?,
+        });
+    }
+    let stack = LayerStack::new(models, features, out)?;
+    let n_layers = r.u32()? as usize;
+    anyhow::ensure!(
+        n_layers == stack.depth() + 1,
+        "checkpoint carries {n_layers} fused layers but the model list implies {}",
+        stack.depth() + 1
+    );
+    let mut layers = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let w = read_tensor(r)?;
+        let b = read_tensor(r)?;
+        layers.push(FusedLayer { w, b });
+    }
+    anyhow::ensure!(r.pos == r.b.len(), "trailing bytes after checkpoint payload");
+    PoolCheckpoint::new(stack, loss, StackParams { layers }, ranking)
+}
+
+/// Parse a legacy v1 body (shallow `PoolSpec` + layout knobs + padded
+/// `w1/b1/w2/b2`) into a depth-1 stack checkpoint.
+fn from_v1_body(r: &mut Reader) -> anyhow::Result<PoolCheckpoint> {
+    let features = r.u32()? as usize;
+    let out = r.u32()? as usize;
+    anyhow::ensure!(features >= 1 && out >= 1, "features/out must be >= 1");
+    let loss = loss_from_id(r.u8()?)?;
+    let n_models = r.u32()? as usize;
+    let mut models = Vec::with_capacity(n_models.min(1 << 20));
+    for _ in 0..n_models {
+        let h = r.u32()?;
+        let act_id = r.u8()?;
+        let act = Act::from_id(act_id)
+            .ok_or_else(|| anyhow::anyhow!("unknown activation id {act_id} in checkpoint"))?;
+        models.push((h, act));
+    }
+    let spec = PoolSpec::new(models)?;
+    let group_width = r.u32()? as usize;
+    let group_models = r.u32()? as usize;
+    anyhow::ensure!(
+        group_width >= spec.max_hidden() as usize && group_models >= 1,
+        "invalid layout knobs in checkpoint (W={group_width}, G={group_models})"
+    );
+    // bound the layout allocation (h_pad <= n_models * W, since every
+    // group holds at least one model) before building it
+    anyhow::ensure!(
+        spec.n_models().saturating_mul(group_width) <= MAX_PADDED_ROWS,
+        "checkpoint layout too large ({} models x W={group_width} exceeds {MAX_PADDED_ROWS} padded rows)",
+        spec.n_models()
+    );
+    let stored_layout_ck = r.u64()?;
+    let layout = PoolLayout::build_with(&spec, group_width, group_models);
+    anyhow::ensure!(
+        layout.checksum() == stored_layout_ck,
+        "layout checksum mismatch: checkpoint written by an incompatible layout algorithm"
+    );
+    let n_ranked = r.u32()? as usize;
+    anyhow::ensure!(
+        n_ranked <= spec.n_models(),
+        "ranking has {n_ranked} entries for {} models",
+        spec.n_models()
+    );
+    let mut ranking = Vec::with_capacity(n_ranked);
+    for _ in 0..n_ranked {
+        ranking.push(RankEntry {
+            index: r.u32()? as usize,
+            val_loss: r.f32()?,
+            val_metric: r.f32()?,
+        });
+    }
+    let w1 = read_tensor(r)?;
+    let b1 = read_tensor(r)?;
+    let w2 = read_tensor(r)?;
+    let b2 = read_tensor(r)?;
+    anyhow::ensure!(r.pos == r.b.len(), "trailing bytes after checkpoint payload");
+    PoolCheckpoint::from_shallow(&layout, features, out, loss, &FusedParams { w1, b1, w2, b2 }, ranking)
+}
+
+/// Serialize a shallow pool in the legacy v1 layout. Kept as a real
+/// writer (not test-only) so format-evolution tests and external tools
+/// can produce v1 files to verify the compatibility path against.
+pub fn to_v1_bytes(
+    layout: &PoolLayout,
+    features: usize,
+    out: usize,
+    loss: Loss,
+    fused: &FusedParams,
+    ranking: &[RankEntry],
+) -> Vec<u8> {
+    let mut b = Vec::new();
+    b.extend_from_slice(MAGIC);
+    push_u32(&mut b, V1);
+    push_u32(&mut b, features as u32);
+    push_u32(&mut b, out as u32);
+    b.push(loss_id(loss));
+    let models = layout.spec().models();
+    push_u32(&mut b, models.len() as u32);
+    for &(h, act) in models {
+        push_u32(&mut b, h);
+        b.push(act.id());
+    }
+    push_u32(&mut b, layout.group_width as u32);
+    push_u32(&mut b, layout.group_models as u32);
+    push_u64(&mut b, layout.checksum());
+    push_u32(&mut b, ranking.len() as u32);
+    for e in ranking {
+        push_u32(&mut b, e.index as u32);
+        push_f32(&mut b, e.val_loss);
+        push_f32(&mut b, e.val_metric);
+    }
+    for t in [&fused.w1, &fused.b1, &fused.w2, &fused.b2] {
+        push_tensor(&mut b, t);
+    }
+    let mut h = Fnv1a64::new();
+    h.feed_bytes(&b);
+    push_u64(&mut b, h.finish());
+    b
 }
 
 fn loss_id(loss: Loss) -> u8 {
@@ -386,50 +571,82 @@ fn read_tensor(r: &mut Reader) -> anyhow::Result<Tensor> {
 mod tests {
     use super::*;
     use crate::nn::init::init_pool;
+    use crate::nn::stack::stack_bits_equal;
 
-    fn tiny() -> (PoolLayout, FusedParams) {
+    fn tiny_shallow() -> (PoolLayout, FusedParams) {
         let spec = PoolSpec::new(vec![(2, Act::Relu), (3, Act::Tanh), (1, Act::Identity)]).unwrap();
         let layout = PoolLayout::build(&spec);
         let fused = init_pool(5, &layout, 4, 2);
         (layout, fused)
     }
 
+    fn tiny_deep() -> (LayerStack, StackParams) {
+        let stack = LayerStack::new(
+            vec![
+                StackModel { hidden: vec![2, 3, 2], act: Act::Relu },
+                StackModel { hidden: vec![3], act: Act::Tanh },
+                StackModel { hidden: vec![1, 2], act: Act::Gelu },
+            ],
+            4,
+            2,
+        )
+        .unwrap();
+        let params = stack.init(9);
+        (stack, params)
+    }
+
     #[test]
-    fn bytes_roundtrip_and_stability() {
-        let (layout, fused) = tiny();
+    fn v2_bytes_roundtrip_and_stability() {
+        let (layout, fused) = tiny_shallow();
         let ranking = vec![
             RankEntry { index: 1, val_loss: 0.25, val_metric: 0.9 },
             RankEntry { index: 0, val_loss: 0.5, val_metric: 0.8 },
         ];
         let ckpt =
-            PoolCheckpoint::new(layout, 4, 2, Loss::Ce, fused, ranking.clone()).unwrap();
+            PoolCheckpoint::from_shallow(&layout, 4, 2, Loss::Ce, &fused, ranking.clone()).unwrap();
         let bytes = ckpt.to_bytes();
         let back = PoolCheckpoint::from_bytes(&bytes).unwrap();
-        assert!(fused_bits_equal(&ckpt.params, &back.params));
-        assert_eq!(back.spec().models(), ckpt.spec().models());
+        assert!(stack_bits_equal(&ckpt.params, &back.params));
+        assert_eq!(back.models(), ckpt.models());
         assert_eq!(back.ranking, ranking);
         assert_eq!(back.winner(), Some(1));
-        assert_eq!(back.features, 4);
-        assert_eq!(back.out, 2);
+        assert_eq!(back.features(), 4);
+        assert_eq!(back.out(), 2);
+        assert_eq!(back.depth(), 1);
         assert_eq!(back.loss.name(), "ce");
         // serialization is canonical: re-encoding reproduces the bytes
         assert_eq!(back.to_bytes(), bytes);
     }
 
     #[test]
-    fn nan_params_survive_bit_exact() {
-        let (layout, mut fused) = tiny();
-        fused.w1.data_mut()[0] = f32::NAN;
-        fused.b2.data_mut()[0] = f32::INFINITY;
-        let ckpt = PoolCheckpoint::new(layout, 4, 2, Loss::Mse, fused, vec![]).unwrap();
+    fn deep_ragged_roundtrip_is_bit_exact() {
+        let (stack, params) = tiny_deep();
+        let ckpt = PoolCheckpoint::new(stack, Loss::Mse, params, vec![]).unwrap();
         let back = PoolCheckpoint::from_bytes(&ckpt.to_bytes()).unwrap();
-        assert!(fused_bits_equal(&ckpt.params, &back.params));
+        assert!(stack_bits_equal(&ckpt.params, &back.params));
+        assert_eq!(back.depth(), 3);
+        assert_eq!(back.models(), ckpt.models());
+        for m in 0..ckpt.n_models() {
+            let a = ckpt.extract(m).unwrap();
+            let b = back.extract(m).unwrap();
+            assert_eq!(a.max_abs_diff(&b), 0.0, "model {m}");
+        }
+    }
+
+    #[test]
+    fn nan_params_survive_bit_exact() {
+        let (stack, mut params) = tiny_deep();
+        params.layers[0].w.data_mut()[0] = f32::NAN;
+        params.layers[2].b.data_mut()[0] = f32::INFINITY;
+        let ckpt = PoolCheckpoint::new(stack, Loss::Mse, params, vec![]).unwrap();
+        let back = PoolCheckpoint::from_bytes(&ckpt.to_bytes()).unwrap();
+        assert!(stack_bits_equal(&ckpt.params, &back.params));
     }
 
     #[test]
     fn every_flipped_byte_is_rejected() {
-        let (layout, fused) = tiny();
-        let ckpt = PoolCheckpoint::new(layout, 4, 2, Loss::Mse, fused, vec![]).unwrap();
+        let (stack, params) = tiny_deep();
+        let ckpt = PoolCheckpoint::new(stack, Loss::Mse, params, vec![]).unwrap();
         let bytes = ckpt.to_bytes();
         let n = bytes.len();
         for pos in [0, 3, 8, 12, 21, n / 3, n / 2, n - 9, n - 1] {
@@ -443,13 +660,46 @@ mod tests {
     }
 
     #[test]
-    fn oversized_layout_knobs_rejected_even_with_valid_checksum() {
+    fn v1_bytes_load_as_depth1_stack() {
+        // the compatibility guarantee: a legacy shallow checkpoint loads
+        // into the stack world with every model's floats bit-preserved
+        let (layout, fused) = tiny_shallow();
+        let ranking = vec![RankEntry { index: 2, val_loss: 0.1, val_metric: 0.1 }];
+        let bytes = to_v1_bytes(&layout, 4, 2, Loss::Mse, &fused, &ranking);
+        let ckpt = PoolCheckpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(ckpt.depth(), 1);
+        assert_eq!(ckpt.n_models(), 3);
+        assert_eq!(ckpt.winner(), Some(2));
+        for m in 0..3 {
+            let dense = ckpt.extract(m).unwrap();
+            let (want, want_act) = crate::pool::extract_model(&fused, &layout, m);
+            assert_eq!(dense.act, want_act);
+            assert_eq!(dense.n_hidden_layers(), 1);
+            assert!(dense.layers[0]
+                .w
+                .data()
+                .iter()
+                .zip(want.w1.data())
+                .all(|(a, b)| a.to_bits() == b.to_bits()));
+            assert!(dense.layers[1]
+                .w
+                .data()
+                .iter()
+                .zip(want.w2.data())
+                .all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+        // re-saving upgrades to v2, losslessly
+        let upgraded = PoolCheckpoint::from_bytes(&ckpt.to_bytes()).unwrap();
+        assert!(stack_bits_equal(&ckpt.params, &upgraded.params));
+    }
+
+    #[test]
+    fn v1_oversized_layout_knobs_rejected_even_with_valid_checksum() {
         // FNV is recomputable, so simulate an attacker patching the
         // group_width field AND fixing up the trailer: the size cap must
         // still reject the file before any layout allocation happens
-        let (layout, fused) = tiny();
-        let ckpt = PoolCheckpoint::new(layout, 4, 2, Loss::Mse, fused, vec![]).unwrap();
-        let mut b = ckpt.to_bytes();
+        let (layout, fused) = tiny_shallow();
+        let mut b = to_v1_bytes(&layout, 4, 2, Loss::Mse, &fused, &[]);
         // group_width offset: magic 8 + version 4 + F 4 + O 4 + loss 1
         //                     + n_models 4 + 3 models x (4 + 1) = 40
         b[40..44].copy_from_slice(&u32::MAX.to_le_bytes());
@@ -463,27 +713,52 @@ mod tests {
     }
 
     #[test]
+    fn v2_hostile_depth_and_width_rejected_with_valid_checksum() {
+        let (stack, params) = tiny_deep();
+        let ckpt = PoolCheckpoint::new(stack, Loss::Mse, params, vec![]).unwrap();
+        let mut b = ckpt.to_bytes();
+        // first model's n_layers field: magic 8 + version 4 + F 4 + O 4
+        // + loss 1 + n_models 4 = 25
+        b[25..29].copy_from_slice(&(MAX_STACK_DEPTH as u32 + 1).to_le_bytes());
+        let body_len = b.len() - 8;
+        let mut h = Fnv1a64::new();
+        h.feed_bytes(&b[..body_len]);
+        b[body_len..].copy_from_slice(&h.finish().to_le_bytes());
+        let err = PoolCheckpoint::from_bytes(&b).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+
+        // hidden width patched to u32::MAX: the total-rows cap must fire
+        let mut b = ckpt.to_bytes();
+        b[29..33].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut h = Fnv1a64::new();
+        h.feed_bytes(&b[..body_len]);
+        b[body_len..].copy_from_slice(&h.finish().to_le_bytes());
+        let err = PoolCheckpoint::from_bytes(&b).unwrap_err().to_string();
+        assert!(err.contains("too large"), "{err}");
+    }
+
+    #[test]
     fn extract_matches_direct_extraction() {
-        let (layout, fused) = tiny();
+        let (stack, params) = tiny_deep();
         let ckpt =
-            PoolCheckpoint::new(layout.clone(), 4, 2, Loss::Mse, fused.clone(), vec![]).unwrap();
-        for m in 0..layout.n_models() {
-            let (dense, act) = ckpt.extract(m).unwrap();
-            let (want, want_act) = crate::pool::extract_model(&fused, &layout, m);
+            PoolCheckpoint::new(stack.clone(), Loss::Mse, params.clone(), vec![]).unwrap();
+        for m in 0..stack.n_models() {
+            let dense = ckpt.extract(m).unwrap();
+            let want = stack.extract(&params, m);
             assert_eq!(dense.max_abs_diff(&want), 0.0);
-            assert_eq!(act, want_act);
+            assert_eq!(dense.act, want.act);
         }
         assert!(ckpt.extract(99).is_err());
     }
 
     #[test]
     fn duplicate_ranking_entries_rejected() {
-        let (layout, fused) = tiny();
+        let (stack, params) = tiny_deep();
         let ranking = vec![
             RankEntry { index: 1, val_loss: 0.1, val_metric: 0.1 },
             RankEntry { index: 1, val_loss: 0.2, val_metric: 0.2 },
         ];
-        let err = PoolCheckpoint::new(layout, 4, 2, Loss::Mse, fused, ranking)
+        let err = PoolCheckpoint::new(stack, Loss::Mse, params, ranking)
             .unwrap_err()
             .to_string();
         assert!(err.contains("duplicate ranking"), "{err}");
@@ -491,9 +766,15 @@ mod tests {
 
     #[test]
     fn shape_validation_rejects_mismatched_params() {
-        let (layout, _) = tiny();
-        let wrong = FusedParams::zeros(&layout, 5, 2); // features 5, ckpt says 4
-        assert!(PoolCheckpoint::new(layout, 4, 2, Loss::Mse, wrong, vec![]).is_err());
+        let (stack, _) = tiny_deep();
+        let other = LayerStack::new(
+            vec![StackModel { hidden: vec![2, 2], act: Act::Relu }],
+            4,
+            2,
+        )
+        .unwrap();
+        let wrong = other.zeros();
+        assert!(PoolCheckpoint::new(stack, Loss::Mse, wrong, vec![]).is_err());
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Persistence layer: the versioned, FNV-checksummed binary checkpoint
-//! that carries a trained pool from `TrainSession` to the serving side.
+//! that carries a trained pool — shallow or arbitrary-depth — from
+//! `TrainSession` to the serving side.
 pub mod checkpoint;
 
-pub use checkpoint::{fused_bits_equal, PoolCheckpoint, RankEntry};
+pub use checkpoint::{to_v1_bytes, PoolCheckpoint, RankEntry};

@@ -6,6 +6,7 @@
 //! * `rank`        — train, then print only the top-k ranking table
 //! * `export`      — train, checkpoint the pool, extract the top-k winners
 //! * `serve-bench` — offline load generator for the micro-batch server
+//! * `train-bench` — training throughput: shallow vs depth-2 vs depth-3
 //! * `bench`       — regenerate a paper table (`--table 1|2`)
 //! * `inspect`     — pool/layout accounting (the §5 memory note) + artifacts
 //!
@@ -17,16 +18,20 @@ use std::sync::Arc;
 use parallel_mlps::bench_harness::{artifacts_dir, BenchArgs};
 use parallel_mlps::config::{ExperimentConfig, Strategy};
 use parallel_mlps::coordinator::{
-    render_paper_table, run_experiment, run_experiment_trained, run_table, SweepConfig, TableKind,
+    render_paper_table, run_experiment, run_experiment_trained, run_table, BatchSet, DeepEngine,
+    SweepConfig, TableKind, TrainSession,
 };
 use parallel_mlps::data::SynthKind;
-use parallel_mlps::io::{fused_bits_equal, PoolCheckpoint};
+use parallel_mlps::io::PoolCheckpoint;
 use parallel_mlps::metrics::Table;
+use parallel_mlps::nn::act::Act;
 use parallel_mlps::nn::init::init_pool;
 use parallel_mlps::nn::loss::Loss;
+use parallel_mlps::nn::parallel::ParallelEngine;
+use parallel_mlps::nn::stack::{stack_bits_equal, LayerStack, StackModel};
 use parallel_mlps::pool::{PoolLayout, PoolSpec};
 use parallel_mlps::runtime::{PjrtParallelEngine, PjrtRuntime, PjrtSequentialEngine};
-use parallel_mlps::selection::{report, top_k_indices};
+use parallel_mlps::selection::{report, top_k, top_k_indices, RankedModel};
 use parallel_mlps::serve::bench::{render_reports, reports_json, run_load, synthetic_model, LoadSpec};
 use parallel_mlps::serve::{ModelRegistry, ServableModel, ServeConfig};
 use parallel_mlps::util::cli::Args;
@@ -40,12 +45,14 @@ USAGE:
   pmlp train --strategy native_parallel|native_sequential|deep_native
              [--dataset NAME] [--samples N] [--features N] [--epochs N]
              [--batch N] [--lr F] [--seed N] [--threads N]
-             [--early-stop N] [--verbose] [--top K]
+             [--depths a,b] [--early-stop N] [--verbose] [--top K]
   pmlp rank  (same flags as train) [--top K]
   pmlp export --out FILE [--top K] (same training flags as train)
   pmlp serve-bench [--ckpt FILE | --hidden N --features N --out-dim N]
              [--rows N] [--clients N] [--depth N] [--batch-sizes a,b,c]
              [--threads N] [--queue-cap N] [--seed N] [--out FILE.json]
+  pmlp train-bench [--quick] [--samples N] [--epochs N] [--warmup N]
+             [--batch N] [--threads N] [--seed N] [--out FILE.json]
   pmlp bench --table 1|2 [--quick] [--samples a,b] [--features a,b]
              [--batches a,b] [--epochs N] [--warmup N] [--threads N]
              [--paper-scale] [--out FILE] [--artifacts DIR]
@@ -53,10 +60,13 @@ USAGE:
                [--artifacts DIR]
 
 train runs every strategy through the unified PoolEngine/TrainSession
-API; --early-stop N adds patience-N early stopping on validation loss.
-export writes a versioned, FNV-checksummed pool checkpoint; serve-bench
-replays a synthetic load against the micro-batch server and reports
-rows/s plus p50/p99 latency per max_batch.
+API; --depths a,b (deep_native) puts stacks of those hidden-layer
+counts in one pool; --early-stop N adds patience-N early stopping on
+validation loss. export writes a versioned, FNV-checksummed pool
+checkpoint (any depth); serve-bench replays a synthetic load against
+the micro-batch server; train-bench records training throughput
+(models/s, rows/s) for shallow vs depth-2 vs depth-3 pools at fixed
+seeds into BENCH_train.json.
 ";
 
 fn main() {
@@ -80,6 +90,7 @@ fn real_main() -> anyhow::Result<()> {
         "rank" => rank(&args),
         "export" => export(&args),
         "serve-bench" => serve_bench(&args),
+        "train-bench" => train_bench(&args),
         "bench" => bench(&args),
         "inspect" => inspect(&args),
         "help" | "--help" | "-h" => {
@@ -183,19 +194,57 @@ fn train_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
     if let Some(v) = args.get_parse::<usize>("early-stop").map_err(parse)? {
         cfg.early_stop = if v == 0 { None } else { Some(v) };
     }
+    if let Some(v) = args.get_list::<u32>("depths").map_err(parse)? {
+        cfg.depths = Some(v);
+    }
     if args.has_flag("verbose") {
         cfg.progress = true;
     }
+    // depths only exists for the layer-stack strategy: silently training
+    // a depth-1 pool after the user asked for depth 2/3 would be a trap
+    anyhow::ensure!(
+        cfg.depths.is_none() || cfg.strategy.is_deep(),
+        "--depths (or a TOML `depths` key) requires --strategy deep_native; strategy {} ignores it",
+        cfg.strategy.name()
+    );
     Ok(cfg)
+}
+
+/// The ranking table speaks (first hidden width, act), which cannot
+/// distinguish depth variants of the same grid cell (`--depths 2,3`
+/// makes those routine) — print the top-k full architectures alongside.
+fn print_stack_archs(cfg: &ExperimentConfig, ranked: &[RankedModel], k: usize) -> anyhow::Result<()> {
+    if !cfg.strategy.is_deep() {
+        return Ok(());
+    }
+    let models = cfg.stack_models()?;
+    println!("architectures (top-{}):", k.min(ranked.len()));
+    for r in top_k(ranked, k) {
+        let m = &models[r.index];
+        let widths: Vec<String> = m.hidden.iter().map(|h| h.to_string()).collect();
+        println!(
+            "  model {}: {} hidden layer(s) [{}] {}",
+            r.index,
+            m.hidden.len(),
+            widths.join("-"),
+            m.act.name()
+        );
+    }
+    Ok(())
 }
 
 fn train(args: &Args) -> anyhow::Result<()> {
     let cfg = train_config(args)?;
     let top_k: usize = args.get_parse_or("top", 10).map_err(|e| anyhow::anyhow!(e))?;
+    let n_models = if cfg.strategy.is_deep() {
+        cfg.stack_models()?.len()
+    } else {
+        cfg.pool_spec()?.n_models()
+    };
     println!(
         "experiment {:?}: {} models on {}({} samples, {} features), strategy {}{}",
         cfg.name,
-        cfg.pool_spec()?.n_models(),
+        n_models,
         cfg.dataset.name(),
         cfg.samples,
         cfg.features,
@@ -219,55 +268,55 @@ fn train(args: &Args) -> anyhow::Result<()> {
         rep.n_train, rep.n_val, rep.n_test
     );
     println!("{}", report(&rep.ranked, cfg.loss, top_k));
+    print_stack_archs(&cfg, &rep.ranked, top_k)?;
     Ok(())
 }
 
 /// Train, then print only the top-k ranking table — the §5 grid-search
-/// answer, machine-friendly (no progress prose around it).
+/// answer, machine-friendly (no progress prose around it). Deep pools
+/// get one architecture line per top-k row (depths are invisible in the
+/// (h, act) table).
 fn rank(args: &Args) -> anyhow::Result<()> {
     let cfg = train_config(args)?;
     let top_k: usize = args.get_parse_or("top", 10).map_err(|e| anyhow::anyhow!(e))?;
     let rep = run_experiment(&cfg)?;
     println!("{}", report(&rep.ranked, cfg.loss, top_k));
+    print_stack_archs(&cfg, &rep.ranked, top_k)?;
     Ok(())
 }
 
 /// Train, snapshot the whole pool into a checkpoint, and report the
-/// top-k winners that are now servable from it.
+/// top-k winners that are now servable from it. Works for every native
+/// strategy — deep pools write the same v2 layer-stack format shallow
+/// pools do (a shallow pool is simply depth 1).
 fn export(args: &Args) -> anyhow::Result<()> {
     let cfg = train_config(args)?;
-    anyhow::ensure!(
-        !cfg.strategy.is_deep(),
-        "checkpoint format v1 stores single-hidden-layer pools; use --strategy native_parallel or native_sequential"
-    );
     let out_path = PathBuf::from(args.get_or("out", "pool.ckpt"));
     let top_k: usize = args.get_parse_or("top", 5).map_err(|e| anyhow::anyhow!(e))?;
     println!(
         "training {} ({} models) for export...",
         cfg.strategy.name(),
-        cfg.pool_spec()?.n_models()
+        if cfg.strategy.is_deep() {
+            cfg.stack_models()?.len()
+        } else {
+            cfg.pool_spec()?.n_models()
+        }
     );
     let trained = run_experiment_trained(&cfg)?;
-    let layout = PoolLayout::build(&trained.spec);
-    let ckpt = PoolCheckpoint::from_engine(
-        trained.engine.as_ref(),
-        &layout,
-        cfg.features,
-        trained.out_dim,
-        cfg.loss,
-        &trained.report.ranked,
-    )?;
+    let ckpt =
+        PoolCheckpoint::from_engine(trained.engine.as_ref(), cfg.loss, &trained.report.ranked)?;
     ckpt.save(&out_path)?;
     // paranoid roundtrip before declaring success: reload and compare bits
     let back = PoolCheckpoint::load(&out_path)?;
     anyhow::ensure!(
-        fused_bits_equal(&ckpt.params, &back.params),
+        stack_bits_equal(&ckpt.params, &back.params),
         "checkpoint roundtrip mismatch (disk corruption?)"
     );
     println!(
-        "checkpoint: {} ({} models, {} bytes, fnv-checksummed, roundtrip verified)",
+        "checkpoint: {} ({} models, depth {}, {} bytes, fnv-checksummed, roundtrip verified)",
         out_path.display(),
         ckpt.n_models(),
+        ckpt.depth(),
         std::fs::metadata(&out_path)?.len()
     );
     let mut registry = ModelRegistry::new();
@@ -277,6 +326,7 @@ fn export(args: &Args) -> anyhow::Result<()> {
         top_k_indices(&trained.report.ranked, top_k)
     );
     println!("{}", report(&trained.report.ranked, cfg.loss, top_k));
+    print_stack_archs(&cfg, &trained.report.ranked, top_k)?;
     Ok(())
 }
 
@@ -310,9 +360,10 @@ fn serve_bench(args: &Args) -> anyhow::Result<()> {
             };
             let m = ServableModel::from_checkpoint(&ckpt, winner, format!("{p}#top1"))?;
             println!(
-                "serving {label}: model {winner} (h={}, {}, F={}, O={})",
+                "serving {label}: model {winner} (h={}, {} hidden layer(s), {}, F={}, O={})",
                 m.hidden(),
-                m.act.name(),
+                m.depth(),
+                m.act().name(),
                 m.features(),
                 m.out()
             );
@@ -370,6 +421,161 @@ fn serve_bench(args: &Args) -> anyhow::Result<()> {
         eprintln!("report written to {path}");
     }
     Ok(())
+}
+
+/// One measured cell of the training-throughput bench.
+struct TrainBenchCell {
+    pool: &'static str,
+    strategy: &'static str,
+    depth: usize,
+    models: usize,
+    rows_per_epoch: usize,
+    avg_epoch_s: f64,
+}
+
+impl TrainBenchCell {
+    fn models_per_s(&self) -> f64 {
+        self.models as f64 / self.avg_epoch_s.max(1e-12)
+    }
+
+    fn rows_per_s(&self) -> f64 {
+        self.rows_per_epoch as f64 / self.avg_epoch_s.max(1e-12)
+    }
+
+    /// model-row products per second — the true fused-training
+    /// throughput (every row advances every model).
+    fn model_rows_per_s(&self) -> f64 {
+        self.models as f64 * self.rows_per_s()
+    }
+}
+
+/// Training throughput at fixed seeds: the same (h, act) grid as a
+/// shallow pool, a depth-2 stack and a depth-3 stack, all through the
+/// one `TrainSession` loop. Records models/s and rows/s per pool so the
+/// perf trajectory covers training, not just serving.
+fn train_bench(args: &Args) -> anyhow::Result<()> {
+    let parse = |e: String| anyhow::anyhow!(e);
+    let quick = args.has_flag("quick");
+    let samples: usize = args.get_parse_or("samples", if quick { 512 } else { 4096 }).map_err(parse)?;
+    let epochs: usize = args.get_parse_or("epochs", if quick { 3 } else { 8 }).map_err(parse)?;
+    let warmup: usize = args.get_parse_or("warmup", 1).map_err(parse)?;
+    let batch: usize = args.get_parse_or("batch", 64).map_err(parse)?;
+    let threads: usize = args.get_parse_or("threads", 0).map_err(parse)?;
+    let seed: u64 = args.get_parse_or("seed", 42).map_err(parse)?;
+    let out_path = args.get_or("out", "BENCH_train.json").to_string();
+    anyhow::ensure!(epochs > warmup, "need at least one timed epoch (epochs > warmup)");
+    let threads = if threads == 0 {
+        parallel_mlps::util::threadpool::num_threads()
+    } else {
+        threads
+    };
+
+    let (features, out_dim) = (16usize, 4usize);
+    let hidden: Vec<u32> = vec![2, 4, 8, 16];
+    let acts = vec![Act::Relu, Act::Tanh];
+    let mut rng = parallel_mlps::util::rng::Rng::new(seed);
+    let ds = parallel_mlps::data::random_regression(samples, features, out_dim, &mut rng);
+    let batches = BatchSet::new(&ds, batch, false)?;
+    let session =
+        || TrainSession::builder().epochs(epochs).warmup(warmup).lr(0.05);
+
+    let mut cells: Vec<TrainBenchCell> = Vec::with_capacity(3);
+
+    // shallow fused pool (depth 1) through ParallelEngine
+    {
+        let spec = PoolSpec::from_grid(&hidden, &acts, 1)?;
+        let layout = PoolLayout::build(&spec);
+        let fused = init_pool(seed, &layout, features, out_dim);
+        let mut engine =
+            ParallelEngine::new(layout, fused, Loss::Mse, features, out_dim, batch, threads);
+        let rep = session().run_with_batches(&mut engine, &batches)?;
+        cells.push(TrainBenchCell {
+            pool: "shallow",
+            strategy: "native_parallel",
+            depth: 1,
+            models: spec.n_models(),
+            rows_per_epoch: batches.n_samples,
+            avg_epoch_s: rep.outcome.avg_timed_epoch_s(),
+        });
+    }
+    // depth-2 and depth-3 stacks through DeepEngine
+    for (pool, depth) in [("deep2", 2usize), ("deep3", 3usize)] {
+        let models: Vec<StackModel> = acts
+            .iter()
+            .flat_map(|&a| hidden.iter().map(move |&h| StackModel::uniform(h, depth, a)))
+            .collect();
+        let n_models = models.len();
+        let stack = LayerStack::new(models, features, out_dim)?;
+        let mut engine = DeepEngine::new(stack, seed, Loss::Mse, threads);
+        let rep = session().run_with_batches(&mut engine, &batches)?;
+        cells.push(TrainBenchCell {
+            pool,
+            strategy: "deep_native",
+            depth,
+            models: n_models,
+            rows_per_epoch: batches.n_samples,
+            avg_epoch_s: rep.outcome.avg_timed_epoch_s(),
+        });
+    }
+
+    let mut t = Table::new(
+        &format!("train-bench: {samples} samples x {epochs} epochs (warmup {warmup}), {threads} threads"),
+        &["pool", "strategy", "depth", "models", "rows/epoch", "epoch_s", "models/s", "rows/s", "model_rows/s"],
+    );
+    for c in &cells {
+        t.row(vec![
+            c.pool.to_string(),
+            c.strategy.to_string(),
+            c.depth.to_string(),
+            c.models.to_string(),
+            c.rows_per_epoch.to_string(),
+            format!("{:.4}", c.avg_epoch_s),
+            format!("{:.1}", c.models_per_s()),
+            format!("{:.0}", c.rows_per_s()),
+            format!("{:.0}", c.model_rows_per_s()),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+
+    let doc = train_bench_json(samples, features, out_dim, batch, epochs, warmup, threads, seed, &cells);
+    std::fs::write(&out_path, doc).map_err(|e| anyhow::anyhow!("writing {out_path}: {e}"))?;
+    eprintln!("report written to {out_path}");
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn train_bench_json(
+    samples: usize,
+    features: usize,
+    out_dim: usize,
+    batch: usize,
+    epochs: usize,
+    warmup: usize,
+    threads: usize,
+    seed: u64,
+    cells: &[TrainBenchCell],
+) -> String {
+    let mut runs = String::new();
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            runs.push_str(",\n    ");
+        }
+        runs.push_str(&format!(
+            "{{\"pool\": \"{}\", \"strategy\": \"{}\", \"depth\": {}, \"models\": {}, \"rows_per_epoch\": {}, \"avg_epoch_s\": {:.6}, \"models_per_s\": {:.2}, \"rows_per_s\": {:.1}, \"model_rows_per_s\": {:.1}}}",
+            c.pool,
+            c.strategy,
+            c.depth,
+            c.models,
+            c.rows_per_epoch,
+            c.avg_epoch_s,
+            c.models_per_s(),
+            c.rows_per_s(),
+            c.model_rows_per_s()
+        ));
+    }
+    format!(
+        "{{\n  \"bench\": \"train\",\n  \"generated_by\": \"pmlp train-bench\",\n  \"samples\": {samples},\n  \"features\": {features},\n  \"out\": {out_dim},\n  \"batch\": {batch},\n  \"epochs\": {epochs},\n  \"warmup\": {warmup},\n  \"threads\": {threads},\n  \"seed\": {seed},\n  \"runs\": [\n    {runs}\n  ]\n}}\n"
+    )
 }
 
 fn bench(args: &Args) -> anyhow::Result<()> {

@@ -1,9 +1,10 @@
-//! Neural-network substrate: activations, losses, init, optimizers, and
-//! the two native training engines (fused parallel + sequential baseline).
+//! Neural-network substrate: activations, losses, init, optimizers, the
+//! two native shallow training engines (fused parallel + sequential
+//! baseline), and the arbitrary-depth fused [`stack::LayerStack`].
 pub mod act;
-pub mod deep;
 pub mod init;
 pub mod loss;
 pub mod mlp;
 pub mod optimizer;
 pub mod parallel;
+pub mod stack;

@@ -1,0 +1,1166 @@
+//! `LayerStack` — the arbitrary-depth fused pool representation.
+//!
+//! The paper's future-work figure (Fig. 3 / §7) fuses *deep*
+//! heterogeneous MLPs with the same Modified Matrix Multiplication used
+//! for one hidden layer: the first projection is a plain fused matmul
+//! over the concatenated hidden axis, and every subsequent layer needs
+//! masked propagation so a model's level-ℓ neurons only see its own
+//! level-(ℓ-1) neurons. Natively that masking degenerates into per-model
+//! span-to-span dense blocks — a block-diagonal matmul whose blocks are
+//! stored packed (cross-model weights are not merely zero, they do not
+//! exist), threaded across models via `util::threadpool`.
+//!
+//! A pool is a `Vec<FusedLayer>`:
+//!
+//! * layer 0 — dense `[W0, F]` fused input projection (every model),
+//! * inner layers 1..D-1 — packed per-model blocks `[wℓ(m), wℓ₋₁(m)]`
+//!   plus a `[Wℓ]` fused bias,
+//! * output layer — packed per-model blocks `[O, w_last(m)]` plus a
+//!   `[M, O]` per-model output bias.
+//!
+//! Models with fewer hidden layers than the stack depth pass through
+//! **identity spans**: at every level past a model's last real layer its
+//! activations are copied forward unchanged (no weights, no bias, grad
+//! 1), so heterogeneous depths (1..=D hidden layers) coexist in one pool
+//! and the output layer always reads level D-1.
+//!
+//! Determinism: forward passes parallelize over batch rows (each output
+//! element written exactly once) and backward passes parallelize over
+//! models (each thread owns whole models, accumulating over the batch in
+//! order), so results are bit-identical for every thread count.
+
+use crate::nn::act::Act;
+use crate::nn::init::ModelParams;
+use crate::nn::loss::{self, Loss};
+use crate::nn::mlp::{add_bias_rows_vec, col_sums};
+use crate::tensor::{matmul, Tensor};
+use crate::util::rng::Rng;
+use crate::util::threadpool::{parallel_chunks, SendPtr};
+
+/// Upper bound on hidden layers per model. Far above any architecture
+/// this crate trains; it exists so config parsing and checkpoint loading
+/// reject absurd depths before allocating for them.
+pub const MAX_STACK_DEPTH: usize = 64;
+
+/// One model of a stack pool: its hidden widths (one per hidden layer,
+/// `1..=depth` of them) and its activation (shared across layers, like
+/// the paper's per-model activation choice).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StackModel {
+    pub hidden: Vec<u32>,
+    pub act: Act,
+}
+
+impl StackModel {
+    /// `depth` hidden layers of uniform width `h`.
+    pub fn uniform(h: u32, depth: usize, act: Act) -> StackModel {
+        StackModel { hidden: vec![h; depth.max(1)], act }
+    }
+
+    /// Number of hidden layers.
+    pub fn depth(&self) -> usize {
+        self.hidden.len()
+    }
+}
+
+/// One fused layer of a stack pool. Layer 0 stores a dense `[W0, F]`
+/// weight; inner and output layers store packed per-model blocks in a
+/// flat tensor (offsets live in [`LayerStack`]). Biases: `[Wℓ]` for
+/// hidden layers (identity spans stay zero), `[M, O]` for the output.
+#[derive(Clone, Debug)]
+pub struct FusedLayer {
+    pub w: Tensor,
+    pub b: Tensor,
+}
+
+/// Fused parameters of a stack pool: `depth + 1` layers.
+#[derive(Clone, Debug)]
+pub struct StackParams {
+    pub layers: Vec<FusedLayer>,
+}
+
+impl StackParams {
+    pub fn all_finite(&self) -> bool {
+        self.layers.iter().all(|l| l.w.all_finite() && l.b.all_finite())
+    }
+}
+
+/// Bit-level equality of two stack parameter sets (`==` on floats would
+/// call NaN != NaN, so diverged-but-identical pools need this instead).
+pub fn stack_bits_equal(a: &StackParams, b: &StackParams) -> bool {
+    a.layers.len() == b.layers.len()
+        && a.layers.iter().zip(&b.layers).all(|(x, y)| {
+            x.w.shape() == y.w.shape()
+                && x.b.shape() == y.b.shape()
+                && x.w.data().iter().zip(y.w.data()).all(|(p, q)| p.to_bits() == q.to_bits())
+                && x.b.data().iter().zip(y.b.data()).all(|(p, q)| p.to_bits() == q.to_bits())
+        })
+}
+
+/// The arbitrary-depth fused pool: pure structure (spans, offsets); the
+/// parameters live in [`StackParams`], so one `LayerStack` can drive any
+/// number of parameter sets.
+#[derive(Clone, Debug)]
+pub struct LayerStack {
+    models: Vec<StackModel>,
+    features: usize,
+    out: usize,
+    /// stack depth D = max hidden layers over models
+    depth: usize,
+    /// spans[l][m] = (start, end) of model m in the level-l fused axis
+    spans: Vec<Vec<(usize, usize)>>,
+    /// total fused width per level
+    widths: Vec<usize>,
+    /// inner_off[l-1][m] = offset of model m's block in layer l's packed
+    /// weight, `None` when level l is an identity passthrough for m
+    inner_off: Vec<Vec<Option<usize>>>,
+    /// packed float count per inner layer weight
+    inner_len: Vec<usize>,
+    /// out_off[m] = offset of model m's `[O, w_last(m)]` block
+    out_off: Vec<usize>,
+    out_len: usize,
+}
+
+impl LayerStack {
+    pub fn new(models: Vec<StackModel>, features: usize, out: usize) -> anyhow::Result<LayerStack> {
+        anyhow::ensure!(!models.is_empty(), "empty stack pool");
+        anyhow::ensure!(features >= 1 && out >= 1, "features/out must be >= 1");
+        for (m, model) in models.iter().enumerate() {
+            anyhow::ensure!(!model.hidden.is_empty(), "model {m} has no hidden layers");
+            anyhow::ensure!(
+                model.hidden.len() <= MAX_STACK_DEPTH,
+                "model {m}: {} hidden layers exceeds the {MAX_STACK_DEPTH}-layer cap",
+                model.hidden.len()
+            );
+            anyhow::ensure!(
+                model.hidden.iter().all(|&h| h >= 1),
+                "model {m}: hidden sizes must be >= 1"
+            );
+        }
+        let depth = models.iter().map(|m| m.depth()).max().expect("non-empty");
+
+        // width of model m at level l: its layer-l width while real, its
+        // last real width once the level is an identity passthrough
+        let width_at = |m: &StackModel, l: usize| m.hidden[l.min(m.depth() - 1)] as usize;
+
+        let mut spans = Vec::with_capacity(depth);
+        let mut widths = Vec::with_capacity(depth);
+        for l in 0..depth {
+            let mut level = Vec::with_capacity(models.len());
+            let mut cursor = 0usize;
+            for model in &models {
+                let w = width_at(model, l);
+                level.push((cursor, cursor + w));
+                cursor += w;
+            }
+            spans.push(level);
+            widths.push(cursor);
+        }
+
+        let mut inner_off = Vec::with_capacity(depth.saturating_sub(1));
+        let mut inner_len = Vec::with_capacity(depth.saturating_sub(1));
+        for l in 1..depth {
+            let mut offs = Vec::with_capacity(models.len());
+            let mut cursor = 0usize;
+            for model in &models {
+                if l < model.depth() {
+                    offs.push(Some(cursor));
+                    cursor += width_at(model, l) * width_at(model, l - 1);
+                } else {
+                    offs.push(None);
+                }
+            }
+            inner_off.push(offs);
+            inner_len.push(cursor);
+        }
+
+        let mut out_off = Vec::with_capacity(models.len());
+        let mut cursor = 0usize;
+        for model in &models {
+            out_off.push(cursor);
+            cursor += out * width_at(model, depth - 1);
+        }
+
+        Ok(LayerStack {
+            models,
+            features,
+            out,
+            depth,
+            spans,
+            widths,
+            inner_off,
+            inner_len,
+            out_off,
+            out_len: cursor,
+        })
+    }
+
+    /// A depth-1 stack over `(h, act)` models — the shallow pool
+    /// expressed in stack terms.
+    pub fn shallow(models: &[(u32, Act)], features: usize, out: usize) -> anyhow::Result<LayerStack> {
+        LayerStack::new(
+            models.iter().map(|&(h, act)| StackModel { hidden: vec![h], act }).collect(),
+            features,
+            out,
+        )
+    }
+
+    pub fn models(&self) -> &[StackModel] {
+        &self.models
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn features(&self) -> usize {
+        self.features
+    }
+
+    pub fn out(&self) -> usize {
+        self.out
+    }
+
+    /// Stack depth (max hidden layers over models).
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Fused width of level `l`.
+    pub fn level_width(&self, l: usize) -> usize {
+        self.widths[l]
+    }
+
+    /// Model `m`'s span in the level-`l` fused axis.
+    pub fn span(&self, l: usize, m: usize) -> (usize, usize) {
+        self.spans[l][m]
+    }
+
+    /// Whether level `l >= 1` is a real trained layer for model `m`
+    /// (false = identity passthrough).
+    pub fn is_real(&self, l: usize, m: usize) -> bool {
+        l == 0 || (l < self.depth && self.inner_off[l - 1][m].is_some())
+    }
+
+    /// Zero-filled parameters with the right shapes.
+    pub fn zeros(&self) -> StackParams {
+        let mut layers = Vec::with_capacity(self.depth + 1);
+        layers.push(FusedLayer {
+            w: Tensor::zeros(&[self.widths[0], self.features]),
+            b: Tensor::zeros(&[self.widths[0]]),
+        });
+        for l in 1..self.depth {
+            layers.push(FusedLayer {
+                w: Tensor::zeros(&[self.inner_len[l - 1].max(1)]),
+                b: Tensor::zeros(&[self.widths[l]]),
+            });
+        }
+        layers.push(FusedLayer {
+            w: Tensor::zeros(&[self.out_len]),
+            b: Tensor::zeros(&[self.n_models(), self.out]),
+        });
+        StackParams { layers }
+    }
+
+    /// Deterministic per-model init, forked-RNG keyed by model index:
+    /// `U(-1/sqrt(fan_in), 1/sqrt(fan_in))` per layer, the same scheme
+    /// every engine in the crate uses.
+    pub fn init(&self, seed: u64) -> StackParams {
+        let mut params = self.zeros();
+        let mut root = Rng::new(seed ^ 0x57AC);
+        for m in 0..self.n_models() {
+            let mut rng = root.fork(m as u64);
+            let d = self.models[m].depth();
+            // layer 0
+            let k0 = 1.0 / (self.features as f32).sqrt();
+            let (s0, e0) = self.spans[0][m];
+            for r in s0..e0 {
+                rng.fill_uniform(params.layers[0].w.row_mut(r), -k0, k0);
+                params.layers[0].b.data_mut()[r] = rng.uniform_in(-k0, k0);
+            }
+            // inner layers
+            for l in 1..d {
+                let fan_in = self.models[m].hidden[l - 1] as usize;
+                let k = 1.0 / (fan_in as f32).sqrt();
+                let rows = self.models[m].hidden[l] as usize;
+                let off = self.inner_off[l - 1][m].expect("l < depth(m) is real");
+                let (cs, _) = self.spans[l][m];
+                for r in 0..rows {
+                    let block = &mut params.layers[l].w.data_mut()[off + r * fan_in..off + (r + 1) * fan_in];
+                    rng.fill_uniform(block, -k, k);
+                    params.layers[l].b.data_mut()[cs + r] = rng.uniform_in(-k, k);
+                }
+            }
+            // output layer
+            let last = self.models[m].hidden[d - 1] as usize;
+            let k = 1.0 / (last as f32).sqrt();
+            let off = self.out_off[m];
+            let out_layer = params.layers.last_mut().expect("depth + 1 layers");
+            for o in 0..self.out {
+                let block = &mut out_layer.w.data_mut()[off + o * last..off + (o + 1) * last];
+                rng.fill_uniform(block, -k, k);
+            }
+            for v in out_layer.b.row_mut(m).iter_mut() {
+                *v = rng.uniform_in(-k, k);
+            }
+        }
+        params
+    }
+
+    /// Shape-check a parameter set against this stack.
+    pub fn validate(&self, p: &StackParams) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            p.layers.len() == self.depth + 1,
+            "stack params have {} layers, stack wants {}",
+            p.layers.len(),
+            self.depth + 1
+        );
+        anyhow::ensure!(
+            p.layers[0].w.shape() == &[self.widths[0], self.features]
+                && p.layers[0].b.shape() == &[self.widths[0]],
+            "layer 0 shapes do not match the stack (W0={}, F={})",
+            self.widths[0],
+            self.features
+        );
+        for l in 1..self.depth {
+            anyhow::ensure!(
+                p.layers[l].w.len() == self.inner_len[l - 1].max(1)
+                    && p.layers[l].b.shape() == &[self.widths[l]],
+                "inner layer {l} shapes do not match the stack"
+            );
+        }
+        let out_layer = p.layers.last().expect("non-empty");
+        anyhow::ensure!(
+            out_layer.w.len() == self.out_len
+                && out_layer.b.shape() == &[self.n_models(), self.out],
+            "output layer shapes do not match the stack (M={}, O={})",
+            self.n_models(),
+            self.out
+        );
+        Ok(())
+    }
+
+    /// Fused forward to logits `[B, M, O]`.
+    pub fn forward(&self, p: &StackParams, x: &Tensor, threads: usize) -> Tensor {
+        let (_, hs) = self.forward_levels(p, x, threads);
+        self.output(p, hs.last().expect("depth >= 1"), threads)
+    }
+
+    /// All level pre-activations and activations. Identity-span entries
+    /// of `pre` are unused (stay zero); `h` carries the passed-through
+    /// activations, so `h[depth-1]` is always what the output layer reads.
+    fn forward_levels(&self, p: &StackParams, x: &Tensor, threads: usize) -> (Vec<Tensor>, Vec<Tensor>) {
+        let b = x.rows();
+        assert_eq!(x.cols(), self.features, "input has {} features, stack wants {}", x.cols(), self.features);
+        let mut pres = Vec::with_capacity(self.depth);
+        let mut hs = Vec::with_capacity(self.depth);
+
+        // level 0: plain fused dense matmul + per-span activations
+        let mut pre0 = matmul::nt(x, &p.layers[0].w, threads);
+        add_bias_rows_vec(&mut pre0, p.layers[0].b.data());
+        let mut h0 = Tensor::zeros(&[b, self.widths[0]]);
+        {
+            let w0 = self.widths[0];
+            let pre = pre0.data();
+            let spans = &self.spans[0];
+            let models = &self.models;
+            let hp = SendPtr(h0.data_mut().as_mut_ptr());
+            parallel_chunks(b, threads, 1, move |r0, r1| {
+                for bi in r0..r1 {
+                    let prow = &pre[bi * w0..(bi + 1) * w0];
+                    let hrow = unsafe { std::slice::from_raw_parts_mut(hp.ptr().add(bi * w0), w0) };
+                    for (model, &(s, e)) in models.iter().zip(spans) {
+                        model.act.apply_slice(&prow[s..e], &mut hrow[s..e]);
+                    }
+                }
+            });
+        }
+        pres.push(pre0);
+        hs.push(h0);
+
+        // inner levels: per-model block-diagonal matmul (or identity copy)
+        for l in 1..self.depth {
+            let (wprev, wcur) = (self.widths[l - 1], self.widths[l]);
+            let mut pre = Tensor::zeros(&[b, wcur]);
+            let mut h = Tensor::zeros(&[b, wcur]);
+            {
+                let prev = hs[l - 1].data();
+                let wdat = p.layers[l].w.data();
+                let bdat = p.layers[l].b.data();
+                let spans_prev = &self.spans[l - 1];
+                let spans_cur = &self.spans[l];
+                let offs = &self.inner_off[l - 1];
+                let models = &self.models;
+                let pp = SendPtr(pre.data_mut().as_mut_ptr());
+                let hp = SendPtr(h.data_mut().as_mut_ptr());
+                parallel_chunks(b, threads, 1, move |r0, r1| {
+                    for bi in r0..r1 {
+                        let prow = &prev[bi * wprev..(bi + 1) * wprev];
+                        let pre_row =
+                            unsafe { std::slice::from_raw_parts_mut(pp.ptr().add(bi * wcur), wcur) };
+                        let hrow =
+                            unsafe { std::slice::from_raw_parts_mut(hp.ptr().add(bi * wcur), wcur) };
+                        for (m, model) in models.iter().enumerate() {
+                            let (ps, pe) = spans_prev[m];
+                            let (cs, ce) = spans_cur[m];
+                            match offs[m] {
+                                Some(off) => {
+                                    let fan_in = pe - ps;
+                                    for (r, col) in (cs..ce).enumerate() {
+                                        let wrow = &wdat[off + r * fan_in..off + (r + 1) * fan_in];
+                                        pre_row[col] =
+                                            matmul::dot(&prow[ps..pe], wrow) + bdat[col];
+                                    }
+                                    model.act.apply_slice(&pre_row[cs..ce], &mut hrow[cs..ce]);
+                                }
+                                // identity passthrough for ragged depths
+                                None => hrow[cs..ce].copy_from_slice(&prow[ps..pe]),
+                            }
+                        }
+                    }
+                });
+            }
+            pres.push(pre);
+            hs.push(h);
+        }
+        (pres, hs)
+    }
+
+    /// Output projection: per-model `[O, w_last(m)]` blocks over the
+    /// final level, to logits `[B, M, O]`.
+    fn output(&self, p: &StackParams, h_last: &Tensor, threads: usize) -> Tensor {
+        let b = h_last.rows();
+        let (m_n, o) = (self.n_models(), self.out);
+        let wlast = self.widths[self.depth - 1];
+        let mut y = Tensor::zeros(&[b, m_n, o]);
+        {
+            let hdat = h_last.data();
+            let out_layer = p.layers.last().expect("non-empty");
+            let wdat = out_layer.w.data();
+            let bdat = out_layer.b.data();
+            let spans = &self.spans[self.depth - 1];
+            let out_off = &self.out_off;
+            let yp = SendPtr(y.data_mut().as_mut_ptr());
+            parallel_chunks(b, threads, 1, move |r0, r1| {
+                for bi in r0..r1 {
+                    let hrow = &hdat[bi * wlast..(bi + 1) * wlast];
+                    let yrow = unsafe {
+                        std::slice::from_raw_parts_mut(yp.ptr().add(bi * m_n * o), m_n * o)
+                    };
+                    for (m, &(s, e)) in spans.iter().enumerate() {
+                        let last = e - s;
+                        let off = out_off[m];
+                        for oi in 0..o {
+                            let wrow = &wdat[off + oi * last..off + (oi + 1) * last];
+                            yrow[m * o + oi] =
+                                matmul::dot(&hrow[s..e], wrow) + bdat[m * o + oi];
+                        }
+                    }
+                }
+            });
+        }
+        y
+    }
+
+    /// Per-model `[B, O]` logits slice of the fused `[B, M, O]` output.
+    pub fn model_logits(&self, y: &Tensor, m: usize) -> Tensor {
+        let b = y.shape()[0];
+        let mut single = Tensor::zeros(&[b, self.out]);
+        for bi in 0..b {
+            for o in 0..self.out {
+                single.set2(bi, o, y.at3(bi, m, o));
+            }
+        }
+        single
+    }
+
+    /// One fused SGD step on a batch; returns per-model losses. Backward
+    /// passes parallelize over models (disjoint spans/blocks, batch rows
+    /// accumulated in order), so the result is bit-identical for every
+    /// thread count.
+    pub fn step(
+        &self,
+        p: &mut StackParams,
+        x: &Tensor,
+        targets: &Tensor,
+        loss: Loss,
+        lr: f32,
+        threads: usize,
+    ) -> Vec<f32> {
+        let b = x.rows();
+        let (m_n, o) = (self.n_models(), self.out);
+        let (pres, hs) = self.forward_levels(p, x, threads);
+        let y = self.output(p, hs.last().expect("depth >= 1"), threads);
+
+        // per-model losses + dlogits. One [B, O] scratch pair reused
+        // across models (mlp_loss_grad overwrites every element), so the
+        // hot loop costs zero allocations per model.
+        let mut losses = vec![0.0f32; m_n];
+        let mut dy = Tensor::zeros(&[b, m_n, o]);
+        let mut single = Tensor::zeros(&[b, o]);
+        let mut dsingle = Tensor::zeros(&[b, o]);
+        for (m, lm) in losses.iter_mut().enumerate() {
+            for bi in 0..b {
+                for oi in 0..o {
+                    single.set2(bi, oi, y.at3(bi, m, oi));
+                }
+            }
+            *lm = loss::mlp_loss(loss, &single, targets);
+            loss::mlp_loss_grad(loss, &single, targets, &mut dsingle);
+            for bi in 0..b {
+                for oi in 0..o {
+                    dy.set3(bi, m, oi, dsingle.at2(bi, oi));
+                }
+            }
+        }
+
+        // output layer backward (threaded over models)
+        let wlast = self.widths[self.depth - 1];
+        let mut dh = Tensor::zeros(&[b, wlast]);
+        let mut dw_out = vec![0.0f32; self.out_len];
+        let mut db_out = Tensor::zeros(&[m_n, o]);
+        {
+            let hdat = hs.last().expect("depth >= 1").data();
+            let out_layer = p.layers.last().expect("non-empty");
+            let wdat = out_layer.w.data();
+            let dydat = dy.data();
+            let spans = &self.spans[self.depth - 1];
+            let out_off = &self.out_off;
+            let dhp = SendPtr(dh.data_mut().as_mut_ptr());
+            let dwp = SendPtr(dw_out.as_mut_ptr());
+            let dbp = SendPtr(db_out.data_mut().as_mut_ptr());
+            parallel_chunks(m_n, threads, 1, move |m0, m1| {
+                for m in m0..m1 {
+                    let (s, e) = spans[m];
+                    let last = e - s;
+                    let off = out_off[m];
+                    for bi in 0..b {
+                        let hrow = &hdat[bi * wlast + s..bi * wlast + e];
+                        // SAFETY: spans/blocks are disjoint across models
+                        let dhrow = unsafe {
+                            std::slice::from_raw_parts_mut(dhp.ptr().add(bi * wlast + s), last)
+                        };
+                        for oi in 0..o {
+                            let g = dydat[(bi * m_n + m) * o + oi];
+                            unsafe { *dbp.ptr().add(m * o + oi) += g };
+                            if g == 0.0 {
+                                continue;
+                            }
+                            let dwrow = unsafe {
+                                std::slice::from_raw_parts_mut(
+                                    dwp.ptr().add(off + oi * last),
+                                    last,
+                                )
+                            };
+                            matmul::axpy(g, hrow, dwrow);
+                            matmul::axpy(g, &wdat[off + oi * last..off + (oi + 1) * last], dhrow);
+                        }
+                    }
+                }
+            });
+        }
+
+        // inner layers, top down (threaded over models)
+        let mut inner_grads: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(self.depth - 1);
+        for l in (1..self.depth).rev() {
+            let (wprev, wcur) = (self.widths[l - 1], self.widths[l]);
+            let mut dh_prev = Tensor::zeros(&[b, wprev]);
+            let mut dw = vec![0.0f32; self.inner_len[l - 1].max(1)];
+            let mut db = vec![0.0f32; wcur];
+            {
+                let prev = hs[l - 1].data();
+                let pre = pres[l].data();
+                let dh_cur = dh.data();
+                let wdat = p.layers[l].w.data();
+                let spans_prev = &self.spans[l - 1];
+                let spans_cur = &self.spans[l];
+                let offs = &self.inner_off[l - 1];
+                let models = &self.models;
+                let dhp = SendPtr(dh_prev.data_mut().as_mut_ptr());
+                let dwp = SendPtr(dw.as_mut_ptr());
+                let dbp = SendPtr(db.as_mut_ptr());
+                parallel_chunks(m_n, threads, 1, move |m0, m1| {
+                    for m in m0..m1 {
+                        let (ps, pe) = spans_prev[m];
+                        let (cs, ce) = spans_cur[m];
+                        let fan_in = pe - ps;
+                        match offs[m] {
+                            Some(off) => {
+                                for bi in 0..b {
+                                    let hprow = &prev[bi * wprev + ps..bi * wprev + pe];
+                                    // SAFETY: disjoint spans across models
+                                    let dprow = unsafe {
+                                        std::slice::from_raw_parts_mut(
+                                            dhp.ptr().add(bi * wprev + ps),
+                                            fan_in,
+                                        )
+                                    };
+                                    for (r, col) in (cs..ce).enumerate() {
+                                        let g = dh_cur[bi * wcur + col]
+                                            * models[m].act.grad(pre[bi * wcur + col]);
+                                        unsafe { *dbp.ptr().add(col) += g };
+                                        if g == 0.0 {
+                                            continue;
+                                        }
+                                        let dwrow = unsafe {
+                                            std::slice::from_raw_parts_mut(
+                                                dwp.ptr().add(off + r * fan_in),
+                                                fan_in,
+                                            )
+                                        };
+                                        matmul::axpy(g, hprow, dwrow);
+                                        let wrow =
+                                            &wdat[off + r * fan_in..off + (r + 1) * fan_in];
+                                        matmul::axpy(g, wrow, dprow);
+                                    }
+                                }
+                            }
+                            // identity: gradient passes straight through
+                            None => {
+                                for bi in 0..b {
+                                    let dprow = unsafe {
+                                        std::slice::from_raw_parts_mut(
+                                            dhp.ptr().add(bi * wprev + ps),
+                                            fan_in,
+                                        )
+                                    };
+                                    dprow.copy_from_slice(
+                                        &dh_cur[bi * wcur + cs..bi * wcur + ce],
+                                    );
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+            inner_grads.push((dw, db));
+            dh = dh_prev;
+        }
+
+        // level 0: dpre = dh ⊙ σ'(pre) per span, then dense grads
+        let mut dpre0 = Tensor::zeros(&[b, self.widths[0]]);
+        {
+            let w0 = self.widths[0];
+            let pre = pres[0].data();
+            let dh0 = dh.data();
+            let spans = &self.spans[0];
+            let models = &self.models;
+            let dp = SendPtr(dpre0.data_mut().as_mut_ptr());
+            parallel_chunks(b, threads, 1, move |r0, r1| {
+                for bi in r0..r1 {
+                    let prow = &pre[bi * w0..(bi + 1) * w0];
+                    let urow = &dh0[bi * w0..(bi + 1) * w0];
+                    let drow =
+                        unsafe { std::slice::from_raw_parts_mut(dp.ptr().add(bi * w0), w0) };
+                    for (model, &(s, e)) in models.iter().zip(spans) {
+                        model.act.grad_slice(&prow[s..e], &urow[s..e], &mut drow[s..e]);
+                    }
+                }
+            });
+        }
+        let dw0 = matmul::tn(&dpre0, x, threads);
+        let db0 = col_sums(&dpre0);
+
+        // SGD updates
+        p.layers[0].w.saxpy_neg(lr, &dw0);
+        for (v, g) in p.layers[0].b.data_mut().iter_mut().zip(&db0) {
+            *v -= lr * g;
+        }
+        for (l, (dw, db)) in (1..self.depth).rev().zip(&inner_grads) {
+            for (v, g) in p.layers[l].w.data_mut().iter_mut().zip(dw) {
+                *v -= lr * g;
+            }
+            for (v, g) in p.layers[l].b.data_mut().iter_mut().zip(db) {
+                *v -= lr * g;
+            }
+        }
+        let out_layer = p.layers.last_mut().expect("non-empty");
+        for (v, g) in out_layer.w.data_mut().iter_mut().zip(&dw_out) {
+            *v -= lr * g;
+        }
+        out_layer.b.saxpy_neg(lr, &db_out);
+        losses
+    }
+
+    /// Slice model `m`'s dense multi-layer parameters out of the fused
+    /// pool — the §5 "use the winner" step, any depth.
+    pub fn extract(&self, p: &StackParams, m: usize) -> DenseStack {
+        let d = self.models[m].depth();
+        let mut layers = Vec::with_capacity(d + 1);
+        // layer 0
+        let (s0, e0) = self.spans[0][m];
+        let h0 = e0 - s0;
+        let mut w = Tensor::zeros(&[h0, self.features]);
+        let mut bias = Tensor::zeros(&[h0]);
+        for r in 0..h0 {
+            w.row_mut(r).copy_from_slice(p.layers[0].w.row(s0 + r));
+            bias.data_mut()[r] = p.layers[0].b.data()[s0 + r];
+        }
+        layers.push(DenseLayer { w, b: bias });
+        // inner layers
+        for l in 1..d {
+            let fan_in = self.models[m].hidden[l - 1] as usize;
+            let rows = self.models[m].hidden[l] as usize;
+            let off = self.inner_off[l - 1][m].expect("l < depth(m) is real");
+            let (cs, _) = self.spans[l][m];
+            let mut w = Tensor::zeros(&[rows, fan_in]);
+            let mut bias = Tensor::zeros(&[rows]);
+            for r in 0..rows {
+                w.row_mut(r)
+                    .copy_from_slice(&p.layers[l].w.data()[off + r * fan_in..off + (r + 1) * fan_in]);
+                bias.data_mut()[r] = p.layers[l].b.data()[cs + r];
+            }
+            layers.push(DenseLayer { w, b: bias });
+        }
+        // output layer
+        let last = self.models[m].hidden[d - 1] as usize;
+        let off = self.out_off[m];
+        let out_layer = p.layers.last().expect("non-empty");
+        let mut w = Tensor::zeros(&[self.out, last]);
+        for o in 0..self.out {
+            w.row_mut(o)
+                .copy_from_slice(&out_layer.w.data()[off + o * last..off + (o + 1) * last]);
+        }
+        let mut bias = Tensor::zeros(&[self.out]);
+        bias.data_mut().copy_from_slice(out_layer.b.row(m));
+        layers.push(DenseLayer { w, b: bias });
+        DenseStack { layers, act: self.models[m].act }
+    }
+
+    /// Write one model's dense parameters into the fused pool (inverse of
+    /// [`LayerStack::extract`]; checkpoints rebuild pools through this).
+    pub fn insert(&self, p: &mut StackParams, m: usize, dense: &DenseStack) -> anyhow::Result<()> {
+        let d = self.models[m].depth();
+        anyhow::ensure!(
+            dense.layers.len() == d + 1,
+            "model {m}: dense stack has {} layers, pool model has {}",
+            dense.layers.len(),
+            d + 1
+        );
+        anyhow::ensure!(
+            dense.act == self.models[m].act,
+            "model {m}: activation mismatch ({} vs {})",
+            dense.act.name(),
+            self.models[m].act.name()
+        );
+        anyhow::ensure!(
+            dense.features() == self.features && dense.out() == self.out,
+            "model {m}: dims mismatch (F {} vs {}, O {} vs {})",
+            dense.features(),
+            self.features,
+            dense.out(),
+            self.out
+        );
+        for (l, &h) in self.models[m].hidden.iter().enumerate() {
+            anyhow::ensure!(
+                dense.layers[l].w.rows() == h as usize,
+                "model {m} layer {l}: width {} vs pool {h}",
+                dense.layers[l].w.rows()
+            );
+            let fan_in = if l == 0 { self.features } else { self.models[m].hidden[l - 1] as usize };
+            anyhow::ensure!(
+                dense.layers[l].w.cols() == fan_in && dense.layers[l].b.len() == h as usize,
+                "model {m} layer {l}: fan-in/bias shape mismatch"
+            );
+        }
+        // validate the output layer BEFORE any copy so a failed insert
+        // leaves the fused pool untouched (insert is atomic)
+        let d_last = self.models[m].hidden[d - 1] as usize;
+        {
+            let out_dense = dense.layers.last().expect("d + 1 layers");
+            anyhow::ensure!(
+                out_dense.w.cols() == d_last && out_dense.b.len() == self.out,
+                "model {m}: output layer shape mismatch"
+            );
+        }
+        // layer 0
+        let (s0, e0) = self.spans[0][m];
+        for (r, row) in (s0..e0).enumerate() {
+            p.layers[0].w.row_mut(row).copy_from_slice(dense.layers[0].w.row(r));
+            p.layers[0].b.data_mut()[row] = dense.layers[0].b.data()[r];
+        }
+        // inner layers
+        for l in 1..d {
+            let fan_in = self.models[m].hidden[l - 1] as usize;
+            let rows = self.models[m].hidden[l] as usize;
+            let off = self.inner_off[l - 1][m].expect("l < depth(m) is real");
+            let (cs, _) = self.spans[l][m];
+            for r in 0..rows {
+                p.layers[l].w.data_mut()[off + r * fan_in..off + (r + 1) * fan_in]
+                    .copy_from_slice(dense.layers[l].w.row(r));
+                p.layers[l].b.data_mut()[cs + r] = dense.layers[l].b.data()[r];
+            }
+        }
+        // output layer
+        let last = self.models[m].hidden[d - 1] as usize;
+        let off = self.out_off[m];
+        let out_dense = dense.layers.last().expect("d + 1 layers");
+        let out_layer = p.layers.last_mut().expect("non-empty");
+        for o in 0..self.out {
+            out_layer.w.data_mut()[off + o * last..off + (o + 1) * last]
+                .copy_from_slice(out_dense.w.row(o));
+        }
+        out_layer.b.row_mut(m).copy_from_slice(out_dense.b.data());
+        Ok(())
+    }
+}
+
+/// One dense layer of a standalone model: `w [n_out, n_in]`, `b [n_out]`.
+#[derive(Clone, Debug)]
+pub struct DenseLayer {
+    pub w: Tensor,
+    pub b: Tensor,
+}
+
+/// Dense multi-layer parameters of ONE model (hidden layers then the
+/// output layer) plus its activation — what extraction, checkpoints and
+/// serving all speak. Doubles as the reference SGD trainer the fused
+/// engine is verified against.
+#[derive(Clone, Debug)]
+pub struct DenseStack {
+    pub layers: Vec<DenseLayer>,
+    pub act: Act,
+}
+
+impl DenseStack {
+    /// A one-hidden-layer model in stack terms (the Fig. 1 shape).
+    pub fn from_shallow(p: &ModelParams, act: Act) -> DenseStack {
+        DenseStack {
+            layers: vec![
+                DenseLayer { w: p.w1.clone(), b: p.b1.clone() },
+                DenseLayer { w: p.w2.clone(), b: p.b2.clone() },
+            ],
+            act,
+        }
+    }
+
+    /// Number of hidden layers.
+    pub fn n_hidden_layers(&self) -> usize {
+        self.layers.len() - 1
+    }
+
+    /// Hidden widths, first layer outward.
+    pub fn hidden_widths(&self) -> Vec<u32> {
+        self.layers[..self.layers.len() - 1].iter().map(|l| l.w.rows() as u32).collect()
+    }
+
+    /// First hidden width (the grid axis rankings speak in).
+    pub fn hidden(&self) -> usize {
+        self.layers[0].w.rows()
+    }
+
+    pub fn features(&self) -> usize {
+        self.layers[0].w.cols()
+    }
+
+    pub fn out(&self) -> usize {
+        self.layers.last().expect("non-empty").w.rows()
+    }
+
+    pub fn max_abs_diff(&self, other: &DenseStack) -> f32 {
+        assert_eq!(self.layers.len(), other.layers.len(), "depth mismatch");
+        self.layers
+            .iter()
+            .zip(&other.layers)
+            .map(|(a, b)| a.w.max_abs_diff(&b.w).max(a.b.max_abs_diff(&b.b)))
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Dense forward to logits `[B, O]` — the one inference path: the
+    /// serving engine runs exactly this, and for depth-1 models it is
+    /// operation-for-operation identical to [`ModelParams::forward`].
+    pub fn forward(&self, x: &Tensor, threads: usize) -> Tensor {
+        let n = self.layers.len();
+        let mut h: Option<Tensor> = None;
+        for (i, layer) in self.layers.iter().enumerate() {
+            let src = h.as_ref().unwrap_or(x);
+            let mut pre = matmul::nt(src, &layer.w, threads);
+            add_bias_rows_vec(&mut pre, layer.b.data());
+            if i + 1 == n {
+                return pre;
+            }
+            let mut a = Tensor::zeros(pre.shape());
+            self.act.apply_slice(pre.data(), a.data_mut());
+            h = Some(a);
+        }
+        unreachable!("layers is non-empty")
+    }
+
+    /// One reference SGD step (single-threaded small matmuls); returns
+    /// the batch loss. This is the oracle the fused stack engine is
+    /// checked against, at any depth.
+    pub fn step(&mut self, x: &Tensor, targets: &Tensor, loss: Loss, lr: f32) -> f32 {
+        let n = self.layers.len();
+        let mut pres: Vec<Tensor> = Vec::with_capacity(n);
+        let mut hs: Vec<Tensor> = Vec::with_capacity(n - 1);
+        for (i, layer) in self.layers.iter().enumerate() {
+            let src = if i == 0 { x } else { &hs[i - 1] };
+            let mut pre = matmul::nt(src, &layer.w, 1);
+            add_bias_rows_vec(&mut pre, layer.b.data());
+            if i + 1 < n {
+                let mut a = Tensor::zeros(pre.shape());
+                self.act.apply_slice(pre.data(), a.data_mut());
+                hs.push(a);
+            }
+            pres.push(pre);
+        }
+        let logits = pres.last().expect("non-empty");
+        let lv = loss::mlp_loss(loss, logits, targets);
+        let mut d = Tensor::zeros(logits.shape());
+        loss::mlp_loss_grad(loss, logits, targets, &mut d);
+        for i in (0..n).rev() {
+            let src = if i == 0 { x } else { &hs[i - 1] };
+            let dw = matmul::tn(&d, src, 1);
+            let db = col_sums(&d);
+            if i > 0 {
+                let dh = matmul::nn(&d, &self.layers[i].w, 1);
+                let mut dpre = Tensor::zeros(dh.shape());
+                self.act.grad_slice(pres[i - 1].data(), dh.data(), dpre.data_mut());
+                d = dpre;
+            }
+            self.layers[i].w.saxpy_neg(lr, &dw);
+            for (v, g) in self.layers[i].b.data_mut().iter_mut().zip(&db) {
+                *v -= lr * g;
+            }
+        }
+        lv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn figure3_stack() -> LayerStack {
+        // Fig. 3: 4-1-2-2 (red) and 4-2-3-2 (blue)
+        LayerStack::new(
+            vec![
+                StackModel { hidden: vec![1, 2], act: Act::Tanh },
+                StackModel { hidden: vec![2, 3], act: Act::Tanh },
+            ],
+            4,
+            2,
+        )
+        .unwrap()
+    }
+
+    fn ragged_stack() -> LayerStack {
+        // heterogeneous depths 1..=3 in one pool
+        LayerStack::new(
+            vec![
+                StackModel { hidden: vec![3], act: Act::Sigmoid },
+                StackModel { hidden: vec![2, 4], act: Act::Tanh },
+                StackModel { hidden: vec![4, 3, 2], act: Act::Relu },
+                StackModel { hidden: vec![1], act: Act::Identity },
+            ],
+            4,
+            2,
+        )
+        .unwrap()
+    }
+
+    fn data(seed: u64, n: usize) -> (Tensor, Tensor) {
+        let mut rng = Rng::new(seed);
+        let mut x = Tensor::zeros(&[n, 4]);
+        rng.fill_normal(x.data_mut(), 0.0, 1.0);
+        let mut y = Tensor::zeros(&[n, 2]);
+        rng.fill_normal(y.data_mut(), 0.0, 1.0);
+        (x, y)
+    }
+
+    #[test]
+    fn figure3_structure() {
+        let stack = figure3_stack();
+        assert_eq!(stack.depth(), 2);
+        assert_eq!(stack.level_width(0), 3); // 1 + 2
+        assert_eq!(stack.level_width(1), 5); // 2 + 3
+        assert_eq!(stack.span(0, 1), (1, 3));
+        assert_eq!(stack.span(1, 0), (0, 2));
+        assert!(stack.is_real(1, 0) && stack.is_real(1, 1));
+        let p = stack.init(1);
+        stack.validate(&p).unwrap();
+        // packed inner layer: 2x1 + 3x2 = 8 block floats, no cross-model storage
+        assert_eq!(p.layers[1].w.len(), 8);
+        assert_eq!(p.layers[2].w.len(), 2 * 2 + 2 * 3);
+        assert_eq!(p.layers[2].b.shape(), &[2, 2]);
+    }
+
+    #[test]
+    fn ragged_depths_share_one_stack() {
+        let stack = ragged_stack();
+        assert_eq!(stack.depth(), 3);
+        // level 0: 3 + 2 + 4 + 1
+        assert_eq!(stack.level_width(0), 10);
+        // level 1: 3(id) + 4 + 3 + 1(id)
+        assert_eq!(stack.level_width(1), 11);
+        // level 2: 3(id) + 4(id) + 2 + 1(id)
+        assert_eq!(stack.level_width(2), 10);
+        assert!(!stack.is_real(1, 0), "depth-1 model is identity at level 1");
+        assert!(stack.is_real(1, 1) && !stack.is_real(2, 1));
+        assert!(stack.is_real(2, 2));
+    }
+
+    #[test]
+    fn forward_matches_extracted_dense_per_model() {
+        let stack = ragged_stack();
+        let p = stack.init(7);
+        let (x, _) = data(3, 6);
+        let y = stack.forward(&p, &x, 2);
+        assert_eq!(y.shape(), &[6, 4, 2]);
+        for m in 0..stack.n_models() {
+            let dense = stack.extract(&p, m);
+            assert_eq!(dense.n_hidden_layers(), stack.models()[m].depth());
+            let want = dense.forward(&x, 1);
+            let got = stack.model_logits(&y, m);
+            let diff = got.max_abs_diff(&want);
+            assert!(diff < 1e-6, "model {m}: fused vs dense forward diff {diff}");
+        }
+    }
+
+    #[test]
+    fn fused_step_matches_dense_reference_any_depth() {
+        // THE paper claim, one level deeper: fused == independent, for a
+        // pool mixing depths 1, 2 and 3
+        let stack = ragged_stack();
+        let mut p = stack.init(5);
+        let (x, y) = data(11, 8);
+        let mut refs: Vec<DenseStack> =
+            (0..stack.n_models()).map(|m| stack.extract(&p, m)).collect();
+        let mut fused_losses = Vec::new();
+        for _ in 0..4 {
+            fused_losses = stack.step(&mut p, &x, &y, Loss::Mse, 0.05, 2);
+        }
+        for (m, r) in refs.iter_mut().enumerate() {
+            let mut lv = 0.0;
+            for _ in 0..4 {
+                lv = r.step(&x, &y, Loss::Mse, 0.05);
+            }
+            let trained = stack.extract(&p, m);
+            let diff = trained.max_abs_diff(r);
+            assert!(diff < 1e-5, "model {m}: params diff {diff}");
+            assert!((fused_losses[m] - lv).abs() < 1e-5, "model {m} loss");
+        }
+    }
+
+    #[test]
+    fn figure3_matches_dense_reference() {
+        let stack = figure3_stack();
+        let mut p = stack.init(9);
+        let (x, y) = data(13, 8);
+        let mut refs: Vec<DenseStack> = (0..2).map(|m| stack.extract(&p, m)).collect();
+        for _ in 0..6 {
+            stack.step(&mut p, &x, &y, Loss::Mse, 0.1, 1);
+        }
+        for (m, r) in refs.iter_mut().enumerate() {
+            for _ in 0..6 {
+                r.step(&x, &y, Loss::Mse, 0.1);
+            }
+            let diff = stack.extract(&p, m).max_abs_diff(r);
+            assert!(diff < 1e-5, "model {m}: {diff}");
+        }
+    }
+
+    #[test]
+    fn threaded_step_is_bit_identical_to_single_threaded() {
+        // the inner block-diagonal matmul is threaded over models with
+        // batch-ordered accumulation: results must not depend on the
+        // thread count AT ALL (bit-level, not tolerance)
+        let stack = ragged_stack();
+        let (x, y) = data(17, 16);
+        let run = |threads: usize| {
+            let mut p = stack.init(21);
+            let mut losses = Vec::new();
+            for _ in 0..3 {
+                losses = stack.step(&mut p, &x, &y, Loss::Mse, 0.05, threads);
+            }
+            (p, losses)
+        };
+        let (p1, l1) = run(1);
+        let (p4, l4) = run(4);
+        let (p7, l7) = run(7);
+        assert!(stack_bits_equal(&p1, &p4), "params differ between 1 and 4 threads");
+        assert!(stack_bits_equal(&p1, &p7), "params differ between 1 and 7 threads");
+        for m in 0..l1.len() {
+            assert_eq!(l1[m].to_bits(), l4[m].to_bits(), "loss {m} differs (4 threads)");
+            assert_eq!(l1[m].to_bits(), l7[m].to_bits(), "loss {m} differs (7 threads)");
+        }
+        // forward too
+        let f1 = stack.forward(&p1, &x, 1);
+        let f4 = stack.forward(&p1, &x, 4);
+        assert!(f1.data().iter().zip(f4.data()).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn extract_insert_round_trip() {
+        let stack = ragged_stack();
+        let p = stack.init(31);
+        let mut rebuilt = stack.zeros();
+        for m in 0..stack.n_models() {
+            let dense = stack.extract(&p, m);
+            stack.insert(&mut rebuilt, m, &dense).unwrap();
+        }
+        assert!(stack_bits_equal(&p, &rebuilt));
+        // wrong-shape insert is rejected
+        let wrong = stack.extract(&p, 0);
+        assert!(stack.insert(&mut rebuilt, 2, &wrong).is_err());
+    }
+
+    #[test]
+    fn stack_pool_learns() {
+        let stack = LayerStack::new(
+            vec![
+                StackModel { hidden: vec![6, 4], act: Act::Tanh },
+                StackModel { hidden: vec![3, 3, 3], act: Act::Relu },
+            ],
+            4,
+            2,
+        )
+        .unwrap();
+        let mut p = stack.init(3);
+        let mut rng = Rng::new(31);
+        let mut x = Tensor::zeros(&[64, 4]);
+        rng.fill_normal(x.data_mut(), 0.0, 1.0);
+        let mut w = Tensor::zeros(&[4, 2]);
+        rng.fill_normal(w.data_mut(), 0.0, 1.0);
+        let y = matmul::nn(&x, &w, 1);
+        let first = stack.step(&mut p, &x, &y, Loss::Mse, 0.05, 2);
+        let mut last = first.clone();
+        for _ in 0..600 {
+            last = stack.step(&mut p, &x, &y, Loss::Mse, 0.05, 2);
+        }
+        for m in 0..2 {
+            assert!(last[m] < first[m] * 0.5, "model {m}: {} -> {}", first[m], last[m]);
+        }
+    }
+
+    #[test]
+    fn shallow_stack_matches_model_params_forward() {
+        // depth-1 stack forward is operation-for-operation the shallow
+        // inference path (ModelParams::forward)
+        let mp = crate::nn::init::init_model(4, 0, 5, 3, 2);
+        let dense = DenseStack::from_shallow(&mp, Act::Gelu);
+        let mut rng = Rng::new(5);
+        let mut x = Tensor::zeros(&[7, 3]);
+        rng.fill_normal(x.data_mut(), 0.0, 1.0);
+        let a = dense.forward(&x, 1);
+        let b = mp.forward(&x, Act::Gelu, 1);
+        assert!(a.data().iter().zip(b.data()).all(|(p, q)| p.to_bits() == q.to_bits()));
+    }
+
+    #[test]
+    fn invalid_stacks_rejected() {
+        assert!(LayerStack::new(vec![], 4, 2).is_err());
+        assert!(LayerStack::new(
+            vec![StackModel { hidden: vec![], act: Act::Relu }],
+            4,
+            2
+        )
+        .is_err());
+        assert!(LayerStack::new(
+            vec![StackModel { hidden: vec![2, 0], act: Act::Relu }],
+            4,
+            2
+        )
+        .is_err());
+    }
+}

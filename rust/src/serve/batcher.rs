@@ -246,7 +246,7 @@ mod tests {
     use crate::serve::registry::ServableModel;
 
     fn toy_model() -> Arc<ServableModel> {
-        Arc::new(ServableModel::new("toy", 0, init_model(1, 0, 4, 3, 2), Act::Tanh))
+        Arc::new(ServableModel::shallow("toy", 0, init_model(1, 0, 4, 3, 2), Act::Tanh))
     }
 
     #[test]

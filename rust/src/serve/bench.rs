@@ -44,7 +44,7 @@ pub struct LoadReport {
 
 /// The synthetic "winner" `serve-bench` uses when no checkpoint is given.
 pub fn synthetic_model(hidden: usize, features: usize, out: usize, seed: u64) -> Arc<ServableModel> {
-    Arc::new(ServableModel::new(
+    Arc::new(ServableModel::shallow(
         "synthetic/relu",
         0,
         init_model(seed, 0, hidden, features, out),
@@ -173,12 +173,13 @@ pub fn reports_json(model: &ServableModel, spec: &LoadSpec, reports: &[LoadRepor
         ));
     }
     format!(
-        "{{\n  \"bench\": \"serve\",\n  \"model\": {{\"name\": \"{}\", \"hidden\": {}, \"features\": {}, \"out\": {}, \"act\": \"{}\"}},\n  \"clients\": {},\n  \"depth\": {},\n  \"rows_per_client\": {},\n  \"runs\": [\n    {}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"serve\",\n  \"model\": {{\"name\": \"{}\", \"hidden\": {}, \"layers\": {}, \"features\": {}, \"out\": {}, \"act\": \"{}\"}},\n  \"clients\": {},\n  \"depth\": {},\n  \"rows_per_client\": {},\n  \"runs\": [\n    {}\n  ]\n}}\n",
         json_str(&model.name),
         model.hidden(),
+        model.depth(),
         model.features(),
         model.out(),
-        model.act.name(),
+        model.act().name(),
         spec.clients,
         spec.depth,
         spec.rows_per_client,

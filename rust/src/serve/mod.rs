@@ -4,7 +4,8 @@
 //! answers "now serve it". Three pieces:
 //!
 //! * [`ServableModel`] / [`ModelRegistry`] (`registry`) — winners sliced
-//!   out of a checkpoint into compact dense params, addressable by name.
+//!   out of a checkpoint into compact dense multi-layer params
+//!   (shallow and deep pools serve identically), addressable by name.
 //! * [`Server`] (`batcher`) — a bounded request queue plus a worker that
 //!   coalesces single-row predict requests into one `[B, F]` fused
 //!   forward: the serving-side version of the paper's "bigger matrices →

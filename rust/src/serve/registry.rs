@@ -1,10 +1,12 @@
 //! Servable models and the named registry the serving engine draws from.
 //!
 //! A `ServableModel` is one winner sliced out of a trained pool: compact
-//! dense parameters plus its activation, running the same dense forward
-//! as `MlpTrainer` (`ModelParams::forward`). The `ModelRegistry` maps
-//! serving names to models, typically loaded straight from a checkpoint's
-//! stored ranking (`pool/top1`, `pool/top2`, ...).
+//! dense multi-layer parameters (`DenseStack`) plus provenance. Shallow
+//! and deep winners serve through the same dense forward, so the depth
+//! of the pool a model came from is invisible to the serving engine.
+//! The `ModelRegistry` maps serving names to models, typically loaded
+//! straight from a checkpoint's stored ranking (`pool/top1`,
+//! `pool/top2`, ...).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -12,42 +14,51 @@ use std::sync::Arc;
 use crate::io::checkpoint::PoolCheckpoint;
 use crate::nn::act::Act;
 use crate::nn::init::ModelParams;
+use crate::nn::stack::DenseStack;
 use crate::tensor::Tensor;
 
-/// One deployable model: dense params + activation + provenance.
+/// One deployable model: dense multi-layer params + provenance.
 #[derive(Clone, Debug)]
 pub struct ServableModel {
     pub name: String,
     /// original pool index this model was extracted from
     pub index: usize,
-    pub act: Act,
     /// validation stats recorded at export time (NaN when unknown)
     pub val_loss: f32,
     pub val_metric: f32,
-    pub params: ModelParams,
+    pub params: DenseStack,
 }
 
 impl ServableModel {
-    pub fn new(name: impl Into<String>, index: usize, params: ModelParams, act: Act) -> ServableModel {
+    pub fn new(name: impl Into<String>, index: usize, params: DenseStack) -> ServableModel {
         ServableModel {
             name: name.into(),
             index,
-            act,
             val_loss: f32::NAN,
             val_metric: f32::NAN,
             params,
         }
     }
 
-    /// Extract model `index` out of a checkpoint, carrying over its
-    /// validation stats when the checkpoint stored a ranking.
+    /// A one-hidden-layer model (the Fig. 1 shape) as a servable.
+    pub fn shallow(
+        name: impl Into<String>,
+        index: usize,
+        params: ModelParams,
+        act: Act,
+    ) -> ServableModel {
+        ServableModel::new(name, index, DenseStack::from_shallow(&params, act))
+    }
+
+    /// Extract model `index` out of a checkpoint (any depth), carrying
+    /// over its validation stats when the checkpoint stored a ranking.
     pub fn from_checkpoint(
         ckpt: &PoolCheckpoint,
         index: usize,
         name: impl Into<String>,
     ) -> anyhow::Result<ServableModel> {
-        let (params, act) = ckpt.extract(index)?;
-        let mut model = ServableModel::new(name, index, params, act);
+        let params = ckpt.extract(index)?;
+        let mut model = ServableModel::new(name, index, params);
         if let Some(e) = ckpt.ranking.iter().find(|e| e.index == index) {
             model.val_loss = e.val_loss;
             model.val_metric = e.val_metric;
@@ -55,8 +66,18 @@ impl ServableModel {
         Ok(model)
     }
 
+    pub fn act(&self) -> Act {
+        self.params.act
+    }
+
+    /// First hidden width (the grid axis rankings speak in).
     pub fn hidden(&self) -> usize {
         self.params.hidden()
+    }
+
+    /// Number of hidden layers.
+    pub fn depth(&self) -> usize {
+        self.params.n_hidden_layers()
     }
 
     pub fn features(&self) -> usize {
@@ -69,7 +90,7 @@ impl ServableModel {
 
     /// Dense forward over a coalesced `[B, F]` batch to logits `[B, O]`.
     pub fn predict(&self, x: &Tensor, threads: usize) -> Tensor {
-        self.params.forward(x, self.act, threads)
+        self.params.forward(x, threads)
     }
 }
 
@@ -138,18 +159,19 @@ mod tests {
     use crate::io::checkpoint::RankEntry;
     use crate::nn::init::{init_model, init_pool};
     use crate::nn::loss::Loss;
+    use crate::nn::stack::{LayerStack, StackModel};
     use crate::pool::{PoolLayout, PoolSpec};
 
     fn ckpt_with_ranking() -> PoolCheckpoint {
         let spec = PoolSpec::new(vec![(2, Act::Relu), (3, Act::Tanh), (1, Act::Identity)]).unwrap();
         let layout = PoolLayout::build(&spec);
         let fused = init_pool(3, &layout, 4, 2);
-        PoolCheckpoint::new(
-            layout,
+        PoolCheckpoint::from_shallow(
+            &layout,
             4,
             2,
             Loss::Mse,
-            fused,
+            &fused,
             vec![
                 RankEntry { index: 2, val_loss: 0.1, val_metric: 0.1 },
                 RankEntry { index: 0, val_loss: 0.2, val_metric: 0.2 },
@@ -169,9 +191,46 @@ mod tests {
         let top1 = reg.get("pool/top1").unwrap();
         assert_eq!(top1.index, 2);
         assert_eq!(top1.hidden(), 1);
+        assert_eq!(top1.depth(), 1);
         assert!((top1.val_loss - 0.1).abs() < 1e-6);
         assert!(reg.get("pool/top3").is_none());
         assert_eq!(reg.names(), vec!["pool/top1", "pool/top2"]);
+    }
+
+    #[test]
+    fn deep_winners_register_and_serve() {
+        // a mixed-depth pool: the registry must carry 1- and 3-layer
+        // winners side by side
+        let stack = LayerStack::new(
+            vec![
+                StackModel { hidden: vec![2], act: Act::Relu },
+                StackModel { hidden: vec![3, 2, 2], act: Act::Tanh },
+            ],
+            4,
+            2,
+        )
+        .unwrap();
+        let params = stack.init(8);
+        let ckpt = PoolCheckpoint::new(
+            stack,
+            Loss::Mse,
+            params,
+            vec![
+                RankEntry { index: 1, val_loss: 0.1, val_metric: 0.1 },
+                RankEntry { index: 0, val_loss: 0.2, val_metric: 0.2 },
+            ],
+        )
+        .unwrap();
+        let mut reg = ModelRegistry::new();
+        reg.load_top_k("pool", &ckpt, 2).unwrap();
+        let top1 = reg.get("pool/top1").unwrap();
+        assert_eq!(top1.depth(), 3);
+        assert_eq!(top1.act(), Act::Tanh);
+        let top2 = reg.get("pool/top2").unwrap();
+        assert_eq!(top2.depth(), 1);
+        let x = Tensor::zeros(&[5, 4]);
+        assert_eq!(top1.predict(&x, 1).shape(), &[5, 2]);
+        assert_eq!(top2.predict(&x, 1).shape(), &[5, 2]);
     }
 
     #[test]
@@ -179,8 +238,8 @@ mod tests {
         let mut reg = ModelRegistry::new();
         let a = init_model(1, 0, 2, 4, 2);
         let b = init_model(2, 1, 3, 4, 2);
-        reg.insert(ServableModel::new("m", 0, a, Act::Relu));
-        reg.insert(ServableModel::new("m", 1, b, Act::Tanh));
+        reg.insert(ServableModel::shallow("m", 0, a, Act::Relu));
+        reg.insert(ServableModel::shallow("m", 1, b, Act::Tanh));
         assert_eq!(reg.len(), 1);
         assert_eq!(reg.get("m").unwrap().index, 1);
     }
@@ -188,7 +247,7 @@ mod tests {
     #[test]
     fn predict_shapes() {
         let params = init_model(4, 0, 5, 3, 2);
-        let model = ServableModel::new("p", 0, params, Act::Gelu);
+        let model = ServableModel::shallow("p", 0, params, Act::Gelu);
         let x = Tensor::zeros(&[7, 3]);
         let y = model.predict(&x, 1);
         assert_eq!(y.shape(), &[7, 2]);

@@ -187,14 +187,90 @@ fn export_then_serve_bench_from_checkpoint() {
 }
 
 #[test]
-fn export_rejects_deep_strategy() {
+fn export_deep_mixed_depths_then_serve_bench() {
+    // the acceptance path at the CLI surface: a mixed-depth deep pool
+    // trains, exports a v2 checkpoint, and its winner serves
+    let ckpt = std::env::temp_dir().join(format!("pmlp_cli_deep_{}.ckpt", std::process::id()));
     let out = Command::new(pmlp())
-        .args(["export", "--strategy", "deep_native", "--out", "/tmp/should_not_exist.ckpt"])
+        .args([
+            "export", "--strategy", "deep_native", "--depths", "2,3", "--dataset", "blobs",
+            "--samples", "160", "--features", "6", "--epochs", "3", "--batch", "20", "--top",
+            "3", "--out", ckpt.to_str().unwrap(),
+        ])
         .output()
         .unwrap();
-    assert!(!out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
     let stderr = String::from_utf8_lossy(&out.stderr);
-    assert!(stderr.contains("single-hidden-layer"), "{stderr}");
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("depth 3"), "{stdout}");
+    assert!(stdout.contains("winners extracted"), "{stdout}");
+    let bytes = std::fs::read(&ckpt).unwrap();
+    assert!(bytes.starts_with(b"PMLPCKPT"), "bad magic in exported file");
+
+    let out2 = Command::new(pmlp())
+        .args([
+            "serve-bench", "--ckpt", ckpt.to_str().unwrap(), "--rows", "64", "--clients", "2",
+            "--depth", "4", "--batch-sizes", "1,4",
+        ])
+        .output()
+        .unwrap();
+    std::fs::remove_file(&ckpt).ok();
+    let stdout2 = String::from_utf8_lossy(&out2.stdout);
+    let stderr2 = String::from_utf8_lossy(&out2.stderr);
+    assert!(out2.status.success(), "stdout:\n{stdout2}\nstderr:\n{stderr2}");
+    assert!(stdout2.contains("checkpoint winner"), "{stdout2}");
+    assert!(stdout2.contains("hidden layer"), "{stdout2}");
+}
+
+#[test]
+fn train_deep_with_depths_flag() {
+    let out = Command::new(pmlp())
+        .args([
+            "train", "--strategy", "deep_native", "--depths", "1,3", "--dataset", "blobs",
+            "--samples", "150", "--features", "6", "--epochs", "3", "--batch", "25", "--top",
+            "4",
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("deep_native"), "{stdout}");
+    assert!(stdout.contains("Top-"), "{stdout}");
+    // mixed depths are invisible in the (h, act) table: the architecture
+    // lines must disambiguate them
+    assert!(stdout.contains("architectures (top-"), "{stdout}");
+    assert!(stdout.contains("hidden layer(s)"), "{stdout}");
+}
+
+#[test]
+fn train_bench_writes_json_report() {
+    let json = std::env::temp_dir().join(format!("pmlp_trainbench_{}.json", std::process::id()));
+    let out = Command::new(pmlp())
+        .args([
+            "train-bench", "--quick", "--samples", "128", "--epochs", "2", "--warmup", "1",
+            "--batch", "32", "--threads", "2", "--out", json.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("models/s"), "{stdout}");
+    let doc = std::fs::read_to_string(&json).unwrap();
+    std::fs::remove_file(&json).ok();
+    let v = parallel_mlps::util::json::parse(&doc).expect("train-bench JSON must parse");
+    assert_eq!(v.req("bench").unwrap().as_str(), Some("train"));
+    let runs = v.req("runs").unwrap().as_arr().unwrap();
+    assert_eq!(runs.len(), 3);
+    // shallow, depth-2, depth-3 — in that order, same grid each time
+    let depths: Vec<usize> =
+        runs.iter().map(|r| r.req("depth").unwrap().as_usize().unwrap()).collect();
+    assert_eq!(depths, vec![1, 2, 3]);
+    for r in runs {
+        assert!(r.req("models_per_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.req("rows_per_s").unwrap().as_f64().unwrap() > 0.0);
+    }
 }
 
 #[test]
@@ -217,6 +293,17 @@ fn serve_bench_synthetic_writes_json_report() {
     let v = parallel_mlps::util::json::parse(&doc).expect("serve-bench JSON must parse");
     assert_eq!(v.req("bench").unwrap().as_str(), Some("serve"));
     assert_eq!(v.req("runs").unwrap().as_arr().unwrap().len(), 2);
+}
+
+#[test]
+fn train_rejects_depths_on_shallow_strategy() {
+    let out = Command::new(pmlp())
+        .args(["train", "--strategy", "native_parallel", "--depths", "2,3"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("deep_native"), "{stderr}");
 }
 
 #[test]

@@ -9,8 +9,8 @@ use parallel_mlps::coordinator::{
 };
 use parallel_mlps::data;
 use parallel_mlps::nn::act::Act;
-use parallel_mlps::nn::deep::{DeepModel, DeepPool, DeepRef};
 use parallel_mlps::nn::init::init_pool;
+use parallel_mlps::nn::stack::{DenseStack, LayerStack, StackModel};
 use parallel_mlps::nn::loss::Loss;
 use parallel_mlps::nn::optimizer::OptimizerKind;
 use parallel_mlps::nn::parallel::ParallelEngine;
@@ -103,27 +103,28 @@ fn engine_agreement_native_parallel_vs_sequential() {
 }
 
 /// The deep engine through the same generic loop matches the explicit
-/// per-model two-layer reference trainer.
+/// per-model dense reference trainer — with heterogeneous DEPTHS (2 and
+/// 3 hidden layers) fused into one pool.
 #[test]
 fn deep_engine_matches_dense_reference_through_session() {
-    let pool = DeepPool::new(
+    let stack = LayerStack::new(
         vec![
-            DeepModel { h1: 2, h2: 3, act: Act::Tanh },
-            DeepModel { h1: 3, h2: 2, act: Act::Relu },
+            StackModel { hidden: vec![2, 3], act: Act::Tanh },
+            StackModel { hidden: vec![3, 2, 2], act: Act::Relu },
         ],
         F,
         O,
     )
     .unwrap();
-    let mut engine = DeepEngine::new(pool, 11, Loss::Mse);
+    let mut engine = DeepEngine::new(stack, 11, Loss::Mse, 2);
     // dense references from the same init, BEFORE training
-    let mut refs: Vec<DeepRef> = (0..2)
+    let mut refs: Vec<DenseStack> = (0..2)
         .map(|m| {
             engine
                 .extract(m)
                 .unwrap()
-                .deep()
-                .expect("deep engine must extract deep params")
+                .stacked()
+                .expect("deep engine must extract stacked params")
         })
         .collect();
 
@@ -148,6 +149,10 @@ fn deep_engine_matches_dense_reference_through_session() {
             "model {m}: fused {} vs reference {last}",
             rep.outcome.final_losses[m]
         );
+        // trained params agree too, at each model's own depth
+        let trained = engine.extract(m).unwrap().stacked().unwrap();
+        let diff = trained.max_abs_diff(r);
+        assert!(diff < 1e-4, "model {m}: params diverged by {diff}");
     }
 }
 

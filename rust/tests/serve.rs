@@ -2,13 +2,12 @@
 //! detection, winner-extraction equivalence against the fused pool,
 //! registry loading, and micro-batched serving correctness/throughput.
 
-use std::sync::Arc;
-
-use parallel_mlps::io::{fused_bits_equal, PoolCheckpoint, RankEntry};
+use parallel_mlps::io::{PoolCheckpoint, RankEntry};
 use parallel_mlps::nn::act::Act;
 use parallel_mlps::nn::init::init_pool;
 use parallel_mlps::nn::loss::Loss;
 use parallel_mlps::nn::parallel::ParallelEngine;
+use parallel_mlps::nn::stack::stack_bits_equal;
 use parallel_mlps::pool::{PoolLayout, PoolSpec};
 use parallel_mlps::selection::rank_models;
 use parallel_mlps::serve::bench::{run_load, synthetic_model, LoadSpec};
@@ -55,12 +54,12 @@ fn ckpt_path(tag: &str) -> std::path::PathBuf {
 #[test]
 fn checkpoint_file_roundtrip_is_bit_exact() {
     let (_spec, layout, engine, _x, _y) = trained_engine(3);
-    let ckpt = PoolCheckpoint::new(
-        layout,
+    let ckpt = PoolCheckpoint::from_shallow(
+        &layout,
         F,
         O,
         Loss::Mse,
-        engine.params_fused(),
+        &engine.params_fused(),
         vec![RankEntry { index: 1, val_loss: 0.3, val_metric: 0.3 }],
     )
     .unwrap();
@@ -68,8 +67,8 @@ fn checkpoint_file_roundtrip_is_bit_exact() {
     ckpt.save(&path).unwrap();
     let back = PoolCheckpoint::load(&path).unwrap();
     std::fs::remove_file(&path).ok();
-    assert!(fused_bits_equal(&ckpt.params, &back.params));
-    assert_eq!(back.spec().models(), ckpt.spec().models());
+    assert!(stack_bits_equal(&ckpt.params, &back.params));
+    assert_eq!(back.models(), ckpt.models());
     assert_eq!(back.ranking, ckpt.ranking);
     assert_eq!(back.to_bytes(), ckpt.to_bytes());
 }
@@ -78,7 +77,8 @@ fn checkpoint_file_roundtrip_is_bit_exact() {
 fn checkpoint_flipped_byte_on_disk_is_rejected() {
     let (_spec, layout, engine, _x, _y) = trained_engine(2);
     let ckpt =
-        PoolCheckpoint::new(layout, F, O, Loss::Mse, engine.params_fused(), vec![]).unwrap();
+        PoolCheckpoint::from_shallow(&layout, F, O, Loss::Mse, &engine.params_fused(), vec![])
+            .unwrap();
     let path = ckpt_path("corrupt");
     ckpt.save(&path).unwrap();
     let mut bytes = std::fs::read(&path).unwrap();
@@ -97,13 +97,14 @@ fn extracted_winner_matches_fused_pool_forward() {
     let (spec, layout, mut engine, x, y) = trained_engine(5);
     let (vl, vm) = engine.evaluate(&x, &y);
     let ranked = rank_models(&spec, &vl, &vm, Loss::Mse);
-    let ckpt = PoolCheckpoint::from_engine(&engine, &layout, F, O, Loss::Mse, &ranked).unwrap();
+    let ckpt = PoolCheckpoint::from_engine(&engine, Loss::Mse, &ranked).unwrap();
 
     let fused_logits = engine.forward(&x); // [B, M_pad, O]
     for m in 0..spec.n_models() {
         let servable = ServableModel::from_checkpoint(&ckpt, m, format!("m{m}")).unwrap();
-        assert_eq!(servable.act, spec.models()[m].1);
+        assert_eq!(servable.act(), spec.models()[m].1);
         assert_eq!(servable.hidden(), spec.models()[m].0 as usize);
+        assert_eq!(servable.depth(), 1);
         let pred = servable.predict(&x, 1);
         let slot = layout.slot[m];
         for bi in 0..x.rows() {
@@ -121,10 +122,10 @@ fn extracted_winner_matches_fused_pool_forward() {
 
 #[test]
 fn registry_serves_checkpoint_ranking() {
-    let (spec, layout, mut engine, x, y) = trained_engine(4);
+    let (spec, _layout, mut engine, x, y) = trained_engine(4);
     let (vl, vm) = engine.evaluate(&x, &y);
     let ranked = rank_models(&spec, &vl, &vm, Loss::Mse);
-    let ckpt = PoolCheckpoint::from_engine(&engine, &layout, F, O, Loss::Mse, &ranked).unwrap();
+    let ckpt = PoolCheckpoint::from_engine(&engine, Loss::Mse, &ranked).unwrap();
     assert_eq!(ckpt.winner(), Some(ranked[0].index));
 
     let mut registry = ModelRegistry::new();
@@ -212,7 +213,12 @@ fn export_shape_survives_sequential_engine_too() {
     let fused = init_pool(7, &layout, F, O);
     let par = ParallelEngine::new(layout.clone(), fused.clone(), Loss::Mse, F, O, B, 1);
     let seq = SequentialEngine::from_pool(&spec, &layout, &fused, Loss::Mse, OptimizerKind::Sgd);
-    let ck_par = PoolCheckpoint::from_engine(&par, &layout, F, O, Loss::Mse, &[]).unwrap();
-    let ck_seq = PoolCheckpoint::from_engine(&seq, &layout, F, O, Loss::Mse, &[]).unwrap();
-    assert!(fused_bits_equal(&ck_par.params, &ck_seq.params));
+    let ck_par = PoolCheckpoint::from_engine(&par, Loss::Mse, &[]).unwrap();
+    let ck_seq = PoolCheckpoint::from_engine(&seq, Loss::Mse, &[]).unwrap();
+    assert!(stack_bits_equal(&ck_par.params, &ck_seq.params));
+    // and both match the direct shallow wrap of the fused tensors
+    let direct =
+        PoolCheckpoint::from_shallow(&layout, F, O, Loss::Mse, &par.params_fused(), vec![])
+            .unwrap();
+    assert!(stack_bits_equal(&ck_par.params, &direct.params));
 }

@@ -1,0 +1,234 @@
+//! The arbitrary-depth vertical, end to end: a heterogeneous-depth pool
+//! trains through `TrainSession`, exports to a PMLPCKPT v2 file, and its
+//! winners serve through `ModelRegistry` with logits matching the fused
+//! pool — while legacy v1 checkpoints keep loading and serving.
+
+use parallel_mlps::config::{ExperimentConfig, Strategy};
+use parallel_mlps::coordinator::{run_experiment_trained, DeepEngine, PoolEngine, TrainSession};
+use parallel_mlps::data;
+use parallel_mlps::io::{to_v1_bytes, PoolCheckpoint, RankEntry};
+use parallel_mlps::nn::act::Act;
+use parallel_mlps::nn::init::init_pool;
+use parallel_mlps::nn::loss::Loss;
+use parallel_mlps::nn::stack::{stack_bits_equal, LayerStack, StackModel};
+use parallel_mlps::pool::{extract_model, PoolLayout, PoolSpec};
+use parallel_mlps::selection::rank_models;
+use parallel_mlps::serve::{ModelRegistry, ServableModel};
+use parallel_mlps::util::rng::Rng;
+
+const F: usize = 5;
+const O: usize = 2;
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("pmlp_stack_test_{tag}_{}.ckpt", std::process::id()))
+}
+
+/// Depths 1, 2 and 3 fused in one pool.
+fn mixed_stack() -> LayerStack {
+    LayerStack::new(
+        vec![
+            StackModel { hidden: vec![4], act: Act::Sigmoid },
+            StackModel { hidden: vec![3, 2], act: Act::Tanh },
+            StackModel { hidden: vec![2, 3, 2], act: Act::Relu },
+            StackModel { hidden: vec![4, 4, 4], act: Act::Gelu },
+        ],
+        F,
+        O,
+    )
+    .unwrap()
+}
+
+/// THE acceptance path: depth-3 heterogeneous pool -> TrainSession ->
+/// PMLPCKPT v2 file -> ModelRegistry -> served logits match the fused
+/// pool's per-model logits within 1e-5.
+#[test]
+fn depth3_pool_trains_exports_and_serves() {
+    let mut engine = DeepEngine::new(mixed_stack(), 23, Loss::Mse, 2);
+    let mut rng = Rng::new(6);
+    let ds = data::random_regression(64, F, O, &mut rng);
+    let rep = TrainSession::builder()
+        .train_data(&ds)
+        .batches(16, false)
+        .epochs(4)
+        .lr(0.05)
+        .run(&mut engine)
+        .unwrap();
+    assert_eq!(rep.outcome.final_losses.len(), 4);
+
+    // rank on a quick eval so the checkpoint carries a real ranking
+    let (x, y) = ds.batch(0, 16);
+    let (vl, vm) = engine.eval(0, &x, &y).unwrap();
+    let spec = parallel_mlps::coordinator::stack_ranking_spec(engine.stack()).unwrap();
+    let ranked = rank_models(&spec, &vl, &vm, Loss::Mse);
+
+    // export -> file -> reload, bit-exact
+    let ckpt = PoolCheckpoint::from_engine(&engine, Loss::Mse, &ranked).unwrap();
+    assert_eq!(ckpt.depth(), 3);
+    let path = tmp("depth3");
+    ckpt.save(&path).unwrap();
+    let back = PoolCheckpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert!(stack_bits_equal(&ckpt.params, &back.params));
+
+    // serve every model; logits must match the fused pool per model
+    let fused_logits = engine.stack().forward(engine.params(), &x, 2);
+    let mut registry = ModelRegistry::new();
+    let names = registry.load_top_k("pool", &back, 4).unwrap();
+    assert_eq!(names.len(), 4);
+    for (rank, name) in names.iter().enumerate() {
+        let servable = registry.get(name).unwrap();
+        let m = servable.index;
+        assert_eq!(m, ranked[rank].index);
+        let pred = servable.predict(&x, 1);
+        for bi in 0..x.rows() {
+            for oi in 0..O {
+                let fused = fused_logits.at3(bi, m, oi);
+                let served = pred.at2(bi, oi);
+                assert!(
+                    (fused - served).abs() < 1e-5,
+                    "model {m} row {bi} out {oi}: fused {fused} vs served {served}"
+                );
+            }
+        }
+    }
+    // the winner really carries its validation stats
+    let top1 = registry.get("pool/top1").unwrap();
+    assert!((top1.val_loss - ranked[0].val_loss).abs() < 1e-6);
+}
+
+/// The config-driven path: `pmlp train --strategy deep_native --depths
+/// 2,3` trains mixed-depth stacks through the one generic loop.
+#[test]
+fn run_experiment_handles_mixed_depths() {
+    let cfg = ExperimentConfig {
+        strategy: Strategy::DeepNative,
+        dataset: data::SynthKind::Blobs,
+        samples: 160,
+        features: 6,
+        out: 2,
+        hidden_sizes: vec![2, 4],
+        acts: vec![Act::Relu],
+        depths: Some(vec![2, 3]),
+        epochs: 3,
+        warmup_epochs: 1,
+        batch: 20,
+        lr: 0.1,
+        loss: Loss::Ce,
+        threads: 2,
+        seed: 9,
+        ..Default::default()
+    };
+    let trained = run_experiment_trained(&cfg).unwrap();
+    // 2 hidden sizes x 1 act x 2 depths = 4 models
+    assert_eq!(trained.report.ranked.len(), 4);
+    assert!(trained
+        .report
+        .outcome
+        .val_losses
+        .as_ref()
+        .unwrap()
+        .iter()
+        .all(|v| v.is_finite()));
+    // the trained engine checkpoints straight through the trait
+    let ckpt =
+        PoolCheckpoint::from_engine(trained.engine.as_ref(), cfg.loss, &trained.report.ranked)
+            .unwrap();
+    assert_eq!(ckpt.depth(), 3);
+    assert_eq!(ckpt.n_models(), 4);
+    let depths: Vec<usize> = ckpt.models().iter().map(|m| m.depth()).collect();
+    assert_eq!(depths, vec![2, 3, 2, 3]);
+}
+
+/// Legacy compatibility: a v1 (shallow, padded-layout) checkpoint file
+/// still loads — as a depth-1 stack — and serves unchanged.
+#[test]
+fn v1_checkpoint_loads_and_serves_unchanged() {
+    let spec = PoolSpec::new(vec![(2, Act::Relu), (3, Act::Tanh), (1, Act::Identity)]).unwrap();
+    let layout = PoolLayout::build(&spec);
+    let fused = init_pool(41, &layout, F, O);
+    let ranking = vec![
+        RankEntry { index: 1, val_loss: 0.2, val_metric: 0.2 },
+        RankEntry { index: 0, val_loss: 0.4, val_metric: 0.4 },
+    ];
+    let bytes = to_v1_bytes(&layout, F, O, Loss::Mse, &fused, &ranking);
+    let path = tmp("v1");
+    std::fs::write(&path, &bytes).unwrap();
+    let ckpt = PoolCheckpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(ckpt.depth(), 1);
+    assert_eq!(ckpt.winner(), Some(1));
+
+    let mut rng = Rng::new(8);
+    let mut x = parallel_mlps::tensor::Tensor::zeros(&[6, F]);
+    rng.fill_normal(x.data_mut(), 0.0, 1.0);
+    let mut registry = ModelRegistry::new();
+    registry.load_top_k("legacy", &ckpt, 2).unwrap();
+    let top1 = registry.get("legacy/top1").unwrap();
+    assert_eq!(top1.index, 1);
+    // served logits == the historical dense forward of the sliced model
+    let (dense, act) = extract_model(&fused, &layout, 1);
+    let want = dense.forward(&x, act, 1);
+    let got = top1.predict(&x, 1);
+    assert!(got
+        .data()
+        .iter()
+        .zip(want.data())
+        .all(|(a, b)| a.to_bits() == b.to_bits()));
+}
+
+/// Format evolution hygiene: truncated or corrupted v2 files fail with
+/// an error (never a panic), and a depth-3 roundtrip is bit-exact even
+/// with non-finite parameters.
+#[test]
+fn corrupted_and_truncated_v2_fail_cleanly() {
+    let stack = mixed_stack();
+    let mut params = stack.init(3);
+    params.layers[1].w.data_mut()[0] = f32::NAN; // diverged model survives
+    let ckpt = PoolCheckpoint::new(stack, Loss::Mse, params, vec![]).unwrap();
+    let bytes = ckpt.to_bytes();
+
+    // bit-exact roundtrip, NaN included
+    let back = PoolCheckpoint::from_bytes(&bytes).unwrap();
+    assert!(stack_bits_equal(&ckpt.params, &back.params));
+
+    // every truncation point fails cleanly
+    for cut in [0, 7, 8, 11, bytes.len() / 4, bytes.len() / 2, bytes.len() - 1] {
+        assert!(
+            PoolCheckpoint::from_bytes(&bytes[..cut]).is_err(),
+            "truncation at {cut} accepted"
+        );
+    }
+    // every flipped byte fails cleanly
+    for pos in [9, 20, bytes.len() / 3, bytes.len() - 2] {
+        let mut bad = bytes.clone();
+        bad[pos] ^= 0x10;
+        assert!(PoolCheckpoint::from_bytes(&bad).is_err(), "flip at {pos} accepted");
+    }
+}
+
+/// Depth through the whole engine API: extraction of a served winner and
+/// the engine's own eval agree, so ranking signals mean the same thing
+/// for deep pools as for shallow ones.
+#[test]
+fn deep_eval_matches_served_winner_loss() {
+    let stack = mixed_stack();
+    let mut engine = DeepEngine::new(stack, 15, Loss::Mse, 1);
+    let mut rng = Rng::new(12);
+    let ds = data::random_regression(32, F, O, &mut rng);
+    let (x, y) = ds.batch(0, 32);
+    for _ in 0..5 {
+        engine.step(0, 0, &x, &y, 0.05).unwrap();
+    }
+    let (losses, _) = engine.eval(0, &x, &y).unwrap();
+    for m in 0..engine.n_models() {
+        let dense = engine.extract(m).unwrap().stacked().unwrap();
+        let servable = ServableModel::new(format!("m{m}"), m, dense);
+        let pred = servable.predict(&x, 1);
+        let lv = parallel_mlps::nn::loss::mlp_loss(Loss::Mse, &pred, &y);
+        assert!(
+            (lv - losses[m]).abs() < 1e-5,
+            "model {m}: served loss {lv} vs engine eval {}",
+            losses[m]
+        );
+    }
+}
