@@ -113,6 +113,30 @@ fn main() {
         }
     }));
 
+    // --- dataset batch slicing (the per-batch training hot path) -----------
+    // one full epoch of contiguous batch() calls; the contiguous-copy
+    // implementation must agree bit-for-bit with the take() reference
+    let big = data::random_regression(4096, 32, 4, &mut rng);
+    {
+        let (fast, _) = big.batch(640, 64);
+        let idx: Vec<usize> = (640..704).collect();
+        let slow = big.take(&idx);
+        assert!(
+            fast.data().iter().zip(slow.x.data()).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "batch() diverged from the take() reference"
+        );
+    }
+    results.push(measure("dataset batch x64 (4096 rows, epoch of slices)", 2, reps, || {
+        let mut acc = 0f32;
+        let mut start = 0;
+        while start < big.len() {
+            let (x, y) = big.batch(start, 64);
+            acc += x.data()[0] + y.data()[0];
+            start += x.rows();
+        }
+        std::hint::black_box(acc);
+    }));
+
     // --- report -------------------------------------------------------------
     let t = Timer::new();
     let mut report = String::from("## microbench\n\n```\n");

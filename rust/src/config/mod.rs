@@ -81,6 +81,15 @@ pub struct ExperimentConfig {
     pub seed: u64,
     // dataset
     pub dataset: SynthKind,
+    /// CSV/TSV file to train on instead of the synthetic generator;
+    /// requires `target`. Features/out/loss are then dictated by the
+    /// data (numeric target -> MSE regression, categorical -> CE).
+    pub data_path: Option<String>,
+    /// target column name for `data_path`
+    pub target: Option<String>,
+    /// rank architectures by mean validation loss over k folds instead
+    /// of the single train/val split (None = off)
+    pub folds: Option<usize>,
     pub samples: usize,
     pub features: usize,
     pub out: usize,
@@ -123,6 +132,9 @@ impl Default for ExperimentConfig {
             name: "experiment".into(),
             seed: 42,
             dataset: SynthKind::Blobs,
+            data_path: None,
+            target: None,
+            folds: None,
             samples: 1000,
             features: 10,
             out: 2,
@@ -225,6 +237,14 @@ impl ExperimentConfig {
         set!("name", cfg.name, |v: &TomlValue| v.as_str().map(|s| s.to_string()));
         set!("seed", cfg.seed, |v: &TomlValue| v.as_int().map(|i| i as u64));
         set!("dataset", cfg.dataset, |v: &TomlValue| v.as_str().and_then(SynthKind::from_name));
+        set!("data", cfg.data_path, |v: &TomlValue| v.as_str().map(|s| Some(s.to_string())));
+        set!("target", cfg.target, |v: &TomlValue| v.as_str().map(|s| Some(s.to_string())));
+        // folds = 0 disables; k >= 2 enables k-fold ranking
+        set!("folds", cfg.folds, |v: &TomlValue| v.as_int().and_then(|i| match i {
+            0 => Some(None),
+            k if k >= 2 => Some(Some(k as usize)),
+            _ => None,
+        }));
         set!("samples", cfg.samples, |v: &TomlValue| v.as_int().map(|i| i as usize));
         set!("features", cfg.features, |v: &TomlValue| v.as_int().map(|i| i as usize));
         set!("out", cfg.out, |v: &TomlValue| v.as_int().map(|i| i as usize));
@@ -290,6 +310,10 @@ impl ExperimentConfig {
         anyhow::ensure!(cfg.batch >= 1, "batch must be >= 1");
         anyhow::ensure!(!cfg.hidden_sizes.is_empty(), "hidden_sizes empty");
         anyhow::ensure!(!cfg.acts.is_empty(), "acts empty");
+        anyhow::ensure!(
+            cfg.data_path.is_none() || cfg.target.is_some(),
+            "`data` requires a `target` column name"
+        );
         Ok(cfg)
     }
 
@@ -413,6 +437,23 @@ shuffle = true
         assert!(bad.stack_models().is_err());
         let huge = ExperimentConfig { depths: Some(vec![u32::MAX]), ..cfg };
         assert!(huge.stack_models().is_err());
+    }
+
+    #[test]
+    fn parse_data_target_folds() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[experiment]\ndata = \"x.csv\"\ntarget = \"y\"\nfolds = 5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.data_path.as_deref(), Some("x.csv"));
+        assert_eq!(cfg.target.as_deref(), Some("y"));
+        assert_eq!(cfg.folds, Some(5));
+        let off = ExperimentConfig::from_toml_str("[experiment]\nfolds = 0\n").unwrap();
+        assert_eq!(off.folds, None);
+        // folds = 1 is neither off nor a valid CV: a config error
+        assert!(ExperimentConfig::from_toml_str("[experiment]\nfolds = 1\n").is_err());
+        // data without a target column is unusable
+        assert!(ExperimentConfig::from_toml_str("[experiment]\ndata = \"x.csv\"\n").is_err());
     }
 
     #[test]

@@ -27,13 +27,14 @@ pub use trainer::{
 };
 
 use crate::config::{ExperimentConfig, Strategy};
-use crate::data::{self, Dataset, Split};
+use crate::data::{self, Dataset, Preprocessor, Split, TabularData};
 use crate::metrics::Timer;
 use crate::nn::init::init_pool;
+use crate::nn::loss::Loss;
 use crate::nn::parallel::ParallelEngine;
 use crate::nn::stack::LayerStack;
 use crate::pool::{PoolLayout, PoolSpec};
-use crate::selection::{rank_models, RankedModel};
+use crate::selection::{kfold_rank, rank_models, KfoldReport, RankedModel};
 use crate::util::rng::Rng;
 
 /// Everything a finished experiment reports.
@@ -47,6 +48,9 @@ pub struct ExperimentReport {
     pub setup_s: f64,
     /// true when early stopping cut any unit short
     pub stopped_early: bool,
+    /// Some(k) when `ranked` came from k-fold cross-validation instead
+    /// of the single train/val split
+    pub cv_folds: Option<usize>,
 }
 
 /// Synthesize the configured dataset.
@@ -73,6 +77,92 @@ pub fn prepare_split(cfg: &ExperimentConfig, rng: &mut Rng) -> Split {
     split.val.standardize_with(&mean, &std);
     split.test.standardize_with(&mean, &std);
     split
+}
+
+/// The dataset an experiment actually runs on: a synthetic generator
+/// draw, or a real tabular file loaded through the CSV pipeline.
+pub enum ResolvedData {
+    Synth(Dataset),
+    Tabular(TabularData),
+}
+
+impl ResolvedData {
+    /// The raw (unnormalized) dataset.
+    pub fn dataset(&self) -> &Dataset {
+        match self {
+            ResolvedData::Synth(ds) => ds,
+            ResolvedData::Tabular(t) => &t.dataset,
+        }
+    }
+}
+
+/// Load the configured dataset and return it plus the *effective*
+/// config: for `--data` runs the file dictates features/out/samples and
+/// the loss (categorical target -> CE, numeric -> MSE), so those config
+/// fields are overwritten rather than trusted. Synthetic runs draw from
+/// `rng` exactly like `build_dataset` always has.
+pub fn resolve_data(
+    cfg: &ExperimentConfig,
+    rng: &mut Rng,
+) -> anyhow::Result<(ExperimentConfig, ResolvedData)> {
+    match &cfg.data_path {
+        None => Ok((cfg.clone(), ResolvedData::Synth(build_dataset(cfg, rng)))),
+        Some(path) => {
+            let target = cfg
+                .target
+                .as_deref()
+                .ok_or_else(|| anyhow::anyhow!("--data requires --target <column>"))?;
+            let t = data::load_table(std::path::Path::new(path), target)?;
+            let mut eff = cfg.clone();
+            eff.features = t.dataset.features();
+            eff.samples = t.dataset.len();
+            eff.out = t.dataset.out_dim();
+            eff.loss = if t.is_classification() { Loss::Ce } else { Loss::Mse };
+            Ok((eff, ResolvedData::Tabular(t)))
+        }
+    }
+}
+
+/// Stratified split + train-only normalization. Tabular data fits a
+/// [`Preprocessor`] on the train side (returned so exports can persist
+/// it); synthetic data keeps the historical bare standardization —
+/// numerically the same code path, there is just no schema to freeze.
+pub fn prepare_resolved(
+    cfg: &ExperimentConfig,
+    resolved: &ResolvedData,
+    rng: &mut Rng,
+) -> anyhow::Result<(Split, Option<Preprocessor>)> {
+    let mut split = resolved.dataset().split(cfg.train_frac, cfg.val_frac, rng);
+    match resolved {
+        ResolvedData::Synth(_) => {
+            let (mean, std) = split.train.standardize();
+            split.val.standardize_with(&mean, &std);
+            split.test.standardize_with(&mean, &std);
+            Ok((split, None))
+        }
+        ResolvedData::Tabular(t) => {
+            let pre = Preprocessor::fit(t, &split.train)?;
+            pre.normalize(&mut split.train);
+            pre.normalize(&mut split.val);
+            pre.normalize(&mut split.test);
+            Ok((split, Some(pre)))
+        }
+    }
+}
+
+/// Resolve the configured dataset and rank the pool by k-fold
+/// cross-validation (`cfg.folds`) — the ranking-only path `pmlp rank
+/// --folds K` takes, with no final full training run. Returns the
+/// effective config alongside so callers report the loss/dims the data
+/// dictated.
+pub fn run_kfold(cfg: &ExperimentConfig) -> anyhow::Result<(ExperimentConfig, KfoldReport)> {
+    let k = cfg
+        .folds
+        .ok_or_else(|| anyhow::anyhow!("run_kfold needs cfg.folds = Some(k >= 2)"))?;
+    let mut rng = Rng::new(cfg.seed);
+    let (eff, resolved) = resolve_data(cfg, &mut rng)?;
+    let report = kfold_rank(&eff, resolved.dataset(), k)?;
+    Ok((eff, report))
 }
 
 /// Build the engine for a native strategy (no artifacts needed), plus
@@ -127,6 +217,11 @@ pub struct TrainedExperiment {
     pub spec: PoolSpec,
     /// output dim the dataset actually produced (what the engine was built with)
     pub out_dim: usize,
+    /// the effective config after the data dictated loss/dims (equal to
+    /// the input config for synthetic runs)
+    pub config: ExperimentConfig,
+    /// train-only feature pipeline, fitted when the run used `--data`
+    pub preprocessor: Option<Preprocessor>,
 }
 
 /// Run a full native experiment per the config (the `pmlp train` path):
@@ -146,7 +241,8 @@ pub fn run_experiment_trained(cfg: &ExperimentConfig) -> anyhow::Result<TrainedE
     );
     let setup = Timer::new();
     let mut rng = Rng::new(cfg.seed);
-    let split = prepare_split(cfg, &mut rng);
+    let (cfg, resolved) = resolve_data(cfg, &mut rng)?;
+    let (split, preprocessor) = prepare_resolved(&cfg, &resolved, &mut rng)?;
     let out_dim = split.train.out_dim();
     anyhow::ensure!(
         out_dim == cfg.out
@@ -157,7 +253,7 @@ pub fn run_experiment_trained(cfg: &ExperimentConfig) -> anyhow::Result<TrainedE
         cfg.out,
         out_dim
     );
-    let (mut engine, spec) = build_native_engine(cfg, out_dim)?;
+    let (mut engine, spec) = build_native_engine(&cfg, out_dim)?;
     let setup_s = setup.elapsed_s();
 
     let mut session = TrainSession::builder()
@@ -182,7 +278,16 @@ pub fn run_experiment_trained(cfg: &ExperimentConfig) -> anyhow::Result<TrainedE
     let zeros = || vec![0.0f32; spec.n_models()];
     let vl = outcome.val_losses.clone().unwrap_or_else(zeros);
     let vm = outcome.val_metrics.clone().unwrap_or_else(zeros);
-    let ranked = rank_models(&spec, &vl, &vm, cfg.loss);
+    let mut ranked = rank_models(&spec, &vl, &vm, cfg.loss);
+    // `folds = k`: re-rank by mean validation loss over k folds of the
+    // RAW dataset (each fold standardizes train-side only). The trained
+    // engine above still carries the full-split weights exports serve.
+    let mut cv_folds = None;
+    if let Some(k) = cfg.folds {
+        let kf = kfold_rank(&cfg, resolved.dataset(), k)?;
+        ranked = kf.ranked;
+        cv_folds = Some(k);
+    }
     Ok(TrainedExperiment {
         report: ExperimentReport {
             outcome,
@@ -192,10 +297,13 @@ pub fn run_experiment_trained(cfg: &ExperimentConfig) -> anyhow::Result<TrainedE
             n_test: split.test.len(),
             setup_s,
             stopped_early: report.stopped_early,
+            cv_folds,
         },
         engine,
         spec,
         out_dim,
+        config: cfg,
+        preprocessor,
     })
 }
 
@@ -288,6 +396,59 @@ mod tests {
             trained.engine.extract(best).unwrap(),
             ExtractedModel::Shallow(..)
         ));
+    }
+
+    #[test]
+    fn csv_run_dictates_loss_and_fits_preprocessor() {
+        let path = std::env::temp_dir().join(format!("pmlp_coord_{}.csv", std::process::id()));
+        let mut text = String::from("f1,f2,label\n");
+        for i in 0..30 {
+            text.push_str(&format!("{:.2},{:.2},a\n", i as f32 * 0.1, 1.0 + i as f32 * 0.05));
+            text.push_str(&format!("{:.2},{:.2},b\n", 5.0 + i as f32 * 0.1, -1.0 - i as f32 * 0.05));
+        }
+        std::fs::write(&path, &text).unwrap();
+        let cfg = ExperimentConfig {
+            data_path: Some(path.to_str().unwrap().to_string()),
+            target: Some("label".into()),
+            loss: Loss::Mse, // wrong on purpose: the data dictates CE
+            hidden_sizes: vec![2, 4],
+            acts: vec![crate::nn::act::Act::Relu],
+            epochs: 4,
+            warmup_epochs: 1,
+            batch: 10,
+            lr: 0.1,
+            threads: 1,
+            ..Default::default()
+        };
+        let trained = run_experiment_trained(&cfg).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(trained.config.loss, Loss::Ce);
+        assert_eq!(trained.config.features, 2);
+        assert_eq!(trained.config.samples, 60);
+        assert_eq!(trained.out_dim, 2);
+        let pre = trained.preprocessor.as_ref().unwrap();
+        assert_eq!(pre.n_classes(), Some(2));
+        assert_eq!(pre.class_names().unwrap(), &["a", "b"]);
+        assert_eq!(trained.report.ranked.len(), 2);
+        assert!(trained.report.ranked[0].val_metric > 0.6, "{:?}", trained.report.ranked[0]);
+    }
+
+    #[test]
+    fn run_kfold_ranking_is_deterministic() {
+        let mut cfg = quick_cfg();
+        cfg.folds = Some(3);
+        let (eff, a) = run_kfold(&cfg).unwrap();
+        let (_, b) = run_kfold(&cfg).unwrap();
+        assert_eq!(eff.loss, Loss::Ce);
+        assert_eq!(a.folds(), 3);
+        let oa: Vec<usize> = a.ranked.iter().map(|r| r.index).collect();
+        let ob: Vec<usize> = b.ranked.iter().map(|r| r.index).collect();
+        assert_eq!(oa, ob);
+        // the trained path re-ranks through the same fold assignment
+        let trained = run_experiment_trained(&cfg).unwrap();
+        assert_eq!(trained.report.cv_folds, Some(3));
+        let ot: Vec<usize> = trained.report.ranked.iter().map(|r| r.index).collect();
+        assert_eq!(ot, oa);
     }
 
     #[test]

@@ -1,0 +1,387 @@
+//! Zero-dependency CSV/TSV ingestion — the door through which real
+//! tabular workloads reach the pool.
+//!
+//! The loader is deliberately small but strict:
+//!
+//! * **Header required.** The first non-empty line names the columns;
+//!   the delimiter is inferred from it (tab wins when present, comma
+//!   otherwise), so `.csv` and `.tsv` files ride the same path.
+//! * **Per-column type inference.** A column is numeric iff every value
+//!   parses as `f32`; anything else is categorical and one-hot encoded
+//!   with a deterministic (sorted) vocabulary. Encoded feature names
+//!   read `column=value`.
+//! * **Targets both ways.** A numeric target column becomes a `[N, 1]`
+//!   regression dataset; a categorical one becomes one-hot rows with
+//!   `n_classes = Some`.
+//! * **Errors carry coordinates.** Ragged rows, empty cells, unknown
+//!   target columns and single-class targets are reported with the
+//!   source name, 1-based line number and column name — never a bare
+//!   parse failure.
+//!
+//! Fields are trimmed and one pair of surrounding double quotes is
+//! stripped; embedded delimiters/newlines inside quotes are out of
+//! scope (documented in the README schema rules).
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use super::dataset::{one_hot, Dataset};
+use crate::tensor::Tensor;
+
+/// How one raw column maps into feature space.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ColumnEncoding {
+    /// One f32 feature, parsed directly.
+    Numeric,
+    /// One indicator feature per vocabulary entry (sorted, deduplicated).
+    OneHot(Vec<String>),
+}
+
+impl ColumnEncoding {
+    /// Number of encoded features this column expands into.
+    pub fn width(&self) -> usize {
+        match self {
+            ColumnEncoding::Numeric => 1,
+            ColumnEncoding::OneHot(vocab) => vocab.len(),
+        }
+    }
+}
+
+/// One raw column: name + encoding.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ColumnSpec {
+    pub name: String,
+    pub encoding: ColumnEncoding,
+}
+
+/// A parsed tabular file: the encoded (UNnormalized) dataset plus the
+/// schema needed to encode future rows identically at serving time.
+#[derive(Clone, Debug)]
+pub struct TabularData {
+    pub dataset: Dataset,
+    /// feature columns, in file order (target excluded)
+    pub columns: Vec<ColumnSpec>,
+    pub target: ColumnSpec,
+    /// encoded feature names (`col` for numeric, `col=value` for one-hot)
+    pub feature_names: Vec<String>,
+}
+
+impl TabularData {
+    pub fn is_classification(&self) -> bool {
+        matches!(self.target.encoding, ColumnEncoding::OneHot(_))
+    }
+
+    pub fn n_classes(&self) -> Option<usize> {
+        match &self.target.encoding {
+            ColumnEncoding::OneHot(vocab) => Some(vocab.len()),
+            ColumnEncoding::Numeric => None,
+        }
+    }
+}
+
+/// Load a CSV/TSV file and encode it against `target`.
+pub fn load_table(path: &Path, target: &str) -> anyhow::Result<TabularData> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    parse_table(&text, target, &path.display().to_string())
+}
+
+/// Parse CSV/TSV text; `source` names the origin in error messages.
+pub fn parse_table(text: &str, target: &str, source: &str) -> anyhow::Result<TabularData> {
+    let (header, rows) = read_raw(text, source)?;
+    let target_idx = header.iter().position(|h| h == target).ok_or_else(|| {
+        anyhow::anyhow!(
+            "{source}: target column {target:?} not found (columns: {})",
+            header.join(", ")
+        )
+    })?;
+    anyhow::ensure!(
+        header.len() >= 2,
+        "{source}: need at least one feature column besides the target"
+    );
+
+    // per-column type inference over every row
+    let encodings: Vec<ColumnEncoding> = (0..header.len())
+        .map(|c| infer_encoding(rows.iter().map(|r| r[c].as_str())))
+        .collect();
+    if let ColumnEncoding::OneHot(vocab) = &encodings[target_idx] {
+        anyhow::ensure!(
+            vocab.len() >= 2,
+            "{source}: target column {target:?} has a single distinct value {:?} — nothing to learn",
+            vocab[0]
+        );
+    }
+
+    let columns: Vec<ColumnSpec> = header
+        .iter()
+        .zip(&encodings)
+        .enumerate()
+        .filter(|&(c, _)| c != target_idx)
+        .map(|(_, (name, enc))| ColumnSpec { name: name.clone(), encoding: enc.clone() })
+        .collect();
+    let target_spec =
+        ColumnSpec { name: header[target_idx].clone(), encoding: encodings[target_idx].clone() };
+
+    let mut feature_names = Vec::new();
+    for col in &columns {
+        match &col.encoding {
+            ColumnEncoding::Numeric => feature_names.push(col.name.clone()),
+            ColumnEncoding::OneHot(vocab) => {
+                feature_names.extend(vocab.iter().map(|v| format!("{}={}", col.name, v)));
+            }
+        }
+    }
+
+    let n = rows.len();
+    let f: usize = columns.iter().map(|c| c.encoding.width()).sum();
+    let mut x = Tensor::zeros(&[n, f]);
+    for (i, row) in rows.iter().enumerate() {
+        let dst = x.row_mut(i);
+        let mut at = 0usize;
+        for (c, col) in header.iter().enumerate() {
+            if c == target_idx {
+                continue;
+            }
+            at += encode_value(&encodings[c], &row[c], &mut dst[at..]).map_err(|e| {
+                anyhow::anyhow!("{source}: data row {}: column {col:?}: {e}", i + 1)
+            })?;
+        }
+    }
+
+    let dataset = match &target_spec.encoding {
+        ColumnEncoding::Numeric => {
+            let mut y = Tensor::zeros(&[n, 1]);
+            for (i, row) in rows.iter().enumerate() {
+                y.set2(i, 0, parse_f32(&row[target_idx]).map_err(|e| {
+                    anyhow::anyhow!("{source}: data row {}: target {target:?}: {e}", i + 1)
+                })?);
+            }
+            Dataset::new(x, y, None)
+        }
+        ColumnEncoding::OneHot(vocab) => {
+            let labels: Vec<usize> = rows
+                .iter()
+                .map(|row| {
+                    vocab
+                        .binary_search(&row[target_idx])
+                        .expect("vocabulary was built from these rows")
+                })
+                .collect();
+            Dataset::new(x, one_hot(&labels, vocab.len()), Some(vocab.len()))
+        }
+    };
+    Ok(TabularData { dataset, columns, target: target_spec, feature_names })
+}
+
+/// Split a CSV/TSV text into a header and raw field rows, validating
+/// shape only (no typing). Exposed so the serving side can replay raw
+/// rows through a persisted [`Preprocessor`](super::Preprocessor).
+pub fn read_raw(text: &str, source: &str) -> anyhow::Result<(Vec<String>, Vec<Vec<String>>)> {
+    let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+    let (_, hline) =
+        lines.next().ok_or_else(|| anyhow::anyhow!("{source}: empty file (no header line)"))?;
+    let delim = if hline.contains('\t') { '\t' } else { ',' };
+    let header = split_fields(hline, delim);
+    for (c, name) in header.iter().enumerate() {
+        anyhow::ensure!(!name.is_empty(), "{source}: header column {} has an empty name", c + 1);
+    }
+    {
+        let mut seen = BTreeSet::new();
+        for name in &header {
+            anyhow::ensure!(seen.insert(name.clone()), "{source}: duplicate column name {name:?}");
+        }
+    }
+    let mut rows = Vec::new();
+    for (ln, line) in lines {
+        let fields = split_fields(line, delim);
+        anyhow::ensure!(
+            fields.len() == header.len(),
+            "{source}:{}: row has {} fields but the header has {} columns",
+            ln + 1,
+            fields.len(),
+            header.len()
+        );
+        for (c, v) in fields.iter().enumerate() {
+            anyhow::ensure!(
+                !v.is_empty(),
+                "{source}:{}: empty value in column {:?} (missing values are not supported)",
+                ln + 1,
+                header[c]
+            );
+        }
+        rows.push(fields);
+    }
+    anyhow::ensure!(!rows.is_empty(), "{source}: header only, no data rows");
+    Ok((header, rows))
+}
+
+fn split_fields(line: &str, delim: char) -> Vec<String> {
+    line.split(delim)
+        .map(|f| {
+            let f = f.trim();
+            let stripped = f
+                .strip_prefix('"')
+                .and_then(|s| s.strip_suffix('"'))
+                .unwrap_or(f);
+            stripped.to_string()
+        })
+        .collect()
+}
+
+/// Numeric iff every value parses as f32; otherwise a sorted one-hot
+/// vocabulary (deterministic across runs and platforms).
+fn infer_encoding<'a>(values: impl Iterator<Item = &'a str> + Clone) -> ColumnEncoding {
+    if values.clone().all(|v| v.parse::<f32>().is_ok()) {
+        ColumnEncoding::Numeric
+    } else {
+        let vocab: BTreeSet<String> = values.map(|v| v.to_string()).collect();
+        ColumnEncoding::OneHot(vocab.into_iter().collect())
+    }
+}
+
+/// Parse a FINITE f32. Rust's f32 parser accepts "NaN"/"inf" — common
+/// missing-value sentinels — which would silently poison the train
+/// statistics and only surface much later as a coordinate-free
+/// checkpoint error; reject them here, where callers attach row/column
+/// coordinates.
+fn parse_f32(s: &str) -> anyhow::Result<f32> {
+    match s.parse::<f32>() {
+        Ok(v) if v.is_finite() => Ok(v),
+        Ok(_) => anyhow::bail!(
+            "non-finite value {s:?} (missing-value sentinels like NaN/inf are not supported)"
+        ),
+        Err(_) => anyhow::bail!("cannot parse {s:?} as a number"),
+    }
+}
+
+/// Encode one raw value into `dst` (already zeroed), returning the
+/// number of features written.
+pub(super) fn encode_value(
+    enc: &ColumnEncoding,
+    value: &str,
+    dst: &mut [f32],
+) -> anyhow::Result<usize> {
+    match enc {
+        ColumnEncoding::Numeric => {
+            dst[0] = parse_f32(value)?;
+            Ok(1)
+        }
+        ColumnEncoding::OneHot(vocab) => {
+            let pos = vocab.binary_search_by(|v| v.as_str().cmp(value)).map_err(|_| {
+                anyhow::anyhow!(
+                    "unknown category {value:?} (vocabulary: {})",
+                    vocab.join(", ")
+                )
+            })?;
+            dst[pos] = 1.0;
+            Ok(vocab.len())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const IRISH: &str = "\
+sepal,petal,color,species
+5.1,1.4,blue,setosa
+4.9,1.3,red,setosa
+6.3,4.7,red,versicolor
+6.5,4.6,green,versicolor
+7.1,6.0,green,virginica
+7.6,6.6,blue,virginica
+";
+
+    #[test]
+    fn classification_with_categorical_feature() {
+        let t = parse_table(IRISH, "species", "mem").unwrap();
+        assert!(t.is_classification());
+        assert_eq!(t.n_classes(), Some(3));
+        // blue/green/red sorted + 2 numeric = 5 encoded features
+        assert_eq!(t.dataset.features(), 5);
+        assert_eq!(
+            t.feature_names,
+            vec!["sepal", "petal", "color=blue", "color=green", "color=red"]
+        );
+        assert_eq!(t.dataset.len(), 6);
+        // row 0: sepal 5.1, petal 1.4, color blue -> [5.1, 1.4, 1, 0, 0]
+        assert_eq!(t.dataset.x.row(0), &[5.1, 1.4, 1.0, 0.0, 0.0]);
+        // species sorted: setosa=0, versicolor=1, virginica=2
+        assert_eq!(t.dataset.labels(), vec![0, 0, 1, 1, 2, 2]);
+        assert_eq!(t.target.name, "species");
+    }
+
+    #[test]
+    fn numeric_target_is_regression() {
+        let text = "a,b,y\n1,2,3.5\n4,5,6.5\n";
+        let t = parse_table(text, "y", "mem").unwrap();
+        assert!(!t.is_classification());
+        assert_eq!(t.dataset.n_classes, None);
+        assert_eq!(t.dataset.out_dim(), 1);
+        assert_eq!(t.dataset.targets.row(0), &[3.5]);
+        assert_eq!(t.dataset.targets.row(1), &[6.5]);
+    }
+
+    #[test]
+    fn tsv_and_quotes() {
+        let text = "a\tlabel\n\"1.5\"\t\"yes\"\n2.5\tno\n";
+        let t = parse_table(text, "label", "mem").unwrap();
+        assert_eq!(t.dataset.x.row(0), &[1.5]);
+        assert_eq!(t.n_classes(), Some(2));
+        assert_eq!(t.dataset.labels(), vec![1, 0]); // sorted: no=0, yes=1
+    }
+
+    #[test]
+    fn target_can_be_any_column() {
+        let text = "y,a\nup,1\ndown,2\n";
+        let t = parse_table(text, "y", "mem").unwrap();
+        assert_eq!(t.columns.len(), 1);
+        assert_eq!(t.columns[0].name, "a");
+        assert_eq!(t.dataset.features(), 1);
+    }
+
+    #[test]
+    fn errors_carry_coordinates() {
+        let missing = parse_table("a,b\n1,2\n", "z", "f.csv").unwrap_err().to_string();
+        assert!(missing.contains("\"z\"") && missing.contains("a, b"), "{missing}");
+
+        let ragged = parse_table("a,b\n1,2\n3\n", "b", "f.csv").unwrap_err().to_string();
+        assert!(ragged.contains("f.csv:3") && ragged.contains("1 fields"), "{ragged}");
+
+        let empty = parse_table("a,b\n1,\n", "b", "f.csv").unwrap_err().to_string();
+        assert!(empty.contains("f.csv:2") && empty.contains("\"b\""), "{empty}");
+
+        let nofile = parse_table("", "a", "f.csv").unwrap_err().to_string();
+        assert!(nofile.contains("empty file"), "{nofile}");
+
+        let norows = parse_table("a,b\n", "b", "f.csv").unwrap_err().to_string();
+        assert!(norows.contains("no data rows"), "{norows}");
+
+        let dup = parse_table("a,a\n1,2\n", "a", "f.csv").unwrap_err().to_string();
+        assert!(dup.contains("duplicate column"), "{dup}");
+
+        let single = parse_table("a,y\n1,same\n2,same\n", "y", "f.csv").unwrap_err().to_string();
+        assert!(single.contains("single distinct value"), "{single}");
+
+        // NaN/inf parse as f32, so the column is typed numeric — but the
+        // value must be rejected WITH coordinates, not trained on
+        let nan = parse_table("a,y\n1.0,2.0\nNaN,3.0\n", "y", "f.csv").unwrap_err().to_string();
+        assert!(nan.contains("data row 2") && nan.contains("non-finite"), "{nan}");
+        let inf = parse_table("a,y\n1.0,inf\n2.0,3.0\n", "y", "f.csv").unwrap_err().to_string();
+        assert!(inf.contains("data row 1") && inf.contains("non-finite"), "{inf}");
+
+        let onecol = parse_table("y\n1\n2\n", "y", "f.csv").unwrap_err().to_string();
+        assert!(onecol.contains("at least one feature"), "{onecol}");
+    }
+
+    #[test]
+    fn deterministic_vocabularies() {
+        // same content, rows reordered: identical encodings
+        let a = parse_table("x,y\nc,p\na,q\nb,p\n", "y", "m").unwrap();
+        let b = parse_table("x,y\nb,p\nc,p\na,q\n", "y", "m").unwrap();
+        assert_eq!(a.columns, b.columns);
+        assert_eq!(a.target, b.target);
+        assert_eq!(a.feature_names, vec!["x=a", "x=b", "x=c"]);
+    }
+}

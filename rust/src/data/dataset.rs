@@ -64,8 +64,16 @@ impl Dataset {
     }
 
     /// Shuffled train/val/test split by fractions (test gets the rest).
+    ///
+    /// Classification datasets (`n_classes = Some`) split **stratified**:
+    /// each class is partitioned by the same fractions independently, so
+    /// a small validation fold can never silently drop a class the way a
+    /// global shuffle could. Regression datasets keep the plain shuffle.
     pub fn split(&self, train_frac: f64, val_frac: f64, rng: &mut Rng) -> Split {
         assert!(train_frac > 0.0 && val_frac >= 0.0 && train_frac + val_frac <= 1.0);
+        if let Some(c) = self.n_classes {
+            return self.split_stratified(c, train_frac, val_frac, rng);
+        }
         let n = self.len();
         let perm = rng.permutation(n);
         let n_train = ((n as f64) * train_frac).round() as usize;
@@ -79,9 +87,48 @@ impl Dataset {
         }
     }
 
-    /// Standardize features to zero mean / unit variance, returning the
-    /// (mean, std) used — apply the same to val/test via `standardize_with`.
-    pub fn standardize(&mut self) -> (Vec<f32>, Vec<f32>) {
+    fn split_stratified(
+        &self,
+        n_classes: usize,
+        train_frac: f64,
+        val_frac: f64,
+        rng: &mut Rng,
+    ) -> Split {
+        let labels = self.labels();
+        let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); n_classes];
+        for (i, &l) in labels.iter().enumerate() {
+            by_class[l].push(i);
+        }
+        let (mut tr, mut va, mut te) = (Vec::new(), Vec::new(), Vec::new());
+        for idx in by_class.iter_mut() {
+            if idx.is_empty() {
+                continue;
+            }
+            rng.shuffle(idx);
+            let nc = idx.len();
+            let n_train = (((nc as f64) * train_frac).round() as usize).clamp(1, nc);
+            let mut n_val = (((nc as f64) * val_frac).round() as usize).min(nc - n_train);
+            // rounding must not drop a whole class from validation while
+            // rows for it remain
+            if val_frac > 0.0 && n_val == 0 && nc > n_train {
+                n_val = 1;
+            }
+            tr.extend_from_slice(&idx[..n_train]);
+            va.extend_from_slice(&idx[n_train..n_train + n_val]);
+            te.extend_from_slice(&idx[n_train + n_val..]);
+        }
+        // classes were appended label-major; shuffle so the sequential
+        // batch slices training takes are not class-homogeneous
+        rng.shuffle(&mut tr);
+        rng.shuffle(&mut va);
+        rng.shuffle(&mut te);
+        Split { train: self.take(&tr), val: self.take(&va), test: self.take(&te) }
+    }
+
+    /// Per-feature (mean, std) over this dataset, std floored at 1e-8 —
+    /// the train-only statistics `standardize` and `Preprocessor::fit`
+    /// share, so normalization is bit-identical wherever it is applied.
+    pub fn feature_stats(&self) -> (Vec<f32>, Vec<f32>) {
         let (n, f) = (self.len(), self.features());
         let mut mean = vec![0.0f32; f];
         for i in 0..n {
@@ -98,6 +145,13 @@ impl Dataset {
             }
         }
         let std: Vec<f32> = var.iter().map(|v| (v / n as f32).sqrt().max(1e-8)).collect();
+        (mean, std)
+    }
+
+    /// Standardize features to zero mean / unit variance, returning the
+    /// (mean, std) used — apply the same to val/test via `standardize_with`.
+    pub fn standardize(&mut self) -> (Vec<f32>, Vec<f32>) {
+        let (mean, std) = self.feature_stats();
         self.standardize_with(&mean, &std);
         (mean, std)
     }
@@ -113,11 +167,20 @@ impl Dataset {
     }
 
     /// Contiguous batch `[start, start+size)` clamped to the dataset end.
+    ///
+    /// This is the training hot path (one call per batch per epoch):
+    /// rows are lifted out as two contiguous slice copies — no index
+    /// vector, no per-row copying through `take`.
     pub fn batch(&self, start: usize, size: usize) -> (Tensor, Tensor) {
         let end = (start + size).min(self.len());
-        let idx: Vec<usize> = (start..end).collect();
-        let d = self.take(&idx);
-        (d.x, d.targets)
+        let start = start.min(end);
+        let (f, o) = (self.features(), self.out_dim());
+        let x = Tensor::from_vec(self.x.data()[start * f..end * f].to_vec(), &[end - start, f]);
+        let t = Tensor::from_vec(
+            self.targets.data()[start * o..end * o].to_vec(),
+            &[end - start, o],
+        );
+        (x, t)
     }
 
     /// Number of batches of `size` covering the dataset.
@@ -196,6 +259,111 @@ mod tests {
         assert_eq!(x1.rows(), 4);
         let (x3, _) = d.batch(8, 4);
         assert_eq!(x3.rows(), 2); // ragged tail
+    }
+
+    #[test]
+    fn batch_matches_take_reference() {
+        // the fast contiguous-copy path must be bit-identical to the
+        // historical index-vector + take path it replaced
+        let d = toy(13);
+        for (start, size) in [(0usize, 4usize), (4, 4), (8, 4), (12, 4), (0, 13), (5, 100)] {
+            let (x, t) = d.batch(start, size);
+            let end = (start + size).min(d.len());
+            let idx: Vec<usize> = (start..end).collect();
+            let want = d.take(&idx);
+            assert_eq!(x.shape(), want.x.shape());
+            assert!(x.data().iter().zip(want.x.data()).all(|(a, b)| a.to_bits() == b.to_bits()));
+            assert!(t
+                .data()
+                .iter()
+                .zip(want.targets.data())
+                .all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+        // past-the-end start yields an empty batch, not a panic
+        let (x, _) = d.batch(50, 4);
+        assert_eq!(x.rows(), 0);
+    }
+
+    #[test]
+    fn stratified_split_keeps_every_class_in_val() {
+        // regression: 90/10 imbalance with a 10% validation fold — the
+        // old global shuffle could (and for some seeds did) leave the
+        // minority class out of val entirely
+        let mut x = Tensor::zeros(&[100, 2]);
+        for i in 0..100 {
+            x.set2(i, 0, i as f32);
+        }
+        let labels: Vec<usize> = (0..100).map(|i| usize::from(i >= 90)).collect();
+        let d = Dataset::new(x, one_hot(&labels, 2), Some(2));
+        for seed in 0..20 {
+            let mut rng = Rng::new(seed);
+            let s = d.split(0.7, 0.1, &mut rng);
+            let count = |ds: &Dataset, c: usize| ds.labels().iter().filter(|&&l| l == c).count();
+            // proportional allocation per class, exact
+            assert_eq!(count(&s.train, 0), 63, "seed {seed}");
+            assert_eq!(count(&s.train, 1), 7, "seed {seed}");
+            assert_eq!(count(&s.val, 0), 9, "seed {seed}");
+            assert_eq!(count(&s.val, 1), 1, "seed {seed}");
+            assert_eq!(s.train.len() + s.val.len() + s.test.len(), 100);
+        }
+    }
+
+    #[test]
+    fn stratified_split_val_never_empty_of_a_tiny_class() {
+        // 3 rows of the minority class: round(3 * 0.1) = 0, but the
+        // guarantee is that rounding cannot silently drop the class
+        let labels: Vec<usize> = (0..50).map(|i| usize::from(i >= 47)).collect();
+        let mut x = Tensor::zeros(&[50, 1]);
+        for i in 0..50 {
+            x.set2(i, 0, i as f32);
+        }
+        let d = Dataset::new(x, one_hot(&labels, 2), Some(2));
+        let mut rng = Rng::new(3);
+        let s = d.split(0.6, 0.1, &mut rng);
+        assert!(s.val.labels().contains(&1), "minority class dropped from val");
+    }
+
+    #[test]
+    fn stratified_batches_are_not_class_ordered() {
+        // the per-class partitions must be re-shuffled before batching,
+        // or every sequential batch slice would be class-homogeneous
+        let labels: Vec<usize> = (0..100).map(|i| usize::from(i >= 50)).collect();
+        let mut x = Tensor::zeros(&[100, 1]);
+        for i in 0..100 {
+            x.set2(i, 0, i as f32);
+        }
+        let d = Dataset::new(x, one_hot(&labels, 2), Some(2));
+        let mut rng = Rng::new(1);
+        let s = d.split(0.8, 0.1, &mut rng);
+        let tl = s.train.labels();
+        let first_half_ones = tl[..tl.len() / 2].iter().filter(|&&l| l == 1).count();
+        assert!(first_half_ones > 0, "train rows are still label-major");
+    }
+
+    #[test]
+    fn standardize_with_never_refits() {
+        // val/test must be transformed by the TRAIN statistics verbatim:
+        // after applying them, val's own mean is NOT zero (it would be if
+        // the call had silently refit on val), and every element equals
+        // the hand-computed (x - train_mean) / train_std
+        let mut train = toy(40);
+        let mut val = toy(10); // rows 0..10 of the same grid: different stats
+        for i in 0..10 {
+            for j in 0..3 {
+                val.x.set2(i, j, 1000.0 + (i * 3 + j) as f32);
+            }
+        }
+        let raw = val.x.clone();
+        let (mean, std) = train.standardize();
+        val.standardize_with(&mean, &std);
+        for i in 0..10 {
+            for j in 0..3 {
+                let want = (raw.at2(i, j) - mean[j]) / std[j];
+                assert_eq!(val.x.at2(i, j).to_bits(), want.to_bits());
+            }
+        }
+        let m0: f32 = (0..10).map(|i| val.x.at2(i, 0)).sum::<f32>() / 10.0;
+        assert!(m0.abs() > 1.0, "val looks refit to its own stats (mean {m0})");
     }
 
     #[test]

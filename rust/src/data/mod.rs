@@ -1,14 +1,23 @@
-//! Synthetic dataset substrate.
+//! Dataset substrate: synthetic generators and real tabular ingestion.
 //!
 //! The paper evaluates on *controlled* datasets parameterized by
 //! (samples, features) — `random_regression` reproduces those timing
 //! workloads. The learnable generators (blobs, moons, spirals, xor,
 //! friedman1, teacher nets) back the model-selection examples, where the
 //! pool has to actually rank architectures.
+//!
+//! Real tabular workloads enter through `csv` (zero-dependency CSV/TSV
+//! loader with type inference) and are normalized by a train-only
+//! [`Preprocessor`] that travels inside the pool checkpoint, so serving
+//! applies bit-identical normalization.
+pub mod csv;
 mod dataset;
+mod preprocess;
 mod synth;
 
-pub use dataset::{Dataset, Split};
+pub use csv::{load_table, parse_table, ColumnEncoding, ColumnSpec, TabularData};
+pub use dataset::{one_hot, Dataset, Split};
+pub use preprocess::Preprocessor;
 pub use synth::{
     blobs, friedman1, moons, random_regression, spirals, teacher_mlp, xor_table, SynthKind,
 };

@@ -1,0 +1,344 @@
+//! `Preprocessor` — the train-only feature pipeline, frozen.
+//!
+//! Fitting happens on the TRAIN split and nowhere else: per-encoded-
+//! feature mean/std (shared with [`Dataset::feature_stats`], so the
+//! numbers are bit-identical to what `standardize` would compute) plus
+//! the column encodings the CSV loader inferred. The fitted object is
+//! serialized into the pool checkpoint, so serving applies *exactly*
+//! the normalization training saw — same parse, same vocabulary, same
+//! `(x - mean) / std` in the same f32 order.
+//!
+//! Binary layout (little-endian, self-contained — the checkpoint embeds
+//! it as an opaque length-prefixed section):
+//!
+//! ```text
+//! n_columns u32
+//! per column: name (u32 len + utf8), kind u8 (0 numeric, 1 one-hot),
+//!             one-hot: n u32 + n strings
+//! target column (same shape)
+//! n_features u32   mean f32 x F   std f32 x F
+//! ```
+
+use super::csv::{encode_value, ColumnEncoding, ColumnSpec, TabularData};
+use super::dataset::Dataset;
+
+/// Fitted feature pipeline: raw row -> encoded, standardized features.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Preprocessor {
+    /// feature columns in file order (target excluded)
+    pub columns: Vec<ColumnSpec>,
+    pub target: ColumnSpec,
+    /// train-split mean per encoded feature
+    pub mean: Vec<f32>,
+    /// train-split std per encoded feature (floored at 1e-8)
+    pub std: Vec<f32>,
+}
+
+impl Preprocessor {
+    /// Fit on the TRAIN split only. `data` supplies the column schema;
+    /// `train` supplies the statistics — passing the full dataset here
+    /// instead of the train split is the leakage this type exists to
+    /// prevent, so the split is an explicit argument.
+    pub fn fit(data: &TabularData, train: &Dataset) -> anyhow::Result<Preprocessor> {
+        let width: usize = data.columns.iter().map(|c| c.encoding.width()).sum();
+        anyhow::ensure!(
+            width == train.features(),
+            "schema encodes {width} features but the train split has {}",
+            train.features()
+        );
+        anyhow::ensure!(!train.is_empty(), "cannot fit a preprocessor on an empty train split");
+        let (mean, std) = train.feature_stats();
+        Ok(Preprocessor {
+            columns: data.columns.clone(),
+            target: data.target.clone(),
+            mean,
+            std,
+        })
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.mean.len()
+    }
+
+    /// `Some(k)` for classification targets, `None` for regression.
+    pub fn n_classes(&self) -> Option<usize> {
+        match &self.target.encoding {
+            ColumnEncoding::OneHot(vocab) => Some(vocab.len()),
+            ColumnEncoding::Numeric => None,
+        }
+    }
+
+    /// Class vocabulary for classification targets.
+    pub fn class_names(&self) -> Option<&[String]> {
+        match &self.target.encoding {
+            ColumnEncoding::OneHot(vocab) => Some(vocab),
+            ColumnEncoding::Numeric => None,
+        }
+    }
+
+    /// Apply the frozen train statistics to an already-encoded dataset
+    /// (never refits — that is the whole point).
+    pub fn normalize(&self, ds: &mut Dataset) {
+        ds.standardize_with(&self.mean, &self.std);
+    }
+
+    /// Apply the frozen train statistics to one encoded row.
+    pub fn normalize_row(&self, row: &mut [f32]) {
+        assert_eq!(row.len(), self.n_features());
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = (*v - self.mean[j]) / self.std[j];
+        }
+    }
+
+    /// Encode + normalize one RAW row (string fields in feature-column
+    /// order, target excluded) — the serving-time path. Bit-identical
+    /// to what the training pipeline produced for the same strings.
+    pub fn encode_row(&self, raw: &[&str]) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(
+            raw.len() == self.columns.len(),
+            "row has {} fields but the preprocessor expects {} feature columns",
+            raw.len(),
+            self.columns.len()
+        );
+        let mut out = vec![0.0f32; self.n_features()];
+        let mut at = 0usize;
+        for (col, &val) in self.columns.iter().zip(raw) {
+            at += encode_value(&col.encoding, val.trim(), &mut out[at..])
+                .map_err(|e| anyhow::anyhow!("column {:?}: {e}", col.name))?;
+        }
+        self.normalize_row(&mut out);
+        Ok(out)
+    }
+
+    // -- serialization ----------------------------------------------------
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        push_u32(&mut b, self.columns.len() as u32);
+        for col in &self.columns {
+            push_column(&mut b, col);
+        }
+        push_column(&mut b, &self.target);
+        push_u32(&mut b, self.mean.len() as u32);
+        for &v in &self.mean {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        for &v in &self.std {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Preprocessor> {
+        let mut c = Cursor { b: bytes, pos: 0 };
+        let n_cols = c.u32()? as usize;
+        anyhow::ensure!(n_cols <= 1 << 20, "preprocessor column count {n_cols} implausible");
+        let mut columns = Vec::with_capacity(n_cols);
+        for _ in 0..n_cols {
+            columns.push(read_column(&mut c)?);
+        }
+        let target = read_column(&mut c)?;
+        let f = c.u32()? as usize;
+        let width: usize = columns.iter().map(|col| col.encoding.width()).sum();
+        anyhow::ensure!(
+            f == width,
+            "preprocessor stores {f} features but its columns encode {width}"
+        );
+        let mut mean = Vec::with_capacity(f);
+        for _ in 0..f {
+            mean.push(c.f32()?);
+        }
+        let mut std = Vec::with_capacity(f);
+        for _ in 0..f {
+            std.push(c.f32()?);
+        }
+        anyhow::ensure!(
+            std.iter().all(|s| s.is_finite() && *s > 0.0),
+            "preprocessor std must be finite and positive"
+        );
+        anyhow::ensure!(mean.iter().all(|m| m.is_finite()), "preprocessor mean must be finite");
+        anyhow::ensure!(c.pos == bytes.len(), "trailing bytes after preprocessor payload");
+        Ok(Preprocessor { columns, target, mean, std })
+    }
+}
+
+fn push_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_str(b: &mut Vec<u8>, s: &str) {
+    push_u32(b, s.len() as u32);
+    b.extend_from_slice(s.as_bytes());
+}
+
+fn push_column(b: &mut Vec<u8>, col: &ColumnSpec) {
+    push_str(b, &col.name);
+    match &col.encoding {
+        ColumnEncoding::Numeric => b.push(0),
+        ColumnEncoding::OneHot(vocab) => {
+            b.push(1);
+            push_u32(b, vocab.len() as u32);
+            for v in vocab {
+                push_str(b, v);
+            }
+        }
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            n <= self.b.len() - self.pos,
+            "preprocessor section truncated at byte {} (wanted {n} more)",
+            self.pos
+        );
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn f32(&mut self) -> anyhow::Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        let n = self.u32()? as usize;
+        anyhow::ensure!(n <= 1 << 20, "preprocessor string length {n} implausible");
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| anyhow::anyhow!("preprocessor string is not valid UTF-8"))
+    }
+}
+
+fn read_column(c: &mut Cursor) -> anyhow::Result<ColumnSpec> {
+    let name = c.string()?;
+    let encoding = match c.u8()? {
+        0 => ColumnEncoding::Numeric,
+        1 => {
+            let n = c.u32()? as usize;
+            anyhow::ensure!(
+                (1..=1 << 20).contains(&n),
+                "preprocessor vocabulary size {n} out of range"
+            );
+            let mut vocab = Vec::with_capacity(n);
+            for _ in 0..n {
+                vocab.push(c.string()?);
+            }
+            anyhow::ensure!(
+                vocab.windows(2).all(|w| w[0] < w[1]),
+                "preprocessor vocabulary for {name:?} is not sorted/deduplicated"
+            );
+            ColumnEncoding::OneHot(vocab)
+        }
+        other => anyhow::bail!("unknown column encoding id {other} in preprocessor"),
+    };
+    Ok(ColumnSpec { name, encoding })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::csv::parse_table;
+    use crate::util::rng::Rng;
+
+    const TEXT: &str = "\
+sepal,petal,color,species
+5.1,1.4,blue,setosa
+4.9,1.3,red,setosa
+6.3,4.7,red,versicolor
+6.5,4.6,green,versicolor
+7.1,6.0,green,virginica
+7.6,6.6,blue,virginica
+";
+
+    fn fitted() -> (TabularData, Preprocessor) {
+        let t = parse_table(TEXT, "species", "mem").unwrap();
+        let pre = Preprocessor::fit(&t, &t.dataset).unwrap();
+        (t, pre)
+    }
+
+    #[test]
+    fn fit_matches_standardize_bit_for_bit() {
+        let (t, pre) = fitted();
+        let mut ds = t.dataset.clone();
+        let (mean, std) = ds.standardize();
+        assert!(pre.mean.iter().zip(&mean).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(pre.std.iter().zip(&std).all(|(a, b)| a.to_bits() == b.to_bits()));
+        // normalize() reproduces standardize() exactly
+        let mut ds2 = t.dataset.clone();
+        pre.normalize(&mut ds2);
+        assert!(ds2.x.data().iter().zip(ds.x.data()).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn encode_row_matches_training_pipeline() {
+        let (t, pre) = fitted();
+        let mut ds = t.dataset.clone();
+        pre.normalize(&mut ds);
+        // replay row 3 of the file through the serving path
+        let enc = pre.encode_row(&["6.5", "4.6", "green"]).unwrap();
+        assert!(enc.iter().zip(ds.x.row(3)).all(|(a, b)| a.to_bits() == b.to_bits()));
+        // unknown category and wrong arity are loud errors
+        let bad = pre.encode_row(&["6.5", "4.6", "mauve"]).unwrap_err().to_string();
+        assert!(bad.contains("mauve") && bad.contains("color"), "{bad}");
+        assert!(pre.encode_row(&["6.5"]).is_err());
+    }
+
+    #[test]
+    fn fit_is_train_only() {
+        // fitting on a subset must use ONLY that subset's statistics
+        let (t, _) = fitted();
+        let mut rng = Rng::new(7);
+        let split = t.dataset.split(0.5, 0.25, &mut rng);
+        let pre = Preprocessor::fit(&t, &split.train).unwrap();
+        let (mean, _) = split.train.feature_stats();
+        assert_eq!(pre.mean, mean);
+        let (full_mean, _) = t.dataset.feature_stats();
+        assert_ne!(pre.mean, full_mean, "preprocessor leaked full-dataset stats");
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let (_, pre) = fitted();
+        let bytes = pre.to_bytes();
+        let back = Preprocessor::from_bytes(&bytes).unwrap();
+        assert_eq!(back, pre);
+        assert_eq!(back.n_classes(), Some(3));
+        assert_eq!(back.class_names().unwrap(), &["setosa", "versicolor", "virginica"]);
+        // canonical: re-encode reproduces the bytes
+        assert_eq!(back.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn corrupted_bytes_rejected() {
+        let (_, pre) = fitted();
+        let bytes = pre.to_bytes();
+        assert!(Preprocessor::from_bytes(&bytes[..bytes.len() - 2]).is_err());
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(Preprocessor::from_bytes(&extra).is_err());
+        let mut huge = bytes;
+        huge[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Preprocessor::from_bytes(&huge).is_err());
+    }
+
+    #[test]
+    fn schema_width_mismatch_rejected() {
+        let (t, _) = fitted();
+        let wrong = crate::data::random_regression(4, 3, 1, &mut Rng::new(1));
+        assert!(Preprocessor::fit(&t, &wrong).is_err());
+    }
+}

@@ -9,23 +9,30 @@
 //! per-model blocks). Shallow pools are depth-1 stacks; deep pools of
 //! any (mixed) depth serialize through exactly the same path.
 //!
-//! v2 format (all integers little-endian):
+//! v3 format (all integers little-endian):
 //!
 //! ```text
 //! magic    8 B   "PMLPCKPT"
-//! version  u32   2
+//! version  u32   3
 //! features u32   out u32   loss u8
 //! n_models u32   then per model: n_layers u32, h u32 x n_layers, act u8
 //! n_ranked u32   then per entry: index u32, val_loss f32, val_metric f32
 //! n_layers u32   (= stack depth + 1)
 //! per layer: w tensor, b tensor   (ndim u32, dims u32..., data f32...)
+//! prep     u8    0 = none, 1 = present; then u32 len + Preprocessor bytes
 //! trailer  u64   FNV-1a 64 over every preceding byte
 //! ```
 //!
-//! v1 files (the shallow `PoolSpec` + layout-knob + `w1/b1/w2/b2`
-//! format) still load: the padded fused tensors are sliced per model and
-//! re-inserted into a depth-1 stack, float bits untouched, after the
-//! same layout-checksum cross-check the v1 reader always did.
+//! The preprocessor section carries the train-only feature pipeline
+//! (column encodings + mean/std; see [`crate::data::Preprocessor`]) for
+//! pools trained on real tabular data, so serving normalizes incoming
+//! rows bit-identically to training. Synthetic-data pools write flag 0.
+//!
+//! v2 files (same layout, no preprocessor section) and v1 files (the
+//! shallow `PoolSpec` + layout-knob + `w1/b1/w2/b2` format) still load:
+//! v1's padded fused tensors are sliced per model and re-inserted into a
+//! depth-1 stack, float bits untouched, after the same layout-checksum
+//! cross-check the v1 reader always did.
 //!
 //! Floats are written as raw IEEE-754 bit patterns, so the roundtrip is
 //! bit-exact (NaNs from diverged models survive unchanged). Any flipped
@@ -35,6 +42,7 @@
 use std::path::Path;
 
 use crate::coordinator::engine::PoolEngine;
+use crate::data::Preprocessor;
 use crate::nn::act::Act;
 use crate::nn::init::FusedParams;
 use crate::nn::loss::Loss;
@@ -46,7 +54,9 @@ use crate::util::fnv::Fnv1a64;
 
 pub const MAGIC: &[u8; 8] = b"PMLPCKPT";
 /// Current write version.
-pub const VERSION: u32 = 2;
+pub const VERSION: u32 = 3;
+/// Layer-stack format without the preprocessor section, still readable.
+pub const V2: u32 = 2;
 /// Legacy shallow format, still readable.
 pub const V1: u32 = 1;
 
@@ -70,7 +80,9 @@ pub struct RankEntry {
     pub val_metric: f32,
 }
 
-/// A trained pool, frozen: model list + fused layer tensors + ranking.
+/// A trained pool, frozen: model list + fused layer tensors + ranking,
+/// plus (for pools trained on real tabular data) the fitted train-only
+/// preprocessor serving must replay.
 #[derive(Clone, Debug)]
 pub struct PoolCheckpoint {
     stack: LayerStack,
@@ -78,6 +90,9 @@ pub struct PoolCheckpoint {
     pub params: StackParams,
     /// best-first ranking recorded at export time (may be empty)
     pub ranking: Vec<RankEntry>,
+    /// the feature pipeline fitted on the train split (None for
+    /// synthetic/pre-encoded workloads)
+    pub preprocessor: Option<Preprocessor>,
 }
 
 impl PoolCheckpoint {
@@ -89,7 +104,20 @@ impl PoolCheckpoint {
     ) -> anyhow::Result<PoolCheckpoint> {
         stack.validate(&params)?;
         validate_ranking(&ranking, stack.n_models())?;
-        Ok(PoolCheckpoint { stack, loss, params, ranking })
+        Ok(PoolCheckpoint { stack, loss, params, ranking, preprocessor: None })
+    }
+
+    /// Attach the fitted preprocessor (builder-style). The encoded
+    /// feature width must match the pool's input width.
+    pub fn with_preprocessor(mut self, pre: Preprocessor) -> anyhow::Result<PoolCheckpoint> {
+        anyhow::ensure!(
+            pre.n_features() == self.features(),
+            "preprocessor encodes {} features but the pool takes {}",
+            pre.n_features(),
+            self.features()
+        );
+        self.preprocessor = Some(pre);
+        Ok(self)
     }
 
     /// Wrap a padded shallow pool (the v1 world: `PoolLayout` +
@@ -232,6 +260,15 @@ impl PoolCheckpoint {
             push_tensor(&mut b, &layer.w);
             push_tensor(&mut b, &layer.b);
         }
+        match &self.preprocessor {
+            None => b.push(0),
+            Some(pre) => {
+                b.push(1);
+                let pb = pre.to_bytes();
+                push_u32(&mut b, pb.len() as u32);
+                b.extend_from_slice(&pb);
+            }
+        }
         let mut h = Fnv1a64::new();
         h.feed_bytes(&b);
         push_u64(&mut b, h.finish());
@@ -260,9 +297,10 @@ impl PoolCheckpoint {
         let version = r.u32()?;
         match version {
             V1 => from_v1_body(&mut r),
-            VERSION => from_v2_body(&mut r),
+            V2 => from_stack_body(&mut r, false),
+            VERSION => from_stack_body(&mut r, true),
             other => anyhow::bail!(
-                "unsupported checkpoint version {other} (this build reads v{V1} and v{VERSION})"
+                "unsupported checkpoint version {other} (this build reads v{V1}..v{VERSION})"
             ),
         }
     }
@@ -297,8 +335,9 @@ fn validate_ranking(ranking: &[RankEntry], n_models: usize) -> anyhow::Result<()
     Ok(())
 }
 
-/// Parse the v2 body (cursor positioned after the version field).
-fn from_v2_body(r: &mut Reader) -> anyhow::Result<PoolCheckpoint> {
+/// Parse a layer-stack body (cursor positioned after the version field).
+/// v2 and v3 share everything except the trailing preprocessor section.
+fn from_stack_body(r: &mut Reader, with_preprocessor: bool) -> anyhow::Result<PoolCheckpoint> {
     let features = r.u32()? as usize;
     let out = r.u32()? as usize;
     anyhow::ensure!(features >= 1 && out >= 1, "features/out must be >= 1");
@@ -371,8 +410,24 @@ fn from_v2_body(r: &mut Reader) -> anyhow::Result<PoolCheckpoint> {
         let b = read_tensor(r)?;
         layers.push(FusedLayer { w, b });
     }
+    let preprocessor = if with_preprocessor {
+        match r.u8()? {
+            0 => None,
+            1 => {
+                let len = r.u32()? as usize;
+                Some(Preprocessor::from_bytes(r.take(len)?)?)
+            }
+            other => anyhow::bail!("bad preprocessor flag {other} in checkpoint"),
+        }
+    } else {
+        None
+    };
     anyhow::ensure!(r.pos == r.b.len(), "trailing bytes after checkpoint payload");
-    PoolCheckpoint::new(stack, loss, StackParams { layers }, ranking)
+    let ckpt = PoolCheckpoint::new(stack, loss, StackParams { layers }, ranking)?;
+    match preprocessor {
+        Some(pre) => ckpt.with_preprocessor(pre),
+        None => Ok(ckpt),
+    }
 }
 
 /// Parse a legacy v1 body (shallow `PoolSpec` + layout knobs + padded
@@ -596,7 +651,7 @@ mod tests {
     }
 
     #[test]
-    fn v2_bytes_roundtrip_and_stability() {
+    fn current_bytes_roundtrip_and_stability() {
         let (layout, fused) = tiny_shallow();
         let ranking = vec![
             RankEntry { index: 1, val_loss: 0.25, val_metric: 0.9 },
@@ -688,9 +743,66 @@ mod tests {
                 .zip(want.w2.data())
                 .all(|(a, b)| a.to_bits() == b.to_bits()));
         }
-        // re-saving upgrades to v2, losslessly
+        // re-saving upgrades to the current version, losslessly
         let upgraded = PoolCheckpoint::from_bytes(&ckpt.to_bytes()).unwrap();
         assert!(stack_bits_equal(&ckpt.params, &upgraded.params));
+    }
+
+    #[test]
+    fn v2_bytes_still_load_without_preprocessor() {
+        // a v2 file is a v3 file minus the preprocessor section: strip
+        // the flag byte, patch the version, re-fix the trailer
+        let (stack, params) = tiny_deep();
+        let ckpt = PoolCheckpoint::new(stack, Loss::Mse, params, vec![]).unwrap();
+        let v3 = ckpt.to_bytes();
+        let mut b = v3[..v3.len() - 9].to_vec(); // drop flag + trailer
+        b[8..12].copy_from_slice(&V2.to_le_bytes());
+        let mut h = Fnv1a64::new();
+        h.feed_bytes(&b);
+        let trailer = h.finish().to_le_bytes();
+        b.extend_from_slice(&trailer);
+        let back = PoolCheckpoint::from_bytes(&b).unwrap();
+        assert!(stack_bits_equal(&ckpt.params, &back.params));
+        assert!(back.preprocessor.is_none());
+        assert_eq!(back.models(), ckpt.models());
+    }
+
+    #[test]
+    fn preprocessor_roundtrips_in_checkpoint() {
+        // 2 numeric + 1 two-value categorical column = 4 encoded
+        // features, matching the tiny_deep pool's input width
+        let text = "a,b,color,y\n1.0,2.0,red,yes\n3.0,4.0,blue,no\n5.0,6.0,red,yes\n";
+        let t = crate::data::parse_table(text, "y", "mem").unwrap();
+        let pre = crate::data::Preprocessor::fit(&t, &t.dataset).unwrap();
+        let (stack, params) = tiny_deep();
+        let ckpt = PoolCheckpoint::new(stack, Loss::Ce, params, vec![])
+            .unwrap()
+            .with_preprocessor(pre.clone())
+            .unwrap();
+        let bytes = ckpt.to_bytes();
+        let back = PoolCheckpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(back.preprocessor.as_ref(), Some(&pre));
+        assert!(stack_bits_equal(&ckpt.params, &back.params));
+        // canonical: re-encoding reproduces the bytes, section included
+        assert_eq!(back.to_bytes(), bytes);
+        // the persisted pipeline still encodes rows bit-identically
+        let a = pre.encode_row(&["1.0", "2.0", "red"]).unwrap();
+        let b = back.preprocessor.as_ref().unwrap().encode_row(&["1.0", "2.0", "red"]).unwrap();
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn preprocessor_width_mismatch_rejected() {
+        let text = "a,y\n1.0,yes\n2.0,no\n";
+        let t = crate::data::parse_table(text, "y", "mem").unwrap();
+        let pre = crate::data::Preprocessor::fit(&t, &t.dataset).unwrap();
+        let (stack, params) = tiny_deep(); // features = 4, pre encodes 1
+        let err = PoolCheckpoint::new(stack, Loss::Ce, params, vec![])
+            .unwrap()
+            .with_preprocessor(pre)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("preprocessor encodes"), "{err}");
     }
 
     #[test]

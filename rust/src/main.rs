@@ -18,10 +18,10 @@ use std::sync::Arc;
 use parallel_mlps::bench_harness::{artifacts_dir, BenchArgs};
 use parallel_mlps::config::{ExperimentConfig, Strategy};
 use parallel_mlps::coordinator::{
-    render_paper_table, run_experiment, run_experiment_trained, run_table, BatchSet, DeepEngine,
+    render_paper_table, run_experiment_trained, run_kfold, run_table, BatchSet, DeepEngine,
     SweepConfig, TableKind, TrainSession,
 };
-use parallel_mlps::data::SynthKind;
+use parallel_mlps::data::{csv::read_raw, Preprocessor, SynthKind};
 use parallel_mlps::io::PoolCheckpoint;
 use parallel_mlps::metrics::Table;
 use parallel_mlps::nn::act::Act;
@@ -32,7 +32,9 @@ use parallel_mlps::nn::stack::{stack_bits_equal, LayerStack, StackModel};
 use parallel_mlps::pool::{PoolLayout, PoolSpec};
 use parallel_mlps::runtime::{PjrtParallelEngine, PjrtRuntime, PjrtSequentialEngine};
 use parallel_mlps::selection::{report, top_k, top_k_indices, RankedModel};
-use parallel_mlps::serve::bench::{render_reports, reports_json, run_load, synthetic_model, LoadSpec};
+use parallel_mlps::serve::bench::{
+    render_reports, reports_json, run_load_with, synthetic_model, LoadSpec,
+};
 use parallel_mlps::serve::{ModelRegistry, ServableModel, ServeConfig};
 use parallel_mlps::util::cli::Args;
 
@@ -43,12 +45,14 @@ USAGE:
   pmlp selftest [--artifacts DIR]
   pmlp train --config FILE [overrides] [--top K]
   pmlp train --strategy native_parallel|native_sequential|deep_native
-             [--dataset NAME] [--samples N] [--features N] [--epochs N]
+             [--dataset NAME | --data FILE.csv --target COL [--folds K]]
+             [--samples N] [--features N] [--epochs N]
              [--batch N] [--lr F] [--seed N] [--threads N]
              [--depths a,b] [--early-stop N] [--verbose] [--top K]
   pmlp rank  (same flags as train) [--top K]
   pmlp export --out FILE [--top K] (same training flags as train)
   pmlp serve-bench [--ckpt FILE | --hidden N --features N --out-dim N]
+             [--data FILE.csv [--target COL]]
              [--rows N] [--clients N] [--depth N] [--batch-sizes a,b,c]
              [--threads N] [--queue-cap N] [--seed N] [--out FILE.json]
   pmlp train-bench [--quick] [--samples N] [--epochs N] [--warmup N]
@@ -62,11 +66,16 @@ USAGE:
 train runs every strategy through the unified PoolEngine/TrainSession
 API; --depths a,b (deep_native) puts stacks of those hidden-layer
 counts in one pool; --early-stop N adds patience-N early stopping on
-validation loss. export writes a versioned, FNV-checksummed pool
-checkpoint (any depth); serve-bench replays a synthetic load against
-the micro-batch server; train-bench records training throughput
-(models/s, rows/s) for shallow vs depth-2 vs depth-3 pools at fixed
-seeds into BENCH_train.json.
+validation loss. --data FILE.csv trains on a real CSV/TSV dataset
+(--target names the label column; numeric targets regress under MSE,
+categorical targets classify under CE); --folds K ranks architectures
+by mean validation loss over K stratified folds. export writes a
+versioned, FNV-checksummed pool checkpoint (any depth) with the
+train-only preprocessor embedded for --data runs; serve-bench replays
+a synthetic load — or, with --data, the CSV's rows normalized through
+the checkpoint's preprocessor — against the micro-batch server;
+train-bench records training throughput (models/s, rows/s) for shallow
+vs depth-2 vs depth-3 pools at fixed seeds into BENCH_train.json.
 ";
 
 fn main() {
@@ -155,8 +164,8 @@ fn train_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
         Some(path) => ExperimentConfig::from_toml_file(std::path::Path::new(path))?,
         None => {
             anyhow::ensure!(
-                args.get("strategy").is_some(),
-                "train requires --config FILE (or at least --strategy NAME)\n{USAGE}"
+                args.get("strategy").is_some() || args.get("data").is_some(),
+                "train requires --config FILE (or at least --strategy NAME or --data FILE)\n{USAGE}"
             );
             ExperimentConfig::default()
         }
@@ -169,7 +178,17 @@ fn train_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
         cfg.dataset = SynthKind::from_name(name)
             .ok_or_else(|| anyhow::anyhow!("unknown dataset {name:?}"))?;
     }
+    if let Some(path) = args.get("data") {
+        cfg.data_path = Some(path.to_string());
+    }
+    if let Some(col) = args.get("target") {
+        cfg.target = Some(col.to_string());
+    }
     let parse = |e: String| anyhow::anyhow!(e);
+    if let Some(v) = args.get_parse::<usize>("folds").map_err(parse)? {
+        anyhow::ensure!(v == 0 || v >= 2, "--folds must be 0 (off) or >= 2");
+        cfg.folds = if v == 0 { None } else { Some(v) };
+    }
     if let Some(v) = args.get_parse::<usize>("samples").map_err(parse)? {
         cfg.samples = v;
     }
@@ -207,7 +226,21 @@ fn train_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
         "--depths (or a TOML `depths` key) requires --strategy deep_native; strategy {} ignores it",
         cfg.strategy.name()
     );
+    anyhow::ensure!(
+        cfg.data_path.is_none() || cfg.target.is_some(),
+        "--data requires --target <column>\n{USAGE}"
+    );
     Ok(cfg)
+}
+
+/// What the experiment trains on, for the progress line.
+fn data_desc(cfg: &ExperimentConfig) -> String {
+    match &cfg.data_path {
+        Some(p) => format!("{p} (target {:?})", cfg.target.as_deref().unwrap_or("?")),
+        None => {
+            format!("{}({} samples, {} features)", cfg.dataset.name(), cfg.samples, cfg.features)
+        }
+    }
 }
 
 /// The ranking table speaks (first hidden width, act), which cannot
@@ -242,19 +275,18 @@ fn train(args: &Args) -> anyhow::Result<()> {
         cfg.pool_spec()?.n_models()
     };
     println!(
-        "experiment {:?}: {} models on {}({} samples, {} features), strategy {}{}",
+        "experiment {:?}: {} models on {}, strategy {}{}",
         cfg.name,
         n_models,
-        cfg.dataset.name(),
-        cfg.samples,
-        cfg.features,
+        data_desc(&cfg),
         cfg.strategy.name(),
         match cfg.early_stop {
             Some(p) => format!(", early-stop patience {p}"),
             None => String::new(),
         }
     );
-    let rep = run_experiment(&cfg)?;
+    let trained = run_experiment_trained(&cfg)?;
+    let (rep, eff) = (&trained.report, &trained.config);
     println!(
         "trained {} epochs in {:.3}s (avg timed epoch {:.3}s; setup {:.3}s){}",
         rep.outcome.epoch_times.len(),
@@ -267,28 +299,46 @@ fn train(args: &Args) -> anyhow::Result<()> {
         "splits: train={} val={} test={}",
         rep.n_train, rep.n_val, rep.n_test
     );
-    println!("{}", report(&rep.ranked, cfg.loss, top_k));
-    print_stack_archs(&cfg, &rep.ranked, top_k)?;
+    if let Some(k) = rep.cv_folds {
+        println!("ranking: mean validation loss over {k}-fold cross-validation");
+    }
+    println!("{}", report(&rep.ranked, eff.loss, top_k));
+    print_stack_archs(eff, &rep.ranked, top_k)?;
     Ok(())
 }
 
 /// Train, then print only the top-k ranking table — the §5 grid-search
-/// answer, machine-friendly (no progress prose around it). Deep pools
-/// get one architecture line per top-k row (depths are invisible in the
-/// (h, act) table).
+/// answer, machine-friendly (no progress prose around it). With
+/// `--folds K` the table is the k-fold cross-validated ranking and no
+/// final full training runs. Deep pools get one architecture line per
+/// top-k row (depths are invisible in the (h, act) table).
 fn rank(args: &Args) -> anyhow::Result<()> {
     let cfg = train_config(args)?;
     let top_k: usize = args.get_parse_or("top", 10).map_err(|e| anyhow::anyhow!(e))?;
-    let rep = run_experiment(&cfg)?;
-    println!("{}", report(&rep.ranked, cfg.loss, top_k));
-    print_stack_archs(&cfg, &rep.ranked, top_k)?;
+    if cfg.folds.is_some() {
+        let (eff, kf) = run_kfold(&cfg)?;
+        eprintln!(
+            "{}-fold CV on {} (fold sizes {:?})",
+            kf.folds(),
+            data_desc(&cfg),
+            kf.fold_sizes
+        );
+        println!("{}", report(&kf.ranked, eff.loss, top_k));
+        print_stack_archs(&eff, &kf.ranked, top_k)?;
+        return Ok(());
+    }
+    let trained = run_experiment_trained(&cfg)?;
+    println!("{}", report(&trained.report.ranked, trained.config.loss, top_k));
+    print_stack_archs(&trained.config, &trained.report.ranked, top_k)?;
     Ok(())
 }
 
 /// Train, snapshot the whole pool into a checkpoint, and report the
 /// top-k winners that are now servable from it. Works for every native
-/// strategy — deep pools write the same v2 layer-stack format shallow
-/// pools do (a shallow pool is simply depth 1).
+/// strategy — deep pools write the same v3 layer-stack format shallow
+/// pools do (a shallow pool is simply depth 1) — and `--data` runs
+/// embed the fitted train-only preprocessor so serving normalizes
+/// exactly like training.
 fn export(args: &Args) -> anyhow::Result<()> {
     let cfg = train_config(args)?;
     let out_path = PathBuf::from(args.get_or("out", "pool.ckpt"));
@@ -303,8 +353,25 @@ fn export(args: &Args) -> anyhow::Result<()> {
         }
     );
     let trained = run_experiment_trained(&cfg)?;
-    let ckpt =
+    let cfg = &trained.config; // data may have dictated loss/dims
+    let mut ckpt =
         PoolCheckpoint::from_engine(trained.engine.as_ref(), cfg.loss, &trained.report.ranked)?;
+    if let Some(pre) = &trained.preprocessor {
+        ckpt = ckpt.with_preprocessor(pre.clone())?;
+        println!(
+            "preprocessor embedded: {} feature columns -> {} features, target {:?}{}",
+            pre.columns.len(),
+            pre.n_features(),
+            pre.target.name,
+            match pre.n_classes() {
+                Some(k) => format!(" ({k} classes)"),
+                None => " (regression)".to_string(),
+            }
+        );
+    }
+    if let Some(k) = trained.report.cv_folds {
+        println!("ranking: mean validation loss over {k}-fold cross-validation");
+    }
     ckpt.save(&out_path)?;
     // paranoid roundtrip before declaring success: reload and compare bits
     let back = PoolCheckpoint::load(&out_path)?;
@@ -326,7 +393,7 @@ fn export(args: &Args) -> anyhow::Result<()> {
         top_k_indices(&trained.report.ranked, top_k)
     );
     println!("{}", report(&trained.report.ranked, cfg.loss, top_k));
-    print_stack_archs(&cfg, &trained.report.ranked, top_k)?;
+    print_stack_archs(cfg, &trained.report.ranked, top_k)?;
     Ok(())
 }
 
@@ -351,7 +418,7 @@ fn serve_bench(args: &Args) -> anyhow::Result<()> {
         "--batch-sizes must be positive integers"
     );
 
-    let model = match args.get("ckpt") {
+    let (model, preprocessor) = match args.get("ckpt") {
         Some(p) => {
             let ckpt = PoolCheckpoint::load(Path::new(p))?;
             let (winner, label) = match ckpt.winner() {
@@ -367,14 +434,39 @@ fn serve_bench(args: &Args) -> anyhow::Result<()> {
                 m.features(),
                 m.out()
             );
-            Arc::new(m)
+            (Arc::new(m), ckpt.preprocessor.clone())
         }
         None => {
             let hidden: usize = args.get_parse_or("hidden", 128).map_err(parse)?;
             let features: usize = args.get_parse_or("features", 64).map_err(parse)?;
             let out_dim: usize = args.get_parse_or("out-dim", 8).map_err(parse)?;
             println!("serving synthetic winner: h={hidden}, relu, F={features}, O={out_dim}");
-            synthetic_model(hidden, features, out_dim, seed)
+            (synthetic_model(hidden, features, out_dim, seed), None)
+        }
+    };
+
+    // --data: replay the CSV's rows through the server instead of
+    // uniform noise, normalized by the checkpoint's preprocessor when
+    // one was exported (bit-identical to what training saw)
+    let replay = match args.get("data") {
+        None => None,
+        Some(path) => {
+            let table = load_serve_rows(
+                path,
+                args.get("target"),
+                preprocessor.as_ref(),
+                model.features(),
+            )?;
+            println!(
+                "replaying {} rows from {path}{}",
+                table.len(),
+                if preprocessor.is_some() {
+                    " through the checkpoint preprocessor"
+                } else {
+                    " raw (checkpoint carries no preprocessor)"
+                }
+            );
+            Some(Arc::new(table))
         }
     };
 
@@ -384,7 +476,7 @@ fn serve_bench(args: &Args) -> anyhow::Result<()> {
     let mut reports = Vec::with_capacity(batch_sizes.len());
     for &max_batch in &batch_sizes {
         let cfg = ServeConfig { max_batch, queue_cap, threads };
-        let rep = run_load(&model, cfg, &spec)?;
+        let rep = run_load_with(&model, cfg, &spec, replay.clone())?;
         eprintln!(
             "max_batch {max_batch}: {:.0} rows/s (p50 {:.3} ms, p99 {:.3} ms, mean batch {:.1})",
             rep.rows_per_s, rep.p50_ms, rep.p99_ms, rep.mean_batch
@@ -421,6 +513,80 @@ fn serve_bench(args: &Args) -> anyhow::Result<()> {
         eprintln!("report written to {path}");
     }
     Ok(())
+}
+
+/// Turn a CSV/TSV file into encoded feature rows for `serve-bench
+/// --data`. With a checkpoint preprocessor the file's columns are
+/// matched BY NAME against the persisted schema (any target column in
+/// the file is simply unused) and every row goes through
+/// `Preprocessor::encode_row` — the same parse, vocabulary and
+/// normalization training used. Without one, only all-numeric files can
+/// replay: columns (minus `--target`, if given) are parsed raw and must
+/// match the model's feature width.
+fn load_serve_rows(
+    path: &str,
+    target_flag: Option<&str>,
+    pre: Option<&Preprocessor>,
+    features: usize,
+) -> anyhow::Result<Vec<Vec<f32>>> {
+    let text = std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let (header, raw) = read_raw(&text, path)?;
+    match pre {
+        Some(pre) => {
+            let idx: Vec<usize> = pre
+                .columns
+                .iter()
+                .map(|c| {
+                    header.iter().position(|h| *h == c.name).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "{path}: column {:?} (required by the checkpoint preprocessor) not \
+                             found (columns: {})",
+                            c.name,
+                            header.join(", ")
+                        )
+                    })
+                })
+                .collect::<anyhow::Result<_>>()?;
+            raw.iter()
+                .enumerate()
+                .map(|(i, row)| {
+                    let fields: Vec<&str> = idx.iter().map(|&c| row[c].as_str()).collect();
+                    pre.encode_row(&fields)
+                        .map_err(|e| anyhow::anyhow!("{path}: data row {}: {e}", i + 1))
+                })
+                .collect()
+        }
+        None => {
+            let drop = target_flag.and_then(|t| header.iter().position(|h| h == t));
+            let rows: Vec<Vec<f32>> = raw
+                .iter()
+                .enumerate()
+                .map(|(i, row)| {
+                    row.iter()
+                        .enumerate()
+                        .filter(|(c, _)| Some(*c) != drop)
+                        .map(|(c, v)| {
+                            v.parse::<f32>().map_err(|_| {
+                                anyhow::anyhow!(
+                                    "{path}: data row {}: column {:?}: cannot parse {v:?} as a \
+                                     number (this checkpoint has no preprocessor, so only \
+                                     numeric columns can replay)",
+                                    i + 1,
+                                    header[c]
+                                )
+                            })
+                        })
+                        .collect()
+                })
+                .collect::<anyhow::Result<_>>()?;
+            anyhow::ensure!(
+                rows.first().map(|r| r.len()) == Some(features),
+                "{path}: rows encode {} features but the model takes {features}",
+                rows.first().map(|r| r.len()).unwrap_or(0)
+            );
+            Ok(rows)
+        }
+    }
 }
 
 /// One measured cell of the training-throughput bench.

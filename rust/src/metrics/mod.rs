@@ -33,13 +33,21 @@ impl Timer {
 }
 
 /// Welford running mean/variance plus min/max.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Welford {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+/// `derive(Default)` would zero min/max; an empty accumulator must start
+/// at ±INFINITY exactly like `Welford::new()` or the first `push` loses.
+impl Default for Welford {
+    fn default() -> Self {
+        Welford::new()
+    }
 }
 
 impl Welford {
@@ -211,6 +219,24 @@ mod tests {
         assert_eq!(w.min(), 1.0);
         assert_eq!(w.max(), 10.0);
         assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn welford_default_matches_new() {
+        // regression: the old derived Default reported min=0/max=0 from
+        // an empty accumulator and clamped the first pushed sample
+        let mut d = Welford::default();
+        assert_eq!(d.min(), f64::INFINITY);
+        assert_eq!(d.max(), f64::NEG_INFINITY);
+        d.push(5.0);
+        d.push(7.0);
+        assert_eq!(d.min(), 5.0); // derived Default would have said 0.0
+        assert_eq!(d.max(), 7.0);
+        let mut n = Welford::new();
+        n.push(5.0);
+        n.push(7.0);
+        assert_eq!(d.mean(), n.mean());
+        assert_eq!(d.var(), n.var());
     }
 
     #[test]

@@ -348,6 +348,52 @@ mod tests {
     }
 
     #[test]
+    fn pool_grads_match_finite_differences_at_mixed_slots() {
+        // the fused objective is the SUM of per-model mean losses, so a
+        // logit at slot s only moves model s's loss: the analytic
+        // gradient must match d pool_loss[s] / d logit for BOTH losses,
+        // at every real slot of a mixed (2-relu, 3-tanh) layout
+        let lay = tiny_layout();
+        let (b, o) = (3, 2);
+        let mut rng = Rng::new(21);
+        for loss in [Loss::Mse, Loss::Ce] {
+            let mut logits = Tensor::zeros(&[b, lay.m_pad(), o]);
+            rng.fill_normal(logits.data_mut(), 0.0, 1.0);
+            let mut targets = Tensor::zeros(&[b, o]);
+            if loss == Loss::Ce {
+                for bi in 0..b {
+                    targets.set2(bi, rng.below(o), 1.0);
+                }
+            } else {
+                rng.fill_normal(targets.data_mut(), 0.0, 1.0);
+            }
+            let mut grad = Tensor::zeros(&[b, lay.m_pad(), o]);
+            pool_loss_grad(loss, &logits, &targets, &lay, &mut grad);
+            let eps = 1e-3f32;
+            for m in 0..lay.n_models() {
+                let s = lay.slot[m];
+                for bi in 0..b {
+                    for j in 0..o {
+                        let idx = (bi * lay.m_pad() + s) * o + j;
+                        let mut lp = logits.clone();
+                        lp.data_mut()[idx] += eps;
+                        let mut lm = logits.clone();
+                        lm.data_mut()[idx] -= eps;
+                        let fd = (pool_loss(loss, &lp, &targets, &lay)[s]
+                            - pool_loss(loss, &lm, &targets, &lay)[s])
+                            / (2.0 * eps);
+                        let an = grad.data()[idx];
+                        assert!(
+                            (fd - an).abs() < 2e-3,
+                            "{loss:?} slot {s} b={bi} j={j}: fd={fd} analytic={an}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn pool_grad_zero_on_dummy_slots() {
         let lay = tiny_layout();
         let (b, o) = (3, 2);

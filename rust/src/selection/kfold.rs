@@ -1,0 +1,291 @@
+//! k-fold cross-validated architecture ranking.
+//!
+//! A single train/val split ranks architectures on one draw of the
+//! validation set; on small real datasets that draw dominates the
+//! ranking. `kfold_rank` scores every architecture by its **mean
+//! validation loss across k folds**, training a fresh pool per fold
+//! through the same [`TrainSession`](crate::coordinator::TrainSession) /
+//! [`PoolEngine`](crate::coordinator::PoolEngine) loop the rest of the
+//! system uses. Classification datasets fold **stratified** (each class
+//! dealt round-robin across folds, so no fold loses a class);
+//! per-fold standardization is fit on that fold's train side only — the
+//! held-out fold never contributes statistics to the model that scores
+//! it.
+//!
+//! Everything is deterministic for a fixed config seed: fold assignment,
+//! per-fold init, and therefore the final ranking. A model that diverges
+//! (NaN loss) in ANY fold carries NaN mean loss and ranks last.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{build_native_engine, EarlyStop, TrainSession};
+use crate::data::Dataset;
+use crate::selection::{rank_models, RankedModel};
+use crate::util::rng::Rng;
+
+/// Result of a k-fold ranking run.
+#[derive(Debug)]
+pub struct KfoldReport {
+    /// best-first over mean-across-folds validation loss/metric
+    pub ranked: Vec<RankedModel>,
+    /// `[fold][model]` validation losses (original pool order)
+    pub fold_losses: Vec<Vec<f32>>,
+    /// `[fold][model]` validation metrics (accuracy for CE, loss for MSE)
+    pub fold_metrics: Vec<Vec<f32>>,
+    /// rows held out per fold
+    pub fold_sizes: Vec<usize>,
+}
+
+impl KfoldReport {
+    pub fn folds(&self) -> usize {
+        self.fold_losses.len()
+    }
+}
+
+/// Disjoint, shuffled fold index sets covering `0..n`. Fold sizes differ
+/// by at most one row.
+pub fn kfold_indices(n: usize, k: usize, rng: &mut Rng) -> anyhow::Result<Vec<Vec<usize>>> {
+    anyhow::ensure!(k >= 2, "k-fold needs k >= 2 (got {k})");
+    anyhow::ensure!(k <= n, "cannot make {k} folds out of {n} rows");
+    let perm = rng.permutation(n);
+    let mut folds = vec![Vec::with_capacity(n.div_ceil(k)); k];
+    for (i, idx) in perm.into_iter().enumerate() {
+        folds[i % k].push(idx);
+    }
+    Ok(folds)
+}
+
+/// Stratified fold assignment: each class is shuffled and dealt
+/// round-robin, with the dealing cursor carried across classes so
+/// remainder rows spread over folds instead of piling into fold 0.
+/// Guarantees every class with >= k rows appears in every fold.
+pub fn stratified_kfold_indices(
+    labels: &[usize],
+    k: usize,
+    rng: &mut Rng,
+) -> anyhow::Result<Vec<Vec<usize>>> {
+    let n = labels.len();
+    anyhow::ensure!(k >= 2, "k-fold needs k >= 2 (got {k})");
+    anyhow::ensure!(k <= n, "cannot make {k} folds out of {n} rows");
+    let n_classes = labels.iter().copied().max().map(|m| m + 1).unwrap_or(0);
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); n_classes];
+    for (i, &l) in labels.iter().enumerate() {
+        by_class[l].push(i);
+    }
+    let mut folds = vec![Vec::with_capacity(n.div_ceil(k)); k];
+    let mut cursor = 0usize;
+    for idx in by_class.iter_mut() {
+        rng.shuffle(idx);
+        for &i in idx.iter() {
+            folds[cursor % k].push(i);
+            cursor += 1;
+        }
+    }
+    // dealing order is class-major; shuffle each fold so downstream
+    // sequential batch slices are not class-runs
+    for f in folds.iter_mut() {
+        rng.shuffle(f);
+    }
+    Ok(folds)
+}
+
+/// Rank every architecture in the configured pool by mean validation
+/// loss/metric across `k` folds of `ds` (raw, unnormalized — each fold
+/// standardizes on its own train side). One fresh engine per fold, all
+/// through the generic `TrainSession` loop.
+pub fn kfold_rank(cfg: &ExperimentConfig, ds: &Dataset, k: usize) -> anyhow::Result<KfoldReport> {
+    anyhow::ensure!(
+        cfg.strategy.is_native(),
+        "k-fold ranking drives native strategies; {} needs the PJRT drivers",
+        cfg.strategy.name()
+    );
+    anyhow::ensure!(
+        cfg.features == ds.features(),
+        "config features={} but the dataset has {}",
+        cfg.features,
+        ds.features()
+    );
+    // fold assignment gets its own deterministic stream, independent of
+    // dataset synthesis and parameter init
+    let mut rng = Rng::new(cfg.seed).fork(0x6b666f6c64); // "kfold"
+    let folds = match ds.n_classes {
+        Some(_) => stratified_kfold_indices(&ds.labels(), k, &mut rng)?,
+        None => kfold_indices(ds.len(), k, &mut rng)?,
+    };
+
+    let mut fold_losses: Vec<Vec<f32>> = Vec::with_capacity(k);
+    let mut fold_metrics: Vec<Vec<f32>> = Vec::with_capacity(k);
+    let mut fold_sizes: Vec<usize> = Vec::with_capacity(k);
+    let mut spec = None;
+    let in_fold = |val_idx: &[usize]| {
+        let mut mask = vec![false; ds.len()];
+        for &i in val_idx {
+            mask[i] = true;
+        }
+        mask
+    };
+    for val_idx in &folds {
+        let mask = in_fold(val_idx);
+        let train_idx: Vec<usize> = (0..ds.len()).filter(|i| !mask[*i]).collect();
+        let mut train = ds.take(&train_idx);
+        let mut val = ds.take(val_idx);
+        // per-fold, train-side-only statistics: the held-out fold must
+        // not leak into the normalization of the pool that scores it
+        let (mean, std) = train.standardize();
+        val.standardize_with(&mean, &std);
+
+        let (mut engine, fold_spec) = build_native_engine(cfg, train.out_dim())?;
+        let mut session = TrainSession::builder()
+            .train_data(&train)
+            .val_data(&val)
+            .batches(cfg.batch, false)
+            .epochs(cfg.epochs)
+            .warmup(cfg.warmup_epochs)
+            .lr(cfg.lr);
+        if let Some(patience) = cfg.early_stop {
+            session = session.eval_every(1).observer(Box::new(EarlyStop::new(patience)));
+        }
+        let report = session.run(engine.as_mut())?;
+        let vl = report
+            .outcome
+            .val_losses
+            .ok_or_else(|| anyhow::anyhow!("k-fold session produced no validation losses"))?;
+        let vm = report
+            .outcome
+            .val_metrics
+            .ok_or_else(|| anyhow::anyhow!("k-fold session produced no validation metrics"))?;
+        fold_losses.push(vl);
+        fold_metrics.push(vm);
+        fold_sizes.push(val_idx.len());
+        spec.get_or_insert(fold_spec);
+    }
+
+    let spec = spec.expect("k >= 2 folds ran");
+    let n_models = spec.n_models();
+    let mean_over = |per_fold: &[Vec<f32>]| -> Vec<f32> {
+        let mut out = vec![0.0f32; n_models];
+        for fold in per_fold {
+            for (o, &v) in out.iter_mut().zip(fold) {
+                *o += v;
+            }
+        }
+        out.iter_mut().for_each(|o| *o /= per_fold.len() as f32);
+        out
+    };
+    let mean_losses = mean_over(&fold_losses);
+    let mut mean_metrics = mean_over(&fold_metrics);
+    // Enforce the documented "diverged ranks last" guarantee for CE too:
+    // argmax over NaN logits yields a finite (garbage) accuracy, and the
+    // CE ranking key looks at accuracy first — so a model whose mean
+    // loss went non-finite must have its metric poisoned as well, which
+    // rank_models maps to worst-possible.
+    for (m, l) in mean_metrics.iter_mut().zip(&mean_losses) {
+        if !l.is_finite() {
+            *m = f32::NAN;
+        }
+    }
+    let ranked = rank_models(&spec, &mean_losses, &mean_metrics, cfg.loss);
+    Ok(KfoldReport { ranked, fold_losses, fold_metrics, fold_sizes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{self, SynthKind};
+    use crate::nn::act::Act;
+    use crate::nn::loss::Loss;
+
+    #[test]
+    fn kfold_indices_partition() {
+        let mut rng = Rng::new(4);
+        let folds = kfold_indices(10, 3, &mut rng).unwrap();
+        assert_eq!(folds.len(), 3);
+        let sizes: Vec<usize> = folds.iter().map(|f| f.len()).collect();
+        assert_eq!(sizes, vec![4, 3, 3]);
+        let mut all: Vec<usize> = folds.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+        assert!(kfold_indices(10, 1, &mut rng).is_err());
+        assert!(kfold_indices(2, 3, &mut rng).is_err());
+    }
+
+    #[test]
+    fn stratified_folds_keep_every_class() {
+        // 12 of class 0, 3 of class 1, k = 3: every fold must hold
+        // exactly one minority row
+        let labels: Vec<usize> = (0..15).map(|i| usize::from(i >= 12)).collect();
+        for seed in 0..10 {
+            let mut rng = Rng::new(seed);
+            let folds = stratified_kfold_indices(&labels, 3, &mut rng).unwrap();
+            let mut all: Vec<usize> = folds.concat();
+            all.sort_unstable();
+            assert_eq!(all, (0..15).collect::<Vec<_>>());
+            for f in &folds {
+                let minority = f.iter().filter(|&&i| labels[i] == 1).count();
+                assert_eq!(minority, 1, "seed {seed}: fold {f:?}");
+            }
+        }
+    }
+
+    fn quick_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            samples: 120,
+            features: 6,
+            out: 2,
+            dataset: SynthKind::Blobs,
+            hidden_sizes: vec![2, 4],
+            acts: vec![Act::Relu, Act::Tanh],
+            repeats: 1,
+            epochs: 3,
+            warmup_epochs: 1,
+            batch: 20,
+            lr: 0.1,
+            loss: Loss::Ce,
+            threads: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn kfold_rank_is_deterministic_and_complete() {
+        let cfg = quick_cfg();
+        let mut rng = Rng::new(cfg.seed);
+        let ds = data::blobs(cfg.samples, cfg.features, cfg.out, &mut rng);
+        let a = kfold_rank(&cfg, &ds, 3).unwrap();
+        let b = kfold_rank(&cfg, &ds, 3).unwrap();
+        assert_eq!(a.folds(), 3);
+        assert_eq!(a.ranked.len(), 4);
+        assert_eq!(a.fold_sizes.iter().sum::<usize>(), 120);
+        // fixed seed -> identical fold losses and identical ranking
+        for (fa, fb) in a.fold_losses.iter().zip(&b.fold_losses) {
+            assert!(fa.iter().zip(fb).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+        let order_a: Vec<usize> = a.ranked.iter().map(|r| r.index).collect();
+        let order_b: Vec<usize> = b.ranked.iter().map(|r| r.index).collect();
+        assert_eq!(order_a, order_b);
+        // blobs are separable: the winner beats chance on mean accuracy
+        assert!(a.ranked[0].val_metric > 0.6, "{:?}", a.ranked[0]);
+    }
+
+    #[test]
+    fn kfold_mean_is_mean_of_folds() {
+        let cfg = quick_cfg();
+        let mut rng = Rng::new(cfg.seed);
+        let ds = data::blobs(cfg.samples, cfg.features, cfg.out, &mut rng);
+        let rep = kfold_rank(&cfg, &ds, 3).unwrap();
+        for r in &rep.ranked {
+            let want: f32 =
+                rep.fold_losses.iter().map(|f| f[r.index]).sum::<f32>() / rep.folds() as f32;
+            assert!((r.val_loss - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn kfold_rejects_bad_shapes() {
+        let cfg = quick_cfg();
+        let mut rng = Rng::new(1);
+        let ds = data::blobs(30, 4, 2, &mut rng); // features mismatch cfg (6)
+        assert!(kfold_rank(&cfg, &ds, 3).is_err());
+        let ds2 = data::blobs(30, 6, 2, &mut rng);
+        assert!(kfold_rank(&cfg, &ds2, 1).is_err());
+    }
+}

@@ -3,6 +3,10 @@
 //! validation metric (§5: "performing a very efficient grid-search in the
 //! discrete hyper-parameter space").
 
+pub mod kfold;
+
+pub use kfold::{kfold_indices, kfold_rank, stratified_kfold_indices, KfoldReport};
+
 use crate::nn::act::Act;
 use crate::nn::loss::Loss;
 use crate::pool::PoolSpec;

@@ -60,29 +60,60 @@ pub fn run_load(
     cfg: ServeConfig,
     spec: &LoadSpec,
 ) -> anyhow::Result<LoadReport> {
+    run_load_with(model, cfg, spec, None)
+}
+
+/// Like [`run_load`], but when `replay` is given the clients cycle
+/// through those pre-encoded feature rows (staggered per client)
+/// instead of synthesizing uniform noise — how `pmlp serve-bench
+/// --data file.csv` replays a real dataset through the server.
+pub fn run_load_with(
+    model: &Arc<ServableModel>,
+    cfg: ServeConfig,
+    spec: &LoadSpec,
+    replay: Option<Arc<Vec<Vec<f32>>>>,
+) -> anyhow::Result<LoadReport> {
     anyhow::ensure!(
         spec.clients >= 1 && spec.rows_per_client >= 1 && spec.depth >= 1,
         "load spec fields must all be >= 1"
     );
-    let server = Server::start(model.clone(), cfg)?;
     let features = model.features();
+    if let Some(rows) = &replay {
+        anyhow::ensure!(!rows.is_empty(), "replay table is empty");
+        anyhow::ensure!(
+            rows.iter().all(|r| r.len() == features),
+            "replay rows must all have {features} features"
+        );
+    }
+    let server = Server::start(model.clone(), cfg)?;
     let t0 = Instant::now();
     let mut handles = Vec::with_capacity(spec.clients);
     for c in 0..spec.clients {
         let client = server.client();
         let (rows, depth, seed) = (spec.rows_per_client, spec.depth, spec.seed);
+        let replay = replay.clone();
         handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
             let mut root = Rng::new(seed);
             let mut rng = root.fork(c as u64);
             let mut lats = Vec::with_capacity(rows);
             let mut row = vec![0.0f32; features];
+            // stagger replay starts so clients don't serve one prefix
+            let mut cursor = c * rows;
             let mut sent = 0usize;
             while sent < rows {
                 let window = depth.min(rows - sent);
                 let mut tickets = Vec::with_capacity(window);
                 for _ in 0..window {
-                    for v in row.iter_mut() {
-                        *v = rng.uniform_in(-1.0, 1.0);
+                    match &replay {
+                        Some(table) => {
+                            row.copy_from_slice(&table[cursor % table.len()]);
+                            cursor += 1;
+                        }
+                        None => {
+                            for v in row.iter_mut() {
+                                *v = rng.uniform_in(-1.0, 1.0);
+                            }
+                        }
                     }
                     tickets.push((Instant::now(), client.submit(&row)?));
                 }
@@ -212,6 +243,26 @@ mod tests {
         assert!(rep.p50_ms >= 0.0 && rep.p99_ms >= rep.p50_ms);
         assert!(rep.mean_batch >= 1.0);
         assert!(rep.batches >= 64 / 8);
+    }
+
+    #[test]
+    fn replay_rows_are_served_and_validated() {
+        let model = synthetic_model(8, 3, 2, 5);
+        let spec = LoadSpec { rows_per_client: 16, clients: 2, depth: 4, seed: 5 };
+        let table = Arc::new(vec![vec![0.5f32, -0.5, 1.0], vec![1.0, 0.0, -1.0]]);
+        let rep = run_load_with(
+            &model,
+            ServeConfig { max_batch: 4, queue_cap: 32, threads: 1 },
+            &spec,
+            Some(table),
+        )
+        .unwrap();
+        assert_eq!(rep.rows, 32);
+        // wrong width is rejected before the server spins up
+        let bad = Arc::new(vec![vec![1.0f32, 2.0]]);
+        assert!(run_load_with(&model, ServeConfig::default(), &spec, Some(bad)).is_err());
+        let empty: Arc<Vec<Vec<f32>>> = Arc::new(vec![]);
+        assert!(run_load_with(&model, ServeConfig::default(), &spec, Some(empty)).is_err());
     }
 
     #[test]

@@ -295,6 +295,110 @@ fn serve_bench_synthetic_writes_json_report() {
     assert_eq!(v.req("runs").unwrap().as_arr().unwrap().len(), 2);
 }
 
+fn blossom() -> String {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("examples/data/blossom.csv")
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+#[test]
+fn train_on_csv_with_kfold_ranking() {
+    let data = blossom();
+    let out = Command::new(pmlp())
+        .args([
+            "train", "--data", data.as_str(), "--target", "species", "--epochs", "3", "--batch",
+            "25", "--folds", "2", "--top", "3", "--threads", "2",
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("blossom.csv"), "{stdout}");
+    assert!(stdout.contains("2-fold cross-validation"), "{stdout}");
+    assert!(stdout.contains("Top-3"), "{stdout}");
+    assert!(stdout.contains("val_acc"), "{stdout}");
+}
+
+#[test]
+fn rank_on_csv_prints_only_the_table() {
+    let data = blossom();
+    let out = Command::new(pmlp())
+        .args([
+            "rank", "--data", data.as_str(), "--target", "species", "--epochs", "3", "--batch",
+            "25", "--folds", "2", "--top", "4", "--threads", "2",
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("Top-4"), "{stdout}");
+    assert!(!stdout.contains("trained"), "{stdout}");
+    // fold context goes to stderr, keeping stdout machine-friendly
+    assert!(stderr.contains("2-fold CV"), "{stderr}");
+}
+
+#[test]
+fn export_csv_embeds_preprocessor_then_serve_bench_replays_it() {
+    let data = blossom();
+    let ckpt = std::env::temp_dir().join(format!("pmlp_cli_csv_{}.ckpt", std::process::id()));
+    let out = Command::new(pmlp())
+        .args([
+            "export", "--data", data.as_str(), "--target", "species", "--epochs", "3", "--batch",
+            "25", "--top", "2", "--threads", "2", "--out", ckpt.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("preprocessor embedded"), "{stdout}");
+    assert!(stdout.contains("3 classes"), "{stdout}");
+    assert!(stdout.contains("checkpoint:"), "{stdout}");
+
+    // replay the SAME csv through the micro-batch server
+    let out2 = Command::new(pmlp())
+        .args([
+            "serve-bench", "--ckpt", ckpt.to_str().unwrap(), "--data", data.as_str(), "--rows",
+            "64", "--clients", "2", "--depth", "4", "--batch-sizes", "1,4",
+        ])
+        .output()
+        .unwrap();
+    std::fs::remove_file(&ckpt).ok();
+    let stdout2 = String::from_utf8_lossy(&out2.stdout);
+    let stderr2 = String::from_utf8_lossy(&out2.stderr);
+    assert!(out2.status.success(), "stdout:\n{stdout2}\nstderr:\n{stderr2}");
+    assert!(stdout2.contains("replaying 150 rows"), "{stdout2}");
+    assert!(stdout2.contains("checkpoint preprocessor"), "{stdout2}");
+    assert!(stdout2.contains("rows/s"), "{stdout2}");
+}
+
+#[test]
+fn train_data_requires_target() {
+    let out = Command::new(pmlp())
+        .args(["train", "--data", "whatever.csv"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--target"), "{stderr}");
+}
+
+#[test]
+fn train_csv_reports_missing_target_column_with_candidates() {
+    let data = blossom();
+    let out = Command::new(pmlp())
+        .args(["train", "--data", data.as_str(), "--target", "nope"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("\"nope\"") && stderr.contains("species"), "{stderr}");
+}
+
 #[test]
 fn train_rejects_depths_on_shallow_strategy() {
     let out = Command::new(pmlp())

@@ -1,0 +1,188 @@
+//! End-to-end real-dataset acceptance: CSV → k-fold ranking → export →
+//! serve. The contract under test is the PR's tentpole guarantee — a
+//! served prediction equals an offline forward pass through the SAME
+//! persisted preprocessor to within 1e-5, and k-fold ranking is
+//! deterministic for a fixed seed.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use parallel_mlps::config::ExperimentConfig;
+use parallel_mlps::coordinator::{run_experiment_trained, run_kfold};
+use parallel_mlps::data::csv::read_raw;
+use parallel_mlps::io::PoolCheckpoint;
+use parallel_mlps::nn::act::Act;
+use parallel_mlps::nn::loss::Loss;
+use parallel_mlps::serve::{ModelRegistry, ServeConfig, Server};
+use parallel_mlps::tensor::Tensor;
+
+fn blossom_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("examples/data/blossom.csv")
+}
+
+fn blossom_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        data_path: Some(blossom_path().to_str().unwrap().to_string()),
+        target: Some("species".into()),
+        hidden_sizes: vec![2, 4, 8],
+        acts: vec![Act::Relu, Act::Tanh],
+        epochs: 6,
+        warmup_epochs: 1,
+        batch: 16,
+        lr: 0.1,
+        threads: 2,
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn csv_load_resolves_schema() {
+    let t = parallel_mlps::data::load_table(&blossom_path(), "species").unwrap();
+    assert_eq!(t.dataset.len(), 150);
+    // 4 numeric + site one-hot (meadow/ridge/valley) = 7 features
+    assert_eq!(t.dataset.features(), 7);
+    assert_eq!(t.n_classes(), Some(3));
+    assert_eq!(
+        t.feature_names,
+        vec![
+            "sepal_len",
+            "sepal_wid",
+            "petal_len",
+            "petal_wid",
+            "site=meadow",
+            "site=ridge",
+            "site=valley"
+        ]
+    );
+}
+
+#[test]
+fn csv_kfold_ranking_is_deterministic() {
+    let mut cfg = blossom_cfg();
+    cfg.folds = Some(3);
+    let (eff, a) = run_kfold(&cfg).unwrap();
+    let (_, b) = run_kfold(&cfg).unwrap();
+    // the data dictated the task: 3-class CE over 7 features
+    assert_eq!(eff.loss, Loss::Ce);
+    assert_eq!(eff.features, 7);
+    assert_eq!(eff.out, 3);
+    assert_eq!(a.folds(), 3);
+    assert_eq!(a.fold_sizes.iter().sum::<usize>(), 150);
+    assert_eq!(a.ranked.len(), 6);
+    for (fa, fb) in a.fold_losses.iter().zip(&b.fold_losses) {
+        assert!(fa.iter().zip(fb).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+    let oa: Vec<usize> = a.ranked.iter().map(|r| r.index).collect();
+    let ob: Vec<usize> = b.ranked.iter().map(|r| r.index).collect();
+    assert_eq!(oa, ob);
+    // blossom clusters are separable: the CV winner beats chance
+    assert!(a.ranked[0].val_metric > 0.6, "{:?}", a.ranked[0]);
+}
+
+#[test]
+fn csv_kfold_export_serve_matches_offline_forward() {
+    // the full acceptance path: train on the CSV with k-fold ranking,
+    // export the pool (preprocessor embedded), reload, serve the winner
+    // through the micro-batch server, and compare against an offline
+    // forward pass that encodes the same raw rows with the persisted
+    // preprocessor
+    let mut cfg = blossom_cfg();
+    cfg.folds = Some(3);
+    let trained = run_experiment_trained(&cfg).unwrap();
+    assert_eq!(trained.report.cv_folds, Some(3));
+    let pre = trained.preprocessor.clone().expect("CSV runs fit a preprocessor");
+    let ckpt = PoolCheckpoint::from_engine(
+        trained.engine.as_ref(),
+        trained.config.loss,
+        &trained.report.ranked,
+    )
+    .unwrap()
+    .with_preprocessor(pre)
+    .unwrap();
+
+    let path = std::env::temp_dir().join(format!("pmlp_realdata_{}.ckpt", std::process::id()));
+    ckpt.save(&path).unwrap();
+    let back = PoolCheckpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let pre = back.preprocessor.clone().expect("preprocessor survives the roundtrip");
+    assert_eq!(pre.n_features(), 7);
+    assert_eq!(pre.class_names().unwrap(), &["setosa", "versicolor", "virginica"]);
+
+    let mut registry = ModelRegistry::new();
+    let names = registry.load_top_k("blossom", &back, 1).unwrap();
+    let model = registry.get(&names[0]).unwrap();
+    assert_eq!(model.index, trained.report.ranked[0].index);
+
+    // raw rows from the file, re-encoded through the persisted pipeline
+    let text = std::fs::read_to_string(blossom_path()).unwrap();
+    let (header, raw) = read_raw(&text, "blossom.csv").unwrap();
+    let feat_idx: Vec<usize> = pre
+        .columns
+        .iter()
+        .map(|c| header.iter().position(|h| *h == c.name).unwrap())
+        .collect();
+    let rows: Vec<Vec<f32>> = raw
+        .iter()
+        .take(32)
+        .map(|row| {
+            let fields: Vec<&str> = feat_idx.iter().map(|&c| row[c].as_str()).collect();
+            pre.encode_row(&fields).unwrap()
+        })
+        .collect();
+
+    // offline forward over the whole block at once
+    let flat: Vec<f32> = rows.iter().flatten().copied().collect();
+    let x = Tensor::from_vec(flat, &[rows.len(), pre.n_features()]);
+    let offline = model.predict(&x, 1);
+
+    // served micro-batched, single-row requests
+    let server = Server::start(
+        Arc::clone(&model),
+        ServeConfig { max_batch: 8, queue_cap: 64, threads: 1 },
+    )
+    .unwrap();
+    let client = server.client();
+    for (i, row) in rows.iter().enumerate() {
+        let got = client.predict(row).unwrap();
+        for (j, &v) in got.iter().enumerate() {
+            let want = offline.at2(i, j);
+            assert!(
+                (v - want).abs() <= 1e-5,
+                "row {i} logit {j}: served {v} vs offline {want}"
+            );
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn regression_csv_roundtrips_under_mse() {
+    // a numeric target flips the whole pipeline to regression
+    let path = std::env::temp_dir().join(format!("pmlp_realdata_reg_{}.csv", std::process::id()));
+    let mut text = String::from("x1,x2,y\n");
+    for i in 0..60 {
+        let (a, b) = (i as f32 * 0.1, (i % 7) as f32 * 0.5);
+        text.push_str(&format!("{a:.2},{b:.2},{:.3}\n", 2.0 * a - b + 0.5));
+    }
+    std::fs::write(&path, &text).unwrap();
+    let cfg = ExperimentConfig {
+        data_path: Some(path.to_str().unwrap().to_string()),
+        target: Some("y".into()),
+        hidden_sizes: vec![4],
+        acts: vec![Act::Tanh],
+        epochs: 5,
+        warmup_epochs: 1,
+        batch: 10,
+        lr: 0.05,
+        threads: 1,
+        ..Default::default()
+    };
+    let trained = run_experiment_trained(&cfg).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(trained.config.loss, Loss::Mse);
+    assert_eq!(trained.out_dim, 1);
+    let pre = trained.preprocessor.as_ref().unwrap();
+    assert_eq!(pre.n_classes(), None);
+    assert!(trained.report.ranked[0].val_loss.is_finite());
+}
