@@ -14,6 +14,7 @@ use parallel_mlps::nn::mlp::MlpTrainer;
 use parallel_mlps::nn::optimizer::OptimizerKind;
 use parallel_mlps::nn::parallel::ParallelEngine;
 use parallel_mlps::pool::{PoolLayout, PoolSpec};
+use parallel_mlps::tensor::kernels::{self, Kernel, KernelConfig};
 use parallel_mlps::tensor::{matmul, scatter, Tensor};
 use parallel_mlps::util::rng::Rng;
 
@@ -22,6 +23,69 @@ fn main() {
     let reps = if args.quick { 3 } else { 10 };
     let mut rng = Rng::new(1);
     let mut results = Vec::new();
+
+    // --- naive vs blocked kernel on the fused training shapes --------------
+    // the [B,F]x[F,H_pad] projections and the [H_pad,B,F]-class weight
+    // grads are exactly what `pmlp train-bench` exercises; the blocked
+    // kernel must beat the naive oracle here (ISSUE 5 acceptance)
+    eprintln!("active kernel: {}", kernels::active().describe());
+    for &(m, k, n, tag) in &[
+        (32usize, 16usize, 2560usize, "fwd fused [B,F]x[F,H_pad]"),
+        (256, 64, 1024, "fwd fused big [B,F]x[F,H_pad]"),
+    ] {
+        let mut a = Tensor::zeros(&[m, k]);
+        rng.fill_normal(a.data_mut(), 0.0, 1.0);
+        let mut b = Tensor::zeros(&[k, n]);
+        rng.fill_normal(b.data_mut(), 0.0, 1.0);
+        let mut c = Tensor::zeros(&[m, n]);
+        // sanity: the two kernels must agree bit-for-bit before timing
+        let mut c2 = Tensor::zeros(&[m, n]);
+        kernels::matmul_nn_with(KernelConfig::naive(), a.data(), b.data(), c.data_mut(), m, k, n, 1)
+            .unwrap();
+        kernels::matmul_nn_with(KernelConfig::blocked(), a.data(), b.data(), c2.data_mut(), m, k, n, 1)
+            .unwrap();
+        assert!(
+            c.data().iter().zip(c2.data()).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "kernel disagreement on {tag}"
+        );
+        for kernel in [Kernel::Naive, Kernel::Blocked] {
+            // time the autotuned tiles the `auto` default actually ships
+            // (the header line above describes exactly this config)
+            let cfg = kernels::active().with_kernel(kernel);
+            results.push(measure(
+                &format!("matmul_nn {:<7} {tag} [{m}x{k}x{n}]", kernel.name()),
+                2,
+                reps,
+                || {
+                    kernels::matmul_nn_with(cfg, a.data(), b.data(), c.data_mut(), m, k, n, 1)
+                        .unwrap();
+                    std::hint::black_box(c.data()[0]);
+                },
+            ));
+        }
+    }
+    {
+        // dW1-class tn shape: [F,B]ᵀ x [B,H_pad]
+        let (m, k, n) = (64usize, 256usize, 1024usize);
+        let mut a = Tensor::zeros(&[k, m]);
+        rng.fill_normal(a.data_mut(), 0.0, 1.0);
+        let mut b = Tensor::zeros(&[k, n]);
+        rng.fill_normal(b.data_mut(), 0.0, 1.0);
+        let mut c = Tensor::zeros(&[m, n]);
+        for kernel in [Kernel::Naive, Kernel::Blocked] {
+            let cfg = kernels::active().with_kernel(kernel);
+            results.push(measure(
+                &format!("matmul_tn {:<7} dW1 fused [{m}x{k}x{n}]", kernel.name()),
+                2,
+                reps,
+                || {
+                    kernels::matmul_tn_with(cfg, a.data(), b.data(), c.data_mut(), m, k, n, 1)
+                        .unwrap();
+                    std::hint::black_box(c.data()[0]);
+                },
+            ));
+        }
+    }
 
     // --- matmul kernels at MLP-relevant shapes -----------------------------
     for &(m, k, n, tag) in &[

@@ -452,12 +452,19 @@ pub struct DeepEngine {
     params: StackParams,
     loss: Loss,
     threads: usize,
+    kcfg: crate::tensor::kernels::KernelConfig,
 }
 
 impl DeepEngine {
     pub fn new(stack: LayerStack, seed: u64, loss: Loss, threads: usize) -> DeepEngine {
         let params = stack.init(seed);
-        DeepEngine { stack, params, loss, threads: threads.max(1) }
+        DeepEngine {
+            stack,
+            params,
+            loss,
+            threads: threads.max(1),
+            kcfg: crate::tensor::kernels::active(),
+        }
     }
 
     pub fn from_params(
@@ -467,7 +474,20 @@ impl DeepEngine {
         threads: usize,
     ) -> anyhow::Result<DeepEngine> {
         stack.validate(&params)?;
-        Ok(DeepEngine { stack, params, loss, threads: threads.max(1) })
+        Ok(DeepEngine {
+            stack,
+            params,
+            loss,
+            threads: threads.max(1),
+            kcfg: crate::tensor::kernels::active(),
+        })
+    }
+
+    /// Pin the matmul kernel (a pure performance knob under the kernel
+    /// exactness contract; tests and `pmlp train-bench` compare kernels
+    /// through this without touching `PMLP_KERNEL`).
+    pub fn set_kernel(&mut self, kernel: crate::tensor::kernels::Kernel) {
+        self.kcfg = self.kcfg.with_kernel(kernel);
     }
 
     pub fn stack(&self) -> &LayerStack {
@@ -497,12 +517,14 @@ impl PoolEngine for DeepEngine {
         lr: f32,
     ) -> anyhow::Result<StepStats> {
         Ok(StepStats {
-            losses: self.stack.step(&mut self.params, x, y, self.loss, lr, self.threads),
+            losses: self
+                .stack
+                .step_with(self.kcfg, &mut self.params, x, y, self.loss, lr, self.threads),
         })
     }
 
     fn eval(&mut self, _unit: usize, x: &Tensor, y: &Tensor) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
-        let logits = self.stack.forward(&self.params, x, self.threads);
+        let logits = self.stack.forward_with(self.kcfg, &self.params, x, self.threads);
         let mut losses = Vec::with_capacity(self.stack.n_models());
         let mut metrics = Vec::with_capacity(self.stack.n_models());
         for m in 0..self.stack.n_models() {

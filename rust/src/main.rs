@@ -36,6 +36,7 @@ use parallel_mlps::serve::bench::{
     render_reports, reports_json, run_load_with, synthetic_model, LoadSpec,
 };
 use parallel_mlps::serve::{ModelRegistry, ServableModel, ServeConfig};
+use parallel_mlps::tensor::kernels::{self, Kernel};
 use parallel_mlps::util::cli::Args;
 
 const USAGE: &str = "\
@@ -75,7 +76,12 @@ train-only preprocessor embedded for --data runs; serve-bench replays
 a synthetic load — or, with --data, the CSV's rows normalized through
 the checkpoint's preprocessor — against the micro-batch server;
 train-bench records training throughput (models/s, rows/s) for shallow
-vs depth-2 vs depth-3 pools at fixed seeds into BENCH_train.json.
+vs depth-2 vs depth-3 pools at fixed seeds, under both matmul kernels
+(naive oracle vs blocked), into BENCH_train.json.
+
+Env: PMLP_THREADS (worker count), PMLP_KERNEL (matmul kernel:
+naive|blocked|auto; auto = blocked with autotuned tile sizes; results
+are bit-identical across kernels), PMLP_ARTIFACTS (AOT artifact dir).
 ";
 
 fn main() {
@@ -470,6 +476,7 @@ fn serve_bench(args: &Args) -> anyhow::Result<()> {
         }
     };
 
+    eprintln!("matmul kernel: {}", kernels::active().describe());
     // round up so at least --rows total rows are served (the reports
     // count actual rows, so no silent undershoot)
     let spec = LoadSpec { rows_per_client: rows.div_ceil(clients), clients, depth, seed };
@@ -593,6 +600,7 @@ fn load_serve_rows(
 struct TrainBenchCell {
     pool: &'static str,
     strategy: &'static str,
+    kernel: &'static str,
     depth: usize,
     models: usize,
     rows_per_epoch: usize,
@@ -645,53 +653,65 @@ fn train_bench(args: &Args) -> anyhow::Result<()> {
     let session =
         || TrainSession::builder().epochs(epochs).warmup(warmup).lr(0.05);
 
-    let mut cells: Vec<TrainBenchCell> = Vec::with_capacity(3);
+    // both kernels at fixed seeds: the naive-vs-blocked training
+    // throughput IS the perf record this bench exists to keep honest
+    // (the kernel exactness contract guarantees identical losses)
+    eprintln!("autotuned blocked config: {}", kernels::active().describe());
+    let kernel_axis = [Kernel::Naive, Kernel::Blocked];
+    let mut cells: Vec<TrainBenchCell> = Vec::with_capacity(3 * kernel_axis.len());
 
-    // shallow fused pool (depth 1) through ParallelEngine
-    {
-        let spec = PoolSpec::from_grid(&hidden, &acts, 1)?;
-        let layout = PoolLayout::build(&spec);
-        let fused = init_pool(seed, &layout, features, out_dim);
-        let mut engine =
-            ParallelEngine::new(layout, fused, Loss::Mse, features, out_dim, batch, threads);
-        let rep = session().run_with_batches(&mut engine, &batches)?;
-        cells.push(TrainBenchCell {
-            pool: "shallow",
-            strategy: "native_parallel",
-            depth: 1,
-            models: spec.n_models(),
-            rows_per_epoch: batches.n_samples,
-            avg_epoch_s: rep.outcome.avg_timed_epoch_s(),
-        });
-    }
-    // depth-2 and depth-3 stacks through DeepEngine
-    for (pool, depth) in [("deep2", 2usize), ("deep3", 3usize)] {
-        let models: Vec<StackModel> = acts
-            .iter()
-            .flat_map(|&a| hidden.iter().map(move |&h| StackModel::uniform(h, depth, a)))
-            .collect();
-        let n_models = models.len();
-        let stack = LayerStack::new(models, features, out_dim)?;
-        let mut engine = DeepEngine::new(stack, seed, Loss::Mse, threads);
-        let rep = session().run_with_batches(&mut engine, &batches)?;
-        cells.push(TrainBenchCell {
-            pool,
-            strategy: "deep_native",
-            depth,
-            models: n_models,
-            rows_per_epoch: batches.n_samples,
-            avg_epoch_s: rep.outcome.avg_timed_epoch_s(),
-        });
+    for kernel in kernel_axis {
+        // shallow fused pool (depth 1) through ParallelEngine
+        {
+            let spec = PoolSpec::from_grid(&hidden, &acts, 1)?;
+            let layout = PoolLayout::build(&spec);
+            let fused = init_pool(seed, &layout, features, out_dim);
+            let mut engine =
+                ParallelEngine::new(layout, fused, Loss::Mse, features, out_dim, batch, threads);
+            engine.set_kernel(kernel);
+            let rep = session().run_with_batches(&mut engine, &batches)?;
+            cells.push(TrainBenchCell {
+                pool: "shallow",
+                strategy: "native_parallel",
+                kernel: kernel.name(),
+                depth: 1,
+                models: spec.n_models(),
+                rows_per_epoch: batches.n_samples,
+                avg_epoch_s: rep.outcome.avg_timed_epoch_s(),
+            });
+        }
+        // depth-2 and depth-3 stacks through DeepEngine
+        for (pool, depth) in [("deep2", 2usize), ("deep3", 3usize)] {
+            let models: Vec<StackModel> = acts
+                .iter()
+                .flat_map(|&a| hidden.iter().map(move |&h| StackModel::uniform(h, depth, a)))
+                .collect();
+            let n_models = models.len();
+            let stack = LayerStack::new(models, features, out_dim)?;
+            let mut engine = DeepEngine::new(stack, seed, Loss::Mse, threads);
+            engine.set_kernel(kernel);
+            let rep = session().run_with_batches(&mut engine, &batches)?;
+            cells.push(TrainBenchCell {
+                pool,
+                strategy: "deep_native",
+                kernel: kernel.name(),
+                depth,
+                models: n_models,
+                rows_per_epoch: batches.n_samples,
+                avg_epoch_s: rep.outcome.avg_timed_epoch_s(),
+            });
+        }
     }
 
     let mut t = Table::new(
         &format!("train-bench: {samples} samples x {epochs} epochs (warmup {warmup}), {threads} threads"),
-        &["pool", "strategy", "depth", "models", "rows/epoch", "epoch_s", "models/s", "rows/s", "model_rows/s"],
+        &["pool", "strategy", "kernel", "depth", "models", "rows/epoch", "epoch_s", "models/s", "rows/s", "model_rows/s"],
     );
     for c in &cells {
         t.row(vec![
             c.pool.to_string(),
             c.strategy.to_string(),
+            c.kernel.to_string(),
             c.depth.to_string(),
             c.models.to_string(),
             c.rows_per_epoch.to_string(),
@@ -702,6 +722,20 @@ fn train_bench(args: &Args) -> anyhow::Result<()> {
         ]);
     }
     println!("{}", t.to_markdown());
+    for c in cells.iter().filter(|c| c.kernel == "naive") {
+        if let Some(blocked) = cells
+            .iter()
+            .find(|b| b.kernel == "blocked" && b.pool == c.pool)
+        {
+            println!(
+                "{}: blocked vs naive speedup {:.2}x ({:.0} -> {:.0} rows/s)",
+                c.pool,
+                c.avg_epoch_s / blocked.avg_epoch_s.max(1e-12),
+                c.rows_per_s(),
+                blocked.rows_per_s()
+            );
+        }
+    }
 
     let doc = train_bench_json(samples, features, out_dim, batch, epochs, warmup, threads, seed, &cells);
     std::fs::write(&out_path, doc).map_err(|e| anyhow::anyhow!("writing {out_path}: {e}"))?;
@@ -727,9 +761,10 @@ fn train_bench_json(
             runs.push_str(",\n    ");
         }
         runs.push_str(&format!(
-            "{{\"pool\": \"{}\", \"strategy\": \"{}\", \"depth\": {}, \"models\": {}, \"rows_per_epoch\": {}, \"avg_epoch_s\": {:.6}, \"models_per_s\": {:.2}, \"rows_per_s\": {:.1}, \"model_rows_per_s\": {:.1}}}",
+            "{{\"pool\": \"{}\", \"strategy\": \"{}\", \"kernel\": \"{}\", \"depth\": {}, \"models\": {}, \"rows_per_epoch\": {}, \"avg_epoch_s\": {:.6}, \"models_per_s\": {:.2}, \"rows_per_s\": {:.1}, \"model_rows_per_s\": {:.1}}}",
             c.pool,
             c.strategy,
+            c.kernel,
             c.depth,
             c.models,
             c.rows_per_epoch,

@@ -19,6 +19,7 @@ use crate::nn::act::Act;
 use crate::nn::init::FusedParams;
 use crate::nn::loss::{self, Loss};
 use crate::pool::{PoolLayout, PAD_SLOT};
+use crate::tensor::kernels::{self, Kernel, KernelConfig};
 use crate::tensor::{matmul, Tensor};
 use crate::util::threadpool::{parallel_chunks, SendPtr};
 
@@ -29,6 +30,9 @@ pub struct ParallelEngine {
     out: usize,
     threads: usize,
     batch_cap: usize,
+    /// matmul kernel the dense projections dispatch through (captured
+    /// from [`kernels::active`] at construction; see `set_kernel`)
+    kcfg: KernelConfig,
     // parameters (w1 kept transposed for streaming access)
     w1t: Tensor, // [F, H_pad]
     b1: Tensor,  // [H_pad]
@@ -86,6 +90,7 @@ impl ParallelEngine {
             out,
             threads,
             batch_cap,
+            kcfg: kernels::active(),
             w1t,
             b1: params.b1,
             w2: params.w2,
@@ -135,6 +140,14 @@ impl ParallelEngine {
         self.batch_cap
     }
 
+    /// Pin the matmul kernel (tests/benches compare kernels without
+    /// touching the process-wide `PMLP_KERNEL` selection). The kernel
+    /// exactness contract makes this a pure performance knob: results
+    /// are bit-identical either way.
+    pub fn set_kernel(&mut self, kernel: Kernel) {
+        self.kcfg = self.kcfg.with_kernel(kernel);
+    }
+
     /// The parameters in the standard fused layout (w1 `[H_pad, F]`).
     pub fn params_fused(&self) -> FusedParams {
         let h_pad = self.layout.h_pad();
@@ -167,13 +180,25 @@ impl ParallelEngine {
         let o = self.out;
         let f = self.features;
 
-        // (1) fused hidden projection, streaming form:
-        //     pre[b, :] = b1 + Σ_j x[b, j] · W1T[j, :]
-        // (2) per-segment activations (split–activate–concat)
+        // (1) fused hidden projection through the kernel dispatcher:
+        //     pre = X · W1T  (one [B,F]x[F,H_pad] nn-matmul — the shape
+        //     the blocked kernel is tiled for), then
+        // (2) bias + per-segment activations (split–activate–concat)
         let b1 = self.b1.data();
         let w1t = self.w1t.data();
         let xd = x.data();
         let segments = &self.segments;
+        kernels::matmul_nn_with(
+            self.kcfg,
+            &xd[..b * f],
+            w1t,
+            &mut self.pre.data_mut()[..b * h_pad],
+            b,
+            f,
+            h_pad,
+            self.threads,
+        )
+        .expect("engine scratch shapes are construction-validated");
         {
             let pre = SendPtr(self.pre.data_mut().as_mut_ptr());
             let hact = SendPtr(self.hact.data_mut().as_mut_ptr());
@@ -182,12 +207,8 @@ impl ParallelEngine {
                     let prow = unsafe {
                         std::slice::from_raw_parts_mut(pre.ptr().add(bi * h_pad), h_pad)
                     };
-                    prow.copy_from_slice(b1);
-                    for j in 0..f {
-                        let xv = xd[bi * f + j];
-                        if xv != 0.0 {
-                            matmul::axpy(xv, &w1t[j * h_pad..(j + 1) * h_pad], prow);
-                        }
+                    for (p, &bv) in prow.iter_mut().zip(b1) {
+                        *p += bv;
                     }
                     let hrow = unsafe {
                         std::slice::from_raw_parts_mut(hact.ptr().add(bi * h_pad), h_pad)
@@ -334,31 +355,23 @@ impl ParallelEngine {
             });
         }
 
-        // dW1T[j, :] = Σ_b x[b, j] · dPre[b, :]   (long contiguous axpys)
-        // db1 = column sums of dPre
-        self.dw1t.fill(0.0);
+        // dW1T = Xᵀ · dPre — a [F,B]ᵀx[B,H_pad] tn-matmul through the
+        // kernel dispatcher; db1 = column sums of dPre
         let mut db1 = vec![0.0f32; h_pad];
         {
             let xd = x.data();
+            kernels::matmul_tn_with(
+                self.kcfg,
+                &xd[..b * f],
+                &self.dhact.data()[..b * h_pad],
+                self.dw1t.data_mut(),
+                f,
+                b,
+                h_pad,
+                self.threads,
+            )
+            .expect("engine scratch shapes are construction-validated");
             let dpre = self.dhact.data();
-            let dw1t = SendPtr(self.dw1t.data_mut().as_mut_ptr());
-            parallel_chunks(f, self.threads, 1, move |j0, j1| {
-                for bi in 0..b {
-                    let drow = &dpre[bi * h_pad..(bi + 1) * h_pad];
-                    for j in j0..j1 {
-                        let xv = xd[bi * f + j];
-                        if xv != 0.0 {
-                            let grow = unsafe {
-                                std::slice::from_raw_parts_mut(
-                                    dw1t.ptr().add(j * h_pad),
-                                    h_pad,
-                                )
-                            };
-                            matmul::axpy(xv, drow, grow);
-                        }
-                    }
-                }
-            });
             for bi in 0..b {
                 for (acc, &g) in db1.iter_mut().zip(&dpre[bi * h_pad..(bi + 1) * h_pad]) {
                     *acc += g;

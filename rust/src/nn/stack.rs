@@ -33,6 +33,7 @@ use crate::nn::act::Act;
 use crate::nn::init::ModelParams;
 use crate::nn::loss::{self, Loss};
 use crate::nn::mlp::{add_bias_rows_vec, col_sums};
+use crate::tensor::kernels::{self, BlockDiag, KernelConfig};
 use crate::tensor::{matmul, Tensor};
 use crate::util::rng::Rng;
 use crate::util::threadpool::{parallel_chunks, SendPtr};
@@ -119,6 +120,11 @@ pub struct LayerStack {
     /// out_off[m] = offset of model m's `[O, w_last(m)]` block
     out_off: Vec<usize>,
     out_len: usize,
+    /// precomputed [`BlockDiag`] tables for the output projection:
+    /// spans `(m·O, (m+1)·O)` in the flattened `[B, M·O]` logits and the
+    /// packed offsets as `Some` (every model has a real output block)
+    out_spans: Vec<(usize, usize)>,
+    out_offs: Vec<Option<usize>>,
 }
 
 impl LayerStack {
@@ -180,6 +186,8 @@ impl LayerStack {
             out_off.push(cursor);
             cursor += out * width_at(model, depth - 1);
         }
+        let out_spans = (0..models.len()).map(|m| (m * out, (m + 1) * out)).collect();
+        let out_offs = out_off.iter().map(|&o| Some(o)).collect();
 
         Ok(LayerStack {
             models,
@@ -192,6 +200,8 @@ impl LayerStack {
             inner_len,
             out_off,
             out_len: cursor,
+            out_spans,
+            out_offs,
         })
     }
 
@@ -340,23 +350,41 @@ impl LayerStack {
         Ok(())
     }
 
-    /// Fused forward to logits `[B, M, O]`.
+    /// Fused forward to logits `[B, M, O]` under the process-wide kernel.
     pub fn forward(&self, p: &StackParams, x: &Tensor, threads: usize) -> Tensor {
-        let (_, hs) = self.forward_levels(p, x, threads);
-        self.output(p, hs.last().expect("depth >= 1"), threads)
+        self.forward_with(kernels::active(), p, x, threads)
+    }
+
+    /// Fused forward under an explicit kernel config (tests and benches
+    /// pin kernels here; results are bit-identical across kernels).
+    pub fn forward_with(
+        &self,
+        kcfg: KernelConfig,
+        p: &StackParams,
+        x: &Tensor,
+        threads: usize,
+    ) -> Tensor {
+        let (_, hs) = self.forward_levels(kcfg, p, x, threads);
+        self.output(kcfg, p, hs.last().expect("depth >= 1"), threads)
     }
 
     /// All level pre-activations and activations. Identity-span entries
     /// of `pre` are unused (stay zero); `h` carries the passed-through
     /// activations, so `h[depth-1]` is always what the output layer reads.
-    fn forward_levels(&self, p: &StackParams, x: &Tensor, threads: usize) -> (Vec<Tensor>, Vec<Tensor>) {
+    fn forward_levels(
+        &self,
+        kcfg: KernelConfig,
+        p: &StackParams,
+        x: &Tensor,
+        threads: usize,
+    ) -> (Vec<Tensor>, Vec<Tensor>) {
         let b = x.rows();
         assert_eq!(x.cols(), self.features, "input has {} features, stack wants {}", x.cols(), self.features);
         let mut pres = Vec::with_capacity(self.depth);
         let mut hs = Vec::with_capacity(self.depth);
 
         // level 0: plain fused dense matmul + per-span activations
-        let mut pre0 = matmul::nt(x, &p.layers[0].w, threads);
+        let mut pre0 = matmul::nt_with(kcfg, x, &p.layers[0].w, threads);
         add_bias_rows_vec(&mut pre0, p.layers[0].b.data());
         let mut h0 = Tensor::zeros(&[b, self.widths[0]]);
         {
@@ -378,39 +406,50 @@ impl LayerStack {
         pres.push(pre0);
         hs.push(h0);
 
-        // inner levels: per-model block-diagonal matmul (or identity copy)
+        // inner levels: the packed block-diagonal kernel computes every
+        // real block's pre-activations; a second batch-parallel pass
+        // applies activations and copies identity spans forward
         for l in 1..self.depth {
             let (wprev, wcur) = (self.widths[l - 1], self.widths[l]);
             let mut pre = Tensor::zeros(&[b, wcur]);
             let mut h = Tensor::zeros(&[b, wcur]);
+            let bd = BlockDiag {
+                spans_in: &self.spans[l - 1],
+                spans_out: &self.spans[l],
+                offs: &self.inner_off[l - 1],
+            };
+            kernels::block_diag_with(
+                kcfg,
+                hs[l - 1].data(),
+                p.layers[l].w.data(),
+                p.layers[l].b.data(),
+                pre.data_mut(),
+                b,
+                wprev,
+                wcur,
+                &bd,
+                threads,
+            )
+            .expect("stack geometry is construction-validated");
             {
                 let prev = hs[l - 1].data();
-                let wdat = p.layers[l].w.data();
-                let bdat = p.layers[l].b.data();
+                let pre_dat = pre.data();
                 let spans_prev = &self.spans[l - 1];
                 let spans_cur = &self.spans[l];
                 let offs = &self.inner_off[l - 1];
                 let models = &self.models;
-                let pp = SendPtr(pre.data_mut().as_mut_ptr());
                 let hp = SendPtr(h.data_mut().as_mut_ptr());
                 parallel_chunks(b, threads, 1, move |r0, r1| {
                     for bi in r0..r1 {
                         let prow = &prev[bi * wprev..(bi + 1) * wprev];
-                        let pre_row =
-                            unsafe { std::slice::from_raw_parts_mut(pp.ptr().add(bi * wcur), wcur) };
+                        let pre_row = &pre_dat[bi * wcur..(bi + 1) * wcur];
                         let hrow =
                             unsafe { std::slice::from_raw_parts_mut(hp.ptr().add(bi * wcur), wcur) };
                         for (m, model) in models.iter().enumerate() {
                             let (ps, pe) = spans_prev[m];
                             let (cs, ce) = spans_cur[m];
                             match offs[m] {
-                                Some(off) => {
-                                    let fan_in = pe - ps;
-                                    for (r, col) in (cs..ce).enumerate() {
-                                        let wrow = &wdat[off + r * fan_in..off + (r + 1) * fan_in];
-                                        pre_row[col] =
-                                            matmul::dot(&prow[ps..pe], wrow) + bdat[col];
-                                    }
+                                Some(_) => {
                                     model.act.apply_slice(&pre_row[cs..ce], &mut hrow[cs..ce]);
                                 }
                                 // identity passthrough for ragged depths
@@ -427,38 +466,33 @@ impl LayerStack {
     }
 
     /// Output projection: per-model `[O, w_last(m)]` blocks over the
-    /// final level, to logits `[B, M, O]`.
-    fn output(&self, p: &StackParams, h_last: &Tensor, threads: usize) -> Tensor {
+    /// final level, to logits `[B, M, O]` — structurally the same packed
+    /// block-diagonal product the inner layers use (output spans are the
+    /// `O`-wide slots of the flattened logits).
+    fn output(&self, kcfg: KernelConfig, p: &StackParams, h_last: &Tensor, threads: usize) -> Tensor {
         let b = h_last.rows();
         let (m_n, o) = (self.n_models(), self.out);
         let wlast = self.widths[self.depth - 1];
         let mut y = Tensor::zeros(&[b, m_n, o]);
-        {
-            let hdat = h_last.data();
-            let out_layer = p.layers.last().expect("non-empty");
-            let wdat = out_layer.w.data();
-            let bdat = out_layer.b.data();
-            let spans = &self.spans[self.depth - 1];
-            let out_off = &self.out_off;
-            let yp = SendPtr(y.data_mut().as_mut_ptr());
-            parallel_chunks(b, threads, 1, move |r0, r1| {
-                for bi in r0..r1 {
-                    let hrow = &hdat[bi * wlast..(bi + 1) * wlast];
-                    let yrow = unsafe {
-                        std::slice::from_raw_parts_mut(yp.ptr().add(bi * m_n * o), m_n * o)
-                    };
-                    for (m, &(s, e)) in spans.iter().enumerate() {
-                        let last = e - s;
-                        let off = out_off[m];
-                        for oi in 0..o {
-                            let wrow = &wdat[off + oi * last..off + (oi + 1) * last];
-                            yrow[m * o + oi] =
-                                matmul::dot(&hrow[s..e], wrow) + bdat[m * o + oi];
-                        }
-                    }
-                }
-            });
-        }
+        let out_layer = p.layers.last().expect("non-empty");
+        let bd = BlockDiag {
+            spans_in: &self.spans[self.depth - 1],
+            spans_out: &self.out_spans,
+            offs: &self.out_offs,
+        };
+        kernels::block_diag_with(
+            kcfg,
+            h_last.data(),
+            out_layer.w.data(),
+            out_layer.b.data(),
+            y.data_mut(),
+            b,
+            wlast,
+            m_n * o,
+            &bd,
+            threads,
+        )
+        .expect("stack geometry is construction-validated");
         y
     }
 
@@ -487,10 +521,28 @@ impl LayerStack {
         lr: f32,
         threads: usize,
     ) -> Vec<f32> {
+        self.step_with(kernels::active(), p, x, targets, loss, lr, threads)
+    }
+
+    /// [`LayerStack::step`] under an explicit kernel config (forward
+    /// matmuls dispatch through it; the model-parallel backward is
+    /// kernel-independent by design, so the whole step stays
+    /// bit-identical across kernels AND thread counts).
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_with(
+        &self,
+        kcfg: KernelConfig,
+        p: &mut StackParams,
+        x: &Tensor,
+        targets: &Tensor,
+        loss: Loss,
+        lr: f32,
+        threads: usize,
+    ) -> Vec<f32> {
         let b = x.rows();
         let (m_n, o) = (self.n_models(), self.out);
-        let (pres, hs) = self.forward_levels(p, x, threads);
-        let y = self.output(p, hs.last().expect("depth >= 1"), threads);
+        let (pres, hs) = self.forward_levels(kcfg, p, x, threads);
+        let y = self.output(kcfg, p, hs.last().expect("depth >= 1"), threads);
 
         // per-model losses + dlogits. One [B, O] scratch pair reused
         // across models (mlp_loss_grad overwrites every element), so the
@@ -658,7 +710,7 @@ impl LayerStack {
                 }
             });
         }
-        let dw0 = matmul::tn(&dpre0, x, threads);
+        let dw0 = matmul::tn_with(kcfg, &dpre0, x, threads);
         let db0 = col_sums(&dpre0);
 
         // SGD updates
@@ -870,11 +922,16 @@ impl DenseStack {
     /// serving engine runs exactly this, and for depth-1 models it is
     /// operation-for-operation identical to [`ModelParams::forward`].
     pub fn forward(&self, x: &Tensor, threads: usize) -> Tensor {
+        self.forward_with(kernels::active(), x, threads)
+    }
+
+    /// [`DenseStack::forward`] under an explicit kernel config.
+    pub fn forward_with(&self, kcfg: KernelConfig, x: &Tensor, threads: usize) -> Tensor {
         let n = self.layers.len();
         let mut h: Option<Tensor> = None;
         for (i, layer) in self.layers.iter().enumerate() {
             let src = h.as_ref().unwrap_or(x);
-            let mut pre = matmul::nt(src, &layer.w, threads);
+            let mut pre = matmul::nt_with(kcfg, src, &layer.w, threads);
             add_bias_rows_vec(&mut pre, layer.b.data());
             if i + 1 == n {
                 return pre;
@@ -890,12 +947,24 @@ impl DenseStack {
     /// the batch loss. This is the oracle the fused stack engine is
     /// checked against, at any depth.
     pub fn step(&mut self, x: &Tensor, targets: &Tensor, loss: Loss, lr: f32) -> f32 {
+        self.step_with(kernels::active(), x, targets, loss, lr)
+    }
+
+    /// [`DenseStack::step`] under an explicit kernel config.
+    pub fn step_with(
+        &mut self,
+        kcfg: KernelConfig,
+        x: &Tensor,
+        targets: &Tensor,
+        loss: Loss,
+        lr: f32,
+    ) -> f32 {
         let n = self.layers.len();
         let mut pres: Vec<Tensor> = Vec::with_capacity(n);
         let mut hs: Vec<Tensor> = Vec::with_capacity(n - 1);
         for (i, layer) in self.layers.iter().enumerate() {
             let src = if i == 0 { x } else { &hs[i - 1] };
-            let mut pre = matmul::nt(src, &layer.w, 1);
+            let mut pre = matmul::nt_with(kcfg, src, &layer.w, 1);
             add_bias_rows_vec(&mut pre, layer.b.data());
             if i + 1 < n {
                 let mut a = Tensor::zeros(pre.shape());
@@ -910,10 +979,10 @@ impl DenseStack {
         loss::mlp_loss_grad(loss, logits, targets, &mut d);
         for i in (0..n).rev() {
             let src = if i == 0 { x } else { &hs[i - 1] };
-            let dw = matmul::tn(&d, src, 1);
+            let dw = matmul::tn_with(kcfg, &d, src, 1);
             let db = col_sums(&d);
             if i > 0 {
-                let dh = matmul::nn(&d, &self.layers[i].w, 1);
+                let dh = matmul::nn_with(kcfg, &d, &self.layers[i].w, 1);
                 let mut dpre = Tensor::zeros(dh.shape());
                 self.act.grad_slice(pres[i - 1].data(), dh.data(), dpre.data_mut());
                 d = dpre;

@@ -201,6 +201,9 @@ impl Client {
 
 fn worker_loop(shared: &Shared, model: &ServableModel, max_batch: usize, threads: usize) {
     let features = shared.features;
+    // resolve the matmul kernel once for the server's lifetime: every
+    // coalesced forward dispatches through the same KernelConfig
+    let kcfg = crate::tensor::kernels::active();
     loop {
         let mut batch: Vec<Request> = Vec::with_capacity(max_batch);
         {
@@ -226,7 +229,7 @@ fn worker_loop(shared: &Shared, model: &ServableModel, max_batch: usize, threads
         for (i, r) in batch.iter().enumerate() {
             x.row_mut(i).copy_from_slice(&r.row);
         }
-        let logits = model.predict(&x, threads);
+        let logits = model.predict_with(kcfg, &x, threads);
 
         shared.rows.fetch_add(b, Ordering::Relaxed);
         shared.batches.fetch_add(1, Ordering::Relaxed);

@@ -88,9 +88,23 @@ impl ServableModel {
         self.params.out()
     }
 
-    /// Dense forward over a coalesced `[B, F]` batch to logits `[B, O]`.
+    /// Dense forward over a coalesced `[B, F]` batch to logits `[B, O]`
+    /// under the process-wide kernel.
     pub fn predict(&self, x: &Tensor, threads: usize) -> Tensor {
         self.params.forward(x, threads)
+    }
+
+    /// [`ServableModel::predict`] under an explicit kernel config (the
+    /// micro-batch server resolves the kernel once at startup and
+    /// serves every coalesced batch through it; golden-fixture tests
+    /// pin both kernels here to prove predictions are bit-stable).
+    pub fn predict_with(
+        &self,
+        kcfg: crate::tensor::kernels::KernelConfig,
+        x: &Tensor,
+        threads: usize,
+    ) -> Tensor {
+        self.params.forward_with(kcfg, x, threads)
     }
 }
 

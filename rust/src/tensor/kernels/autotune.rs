@@ -1,0 +1,79 @@
+//! The at-startup tile probe.
+//!
+//! Measures every [`TILE_CANDIDATES`] entry on one fused-training-shaped
+//! `nt` product (a `[B, F] × [F, H]`-class shape: modest rows, long
+//! fused output axis) and returns the fastest. Cost is a handful of
+//! milliseconds, paid once per process on first kernel dispatch when
+//! `PMLP_KERNEL` is unset/`auto`.
+//!
+//! The probe is a pure performance decision: the exactness contract in
+//! `mod.rs` guarantees every tile size produces identical bits, so a
+//! noisy measurement can pick a slower tile but never a wrong one.
+
+use super::{blocked, Tile, TILE_CANDIDATES};
+use std::time::Instant;
+
+/// Probe shape: enough work to rank tiles, small enough to be free.
+const PM: usize = 64;
+const PK: usize = 48;
+const PN: usize = 512;
+
+/// Deterministic non-constant fill (no RNG dependency: the probe must
+/// not perturb any seeded stream).
+fn pattern(len: usize, salt: u32) -> Vec<f32> {
+    (0..len)
+        .map(|i| {
+            let h = (i as u32).wrapping_add(salt).wrapping_mul(2_654_435_761);
+            (h % 2048) as f32 / 1024.0 - 1.0
+        })
+        .collect()
+}
+
+pub(super) fn pick_tile() -> Tile {
+    let a = pattern(PM * PK, 1);
+    let b = pattern(PN * PK, 2);
+    let mut c = vec![0.0f32; PM * PN];
+    let mut best = TILE_CANDIDATES[0];
+    let mut best_s = f64::INFINITY;
+    for &tile in &TILE_CANDIDATES {
+        // one warmup, then best-of-2 (min is the right statistic for a
+        // noisy single-shot probe)
+        blocked::nt(&a, &b, &mut c, PM, PK, PN, tile, 1);
+        let mut t_min = f64::INFINITY;
+        for _ in 0..2 {
+            let t = Instant::now();
+            blocked::nt(&a, &b, &mut c, PM, PK, PN, tile, 1);
+            t_min = t_min.min(t.elapsed().as_secs_f64());
+        }
+        // black-box the output so the multiply cannot be optimized away
+        std::hint::black_box(c[0]);
+        if t_min < best_s {
+            best_s = t_min;
+            best = tile;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_is_fast_and_returns_a_candidate() {
+        let t = Instant::now();
+        let tile = pick_tile();
+        assert!(TILE_CANDIDATES.contains(&tile));
+        // generous bound: the probe must stay a startup rounding error
+        assert!(t.elapsed().as_secs_f64() < 2.0, "probe took {:?}", t.elapsed());
+    }
+
+    #[test]
+    fn pattern_is_deterministic_and_bounded() {
+        let a = pattern(64, 7);
+        let b = pattern(64, 7);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| (-1.0..=1.0).contains(v)));
+        assert!(a.iter().any(|&v| v != a[0]), "pattern must not be constant");
+    }
+}

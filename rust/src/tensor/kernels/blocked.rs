@@ -1,0 +1,483 @@
+//! The cache-blocked, register-tiled kernels — the hot path.
+//!
+//! Structure (per orientation):
+//!
+//! * threads partition **output rows** (`parallel_chunks`), so no
+//!   element's reduction ever crosses a thread;
+//! * within a thread: `NC`-wide output-column panels, `KC`-deep
+//!   reduction slices (the cache blocking — the B panel of one
+//!   `(NC, KC)` block stays resident while every row tile streams over
+//!   it);
+//! * within a block: a `MR×NR` (4×8) register micro-kernel with a
+//!   4-way unrolled k-loop — 32 independent accumulator chains give the
+//!   FP pipes ILP without reassociating any single element's sum.
+//!
+//! Exactness (the contract in `mod.rs`): each output element keeps ONE
+//! accumulator. Cache blocking splits `k` into `KC` slices, but the
+//! running sum parks in `C` between slices and slices are visited in
+//! ascending order, so the element's addition sequence is identical to
+//! the naive oracle's — bit-for-bit, for every tile size and thread
+//! count. The unrolled k-loop performs the same additions in the same
+//! order (unrolling a single-accumulator chain does not reorder it).
+
+use super::{BlockDiag, Tile, MR, NR};
+use crate::util::threadpool::{parallel_chunks, SendPtr};
+
+/// `acc[ii][jj] += Σ_{kk in k0..k1} a[a0 + ii·astr + kk] · b[b0 + jj·bstr + kk]`
+/// — the dot-rows micro-kernel shared by `nt` (both operands row-major
+/// along `k`) and the packed block-diagonal product.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn micro_dotrows(
+    a: &[f32],
+    a0: usize,
+    astr: usize,
+    b: &[f32],
+    b0: usize,
+    bstr: usize,
+    acc: &mut [[f32; NR]; MR],
+    k0: usize,
+    k1: usize,
+) {
+    debug_assert!(a0 + (MR - 1) * astr + k1 <= a.len() + usize::from(k1 == 0));
+    debug_assert!(b0 + (NR - 1) * bstr + k1 <= b.len() + usize::from(k1 == 0));
+    macro_rules! step {
+        ($kk:expr) => {{
+            let kk = $kk;
+            let mut bv = [0.0f32; NR];
+            for (jj, v) in bv.iter_mut().enumerate() {
+                // SAFETY: the drivers only call with full MR×NR tiles and
+                // k1 within bounds (debug-asserted above)
+                *v = unsafe { *b.get_unchecked(b0 + jj * bstr + kk) };
+            }
+            for (ii, accrow) in acc.iter_mut().enumerate() {
+                let av = unsafe { *a.get_unchecked(a0 + ii * astr + kk) };
+                for (cell, &bvj) in accrow.iter_mut().zip(&bv) {
+                    *cell += av * bvj;
+                }
+            }
+        }};
+    }
+    let mut kk = k0;
+    while kk + 4 <= k1 {
+        step!(kk);
+        step!(kk + 1);
+        step!(kk + 2);
+        step!(kk + 3);
+        kk += 4;
+    }
+    while kk < k1 {
+        step!(kk);
+        kk += 1;
+    }
+}
+
+/// `acc[ii][jj] += Σ a[(i+ii)·k + kk] · b[kk·n + j+jj]` — the NN
+/// micro-kernel (B is `k`-major; its `NR` lane is contiguous).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn micro_nn(
+    a: &[f32],
+    b: &[f32],
+    acc: &mut [[f32; NR]; MR],
+    i: usize,
+    j: usize,
+    k: usize,
+    n: usize,
+    k0: usize,
+    k1: usize,
+) {
+    macro_rules! step {
+        ($kk:expr) => {{
+            let kk = $kk;
+            let mut bv = [0.0f32; NR];
+            bv.copy_from_slice(&b[kk * n + j..kk * n + j + NR]);
+            for (ii, accrow) in acc.iter_mut().enumerate() {
+                // SAFETY: drivers guarantee i+MR <= m and kk < k
+                let av = unsafe { *a.get_unchecked((i + ii) * k + kk) };
+                for (cell, &bvj) in accrow.iter_mut().zip(&bv) {
+                    *cell += av * bvj;
+                }
+            }
+        }};
+    }
+    let mut kk = k0;
+    while kk + 4 <= k1 {
+        step!(kk);
+        step!(kk + 1);
+        step!(kk + 2);
+        step!(kk + 3);
+        kk += 4;
+    }
+    while kk < k1 {
+        step!(kk);
+        kk += 1;
+    }
+}
+
+/// `acc[ii][jj] += Σ a[kk·m + i+ii] · b[kk·n + j+jj]` — the TN
+/// micro-kernel (both operands `k`-major; a rank-1 update per `kk`).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn micro_tn(
+    a: &[f32],
+    b: &[f32],
+    acc: &mut [[f32; NR]; MR],
+    i: usize,
+    j: usize,
+    m: usize,
+    n: usize,
+    k0: usize,
+    k1: usize,
+) {
+    macro_rules! step {
+        ($kk:expr) => {{
+            let kk = $kk;
+            let mut bv = [0.0f32; NR];
+            bv.copy_from_slice(&b[kk * n + j..kk * n + j + NR]);
+            let arow = &a[kk * m + i..kk * m + i + MR];
+            for (accrow, &av) in acc.iter_mut().zip(arow) {
+                for (cell, &bvj) in accrow.iter_mut().zip(&bv) {
+                    *cell += av * bvj;
+                }
+            }
+        }};
+    }
+    let mut kk = k0;
+    while kk + 4 <= k1 {
+        step!(kk);
+        step!(kk + 1);
+        step!(kk + 2);
+        step!(kk + 3);
+        kk += 4;
+    }
+    while kk < k1 {
+        step!(kk);
+        kk += 1;
+    }
+}
+
+/// Load an `MR×NR` accumulator tile from a C row slab (rows relative to
+/// the slab origin).
+#[inline(always)]
+fn load_acc(crows: &[f32], row0: usize, j: usize, n: usize) -> [[f32; NR]; MR] {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (ii, accrow) in acc.iter_mut().enumerate() {
+        let base = (row0 + ii) * n + j;
+        accrow.copy_from_slice(&crows[base..base + NR]);
+    }
+    acc
+}
+
+/// Store an accumulator tile back into the slab.
+#[inline(always)]
+fn store_acc(crows: &mut [f32], row0: usize, j: usize, n: usize, acc: &[[f32; NR]; MR]) {
+    for (ii, accrow) in acc.iter().enumerate() {
+        let base = (row0 + ii) * n + j;
+        crows[base..base + NR].copy_from_slice(accrow);
+    }
+}
+
+/// `C[m,n] = A[m,k] · B[n,k]ᵀ`.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn nt(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    tile: Tile,
+    threads: usize,
+) {
+    let cp = SendPtr(c.as_mut_ptr());
+    let nc = tile.nc.max(NR);
+    let kc = tile.kc.max(1);
+    parallel_chunks(m, threads, MR, move |r0, r1| {
+        // SAFETY: rows [r0, r1) are owned exclusively by this chunk
+        let crows =
+            unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(r0 * n), (r1 - r0) * n) };
+        crows.iter_mut().for_each(|x| *x = 0.0);
+        let mut jc = 0;
+        while jc < n {
+            let jend = (jc + nc).min(n);
+            let mut ks = 0;
+            while ks < k.max(1) {
+                let kend = (ks + kc).min(k);
+                let mut i = r0;
+                while i + MR <= r1 {
+                    let mut j = jc;
+                    while j + NR <= jend {
+                        let mut acc = load_acc(crows, i - r0, j, n);
+                        micro_dotrows(a, i * k, k, b, j * k, k, &mut acc, ks, kend);
+                        store_acc(crows, i - r0, j, n, &acc);
+                        j += NR;
+                    }
+                    edge_nt(a, b, crows, r0, i, i + MR, j, jend, ks, kend, k, n);
+                    i += MR;
+                }
+                edge_nt(a, b, crows, r0, i, r1, jc, jend, ks, kend, k, n);
+                ks = kend.max(ks + 1);
+            }
+            jc = jend;
+        }
+    });
+}
+
+/// Scalar edge path for NT: accumulate `kk in k0..k1` onto the partial
+/// sums already parked in the slab (same order as the micro-kernel).
+#[allow(clippy::too_many_arguments)]
+fn edge_nt(
+    a: &[f32],
+    b: &[f32],
+    crows: &mut [f32],
+    r0: usize,
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+    k0: usize,
+    k1: usize,
+    k: usize,
+    n: usize,
+) {
+    for i in i0..i1 {
+        for j in j0..j1 {
+            let mut acc = crows[(i - r0) * n + j];
+            for kk in k0..k1 {
+                acc += a[i * k + kk] * b[j * k + kk];
+            }
+            crows[(i - r0) * n + j] = acc;
+        }
+    }
+}
+
+/// `C[m,n] = A[m,k] · B[k,n]`.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn nn(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    tile: Tile,
+    threads: usize,
+) {
+    let cp = SendPtr(c.as_mut_ptr());
+    let nc = tile.nc.max(NR);
+    let kc = tile.kc.max(1);
+    parallel_chunks(m, threads, MR, move |r0, r1| {
+        let crows =
+            unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(r0 * n), (r1 - r0) * n) };
+        crows.iter_mut().for_each(|x| *x = 0.0);
+        let mut jc = 0;
+        while jc < n {
+            let jend = (jc + nc).min(n);
+            let mut ks = 0;
+            while ks < k.max(1) {
+                let kend = (ks + kc).min(k);
+                let mut i = r0;
+                while i + MR <= r1 {
+                    let mut j = jc;
+                    while j + NR <= jend {
+                        let mut acc = load_acc(crows, i - r0, j, n);
+                        micro_nn(a, b, &mut acc, i, j, k, n, ks, kend);
+                        store_acc(crows, i - r0, j, n, &acc);
+                        j += NR;
+                    }
+                    edge_nn(a, b, crows, r0, i, i + MR, j, jend, ks, kend, k, n);
+                    i += MR;
+                }
+                edge_nn(a, b, crows, r0, i, r1, jc, jend, ks, kend, k, n);
+                ks = kend.max(ks + 1);
+            }
+            jc = jend;
+        }
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn edge_nn(
+    a: &[f32],
+    b: &[f32],
+    crows: &mut [f32],
+    r0: usize,
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+    k0: usize,
+    k1: usize,
+    k: usize,
+    n: usize,
+) {
+    for i in i0..i1 {
+        for j in j0..j1 {
+            let mut acc = crows[(i - r0) * n + j];
+            for kk in k0..k1 {
+                acc += a[i * k + kk] * b[kk * n + j];
+            }
+            crows[(i - r0) * n + j] = acc;
+        }
+    }
+}
+
+/// `C[m,n] = A[k,m]ᵀ · B[k,n]`.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn tn(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    tile: Tile,
+    threads: usize,
+) {
+    let cp = SendPtr(c.as_mut_ptr());
+    let nc = tile.nc.max(NR);
+    let kc = tile.kc.max(1);
+    parallel_chunks(m, threads, MR, move |r0, r1| {
+        let crows =
+            unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(r0 * n), (r1 - r0) * n) };
+        crows.iter_mut().for_each(|x| *x = 0.0);
+        let mut jc = 0;
+        while jc < n {
+            let jend = (jc + nc).min(n);
+            let mut ks = 0;
+            while ks < k.max(1) {
+                let kend = (ks + kc).min(k);
+                let mut i = r0;
+                while i + MR <= r1 {
+                    let mut j = jc;
+                    while j + NR <= jend {
+                        let mut acc = load_acc(crows, i - r0, j, n);
+                        micro_tn(a, b, &mut acc, i, j, m, n, ks, kend);
+                        store_acc(crows, i - r0, j, n, &acc);
+                        j += NR;
+                    }
+                    edge_tn(a, b, crows, r0, i, i + MR, j, jend, ks, kend, m, n);
+                    i += MR;
+                }
+                edge_tn(a, b, crows, r0, i, r1, jc, jend, ks, kend, m, n);
+                ks = kend.max(ks + 1);
+            }
+            jc = jend;
+        }
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn edge_tn(
+    a: &[f32],
+    b: &[f32],
+    crows: &mut [f32],
+    r0: usize,
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+    k0: usize,
+    k1: usize,
+    m: usize,
+    n: usize,
+) {
+    for i in i0..i1 {
+        for j in j0..j1 {
+            let mut acc = crows[(i - r0) * n + j];
+            for kk in k0..k1 {
+                acc += a[kk * m + i] * b[kk * n + j];
+            }
+            crows[(i - r0) * n + j] = acc;
+        }
+    }
+}
+
+/// Packed block-diagonal product (see [`BlockDiag`]): per model block an
+/// NT-shaped product reusing the dot-rows micro-kernel, threaded over
+/// batch rows. Blocks are small (one model's fan-in/out), so there is no
+/// k-blocking — a single ascending pass per element, bias added once at
+/// the end, exactly like the naive oracle.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn block_diag(
+    input: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    rows: usize,
+    w_in: usize,
+    w_out: usize,
+    bd: &BlockDiag<'_>,
+    threads: usize,
+) {
+    let op = SendPtr(out.as_mut_ptr());
+    parallel_chunks(rows, threads, MR, move |r0, r1| {
+        // SAFETY: batch rows [r0, r1) are owned by this chunk
+        let orows =
+            unsafe { std::slice::from_raw_parts_mut(op.ptr().add(r0 * w_out), (r1 - r0) * w_out) };
+        for (m, &(is, ie)) in bd.spans_in.iter().enumerate() {
+            let Some(off) = bd.offs[m] else { continue };
+            let (os, oe) = bd.spans_out[m];
+            let fan_in = ie - is;
+            let mut bi = r0;
+            while bi + MR <= r1 {
+                let mut col = os;
+                while col + NR <= oe {
+                    let mut acc = [[0.0f32; NR]; MR];
+                    micro_dotrows(
+                        input,
+                        bi * w_in + is,
+                        w_in,
+                        w,
+                        off + (col - os) * fan_in,
+                        fan_in,
+                        &mut acc,
+                        0,
+                        fan_in,
+                    );
+                    for (ii, accrow) in acc.iter().enumerate() {
+                        let base = (bi - r0 + ii) * w_out + col;
+                        for (jj, &cell) in accrow.iter().enumerate() {
+                            orows[base + jj] = cell + bias[col + jj];
+                        }
+                    }
+                    col += NR;
+                }
+                edge_block(input, w, bias, orows, r0, bi, bi + MR, col, oe, is, ie, off, os, w_in, w_out);
+                bi += MR;
+            }
+            edge_block(input, w, bias, orows, r0, bi, r1, os, oe, is, ie, off, os, w_in, w_out);
+        }
+    });
+}
+
+/// Scalar edge path for the block-diagonal kernel (rows `i0..i1`, output
+/// columns `j0..j1` of one model block).
+#[allow(clippy::too_many_arguments)]
+fn edge_block(
+    input: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    orows: &mut [f32],
+    r0: usize,
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+    is: usize,
+    ie: usize,
+    off: usize,
+    os: usize,
+    w_in: usize,
+    w_out: usize,
+) {
+    let fan_in = ie - is;
+    for bi in i0..i1 {
+        let irow = &input[bi * w_in + is..bi * w_in + ie];
+        for col in j0..j1 {
+            let wrow = &w[off + (col - os) * fan_in..off + (col - os + 1) * fan_in];
+            orows[(bi - r0) * w_out + col] = super::dot_in_order(irow, wrow) + bias[col];
+        }
+    }
+}

@@ -1,0 +1,478 @@
+//! The matmul kernel subsystem: one dispatch point for every matrix
+//! product the crate computes.
+//!
+//! Two kernels live behind the [`Kernel`] enum:
+//!
+//! * [`Kernel::Naive`] — the reference implementation: a row-parallel
+//!   triple loop, one accumulator per output element, `k` ascending.
+//!   Always available; every other kernel is tested against it.
+//! * [`Kernel::Blocked`] — cache-blocked (`NC`/`KC` tiles) and
+//!   register-tiled (a 4×8 micro-kernel with an unrolled k-loop): the
+//!   hot path. Ericson & Mbuvha (1701.05130) show memory-bound kernels
+//!   dominate network-parallel training cost; this is where that cost
+//!   is paid down.
+//!
+//! **Exactness contract.** Every kernel computes every output element as
+//! a *single-accumulator sum over `k` in ascending order* (bias, when a
+//! kernel takes one, is added once after the sum). No reassociation is
+//! permitted: splitting `k` into cache blocks keeps the running sum in
+//! `C`, so the addition order per element never changes. Consequences,
+//! which `rust/tests/kernels.rs` asserts at the bit level:
+//!
+//! * `Blocked` output is **bit-identical** to `Naive` output for every
+//!   shape (the "≤ 1 ulp where reassociation is allowed" escape hatch is
+//!   deliberately unused — nothing reassociates);
+//! * results are independent of the thread count (threads partition
+//!   output rows; no element's reduction crosses a thread);
+//! * results are independent of the tile sizes, so the autotune probe is
+//!   a pure performance decision and can never change training results.
+//!
+//! **Runtime selection.** The process-wide kernel comes from the
+//! `PMLP_KERNEL` env var, resolved once on first use:
+//!
+//! * unset or `auto` — `Blocked`, tile sizes picked by an at-startup
+//!   probe over [`TILE_CANDIDATES`] (see [`autotune`]);
+//! * `blocked` — `Blocked` with [`Tile::DEFAULT`] (no probe; fully
+//!   deterministic startup);
+//! * `naive` — the reference kernel (the oracle, also the fallback for
+//!   debugging a suspected kernel bug);
+//! * anything else — a warning, then the `auto` behavior (mirrors how
+//!   `PMLP_THREADS` treats garbage).
+//!
+//! Engines capture the active [`KernelConfig`] at construction and also
+//! expose `set_kernel` / `*_with` variants so tests and benches can pin
+//! a kernel explicitly without touching global state.
+//!
+//! **Shape checking.** The dispatch functions return a typed
+//! [`ShapeError`] on dimension mismatch (it implements
+//! `std::error::Error`, so `?` converts it into `anyhow::Error`). The
+//! panicking wrappers in [`crate::tensor::matmul`] funnel through the
+//! same checks, so every mismatch produces the same op-tagged message
+//! whether it surfaces as an `Err` or a panic.
+
+mod autotune;
+mod blocked;
+mod naive;
+
+use std::fmt;
+use std::sync::OnceLock;
+
+/// Micro-kernel rows (output rows carried in registers at once).
+pub const MR: usize = 4;
+/// Micro-kernel columns (output columns carried in registers at once).
+pub const NR: usize = 8;
+
+/// Which matmul implementation executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Reference row-parallel triple loop — the differential oracle.
+    Naive,
+    /// Cache-blocked, register-tiled (4×8 micro-kernel) hot path.
+    Blocked,
+}
+
+impl Kernel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Naive => "naive",
+            Kernel::Blocked => "blocked",
+        }
+    }
+}
+
+/// Cache-blocking tile sizes for the blocked kernel. `nc` bounds the
+/// output-column panel, `kc` the reduction slice kept hot per pass.
+/// Tiles are a pure performance knob: the exactness contract guarantees
+/// identical bits for every choice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tile {
+    pub nc: usize,
+    pub kc: usize,
+}
+
+impl Tile {
+    /// Used when `PMLP_KERNEL=blocked` skips the probe.
+    pub const DEFAULT: Tile = Tile { nc: 256, kc: 64 };
+}
+
+/// The fixed candidate set the autotune probe measures. Small by
+/// design: the probe runs at startup and must cost milliseconds.
+pub const TILE_CANDIDATES: [Tile; 4] = [
+    Tile { nc: 64, kc: 64 },
+    Tile { nc: 128, kc: 128 },
+    Tile { nc: 256, kc: 64 },
+    Tile { nc: 512, kc: 256 },
+];
+
+/// A resolved kernel choice: which implementation plus its tile sizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelConfig {
+    pub kernel: Kernel,
+    pub tile: Tile,
+}
+
+impl KernelConfig {
+    /// The reference kernel (tile sizes are irrelevant but kept valid).
+    pub fn naive() -> KernelConfig {
+        KernelConfig { kernel: Kernel::Naive, tile: Tile::DEFAULT }
+    }
+
+    /// The blocked kernel with the default (un-probed) tile sizes.
+    pub fn blocked() -> KernelConfig {
+        KernelConfig { kernel: Kernel::Blocked, tile: Tile::DEFAULT }
+    }
+
+    /// This config with the kernel swapped (tile kept).
+    pub fn with_kernel(self, kernel: Kernel) -> KernelConfig {
+        KernelConfig { kernel, ..self }
+    }
+
+    /// Human-readable summary for bench/CLI logs.
+    pub fn describe(&self) -> String {
+        match self.kernel {
+            Kernel::Naive => "naive (reference oracle)".to_string(),
+            Kernel::Blocked => {
+                format!("blocked (nc={}, kc={}, {MR}x{NR} micro-kernel)", self.tile.nc, self.tile.kc)
+            }
+        }
+    }
+}
+
+/// What `PMLP_KERNEL` asked for, before tile resolution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelChoice {
+    Naive,
+    Blocked,
+    /// Blocked with autotuned tiles (the default).
+    Auto,
+}
+
+/// Parse a `PMLP_KERNEL` value. Split out (like
+/// `threadpool::parse_thread_override`) so tests can cover it without
+/// racing on the process environment.
+pub fn parse_kernel_env(v: &str) -> Result<KernelChoice, String> {
+    match v.trim().to_ascii_lowercase().as_str() {
+        "naive" => Ok(KernelChoice::Naive),
+        "blocked" => Ok(KernelChoice::Blocked),
+        "auto" | "" => Ok(KernelChoice::Auto),
+        other => Err(format!(
+            "unknown kernel {other:?} (expected naive, blocked or auto)"
+        )),
+    }
+}
+
+static ACTIVE: OnceLock<KernelConfig> = OnceLock::new();
+
+/// The process-wide kernel, resolved once from `PMLP_KERNEL` (plus the
+/// autotune probe when tiles are not pinned). Engines capture this at
+/// construction; tests pin kernels explicitly via the `*_with` APIs
+/// instead of mutating the environment.
+pub fn active() -> KernelConfig {
+    *ACTIVE.get_or_init(|| {
+        let choice = match std::env::var("PMLP_KERNEL") {
+            Err(_) => KernelChoice::Auto,
+            Ok(v) => match parse_kernel_env(&v) {
+                Ok(c) => c,
+                Err(msg) => {
+                    eprintln!("warning: PMLP_KERNEL: {msg}; using blocked (autotuned)");
+                    KernelChoice::Auto
+                }
+            },
+        };
+        match choice {
+            KernelChoice::Naive => KernelConfig::naive(),
+            KernelChoice::Blocked => KernelConfig::blocked(),
+            KernelChoice::Auto => {
+                KernelConfig { kernel: Kernel::Blocked, tile: autotune::pick_tile() }
+            }
+        }
+    })
+}
+
+/// Run the autotune probe directly (also what `active()` does for the
+/// `auto` choice). Always returns a member of [`TILE_CANDIDATES`].
+pub fn autotune_tile() -> Tile {
+    autotune::pick_tile()
+}
+
+// ---------------------------------------------------------------------------
+// Typed shape errors
+// ---------------------------------------------------------------------------
+
+/// A dimension mismatch detected by a kernel dispatch function.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShapeError {
+    op: &'static str,
+    detail: String,
+}
+
+impl ShapeError {
+    fn new(op: &'static str, detail: String) -> ShapeError {
+        ShapeError { op, detail }
+    }
+
+    /// Which operation rejected the shapes (`"matmul_nt"`, ...).
+    pub fn op(&self) -> &'static str {
+        self.op
+    }
+}
+
+impl fmt::Display for ShapeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: shape mismatch: {}", self.op, self.detail)
+    }
+}
+
+impl std::error::Error for ShapeError {}
+
+fn check_len(
+    op: &'static str,
+    what: &str,
+    got: usize,
+    rows: usize,
+    cols: usize,
+) -> Result<(), ShapeError> {
+    // checked: a wrapped multiply would let absurd dims through shape
+    // validation and hand the unsafe kernels out-of-bounds extents
+    let want = rows.checked_mul(cols).ok_or_else(|| {
+        ShapeError::new(op, format!("{what} extent {rows}x{cols} overflows usize"))
+    })?;
+    if got != want {
+        return Err(ShapeError::new(
+            op,
+            format!("{what} has {got} elements, wanted {rows}x{cols} = {want}"),
+        ));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch: the three dense orientations
+// ---------------------------------------------------------------------------
+
+/// `C[m,n] = A[m,k] · B[n,k]ᵀ` under `cfg`, threaded over rows of C.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nt_with(
+    cfg: KernelConfig,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Result<(), ShapeError> {
+    check_len("matmul_nt", "A", a.len(), m, k)?;
+    check_len("matmul_nt", "B", b.len(), n, k)?;
+    check_len("matmul_nt", "C", c.len(), m, n)?;
+    match cfg.kernel {
+        Kernel::Naive => naive::nt(a, b, c, m, k, n, threads),
+        Kernel::Blocked => blocked::nt(a, b, c, m, k, n, cfg.tile, threads),
+    }
+    Ok(())
+}
+
+/// `C[m,n] = A[m,k] · B[k,n]` under `cfg`, threaded over rows of C.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nn_with(
+    cfg: KernelConfig,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Result<(), ShapeError> {
+    check_len("matmul_nn", "A", a.len(), m, k)?;
+    check_len("matmul_nn", "B", b.len(), k, n)?;
+    check_len("matmul_nn", "C", c.len(), m, n)?;
+    match cfg.kernel {
+        Kernel::Naive => naive::nn(a, b, c, m, k, n, threads),
+        Kernel::Blocked => blocked::nn(a, b, c, m, k, n, cfg.tile, threads),
+    }
+    Ok(())
+}
+
+/// `C[m,n] = A[k,m]ᵀ · B[k,n]` under `cfg`, threaded over rows of C.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_tn_with(
+    cfg: KernelConfig,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Result<(), ShapeError> {
+    check_len("matmul_tn", "A", a.len(), k, m)?;
+    check_len("matmul_tn", "B", b.len(), k, n)?;
+    check_len("matmul_tn", "C", c.len(), m, n)?;
+    match cfg.kernel {
+        Kernel::Naive => naive::tn(a, b, c, m, k, n, threads),
+        Kernel::Blocked => blocked::tn(a, b, c, m, k, n, cfg.tile, threads),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch: the packed block-diagonal kernel (layer-stack inner layers)
+// ---------------------------------------------------------------------------
+
+/// Geometry of one packed block-diagonal product: per-model spans in the
+/// input and output fused axes plus per-model offsets into the packed
+/// weight buffer (`None` = identity passthrough; the kernel leaves that
+/// output span untouched and the caller copies activations forward).
+#[derive(Clone, Copy, Debug)]
+pub struct BlockDiag<'a> {
+    /// `(start, end)` of each model in the input fused axis.
+    pub spans_in: &'a [(usize, usize)],
+    /// `(start, end)` of each model in the output fused axis.
+    pub spans_out: &'a [(usize, usize)],
+    /// Offset of each model's `[out_span, in_span]` row-major block in
+    /// the packed weight buffer; `None` skips the model.
+    pub offs: &'a [Option<usize>],
+}
+
+/// Packed block-diagonal product over a batch:
+/// `out[r, os..oe] = in[r, is..ie] · W_mᵀ + bias[os..oe]` for every model
+/// `m` with a real block, threaded over batch rows. The per-element
+/// reduction follows the subsystem-wide exactness contract (`k`
+/// ascending, bias added once after the sum), so `Naive` and `Blocked`
+/// agree bit-for-bit at every thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn block_diag_with(
+    cfg: KernelConfig,
+    input: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    rows: usize,
+    w_in: usize,
+    w_out: usize,
+    bd: &BlockDiag<'_>,
+    threads: usize,
+) -> Result<(), ShapeError> {
+    let op = "block_diag";
+    check_len(op, "input", input.len(), rows, w_in)?;
+    check_len(op, "out", out.len(), rows, w_out)?;
+    if bias.len() != w_out {
+        return Err(ShapeError::new(
+            op,
+            format!("bias has {} elements, wanted the fused output width {w_out}", bias.len()),
+        ));
+    }
+    if bd.spans_in.len() != bd.spans_out.len() || bd.spans_in.len() != bd.offs.len() {
+        return Err(ShapeError::new(
+            op,
+            format!(
+                "span tables disagree ({} in, {} out, {} offsets)",
+                bd.spans_in.len(),
+                bd.spans_out.len(),
+                bd.offs.len()
+            ),
+        ));
+    }
+    for (m, ((&(is, ie), &(os, oe)), &off)) in
+        bd.spans_in.iter().zip(bd.spans_out).zip(bd.offs).enumerate()
+    {
+        if is > ie || ie > w_in || os > oe || oe > w_out {
+            return Err(ShapeError::new(
+                op,
+                format!("model {m}: span ({is},{ie})->({os},{oe}) outside [{w_in}]->[{w_out}]"),
+            ));
+        }
+        if let Some(off) = off {
+            let need = (oe - os)
+                .checked_mul(ie - is)
+                .and_then(|block| block.checked_add(off))
+                .ok_or_else(|| {
+                    ShapeError::new(op, format!("model {m}: packed block extent overflows usize"))
+                })?;
+            if need > w.len() {
+                return Err(ShapeError::new(
+                    op,
+                    format!(
+                        "model {m}: block at offset {off} needs {need} packed floats, buffer has {}",
+                        w.len()
+                    ),
+                ));
+            }
+        }
+    }
+    match cfg.kernel {
+        Kernel::Naive => naive::block_diag(input, w, bias, out, rows, w_in, w_out, bd, threads),
+        Kernel::Blocked => blocked::block_diag(input, w, bias, out, rows, w_in, w_out, bd, threads),
+    }
+    Ok(())
+}
+
+/// Single-accumulator dot product, `k` ascending — the reduction every
+/// kernel in this module is defined in terms of.
+#[inline]
+pub fn dot_in_order(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_values_parse() {
+        assert_eq!(parse_kernel_env("naive"), Ok(KernelChoice::Naive));
+        assert_eq!(parse_kernel_env(" Blocked "), Ok(KernelChoice::Blocked));
+        assert_eq!(parse_kernel_env("auto"), Ok(KernelChoice::Auto));
+        assert_eq!(parse_kernel_env(""), Ok(KernelChoice::Auto));
+        let err = parse_kernel_env("fast").unwrap_err();
+        assert!(err.contains("unknown kernel"), "{err}");
+    }
+
+    #[test]
+    fn active_resolves_once_and_describes() {
+        let a = active();
+        let b = active();
+        assert_eq!(a, b, "active kernel must be stable for the process");
+        assert!(!a.describe().is_empty());
+        assert!(!KernelConfig::naive().describe().is_empty());
+        assert!(KernelConfig::blocked().describe().contains("blocked"));
+    }
+
+    #[test]
+    fn autotune_picks_from_the_candidate_set() {
+        let tile = autotune_tile();
+        assert!(
+            TILE_CANDIDATES.contains(&tile),
+            "autotune returned {tile:?}, not a candidate"
+        );
+    }
+
+    #[test]
+    fn shape_error_is_a_std_error() {
+        let e = ShapeError::new("matmul_nt", "A has 3 elements, wanted 2x2 = 4".into());
+        assert_eq!(e.op(), "matmul_nt");
+        let msg = e.to_string();
+        assert!(msg.contains("matmul_nt") && msg.contains("shape mismatch"), "{msg}");
+        // `?` must convert into anyhow::Error
+        fn through_anyhow(e: ShapeError) -> anyhow::Result<()> {
+            Err(e)?
+        }
+        assert!(through_anyhow(e).is_err());
+    }
+
+    #[test]
+    fn dot_in_order_matches_reference() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [0.5f32, -1.0, 2.0, 0.25];
+        // ((((0 + 0.5) - 2) + 6) + 1) — every step exact in f32
+        let want = 5.5f32;
+        assert_eq!(dot_in_order(&a, &b).to_bits(), want.to_bits());
+        assert_eq!(dot_in_order(&[], &[]), 0.0);
+    }
+}

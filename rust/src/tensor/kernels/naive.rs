@@ -1,0 +1,102 @@
+//! The reference kernels — the differential oracle.
+//!
+//! Row-parallel triple loops, written for auditability rather than
+//! speed: every output element is a single accumulator summed over `k`
+//! in ascending order (the subsystem's exactness contract, stated in
+//! `mod.rs`), with the bias — where one exists — added once after the
+//! sum. The blocked kernels must reproduce these results bit-for-bit;
+//! `rust/tests/kernels.rs` enforces that over random shapes and thread
+//! counts.
+//!
+//! Threading only ever partitions output rows, so no element's
+//! reduction crosses a thread and results are identical at every thread
+//! count.
+
+use super::{dot_in_order, BlockDiag};
+use crate::util::threadpool::{parallel_chunks, SendPtr};
+
+/// `C[m,n] = A[m,k] · B[n,k]ᵀ`.
+pub(super) fn nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, threads: usize) {
+    let cp = SendPtr(c.as_mut_ptr());
+    parallel_chunks(m, threads, 1, move |r0, r1| {
+        for i in r0..r1 {
+            // SAFETY: rows [r0, r1) are owned exclusively by this chunk
+            let crow = unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(i * n), n) };
+            let arow = &a[i * k..(i + 1) * k];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                *cv = dot_in_order(arow, &b[j * k..(j + 1) * k]);
+            }
+        }
+    });
+}
+
+/// `C[m,n] = A[m,k] · B[k,n]`. The `k`-outer/axpy form keeps B access
+/// contiguous while still visiting each element's `k` terms in ascending
+/// order (each `kk` touches every accumulator exactly once).
+pub(super) fn nn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, threads: usize) {
+    let cp = SendPtr(c.as_mut_ptr());
+    parallel_chunks(m, threads, 1, move |r0, r1| {
+        for i in r0..r1 {
+            let crow = unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(i * n), n) };
+            crow.iter_mut().for_each(|x| *x = 0.0);
+            for (kk, &av) in a[i * k..(i + 1) * k].iter().enumerate() {
+                // no zero-skip: `0 * b` must still propagate (NaN/∞ in B),
+                // or the oracle and the blocked kernel could disagree
+                for (cv, &bv) in crow.iter_mut().zip(&b[kk * n..(kk + 1) * n]) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    });
+}
+
+/// `C[m,n] = A[k,m]ᵀ · B[k,n]`, threaded over rows of C (columns of A),
+/// `k` ascending per element.
+pub(super) fn tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, threads: usize) {
+    let cp = SendPtr(c.as_mut_ptr());
+    parallel_chunks(m, threads, 1, move |m0, m1| {
+        for i in m0..m1 {
+            let crow = unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(i * n), n) };
+            crow.iter_mut().for_each(|x| *x = 0.0);
+            for kk in 0..k {
+                let av = a[kk * m + i];
+                for (cv, &bv) in crow.iter_mut().zip(&b[kk * n..(kk + 1) * n]) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    });
+}
+
+/// Packed block-diagonal product (see [`BlockDiag`]), threaded over
+/// batch rows: per model block, a plain NT triple loop plus the bias.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn block_diag(
+    input: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    rows: usize,
+    w_in: usize,
+    w_out: usize,
+    bd: &BlockDiag<'_>,
+    threads: usize,
+) {
+    let op = SendPtr(out.as_mut_ptr());
+    parallel_chunks(rows, threads, 1, move |r0, r1| {
+        for bi in r0..r1 {
+            let irow = &input[bi * w_in..(bi + 1) * w_in];
+            // SAFETY: batch rows [r0, r1) are owned by this chunk
+            let orow = unsafe { std::slice::from_raw_parts_mut(op.ptr().add(bi * w_out), w_out) };
+            for (m, &(is, ie)) in bd.spans_in.iter().enumerate() {
+                let Some(off) = bd.offs[m] else { continue };
+                let (os, oe) = bd.spans_out[m];
+                let fan_in = ie - is;
+                for (r, col) in (os..oe).enumerate() {
+                    let wrow = &w[off + r * fan_in..off + (r + 1) * fan_in];
+                    orow[col] = dot_in_order(&irow[is..ie], wrow) + bias[col];
+                }
+            }
+        }
+    });
+}

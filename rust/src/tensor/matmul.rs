@@ -1,4 +1,4 @@
-//! Blocked, threaded matmul kernels — the native engines' MXU.
+//! Thin matmul facade over the [`crate::tensor::kernels`] subsystem.
 //!
 //! Three orientation variants cover every product the MLP needs without
 //! ever materializing a transpose:
@@ -7,12 +7,22 @@
 //! * `nn`: `C[m,n] = A[m,k] · B[k,n]`  — backward data grads (`dY·W2`)
 //! * `tn`: `C[m,n] = A[k,m]ᵀ · B[k,n]` — weight grads (`dHᵀ·X`)
 //!
-//! Inner loops are contiguous-slice dot/axpy so LLVM autovectorizes them;
-//! threading splits output rows (nt/nn) or uses per-thread accumulators
-//! (tn, whose k-loop crosses thread boundaries otherwise).
+//! Which implementation executes (the naive reference oracle or the
+//! cache-blocked, register-tiled kernel) is decided by the kernel
+//! subsystem — process-wide via `PMLP_KERNEL` for the plain functions
+//! here, or per call via the `*_with` variants. Both kernels follow the
+//! same exactness contract (single-accumulator, `k` ascending per
+//! element), so this choice never changes results, only speed.
+//!
+//! Every entry point comes in two flavors with identical shape checks:
+//! `try_*` returns a typed [`ShapeError`]; the panicking twin unwraps it
+//! with the same op-tagged message. `dot`/`axpy` remain here as the
+//! reassociated (multi-accumulator) primitives the M3 segmented
+//! reduction and the stack backward passes stream through — they are
+//! NOT part of the kernel exactness contract.
 
+use super::kernels::{self, KernelConfig, ShapeError};
 use super::Tensor;
-use crate::util::threadpool::{parallel_chunks, SendPtr};
 
 /// Unrolled dot product over two contiguous slices.
 #[inline]
@@ -45,110 +55,169 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
-/// `C[m,n] = A[m,k] · B[n,k]ᵀ`, threaded over rows of C.
+// ---------------------------------------------------------------------------
+// Raw-slice entry points
+// ---------------------------------------------------------------------------
+
+/// `C[m,n] = A[m,k] · B[n,k]ᵀ` under the process-wide kernel; typed
+/// error on any dimension mismatch.
+pub fn try_matmul_nt(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Result<(), ShapeError> {
+    kernels::matmul_nt_with(kernels::active(), a, b, c, m, k, n, threads)
+}
+
+/// Panicking twin of [`try_matmul_nt`] (same checks, same message).
 pub fn matmul_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, threads: usize) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), n * k);
-    assert_eq!(c.len(), m * n);
-    let cp = SendPtr(c.as_mut_ptr());
-    parallel_chunks(m, threads, 8, move |r0, r1| {
-        for i in r0..r1 {
-            let arow = &a[i * k..(i + 1) * k];
-            // SAFETY: rows [r0, r1) are owned exclusively by this chunk
-            let crow = unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(i * n), n) };
-            for (j, cv) in crow.iter_mut().enumerate() {
-                *cv = dot(arow, &b[j * k..(j + 1) * k]);
-            }
-        }
-    });
+    try_matmul_nt(a, b, c, m, k, n, threads).unwrap_or_else(|e| panic!("{e}"));
 }
 
-/// `C[m,n] = A[m,k] · B[k,n]`, threaded over rows of C.
+/// `C[m,n] = A[m,k] · B[k,n]` under the process-wide kernel.
+pub fn try_matmul_nn(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Result<(), ShapeError> {
+    kernels::matmul_nn_with(kernels::active(), a, b, c, m, k, n, threads)
+}
+
+/// Panicking twin of [`try_matmul_nn`].
 pub fn matmul_nn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, threads: usize) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * n);
-    let cp = SendPtr(c.as_mut_ptr());
-    parallel_chunks(m, threads, 8, move |r0, r1| {
-        for i in r0..r1 {
-            let crow = unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(i * n), n) };
-            crow.iter_mut().for_each(|x| *x = 0.0);
-            let arow = &a[i * k..(i + 1) * k];
-            for (kk, &av) in arow.iter().enumerate() {
-                if av != 0.0 {
-                    axpy(av, &b[kk * n..(kk + 1) * n], crow);
-                }
-            }
-        }
-    });
+    try_matmul_nn(a, b, c, m, k, n, threads).unwrap_or_else(|e| panic!("{e}"));
 }
 
-/// `C[m,n] = A[k,m]ᵀ · B[k,n]`, threaded over columns-of-A chunks (each
-/// thread owns a disjoint row range of C).
+/// `C[m,n] = A[k,m]ᵀ · B[k,n]` under the process-wide kernel.
+pub fn try_matmul_tn(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Result<(), ShapeError> {
+    kernels::matmul_tn_with(kernels::active(), a, b, c, m, k, n, threads)
+}
+
+/// Panicking twin of [`try_matmul_tn`].
 pub fn matmul_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, threads: usize) {
-    assert_eq!(a.len(), k * m);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * n);
-    let cp = SendPtr(c.as_mut_ptr());
-    parallel_chunks(m, threads, 8, move |m0, m1| {
-        // zero this thread's C rows
-        for i in m0..m1 {
-            let crow = unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(i * n), n) };
-            crow.iter_mut().for_each(|x| *x = 0.0);
-        }
-        for kk in 0..k {
-            let brow = &b[kk * n..(kk + 1) * n];
-            let arow = &a[kk * m..(kk + 1) * m];
-            for i in m0..m1 {
-                let av = arow[i];
-                if av != 0.0 {
-                    let crow = unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(i * n), n) };
-                    axpy(av, brow, crow);
-                }
-            }
-        }
-    });
+    try_matmul_tn(a, b, c, m, k, n, threads).unwrap_or_else(|e| panic!("{e}"));
 }
 
-/// Tensor-level wrappers (allocate the output).
-pub fn nt(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+// ---------------------------------------------------------------------------
+// Tensor-level entry points (allocate the output)
+// ---------------------------------------------------------------------------
+
+/// `A[m,k] · B[n,k]ᵀ` under an explicit kernel config.
+pub fn try_nt_with(
+    cfg: KernelConfig,
+    a: &Tensor,
+    b: &Tensor,
+    threads: usize,
+) -> Result<Tensor, ShapeError> {
     let (m, k) = (a.rows(), a.cols());
     let n = b.rows();
-    assert_eq!(b.cols(), k, "nt: inner dims {k} vs {}", b.cols());
     let mut c = Tensor::zeros(&[m, n]);
-    matmul_nt(a.data(), b.data(), c.data_mut(), m, k, n, threads);
-    c
+    kernels::matmul_nt_with(cfg, a.data(), b.data(), c.data_mut(), m, k, n, threads)?;
+    Ok(c)
 }
 
-pub fn nn(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+/// Panicking twin of [`try_nt_with`].
+pub fn nt_with(cfg: KernelConfig, a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+    try_nt_with(cfg, a, b, threads).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// `A[m,k] · B[n,k]ᵀ` under the process-wide kernel.
+pub fn try_nt(a: &Tensor, b: &Tensor, threads: usize) -> Result<Tensor, ShapeError> {
+    try_nt_with(kernels::active(), a, b, threads)
+}
+
+/// Panicking twin of [`try_nt`].
+pub fn nt(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+    try_nt(a, b, threads).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// `A[m,k] · B[k,n]` under an explicit kernel config.
+pub fn try_nn_with(
+    cfg: KernelConfig,
+    a: &Tensor,
+    b: &Tensor,
+    threads: usize,
+) -> Result<Tensor, ShapeError> {
     let (m, k) = (a.rows(), a.cols());
     let n = b.cols();
-    assert_eq!(b.rows(), k, "nn: inner dims {k} vs {}", b.rows());
     let mut c = Tensor::zeros(&[m, n]);
-    matmul_nn(a.data(), b.data(), c.data_mut(), m, k, n, threads);
-    c
+    kernels::matmul_nn_with(cfg, a.data(), b.data(), c.data_mut(), m, k, n, threads)?;
+    Ok(c)
 }
 
-pub fn tn(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+/// Panicking twin of [`try_nn_with`].
+pub fn nn_with(cfg: KernelConfig, a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+    try_nn_with(cfg, a, b, threads).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// `A[m,k] · B[k,n]` under the process-wide kernel.
+pub fn try_nn(a: &Tensor, b: &Tensor, threads: usize) -> Result<Tensor, ShapeError> {
+    try_nn_with(kernels::active(), a, b, threads)
+}
+
+/// Panicking twin of [`try_nn`].
+pub fn nn(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+    try_nn(a, b, threads).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// `A[k,m]ᵀ · B[k,n]` under an explicit kernel config.
+pub fn try_tn_with(
+    cfg: KernelConfig,
+    a: &Tensor,
+    b: &Tensor,
+    threads: usize,
+) -> Result<Tensor, ShapeError> {
     let (k, m) = (a.rows(), a.cols());
     let n = b.cols();
-    assert_eq!(b.rows(), k, "tn: inner dims {k} vs {}", b.rows());
     let mut c = Tensor::zeros(&[m, n]);
-    matmul_tn(a.data(), b.data(), c.data_mut(), m, k, n, threads);
-    c
+    kernels::matmul_tn_with(cfg, a.data(), b.data(), c.data_mut(), m, k, n, threads)?;
+    Ok(c)
+}
+
+/// Panicking twin of [`try_tn_with`].
+pub fn tn_with(cfg: KernelConfig, a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+    try_tn_with(cfg, a, b, threads).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// `A[k,m]ᵀ · B[k,n]` under the process-wide kernel.
+pub fn try_tn(a: &Tensor, b: &Tensor, threads: usize) -> Result<Tensor, ShapeError> {
+    try_tn_with(kernels::active(), a, b, threads)
+}
+
+/// Panicking twin of [`try_tn`].
+pub fn tn(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+    try_tn(a, b, threads).unwrap_or_else(|e| panic!("{e}"))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::kernels::Kernel;
     use crate::util::rng::Rng;
 
-    fn naive_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    /// In-order scalar reference — the semantics both kernels implement.
+    fn ref_nt(a: &Tensor, b: &Tensor) -> Tensor {
         let (m, k, n) = (a.rows(), a.cols(), b.rows());
         let mut c = Tensor::zeros(&[m, n]);
         for i in 0..m {
             for j in 0..n {
-                let mut s = 0.0;
+                let mut s = 0.0f32;
                 for kk in 0..k {
                     s += a.at2(i, kk) * b.at2(j, kk);
                 }
@@ -162,6 +231,11 @@ mod tests {
         let mut t = Tensor::zeros(shape);
         rng.fill_normal(t.data_mut(), 0.0, 1.0);
         t
+    }
+
+    fn bits_equal(a: &Tensor, b: &Tensor) -> bool {
+        a.shape() == b.shape()
+            && a.data().iter().zip(b.data()).all(|(x, y)| x.to_bits() == y.to_bits())
     }
 
     #[test]
@@ -178,14 +252,17 @@ mod tests {
     }
 
     #[test]
-    fn nt_matches_naive() {
+    fn nt_matches_in_order_reference_exactly() {
+        // the facade result must be bit-identical to the in-order
+        // reference whatever kernel PMLP_KERNEL selected — that IS the
+        // subsystem's exactness contract
         let mut rng = Rng::new(2);
         for (m, k, n) in [(1, 1, 1), (3, 5, 7), (8, 16, 4), (17, 33, 9), (64, 10, 64)] {
             let a = rand_t(&mut rng, &[m, k]);
             let b = rand_t(&mut rng, &[n, k]);
+            let want = ref_nt(&a, &b);
             for threads in [1, 4] {
-                let c = nt(&a, &b, threads);
-                assert!(c.max_abs_diff(&naive_nt(&a, &b)) < 1e-4, "{m}x{k}x{n} t={threads}");
+                assert!(bits_equal(&nt(&a, &b, threads), &want), "{m}x{k}x{n} t={threads}");
             }
         }
     }
@@ -196,7 +273,6 @@ mod tests {
         let (m, k, n) = (9, 13, 6);
         let a = rand_t(&mut rng, &[m, k]);
         let b = rand_t(&mut rng, &[k, n]);
-        // build bT and compare against nt
         let mut bt = Tensor::zeros(&[n, k]);
         for i in 0..k {
             for j in 0..n {
@@ -205,7 +281,7 @@ mod tests {
         }
         for threads in [1, 3] {
             let c = nn(&a, &b, threads);
-            assert!(c.max_abs_diff(&naive_nt(&a, &bt)) < 1e-4);
+            assert!(bits_equal(&c, &ref_nt(&a, &bt)));
         }
     }
 
@@ -229,7 +305,19 @@ mod tests {
         }
         for threads in [1, 4] {
             let c = tn(&a, &b, threads);
-            assert!(c.max_abs_diff(&naive_nt(&at, &bt)) < 1e-4);
+            assert!(bits_equal(&c, &ref_nt(&at, &bt)));
+        }
+    }
+
+    #[test]
+    fn explicit_kernel_variants_agree_with_facade() {
+        let mut rng = Rng::new(6);
+        let a = rand_t(&mut rng, &[13, 21]);
+        let b = rand_t(&mut rng, &[17, 21]);
+        let via_facade = nt(&a, &b, 2);
+        for kernel in [Kernel::Naive, Kernel::Blocked] {
+            let cfg = kernels::active().with_kernel(kernel);
+            assert!(bits_equal(&nt_with(cfg, &a, &b, 2), &via_facade), "{kernel:?}");
         }
     }
 
@@ -245,11 +333,56 @@ mod tests {
         assert!(y.max_abs_diff(&x) < 1e-6);
     }
 
+    // -- dimension mismatches: typed errors and consistent panics ---------
+
     #[test]
-    #[should_panic]
-    fn dim_mismatch_panics() {
+    fn mismatches_yield_typed_errors_for_every_op() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 4]);
+        let e = try_nt(&a, &b, 1).unwrap_err();
+        assert_eq!(e.op(), "matmul_nt");
+        assert!(e.to_string().contains("shape mismatch"), "{e}");
+
+        let b = Tensor::zeros(&[4, 5]); // nn wants [3, n]
+        let e = try_nn(&a, &b, 1).unwrap_err();
+        assert_eq!(e.op(), "matmul_nn");
+
+        let b = Tensor::zeros(&[3, 5]); // tn wants [2, n] (k = a.rows())
+        let e = try_tn(&a, &b, 1).unwrap_err();
+        assert_eq!(e.op(), "matmul_tn");
+
+        // raw-slice paths report the offending operand
+        let mut c = vec![0.0; 4];
+        let e = try_matmul_nt(&[0.0; 5], &[0.0; 6], &mut c, 2, 3, 2, 1).unwrap_err();
+        assert!(e.to_string().contains('A'), "{e}");
+        let e = try_matmul_nn(&[0.0; 6], &[0.0; 5], &mut c, 2, 3, 2, 1).unwrap_err();
+        assert!(e.to_string().contains('B'), "{e}");
+        let mut c_bad = vec![0.0; 3];
+        let e = try_matmul_tn(&[0.0; 6], &[0.0; 6], &mut c_bad, 2, 3, 2, 1).unwrap_err();
+        assert!(e.to_string().contains('C'), "{e}");
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul_nt: shape mismatch")]
+    fn nt_dim_mismatch_panics() {
         let a = Tensor::zeros(&[2, 3]);
         let b = Tensor::zeros(&[2, 4]);
         nt(&a, &b, 1); // inner dims 3 vs 4
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul_nn: shape mismatch")]
+    fn nn_dim_mismatch_panics() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 5]);
+        nn(&a, &b, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul_tn: shape mismatch")]
+    fn tn_dim_mismatch_panics() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[3, 5]);
+        tn(&a, &b, 1);
     }
 }

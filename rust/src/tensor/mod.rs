@@ -2,8 +2,11 @@
 //!
 //! Row-major, CPU-only, deliberately small: the three matmul variants the
 //! MLP fwd/bwd needs (`NT`, `NN`, `TN`), broadcastable elementwise helpers
-//! and the paper's Scatter-Add. Loops are written so LLVM autovectorizes
-//! them (`-C target-cpu=native`); blocking/threading lives in `matmul.rs`.
+//! and the paper's Scatter-Add. The matmul implementations live in the
+//! [`kernels`] subsystem (a naive reference oracle plus a cache-blocked,
+//! register-tiled hot path behind one dispatch enum); [`matmul`] is the
+//! thin facade consumers call.
+pub mod kernels;
 pub mod matmul;
 pub mod scatter;
 

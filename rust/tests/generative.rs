@@ -7,11 +7,14 @@ use parallel_mlps::coordinator::BatchSet;
 use parallel_mlps::data;
 use parallel_mlps::nn::act::{Act, ALL_ACTS};
 use parallel_mlps::nn::init::{extract_model, init_pool};
-use parallel_mlps::nn::loss::Loss;
+use parallel_mlps::nn::loss::{self, Loss};
 use parallel_mlps::nn::mlp::MlpTrainer;
 use parallel_mlps::nn::optimizer::OptimizerKind;
 use parallel_mlps::nn::parallel::ParallelEngine;
+use parallel_mlps::nn::stack::{stack_bits_equal, LayerStack, StackModel};
 use parallel_mlps::pool::{PoolLayout, PoolSpec};
+use parallel_mlps::tensor::kernels::{Kernel, KernelConfig};
+use parallel_mlps::tensor::Tensor;
 use parallel_mlps::util::rng::Rng;
 
 fn random_pool(rng: &mut Rng) -> PoolSpec {
@@ -114,6 +117,174 @@ fn random_layout_knobs_do_not_change_training() {
             let diff = pa.max_abs_diff(pb);
             assert!(diff < 1e-5, "seed {seed:#x} model {m}: layout knobs changed results ({diff})");
         }
+    }
+}
+
+#[test]
+fn blocked_kernel_training_is_bit_identical_to_naive_end_to_end() {
+    // the full fused forward/backward under the Blocked kernel at
+    // randomized pool specs: the kernel exactness contract promises not
+    // "within tolerance" but bit-identity, so assert exactly that
+    let mut meta = Rng::new(0xCAFE);
+    for trial in 0..6 {
+        let seed = meta.next_u64();
+        let mut rng = Rng::new(seed);
+        let spec = random_pool(&mut rng);
+        let (f, o, b) = (2 + rng.below(6), 1 + rng.below(3), 8usize);
+        let layout = PoolLayout::build(&spec);
+        let fused0 = init_pool(seed, &layout, f, o);
+        let ds = data::random_regression(b * 3, f, o, &mut rng);
+        let batches = BatchSet::new(&ds, b, true).unwrap();
+
+        let run = |kernel: Kernel, threads: usize| {
+            let mut e = ParallelEngine::new(layout.clone(), fused0.clone(), Loss::Mse, f, o, b, threads);
+            e.set_kernel(kernel);
+            let mut losses = Vec::new();
+            for _ in 0..2 {
+                for (x, y) in &batches.batches {
+                    losses = e.step(x, y, 0.05);
+                }
+            }
+            (e.params_fused(), losses)
+        };
+        let (p_naive, l_naive) = run(Kernel::Naive, 1);
+        for threads in [1usize, 3] {
+            let (p_blocked, l_blocked) = run(Kernel::Blocked, threads);
+            for (tag, a, bt) in [
+                ("w1", &p_naive.w1, &p_blocked.w1),
+                ("b1", &p_naive.b1, &p_blocked.b1),
+                ("w2", &p_naive.w2, &p_blocked.w2),
+                ("b2", &p_naive.b2, &p_blocked.b2),
+            ] {
+                assert!(
+                    a.data().iter().zip(bt.data()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "trial {trial} (seed {seed:#x}): {tag} diverged under the blocked kernel (t={threads})"
+                );
+            }
+            for (m, (ln, lb)) in l_naive.iter().zip(&l_blocked).enumerate() {
+                assert_eq!(ln.to_bits(), lb.to_bits(), "trial {trial} model {m} loss");
+            }
+        }
+    }
+}
+
+fn random_stack_pool(rng: &mut Rng) -> LayerStack {
+    let n = 1 + rng.below(4);
+    let models: Vec<StackModel> = (0..n)
+        .map(|_| {
+            let depth = 1 + rng.below(3);
+            StackModel {
+                hidden: (0..depth).map(|_| 1 + rng.below(7) as u32).collect(),
+                act: ALL_ACTS[rng.below(10)],
+            }
+        })
+        .collect();
+    LayerStack::new(models, 4, 2).unwrap()
+}
+
+#[test]
+fn blocked_kernel_stack_training_is_bit_identical_to_naive() {
+    // same property for the arbitrary-depth layer stack (mixed depths,
+    // identity passthrough, block-diagonal inner layers)
+    let mut meta = Rng::new(0xDEED);
+    for trial in 0..6 {
+        let seed = meta.next_u64();
+        let mut rng = Rng::new(seed);
+        let stack = random_stack_pool(&mut rng);
+        let mut x = Tensor::zeros(&[10, 4]);
+        rng.fill_normal(x.data_mut(), 0.0, 1.0);
+        let mut y = Tensor::zeros(&[10, 2]);
+        rng.fill_normal(y.data_mut(), 0.0, 1.0);
+
+        let run = |kernel: Kernel, threads: usize| {
+            let kcfg = KernelConfig::naive().with_kernel(kernel);
+            let mut p = stack.init(seed);
+            let mut losses = Vec::new();
+            for _ in 0..3 {
+                losses = stack.step_with(kcfg, &mut p, &x, &y, Loss::Mse, 0.05, threads);
+            }
+            (p, losses)
+        };
+        let (p_naive, l_naive) = run(Kernel::Naive, 1);
+        for threads in [1usize, 4] {
+            let (p_blocked, l_blocked) = run(Kernel::Blocked, threads);
+            assert!(
+                stack_bits_equal(&p_naive, &p_blocked),
+                "trial {trial} (seed {seed:#x}): stack params diverged (t={threads})"
+            );
+            for (m, (ln, lb)) in l_naive.iter().zip(&l_blocked).enumerate() {
+                assert_eq!(ln.to_bits(), lb.to_bits(), "trial {trial} model {m} loss");
+            }
+        }
+    }
+}
+
+#[test]
+fn blocked_kernel_gradients_match_finite_differences() {
+    // property-style gradient check under the Blocked kernel: for
+    // random smooth pools, the gradient implied by one SGD step
+    // (g = (θ0 - θ1)/lr) must match the central finite difference of
+    // the owning model's loss at randomly sampled coordinates
+    let mut meta = Rng::new(0xFD01);
+    for trial in 0..4 {
+        let seed = meta.next_u64();
+        let mut rng = Rng::new(seed);
+        // smooth activations only: ReLU-family kinks break FD locally
+        let smooth = [Act::Tanh, Act::Sigmoid, Act::Gelu];
+        let n = 1 + rng.below(3);
+        let models: Vec<StackModel> = (0..n)
+            .map(|_| {
+                let depth = 1 + rng.below(3);
+                StackModel {
+                    hidden: (0..depth).map(|_| 1 + rng.below(5) as u32).collect(),
+                    act: smooth[rng.below(3)],
+                }
+            })
+            .collect();
+        let stack = LayerStack::new(models, 3, 2).unwrap();
+        let p0 = stack.init(seed);
+        let mut x = Tensor::zeros(&[6, 3]);
+        rng.fill_normal(x.data_mut(), 0.0, 1.0);
+        let mut y = Tensor::zeros(&[6, 2]);
+        rng.fill_normal(y.data_mut(), 0.0, 1.0);
+
+        let blocked = KernelConfig::blocked();
+        // one unit-lr step: p1 = p0 - 1.0 * grad, so grad = p0 - p1
+        let mut p1 = p0.clone();
+        stack.step_with(blocked, &mut p1, &x, &y, Loss::Mse, 1.0, 2);
+
+        // summed per-model losses double as the scalar objective
+        let loss_at = |p: &parallel_mlps::nn::stack::StackParams| -> f64 {
+            let logits = stack.forward_with(blocked, p, &x, 2);
+            (0..stack.n_models())
+                .map(|m| loss::mlp_loss(Loss::Mse, &stack.model_logits(&logits, m), &y) as f64)
+                .sum()
+        };
+
+        let mut checked = 0usize;
+        for l in 0..p0.layers.len() {
+            let len = p0.layers[l].w.len();
+            for _ in 0..4 {
+                let idx = rng.below(len.max(1));
+                let g = (p0.layers[l].w.data()[idx] - p1.layers[l].w.data()[idx]) as f64;
+                if g.abs() < 1e-2 {
+                    continue; // too small to resolve against f32 eval noise
+                }
+                let eps = 5e-3f32;
+                let mut plus = p0.clone();
+                plus.layers[l].w.data_mut()[idx] += eps;
+                let mut minus = p0.clone();
+                minus.layers[l].w.data_mut()[idx] -= eps;
+                let fd = (loss_at(&plus) - loss_at(&minus)) / (2.0 * eps as f64);
+                let rel = (fd - g).abs() / g.abs().max(1e-3);
+                assert!(
+                    rel < 0.15,
+                    "trial {trial} (seed {seed:#x}) layer {l} idx {idx}: analytic {g:.6} vs fd {fd:.6} (rel {rel:.3})"
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked >= 1, "trial {trial}: no resolvable coordinates");
     }
 }
 

@@ -1,0 +1,364 @@
+//! Differential kernel harness: the blocked kernels against the naive
+//! oracle over seeded random shapes (ragged M/K/N, zero-size edges,
+//! mixed-depth stack layouts), across thread counts and tile sizes.
+//!
+//! The kernel subsystem's exactness contract (see
+//! `rust/src/tensor/kernels/mod.rs`) says every output element is a
+//! single-accumulator sum over `k` in ascending order — no
+//! reassociation anywhere. These tests therefore assert **exact bit
+//! equality**, not a ulp tolerance: the "≤ 1 ulp where reassociation is
+//! allowed" escape hatch is deliberately unused, and any future kernel
+//! that starts reassociating must either restore the order or come back
+//! here and document which comparisons relax to ulp bounds.
+//!
+//! Thread counts: each dispatch is exercised at 1, 2 and 8 workers (the
+//! explicit-argument equivalent of `PMLP_THREADS` ∈ {1, 2, 8}; CI
+//! additionally runs the whole suite under the env-var matrix).
+
+use parallel_mlps::nn::act::ALL_ACTS;
+use parallel_mlps::nn::stack::{LayerStack, StackModel};
+use parallel_mlps::tensor::kernels::{
+    self, BlockDiag, Kernel, KernelConfig, Tile, NR, TILE_CANDIDATES,
+};
+use parallel_mlps::tensor::Tensor;
+use parallel_mlps::util::rng::Rng;
+
+const THREADS: [usize; 3] = [1, 2, 8];
+
+fn cfg(kernel: Kernel, tile: Tile) -> KernelConfig {
+    KernelConfig { kernel, tile }
+}
+
+fn naive() -> KernelConfig {
+    KernelConfig::naive()
+}
+
+/// Tiles chosen to force every path: micro-tiles only, heavy edge
+/// remainders, single giant block, and the shipped default.
+fn stress_tiles() -> [Tile; 4] {
+    [Tile { nc: NR, kc: 4 }, Tile { nc: 24, kc: 7 }, Tile { nc: 4096, kc: 4096 }, Tile::DEFAULT]
+}
+
+fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; len];
+    rng.fill_normal(&mut v, 0.0, 1.0);
+    v
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The shape sweep: handpicked edges (zero-size dims, micro-tile
+/// boundaries, single elements) plus seeded random ragged shapes.
+fn shape_sweep(rng: &mut Rng) -> Vec<(usize, usize, usize)> {
+    let mut shapes = vec![
+        (0, 3, 4),
+        (3, 0, 4),
+        (3, 4, 0),
+        (0, 0, 0),
+        (1, 1, 1),
+        (4, 8, 8),   // exactly one 4x8 tile
+        (5, 9, 9),   // one tile + every edge kind
+        (3, 5, 7),   // all-edge (below MR/NR)
+        (17, 31, 23),
+        (64, 10, 64),
+        (32, 10, 160), // the fused fwd shape class [B,F]x[F,H]
+        (12, 130, 40), // k crosses several KC blocks
+    ];
+    for _ in 0..12 {
+        shapes.push((rng.below(40), rng.below(40), rng.below(70)));
+    }
+    shapes
+}
+
+type RawKernel = fn(
+    KernelConfig,
+    &[f32],
+    &[f32],
+    &mut [f32],
+    usize,
+    usize,
+    usize,
+    usize,
+) -> Result<(), kernels::ShapeError>;
+
+fn ops() -> [(&'static str, RawKernel); 3] {
+    [
+        ("nt", kernels::matmul_nt_with as RawKernel),
+        ("nn", kernels::matmul_nn_with as RawKernel),
+        ("tn", kernels::matmul_tn_with as RawKernel),
+    ]
+}
+
+/// Operand lengths for (m, k, n) per op.
+fn operand_lens(op: &str, m: usize, k: usize, n: usize) -> (usize, usize) {
+    match op {
+        "nt" => (m * k, n * k),
+        "nn" => (m * k, k * n),
+        "tn" => (k * m, k * n),
+        _ => unreachable!(),
+    }
+}
+
+#[test]
+fn blocked_bit_equals_naive_across_shapes_threads_and_tiles() {
+    let mut rng = Rng::new(0x5EED);
+    let shapes = shape_sweep(&mut rng);
+    for (op_name, op) in ops() {
+        for &(m, k, n) in &shapes {
+            let (la, lb) = operand_lens(op_name, m, k, n);
+            let a = rand_vec(&mut rng, la);
+            let b = rand_vec(&mut rng, lb);
+            let mut want = vec![f32::NAN; m * n]; // NaN canary: must be overwritten
+            op(naive(), &a, &b, &mut want, m, k, n, 1).unwrap();
+            for &threads in &THREADS {
+                let mut again = vec![f32::NAN; m * n];
+                op(naive(), &a, &b, &mut again, m, k, n, threads).unwrap();
+                assert_eq!(
+                    bits(&again),
+                    bits(&want),
+                    "{op_name} naive {m}x{k}x{n}: thread count changed bits (t={threads})"
+                );
+                for tile in stress_tiles() {
+                    let mut got = vec![f32::NAN; m * n];
+                    op(cfg(Kernel::Blocked, tile), &a, &b, &mut got, m, k, n, threads).unwrap();
+                    assert_eq!(
+                        bits(&got),
+                        bits(&want),
+                        "{op_name} {m}x{k}x{n}: blocked != naive (t={threads}, tile={tile:?})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn nonfinite_values_propagate_identically() {
+    // zero-skips or reordering would make NaN/∞ propagation diverge
+    // between kernels; neither kernel may take such shortcuts
+    let (m, k, n) = (6, 9, 17);
+    let mut rng = Rng::new(0xF1F1);
+    for (op_name, op) in ops() {
+        let (la, lb) = operand_lens(op_name, m, k, n);
+        let mut a = rand_vec(&mut rng, la);
+        let mut b = rand_vec(&mut rng, lb);
+        a[3] = f32::NAN;
+        a[7] = 0.0;
+        b[5] = f32::INFINITY;
+        b[11] = 0.0;
+        let mut want = vec![0.0f32; m * n];
+        op(naive(), &a, &b, &mut want, m, k, n, 1).unwrap();
+        assert!(want.iter().any(|v| !v.is_finite()), "{op_name}: canary never propagated");
+        for &threads in &THREADS {
+            let mut got = vec![0.0f32; m * n];
+            op(KernelConfig::blocked(), &a, &b, &mut got, m, k, n, threads).unwrap();
+            assert_eq!(bits(&got), bits(&want), "{op_name} t={threads}");
+        }
+    }
+}
+
+#[test]
+fn autotuned_tile_is_a_pure_performance_knob() {
+    // whatever the probe picks must produce the same bits as every
+    // candidate it rejected
+    let mut rng = Rng::new(0x7117);
+    let (m, k, n) = (23, 37, 95);
+    let a = rand_vec(&mut rng, m * k);
+    let b = rand_vec(&mut rng, n * k);
+    let mut want = vec![0.0f32; m * n];
+    kernels::matmul_nt_with(naive(), &a, &b, &mut want, m, k, n, 1).unwrap();
+    let picked = kernels::autotune_tile();
+    assert!(TILE_CANDIDATES.contains(&picked));
+    for tile in TILE_CANDIDATES {
+        let mut got = vec![0.0f32; m * n];
+        kernels::matmul_nt_with(cfg(Kernel::Blocked, tile), &a, &b, &mut got, m, k, n, 2)
+            .unwrap();
+        assert_eq!(bits(&got), bits(&want), "tile {tile:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Block-diagonal kernel: random mixed-depth stack layouts
+// ---------------------------------------------------------------------------
+
+fn random_stack(rng: &mut Rng) -> (LayerStack, usize, usize) {
+    let n_models = 1 + rng.below(6);
+    let features = 1 + rng.below(6);
+    let out = 1 + rng.below(3);
+    let models: Vec<StackModel> = (0..n_models)
+        .map(|_| {
+            let depth = 1 + rng.below(3);
+            StackModel {
+                hidden: (0..depth).map(|_| 1 + rng.below(9) as u32).collect(),
+                act: ALL_ACTS[rng.below(10)],
+            }
+        })
+        .collect();
+    (LayerStack::new(models, features, out).unwrap(), features, out)
+}
+
+#[test]
+fn stack_forward_blocked_matches_naive_and_dense_extraction_bitwise() {
+    let mut rng = Rng::new(0xB10C);
+    for trial in 0..8 {
+        let (stack, features, _) = random_stack(&mut rng);
+        let p = stack.init(rng.next_u64());
+        let b = 1 + rng.below(12);
+        let mut x = Tensor::zeros(&[b, features]);
+        rng.fill_normal(x.data_mut(), 0.0, 1.0);
+
+        let want = stack.forward_with(naive(), &p, &x, 1);
+        for &threads in &THREADS {
+            for kernel in [Kernel::Naive, Kernel::Blocked] {
+                let got = stack.forward_with(cfg(kernel, Tile::DEFAULT), &p, &x, threads);
+                assert_eq!(
+                    bits(got.data()),
+                    bits(want.data()),
+                    "trial {trial}: {kernel:?} t={threads} diverged from the oracle"
+                );
+            }
+        }
+        // per-model dense extraction runs the same in-order math, so the
+        // fused pool and the standalone winner agree at the bit level
+        for m in 0..stack.n_models() {
+            let dense = stack.extract(&p, m);
+            let standalone = dense.forward_with(naive(), &x, 1);
+            let fused = stack.model_logits(&want, m);
+            assert_eq!(
+                bits(standalone.data()),
+                bits(fused.data()),
+                "trial {trial} model {m}: dense twin != fused span"
+            );
+        }
+    }
+}
+
+#[test]
+fn block_diag_direct_dispatch_matches_naive() {
+    // drive the raw block-diagonal entry point (identity gaps included)
+    // without going through LayerStack
+    let mut rng = Rng::new(0xD1A6);
+    let spans_in = [(0usize, 3usize), (3, 7), (7, 8)];
+    let spans_out = [(0usize, 9usize), (9, 13), (13, 16)];
+    // model 1 is an identity gap: its output span must stay untouched
+    let offs = [Some(0usize), None, Some(9 * 3)];
+    let (w_in, w_out, rows) = (8usize, 16usize, 11usize);
+    let w = rand_vec(&mut rng, 9 * 3 + 3 * 1);
+    let bias = rand_vec(&mut rng, w_out);
+    let input = rand_vec(&mut rng, rows * w_in);
+    let bd = BlockDiag { spans_in: &spans_in, spans_out: &spans_out, offs: &offs };
+
+    let canary = 123.456f32;
+    let mut want = vec![canary; rows * w_out];
+    kernels::block_diag_with(naive(), &input, &w, &bias, &mut want, rows, w_in, w_out, &bd, 1)
+        .unwrap();
+    // identity span untouched
+    for r in 0..rows {
+        for c in 9..13 {
+            assert_eq!(want[r * w_out + c], canary, "identity span written at ({r},{c})");
+        }
+    }
+    for &threads in &THREADS {
+        for tile in stress_tiles() {
+            let mut got = vec![canary; rows * w_out];
+            kernels::block_diag_with(
+                cfg(Kernel::Blocked, tile),
+                &input,
+                &w,
+                &bias,
+                &mut got,
+                rows,
+                w_in,
+                w_out,
+                &bd,
+                threads,
+            )
+            .unwrap();
+            assert_eq!(bits(&got), bits(&want), "t={threads} tile={tile:?}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed shape errors
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_matmul_op_reports_typed_mismatches() {
+    for (op_name, op) in ops() {
+        let (m, k, n) = (2usize, 3usize, 2usize);
+        let (la, lb) = operand_lens(op_name, m, k, n);
+        let good_a = vec![0.0f32; la];
+        let good_b = vec![0.0f32; lb];
+        let mut good_c = vec![0.0f32; m * n];
+        op(naive(), &good_a, &good_b, &mut good_c, m, k, n, 1).unwrap();
+
+        for kernel in [Kernel::Naive, Kernel::Blocked] {
+            let c = cfg(kernel, Tile::DEFAULT);
+            let bad_a = vec![0.0f32; la + 1];
+            let e = op(c, &bad_a, &good_b, &mut good_c, m, k, n, 1).unwrap_err();
+            assert_eq!(e.op(), format!("matmul_{op_name}"), "{e}");
+            let bad_b = vec![0.0f32; lb + 2];
+            let e = op(c, &good_a, &bad_b, &mut good_c, m, k, n, 1).unwrap_err();
+            assert!(e.to_string().contains("shape mismatch"), "{e}");
+            let mut bad_c = vec![0.0f32; m * n - 1];
+            let e = op(c, &good_a, &good_b, &mut bad_c, m, k, n, 1).unwrap_err();
+            assert!(e.to_string().contains('C'), "{e}");
+        }
+    }
+}
+
+#[test]
+fn overflowing_extents_are_rejected_not_wrapped() {
+    // a wrapped rows*cols would validate empty slices against absurd
+    // dims and hand the unsafe kernels out-of-bounds extents
+    let mut c: Vec<f32> = vec![];
+    let e = kernels::matmul_nt_with(naive(), &[], &[0.0; 32], &mut c, 1 << 62, 4, 8, 1)
+        .unwrap_err();
+    assert!(e.to_string().contains("overflow"), "{e}");
+    let e = kernels::matmul_nn_with(naive(), &[], &[], &mut c, 1 << 62, 4, usize::MAX, 1)
+        .unwrap_err();
+    assert!(e.to_string().contains("overflow"), "{e}");
+    let e = kernels::matmul_tn_with(naive(), &[], &[], &mut c, usize::MAX, 2, usize::MAX, 1)
+        .unwrap_err();
+    assert!(e.to_string().contains("overflow"), "{e}");
+}
+
+#[test]
+fn block_diag_rejects_bad_geometry() {
+    let spans_in = [(0usize, 2usize)];
+    let spans_out = [(0usize, 3usize)];
+    let offs = [Some(0usize)];
+    let w = vec![0.0f32; 6];
+    let bias = vec![0.0f32; 3];
+    let input = vec![0.0f32; 4];
+    let mut out = vec![0.0f32; 6];
+    let ok = BlockDiag { spans_in: &spans_in, spans_out: &spans_out, offs: &offs };
+    kernels::block_diag_with(naive(), &input, &w, &bias, &mut out, 2, 2, 3, &ok, 1).unwrap();
+
+    // span table length mismatch
+    let bad = BlockDiag { spans_in: &spans_in, spans_out: &[], offs: &offs };
+    let e = kernels::block_diag_with(naive(), &input, &w, &bias, &mut out, 2, 2, 3, &bad, 1)
+        .unwrap_err();
+    assert!(e.to_string().contains("span tables"), "{e}");
+
+    // span out of bounds
+    let oob = [(0usize, 9usize)];
+    let bad = BlockDiag { spans_in: &oob, spans_out: &spans_out, offs: &offs };
+    assert!(kernels::block_diag_with(naive(), &input, &w, &bias, &mut out, 2, 2, 3, &bad, 1)
+        .is_err());
+
+    // packed block runs past the weight buffer
+    let far = [Some(3usize)];
+    let bad = BlockDiag { spans_in: &spans_in, spans_out: &spans_out, offs: &far };
+    let e = kernels::block_diag_with(naive(), &input, &w, &bias, &mut out, 2, 2, 3, &bad, 1)
+        .unwrap_err();
+    assert!(e.to_string().contains("packed"), "{e}");
+
+    // bias width mismatch
+    let e = kernels::block_diag_with(naive(), &input, &w, &bias[..2], &mut out, 2, 2, 3, &ok, 1)
+        .unwrap_err();
+    assert!(e.to_string().contains("bias"), "{e}");
+}

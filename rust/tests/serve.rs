@@ -2,6 +2,8 @@
 //! detection, winner-extraction equivalence against the fused pool,
 //! registry loading, and micro-batched serving correctness/throughput.
 
+use std::sync::Arc;
+
 use parallel_mlps::io::{PoolCheckpoint, RankEntry};
 use parallel_mlps::nn::act::Act;
 use parallel_mlps::nn::init::init_pool;
@@ -12,6 +14,7 @@ use parallel_mlps::pool::{PoolLayout, PoolSpec};
 use parallel_mlps::selection::rank_models;
 use parallel_mlps::serve::bench::{run_load, synthetic_model, LoadSpec};
 use parallel_mlps::serve::{ModelRegistry, ServableModel, ServeConfig, Server};
+use parallel_mlps::tensor::kernels::{Kernel, KernelConfig};
 use parallel_mlps::tensor::Tensor;
 use parallel_mlps::util::rng::Rng;
 
@@ -200,6 +203,98 @@ fn microbatching_beats_per_row_dispatch() {
         batched.rows_per_s,
         unbatched.rows_per_s
     );
+}
+
+// ---------------------------------------------------------------------------
+// Golden-fixture regression: the committed PMLPCKPT v3 file
+// ---------------------------------------------------------------------------
+
+/// The frozen v3 checkpoint authored by `tools/make_golden_fixture.py`.
+/// All weights and inputs are small integers, so every forward output is
+/// exact integer arithmetic in f32 — bit-stable under ANY kernel, thread
+/// count or summation order. If checkpoint parsing, extraction or the
+/// inference path ever drifts, these asserts (and the byte-for-byte
+/// re-encode below) catch it before a release does.
+const GOLDEN_CKPT: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/fixtures/golden_v3.ckpt");
+
+/// `[4, 3]` integer probe batch (mirrored in the generator script).
+const GOLDEN_X: [f32; 12] = [1.0, 0.0, -1.0, 0.0, 2.0, 1.0, -1.0, 1.0, 0.0, 2.0, -1.0, 1.0];
+/// Expected `[4, 2]` logits for model 0 (hidden [2], ReLU).
+const GOLDEN_Y_M0: [f32; 8] = [5.0, -2.0, 1.0, -1.0, 1.0, -1.0, 5.0, -5.0];
+/// Expected `[4, 2]` logits for model 1 (hidden [3, 2], Identity) — the
+/// stored winner.
+const GOLDEN_Y_M1: [f32; 8] = [-11.0, -2.0, 0.0, 8.0, -4.0, 6.0, 1.0, -8.0];
+
+fn assert_bits(got: &Tensor, want: &[f32], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}: shape");
+    for (i, (g, w)) in got.data().iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{tag}: element {i}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn golden_v3_fixture_loads_and_reencodes_byte_identically() {
+    let bytes = std::fs::read(GOLDEN_CKPT).unwrap();
+    let ckpt = PoolCheckpoint::from_bytes(&bytes).unwrap();
+    // canonical serialization: the current writer must reproduce the
+    // committed file byte for byte, or checkpoint compat has drifted
+    assert_eq!(ckpt.to_bytes(), bytes, "v3 writer no longer reproduces the golden fixture");
+
+    assert_eq!(ckpt.n_models(), 2);
+    assert_eq!(ckpt.features(), 3);
+    assert_eq!(ckpt.out(), 2);
+    assert_eq!(ckpt.depth(), 2);
+    assert_eq!(ckpt.loss.name(), "mse");
+    assert!(ckpt.preprocessor.is_none());
+    assert_eq!(ckpt.winner(), Some(1));
+    assert_eq!(ckpt.ranking.len(), 2);
+    assert_eq!(ckpt.ranking[0].val_loss.to_bits(), 0.125f32.to_bits());
+    let models = ckpt.models();
+    assert_eq!(models[0].hidden, vec![2]);
+    assert_eq!(models[0].act, Act::Relu);
+    assert_eq!(models[1].hidden, vec![3, 2]);
+    assert_eq!(models[1].act, Act::Identity);
+}
+
+#[test]
+fn golden_v3_predictions_are_bit_stable_under_both_kernels() {
+    let ckpt = PoolCheckpoint::load(std::path::Path::new(GOLDEN_CKPT)).unwrap();
+    let x = Tensor::from_vec(GOLDEN_X.to_vec(), &[4, 3]);
+    for (m, want) in [(0usize, &GOLDEN_Y_M0), (1, &GOLDEN_Y_M1)] {
+        let servable = ServableModel::from_checkpoint(&ckpt, m, format!("golden/m{m}")).unwrap();
+        for kernel in [Kernel::Naive, Kernel::Blocked] {
+            let kcfg = KernelConfig::naive().with_kernel(kernel);
+            for threads in [1usize, 4] {
+                let got = servable.predict_with(kcfg, &x, threads);
+                assert_bits(&got, &want[..], &format!("model {m} {kernel:?} t={threads}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_v3_winner_serves_bit_stable_through_the_microbatcher() {
+    // same fixture, through the whole serving stack: registry winner
+    // extraction + the coalescing worker (process-wide kernel)
+    let ckpt = PoolCheckpoint::load(std::path::Path::new(GOLDEN_CKPT)).unwrap();
+    let mut registry = ModelRegistry::new();
+    registry.load_top_k("golden", &ckpt, 1).unwrap();
+    let winner = registry.get("golden/top1").unwrap();
+    assert_eq!(winner.index, 1);
+    let server = Server::start(
+        Arc::clone(&winner),
+        ServeConfig { max_batch: 4, queue_cap: 16, threads: 1 },
+    )
+    .unwrap();
+    let client = server.client();
+    for (i, row) in GOLDEN_X.chunks(3).enumerate() {
+        let got = client.predict(row).unwrap();
+        for (j, (g, w)) in got.iter().zip(&GOLDEN_Y_M1[i * 2..(i + 1) * 2]).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "row {i} out {j}: {g} vs {w}");
+        }
+    }
+    server.shutdown();
 }
 
 #[test]

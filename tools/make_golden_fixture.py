@@ -1,0 +1,162 @@
+#!/usr/bin/env python3
+"""Generate rust/tests/fixtures/golden_v3.ckpt — the golden PMLPCKPT v3
+regression fixture — plus the expected forward outputs asserted by
+rust/tests/serve.rs.
+
+Why a generator outside Rust: the fixture must be a *frozen byte
+artifact* committed to the repo, not something the code under test can
+re-derive (otherwise a format change silently regenerates the fixture
+and the compatibility test proves nothing). This script mirrors the v3
+layout documented in rust/src/io/checkpoint.rs:
+
+    magic    8 B  "PMLPCKPT"
+    version  u32  3
+    features u32, out u32, loss u8
+    n_models u32, per model: n_layers u32, h u32 x n_layers, act u8
+    n_ranked u32, per entry: index u32, val_loss f32, val_metric f32
+    n_layers u32 (= depth + 1)
+    per layer: w tensor, b tensor  (ndim u32, dims u32..., data f32...)
+    prep     u8 0 (no preprocessor section)
+    trailer  u64 FNV-1a 64 over every preceding byte
+
+Every weight, bias and test input is a small integer. Integer arithmetic
+is exact in f32 well past these magnitudes, so the expected logits are
+exact integers too and predictions must be BIT-stable under any matmul
+kernel, thread count or summation order. The expected values printed at
+the end are transcribed into rust/tests/serve.rs.
+
+Pool: 2 models over F=3 inputs, O=2 outputs, MSE.
+  model 0: hidden [2], ReLU   (depth 1 -> identity passthrough at level 1)
+  model 1: hidden [3, 2], Identity (depth 2)
+"""
+import struct
+import sys
+from pathlib import Path
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x00000100000001B3
+
+MAGIC = b"PMLPCKPT"
+VERSION = 3
+FEATURES, OUT = 3, 2
+LOSS_MSE = 0
+ACT_IDENTITY, ACT_RELU = 0, 3
+
+# --- parameters (layer-stack fused layout; see rust/src/nn/stack.rs) ------
+# level-0 spans: model 0 -> rows 0..2, model 1 -> rows 2..5
+L0_W = [  # [5, 3]
+    [1, -1, 0],   # model 0, unit 0
+    [2, 1, -1],   # model 0, unit 1
+    [1, 0, 1],    # model 1, unit 0
+    [0, 1, -1],   # model 1, unit 1
+    [-1, 1, 0],   # model 1, unit 2
+]
+L0_B = [1, -2, 0, 1, -1]
+# inner layer 1: model 0 is identity (no block); model 1 block [2, 3] at 0
+L1_W = [[1, -1, 2], [0, 2, 1]]           # packed -> 6 floats
+L1_B = [0, 0, 1, -1]                     # identity span cols 0..2 stay 0
+# output layer: model 0 block [2, 2] at 0, model 1 block [2, 2] at 4
+OUT_W_M0 = [[1, 2], [-1, 1]]
+OUT_W_M1 = [[2, -1], [1, 1]]
+OUT_B = [[1, -1], [0, 2]]                # [M, O]
+RANKING = [(1, 0.125, 0.25), (0, 0.5, 0.75)]  # exact in f32
+
+X = [  # [4, 3] test batch (committed in the Rust test too)
+    [1, 0, -1],
+    [0, 2, 1],
+    [-1, 1, 0],
+    [2, -1, 1],
+]
+
+
+def fnv1a64(data: bytes) -> int:
+    acc = FNV_OFFSET
+    for byte in data:
+        acc = ((acc ^ byte) * FNV_PRIME) & 0xFFFFFFFFFFFFFFFF
+    return acc
+
+
+def u32(v):
+    return struct.pack("<I", v)
+
+
+def f32(v):
+    return struct.pack("<f", float(v))
+
+
+def tensor(dims, flat):
+    assert len(flat) == int.__mul__(*dims) if len(dims) == 2 else len(flat) == dims[0]
+    out = u32(len(dims))
+    for d in dims:
+        out += u32(d)
+    for v in flat:
+        out += f32(v)
+    return out
+
+
+def build() -> bytes:
+    b = bytearray()
+    b += MAGIC
+    b += u32(VERSION)
+    b += u32(FEATURES) + u32(OUT) + bytes([LOSS_MSE])
+    b += u32(2)  # n_models
+    b += u32(1) + u32(2) + bytes([ACT_RELU])                 # model 0: [2]
+    b += u32(2) + u32(3) + u32(2) + bytes([ACT_IDENTITY])    # model 1: [3, 2]
+    b += u32(len(RANKING))
+    for idx, vl, vm in RANKING:
+        b += u32(idx) + f32(vl) + f32(vm)
+    b += u32(3)  # fused layers = depth + 1
+    b += tensor([5, 3], [v for row in L0_W for v in row])
+    b += tensor([5], L0_B)
+    b += tensor([6], [v for row in L1_W for v in row])
+    b += tensor([4], L1_B)
+    b += tensor([8], [v for row in OUT_W_M0 for v in row] + [v for row in OUT_W_M1 for v in row])
+    b += tensor([2, 2], [v for row in OUT_B for v in row])
+    b += bytes([0])  # no preprocessor
+    b += struct.pack("<Q", fnv1a64(bytes(b)))
+    return bytes(b)
+
+
+def forward_model0(x):
+    """hidden [2] ReLU, then the [2,2] output block."""
+    out = []
+    for row in x:
+        h = []
+        for r in range(2):
+            pre = sum(w * v for w, v in zip(L0_W[r], row)) + L0_B[r]
+            h.append(max(pre, 0))
+        out.append([
+            sum(w * v for w, v in zip(OUT_W_M0[o], h)) + OUT_B[0][o] for o in range(2)
+        ])
+    return out
+
+
+def forward_model1(x):
+    """hidden [3, 2] identity, then the [2,2] output block."""
+    out = []
+    for row in x:
+        h0 = [sum(w * v for w, v in zip(L0_W[2 + r], row)) + L0_B[2 + r] for r in range(3)]
+        h1 = [sum(w * v for w, v in zip(L1_W[r], h0)) + L1_B[2 + r] for r in range(2)]
+        out.append([
+            sum(w * v for w, v in zip(OUT_W_M1[o], h1)) + OUT_B[1][o] for o in range(2)
+        ])
+    return out
+
+
+def main():
+    repo = Path(__file__).resolve().parent.parent
+    path = repo / "rust" / "tests" / "fixtures" / "golden_v3.ckpt"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    data = build()
+    path.write_bytes(data)
+    print(f"wrote {path} ({len(data)} bytes, fnv trailer {data[-8:].hex()})")
+    print("expected logits (model 0, ReLU):   ", forward_model0(X))
+    print("expected logits (model 1, winner): ", forward_model1(X))
+    # all magnitudes must stay exactly representable with slack
+    flat = [v for rows in (forward_model0(X), forward_model1(X)) for r in rows for v in r]
+    assert all(abs(v) < 2**20 for v in flat)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
