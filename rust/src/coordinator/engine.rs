@@ -497,6 +497,27 @@ impl DeepEngine {
     pub fn params(&self) -> &StackParams {
         &self.params
     }
+
+    /// A new engine over only the `keep` models (strictly ascending
+    /// indices into THIS engine's pool) — the successive-halving
+    /// compaction step for deep pools. The survivor stack is rebuilt
+    /// (freed spans and block-diagonal blocks vanish; the stack depth
+    /// shrinks when the deepest models were cut), survivor parameters
+    /// are bit-copied, and the kernel pin / thread count / loss carry
+    /// over, so a survivor's trajectory after compaction is
+    /// bit-identical to the uncompacted pool's at every thread count
+    /// and kernel.
+    pub fn compact(&self, keep: &[usize]) -> anyhow::Result<DeepEngine> {
+        let stack = self.stack.subset(keep)?;
+        let mut params = stack.zeros();
+        for (new_m, &old_m) in keep.iter().enumerate() {
+            stack.insert(&mut params, new_m, &self.stack.extract(&self.params, old_m))?;
+        }
+        let mut engine = DeepEngine::from_params(stack, params, self.loss, self.threads)?;
+        // `from_params` captures the process-wide kernel; keep the pin
+        engine.kcfg = self.kcfg;
+        Ok(engine)
+    }
 }
 
 impl PoolEngine for DeepEngine {
@@ -677,6 +698,49 @@ mod tests {
         assert_eq!(extracted.act(), Act::Relu);
         let dense = extracted.stacked().unwrap();
         assert_eq!(dense.hidden_widths(), vec![1, 2, 2]);
+    }
+
+    #[test]
+    fn deep_engine_compaction_keeps_survivor_trajectories() {
+        use crate::nn::stack::stack_bits_equal;
+        let stack = LayerStack::new(
+            vec![
+                StackModel { hidden: vec![3], act: Act::Sigmoid },
+                StackModel { hidden: vec![2, 4], act: Act::Tanh },
+                StackModel { hidden: vec![4, 3, 2], act: Act::Relu },
+            ],
+            4,
+            2,
+        )
+        .unwrap();
+        let mut full = DeepEngine::new(stack, 13, Loss::Mse, 2);
+        let mut rng = Rng::new(14);
+        let mut x = Tensor::zeros(&[8, 4]);
+        rng.fill_normal(x.data_mut(), 0.0, 1.0);
+        let mut w = Tensor::zeros(&[4, 2]);
+        rng.fill_normal(w.data_mut(), 0.0, 1.0);
+        let y = crate::tensor::matmul::nn(&x, &w, 1);
+        for _ in 0..2 {
+            PoolEngine::step(&mut full, 0, 0, &x, &y, 0.05).unwrap();
+        }
+        let keep = [0usize, 1];
+        let mut small = full.compact(&keep).unwrap();
+        assert_eq!(small.n_models(), 2);
+        assert_eq!(small.stack().depth(), 2, "cutting the depth-3 model shrinks the stack");
+        // compacting everything is a no-op on the parameter bits
+        let all = full.compact(&[0, 1, 2]).unwrap();
+        assert!(stack_bits_equal(all.params(), full.params()));
+        // and training on matches training uncompacted, bit for bit
+        let ls = PoolEngine::step(&mut small, 0, 0, &x, &y, 0.05).unwrap().losses;
+        let lf = PoolEngine::step(&mut full, 0, 0, &x, &y, 0.05).unwrap().losses;
+        for (new_m, &old_m) in keep.iter().enumerate() {
+            assert_eq!(ls[new_m].to_bits(), lf[old_m].to_bits());
+            let a = full.stack().extract(full.params(), old_m);
+            let b = small.stack().extract(small.params(), new_m);
+            for (la, lb) in a.layers.iter().zip(&b.layers) {
+                assert!(la.w.data().iter().zip(lb.w.data()).all(|(p, q)| p.to_bits() == q.to_bits()));
+            }
+        }
     }
 
     #[test]

@@ -32,9 +32,12 @@ use crate::metrics::Timer;
 use crate::nn::init::init_pool;
 use crate::nn::loss::Loss;
 use crate::nn::parallel::ParallelEngine;
-use crate::nn::stack::LayerStack;
+use crate::nn::stack::{DenseStack, LayerStack};
 use crate::pool::{PoolLayout, PoolSpec};
-use crate::selection::{kfold_rank, rank_models, KfoldReport, RankedModel};
+use crate::selection::{
+    halving_run, kfold_indices, kfold_rank, rank_models, stratified_kfold_indices,
+    CompactableEngine, HalvingArm, HalvingConfig, HalvingReport, KfoldReport, RankedModel,
+};
 use crate::util::rng::Rng;
 
 /// Everything a finished experiment reports.
@@ -307,6 +310,152 @@ pub fn run_experiment_trained(cfg: &ExperimentConfig) -> anyhow::Result<TrainedE
     })
 }
 
+/// A finished successive-halving search: the complete original pool
+/// (survivors carry final weights, retirees are frozen at their cut),
+/// the rung schedule, and everything `pmlp export` needs to checkpoint
+/// the session under GLOBAL model ids.
+pub struct HalvedExperiment {
+    /// effective config after the data dictated loss/dims
+    pub config: ExperimentConfig,
+    pub report: HalvingReport,
+    /// dense parameters of every ORIGINAL model, indexed by global id
+    pub models: Vec<DenseStack>,
+    pub out_dim: usize,
+    /// train-only feature pipeline, fitted when the run used `--data`
+    /// (single-split runs only; fold arms standardize per-fold)
+    pub preprocessor: Option<Preprocessor>,
+    pub setup_s: f64,
+}
+
+fn halve_arms<E: CompactableEngine>(
+    arms: Vec<HalvingArm<E>>,
+    cfg: &ExperimentConfig,
+    hcfg: &HalvingConfig,
+) -> anyhow::Result<(HalvingReport, Vec<DenseStack>)> {
+    let run = halving_run(arms, cfg.batch, cfg.lr, cfg.loss, hcfg, cfg.progress)?;
+    let models = run.full_pool()?;
+    Ok((run.report, models))
+}
+
+/// Run successive-halving architecture search per the config (the `pmlp
+/// rank --halving` path). Data preparation mirrors
+/// [`run_experiment_trained`] exactly: same seed stream, same split or —
+/// with `cfg.folds = Some(k)` — the same deterministic fold assignment
+/// as [`kfold_rank`], one scoring arm per fold (standardized train-side
+/// only), rungs ranked on the arm-mean validation loss and every arm
+/// compacted to the same survivors.
+///
+/// `cfg.early_stop` is deliberately ignored: the rung schedule IS the
+/// compute budgeter, and cutting rungs short would desynchronize the
+/// bit-identity contract with an uncompacted reference run.
+pub fn run_halving(
+    cfg: &ExperimentConfig,
+    hcfg: &HalvingConfig,
+) -> anyhow::Result<HalvedExperiment> {
+    anyhow::ensure!(
+        cfg.strategy.is_native(),
+        "halving drives native strategies; use the pjrt drivers for {}",
+        cfg.strategy.name()
+    );
+    hcfg.validate()?;
+    let setup = Timer::new();
+    let mut rng = Rng::new(cfg.seed);
+    let (cfg, resolved) = resolve_data(cfg, &mut rng)?;
+
+    // arm datasets: one train/val pair, or k fold pairs
+    let (pairs, preprocessor, out_dim) = match cfg.folds {
+        None => {
+            let (split, pre) = prepare_resolved(&cfg, &resolved, &mut rng)?;
+            let out_dim = split.train.out_dim();
+            anyhow::ensure!(
+                out_dim == cfg.out
+                    || cfg.dataset == crate::data::SynthKind::Moons
+                    || cfg.dataset == crate::data::SynthKind::Xor
+                    || cfg.dataset == crate::data::SynthKind::Friedman1,
+                "config out={} but dataset produced {}",
+                cfg.out,
+                out_dim
+            );
+            (vec![(split.train, split.val)], pre, out_dim)
+        }
+        Some(k) => {
+            let ds = resolved.dataset();
+            anyhow::ensure!(
+                cfg.features == ds.features(),
+                "config features={} but the dataset has {}",
+                cfg.features,
+                ds.features()
+            );
+            // same fold stream as kfold_rank: identical assignment
+            let mut frng = Rng::new(cfg.seed).fork(0x6b666f6c64); // "kfold"
+            let folds = match ds.n_classes {
+                Some(_) => stratified_kfold_indices(&ds.labels(), k, &mut frng)?,
+                None => kfold_indices(ds.len(), k, &mut frng)?,
+            };
+            let mut pairs = Vec::with_capacity(k);
+            let mut out_dim: Option<usize> = None;
+            for val_idx in &folds {
+                let mut mask = vec![false; ds.len()];
+                for &i in val_idx {
+                    mask[i] = true;
+                }
+                let train_idx: Vec<usize> = (0..ds.len()).filter(|i| !mask[*i]).collect();
+                let mut train = ds.take(&train_idx);
+                let mut val = ds.take(val_idx);
+                let (mean, std) = train.standardize();
+                val.standardize_with(&mean, &std);
+                let od = train.out_dim();
+                let seen = *out_dim.get_or_insert(od);
+                anyhow::ensure!(seen == od, "folds disagree on out_dim: {seen} vs {od}");
+                pairs.push((train, val));
+            }
+            (pairs, None, out_dim.expect("k >= 2 folds"))
+        }
+    };
+    let setup_s = setup.elapsed_s();
+
+    // identical engine (same seed, same init bits) per arm, exactly like
+    // kfold_rank builds a fresh pool per fold
+    let (report, models) = if cfg.strategy.is_deep() {
+        let arms = pairs
+            .into_iter()
+            .map(|(train, val)| {
+                let stack = LayerStack::new(cfg.stack_models()?, cfg.features, out_dim)?;
+                let engine = DeepEngine::new(stack, cfg.seed, cfg.loss, cfg.effective_threads());
+                Ok(HalvingArm { engine, train, val })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        halve_arms(arms, &cfg, hcfg)?
+    } else if cfg.strategy == Strategy::NativeParallel {
+        let spec = cfg.pool_spec()?;
+        let arms = pairs
+            .into_iter()
+            .map(|(train, val)| {
+                let layout = PoolLayout::build(&spec);
+                let fused = init_pool(cfg.seed, &layout, cfg.features, out_dim);
+                let engine = ParallelEngine::new(
+                    layout,
+                    fused,
+                    cfg.loss,
+                    cfg.features,
+                    out_dim,
+                    cfg.batch,
+                    cfg.effective_threads(),
+                );
+                Ok(HalvingArm { engine, train, val })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        halve_arms(arms, &cfg, hcfg)?
+    } else {
+        anyhow::bail!(
+            "halving needs a compactable fused engine (native_parallel or deep_native), got {}",
+            cfg.strategy.name()
+        );
+    };
+
+    Ok(HalvedExperiment { config: cfg, report, models, out_dim, preprocessor, setup_s })
+}
+
 /// Evaluate a native fused engine over a dataset in batches, averaging
 /// per-model losses/metrics weighted by batch size. An empty dataset
 /// yields all-zero vectors (matching the historical behavior).
@@ -456,5 +605,67 @@ mod tests {
         let mut cfg = quick_cfg();
         cfg.strategy = Strategy::PjrtParallel;
         assert!(run_experiment(&cfg).is_err());
+    }
+
+    #[test]
+    fn run_halving_covers_the_whole_pool_and_is_deterministic() {
+        let cfg = quick_cfg(); // 4 models
+        let hcfg = HalvingConfig { eta: 2, rung_epochs: 1 };
+        let a = run_halving(&cfg, &hcfg).unwrap();
+        let b = run_halving(&cfg, &hcfg).unwrap();
+        // 4 -> 2 -> 1
+        let sizes: Vec<usize> = a.report.rungs.iter().map(|r| r.entering).collect();
+        assert_eq!(sizes, vec![4, 2, 1]);
+        assert_eq!(a.report.model_epochs(), 7);
+        assert_eq!(a.models.len(), 4);
+        assert_eq!(a.report.ranked.len(), 4);
+        assert_eq!(a.out_dim, 2);
+        let oa: Vec<usize> = a.report.ranked.iter().map(|r| r.index).collect();
+        let ob: Vec<usize> = b.report.ranked.iter().map(|r| r.index).collect();
+        assert_eq!(oa, ob);
+        for (ma, mb) in a.models.iter().zip(&b.models) {
+            assert!(ma.bits_equal(mb));
+        }
+        // every model keeps its own architecture under its global id
+        let spec = cfg.pool_spec().unwrap();
+        for (g, m) in a.models.iter().enumerate() {
+            assert_eq!(m.hidden() as u32, spec.models()[g].0, "model {g}");
+        }
+    }
+
+    #[test]
+    fn run_halving_with_folds_scores_multi_arm() {
+        let mut cfg = quick_cfg();
+        cfg.folds = Some(3);
+        let hcfg = HalvingConfig { eta: 2, rung_epochs: 1 };
+        let halved = run_halving(&cfg, &hcfg).unwrap();
+        assert_eq!(halved.models.len(), 4);
+        assert_eq!(halved.report.ranked.len(), 4);
+        assert!(halved.preprocessor.is_none());
+    }
+
+    #[test]
+    fn run_halving_rejects_sequential_engines() {
+        let mut cfg = quick_cfg();
+        cfg.strategy = Strategy::NativeSequential;
+        let hcfg = HalvingConfig { eta: 2, rung_epochs: 1 };
+        let err = run_halving(&cfg, &hcfg).unwrap_err().to_string();
+        assert!(err.contains("compactable"), "{err}");
+    }
+
+    #[test]
+    fn run_halving_deep_strategy_end_to_end() {
+        let mut cfg = quick_cfg();
+        cfg.strategy = Strategy::DeepNative;
+        cfg.depths = Some(vec![1, 2]);
+        let hcfg = HalvingConfig { eta: 2, rung_epochs: 1 };
+        let halved = run_halving(&cfg, &hcfg).unwrap();
+        // 4 archs x 2 depths = 8 models: 8 -> 4 -> 2 -> 1
+        let sizes: Vec<usize> = halved.report.rungs.iter().map(|r| r.entering).collect();
+        assert_eq!(sizes, vec![8, 4, 2, 1]);
+        assert_eq!(halved.models.len(), 8);
+        // depth survives the freeze/extract round-trip
+        let depths: Vec<usize> = halved.models.iter().map(|m| m.n_hidden_layers()).collect();
+        assert!(depths.iter().any(|&d| d == 2), "{depths:?}");
     }
 }

@@ -159,7 +159,6 @@ impl PoolCheckpoint {
         ranked: &[RankedModel],
     ) -> anyhow::Result<PoolCheckpoint> {
         let extracted = engine.extract_all()?;
-        anyhow::ensure!(!extracted.is_empty(), "engine has no models to checkpoint");
         anyhow::ensure!(
             extracted.len() == engine.n_models(),
             "engine extract_all returned {} models for a {}-model pool",
@@ -167,6 +166,26 @@ impl PoolCheckpoint {
             engine.n_models()
         );
         let denses: Vec<DenseStack> = extracted.into_iter().map(|e| e.into_stack()).collect();
+        let ranking = ranked
+            .iter()
+            .map(|r| RankEntry { index: r.index, val_loss: r.val_loss, val_metric: r.val_metric })
+            .collect();
+        PoolCheckpoint::from_dense_stacks(denses, loss, ranking)
+    }
+
+    /// Build a checkpoint straight from dense per-model parameters — the
+    /// path halved sessions take, where the "pool" is reassembled from a
+    /// compacted engine's survivors plus the models frozen at each rung
+    /// cut (indexed by GLOBAL original-pool id). Per-model floats are
+    /// copied verbatim into a fresh fused stack, so the encoded bytes
+    /// are identical whether the parameters came from a live engine or a
+    /// freeze.
+    pub fn from_dense_stacks(
+        denses: Vec<DenseStack>,
+        loss: Loss,
+        ranking: Vec<RankEntry>,
+    ) -> anyhow::Result<PoolCheckpoint> {
+        anyhow::ensure!(!denses.is_empty(), "no models to checkpoint");
         let (features, out) = (denses[0].features(), denses[0].out());
         let models: Vec<StackModel> = denses
             .iter()
@@ -177,10 +196,6 @@ impl PoolCheckpoint {
         for (m, dense) in denses.iter().enumerate() {
             stack.insert(&mut params, m, dense)?;
         }
-        let ranking = ranked
-            .iter()
-            .map(|r| RankEntry { index: r.index, val_loss: r.val_loss, val_metric: r.val_metric })
-            .collect();
         PoolCheckpoint::new(stack, loss, params, ranking)
     }
 

@@ -18,12 +18,12 @@ use std::sync::Arc;
 use parallel_mlps::bench_harness::{artifacts_dir, BenchArgs};
 use parallel_mlps::config::{ExperimentConfig, Strategy};
 use parallel_mlps::coordinator::{
-    render_paper_table, run_experiment_trained, run_kfold, run_table, BatchSet, DeepEngine,
-    SweepConfig, TableKind, TrainSession,
+    render_paper_table, run_experiment_trained, run_halving, run_kfold, run_table, BatchSet,
+    DeepEngine, SweepConfig, TableKind, TrainSession,
 };
 use parallel_mlps::data::{csv::read_raw, Preprocessor, SynthKind};
-use parallel_mlps::io::PoolCheckpoint;
-use parallel_mlps::metrics::Table;
+use parallel_mlps::io::{PoolCheckpoint, RankEntry};
+use parallel_mlps::metrics::{Table, Timer};
 use parallel_mlps::nn::act::Act;
 use parallel_mlps::nn::init::init_pool;
 use parallel_mlps::nn::loss::Loss;
@@ -31,7 +31,9 @@ use parallel_mlps::nn::parallel::ParallelEngine;
 use parallel_mlps::nn::stack::{stack_bits_equal, LayerStack, StackModel};
 use parallel_mlps::pool::{PoolLayout, PoolSpec};
 use parallel_mlps::runtime::{PjrtParallelEngine, PjrtRuntime, PjrtSequentialEngine};
-use parallel_mlps::selection::{report, top_k, top_k_indices, RankedModel};
+use parallel_mlps::selection::{
+    halving_run, report, top_k, top_k_indices, HalvingArm, HalvingConfig, RankedModel,
+};
 use parallel_mlps::serve::bench::{
     render_reports, reports_json, run_load_with, synthetic_model, LoadSpec,
 };
@@ -51,7 +53,9 @@ USAGE:
              [--batch N] [--lr F] [--seed N] [--threads N]
              [--depths a,b] [--early-stop N] [--verbose] [--top K]
   pmlp rank  (same flags as train) [--top K]
+             [--halving [--eta N] [--rung-epochs N]]
   pmlp export --out FILE [--top K] (same training flags as train)
+             [--halving [--eta N] [--rung-epochs N]]
   pmlp serve-bench [--ckpt FILE | --hidden N --features N --out-dim N]
              [--data FILE.csv [--target COL]]
              [--rows N] [--clients N] [--depth N] [--batch-sizes a,b,c]
@@ -70,7 +74,15 @@ counts in one pool; --early-stop N adds patience-N early stopping on
 validation loss. --data FILE.csv trains on a real CSV/TSV dataset
 (--target names the label column; numeric targets regress under MSE,
 categorical targets classify under CE); --folds K ranks architectures
-by mean validation loss over K stratified folds. export writes a
+by mean validation loss over K stratified folds. --halving replaces
+full training with successive halving: every --rung-epochs (default 1)
+epochs the pool is ranked on validation loss, the bottom 1 - 1/eta
+(default --eta 3) is cut, and the fused layout is compacted so freed
+slots stop consuming matmul FLOPs — survivors train bit-identically to
+an uncompacted run, cut models are frozen at their cut, and the final
+ranking covers the whole original pool (so export --halving works;
+with --folds K each rung is scored by mean loss across K fold arms).
+export writes a
 versioned, FNV-checksummed pool checkpoint (any depth) with the
 train-only preprocessor embedded for --data runs; serve-bench replays
 a synthetic load — or, with --data, the CSV's rows normalized through
@@ -96,7 +108,7 @@ fn main() {
 }
 
 fn real_main() -> anyhow::Result<()> {
-    let args = Args::from_env(&["quick", "paper-scale", "verbose"])
+    let args = Args::from_env(&["quick", "paper-scale", "verbose", "halving"])
         .map_err(|e| anyhow::anyhow!("{e}\n{USAGE}"))?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
@@ -239,6 +251,41 @@ fn train_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
     Ok(cfg)
 }
 
+/// `--halving [--eta N] [--rung-epochs N]` — None when the flag is
+/// absent (in which case the knobs must be absent too).
+fn halving_config(args: &Args) -> anyhow::Result<Option<HalvingConfig>> {
+    let parse = |e: String| anyhow::anyhow!(e);
+    let eta = args.get_parse::<usize>("eta").map_err(parse)?;
+    let rung_epochs = args.get_parse::<usize>("rung-epochs").map_err(parse)?;
+    if !args.has_flag("halving") {
+        anyhow::ensure!(
+            eta.is_none() && rung_epochs.is_none(),
+            "--eta/--rung-epochs only make sense with --halving"
+        );
+        return Ok(None);
+    }
+    let cfg = HalvingConfig { eta: eta.unwrap_or(3), rung_epochs: rung_epochs.unwrap_or(1) };
+    cfg.validate()?;
+    Ok(Some(cfg))
+}
+
+/// One progress line summarizing a finished halving schedule.
+fn print_halving_summary(rep: &parallel_mlps::selection::HalvingReport, full_epochs: usize) {
+    let sizes: Vec<String> = rep.rungs.iter().map(|r| r.entering.to_string()).collect();
+    eprintln!(
+        "halving: eta {}, {} epoch(s)/rung, rungs {} -> {} model-epochs \
+         (full training of {} models x {} epochs = {}; {:.1}x architectures per budget)",
+        rep.eta,
+        rep.rung_epochs,
+        sizes.join("->"),
+        rep.model_epochs(),
+        rep.n_models,
+        full_epochs,
+        rep.n_models * full_epochs,
+        rep.search_speedup(full_epochs)
+    );
+}
+
 /// What the experiment trains on, for the progress line.
 fn data_desc(cfg: &ExperimentConfig) -> String {
     match &cfg.data_path {
@@ -321,6 +368,17 @@ fn train(args: &Args) -> anyhow::Result<()> {
 fn rank(args: &Args) -> anyhow::Result<()> {
     let cfg = train_config(args)?;
     let top_k: usize = args.get_parse_or("top", 10).map_err(|e| anyhow::anyhow!(e))?;
+    if let Some(hcfg) = halving_config(args)? {
+        let halved = run_halving(&cfg, &hcfg)?;
+        let eff = &halved.config;
+        if let Some(k) = eff.folds {
+            eprintln!("rungs scored by mean validation loss across {k} fold arms");
+        }
+        print_halving_summary(&halved.report, eff.epochs);
+        println!("{}", report(&halved.report.ranked, eff.loss, top_k));
+        print_stack_archs(eff, &halved.report.ranked, top_k)?;
+        return Ok(());
+    }
     if cfg.folds.is_some() {
         let (eff, kf) = run_kfold(&cfg)?;
         eprintln!(
@@ -349,6 +407,9 @@ fn export(args: &Args) -> anyhow::Result<()> {
     let cfg = train_config(args)?;
     let out_path = PathBuf::from(args.get_or("out", "pool.ckpt"));
     let top_k: usize = args.get_parse_or("top", 5).map_err(|e| anyhow::anyhow!(e))?;
+    if let Some(hcfg) = halving_config(args)? {
+        return export_halved(&cfg, &hcfg, &out_path, top_k);
+    }
     println!(
         "training {} ({} models) for export...",
         cfg.strategy.name(),
@@ -400,6 +461,80 @@ fn export(args: &Args) -> anyhow::Result<()> {
     );
     println!("{}", report(&trained.report.ranked, cfg.loss, top_k));
     print_stack_archs(cfg, &trained.report.ranked, top_k)?;
+    Ok(())
+}
+
+/// `export --halving`: run the successive-halving search and checkpoint
+/// the FULL original pool — survivors carry their final weights, cut
+/// models the weights frozen at their cut — under GLOBAL model ids, in
+/// the same v3 format every other export writes. Serving a halved
+/// checkpoint is indistinguishable from serving a fully-trained one.
+fn export_halved(
+    cfg: &ExperimentConfig,
+    hcfg: &HalvingConfig,
+    out_path: &Path,
+    top_k: usize,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        cfg.folds.is_none(),
+        "export --halving checkpoints single-split weights; --folds K is a scoring \
+         scheme with no single final pool (use `pmlp rank --halving --folds K`)"
+    );
+    println!(
+        "halving {} ({} models, eta {}, {} epoch(s)/rung) for export...",
+        cfg.strategy.name(),
+        if cfg.strategy.is_deep() {
+            cfg.stack_models()?.len()
+        } else {
+            cfg.pool_spec()?.n_models()
+        },
+        hcfg.eta,
+        hcfg.rung_epochs
+    );
+    let halved = run_halving(cfg, hcfg)?;
+    let cfg = &halved.config; // data may have dictated loss/dims
+    print_halving_summary(&halved.report, cfg.epochs);
+    let ranking: Vec<RankEntry> = halved
+        .report
+        .ranked
+        .iter()
+        .map(|r| RankEntry { index: r.index, val_loss: r.val_loss, val_metric: r.val_metric })
+        .collect();
+    let mut ckpt = PoolCheckpoint::from_dense_stacks(halved.models, cfg.loss, ranking)?;
+    if let Some(pre) = &halved.preprocessor {
+        ckpt = ckpt.with_preprocessor(pre.clone())?;
+        println!(
+            "preprocessor embedded: {} feature columns -> {} features, target {:?}{}",
+            pre.columns.len(),
+            pre.n_features(),
+            pre.target.name,
+            match pre.n_classes() {
+                Some(k) => format!(" ({k} classes)"),
+                None => " (regression)".to_string(),
+            }
+        );
+    }
+    ckpt.save(out_path)?;
+    let back = PoolCheckpoint::load(out_path)?;
+    anyhow::ensure!(
+        stack_bits_equal(&ckpt.params, &back.params),
+        "checkpoint roundtrip mismatch (disk corruption?)"
+    );
+    println!(
+        "checkpoint: {} ({} models, depth {}, {} bytes, fnv-checksummed, roundtrip verified)",
+        out_path.display(),
+        ckpt.n_models(),
+        ckpt.depth(),
+        std::fs::metadata(out_path)?.len()
+    );
+    let mut registry = ModelRegistry::new();
+    let names = registry.load_top_k("pool", &ckpt, top_k)?;
+    println!(
+        "winners extracted: {names:?} (pool indices {:?})",
+        top_k_indices(&halved.report.ranked, top_k)
+    );
+    println!("{}", report(&halved.report.ranked, cfg.loss, top_k));
+    print_stack_archs(cfg, &halved.report.ranked, top_k)?;
     Ok(())
 }
 
@@ -703,6 +838,52 @@ fn train_bench(args: &Args) -> anyhow::Result<()> {
         }
     }
 
+    // the halving column: same 27-model shallow pool, same data — full
+    // training vs successive halving (eta 3, 1 epoch/rung: 27+9+3+1 = 40
+    // model-epochs vs 27 x epochs), measuring architectures-searched per
+    // second and per model-epoch of budget
+    let hspec = PoolSpec::from_grid(&[2, 4, 8], &[Act::Relu, Act::Tanh, Act::Sigmoid], 3)?;
+    let hlayout = PoolLayout::build(&hspec);
+    let hfused = init_pool(seed, &hlayout, features, out_dim);
+    let mut vrng = parallel_mlps::util::rng::Rng::new(seed ^ 0x5A17);
+    let val = parallel_mlps::data::random_regression(
+        (samples / 4).max(batch),
+        features,
+        out_dim,
+        &mut vrng,
+    );
+    let mut full_engine = ParallelEngine::new(
+        hlayout.clone(),
+        hfused.clone(),
+        Loss::Mse,
+        features,
+        out_dim,
+        batch,
+        threads,
+    );
+    let t_full = Timer::new();
+    TrainSession::builder().epochs(epochs).lr(0.05).run_with_batches(&mut full_engine, &batches)?;
+    let full_s = t_full.elapsed_s();
+    let hcfg = HalvingConfig { eta: 3, rung_epochs: 1 };
+    let arm = HalvingArm {
+        engine: ParallelEngine::new(hlayout, hfused, Loss::Mse, features, out_dim, batch, threads),
+        train: ds.clone(),
+        val,
+    };
+    let t_half = Timer::new();
+    let hrun = halving_run(vec![arm], batch, 0.05, Loss::Mse, &hcfg, false)?;
+    let halving_s = t_half.elapsed_s();
+    let halving = HalvingBench {
+        pool_models: hspec.n_models(),
+        eta: hcfg.eta,
+        rung_epochs: hcfg.rung_epochs,
+        full_epochs: epochs,
+        halving_model_epochs: hrun.report.model_epochs(),
+        full_model_epochs: hspec.n_models() * epochs,
+        full_s,
+        halving_s,
+    };
+
     let mut t = Table::new(
         &format!("train-bench: {samples} samples x {epochs} epochs (warmup {warmup}), {threads} threads"),
         &["pool", "strategy", "kernel", "depth", "models", "rows/epoch", "epoch_s", "models/s", "rows/s", "model_rows/s"],
@@ -737,10 +918,82 @@ fn train_bench(args: &Args) -> anyhow::Result<()> {
         }
     }
 
-    let doc = train_bench_json(samples, features, out_dim, batch, epochs, warmup, threads, seed, &cells);
+    let mut ht = Table::new(
+        &format!(
+            "halving vs full: {}-model shallow pool, {samples} samples",
+            halving.pool_models
+        ),
+        &["mode", "models", "model_epochs", "wall_s", "archs/s", "archs/model_epoch"],
+    );
+    ht.row(vec![
+        "full".to_string(),
+        halving.pool_models.to_string(),
+        halving.full_model_epochs.to_string(),
+        format!("{:.4}", halving.full_s),
+        format!("{:.1}", halving.archs_per_s_full()),
+        format!("{:.4}", halving.archs_per_model_epoch_full()),
+    ]);
+    ht.row(vec![
+        format!("halving(eta={},r={})", halving.eta, halving.rung_epochs),
+        halving.pool_models.to_string(),
+        halving.halving_model_epochs.to_string(),
+        format!("{:.4}", halving.halving_s),
+        format!("{:.1}", halving.archs_per_s_halving()),
+        format!("{:.4}", halving.archs_per_model_epoch_halving()),
+    ]);
+    println!("{}", ht.to_markdown());
+    println!(
+        "halving searches {:.2}x more architectures per model-epoch of budget \
+         ({:.2}x by wall clock)",
+        halving.search_speedup(),
+        halving.wall_speedup()
+    );
+
+    let doc = train_bench_json(
+        samples, features, out_dim, batch, epochs, warmup, threads, seed, &cells, &halving,
+    );
     std::fs::write(&out_path, doc).map_err(|e| anyhow::anyhow!("writing {out_path}: {e}"))?;
     eprintln!("report written to {out_path}");
     Ok(())
+}
+
+/// The halving-vs-full comparison cell of the training bench.
+struct HalvingBench {
+    pool_models: usize,
+    eta: usize,
+    rung_epochs: usize,
+    full_epochs: usize,
+    halving_model_epochs: usize,
+    full_model_epochs: usize,
+    full_s: f64,
+    halving_s: f64,
+}
+
+impl HalvingBench {
+    fn archs_per_s_full(&self) -> f64 {
+        self.pool_models as f64 / self.full_s.max(1e-12)
+    }
+
+    fn archs_per_s_halving(&self) -> f64 {
+        self.pool_models as f64 / self.halving_s.max(1e-12)
+    }
+
+    fn archs_per_model_epoch_full(&self) -> f64 {
+        self.pool_models as f64 / self.full_model_epochs.max(1) as f64
+    }
+
+    fn archs_per_model_epoch_halving(&self) -> f64 {
+        self.pool_models as f64 / self.halving_model_epochs.max(1) as f64
+    }
+
+    /// architectures searched per model-epoch of budget, halving vs full
+    fn search_speedup(&self) -> f64 {
+        self.full_model_epochs as f64 / self.halving_model_epochs.max(1) as f64
+    }
+
+    fn wall_speedup(&self) -> f64 {
+        self.full_s / self.halving_s.max(1e-12)
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -754,6 +1007,7 @@ fn train_bench_json(
     threads: usize,
     seed: u64,
     cells: &[TrainBenchCell],
+    halving: &HalvingBench,
 ) -> String {
     let mut runs = String::new();
     for (i, c) in cells.iter().enumerate() {
@@ -774,8 +1028,22 @@ fn train_bench_json(
             c.model_rows_per_s()
         ));
     }
+    let halving_json = format!(
+        "{{\"pool_models\": {}, \"eta\": {}, \"rung_epochs\": {}, \"full_epochs\": {}, \"halving_model_epochs\": {}, \"full_model_epochs\": {}, \"search_speedup\": {:.4}, \"full_wall_s\": {:.6}, \"halving_wall_s\": {:.6}, \"archs_per_s_full\": {:.2}, \"archs_per_s_halving\": {:.2}}}",
+        halving.pool_models,
+        halving.eta,
+        halving.rung_epochs,
+        halving.full_epochs,
+        halving.halving_model_epochs,
+        halving.full_model_epochs,
+        halving.search_speedup(),
+        halving.full_s,
+        halving.halving_s,
+        halving.archs_per_s_full(),
+        halving.archs_per_s_halving()
+    );
     format!(
-        "{{\n  \"bench\": \"train\",\n  \"generated_by\": \"pmlp train-bench\",\n  \"samples\": {samples},\n  \"features\": {features},\n  \"out\": {out_dim},\n  \"batch\": {batch},\n  \"epochs\": {epochs},\n  \"warmup\": {warmup},\n  \"threads\": {threads},\n  \"seed\": {seed},\n  \"runs\": [\n    {runs}\n  ]\n}}\n"
+        "{{\n  \"bench\": \"train\",\n  \"generated_by\": \"pmlp train-bench\",\n  \"samples\": {samples},\n  \"features\": {features},\n  \"out\": {out_dim},\n  \"batch\": {batch},\n  \"epochs\": {epochs},\n  \"warmup\": {warmup},\n  \"threads\": {threads},\n  \"seed\": {seed},\n  \"halving\": {halving_json},\n  \"runs\": [\n    {runs}\n  ]\n}}\n"
     )
 }
 

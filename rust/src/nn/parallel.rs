@@ -398,6 +398,55 @@ impl ParallelEngine {
         (0..self.layout.n_models()).map(|m| per_slot[self.layout.slot[m]]).collect()
     }
 
+    /// A new engine over only the `keep` models (strictly ascending
+    /// indices into THIS engine's pool) with the fused layout rebuilt —
+    /// the successive-halving compaction step. Freed hidden slots stop
+    /// consuming matmul FLOPs entirely; survivor parameters are
+    /// bit-copied (never re-initialized) and the kernel pin, thread
+    /// count, batch capacity, loss and any per-model feature masks carry
+    /// over, so a survivor's training trajectory after compaction is
+    /// bit-identical to the uncompacted pool's at every thread count and
+    /// kernel (each model's fused forward/backward touches only its own
+    /// spans).
+    pub fn compact(&self, keep: &[usize]) -> anyhow::Result<ParallelEngine> {
+        let layout = self.layout.subset(keep)?;
+        let fused = self.params_fused();
+        let mut packed = FusedParams::zeros(&layout, self.features, self.out);
+        for (new_m, &old_m) in keep.iter().enumerate() {
+            let dense = crate::nn::init::extract_model(&fused, &self.layout, old_m);
+            crate::nn::init::insert_model(&mut packed, &layout, new_m, &dense);
+        }
+        let mut engine = ParallelEngine::new(
+            layout,
+            packed,
+            self.loss,
+            self.features,
+            self.out,
+            self.batch_cap,
+            self.threads,
+        );
+        // carry the kernel pin: `new` captures the process-wide kernel,
+        // which may differ from what this engine was pinned to
+        engine.kcfg = self.kcfg;
+        if let Some(mask) = &self.w1t_mask {
+            // survivor mask columns move with their hidden spans; masked
+            // w1t entries are already zero in the copied bits
+            let h_pad = engine.layout.h_pad();
+            let mut new_mask = Tensor::zeros(&[self.features, h_pad]);
+            for (new_m, &old_m) in keep.iter().enumerate() {
+                let (os, oe) = self.layout.span(old_m);
+                let (ns, _) = engine.layout.span(new_m);
+                for j in 0..self.features {
+                    for i in 0..oe - os {
+                        new_mask.set2(j, ns + i, mask.at2(j, os + i));
+                    }
+                }
+            }
+            engine.w1t_mask = Some(new_mask);
+        }
+        Ok(engine)
+    }
+
     /// (losses, metrics) per model in ORIGINAL order for a batch.
     pub fn evaluate(&mut self, x: &Tensor, targets: &Tensor) -> (Vec<f32>, Vec<f32>) {
         let logits = self.forward(x);
@@ -635,6 +684,110 @@ mod tests {
         // data (grad through zeroed x is 0 too) -> should agree everywhere
         let diff = fused_m.max_abs_diff(&seq.params);
         assert!(diff < 1e-5, "masked fused vs masked-data sequential: {diff}");
+    }
+
+    #[test]
+    fn compact_copies_survivor_bits_exactly() {
+        let spec = smoke_spec();
+        let layout = PoolLayout::build(&spec);
+        let fused0 = init_pool(31, &layout, F, O);
+        let mut engine = ParallelEngine::new(layout.clone(), fused0, Loss::Mse, F, O, B, 2);
+        let mut rng = Rng::new(56);
+        let (x, y) = data(&mut rng, B);
+        for _ in 0..3 {
+            engine.step(&x, &y, 0.05);
+        }
+        let trained = engine.params_fused();
+        let keep = [1usize, 3, 4];
+        let small = engine.compact(&keep).unwrap();
+        assert_eq!(small.layout.n_models(), 3);
+        assert!(small.layout.h_pad() <= engine.layout.h_pad());
+        let packed = small.params_fused();
+        for (new_m, &old_m) in keep.iter().enumerate() {
+            let a = extract_model(&trained, &engine.layout, old_m);
+            let b_ = extract_model(&packed, &small.layout, new_m);
+            // bit-copy, not merely close
+            assert!(a.w1.data().iter().zip(b_.w1.data()).all(|(p, q)| p.to_bits() == q.to_bits()));
+            assert!(a.b1.data().iter().zip(b_.b1.data()).all(|(p, q)| p.to_bits() == q.to_bits()));
+            assert!(a.w2.data().iter().zip(b_.w2.data()).all(|(p, q)| p.to_bits() == q.to_bits()));
+            assert!(a.b2.data().iter().zip(b_.b2.data()).all(|(p, q)| p.to_bits() == q.to_bits()));
+        }
+        assert!(crate::nn::init::pads_are_zero(&packed, &small.layout));
+    }
+
+    #[test]
+    fn compacted_training_matches_uncompacted_survivors() {
+        // train 2 steps fused; compact to a survivor subset; train 2 more
+        // steps on both the compacted and the uncompacted pool: survivor
+        // params must agree BIT-identically (the halving guarantee)
+        let spec = smoke_spec();
+        let layout = PoolLayout::build(&spec);
+        let fused0 = init_pool(37, &layout, F, O);
+        let mut rng = Rng::new(57);
+        let (x, y) = data(&mut rng, B);
+        for threads in [1usize, 4] {
+            let mut full =
+                ParallelEngine::new(layout.clone(), fused0.clone(), Loss::Mse, F, O, B, threads);
+            for _ in 0..2 {
+                full.step(&x, &y, 0.05);
+            }
+            let keep = [0usize, 2, 5];
+            let mut small = full.compact(&keep).unwrap();
+            let mut small_losses = Vec::new();
+            let mut full_losses = Vec::new();
+            for _ in 0..2 {
+                small_losses = small.step(&x, &y, 0.05);
+                full_losses = full.step(&x, &y, 0.05);
+            }
+            let pf = full.params_fused();
+            let ps = small.params_fused();
+            for (new_m, &old_m) in keep.iter().enumerate() {
+                let a = extract_model(&pf, &full.layout, old_m);
+                let b_ = extract_model(&ps, &small.layout, new_m);
+                assert!(
+                    a.w1.data().iter().zip(b_.w1.data()).all(|(p, q)| p.to_bits() == q.to_bits())
+                        && a.w2.data().iter().zip(b_.w2.data()).all(|(p, q)| p.to_bits() == q.to_bits()),
+                    "threads {threads}, survivor {old_m}: compacted trajectory diverged"
+                );
+                assert_eq!(
+                    small_losses[new_m].to_bits(),
+                    full_losses[old_m].to_bits(),
+                    "threads {threads}, survivor {old_m}: loss diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compact_carries_feature_masks() {
+        let spec = PoolSpec::new(vec![(3, Act::Relu); 3]).unwrap();
+        let layout = PoolLayout::build(&spec);
+        let fused0 = init_pool(43, &layout, F, O);
+        let mut engine = ParallelEngine::new(layout.clone(), fused0, Loss::Mse, F, O, B, 1);
+        let masks = vec![
+            vec![true, true, true, true],
+            vec![true, true, false, false],
+            vec![false, false, true, true],
+        ];
+        engine.set_feature_masks(&masks);
+        let mut small = engine.compact(&[1, 2]).unwrap();
+        let mut rng = Rng::new(62);
+        let (x, y) = data(&mut rng, B);
+        for _ in 0..4 {
+            small.step(&x, &y, 0.1);
+        }
+        let trained = small.params_fused();
+        for (new_m, &old_m) in [1usize, 2].iter().enumerate() {
+            let dense = extract_model(&trained, &small.layout, new_m);
+            for (j, &keepf) in masks[old_m].iter().enumerate() {
+                if keepf {
+                    continue;
+                }
+                for r in 0..3 {
+                    assert_eq!(dense.w1.at2(r, j), 0.0, "survivor {old_m} masked feature {j} leaked");
+                }
+            }
+        }
     }
 
     #[test]

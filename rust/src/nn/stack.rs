@@ -779,6 +779,33 @@ impl LayerStack {
         DenseStack { layers, act: self.models[m].act }
     }
 
+    /// A stack over the `keep` subset of this pool's models (strictly
+    /// ascending ORIGINAL indices) — the successive-halving compaction
+    /// step for deep pools. The survivor stack is `LayerStack::new` over
+    /// the kept models, so freed spans and their block-diagonal inner
+    /// blocks vanish (and the stack depth itself shrinks when the
+    /// deepest models were cut). Structure only; pair with
+    /// [`LayerStack::extract`]/[`LayerStack::insert`] to carry parameter
+    /// bits across — compaction never re-initializes.
+    pub fn subset(&self, keep: &[usize]) -> anyhow::Result<LayerStack> {
+        anyhow::ensure!(!keep.is_empty(), "compaction must keep at least one model");
+        anyhow::ensure!(
+            keep.windows(2).all(|w| w[0] < w[1]),
+            "keep indices must be strictly ascending: {keep:?}"
+        );
+        let last = *keep.last().expect("non-empty");
+        anyhow::ensure!(
+            last < self.n_models(),
+            "keep index {last} out of range ({} models)",
+            self.n_models()
+        );
+        LayerStack::new(
+            keep.iter().map(|&m| self.models[m].clone()).collect(),
+            self.features,
+            self.out,
+        )
+    }
+
     /// Write one model's dense parameters into the fused pool (inverse of
     /// [`LayerStack::extract`]; checkpoints rebuild pools through this).
     pub fn insert(&self, p: &mut StackParams, m: usize, dense: &DenseStack) -> anyhow::Result<()> {
@@ -907,6 +934,20 @@ impl DenseStack {
 
     pub fn out(&self) -> usize {
         self.layers.last().expect("non-empty").w.rows()
+    }
+
+    /// Bit-level equality with another dense model (NaN-safe; float `==`
+    /// would call NaN != NaN). This is the survivor-identity predicate
+    /// the halving scheduler's guarantees are asserted with.
+    pub fn bits_equal(&self, other: &DenseStack) -> bool {
+        self.act == other.act
+            && self.layers.len() == other.layers.len()
+            && self.layers.iter().zip(&other.layers).all(|(a, b)| {
+                a.w.shape() == b.w.shape()
+                    && a.b.shape() == b.b.shape()
+                    && a.w.data().iter().zip(b.w.data()).all(|(p, q)| p.to_bits() == q.to_bits())
+                    && a.b.data().iter().zip(b.b.data()).all(|(p, q)| p.to_bits() == q.to_bits())
+            })
     }
 
     pub fn max_abs_diff(&self, other: &DenseStack) -> f32 {
@@ -1172,6 +1213,70 @@ mod tests {
         // wrong-shape insert is rejected
         let wrong = stack.extract(&p, 0);
         assert!(stack.insert(&mut rebuilt, 2, &wrong).is_err());
+    }
+
+    #[test]
+    fn subset_stack_preserves_survivor_bits_and_drops_depth() {
+        let stack = ragged_stack(); // depths 1, 2, 3, 1
+        let p = stack.init(41);
+        // cut the depth-3 model: the survivor stack must shrink to depth 2
+        let keep = [0usize, 1, 3];
+        let sub = stack.subset(&keep).unwrap();
+        assert_eq!(sub.n_models(), 3);
+        assert_eq!(sub.depth(), 2);
+        let mut sp = sub.zeros();
+        for (new_m, &old_m) in keep.iter().enumerate() {
+            sub.insert(&mut sp, new_m, &stack.extract(&p, old_m)).unwrap();
+        }
+        // extraction from the compacted stack returns the same bits
+        for (new_m, &old_m) in keep.iter().enumerate() {
+            let a = stack.extract(&p, old_m);
+            let b = sub.extract(&sp, new_m);
+            assert_eq!(a.layers.len(), b.layers.len());
+            for (la, lb) in a.layers.iter().zip(&b.layers) {
+                assert!(la.w.data().iter().zip(lb.w.data()).all(|(x, y)| x.to_bits() == y.to_bits()));
+                assert!(la.b.data().iter().zip(lb.b.data()).all(|(x, y)| x.to_bits() == y.to_bits()));
+            }
+        }
+        // invalid keep lists are rejected
+        assert!(stack.subset(&[]).is_err());
+        assert!(stack.subset(&[2, 1]).is_err());
+        assert!(stack.subset(&[0, 4]).is_err());
+    }
+
+    #[test]
+    fn subset_stack_training_matches_uncompacted_survivors() {
+        // the deep-pool half of the halving guarantee: after compaction a
+        // survivor's SGD trajectory is bit-identical to the full pool's
+        let stack = ragged_stack();
+        let mut p = stack.init(47);
+        let (x, y) = data(19, 8);
+        for _ in 0..2 {
+            stack.step(&mut p, &x, &y, Loss::Mse, 0.05, 2);
+        }
+        let keep = [1usize, 2];
+        let sub = stack.subset(&keep).unwrap();
+        let mut sp = sub.zeros();
+        for (new_m, &old_m) in keep.iter().enumerate() {
+            sub.insert(&mut sp, new_m, &stack.extract(&p, old_m)).unwrap();
+        }
+        let mut full_losses = Vec::new();
+        let mut sub_losses = Vec::new();
+        for _ in 0..3 {
+            full_losses = stack.step(&mut p, &x, &y, Loss::Mse, 0.05, 2);
+            sub_losses = sub.step(&mut sp, &x, &y, Loss::Mse, 0.05, 3);
+        }
+        for (new_m, &old_m) in keep.iter().enumerate() {
+            assert_eq!(sub_losses[new_m].to_bits(), full_losses[old_m].to_bits());
+            let a = stack.extract(&p, old_m);
+            let b = sub.extract(&sp, new_m);
+            for (la, lb) in a.layers.iter().zip(&b.layers) {
+                assert!(
+                    la.w.data().iter().zip(lb.w.data()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "survivor {old_m} diverged after compaction"
+                );
+            }
+        }
     }
 
     #[test]

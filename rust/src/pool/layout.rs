@@ -261,6 +261,30 @@ impl PoolLayout {
         let h = self.h_pad();
         4 * (h * features + h + out * h + self.m_pad() * out)
     }
+
+    /// Layout over the `keep` subset of this pool's models (strictly
+    /// ascending ORIGINAL indices) — the successive-halving compaction
+    /// step. The result is `PoolLayout::build` over the survivor spec,
+    /// i.e. exactly the layout the survivors would get as a pool of
+    /// their own: freed hidden slots and their pad rows vanish instead
+    /// of burning matmul FLOPs. Structure only; pair with
+    /// `extract_model`/`insert_model` to carry parameter bits across.
+    pub fn subset(&self, keep: &[usize]) -> anyhow::Result<PoolLayout> {
+        anyhow::ensure!(!keep.is_empty(), "compaction must keep at least one model");
+        anyhow::ensure!(
+            keep.windows(2).all(|w| w[0] < w[1]),
+            "keep indices must be strictly ascending: {keep:?}"
+        );
+        let last = *keep.last().expect("non-empty");
+        anyhow::ensure!(
+            last < self.n_models(),
+            "keep index {last} out of range ({} models)",
+            self.n_models()
+        );
+        let models = self.spec.models();
+        let sub = PoolSpec::new(keep.iter().map(|&m| models[m]).collect())?;
+        Ok(PoolLayout::build(&sub))
+    }
 }
 
 #[cfg(test)]
@@ -401,6 +425,40 @@ mod tests {
             );
             assert!(lay.padding_efficiency() <= 1.0);
         }
+    }
+
+    #[test]
+    fn subset_layout_is_the_survivors_own_layout() {
+        let s = spec(&[(2, 1), (3, 3), (2, 2), (1, 0), (4, 1)]);
+        let lay = PoolLayout::build(&s);
+        let keep = [0usize, 2, 4];
+        let sub = lay.subset(&keep).unwrap();
+        check_invariants(&sub);
+        assert_eq!(sub.n_models(), 3);
+        // survivor k of the subset is original model keep[k]
+        for (k, &m) in keep.iter().enumerate() {
+            assert_eq!(sub.spec().models()[k], s.models()[m]);
+        }
+        // identical to building the survivor pool from scratch
+        let direct = PoolLayout::build(
+            &PoolSpec::new(keep.iter().map(|&m| s.models()[m]).collect()).unwrap(),
+        );
+        assert_eq!(sub.checksum(), direct.checksum());
+        // freed slots no longer cost padded rows
+        assert!(sub.h_pad() <= lay.h_pad());
+    }
+
+    #[test]
+    fn subset_rejects_bad_keep_lists() {
+        let s = spec(&[(2, 0), (3, 1), (2, 2)]);
+        let lay = PoolLayout::build(&s);
+        assert!(lay.subset(&[]).is_err());
+        assert!(lay.subset(&[1, 0]).is_err()); // not ascending
+        assert!(lay.subset(&[0, 0]).is_err()); // duplicate
+        assert!(lay.subset(&[0, 3]).is_err()); // out of range
+        // keeping everything is a valid no-op subset
+        let all = lay.subset(&[0, 1, 2]).unwrap();
+        assert_eq!(all.checksum(), lay.checksum());
     }
 
     #[test]

@@ -1,0 +1,556 @@
+//! Successive-halving architecture search with fused-pool compaction.
+//!
+//! The paper's headline metric is architectures-searched per unit of
+//! compute, yet full training spends most of the fused matmul's FLOPs on
+//! models that are already provably losing. The halving scheduler turns
+//! the same budget into an order of magnitude more architectures: train
+//! the whole pool for `rung_epochs`, rank on validation loss, keep the
+//! top `1/eta` fraction, and — the part that actually returns the FLOPs —
+//! **compact the fused layout** so freed hidden slots stop participating
+//! in the matmuls at all ([`ParallelEngine::compact`] /
+//! [`DeepEngine::compact`] rebuild the packing for the survivors only).
+//!
+//! Guarantees, inherited from the engines' per-model independence:
+//!
+//! * **Survivor bit-identity** — compaction bit-copies parameters (never
+//!   re-initializes), carries the kernel pin and thread count, and each
+//!   model's fused forward/backward touches only its own spans/blocks,
+//!   so a survivor's trajectory is bit-identical to the same model
+//!   trained without compaction, at every thread count and kernel.
+//! * **Deterministic cuts** — rungs rank through
+//!   [`rank_models`](super::rank_models), which breaks exact loss ties
+//!   by original model index, so rung cuts (which land on tied losses in
+//!   quantized-loss regimes) are reproducible.
+//! * **Complete ranking** — every model keeps its ORIGINAL pool id; cut
+//!   models are frozen (parameters + score at the cut) so the final
+//!   report ranks the full pool and `pmlp export` can checkpoint a
+//!   halved session like any other.
+//!
+//! The scheduler drives training through [`TrainSession`]'s observer
+//! hooks ([`RungProgress`] narrates rung/epoch progress) and is generic
+//! over any [`CompactableEngine`], so one implementation serves shallow
+//! pools, mixed-depth stacks, and multi-arm (k-fold) scoring.
+
+use crate::coordinator::{
+    eval_on_dataset, stack_ranking_spec, Control, DeepEngine, EpochCtx, Observer, PoolEngine,
+    TrainSession,
+};
+use crate::data::Dataset;
+use crate::nn::loss::Loss;
+use crate::nn::parallel::ParallelEngine;
+use crate::nn::stack::DenseStack;
+use crate::pool::PoolSpec;
+use crate::selection::{rank_models, RankedModel};
+
+/// Knobs of one halving run.
+#[derive(Clone, Copy, Debug)]
+pub struct HalvingConfig {
+    /// Keep `1/eta` of the pool per rung (classic successive halving;
+    /// eta = 3 is the usual sweet spot).
+    pub eta: usize,
+    /// Epochs each rung trains before the cut.
+    pub rung_epochs: usize,
+}
+
+impl HalvingConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.eta >= 2, "--eta must be >= 2 (got {})", self.eta);
+        anyhow::ensure!(
+            self.rung_epochs >= 1,
+            "--rung-epochs must be >= 1 (got {})",
+            self.rung_epochs
+        );
+        Ok(())
+    }
+}
+
+/// Pool sizes entering each rung: `[n, n/eta, n/eta², …, 1]` (integer
+/// division, floored at 1, always ending at a single winner).
+pub fn rung_sizes(n: usize, eta: usize) -> Vec<usize> {
+    let mut sizes = vec![n.max(1)];
+    let mut cur = n.max(1);
+    while cur > 1 {
+        cur = (cur / eta).max(1);
+        sizes.push(cur);
+    }
+    sizes
+}
+
+/// Local (current-pool) indices of the `keep_n` best models, ascending —
+/// the shape engine compaction expects. Determinism on exactly-equal
+/// losses comes from `rank_models`' index tie-break.
+pub fn survivors(ranked: &[RankedModel], keep_n: usize) -> Vec<usize> {
+    let mut keep: Vec<usize> =
+        ranked[..keep_n.min(ranked.len())].iter().map(|r| r.index).collect();
+    keep.sort_unstable();
+    keep
+}
+
+/// An engine the halving scheduler can shrink: any [`PoolEngine`] with a
+/// bit-copy compaction step and a spec describing its CURRENT pool.
+pub trait CompactableEngine: PoolEngine {
+    /// A new engine over the `keep` subset (strictly ascending indices
+    /// into this engine's current pool), parameters bit-copied.
+    fn compact_keep(&self, keep: &[usize]) -> anyhow::Result<Self>
+    where
+        Self: Sized;
+
+    /// Spec of the models currently in the pool (first hidden width +
+    /// activation — what the ranking pipeline speaks).
+    fn local_spec(&self) -> anyhow::Result<PoolSpec>;
+}
+
+impl CompactableEngine for ParallelEngine {
+    fn compact_keep(&self, keep: &[usize]) -> anyhow::Result<Self> {
+        self.compact(keep)
+    }
+
+    fn local_spec(&self) -> anyhow::Result<PoolSpec> {
+        Ok(self.layout.spec().clone())
+    }
+}
+
+impl CompactableEngine for DeepEngine {
+    fn compact_keep(&self, keep: &[usize]) -> anyhow::Result<Self> {
+        self.compact(keep)
+    }
+
+    fn local_spec(&self) -> anyhow::Result<PoolSpec> {
+        stack_ranking_spec(self.stack())
+    }
+}
+
+/// One scoring arm: an engine plus the train/val pair it runs on. A
+/// plain run has one arm; `--folds k` scores each rung by the MEAN
+/// validation loss across k arms (each fold standardized train-side
+/// only), cutting the same models in every arm.
+pub struct HalvingArm<E> {
+    pub engine: E,
+    pub train: Dataset,
+    pub val: Dataset,
+}
+
+/// A model frozen at its cut: dense parameters plus the (arm-mean)
+/// validation score that cut it. Halved-session exports serve these for
+/// every retired model.
+#[derive(Clone, Debug)]
+pub struct FrozenModel {
+    pub dense: DenseStack,
+    pub val_loss: f32,
+    pub val_metric: f32,
+}
+
+/// One rung's outcome, all ids GLOBAL (original pool).
+#[derive(Clone, Debug)]
+pub struct HalvingRung {
+    /// models entering the rung
+    pub entering: usize,
+    /// epochs trained this rung
+    pub epochs: usize,
+    /// survivors after the cut, ascending (every live model on the final rung)
+    pub survivors: Vec<usize>,
+    /// cut models, best-first among the dropped (empty on the final rung)
+    pub cut: Vec<usize>,
+}
+
+/// The full schedule report.
+#[derive(Clone, Debug)]
+pub struct HalvingReport {
+    pub n_models: usize,
+    pub eta: usize,
+    pub rung_epochs: usize,
+    pub rungs: Vec<HalvingRung>,
+    /// complete best-first ranking of the ORIGINAL pool: final survivors
+    /// by their last score, then retired models in reverse cut order
+    /// (best-first within each cut)
+    pub ranked: Vec<RankedModel>,
+}
+
+impl HalvingReport {
+    /// Total model-epochs the schedule spent (the budget actually paid):
+    /// Σ over rungs of `entering × epochs`.
+    pub fn model_epochs(&self) -> usize {
+        self.rungs.iter().map(|r| r.entering * r.epochs).sum()
+    }
+
+    /// Architectures-searched advantage over training every model for
+    /// `full_epochs`: `(n × full_epochs) / model_epochs` — the factor by
+    /// which halving stretches the same epoch budget.
+    pub fn search_speedup(&self, full_epochs: usize) -> f64 {
+        let full = (self.n_models * full_epochs.max(1)) as f64;
+        full / self.model_epochs().max(1) as f64
+    }
+}
+
+/// A finished halving run: the compacted arms (winner pool), which
+/// global ids are still live, the frozen retirees, and the report.
+pub struct HalvingRun<E> {
+    pub arms: Vec<HalvingArm<E>>,
+    /// global ids still in the (fully-halved) pool, ascending
+    pub live: Vec<usize>,
+    /// per ORIGINAL model: `Some` iff it was cut before the final rung
+    pub frozen: Vec<Option<FrozenModel>>,
+    pub report: HalvingReport,
+}
+
+impl<E: CompactableEngine> HalvingRun<E> {
+    /// Dense parameters of the FULL original pool: live models extracted
+    /// from arm 0's final engine, retired models as frozen at their cut.
+    /// This is what a halved-session checkpoint persists — global ids
+    /// intact, every model servable.
+    pub fn full_pool(&self) -> anyhow::Result<Vec<DenseStack>> {
+        let n = self.report.n_models;
+        let mut out: Vec<Option<DenseStack>> = (0..n).map(|_| None).collect();
+        let arm0 = self.arms.first().ok_or_else(|| anyhow::anyhow!("halving run has no arms"))?;
+        for (local, &g) in self.live.iter().enumerate() {
+            out[g] = Some(arm0.engine.extract(local)?.into_stack());
+        }
+        for (g, f) in self.frozen.iter().enumerate() {
+            if let Some(f) = f {
+                anyhow::ensure!(out[g].is_none(), "model {g} is both live and frozen");
+                out[g] = Some(f.dense.clone());
+            }
+        }
+        out.into_iter()
+            .enumerate()
+            .map(|(g, d)| d.ok_or_else(|| anyhow::anyhow!("model {g} neither live nor frozen")))
+            .collect()
+    }
+}
+
+/// Observer narrating rung progress through the `TrainSession` hook.
+pub struct RungProgress {
+    pub rung: usize,
+    pub rungs: usize,
+    pub arm: usize,
+    pub arms: usize,
+    pub entering: usize,
+}
+
+impl Observer for RungProgress {
+    fn on_epoch(&mut self, ctx: &EpochCtx) -> Control {
+        let arm = if self.arms > 1 {
+            format!(" arm {}/{}", self.arm + 1, self.arms)
+        } else {
+            String::new()
+        };
+        eprintln!(
+            "[halving] rung {}/{} ({} models){arm} epoch {}/{}: train {:.4} ({:.3}s)",
+            self.rung + 1,
+            self.rungs,
+            self.entering,
+            ctx.epoch + 1,
+            ctx.epochs,
+            ctx.train_loss,
+            ctx.epoch_time_s
+        );
+        Control::Continue
+    }
+}
+
+/// Run the full successive-halving schedule over `arms`.
+///
+/// Each rung trains every arm `rung_epochs` through the generic
+/// [`TrainSession`] loop (same batches every rung — no shuffle — so E
+/// rungs of r epochs is EXACTLY one continuous run of E·r epochs),
+/// scores by arm-mean validation loss/metric, freezes the cut models
+/// from arm 0, and compacts every arm to the survivors. Early stopping
+/// is deliberately absent: the rung schedule IS the budgeter.
+pub fn halving_run<E: CompactableEngine>(
+    mut arms: Vec<HalvingArm<E>>,
+    batch: usize,
+    lr: f32,
+    loss: Loss,
+    cfg: &HalvingConfig,
+    progress: bool,
+) -> anyhow::Result<HalvingRun<E>> {
+    cfg.validate()?;
+    anyhow::ensure!(!arms.is_empty(), "halving needs at least one arm");
+    let spec0 = arms[0].engine.local_spec()?;
+    let n = spec0.n_models();
+    for (ai, arm) in arms.iter().enumerate() {
+        anyhow::ensure!(
+            arm.engine.n_models() == n,
+            "arm {ai} has {} models, arm 0 has {n}",
+            arm.engine.n_models()
+        );
+    }
+    let n_arms = arms.len();
+    let sizes = rung_sizes(n, cfg.eta);
+    let mut live: Vec<usize> = (0..n).collect();
+    let mut frozen: Vec<Option<FrozenModel>> = (0..n).map(|_| None).collect();
+    let mut rungs: Vec<HalvingRung> = Vec::with_capacity(sizes.len());
+    let mut final_local: Option<Vec<RankedModel>> = None;
+
+    for (ri, &entering) in sizes.iter().enumerate() {
+        debug_assert_eq!(entering, live.len());
+        // 1) train every arm for the rung budget
+        for (ai, arm) in arms.iter_mut().enumerate() {
+            let HalvingArm { engine, train, .. } = arm;
+            let mut session = TrainSession::builder()
+                .train_data(train)
+                .batches(batch, false)
+                .epochs(cfg.rung_epochs)
+                .lr(lr);
+            if progress {
+                session = session.observer(Box::new(RungProgress {
+                    rung: ri,
+                    rungs: sizes.len(),
+                    arm: ai,
+                    arms: n_arms,
+                    entering,
+                }));
+            }
+            session.run(engine)?;
+        }
+        // 2) score: arm-mean validation loss/metric
+        let mut mean_l = vec![0.0f32; entering];
+        let mut mean_m = vec![0.0f32; entering];
+        for arm in arms.iter_mut() {
+            let HalvingArm { engine, val, .. } = arm;
+            let (l, m) = eval_on_dataset(engine, 0, val, batch)?;
+            anyhow::ensure!(l.len() == entering, "arm eval returned {} losses", l.len());
+            for i in 0..entering {
+                mean_l[i] += l[i] / n_arms as f32;
+                mean_m[i] += m[i] / n_arms as f32;
+            }
+        }
+        // a model whose mean loss went non-finite must rank last under CE
+        // too (same poisoning kfold_rank applies)
+        for (m, l) in mean_m.iter_mut().zip(&mean_l) {
+            if !l.is_finite() {
+                *m = f32::NAN;
+            }
+        }
+        let local_spec = arms[0].engine.local_spec()?;
+        let ranked = rank_models(&local_spec, &mean_l, &mean_m, loss);
+
+        if ri + 1 == sizes.len() {
+            rungs.push(HalvingRung {
+                entering,
+                epochs: cfg.rung_epochs,
+                survivors: live.clone(),
+                cut: Vec::new(),
+            });
+            final_local = Some(ranked);
+            break;
+        }
+        // 3) cut: freeze the dropped models (from arm 0) at this score
+        let keep_n = sizes[ri + 1];
+        let keep = survivors(&ranked, keep_n);
+        let mut cut = Vec::with_capacity(entering - keep_n);
+        for r in &ranked[keep_n..] {
+            let g = live[r.index];
+            frozen[g] = Some(FrozenModel {
+                dense: arms[0].engine.extract(r.index)?.into_stack(),
+                val_loss: r.val_loss,
+                val_metric: r.val_metric,
+            });
+            cut.push(g);
+        }
+        let survivors_global: Vec<usize> = keep.iter().map(|&l| live[l]).collect();
+        if progress {
+            eprintln!(
+                "[halving] rung {}/{}: cut {} -> {} models (dropped {:?})",
+                ri + 1,
+                sizes.len(),
+                entering,
+                keep_n,
+                cut
+            );
+        }
+        rungs.push(HalvingRung {
+            entering,
+            epochs: cfg.rung_epochs,
+            survivors: survivors_global.clone(),
+            cut,
+        });
+        // 4) compact every arm to the survivors (freed slots stop
+        // consuming matmul FLOPs from the next rung on)
+        for arm in arms.iter_mut() {
+            arm.engine = arm.engine.compact_keep(&keep)?;
+        }
+        live = survivors_global;
+    }
+
+    // complete global ranking: final survivors best-first, then retirees
+    // in reverse cut order (later cuts trained longer), best-first within
+    // each cut
+    let final_local = final_local.expect("rung loop ran");
+    let mut ranked: Vec<RankedModel> = Vec::with_capacity(n);
+    let global_entry = |g: usize, val_loss: f32, val_metric: f32| RankedModel {
+        index: g,
+        hidden: spec0.models()[g].0,
+        act: spec0.models()[g].1,
+        val_loss,
+        val_metric,
+    };
+    for r in &final_local {
+        ranked.push(global_entry(live[r.index], r.val_loss, r.val_metric));
+    }
+    for rung in rungs.iter().rev() {
+        for &g in &rung.cut {
+            let f = frozen[g].as_ref().expect("cut models are frozen");
+            ranked.push(global_entry(g, f.val_loss, f.val_metric));
+        }
+    }
+    debug_assert_eq!(ranked.len(), n);
+
+    Ok(HalvingRun {
+        arms,
+        live,
+        frozen,
+        report: HalvingReport {
+            n_models: n,
+            eta: cfg.eta,
+            rung_epochs: cfg.rung_epochs,
+            rungs,
+            ranked,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::nn::act::Act;
+    use crate::nn::init::init_pool;
+    use crate::pool::PoolLayout;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rung_sizes_follow_eta() {
+        assert_eq!(rung_sizes(27, 3), vec![27, 9, 3, 1]);
+        assert_eq!(rung_sizes(10, 2), vec![10, 5, 2, 1]);
+        assert_eq!(rung_sizes(5, 3), vec![5, 1]);
+        assert_eq!(rung_sizes(1, 3), vec![1]);
+        assert_eq!(rung_sizes(0, 3), vec![1]);
+    }
+
+    #[test]
+    fn budget_arithmetic_matches_the_bench_claim() {
+        // the train-bench workload: 27 models, eta 3, 1 epoch per rung
+        // vs 8 full epochs -> 216 / 40 = 5.4x architectures per budget
+        let report = HalvingReport {
+            n_models: 27,
+            eta: 3,
+            rung_epochs: 1,
+            rungs: rung_sizes(27, 3)
+                .into_iter()
+                .map(|entering| HalvingRung {
+                    entering,
+                    epochs: 1,
+                    survivors: vec![],
+                    cut: vec![],
+                })
+                .collect(),
+            ranked: vec![],
+        };
+        assert_eq!(report.model_epochs(), 27 + 9 + 3 + 1);
+        assert!((report.search_speedup(8) - 5.4).abs() < 1e-12);
+        assert!(report.search_speedup(8) >= 3.0, "the acceptance floor");
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(HalvingConfig { eta: 1, rung_epochs: 1 }.validate().is_err());
+        assert!(HalvingConfig { eta: 2, rung_epochs: 0 }.validate().is_err());
+        assert!(HalvingConfig { eta: 3, rung_epochs: 2 }.validate().is_ok());
+    }
+
+    #[test]
+    fn tied_losses_cut_deterministically_by_index() {
+        // exactly-equal losses: the cut must drop the HIGHER indices
+        // (rank_models tie-breaks by index), reproducibly
+        let spec = PoolSpec::new(vec![(2, Act::Relu); 6]).unwrap();
+        let losses = vec![0.5f32; 6];
+        let ranked = rank_models(&spec, &losses, &losses, Loss::Mse);
+        assert_eq!(survivors(&ranked, 2), vec![0, 1]);
+        let dropped: Vec<usize> = ranked[2..].iter().map(|r| r.index).collect();
+        assert_eq!(dropped, vec![2, 3, 4, 5]);
+    }
+
+    fn tiny_arm(seed: u64, threads: usize) -> HalvingArm<ParallelEngine> {
+        let spec = PoolSpec::new(vec![
+            (2, Act::Relu),
+            (4, Act::Relu),
+            (2, Act::Tanh),
+            (4, Act::Tanh),
+            (3, Act::Sigmoid),
+            (1, Act::Identity),
+        ])
+        .unwrap();
+        let layout = PoolLayout::build(&spec);
+        let fused = init_pool(seed, &layout, 5, 2);
+        let engine = ParallelEngine::new(layout, fused, Loss::Mse, 5, 2, 16, threads);
+        let mut rng = Rng::new(seed ^ 0xA11);
+        let ds = data::random_regression(96, 5, 2, &mut rng);
+        let split = ds.split(0.75, 0.25, &mut rng);
+        HalvingArm { engine, train: split.train, val: split.val }
+    }
+
+    #[test]
+    fn halving_run_schedule_and_ranking_are_complete() {
+        let cfg = HalvingConfig { eta: 2, rung_epochs: 1 };
+        let run = halving_run(vec![tiny_arm(3, 1)], 16, 0.05, Loss::Mse, &cfg, false).unwrap();
+        // 6 -> 3 -> 1
+        let sizes: Vec<usize> = run.report.rungs.iter().map(|r| r.entering).collect();
+        assert_eq!(sizes, vec![6, 3, 1]);
+        assert_eq!(run.live.len(), 1);
+        assert_eq!(run.report.model_epochs(), 10);
+        // complete global ranking, no duplicate ids
+        assert_eq!(run.report.ranked.len(), 6);
+        let mut ids: Vec<usize> = run.report.ranked.iter().map(|r| r.index).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..6).collect::<Vec<_>>());
+        // winner is the single live model
+        assert_eq!(run.report.ranked[0].index, run.live[0]);
+        // every non-winner is frozen; the winner is not
+        for g in 0..6 {
+            assert_eq!(run.frozen[g].is_some(), g != run.live[0], "model {g}");
+        }
+        // full pool reassembles every model with its own architecture
+        let pool = run.full_pool().unwrap();
+        assert_eq!(pool.len(), 6);
+        let spec = [(2u32, 5usize), (4, 5), (2, 5), (4, 5), (3, 5), (1, 5)];
+        for (g, d) in pool.iter().enumerate() {
+            assert_eq!(d.hidden() as u32, spec[g].0, "model {g}");
+            assert_eq!(d.features(), spec[g].1);
+        }
+    }
+
+    #[test]
+    fn halving_run_is_deterministic() {
+        let cfg = HalvingConfig { eta: 2, rung_epochs: 2 };
+        let a = halving_run(vec![tiny_arm(7, 2)], 16, 0.05, Loss::Mse, &cfg, false).unwrap();
+        let b = halving_run(vec![tiny_arm(7, 2)], 16, 0.05, Loss::Mse, &cfg, false).unwrap();
+        assert_eq!(a.live, b.live);
+        let oa: Vec<usize> = a.report.ranked.iter().map(|r| r.index).collect();
+        let ob: Vec<usize> = b.report.ranked.iter().map(|r| r.index).collect();
+        assert_eq!(oa, ob);
+        for (ra, rb) in a.report.ranked.iter().zip(&b.report.ranked) {
+            assert_eq!(ra.val_loss.to_bits(), rb.val_loss.to_bits());
+        }
+    }
+
+    #[test]
+    fn multi_arm_scoring_cuts_the_same_models_in_every_arm() {
+        let cfg = HalvingConfig { eta: 2, rung_epochs: 1 };
+        // two arms with different data draws but identical pools
+        let run = halving_run(
+            vec![tiny_arm(3, 1), tiny_arm(9, 1)],
+            16,
+            0.05,
+            Loss::Mse,
+            &cfg,
+            false,
+        )
+        .unwrap();
+        assert_eq!(run.arms.len(), 2);
+        // both arms finished compacted to the same single survivor
+        assert_eq!(run.arms[0].engine.n_models(), 1);
+        assert_eq!(run.arms[1].engine.n_models(), 1);
+        assert_eq!(run.live.len(), 1);
+    }
+}

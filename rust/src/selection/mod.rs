@@ -3,8 +3,13 @@
 //! validation metric (§5: "performing a very efficient grid-search in the
 //! discrete hyper-parameter space").
 
+pub mod halving;
 pub mod kfold;
 
+pub use halving::{
+    halving_run, rung_sizes, survivors, CompactableEngine, FrozenModel, HalvingArm,
+    HalvingConfig, HalvingReport, HalvingRun, HalvingRung, RungProgress,
+};
 pub use kfold::{kfold_indices, kfold_rank, stratified_kfold_indices, KfoldReport};
 
 use crate::nn::act::Act;
@@ -25,6 +30,11 @@ pub struct RankedModel {
 
 /// Rank all models best-first: CE maximizes accuracy (loss breaks ties),
 /// MSE minimizes loss. NaN losses rank last (diverged models).
+///
+/// Exactly-equal keys break ties by ORIGINAL pool index (ascending), so
+/// the ranking — and everything downstream of it: [`top_k_indices`], the
+/// [`report`] table, and the halving scheduler's rung cuts — is fully
+/// deterministic even when many models land on the same quantized loss.
 pub fn rank_models(
     spec: &PoolSpec,
     val_losses: &[f32],
@@ -66,7 +76,8 @@ pub fn top_k(ranked: &[RankedModel], k: usize) -> &[RankedModel] {
 }
 
 /// Original-pool indices of the best-first top-k — what `pmlp export`
-/// hands to the checkpoint/registry side.
+/// hands to the checkpoint/registry side. Ties inherit `rank_models`'
+/// index tie-break, so equal-loss models yield a stable index order.
 pub fn top_k_indices(ranked: &[RankedModel], k: usize) -> Vec<usize> {
     top_k(ranked, k).iter().map(|r| r.index).collect()
 }
@@ -165,6 +176,39 @@ mod tests {
         let ranked = rank_models(&s, &losses, &losses, Loss::Mse);
         assert_eq!(top_k_indices(&ranked, 2), vec![1, 3]);
         assert_eq!(top_k_indices(&ranked, 99).len(), 4);
+    }
+
+    #[test]
+    fn exactly_equal_mse_losses_tie_break_by_index() {
+        let s = spec();
+        let losses = [0.25f32; 4];
+        let ranked = rank_models(&s, &losses, &losses, Loss::Mse);
+        let order: Vec<usize> = ranked.iter().map(|r| r.index).collect();
+        assert_eq!(order, vec![0, 1, 2, 3]);
+        assert_eq!(top_k_indices(&ranked, 2), vec![0, 1]);
+        // the rendered table lists the tied models in index order too
+        let md = report(&ranked, Loss::Mse, 4);
+        let model_col: Vec<String> = md
+            .lines()
+            .filter(|l| l.starts_with('|') && !l.contains("model") && !l.contains("--"))
+            .map(|l| l.split('|').nth(2).unwrap().trim().to_string())
+            .collect();
+        assert_eq!(model_col, vec!["0", "1", "2", "3"]);
+    }
+
+    #[test]
+    fn exactly_equal_ce_accuracy_and_loss_tie_break_by_index() {
+        let s = spec();
+        let losses = [0.5f32; 4];
+        let accs = [0.75f32; 4];
+        let ranked = rank_models(&s, &losses, &accs, Loss::Ce);
+        let order: Vec<usize> = ranked.iter().map(|r| r.index).collect();
+        assert_eq!(order, vec![0, 1, 2, 3]);
+        // partial ties: 1 and 3 share the best accuracy AND loss
+        let accs = [0.5, 0.9, 0.7, 0.9];
+        let losses = [0.4, 0.3, 0.4, 0.3];
+        let ranked = rank_models(&s, &losses, &accs, Loss::Ce);
+        assert_eq!(top_k_indices(&ranked, 2), vec![1, 3]);
     }
 
     #[test]

@@ -262,15 +262,150 @@ fn train_bench_writes_json_report() {
     let v = parallel_mlps::util::json::parse(&doc).expect("train-bench JSON must parse");
     assert_eq!(v.req("bench").unwrap().as_str(), Some("train"));
     let runs = v.req("runs").unwrap().as_arr().unwrap();
-    assert_eq!(runs.len(), 3);
-    // shallow, depth-2, depth-3 — in that order, same grid each time
+    // shallow, depth-2, depth-3 under BOTH kernels (naive then blocked)
+    assert_eq!(runs.len(), 6);
     let depths: Vec<usize> =
         runs.iter().map(|r| r.req("depth").unwrap().as_usize().unwrap()).collect();
-    assert_eq!(depths, vec![1, 2, 3]);
+    assert_eq!(depths, vec![1, 2, 3, 1, 2, 3]);
     for r in runs {
         assert!(r.req("models_per_s").unwrap().as_f64().unwrap() > 0.0);
         assert!(r.req("rows_per_s").unwrap().as_f64().unwrap() > 0.0);
     }
+    // the halving column: 27-model pool, eta 3 x 1 epoch/rung = 40
+    // model-epochs; the speedup is full_model_epochs / 40
+    let h = v.req("halving").unwrap();
+    assert_eq!(h.req("pool_models").unwrap().as_usize(), Some(27));
+    assert_eq!(h.req("eta").unwrap().as_usize(), Some(3));
+    assert_eq!(h.req("halving_model_epochs").unwrap().as_usize(), Some(40));
+    let full_me = h.req("full_model_epochs").unwrap().as_usize().unwrap();
+    assert_eq!(full_me, 27 * 2); // --epochs 2 in this invocation
+    let speedup = h.req("search_speedup").unwrap().as_f64().unwrap();
+    assert!((speedup - full_me as f64 / 40.0).abs() < 1e-3, "{speedup}");
+    assert!(h.req("archs_per_s_halving").unwrap().as_f64().unwrap() > 0.0);
+    // at the default 8-epoch budget the same schedule is 216/40 = 5.4x,
+    // comfortably past the 3x acceptance floor (pure arithmetic)
+    assert!(27.0 * 8.0 / 40.0 >= 3.0);
+}
+
+/// Tiny pool config so halving smoke tests have deterministic grids.
+fn small_grid_toml(name: &str) -> std::path::PathBuf {
+    let path = std::env::temp_dir().join(format!("pmlp_{name}_{}.toml", std::process::id()));
+    std::fs::write(&path, "[experiment]\nhidden_sizes = [2, 4]\nacts = [\"relu\", \"tanh\"]\n")
+        .unwrap();
+    path
+}
+
+#[test]
+fn rank_halving_prints_schedule_and_full_table() {
+    let toml = small_grid_toml("rank_halve");
+    let out = Command::new(pmlp())
+        .args([
+            "rank", "--config", toml.to_str().unwrap(), "--strategy", "native_parallel",
+            "--dataset", "blobs", "--samples", "160", "--features", "6", "--epochs", "6",
+            "--batch", "20", "--halving", "--eta", "2", "--rung-epochs", "1", "--top", "4",
+            "--threads", "2",
+        ])
+        .output()
+        .unwrap();
+    std::fs::remove_file(&toml).ok();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    // 2 hidden x 2 acts = 4 models; the table must still rank EVERY
+    // original model, survivors and retirees alike
+    assert!(stdout.contains("Top-4"), "{stdout}");
+    assert!(stdout.contains("val_"), "{stdout}");
+    // schedule context goes to stderr, keeping stdout machine-friendly
+    assert!(stderr.contains("halving: eta 2"), "{stderr}");
+    assert!(stderr.contains("architectures per budget"), "{stderr}");
+    assert!(!stdout.contains("trained"), "{stdout}");
+}
+
+#[test]
+fn rank_halving_composes_with_csv_and_folds() {
+    let data = blossom();
+    let out = Command::new(pmlp())
+        .args([
+            "rank", "--data", data.as_str(), "--target", "species", "--epochs", "4", "--batch",
+            "25", "--folds", "2", "--halving", "--eta", "3", "--rung-epochs", "1", "--top", "3",
+            "--threads", "2",
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("Top-3"), "{stdout}");
+    assert!(stdout.contains("val_acc"), "{stdout}");
+    assert!(stderr.contains("2 fold arms"), "{stderr}");
+    assert!(stderr.contains("halving: eta 3"), "{stderr}");
+}
+
+#[test]
+fn export_halving_writes_servable_checkpoint() {
+    let toml = small_grid_toml("export_halve");
+    let ckpt = std::env::temp_dir().join(format!("pmlp_cli_halve_{}.ckpt", std::process::id()));
+    let out = Command::new(pmlp())
+        .args([
+            "export", "--config", toml.to_str().unwrap(), "--strategy", "deep_native",
+            "--depths", "1,2", "--dataset", "blobs", "--samples", "160", "--features", "6",
+            "--epochs", "4", "--batch", "20", "--halving", "--eta", "2", "--top", "3", "--out",
+            ckpt.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    std::fs::remove_file(&toml).ok();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    // the checkpoint holds the FULL original pool (2 hidden x 2 acts x 2
+    // depths = 8 models), not just the halving survivors
+    assert!(stdout.contains("8 models"), "{stdout}");
+    assert!(stdout.contains("roundtrip verified"), "{stdout}");
+    assert!(stdout.contains("winners extracted"), "{stdout}");
+    let bytes = std::fs::read(&ckpt).unwrap();
+    assert!(bytes.starts_with(b"PMLPCKPT"), "bad magic in exported file");
+
+    let out2 = Command::new(pmlp())
+        .args([
+            "serve-bench", "--ckpt", ckpt.to_str().unwrap(), "--rows", "64", "--clients", "2",
+            "--depth", "4", "--batch-sizes", "1,4",
+        ])
+        .output()
+        .unwrap();
+    std::fs::remove_file(&ckpt).ok();
+    let stdout2 = String::from_utf8_lossy(&out2.stdout);
+    let stderr2 = String::from_utf8_lossy(&out2.stderr);
+    assert!(out2.status.success(), "stdout:\n{stdout2}\nstderr:\n{stderr2}");
+    assert!(stdout2.contains("checkpoint winner"), "{stdout2}");
+}
+
+#[test]
+fn export_halving_rejects_folds() {
+    let out = Command::new(pmlp())
+        .args([
+            "export", "--strategy", "native_parallel", "--dataset", "blobs", "--samples", "160",
+            "--features", "6", "--epochs", "4", "--folds", "2", "--halving",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("rank --halving --folds"), "{stderr}");
+}
+
+#[test]
+fn halving_knobs_require_the_flag() {
+    let out = Command::new(pmlp())
+        .args([
+            "rank", "--strategy", "native_parallel", "--dataset", "blobs", "--samples", "160",
+            "--features", "6", "--eta", "3",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--halving"), "{stderr}");
 }
 
 #[test]

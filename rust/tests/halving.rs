@@ -1,0 +1,316 @@
+//! Successive-halving acceptance suite: the survivor bit-identity
+//! contract, across thread counts and matmul kernels, for shallow and
+//! mixed-depth pools — plus halved-session export under global ids.
+//!
+//! The contract under test: a model that survives rung cuts trains
+//! through compacted (shrunk, repacked) fused pools, yet its parameter
+//! trajectory must be BIT-identical to the same model trained in the
+//! full uncompacted pool — at every thread count and under both
+//! kernels. The reference runs the identical rung schedule (same
+//! `TrainSession` sessions, same batches) on an uncompacted engine and
+//! snapshots every model at each rung boundary; frozen (cut) models
+//! must match their cut-rung snapshot, the winner its final snapshot.
+
+use parallel_mlps::config::{ExperimentConfig, Strategy};
+use parallel_mlps::coordinator::{run_halving, DeepEngine, PoolEngine, TrainSession};
+use parallel_mlps::data::{random_regression, Dataset};
+use parallel_mlps::io::{PoolCheckpoint, RankEntry};
+use parallel_mlps::nn::act::Act;
+use parallel_mlps::nn::init::init_pool;
+use parallel_mlps::nn::loss::Loss;
+use parallel_mlps::nn::parallel::ParallelEngine;
+use parallel_mlps::nn::stack::{DenseStack, LayerStack, StackModel};
+use parallel_mlps::pool::{PoolLayout, PoolSpec};
+use parallel_mlps::selection::{halving_run, CompactableEngine, HalvingArm, HalvingConfig};
+use parallel_mlps::tensor::kernels::Kernel;
+use parallel_mlps::util::rng::Rng;
+
+const F: usize = 4;
+const O: usize = 2;
+const BATCH: usize = 16;
+const LR: f32 = 0.05;
+const SEED: u64 = 11;
+
+fn shallow_spec() -> PoolSpec {
+    // 9 models: eta 3 halves 9 -> 3 -> 1
+    PoolSpec::new(vec![
+        (2, Act::Relu),
+        (4, Act::Relu),
+        (8, Act::Relu),
+        (2, Act::Tanh),
+        (4, Act::Tanh),
+        (8, Act::Tanh),
+        (2, Act::Sigmoid),
+        (4, Act::Sigmoid),
+        (3, Act::Gelu),
+    ])
+    .unwrap()
+}
+
+fn mixed_depth_models() -> Vec<StackModel> {
+    // 9 models, depths 1, 2 and 3 coexisting in one pool
+    let mut models = Vec::new();
+    for &act in &[Act::Relu, Act::Tanh, Act::Sigmoid] {
+        for depth in 1..=3usize {
+            models.push(StackModel::uniform(2 + depth as u32, depth, act));
+        }
+    }
+    models
+}
+
+fn shallow_engine(threads: usize, kernel: Kernel) -> ParallelEngine {
+    let spec = shallow_spec();
+    let layout = PoolLayout::build(&spec);
+    let fused = init_pool(SEED, &layout, F, O);
+    let mut engine = ParallelEngine::new(layout, fused, Loss::Mse, F, O, BATCH, threads);
+    engine.set_kernel(kernel);
+    engine
+}
+
+fn deep_engine(threads: usize, kernel: Kernel) -> DeepEngine {
+    let stack = LayerStack::new(mixed_depth_models(), F, O).unwrap();
+    let mut engine = DeepEngine::new(stack, SEED, Loss::Mse, threads);
+    engine.set_kernel(kernel);
+    engine
+}
+
+fn data() -> (Dataset, Dataset) {
+    let mut rng = Rng::new(SEED ^ 0xDA7A);
+    let ds = random_regression(96, F, O, &mut rng);
+    let split = ds.split(0.75, 0.25, &mut rng);
+    (split.train, split.val)
+}
+
+/// Train `engine` (uncompacted — every model keeps training) through the
+/// same rung schedule and snapshot every model at each rung boundary.
+fn reference_snapshots<E: PoolEngine + ?Sized>(
+    engine: &mut E,
+    train: &Dataset,
+    rung_epochs: usize,
+    n_rungs: usize,
+) -> Vec<Vec<DenseStack>> {
+    let mut snaps = Vec::with_capacity(n_rungs);
+    for _ in 0..n_rungs {
+        TrainSession::builder()
+            .train_data(train)
+            .batches(BATCH, false)
+            .epochs(rung_epochs)
+            .lr(LR)
+            .run(engine)
+            .unwrap();
+        snaps.push(
+            engine.extract_all().unwrap().into_iter().map(|e| e.into_stack()).collect(),
+        );
+    }
+    snaps
+}
+
+/// Rung index at which each global model id was cut (final-rung
+/// survivors map to the last rung).
+fn cut_rung_of(report: &parallel_mlps::selection::HalvingReport) -> Vec<usize> {
+    let mut cut_rung = vec![report.rungs.len() - 1; report.n_models];
+    for (ri, rung) in report.rungs.iter().enumerate() {
+        for &g in &rung.cut {
+            cut_rung[g] = ri;
+        }
+    }
+    cut_rung
+}
+
+/// The whole contract for one engine family: run halving under every
+/// (threads, kernel) combination and compare every model — frozen and
+/// live — against ONE reference (threads=1, naive, uncompacted).
+fn assert_bit_identity<E, F2>(build: F2, n_models: usize)
+where
+    E: CompactableEngine,
+    F2: Fn(usize, Kernel) -> E,
+{
+    let (train, val) = data();
+    let cfg = HalvingConfig { eta: 3, rung_epochs: 2 };
+
+    // reference: uncompacted, single-threaded, naive kernel
+    let mut reference = build(1, Kernel::Naive);
+    // schedule length for n -> n/3 -> ... -> 1
+    let n_rungs = {
+        let mut n = n_models;
+        let mut rungs = 1;
+        while n > 1 {
+            n = (n / 3).max(1);
+            rungs += 1;
+        }
+        rungs
+    };
+    let snaps = reference_snapshots(&mut reference, &train, cfg.rung_epochs, n_rungs);
+
+    for threads in [1usize, 8] {
+        for kernel in [Kernel::Naive, Kernel::Blocked] {
+            let tag = format!("threads={threads} kernel={kernel:?}");
+            let arm = HalvingArm {
+                engine: build(threads, kernel),
+                train: train.clone(),
+                val: val.clone(),
+            };
+            let run = halving_run(vec![arm], BATCH, LR, Loss::Mse, &cfg, false).unwrap();
+            assert_eq!(run.report.n_models, n_models, "{tag}");
+            assert_eq!(run.report.rungs.len(), n_rungs, "{tag}");
+            let pool = run.full_pool().unwrap();
+            let cut_rung = cut_rung_of(&run.report);
+            for g in 0..n_models {
+                let want = &snaps[cut_rung[g]][g];
+                assert!(
+                    pool[g].bits_equal(want),
+                    "{tag}: model {g} (cut at rung {}) diverged from the \
+                     uncompacted reference trajectory",
+                    cut_rung[g]
+                );
+            }
+            // the final ranking covers the original pool exactly once
+            let mut ids: Vec<usize> = run.report.ranked.iter().map(|r| r.index).collect();
+            ids.sort_unstable();
+            assert_eq!(ids, (0..n_models).collect::<Vec<_>>(), "{tag}");
+        }
+    }
+}
+
+#[test]
+fn shallow_survivors_are_bit_identical_across_threads_and_kernels() {
+    assert_bit_identity(shallow_engine, 9);
+}
+
+#[test]
+fn mixed_depth_survivors_are_bit_identical_across_threads_and_kernels() {
+    assert_bit_identity(deep_engine, 9);
+}
+
+#[test]
+fn rung_cuts_are_identical_across_threads_and_kernels() {
+    // not just the weights: the SCHEDULE (who got cut when) must agree
+    let (train, val) = data();
+    let cfg = HalvingConfig { eta: 3, rung_epochs: 2 };
+    let mut schedules: Vec<Vec<Vec<usize>>> = Vec::new();
+    for threads in [1usize, 8] {
+        for kernel in [Kernel::Naive, Kernel::Blocked] {
+            let arm = HalvingArm {
+                engine: shallow_engine(threads, kernel),
+                train: train.clone(),
+                val: val.clone(),
+            };
+            let run = halving_run(vec![arm], BATCH, LR, Loss::Mse, &cfg, false).unwrap();
+            schedules.push(run.report.rungs.iter().map(|r| r.cut.clone()).collect());
+        }
+    }
+    for s in &schedules[1..] {
+        assert_eq!(s, &schedules[0]);
+    }
+}
+
+fn halving_cfg_for(strategy: Strategy) -> ExperimentConfig {
+    ExperimentConfig {
+        strategy,
+        samples: 120,
+        features: 5,
+        out: 2,
+        hidden_sizes: vec![2, 4, 8],
+        acts: vec![Act::Relu, Act::Tanh, Act::Sigmoid],
+        repeats: 1,
+        epochs: 6,
+        batch: 16,
+        lr: 0.05,
+        loss: Loss::Mse,
+        threads: 2,
+        seed: 21,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn halved_export_checkpoints_the_whole_pool_under_global_ids() {
+    let cfg = halving_cfg_for(Strategy::NativeParallel);
+    let hcfg = HalvingConfig { eta: 3, rung_epochs: 1 };
+    let halved = run_halving(&cfg, &hcfg).unwrap();
+    assert_eq!(halved.models.len(), 9);
+
+    let ranking: Vec<RankEntry> = halved
+        .report
+        .ranked
+        .iter()
+        .map(|r| RankEntry { index: r.index, val_loss: r.val_loss, val_metric: r.val_metric })
+        .collect();
+    let ckpt =
+        PoolCheckpoint::from_dense_stacks(halved.models.clone(), cfg.loss, ranking).unwrap();
+
+    // checkpoint slot g is ORIGINAL pool model g, bit for bit — cut
+    // models included
+    assert_eq!(ckpt.n_models(), 9);
+    let spec = cfg.pool_spec().unwrap();
+    for g in 0..9 {
+        let stored = ckpt.stack().extract(&ckpt.params, g);
+        assert!(stored.bits_equal(&halved.models[g]), "model {g}");
+        assert_eq!(stored.hidden() as u32, spec.models()[g].0, "model {g}");
+        assert_eq!(stored.act, spec.models()[g].1, "model {g}");
+    }
+    // the persisted ranking is the halving report's global ranking, and
+    // the winner is the sole final-rung survivor
+    assert_eq!(ckpt.winner(), Some(halved.report.ranked[0].index));
+    let last = halved.report.rungs.last().unwrap();
+    assert_eq!(last.survivors, vec![halved.report.ranked[0].index]);
+    for (e, r) in ckpt.ranking.iter().zip(&halved.report.ranked) {
+        assert_eq!(e.index, r.index);
+        assert_eq!(e.val_loss.to_bits(), r.val_loss.to_bits());
+    }
+    // and the file round-trips like any other v3 checkpoint
+    let bytes = ckpt.to_bytes();
+    let back = PoolCheckpoint::from_bytes(&bytes).unwrap();
+    assert_eq!(back.to_bytes(), bytes);
+}
+
+#[test]
+fn halved_export_mixed_depths_keeps_each_models_architecture() {
+    let mut cfg = halving_cfg_for(Strategy::DeepNative);
+    cfg.hidden_sizes = vec![3, 4, 5];
+    cfg.acts = vec![Act::Relu];
+    cfg.depths = Some(vec![1, 2, 3]);
+    let hcfg = HalvingConfig { eta: 3, rung_epochs: 1 };
+    let halved = run_halving(&cfg, &hcfg).unwrap();
+    assert_eq!(halved.models.len(), 9);
+    let ranking: Vec<RankEntry> = halved
+        .report
+        .ranked
+        .iter()
+        .map(|r| RankEntry { index: r.index, val_loss: r.val_loss, val_metric: r.val_metric })
+        .collect();
+    let ckpt =
+        PoolCheckpoint::from_dense_stacks(halved.models.clone(), cfg.loss, ranking).unwrap();
+    let models = cfg.stack_models().unwrap();
+    for g in 0..9 {
+        let stored = ckpt.stack().extract(&ckpt.params, g);
+        assert_eq!(stored.hidden_widths(), models[g].hidden, "model {g}");
+        assert!(stored.bits_equal(&halved.models[g]), "model {g}");
+    }
+    // depths 1..3 all survived into the checkpoint
+    let mut depths: Vec<usize> =
+        (0..9).map(|g| ckpt.stack().extract(&ckpt.params, g).n_hidden_layers()).collect();
+    depths.sort_unstable();
+    depths.dedup();
+    assert_eq!(depths, vec![1, 2, 3]);
+}
+
+#[test]
+fn run_halving_is_thread_count_invariant() {
+    // the coordinator path (resolve/prepare/build) inherits the
+    // scheduler's guarantee: changing only the thread count changes
+    // nothing in the result
+    let mut a_cfg = halving_cfg_for(Strategy::NativeParallel);
+    let mut b_cfg = a_cfg.clone();
+    a_cfg.threads = 1;
+    b_cfg.threads = 8;
+    let hcfg = HalvingConfig { eta: 3, rung_epochs: 2 };
+    let a = run_halving(&a_cfg, &hcfg).unwrap();
+    let b = run_halving(&b_cfg, &hcfg).unwrap();
+    for (g, (ma, mb)) in a.models.iter().zip(&b.models).enumerate() {
+        assert!(ma.bits_equal(mb), "model {g} differs between 1 and 8 threads");
+    }
+    let oa: Vec<usize> = a.report.ranked.iter().map(|r| r.index).collect();
+    let ob: Vec<usize> = b.report.ranked.iter().map(|r| r.index).collect();
+    assert_eq!(oa, ob);
+}

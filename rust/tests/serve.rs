@@ -298,6 +298,38 @@ fn golden_v3_winner_serves_bit_stable_through_the_microbatcher() {
 }
 
 #[test]
+fn noop_compaction_exports_byte_identical_checkpoints() {
+    // compacting a pool where nothing was dropped must be invisible on
+    // disk: same model table, same ranking, same parameter bytes
+    let (spec, _layout, mut engine, x, y) = trained_engine(4);
+    let keep: Vec<usize> = (0..spec.n_models()).collect();
+    let compacted = engine.compact(&keep).unwrap();
+    let (vl, vm) = engine.evaluate(&x, &y);
+    let ranked = rank_models(&spec, &vl, &vm, Loss::Mse);
+    let a = PoolCheckpoint::from_engine(&engine, Loss::Mse, &ranked).unwrap();
+    let b = PoolCheckpoint::from_engine(&compacted, Loss::Mse, &ranked).unwrap();
+    assert_eq!(
+        a.to_bytes(),
+        b.to_bytes(),
+        "keep-everything compaction changed the exported checkpoint"
+    );
+}
+
+#[test]
+fn golden_v3_reassembles_byte_identically_from_dense_stacks() {
+    // the halved-export path (from_dense_stacks over extracted/frozen
+    // models) must write the exact same bytes the live-engine path does
+    // — anchored to the committed fixture
+    let bytes = std::fs::read(GOLDEN_CKPT).unwrap();
+    let ckpt = PoolCheckpoint::from_bytes(&bytes).unwrap();
+    let denses: Vec<_> =
+        (0..ckpt.n_models()).map(|m| ckpt.stack().extract(&ckpt.params, m)).collect();
+    let re =
+        PoolCheckpoint::from_dense_stacks(denses, ckpt.loss, ckpt.ranking.clone()).unwrap();
+    assert_eq!(re.to_bytes(), bytes, "dense-stack reassembly drifted from the v3 fixture");
+}
+
+#[test]
 fn export_shape_survives_sequential_engine_too() {
     // from_engine goes through the PoolEngine trait, so the sequential
     // strategy checkpoints identically to the fused one
