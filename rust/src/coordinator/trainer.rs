@@ -135,6 +135,8 @@ pub struct EpochCtx<'a> {
     pub val_loss: Option<f32>,
     pub val_metric: Option<f32>,
     pub epoch_time_s: f64,
+    /// training rows the epoch streamed (the dataset size)
+    pub rows: usize,
 }
 
 /// Per-epoch hook. Units run to completion one after another, so
@@ -226,9 +228,12 @@ impl Observer for ProgressLog {
         } else {
             String::new()
         };
+        // same wall-time and throughput figures the trace records, so
+        // stderr and a `--trace` file never disagree about an epoch
+        let rows_per_s = ctx.rows as f64 / ctx.epoch_time_s.max(1e-9);
         match ctx.val_loss {
             Some(v) => eprintln!(
-                "[{}]{unit} epoch {}/{}: train {:.4} val {:.4} ({:.3}s)",
+                "[{}]{unit} epoch {}/{}: train {:.4} val {:.4} ({:.3}s, {rows_per_s:.0} rows/s)",
                 ctx.engine,
                 ctx.epoch + 1,
                 ctx.epochs,
@@ -237,7 +242,7 @@ impl Observer for ProgressLog {
                 ctx.epoch_time_s
             ),
             None => eprintln!(
-                "[{}]{unit} epoch {}/{}: train {:.4} ({:.3}s)",
+                "[{}]{unit} epoch {}/{}: train {:.4} ({:.3}s, {rows_per_s:.0} rows/s)",
                 ctx.engine,
                 ctx.epoch + 1,
                 ctx.epochs,
@@ -450,6 +455,9 @@ impl<'a> TrainSession<'a> {
             let mut evaluated_last = false;
             for epoch in 0..epochs {
                 // -- the crate's one and only epoch/batch loop ------------
+                // span() is an inert value when tracing is off: no lock,
+                // no allocation, no clock read added to the hot loop
+                let mut ep_span = crate::obs::trace::span("train.epoch");
                 let t = Timer::new();
                 let mut last: Vec<f32> = Vec::new();
                 for (bi, (x, y)) in batches.batches.iter().enumerate() {
@@ -474,6 +482,13 @@ impl<'a> TrainSession<'a> {
                 let train_loss = finite_mean(&last);
                 loss_sums[epoch] += last.iter().sum::<f32>();
                 loss_counts[epoch] += last.len();
+                ep_span.field("unit", unit);
+                ep_span.field("epoch", epoch);
+                ep_span.field("rows", batches.n_samples);
+                ep_span.field("models", n_models);
+                ep_span.field("train_loss", train_loss as f64);
+                ep_span.end();
+                crate::obs::trace::counter("train.rows", batches.n_samples as f64);
 
                 // untimed validation pass (outside the epoch timer)
                 let mut epoch_val: Option<(f32, f32)> = None;
@@ -498,6 +513,7 @@ impl<'a> TrainSession<'a> {
                     val_loss: epoch_val.map(|(l, _)| l),
                     val_metric: epoch_val.map(|(_, m)| m),
                     epoch_time_s: dt,
+                    rows: batches.n_samples,
                 };
                 let mut stop = false;
                 for obs in &mut self.observers {
@@ -773,6 +789,7 @@ mod tests {
             val_loss,
             val_metric: None,
             epoch_time_s: 0.0,
+            rows: 0,
         }
     }
 

@@ -321,14 +321,27 @@ impl PoolCheckpoint {
     }
 
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
-        std::fs::write(path, self.to_bytes())
-            .map_err(|e| anyhow::anyhow!("writing checkpoint {}: {e}", path.display()))
+        let mut sp = crate::obs::trace::span("io.checkpoint");
+        let bytes = self.to_bytes();
+        std::fs::write(path, &bytes)
+            .map_err(|e| anyhow::anyhow!("writing checkpoint {}: {e}", path.display()))?;
+        sp.field("op", "save");
+        sp.field("bytes", bytes.len());
+        sp.field("models", self.n_models());
+        sp.end();
+        Ok(())
     }
 
     pub fn load(path: &Path) -> anyhow::Result<PoolCheckpoint> {
+        let mut sp = crate::obs::trace::span("io.checkpoint");
         let bytes = std::fs::read(path)
             .map_err(|e| anyhow::anyhow!("reading checkpoint {}: {e}", path.display()))?;
-        Self::from_bytes(&bytes)
+        let ckpt = Self::from_bytes(&bytes)?;
+        sp.field("op", "load");
+        sp.field("bytes", bytes.len());
+        sp.field("models", ckpt.n_models());
+        sp.end();
+        Ok(ckpt)
     }
 }
 

@@ -5,8 +5,10 @@
 //! fused, PJRT sequential, deep native) behind one [`coordinator::PoolEngine`]
 //! trait and one [`coordinator::TrainSession`] loop, plus an inference
 //! subsystem ([`io`] checkpoints + the [`serve`] micro-batch engine) that
-//! turns the trained pool's winners into a serving system. See the
-//! repository `README.md` for the quickstart and the strategy table.
+//! turns the trained pool's winners into a serving system. The [`obs`]
+//! subsystem records structured traces, latency histograms and resource
+//! usage across all of it. See the repository `README.md` for the
+//! quickstart and the strategy table.
 pub mod bench_harness;
 pub mod config;
 pub mod coordinator;
@@ -14,6 +16,7 @@ pub mod data;
 pub mod io;
 pub mod metrics;
 pub mod nn;
+pub mod obs;
 pub mod pool;
 pub mod runtime;
 pub mod selection;

@@ -9,6 +9,10 @@
 //! * `train-bench` — training throughput: shallow vs depth-2 vs depth-3
 //! * `bench`       — regenerate a paper table (`--table 1|2`)
 //! * `inspect`     — pool/layout accounting (the §5 memory note) + artifacts
+//! * `trace`       — fold a `--trace` JSONL file into per-span statistics
+//!
+//! Every subcommand accepts `--trace FILE.jsonl` (or `PMLP_TRACE=path`)
+//! to record structured trace events through `obs::trace`.
 //!
 //! Python never runs here: artifacts must already exist (`make artifacts`).
 
@@ -29,6 +33,7 @@ use parallel_mlps::nn::init::init_pool;
 use parallel_mlps::nn::loss::Loss;
 use parallel_mlps::nn::parallel::ParallelEngine;
 use parallel_mlps::nn::stack::{stack_bits_equal, LayerStack, StackModel};
+use parallel_mlps::obs;
 use parallel_mlps::pool::{PoolLayout, PoolSpec};
 use parallel_mlps::runtime::{PjrtParallelEngine, PjrtRuntime, PjrtSequentialEngine};
 use parallel_mlps::selection::{
@@ -67,6 +72,13 @@ USAGE:
              [--paper-scale] [--out FILE] [--artifacts DIR]
   pmlp inspect [--pool bench|smoke|e2e|paper] [--features N] [--out-dim N]
                [--artifacts DIR]
+  pmlp trace summarize FILE.jsonl
+
+Every subcommand also accepts --trace FILE.jsonl (or PMLP_TRACE=path)
+to append structured trace events (train.epoch, halving.rung,
+kernel.autotune, serve.batch, io.checkpoint spans plus counters and
+gauges) as one JSON line each; `pmlp trace summarize` folds such a file
+into per-span count/total/mean/p50/p99 tables.
 
 train runs every strategy through the unified PoolEngine/TrainSession
 API; --depths a,b (deep_native) puts stacks of those hidden-layer
@@ -87,13 +99,15 @@ versioned, FNV-checksummed pool checkpoint (any depth) with the
 train-only preprocessor embedded for --data runs; serve-bench replays
 a synthetic load — or, with --data, the CSV's rows normalized through
 the checkpoint's preprocessor — against the micro-batch server;
-train-bench records training throughput (models/s, rows/s) for shallow
-vs depth-2 vs depth-3 pools at fixed seeds, under both matmul kernels
-(naive oracle vs blocked), into BENCH_train.json.
+train-bench records training throughput (models/s, rows/s) plus
+per-phase peak RSS and CPU time for shallow vs depth-2 vs depth-3
+pools at fixed seeds, under both matmul kernels (naive oracle vs
+blocked), into BENCH_train.json.
 
 Env: PMLP_THREADS (worker count), PMLP_KERNEL (matmul kernel:
 naive|blocked|auto; auto = blocked with autotuned tile sizes; results
-are bit-identical across kernels), PMLP_ARTIFACTS (AOT artifact dir).
+are bit-identical across kernels), PMLP_ARTIFACTS (AOT artifact dir),
+PMLP_TRACE (trace event file, same as --trace).
 ";
 
 fn main() {
@@ -111,7 +125,14 @@ fn real_main() -> anyhow::Result<()> {
     let args = Args::from_env(&["quick", "paper-scale", "verbose", "halving"])
         .map_err(|e| anyhow::anyhow!("{e}\n{USAGE}"))?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
-    match cmd {
+    // `trace summarize` reads a trace; tracing the reader into the very
+    // file being summarized would be self-defeating, so skip init there
+    if cmd != "trace" {
+        if let Some(path) = obs::trace::init_from_env_or(args.get("trace"))? {
+            eprintln!("tracing to {path} (append; one JSON line per event)");
+        }
+    }
+    let result = match cmd {
         "selftest" => selftest(&args),
         "train" => train(&args),
         "rank" => rank(&args),
@@ -120,12 +141,51 @@ fn real_main() -> anyhow::Result<()> {
         "train-bench" => train_bench(&args),
         "bench" => bench(&args),
         "inspect" => inspect(&args),
+        "trace" => trace_cmd(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
         }
         other => anyhow::bail!("unknown subcommand {other:?}\n{USAGE}"),
+    };
+    if obs::trace::enabled() {
+        // whole-process resource gauges, then flush this thread's buffer:
+        // main() exits via std::process::exit, which skips TLS destructors
+        let res = obs::rusage::sample();
+        if let Some(rss) = res.peak_rss_bytes {
+            obs::trace::gauge("peak_rss_bytes", rss as f64);
+        }
+        if let Some(cpu) = res.cpu_s {
+            obs::trace::gauge("cpu_s", cpu);
+        }
+        obs::trace::flush();
     }
+    result
+}
+
+/// `pmlp trace summarize FILE.jsonl` — parse every line, verify span
+/// begin/end pairing, and fold durations into per-kind histograms.
+fn trace_cmd(args: &Args) -> anyhow::Result<()> {
+    let action = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
+    anyhow::ensure!(
+        action == "summarize",
+        "usage: pmlp trace summarize FILE.jsonl\n{USAGE}"
+    );
+    let path = args
+        .positional
+        .get(2)
+        .ok_or_else(|| anyhow::anyhow!("trace summarize needs a file\n{USAGE}"))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading trace {path}: {e}"))?;
+    let sum = obs::summary::summarize(&text)
+        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    println!("{}", obs::summary::render(&sum));
+    println!(
+        "OK: {} event line(s), {} span kind(s), all spans balanced",
+        sum.lines,
+        sum.spans.len()
+    );
+    Ok(())
 }
 
 fn artifacts_from(args: &Args) -> PathBuf {
@@ -740,6 +800,11 @@ struct TrainBenchCell {
     models: usize,
     rows_per_epoch: usize,
     avg_epoch_s: f64,
+    /// peak RSS over this cell (cumulative process peak where the
+    /// kernel's high-water mark cannot be reset); None off-Linux
+    peak_rss_bytes: Option<u64>,
+    /// CPU seconds (user+sys, all threads) this cell consumed
+    cpu_s: Option<f64>,
 }
 
 impl TrainBenchCell {
@@ -795,6 +860,21 @@ fn train_bench(args: &Args) -> anyhow::Result<()> {
     let kernel_axis = [Kernel::Naive, Kernel::Blocked];
     let mut cells: Vec<TrainBenchCell> = Vec::with_capacity(3 * kernel_axis.len());
 
+    // per-phase resource accounting: reset the kernel's RSS high-water
+    // mark before each cell (best-effort) and diff CPU time across it
+    let phase_start = || {
+        obs::rusage::reset_peak_rss();
+        obs::rusage::cpu_seconds()
+    };
+    let phase_end = |cpu0: Option<f64>| {
+        let s = obs::rusage::sample();
+        let cpu = match (cpu0, s.cpu_s) {
+            (Some(a), Some(b)) => Some((b - a).max(0.0)),
+            _ => None,
+        };
+        (s.peak_rss_bytes, cpu)
+    };
+
     for kernel in kernel_axis {
         // shallow fused pool (depth 1) through ParallelEngine
         {
@@ -804,7 +884,9 @@ fn train_bench(args: &Args) -> anyhow::Result<()> {
             let mut engine =
                 ParallelEngine::new(layout, fused, Loss::Mse, features, out_dim, batch, threads);
             engine.set_kernel(kernel);
+            let cpu0 = phase_start();
             let rep = session().run_with_batches(&mut engine, &batches)?;
+            let (peak_rss_bytes, cpu_s) = phase_end(cpu0);
             cells.push(TrainBenchCell {
                 pool: "shallow",
                 strategy: "native_parallel",
@@ -813,6 +895,8 @@ fn train_bench(args: &Args) -> anyhow::Result<()> {
                 models: spec.n_models(),
                 rows_per_epoch: batches.n_samples,
                 avg_epoch_s: rep.outcome.avg_timed_epoch_s(),
+                peak_rss_bytes,
+                cpu_s,
             });
         }
         // depth-2 and depth-3 stacks through DeepEngine
@@ -825,7 +909,9 @@ fn train_bench(args: &Args) -> anyhow::Result<()> {
             let stack = LayerStack::new(models, features, out_dim)?;
             let mut engine = DeepEngine::new(stack, seed, Loss::Mse, threads);
             engine.set_kernel(kernel);
+            let cpu0 = phase_start();
             let rep = session().run_with_batches(&mut engine, &batches)?;
+            let (peak_rss_bytes, cpu_s) = phase_end(cpu0);
             cells.push(TrainBenchCell {
                 pool,
                 strategy: "deep_native",
@@ -834,6 +920,8 @@ fn train_bench(args: &Args) -> anyhow::Result<()> {
                 models: n_models,
                 rows_per_epoch: batches.n_samples,
                 avg_epoch_s: rep.outcome.avg_timed_epoch_s(),
+                peak_rss_bytes,
+                cpu_s,
             });
         }
     }
@@ -886,7 +974,7 @@ fn train_bench(args: &Args) -> anyhow::Result<()> {
 
     let mut t = Table::new(
         &format!("train-bench: {samples} samples x {epochs} epochs (warmup {warmup}), {threads} threads"),
-        &["pool", "strategy", "kernel", "depth", "models", "rows/epoch", "epoch_s", "models/s", "rows/s", "model_rows/s"],
+        &["pool", "strategy", "kernel", "depth", "models", "rows/epoch", "epoch_s", "models/s", "rows/s", "model_rows/s", "peak_rss_mb", "cpu_s"],
     );
     for c in &cells {
         t.row(vec![
@@ -900,6 +988,8 @@ fn train_bench(args: &Args) -> anyhow::Result<()> {
             format!("{:.1}", c.models_per_s()),
             format!("{:.0}", c.rows_per_s()),
             format!("{:.0}", c.model_rows_per_s()),
+            obs::rusage::fmt_mb(c.peak_rss_bytes),
+            obs::rusage::fmt_cpu(c.cpu_s),
         ]);
     }
     println!("{}", t.to_markdown());
@@ -949,8 +1039,17 @@ fn train_bench(args: &Args) -> anyhow::Result<()> {
         halving.wall_speedup()
     );
 
+    // whole-process resource footprint (cumulative: covers every cell
+    // plus the halving comparison)
+    let res = obs::rusage::sample();
+    println!(
+        "process resources: peak RSS {} MB, CPU {} s",
+        obs::rusage::fmt_mb(res.peak_rss_bytes),
+        obs::rusage::fmt_cpu(res.cpu_s)
+    );
+
     let doc = train_bench_json(
-        samples, features, out_dim, batch, epochs, warmup, threads, seed, &cells, &halving,
+        samples, features, out_dim, batch, epochs, warmup, threads, seed, &cells, &halving, &res,
     );
     std::fs::write(&out_path, doc).map_err(|e| anyhow::anyhow!("writing {out_path}: {e}"))?;
     eprintln!("report written to {out_path}");
@@ -1008,43 +1107,72 @@ fn train_bench_json(
     seed: u64,
     cells: &[TrainBenchCell],
     halving: &HalvingBench,
+    res: &obs::rusage::ResUsage,
 ) -> String {
-    let mut runs = String::new();
-    for (i, c) in cells.iter().enumerate() {
-        if i > 0 {
-            runs.push_str(",\n    ");
-        }
-        runs.push_str(&format!(
-            "{{\"pool\": \"{}\", \"strategy\": \"{}\", \"kernel\": \"{}\", \"depth\": {}, \"models\": {}, \"rows_per_epoch\": {}, \"avg_epoch_s\": {:.6}, \"models_per_s\": {:.2}, \"rows_per_s\": {:.1}, \"model_rows_per_s\": {:.1}}}",
-            c.pool,
-            c.strategy,
-            c.kernel,
-            c.depth,
-            c.models,
-            c.rows_per_epoch,
-            c.avg_epoch_s,
-            c.models_per_s(),
-            c.rows_per_s(),
-            c.model_rows_per_s()
-        ));
-    }
-    let halving_json = format!(
-        "{{\"pool_models\": {}, \"eta\": {}, \"rung_epochs\": {}, \"full_epochs\": {}, \"halving_model_epochs\": {}, \"full_model_epochs\": {}, \"search_speedup\": {:.4}, \"full_wall_s\": {:.6}, \"halving_wall_s\": {:.6}, \"archs_per_s_full\": {:.2}, \"archs_per_s_halving\": {:.2}}}",
-        halving.pool_models,
-        halving.eta,
-        halving.rung_epochs,
-        halving.full_epochs,
-        halving.halving_model_epochs,
-        halving.full_model_epochs,
-        halving.search_speedup(),
-        halving.full_s,
-        halving.halving_s,
-        halving.archs_per_s_full(),
-        halving.archs_per_s_halving()
-    );
-    format!(
-        "{{\n  \"bench\": \"train\",\n  \"generated_by\": \"pmlp train-bench\",\n  \"samples\": {samples},\n  \"features\": {features},\n  \"out\": {out_dim},\n  \"batch\": {batch},\n  \"epochs\": {epochs},\n  \"warmup\": {warmup},\n  \"threads\": {threads},\n  \"seed\": {seed},\n  \"halving\": {halving_json},\n  \"runs\": [\n    {runs}\n  ]\n}}\n"
-    )
+    use parallel_mlps::util::json::{obj, Value};
+    let opt_bytes_mb = |b: Option<u64>| match b {
+        Some(b) => Value::from(b as f64 / (1024.0 * 1024.0)),
+        None => Value::Null,
+    };
+    let opt_f = |v: Option<f64>| v.map(Value::from).unwrap_or(Value::Null);
+    let runs: Vec<Value> = cells
+        .iter()
+        .map(|c| {
+            obj()
+                .put("pool", c.pool)
+                .put("strategy", c.strategy)
+                .put("kernel", c.kernel)
+                .put("depth", c.depth)
+                .put("models", c.models)
+                .put("rows_per_epoch", c.rows_per_epoch)
+                .put("avg_epoch_s", c.avg_epoch_s)
+                .put("models_per_s", c.models_per_s())
+                .put("rows_per_s", c.rows_per_s())
+                .put("model_rows_per_s", c.model_rows_per_s())
+                .put("peak_rss_mb", opt_bytes_mb(c.peak_rss_bytes))
+                .put("cpu_s", opt_f(c.cpu_s))
+                .build()
+        })
+        .collect();
+    let doc = obj()
+        .put("bench", "train")
+        .put("generated_by", "pmlp train-bench")
+        .put("samples", samples)
+        .put("features", features)
+        .put("out", out_dim)
+        .put("batch", batch)
+        .put("epochs", epochs)
+        .put("warmup", warmup)
+        .put("threads", threads)
+        .put("seed", seed)
+        .put(
+            "halving",
+            obj()
+                .put("pool_models", halving.pool_models)
+                .put("eta", halving.eta)
+                .put("rung_epochs", halving.rung_epochs)
+                .put("full_epochs", halving.full_epochs)
+                .put("halving_model_epochs", halving.halving_model_epochs)
+                .put("full_model_epochs", halving.full_model_epochs)
+                .put("search_speedup", halving.search_speedup())
+                .put("full_wall_s", halving.full_s)
+                .put("halving_wall_s", halving.halving_s)
+                .put("archs_per_s_full", halving.archs_per_s_full())
+                .put("archs_per_s_halving", halving.archs_per_s_halving())
+                .build(),
+        )
+        .put(
+            "resources",
+            obj()
+                .put("peak_rss_mb", opt_bytes_mb(res.peak_rss_bytes))
+                .put("cpu_s", opt_f(res.cpu_s))
+                .build(),
+        )
+        .put("runs", runs)
+        .build();
+    let mut out = doc.to_json();
+    out.push('\n');
+    out
 }
 
 fn bench(args: &Args) -> anyhow::Result<()> {

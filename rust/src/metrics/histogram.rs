@@ -1,0 +1,371 @@
+//! Log-bucketed latency histogram with bounded relative error.
+//!
+//! DDSketch-style fixed-bucket layout: bucket boundaries are powers of
+//! `GAMMA = (1 + ALPHA) / (1 - ALPHA)` with `ALPHA = 0.025`, so any
+//! recorded value is reproducible from its bucket to within ~2.5%
+//! relative error. The bucket array is fixed (no collapsing), which makes
+//! `merge` an elementwise add — exactly associative and commutative —
+//! and keeps `record` allocation-free after construction.
+//!
+//! Values are dimensionless; the serving and trace paths record seconds.
+//! The trackable range is `MIN_VALUE..=MAX_VALUE` (1 ns to ~10⁵ s when
+//! interpreted as seconds); values below the range (including zero and
+//! negatives) land in a dedicated underflow bucket that reports 0.0,
+//! values above clamp into the top bucket. Exact `count`, `sum`, `min`
+//! and `max` are tracked alongside the buckets, so `mean`, `min` and
+//! `max` carry no bucketing error.
+
+/// Relative-error target: quantiles are within ±2.5% of the true value.
+pub const ALPHA: f64 = 0.025;
+
+/// Smallest distinguishable value (1 ns, when values are seconds).
+pub const MIN_VALUE: f64 = 1e-9;
+
+/// Largest trackable value (~27.8 h, when values are seconds).
+pub const MAX_VALUE: f64 = 1e5;
+
+fn ln_gamma() -> f64 {
+    ((1.0 + ALPHA) / (1.0 - ALPHA)).ln()
+}
+
+/// Index of the first bucket: covers values just above `MIN_VALUE`.
+fn min_index() -> i32 {
+    (MIN_VALUE.ln() / ln_gamma()).ceil() as i32
+}
+
+/// Index of the last bucket: covers values up to `MAX_VALUE`.
+fn max_index() -> i32 {
+    (MAX_VALUE.ln() / ln_gamma()).ceil() as i32
+}
+
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// counts[i] holds values in `(γ^(i+lo-1), γ^(i+lo)]`.
+    counts: Vec<u64>,
+    /// Bucket index offset: `counts[0]` is logical bucket `lo`.
+    lo: i32,
+    /// Values `<= MIN_VALUE` (incl. zero and negatives).
+    underflow: u64,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        let lo = min_index();
+        let hi = max_index();
+        Histogram {
+            counts: vec![0u64; (hi - lo + 1) as usize],
+            lo,
+            underflow: 0,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Logical bucket index for `x` (clamped to the trackable range).
+    /// Exposed for boundary tests; `None` means the underflow bucket.
+    pub fn bucket_index(&self, x: f64) -> Option<i32> {
+        if x.is_nan() || x <= MIN_VALUE {
+            return None; // NaN, zero, negatives and tiny values underflow
+        }
+        let raw = (x.ln() / ln_gamma()).ceil() as i32;
+        Some(raw.clamp(self.lo, self.lo + self.counts.len() as i32 - 1))
+    }
+
+    /// Representative value for logical bucket `i`, which covers
+    /// `(γ^(i-1), γ^i]`. With `γ = (1+α)/(1-α)` the unique point within
+    /// relative error `α` of EVERY bucket member is
+    /// `(1-α)·γ^i = (1+α)·γ^(i-1)` — the geometric midpoint `γ^(i-1/2)`
+    /// would miss the bound by ~α²/2 near the lower edge.
+    pub fn bucket_value(&self, i: i32) -> f64 {
+        (1.0 - ALPHA) * (i as f64 * ln_gamma()).exp()
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.record_n(x, 1);
+    }
+
+    pub fn record_n(&mut self, x: f64, n: u64) {
+        if n == 0 || x.is_nan() {
+            return;
+        }
+        match self.bucket_index(x) {
+            None => self.underflow += n,
+            Some(i) => self.counts[(i - self.lo) as usize] += n,
+        }
+        self.count += n;
+        self.sum += x * n as f64;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact arithmetic mean (NaN when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact minimum recorded value (NaN when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum recorded value (NaN when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    /// Fold `other` into `self`. Elementwise bucket add: exactly
+    /// associative and commutative, so shard-merge order never changes
+    /// a quantile.
+    pub fn merge(&mut self, other: &Histogram) {
+        debug_assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += *b;
+        }
+        self.underflow += other.underflow;
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Nearest-rank quantile with ≤ ALPHA relative error (NaN when
+    /// empty). `q` is clamped to `[0, 1]`. Monotone in `q` by
+    /// construction, so p50 ≤ p99 always holds. The returned value is
+    /// additionally clamped to the exact `[min, max]` envelope so a
+    /// one-sample histogram reports that sample's bucket representative
+    /// bounded by the sample itself.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let q = q.clamp(0.0, 1.0);
+        // 0-based nearest rank, same convention as a sorted-Vec lookup
+        // `sorted[(q * (n-1)).round()]`.
+        let rank = (q * (self.count - 1) as f64).round() as u64;
+        let mut seen = self.underflow;
+        if rank < seen {
+            return 0.0;
+        }
+        for (off, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if rank < seen {
+                let rep = self.bucket_value(self.lo + off as i32);
+                return rep.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// xorshift64* — deterministic seeded values without a rand crate.
+    struct Rng(u64);
+    impl Rng {
+        fn next_f64(&mut self) -> f64 {
+            self.0 ^= self.0 << 13;
+            self.0 ^= self.0 >> 7;
+            self.0 ^= self.0 << 17;
+            (self.0.wrapping_mul(0x2545F4914F6CDD1D) >> 11) as f64 / (1u64 << 53) as f64
+        }
+    }
+
+    #[test]
+    fn bucket_boundaries_are_exact() {
+        let h = Histogram::new();
+        // The representative of every bucket falls back into that bucket,
+        // and bucket_index is monotone along a log sweep of the range.
+        let lo = min_index();
+        let hi = max_index();
+        for i in (lo + 1)..hi {
+            assert_eq!(h.bucket_index(h.bucket_value(i)), Some(i), "representative of bucket {i}");
+        }
+        let mut prev = i32::MIN;
+        let mut x = MIN_VALUE * 1.5;
+        while x < MAX_VALUE {
+            let i = h.bucket_index(x).unwrap();
+            assert!(i >= prev, "bucket_index not monotone at {x}");
+            prev = i;
+            x *= 1.01;
+        }
+        // Underflow: zero, negatives, NaN-adjacent tinies.
+        assert_eq!(h.bucket_index(0.0), None);
+        assert_eq!(h.bucket_index(-1.0), None);
+        assert_eq!(h.bucket_index(MIN_VALUE / 2.0), None);
+        // Overflow clamps to the top bucket rather than panicking.
+        let top = h.bucket_index(MAX_VALUE * 10.0).unwrap();
+        assert_eq!(top, h.lo + h.counts.len() as i32 - 1);
+    }
+
+    #[test]
+    fn representative_within_alpha_of_any_bucket_member() {
+        let h = Histogram::new();
+        let mut rng = Rng(0x9E3779B97F4A7C15);
+        for _ in 0..2000 {
+            // log-uniform over ~[1e-8, 1e3]
+            let x = 10f64.powf(-8.0 + 11.0 * rng.next_f64());
+            let i = h.bucket_index(x).unwrap();
+            let rep = h.bucket_value(i);
+            let rel = (rep - x).abs() / x;
+            assert!(rel <= ALPHA + 1e-9, "rel err {rel} for x={x} rep={rep}");
+        }
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let mk = |seed: u64| {
+            let mut h = Histogram::new();
+            let mut rng = Rng(seed);
+            for _ in 0..500 {
+                h.record(rng.next_f64() * 0.1 + 1e-6);
+            }
+            h
+        };
+        let (a, b, c) = (mk(1), mk(2), mk(3));
+
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+
+        let mut c_ba = c.clone();
+        c_ba.merge(&b);
+        c_ba.merge(&a);
+
+        for other in [&a_bc, &c_ba] {
+            assert_eq!(ab_c.counts, other.counts);
+            assert_eq!(ab_c.count, other.count);
+            assert_eq!(ab_c.underflow, other.underflow);
+            assert_eq!(ab_c.min, other.min);
+            assert_eq!(ab_c.max, other.max);
+            for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+                assert_eq!(ab_c.quantile(q), other.quantile(q));
+            }
+        }
+        assert!((ab_c.sum - a_bc.sum).abs() < 1e-9 * ab_c.sum.abs().max(1.0));
+    }
+
+    #[test]
+    fn quantile_error_bounded_vs_exact_sort() {
+        let mut h = Histogram::new();
+        let mut vals = Vec::new();
+        let mut rng = Rng(42);
+        for _ in 0..10_000 {
+            // heavy-tailed latencies: mostly sub-ms, occasional seconds
+            let u = rng.next_f64();
+            let x = 1e-4 * (-(1.0 - u).ln()).powi(3).max(1e-3);
+            h.record(x);
+            vals.push(x);
+        }
+        vals.sort_by(f64::total_cmp);
+        for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99] {
+            let exact = vals[(q * (vals.len() - 1) as f64).round() as usize];
+            let approx = h.quantile(q);
+            let rel = (approx - exact).abs() / exact;
+            assert!(rel <= ALPHA + 1e-9, "q={q}: approx {approx} vs exact {exact} (rel {rel})");
+        }
+        // monotonicity → p50 <= p99 by construction
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+    }
+
+    #[test]
+    fn zero_samples_edge_case() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.count(), 0);
+        assert!(h.quantile(0.5).is_nan());
+        assert!(h.mean().is_nan());
+        assert!(h.min().is_nan());
+        assert!(h.max().is_nan());
+    }
+
+    #[test]
+    fn one_sample_edge_case() {
+        let mut h = Histogram::new();
+        h.record(0.0042);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.min(), 0.0042);
+        assert_eq!(h.max(), 0.0042);
+        assert_eq!(h.mean(), 0.0042);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            let v = h.quantile(q);
+            let rel = (v - 0.0042).abs() / 0.0042;
+            assert!(rel <= ALPHA + 1e-9, "q={q}: {v}");
+        }
+    }
+
+    #[test]
+    fn underflow_values_report_zero() {
+        let mut h = Histogram::new();
+        h.record(0.0);
+        h.record(-3.0);
+        h.record(1.0);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.quantile(0.0), 0.0);
+        // the p100 member is the real 1.0 sample
+        let v = h.quantile(1.0);
+        assert!((v - 1.0).abs() / 1.0 <= ALPHA + 1e-9);
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut h = Histogram::new();
+        h.record(0.5);
+        h.record(0.25);
+        let before = h.quantile(0.5);
+        h.merge(&Histogram::new());
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.quantile(0.5), before);
+    }
+
+    #[test]
+    fn nan_records_ignored() {
+        let mut h = Histogram::new();
+        h.record(f64::NAN);
+        assert!(h.is_empty());
+        h.record_n(1.0, 0);
+        assert!(h.is_empty());
+    }
+}

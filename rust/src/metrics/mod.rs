@@ -4,6 +4,9 @@
 use std::fmt::Write as _;
 use std::time::Instant;
 
+mod histogram;
+pub use histogram::{Histogram, ALPHA as HISTOGRAM_ALPHA};
+
 /// Wall-clock stopwatch.
 #[derive(Debug)]
 pub struct Timer {

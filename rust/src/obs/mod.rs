@@ -1,0 +1,13 @@
+//! Observability: structured trace events, trace folding, and resource
+//! accounting.
+//!
+//! Three pillars, all zero-dep:
+//! - [`trace`] — process-wide JSONL trace sink (`--trace` / `PMLP_TRACE`),
+//!   span/counter/gauge events, no-op when disabled.
+//! - [`summary`] — folds a trace file into per-span-kind statistics using
+//!   [`crate::metrics::Histogram`]; backs `pmlp trace summarize`.
+//! - [`rusage`] — peak-RSS and CPU-time probes from procfs.
+
+pub mod rusage;
+pub mod summary;
+pub mod trace;

@@ -1,0 +1,316 @@
+//! Fold a JSONL trace into per-span-kind statistics.
+//!
+//! Backs `pmlp trace summarize <file.jsonl>`. Strict by design: any
+//! unparseable line, unknown event type, or unbalanced span (a `begin`
+//! without its `end`, or vice versa) is an error, because the trace is
+//! the machine-readable perf record — a silently truncated one is worse
+//! than none. Spans are paired by `(pid, id)` so traces appended by
+//! several processes (train → rank → export → serve-bench sharing one
+//! `--trace` path) still balance.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::{Histogram, Table};
+use crate::util::json::{parse, Value};
+
+/// Durations of one span kind, in a mergeable histogram (seconds).
+pub struct SpanStat {
+    pub count: u64,
+    pub total_s: f64,
+    pub hist: Histogram,
+}
+
+/// Last/total observations of one counter or gauge name.
+pub struct PointStat {
+    pub count: u64,
+    pub sum: f64,
+    pub last: f64,
+    pub max: f64,
+}
+
+#[derive(Default)]
+pub struct TraceSummary {
+    pub lines: usize,
+    pub spans: BTreeMap<String, SpanStat>,
+    pub counters: BTreeMap<String, PointStat>,
+    pub gauges: BTreeMap<String, PointStat>,
+}
+
+fn req_str(v: &Value, key: &str) -> anyhow::Result<String> {
+    Ok(v.req(key)?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("field {key:?} is not a string"))?
+        .to_string())
+}
+
+fn req_num(v: &Value, key: &str) -> anyhow::Result<f64> {
+    v.req(key)?.as_f64().ok_or_else(|| anyhow::anyhow!("field {key:?} is not a number"))
+}
+
+fn fold_point(map: &mut BTreeMap<String, PointStat>, name: String, value: f64) {
+    let e = map
+        .entry(name)
+        .or_insert(PointStat { count: 0, sum: 0.0, last: 0.0, max: f64::NEG_INFINITY });
+    e.count += 1;
+    e.sum += value;
+    e.last = value;
+    e.max = e.max.max(value);
+}
+
+/// Parse and fold a whole trace. Errors carry the 1-based line number.
+pub fn summarize(text: &str) -> anyhow::Result<TraceSummary> {
+    let mut sum = TraceSummary::default();
+    // open spans keyed by (pid, id) -> kind
+    let mut open: BTreeMap<(u64, u64), String> = BTreeMap::new();
+    for (idx, line) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let ctx = |e: anyhow::Error| anyhow::anyhow!("trace line {lineno}: {e}");
+        let v = parse(line).map_err(|e| anyhow::anyhow!("trace line {lineno}: {e}"))?;
+        sum.lines += 1;
+        let ev = req_str(&v, "ev").map_err(ctx)?;
+        match ev.as_str() {
+            "begin" => {
+                let kind = req_str(&v, "span").map_err(ctx)?;
+                let key = span_key(&v).map_err(ctx)?;
+                if let Some(prev) = open.insert(key, kind) {
+                    anyhow::bail!(
+                        "trace line {lineno}: duplicate begin for span id {} (open {prev:?})",
+                        key.1
+                    );
+                }
+            }
+            "end" => {
+                let kind = req_str(&v, "span").map_err(ctx)?;
+                let key = span_key(&v).map_err(ctx)?;
+                match open.remove(&key) {
+                    Some(opened) if opened == kind => {}
+                    Some(opened) => anyhow::bail!(
+                        "trace line {lineno}: span id {} began as {opened:?} but ended as {kind:?}",
+                        key.1
+                    ),
+                    None => anyhow::bail!(
+                        "trace line {lineno}: end without begin for {kind:?} id {}",
+                        key.1
+                    ),
+                }
+                let dur_s = req_num(&v, "dur_us").map_err(ctx)? / 1e6;
+                let e = sum.spans.entry(kind).or_insert_with(|| SpanStat {
+                    count: 0,
+                    total_s: 0.0,
+                    hist: Histogram::new(),
+                });
+                e.count += 1;
+                e.total_s += dur_s;
+                e.hist.record(dur_s);
+            }
+            "count" => {
+                let name = req_str(&v, "name").map_err(ctx)?;
+                let value = req_num(&v, "value").map_err(ctx)?;
+                fold_point(&mut sum.counters, name, value);
+            }
+            "gauge" => {
+                let name = req_str(&v, "name").map_err(ctx)?;
+                let value = req_num(&v, "value").map_err(ctx)?;
+                fold_point(&mut sum.gauges, name, value);
+            }
+            other => anyhow::bail!("trace line {lineno}: unknown event type {other:?}"),
+        }
+    }
+    if !open.is_empty() {
+        let mut kinds: Vec<&str> = open.values().map(String::as_str).collect();
+        kinds.sort_unstable();
+        kinds.dedup();
+        anyhow::bail!("trace has {} unbalanced span(s): {}", open.len(), kinds.join(", "));
+    }
+    Ok(sum)
+}
+
+fn span_key(v: &Value) -> anyhow::Result<(u64, u64)> {
+    let id = req_num(v, "id")? as u64;
+    // pid is absent in hand-written traces; treat those as one process
+    let pid = v.get("pid").and_then(Value::as_f64).unwrap_or(0.0) as u64;
+    Ok((pid, id))
+}
+
+/// Render the summary as markdown tables (the CLI output).
+pub fn render(sum: &TraceSummary) -> String {
+    let mut out = String::new();
+    let ms = 1e3;
+    let mut spans =
+        Table::new("Trace spans", &["span", "count", "total_ms", "mean_ms", "p50_ms", "p99_ms"]);
+    for (kind, s) in &sum.spans {
+        spans.row(vec![
+            kind.clone(),
+            s.count.to_string(),
+            format!("{:.2}", s.total_s * ms),
+            format!("{:.3}", s.hist.mean() * ms),
+            format!("{:.3}", s.hist.quantile(0.5) * ms),
+            format!("{:.3}", s.hist.quantile(0.99) * ms),
+        ]);
+    }
+    out.push_str(&spans.to_markdown());
+    if !sum.counters.is_empty() {
+        let mut t = Table::new("Counters", &["counter", "events", "sum", "last"]);
+        for (name, c) in &sum.counters {
+            t.row(vec![
+                name.clone(),
+                c.count.to_string(),
+                format!("{:.0}", c.sum),
+                format!("{:.0}", c.last),
+            ]);
+        }
+        out.push('\n');
+        out.push_str(&t.to_markdown());
+    }
+    if !sum.gauges.is_empty() {
+        let mut t = Table::new("Gauges", &["gauge", "events", "last", "max"]);
+        for (name, g) in &sum.gauges {
+            t.row(vec![
+                name.clone(),
+                g.count.to_string(),
+                format!("{:.2}", g.last),
+                format!("{:.2}", g.max),
+            ]);
+        }
+        out.push('\n');
+        out.push_str(&t.to_markdown());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(parts: &[(&str, Value)]) -> String {
+        let mut b = crate::util::json::obj();
+        for (k, v) in parts {
+            b = b.put(k, v.clone());
+        }
+        b.build().to_json()
+    }
+
+    fn span_pair(kind: &str, id: u64, dur_us: u64) -> [String; 2] {
+        [
+            line(&[
+                ("ev", Value::from("begin")),
+                ("span", Value::from(kind)),
+                ("id", Value::from(id)),
+                ("t_us", Value::from(0u64)),
+            ]),
+            line(&[
+                ("ev", Value::from("end")),
+                ("span", Value::from(kind)),
+                ("id", Value::from(id)),
+                ("t_us", Value::from(dur_us)),
+                ("dur_us", Value::from(dur_us)),
+            ]),
+        ]
+    }
+
+    #[test]
+    fn folds_balanced_trace() {
+        let mut lines: Vec<String> = Vec::new();
+        for (i, dur) in [1000u64, 2000, 3000, 4000].iter().enumerate() {
+            lines.extend(span_pair("train.epoch", i as u64 + 1, *dur));
+        }
+        lines.extend(span_pair("serve.batch", 99, 500));
+        lines.push(line(&[
+            ("ev", Value::from("count")),
+            ("name", Value::from("train.rows")),
+            ("value", Value::from(4096u64)),
+            ("t_us", Value::from(1u64)),
+        ]));
+        lines.push(line(&[
+            ("ev", Value::from("gauge")),
+            ("name", Value::from("peak_rss_bytes")),
+            ("value", Value::from(1048576u64)),
+            ("t_us", Value::from(2u64)),
+        ]));
+        let sum = summarize(&lines.join("\n")).unwrap();
+        assert_eq!(sum.lines, 12);
+        let te = &sum.spans["train.epoch"];
+        assert_eq!(te.count, 4);
+        assert!((te.total_s - 0.010).abs() < 1e-9);
+        assert!(te.hist.quantile(0.5) <= te.hist.quantile(0.99));
+        assert_eq!(sum.spans["serve.batch"].count, 1);
+        assert_eq!(sum.counters["train.rows"].sum, 4096.0);
+        assert_eq!(sum.gauges["peak_rss_bytes"].max, 1048576.0);
+        let rendered = render(&sum);
+        assert!(rendered.contains("train.epoch"));
+        assert!(rendered.contains("p99_ms"));
+    }
+
+    #[test]
+    fn interleaved_spans_balance() {
+        // begin A, begin B, end B, end A — nesting must pair by id
+        let a = span_pair("halving.rung", 1, 5000);
+        let b = span_pair("train.epoch", 2, 1000);
+        let text = [a[0].clone(), b[0].clone(), b[1].clone(), a[1].clone()].join("\n");
+        let sum = summarize(&text).unwrap();
+        assert_eq!(sum.spans.len(), 2);
+    }
+
+    #[test]
+    fn same_id_different_pid_balances() {
+        let mk = |pid: u64, ev: &str| {
+            line(&[
+                ("ev", Value::from(ev)),
+                ("span", Value::from("train.epoch")),
+                ("id", Value::from(1u64)),
+                ("pid", Value::from(pid)),
+                ("t_us", Value::from(0u64)),
+                ("dur_us", Value::from(10u64)),
+            ])
+        };
+        let text = [mk(100, "begin"), mk(200, "begin"), mk(100, "end"), mk(200, "end")].join("\n");
+        let sum = summarize(&text).unwrap();
+        assert_eq!(sum.spans["train.epoch"].count, 2);
+    }
+
+    #[test]
+    fn rejects_unparseable_line() {
+        let err = summarize("{\"ev\": \"begin\"\nnot json").unwrap_err();
+        assert!(err.to_string().contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unbalanced_spans() {
+        let [begin, _] = span_pair("io.checkpoint", 7, 100);
+        let err = summarize(&begin).unwrap_err();
+        assert!(err.to_string().contains("unbalanced"), "{err}");
+        assert!(err.to_string().contains("io.checkpoint"), "{err}");
+    }
+
+    #[test]
+    fn rejects_end_without_begin() {
+        let [_, end] = span_pair("serve.batch", 3, 100);
+        let err = summarize(&end).unwrap_err();
+        assert!(err.to_string().contains("end without begin"), "{err}");
+    }
+
+    #[test]
+    fn rejects_kind_mismatch() {
+        let [begin, _] = span_pair("train.epoch", 5, 100);
+        let [_, end] = span_pair("serve.batch", 5, 100);
+        let err = summarize(&[begin, end].join("\n")).unwrap_err();
+        assert!(err.to_string().contains("began as"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_event() {
+        let bad = line(&[("ev", Value::from("explode"))]);
+        let err = summarize(&bad).unwrap_err();
+        assert!(err.to_string().contains("unknown event"), "{err}");
+    }
+
+    #[test]
+    fn empty_trace_is_balanced() {
+        let sum = summarize("").unwrap();
+        assert_eq!(sum.lines, 0);
+        assert!(sum.spans.is_empty());
+    }
+}

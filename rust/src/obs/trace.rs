@@ -1,0 +1,286 @@
+//! Process-wide structured trace sink: one JSON line per event.
+//!
+//! Enabled via `--trace out.jsonl` or `PMLP_TRACE=path`; a strict no-op
+//! when off. Event grammar (all lines are flat JSON objects built
+//! through [`crate::util::json`]):
+//!
+//! | `ev`    | fields                                                      |
+//! |---------|-------------------------------------------------------------|
+//! | `begin` | `span` (kind), `id`, `pid`, `t_us`                          |
+//! | `end`   | `span`, `id`, `pid`, `t_us`, `dur_us`, + span fields        |
+//! | `count` | `name`, `value`, `pid`, `t_us`                              |
+//! | `gauge` | `name`, `value`, `pid`, `t_us`                              |
+//!
+//! `t_us` is microseconds since a process-local monotonic epoch, `dur_us`
+//! the span's monotonic duration. `pid` disambiguates span ids when
+//! several processes append to the same file (the sink opens its file in
+//! append mode precisely so a train → rank → export → serve-bench
+//! pipeline can share one trace).
+//!
+//! Cost model: when disabled, [`span`]/[`counter`]/[`gauge`] touch one
+//! relaxed atomic and return inert values — no allocation, no lock, no
+//! clock read. When enabled, events serialize into a thread-local
+//! `String` that is flushed through the single process writer only when
+//! it exceeds [`FLUSH_BYTES`] or the owning thread exits, so the writer
+//! mutex stays out of per-event paths. Call [`flush`] from a thread
+//! before the process exits via `std::process::exit` (which skips
+//! thread-local destructors).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::fs::OpenOptions;
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Value;
+
+/// Thread-local buffer capacity that triggers a flush to the writer.
+const FLUSH_BYTES: usize = 8192;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+/// Generation counter: bumped on every (re)initialization so buffered
+/// lines from a previous sink are discarded instead of leaking into the
+/// new one (tests re-init the sink; stale thread buffers must not mix).
+static GENERATION: AtomicU64 = AtomicU64::new(0);
+static SINK: Mutex<Option<SinkState>> = Mutex::new(None);
+
+enum Out {
+    File(std::fs::File),
+    /// In-memory capture for tests.
+    Buffer(Arc<Mutex<Vec<u8>>>),
+}
+
+struct SinkState {
+    generation: u64,
+    out: Out,
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+struct LocalBuf {
+    generation: u64,
+    data: String,
+}
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        flush_local(self);
+    }
+}
+
+thread_local! {
+    static BUF: RefCell<LocalBuf> = const {
+        RefCell::new(LocalBuf { generation: 0, data: String::new() })
+    };
+}
+
+fn flush_local(buf: &mut LocalBuf) {
+    if buf.data.is_empty() {
+        return;
+    }
+    // Single lock per flush, not per event. A poisoned sink (writer
+    // panicked) just drops the chunk — tracing is never load-bearing.
+    if let Ok(mut guard) = SINK.lock() {
+        if let Some(sink) = guard.as_mut() {
+            if sink.generation == buf.generation {
+                match &mut sink.out {
+                    Out::File(f) => {
+                        let _ = f.write_all(buf.data.as_bytes());
+                    }
+                    Out::Buffer(b) => {
+                        if let Ok(mut b) = b.lock() {
+                            b.extend_from_slice(buf.data.as_bytes());
+                        }
+                    }
+                }
+            }
+        }
+    }
+    buf.data.clear();
+}
+
+fn append_line(line: &str) {
+    let generation = GENERATION.load(Ordering::Acquire);
+    // TLS can be unavailable during thread teardown; drop the event then.
+    let _ = BUF.try_with(|cell| {
+        let mut buf = cell.borrow_mut();
+        if buf.generation != generation {
+            buf.data.clear();
+            buf.generation = generation;
+        }
+        buf.data.push_str(line);
+        buf.data.push('\n');
+        if buf.data.len() >= FLUSH_BYTES {
+            flush_local(&mut buf);
+        }
+    });
+}
+
+fn install(out: Out) {
+    let generation = GENERATION.fetch_add(1, Ordering::AcqRel) + 1;
+    let mut guard = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    *guard = Some(SinkState { generation, out });
+    drop(guard);
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Open `path` in append mode and start tracing into it. Append (not
+/// truncate) so consecutive commands sharing one `--trace` path build a
+/// single analyzable trace; remove the file first for a fresh one.
+pub fn init_file(path: &Path) -> anyhow::Result<()> {
+    let file = OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .map_err(|e| anyhow::anyhow!("cannot open trace file {}: {e}", path.display()))?;
+    install(Out::File(file));
+    Ok(())
+}
+
+/// Resolve the trace destination from an explicit `--trace` value or the
+/// `PMLP_TRACE` environment variable (flag wins) and initialize the sink.
+/// Returns the path used, or `None` when tracing stays off.
+pub fn init_from_env_or(flag: Option<&str>) -> anyhow::Result<Option<String>> {
+    let path = match flag {
+        Some(p) => Some(p.to_string()),
+        None => std::env::var("PMLP_TRACE").ok().filter(|p| !p.is_empty()),
+    };
+    match path {
+        Some(p) => {
+            init_file(Path::new(&p))?;
+            Ok(Some(p))
+        }
+        None => Ok(None),
+    }
+}
+
+/// Start tracing into an in-memory buffer (for tests). The returned
+/// handle observes everything flushed while this sink generation is
+/// current.
+pub fn init_capture() -> Arc<Mutex<Vec<u8>>> {
+    let buf = Arc::new(Mutex::new(Vec::new()));
+    install(Out::Buffer(buf.clone()));
+    buf
+}
+
+/// Flush the calling thread's buffer and stop tracing. Buffers held by
+/// other live threads are discarded (generation mismatch) rather than
+/// written late.
+pub fn disable() {
+    flush();
+    ENABLED.store(false, Ordering::Release);
+    GENERATION.fetch_add(1, Ordering::AcqRel);
+    if let Ok(mut guard) = SINK.lock() {
+        *guard = None;
+    }
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Flush the calling thread's buffered events through the writer. Call
+/// from `main` before `std::process::exit`, which skips the TLS
+/// destructors that normally flush on thread exit.
+pub fn flush() {
+    let _ = BUF.try_with(|cell| flush_local(&mut cell.borrow_mut()));
+}
+
+/// An in-flight span. Begin is emitted on creation, end (with `dur_us`
+/// and any attached fields) when the value drops or [`Span::end`] is
+/// called. When tracing is disabled the span is inert: no id, no clock
+/// read, no allocation.
+pub struct Span {
+    armed: bool,
+    kind: &'static str,
+    id: u64,
+    start: Option<Instant>,
+    fields: Vec<(&'static str, Value)>,
+}
+
+/// Open a span of the given kind (e.g. `"train.epoch"`).
+pub fn span(kind: &'static str) -> Span {
+    if !enabled() {
+        return Span { armed: false, kind, id: 0, start: None, fields: Vec::new() };
+    }
+    let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    let t_us = now_us();
+    let line = crate::util::json::obj()
+        .put("ev", "begin")
+        .put("span", kind)
+        .put("id", id)
+        .put("pid", std::process::id())
+        .put("t_us", t_us)
+        .build()
+        .to_json();
+    append_line(&line);
+    Span { armed: true, kind, id, start: Some(Instant::now()), fields: Vec::new() }
+}
+
+impl Span {
+    /// Attach a field to the end event. No-op when tracing is off.
+    pub fn field(&mut self, key: &'static str, value: impl Into<Value>) {
+        if self.armed {
+            self.fields.push((key, value.into()));
+        }
+    }
+
+    /// Emit the end event now (otherwise it is emitted on drop).
+    pub fn end(self) {}
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let dur_us = self.start.map(|s| s.elapsed().as_micros() as u64).unwrap_or(0);
+        let mut map = BTreeMap::new();
+        map.insert("ev".to_string(), Value::from("end"));
+        map.insert("span".to_string(), Value::from(self.kind));
+        map.insert("id".to_string(), Value::from(self.id));
+        map.insert("pid".to_string(), Value::from(std::process::id()));
+        map.insert("t_us".to_string(), Value::from(now_us()));
+        map.insert("dur_us".to_string(), Value::from(dur_us));
+        for (k, v) in self.fields.drain(..) {
+            map.insert(k.to_string(), v);
+        }
+        append_line(&Value::Obj(map).to_json());
+    }
+}
+
+fn point_event(ev: &'static str, name: &str, value: f64) {
+    if !enabled() {
+        return;
+    }
+    let line = crate::util::json::obj()
+        .put("ev", ev)
+        .put("name", name)
+        .put("value", value)
+        .put("pid", std::process::id())
+        .put("t_us", now_us())
+        .build()
+        .to_json();
+    append_line(&line);
+}
+
+/// Emit a monotonic counter observation (e.g. rows processed).
+pub fn counter(name: &str, value: f64) {
+    point_event("count", name, value);
+}
+
+/// Emit a point-in-time gauge observation (e.g. peak RSS bytes).
+pub fn gauge(name: &str, value: f64) {
+    point_event("gauge", name, value);
+}

@@ -284,6 +284,9 @@ pub fn halving_run<E: CompactableEngine>(
 
     for (ri, &entering) in sizes.iter().enumerate() {
         debug_assert_eq!(entering, live.len());
+        let mut rung_span = crate::obs::trace::span("halving.rung");
+        rung_span.field("rung", ri);
+        rung_span.field("entering", entering);
         // 1) train every arm for the rung budget
         for (ai, arm) in arms.iter_mut().enumerate() {
             let HalvingArm { engine, train, .. } = arm;
@@ -333,6 +336,9 @@ pub fn halving_run<E: CompactableEngine>(
                 cut: Vec::new(),
             });
             final_local = Some(ranked);
+            rung_span.field("kept", entering);
+            rung_span.end();
+            crate::obs::trace::counter("halving.survivors", entering as f64);
             break;
         }
         // 3) cut: freeze the dropped models (from arm 0) at this score
@@ -371,6 +377,10 @@ pub fn halving_run<E: CompactableEngine>(
             arm.engine = arm.engine.compact_keep(&keep)?;
         }
         live = survivors_global;
+        rung_span.field("kept", keep_n);
+        rung_span.field("cut", entering - keep_n);
+        rung_span.end();
+        crate::obs::trace::counter("halving.survivors", keep_n as f64);
     }
 
     // complete global ranking: final survivors best-first, then retirees

@@ -13,7 +13,10 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
+use crate::metrics::Histogram;
+use crate::obs::trace;
 use crate::serve::registry::ServableModel;
 use crate::tensor::Tensor;
 
@@ -53,6 +56,9 @@ struct Shared {
     rows: AtomicUsize,
     batches: AtomicUsize,
     max_batch_seen: AtomicUsize,
+    /// per-batch service time (seconds), coalesce → answers delivered;
+    /// one uncontended lock per *batch*, never per row
+    service: Mutex<Histogram>,
 }
 
 /// Counters the worker maintains while serving.
@@ -119,6 +125,7 @@ impl Server {
             rows: AtomicUsize::new(0),
             batches: AtomicUsize::new(0),
             max_batch_seen: AtomicUsize::new(0),
+            service: Mutex::new(Histogram::new()),
         });
         let worker = {
             let shared = shared.clone();
@@ -142,11 +149,24 @@ impl Server {
         }
     }
 
+    /// Snapshot of the per-batch service-time histogram (seconds per
+    /// coalesced batch, coalesce → answers delivered). Always recorded,
+    /// tracing on or off, so production latency is observable.
+    pub fn service_latency(&self) -> Histogram {
+        self.shared.service.lock().unwrap().clone()
+    }
+
     /// Stop accepting new requests, answer everything already queued,
     /// join the worker and report the final counters.
-    pub fn shutdown(mut self) -> ServeStats {
+    pub fn shutdown(self) -> ServeStats {
+        self.shutdown_with_latency().0
+    }
+
+    /// [`Server::shutdown`], additionally returning the final per-batch
+    /// service-time histogram.
+    pub fn shutdown_with_latency(mut self) -> (ServeStats, Histogram) {
         self.finish();
-        self.stats()
+        (self.stats(), self.service_latency())
     }
 
     fn finish(&mut self) {
@@ -225,6 +245,8 @@ fn worker_loop(shared: &Shared, model: &ServableModel, max_batch: usize, threads
 
         // one fused matmul over the coalesced batch instead of B tiny ones
         let b = batch.len();
+        let t0 = Instant::now();
+        let mut sp = trace::span("serve.batch");
         let mut x = Tensor::zeros(&[b, features]);
         for (i, r) in batch.iter().enumerate() {
             x.row_mut(i).copy_from_slice(&r.row);
@@ -238,6 +260,9 @@ fn worker_loop(shared: &Shared, model: &ServableModel, max_batch: usize, threads
             // a requester that dropped its ticket is not an error
             let _ = r.tx.send(logits.row(i).to_vec());
         }
+        sp.field("rows", b);
+        sp.end();
+        shared.service.lock().unwrap().record(t0.elapsed().as_secs_f64());
     }
 }
 
@@ -299,6 +324,20 @@ mod tests {
         let err = client.submit(&[0.0, 0.0, 0.0]).unwrap_err().to_string();
         assert!(err.contains("shut down"), "{err}");
         assert!(client.predict(&[0.0, 0.0, 0.0]).is_err());
+    }
+
+    #[test]
+    fn service_histogram_records_every_batch() {
+        let server = Server::start(toy_model(), ServeConfig::default()).unwrap();
+        let client = server.client();
+        for i in 0..8 {
+            client.predict(&[i as f32, 0.0, 1.0]).unwrap();
+        }
+        let (stats, hist) = server.shutdown_with_latency();
+        assert_eq!(stats.rows, 8);
+        assert_eq!(hist.count(), stats.batches as u64, "one histogram sample per batch");
+        assert!(hist.quantile(0.5) <= hist.quantile(0.99));
+        assert!(hist.min() >= 0.0);
     }
 
     #[test]

@@ -1,11 +1,17 @@
 //! Offline load generator for the serving engine: closed-loop clients
 //! with pipelined requests, per-request latency percentiles and rows/s —
 //! the numbers `pmlp serve-bench` and `benches/serve_bench.rs` report.
+//!
+//! Latency aggregation uses [`crate::metrics::Histogram`] (log-bucketed,
+//! ~2.5% relative error, mergeable across client threads) rather than
+//! collecting and sorting every sample, so memory stays constant in the
+//! row count and the same quantile machinery serves bench reports,
+//! server-side service times and trace summaries.
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::metrics::Table;
+use crate::metrics::{Histogram, Table};
 use crate::nn::act::Act;
 use crate::nn::init::init_model;
 use crate::serve::batcher::{ServeConfig, Server};
@@ -36,10 +42,16 @@ pub struct LoadReport {
     pub rows: usize,
     pub wall_s: f64,
     pub rows_per_s: f64,
+    /// client-observed submit-to-response latency (queueing included)
     pub p50_ms: f64,
     pub p99_ms: f64,
+    pub mean_ms: f64,
     pub batches: usize,
     pub mean_batch: f64,
+    /// full client-latency distribution (seconds), mergeable
+    pub latency: Histogram,
+    /// server-side per-batch service time (seconds)
+    pub service: Histogram,
 }
 
 /// The synthetic "winner" `serve-bench` uses when no checkpoint is given.
@@ -92,10 +104,10 @@ pub fn run_load_with(
         let client = server.client();
         let (rows, depth, seed) = (spec.rows_per_client, spec.depth, spec.seed);
         let replay = replay.clone();
-        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Histogram> {
             let mut root = Rng::new(seed);
             let mut rng = root.fork(c as u64);
-            let mut lats = Vec::with_capacity(rows);
+            let mut lats = Histogram::new();
             let mut row = vec![0.0f32; features];
             // stagger replay starts so clients don't serve one prefix
             let mut cursor = c * rows;
@@ -119,34 +131,39 @@ pub fn run_load_with(
                 }
                 for (t, ticket) in tickets {
                     ticket.wait()?;
-                    lats.push(t.elapsed().as_secs_f64());
+                    lats.record(t.elapsed().as_secs_f64());
                 }
                 sent += window;
             }
             Ok(lats)
         }));
     }
-    let mut lats: Vec<f64> = Vec::with_capacity(spec.clients * spec.rows_per_client);
+    let mut latency = Histogram::new();
     for h in handles {
-        lats.extend(h.join().map_err(|_| anyhow::anyhow!("load client panicked"))??);
+        latency.merge(&h.join().map_err(|_| anyhow::anyhow!("load client panicked"))??);
     }
     let wall_s = t0.elapsed().as_secs_f64();
-    let stats = server.shutdown();
-    lats.sort_by(f64::total_cmp);
-    let rows = lats.len();
+    let (stats, service) = server.shutdown_with_latency();
+    let rows = latency.count() as usize;
     Ok(LoadReport {
         max_batch: cfg.max_batch,
         rows,
         wall_s,
         rows_per_s: rows as f64 / wall_s.max(1e-9),
-        p50_ms: percentile(&lats, 0.50) * 1e3,
-        p99_ms: percentile(&lats, 0.99) * 1e3,
+        p50_ms: latency.quantile(0.50) * 1e3,
+        p99_ms: latency.quantile(0.99) * 1e3,
+        mean_ms: latency.mean() * 1e3,
         batches: stats.batches,
         mean_batch: stats.mean_batch(),
+        latency,
+        service,
     })
 }
 
 /// Nearest-rank percentile over an ascending-sorted slice, `q` in [0, 1].
+/// NaN on an empty slice (a zero-row run must report, not panic). The
+/// bench path now aggregates through [`Histogram`]; this stays as the
+/// exact small-sample reference the histogram tests compare against.
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
         return f64::NAN;
@@ -159,7 +176,18 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
 pub fn render_reports(title: &str, reports: &[LoadReport]) -> String {
     let mut t = Table::new(
         title,
-        &["max_batch", "rows", "rows/s", "p50_ms", "p99_ms", "mean_batch", "batches"],
+        &[
+            "max_batch",
+            "rows",
+            "rows/s",
+            "p50_ms",
+            "p99_ms",
+            "mean_ms",
+            "svc_p50_ms",
+            "svc_p99_ms",
+            "mean_batch",
+            "batches",
+        ],
     );
     for r in reports {
         t.row(vec![
@@ -168,6 +196,9 @@ pub fn render_reports(title: &str, reports: &[LoadReport]) -> String {
             format!("{:.0}", r.rows_per_s),
             format!("{:.3}", r.p50_ms),
             format!("{:.3}", r.p99_ms),
+            format!("{:.3}", r.mean_ms),
+            format!("{:.3}", r.service.quantile(0.50) * 1e3),
+            format!("{:.3}", r.service.quantile(0.99) * 1e3),
             format!("{:.1}", r.mean_batch),
             r.batches.to_string(),
         ]);
@@ -175,47 +206,49 @@ pub fn render_reports(title: &str, reports: &[LoadReport]) -> String {
     t.to_markdown()
 }
 
-/// Escape a string for embedding in a JSON document (model names can
-/// carry user-supplied checkpoint paths).
-fn json_str(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
-}
-
-/// JSON document for `BENCH_serve.json` (hand-built; the vendored JSON
-/// module is a parser only).
+/// JSON document for `BENCH_serve.json`, built through `util::json` so
+/// escaping and number formatting match every other document the repo
+/// emits (model names can carry user-supplied checkpoint paths).
 pub fn reports_json(model: &ServableModel, spec: &LoadSpec, reports: &[LoadReport]) -> String {
-    let mut runs = String::new();
-    for (i, r) in reports.iter().enumerate() {
-        if i > 0 {
-            runs.push_str(",\n    ");
-        }
-        runs.push_str(&format!(
-            "{{\"max_batch\": {}, \"rows\": {}, \"rows_per_s\": {:.1}, \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \"mean_batch\": {:.2}, \"batches\": {}}}",
-            r.max_batch, r.rows, r.rows_per_s, r.p50_ms, r.p99_ms, r.mean_batch, r.batches
-        ));
-    }
-    format!(
-        "{{\n  \"bench\": \"serve\",\n  \"model\": {{\"name\": \"{}\", \"hidden\": {}, \"layers\": {}, \"features\": {}, \"out\": {}, \"act\": \"{}\"}},\n  \"clients\": {},\n  \"depth\": {},\n  \"rows_per_client\": {},\n  \"runs\": [\n    {}\n  ]\n}}\n",
-        json_str(&model.name),
-        model.hidden(),
-        model.depth(),
-        model.features(),
-        model.out(),
-        model.act().name(),
-        spec.clients,
-        spec.depth,
-        spec.rows_per_client,
-        runs
-    )
+    use crate::util::json::obj;
+    let runs: Vec<crate::util::json::Value> = reports
+        .iter()
+        .map(|r| {
+            obj()
+                .put("max_batch", r.max_batch)
+                .put("rows", r.rows)
+                .put("rows_per_s", r.rows_per_s)
+                .put("p50_ms", r.p50_ms)
+                .put("p99_ms", r.p99_ms)
+                .put("mean_ms", r.mean_ms)
+                .put("service_p50_ms", r.service.quantile(0.50) * 1e3)
+                .put("service_p99_ms", r.service.quantile(0.99) * 1e3)
+                .put("mean_batch", r.mean_batch)
+                .put("batches", r.batches)
+                .build()
+        })
+        .collect();
+    let doc = obj()
+        .put("bench", "serve")
+        .put(
+            "model",
+            obj()
+                .put("name", model.name.as_str())
+                .put("hidden", model.hidden())
+                .put("layers", model.depth())
+                .put("features", model.features())
+                .put("out", model.out())
+                .put("act", model.act().name())
+                .build(),
+        )
+        .put("clients", spec.clients)
+        .put("depth", spec.depth)
+        .put("rows_per_client", spec.rows_per_client)
+        .put("runs", runs)
+        .build();
+    let mut text = doc.to_json();
+    text.push('\n');
+    text
 }
 
 #[cfg(test)]
@@ -243,6 +276,12 @@ mod tests {
         assert!(rep.p50_ms >= 0.0 && rep.p99_ms >= rep.p50_ms);
         assert!(rep.mean_batch >= 1.0);
         assert!(rep.batches >= 64 / 8);
+        // histogram-backed distributions: one latency sample per row, one
+        // service sample per coalesced batch
+        assert_eq!(rep.latency.count(), 64);
+        assert_eq!(rep.service.count(), rep.batches as u64);
+        assert!(rep.service.quantile(0.5) <= rep.service.quantile(0.99));
+        assert!(rep.mean_ms > 0.0);
     }
 
     #[test]

@@ -30,6 +30,7 @@ fn pattern(len: usize, salt: u32) -> Vec<f32> {
 }
 
 pub(super) fn pick_tile() -> Tile {
+    let mut probe_span = crate::obs::trace::span("kernel.autotune");
     let a = pattern(PM * PK, 1);
     let b = pattern(PN * PK, 2);
     let mut c = vec![0.0f32; PM * PN];
@@ -52,6 +53,10 @@ pub(super) fn pick_tile() -> Tile {
             best = tile;
         }
     }
+    probe_span.field("nc", best.nc);
+    probe_span.field("kc", best.kc);
+    probe_span.field("candidates", TILE_CANDIDATES.len());
+    probe_span.end();
     best
 }
 

@@ -1,8 +1,11 @@
-//! Minimal JSON parser — reads `artifacts/manifest.json`.
+//! Minimal JSON parser and serializer.
 //!
-//! Supports the full JSON grammar we emit (objects, arrays, strings with
-//! escapes, numbers, booleans, null). Offline environment: no serde_json,
-//! so this ~300-line recursive-descent parser is the substrate.
+//! Reads `artifacts/manifest.json` and trace files; writes BENCH reports
+//! and trace events. Supports the full JSON grammar we emit (objects,
+//! arrays, strings with escapes, numbers, booleans, null). Offline
+//! environment: no serde_json, so this recursive-descent parser plus a
+//! small `Value::to_json` serializer is the substrate. Everything the
+//! serializer produces round-trips through `parse`.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -57,6 +60,156 @@ impl Value {
     /// `obj["k"]` with a readable error for manifest plumbing.
     pub fn req(&self, key: &str) -> anyhow::Result<&Value> {
         self.get(key).ok_or_else(|| anyhow::anyhow!("missing key {key:?} in JSON object"))
+    }
+
+    /// Serialize to a compact JSON string (no trailing newline).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        self.write_json(&mut out);
+        out
+    }
+
+    /// Append the compact JSON encoding of `self` to `out`.
+    ///
+    /// Non-finite numbers have no JSON representation; they serialize as
+    /// `null` (the same convention serde_json uses), so emitted documents
+    /// always re-parse.
+    pub fn write_json(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Num(n) => write_num(*n, out),
+            Value::Str(s) => write_escaped(s, out),
+            Value::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write_json(out);
+                }
+                out.push(']');
+            }
+            Value::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write_json(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Append `s` as a quoted JSON string literal (with surrounding `"`).
+pub fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn write_num(n: f64, out: &mut String) {
+    use std::fmt::Write;
+    if !n.is_finite() {
+        out.push_str("null");
+        return;
+    }
+    // Integer-valued floats print without a fractional part so counts stay
+    // counts; everything else uses Rust's shortest round-trip Display.
+    if n == n.trunc() && n.abs() < 9.0e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{n}");
+    }
+}
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Self {
+        Value::Bool(b)
+    }
+}
+impl From<f64> for Value {
+    fn from(n: f64) -> Self {
+        Value::Num(n)
+    }
+}
+impl From<f32> for Value {
+    fn from(n: f32) -> Self {
+        Value::Num(n as f64)
+    }
+}
+impl From<usize> for Value {
+    fn from(n: usize) -> Self {
+        Value::Num(n as f64)
+    }
+}
+impl From<u64> for Value {
+    fn from(n: u64) -> Self {
+        Value::Num(n as f64)
+    }
+}
+impl From<u32> for Value {
+    fn from(n: u32) -> Self {
+        Value::Num(n as f64)
+    }
+}
+impl From<i64> for Value {
+    fn from(n: i64) -> Self {
+        Value::Num(n as f64)
+    }
+}
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::Str(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::Str(s)
+    }
+}
+impl<T: Into<Value>> From<Vec<T>> for Value {
+    fn from(items: Vec<T>) -> Self {
+        Value::Arr(items.into_iter().map(Into::into).collect())
+    }
+}
+
+/// Builder for `Value::Obj` — keeps call sites terse:
+/// `obj().put("ev", "begin").put("t_us", t).build()`.
+#[derive(Default)]
+pub struct ObjBuilder {
+    map: BTreeMap<String, Value>,
+}
+
+pub fn obj() -> ObjBuilder {
+    ObjBuilder::default()
+}
+
+impl ObjBuilder {
+    pub fn put(mut self, key: &str, val: impl Into<Value>) -> Self {
+        self.map.insert(key.to_string(), val.into());
+        self
+    }
+
+    pub fn build(self) -> Value {
+        Value::Obj(self.map)
     }
 }
 
@@ -340,6 +493,57 @@ mod tests {
     fn whitespace_tolerant() {
         let v = parse(" {\n \"a\" :\t[ 1 , 2 ]\r\n} ").unwrap();
         assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn serialize_roundtrips_through_parse() {
+        let doc = obj()
+            .put("name", "a \"quoted\"\n\\name\tworld")
+            .put("count", 42usize)
+            .put("loss", 0.125f64)
+            .put("flag", true)
+            .put("none", Value::Null)
+            .put("xs", vec![1.0f64, 2.5, -3.0])
+            .build();
+        let text = doc.to_json();
+        let back = parse(&text).unwrap();
+        assert_eq!(back, doc);
+        assert_eq!(back.get("name").unwrap().as_str(), Some("a \"quoted\"\n\\name\tworld"));
+        assert_eq!(back.get("count").unwrap().as_usize(), Some(42));
+    }
+
+    #[test]
+    fn serialize_integers_without_fraction() {
+        assert_eq!(Value::Num(42.0).to_json(), "42");
+        assert_eq!(Value::Num(-7.0).to_json(), "-7");
+        assert_eq!(Value::Num(0.5).to_json(), "0.5");
+        assert_eq!(Value::Num(0.0).to_json(), "0");
+    }
+
+    #[test]
+    fn serialize_nonfinite_as_null() {
+        assert_eq!(Value::Num(f64::NAN).to_json(), "null");
+        assert_eq!(Value::Num(f64::INFINITY).to_json(), "null");
+        assert_eq!(Value::Num(f64::NEG_INFINITY).to_json(), "null");
+        // ...and the emitted document still parses.
+        let doc = obj().put("bad", f64::NAN).build().to_json();
+        assert_eq!(parse(&doc).unwrap().get("bad"), Some(&Value::Null));
+    }
+
+    #[test]
+    fn serialize_control_chars_escaped() {
+        let v = Value::Str("a\u{1}b\u{1f}c".into());
+        let text = v.to_json();
+        assert_eq!(text, "\"a\\u0001b\\u001fc\"");
+        assert_eq!(parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn serialize_extreme_floats_reparse() {
+        for &x in &[1e300, -1e300, 1e-300, 5e-324, f64::MAX, f64::MIN_POSITIVE] {
+            let text = Value::Num(x).to_json();
+            assert_eq!(parse(&text).unwrap().as_f64(), Some(x), "round-trip of {x:e}");
+        }
     }
 
     #[test]

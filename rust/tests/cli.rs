@@ -561,3 +561,75 @@ fn bench_rejects_bad_table() {
     let out = Command::new(pmlp()).args(["bench", "--table", "9"]).output().unwrap();
     assert!(!out.status.success());
 }
+
+#[test]
+fn traced_pipeline_summarizes_with_balanced_spans() {
+    // the observability acceptance path at the CLI surface: train and
+    // serve-bench append to ONE trace file (the sink opens it in append
+    // mode), and `trace summarize` folds it strictly — any unparseable
+    // line or unbalanced span would fail the subcommand
+    let trace = std::env::temp_dir().join(format!("pmlp_cli_trace_{}.jsonl", std::process::id()));
+    std::fs::remove_file(&trace).ok(); // fresh trace, not an append to an old run
+    let data = blossom();
+    let out = Command::new(pmlp())
+        .args([
+            "train", "--data", data.as_str(), "--target", "species", "--epochs", "3",
+            "--batch", "25", "--threads", "2", "--trace", trace.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stderr:\n{stderr}");
+    assert!(stderr.contains("tracing to"), "{stderr}");
+
+    let out2 = Command::new(pmlp())
+        .args([
+            "serve-bench", "--hidden", "8", "--features", "6", "--out-dim", "3", "--rows",
+            "64", "--clients", "2", "--depth", "4", "--batch-sizes", "4", "--trace",
+            trace.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    let stderr2 = String::from_utf8_lossy(&out2.stderr);
+    assert!(out2.status.success(), "stderr:\n{stderr2}");
+
+    // every line of the combined two-process trace must be JSON
+    let text = std::fs::read_to_string(&trace).unwrap();
+    assert!(!text.trim().is_empty());
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        parallel_mlps::util::json::parse(line)
+            .unwrap_or_else(|e| panic!("trace line is not JSON: {e}\n{line}"));
+    }
+
+    let out3 = Command::new(pmlp())
+        .args(["trace", "summarize", trace.to_str().unwrap()])
+        .output()
+        .unwrap();
+    std::fs::remove_file(&trace).ok();
+    let stdout3 = String::from_utf8_lossy(&out3.stdout);
+    let stderr3 = String::from_utf8_lossy(&out3.stderr);
+    assert!(out3.status.success(), "stdout:\n{stdout3}\nstderr:\n{stderr3}");
+    assert!(stdout3.contains("train.epoch"), "{stdout3}");
+    assert!(stdout3.contains("serve.batch"), "{stdout3}");
+    assert!(stdout3.contains("all spans balanced"), "{stdout3}");
+}
+
+#[test]
+fn trace_summarize_rejects_garbage_and_missing_files() {
+    let out = Command::new(pmlp())
+        .args(["trace", "summarize", "/nonexistent/pmlp.jsonl"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+
+    let bad = std::env::temp_dir().join(format!("pmlp_cli_badtrace_{}.jsonl", std::process::id()));
+    std::fs::write(&bad, "this is not json\n").unwrap();
+    let out2 = Command::new(pmlp())
+        .args(["trace", "summarize", bad.to_str().unwrap()])
+        .output()
+        .unwrap();
+    std::fs::remove_file(&bad).ok();
+    assert!(!out2.status.success());
+    let stderr2 = String::from_utf8_lossy(&out2.stderr);
+    assert!(stderr2.contains("line 1"), "{stderr2}");
+}

@@ -1,0 +1,182 @@
+//! Observability end-to-end: a traced train → halving → checkpoint →
+//! serve session must produce a JSONL trace where every line parses,
+//! every span balances, and the per-kind histograms carry real data.
+//!
+//! The trace sink is process-global state, so every test that touches it
+//! serializes on [`LOCK`] and runs against a fresh capture generation.
+
+use std::sync::Mutex;
+
+use parallel_mlps::coordinator::{BatchSet, TrainSession};
+use parallel_mlps::data;
+use parallel_mlps::io::{PoolCheckpoint, RankEntry};
+use parallel_mlps::nn::act::Act;
+use parallel_mlps::nn::init::init_pool;
+use parallel_mlps::nn::loss::Loss;
+use parallel_mlps::nn::parallel::ParallelEngine;
+use parallel_mlps::obs::summary::{render, summarize};
+use parallel_mlps::obs::trace;
+use parallel_mlps::pool::{PoolLayout, PoolSpec};
+use parallel_mlps::selection::{halving_run, HalvingArm, HalvingConfig};
+use parallel_mlps::serve::bench::synthetic_model;
+use parallel_mlps::serve::{ServeConfig, Server};
+use parallel_mlps::util::rng::Rng;
+
+const F: usize = 4;
+const O: usize = 2;
+const B: usize = 8;
+const SEED: u64 = 41;
+
+/// The sink is one-per-process; tests must not interleave generations.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn capture_to_string(buf: &Mutex<Vec<u8>>) -> String {
+    String::from_utf8(buf.lock().unwrap().clone()).expect("trace must be UTF-8")
+}
+
+#[test]
+fn traced_session_produces_balanced_parseable_trace() {
+    let _guard = lock();
+    let cap = trace::init_capture();
+    assert!(trace::enabled());
+
+    // train: 3 epochs over a small fused pool (spans on this thread)
+    let spec = PoolSpec::from_grid(&[2, 4], &[Act::Relu, Act::Tanh], 1).unwrap();
+    let layout = PoolLayout::build(&spec);
+    let fused = init_pool(SEED, &layout, F, O);
+    let mut engine =
+        ParallelEngine::new(layout.clone(), fused.clone(), Loss::Mse, F, O, B, 1);
+    let mut rng = Rng::new(SEED);
+    let ds = data::random_regression(B * 4, F, O, &mut rng);
+    let batches = BatchSet::new(&ds, B, false).unwrap();
+    TrainSession::builder().epochs(3).lr(0.05).run_with_batches(&mut engine, &batches).unwrap();
+
+    // successive halving over the same pool shape (halving.rung spans)
+    let hcfg = HalvingConfig { eta: 2, rung_epochs: 1 };
+    let val = data::random_regression(B * 2, F, O, &mut rng);
+    let arm = HalvingArm {
+        engine: ParallelEngine::new(layout.clone(), fused, Loss::Mse, F, O, B, 1),
+        train: ds.clone(),
+        val,
+    };
+    halving_run(vec![arm], B, 0.05, Loss::Mse, &hcfg, false).unwrap();
+
+    // checkpoint save + load (io.checkpoint spans)
+    let ckpt = PoolCheckpoint::from_shallow(
+        &layout,
+        F,
+        O,
+        Loss::Mse,
+        &engine.params_fused(),
+        vec![RankEntry { index: 0, val_loss: 0.5, val_metric: 0.5 }],
+    )
+    .unwrap();
+    let path =
+        std::env::temp_dir().join(format!("pmlp_obs_trace_{}.ckpt", std::process::id()));
+    ckpt.save(&path).unwrap();
+    PoolCheckpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    // serve a few rows (serve.batch spans, flushed when workers join)
+    let model = synthetic_model(16, 8, 3, 9);
+    let server =
+        Server::start(model, ServeConfig { max_batch: 4, queue_cap: 64, threads: 1 }).unwrap();
+    let client = server.client();
+    for _ in 0..12 {
+        let row: Vec<f32> = (0..8).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        client.predict(&row).unwrap();
+    }
+    server.shutdown();
+
+    trace::flush();
+    let text = capture_to_string(&cap);
+    trace::disable();
+
+    // every line is standalone JSON with an event type
+    for (i, line) in text.lines().filter(|l| !l.trim().is_empty()).enumerate() {
+        let v = parallel_mlps::util::json::parse(line)
+            .unwrap_or_else(|e| panic!("line {} is not JSON: {e}\n{line}", i + 1));
+        assert!(v.req("ev").unwrap().as_str().is_some(), "line {} lacks ev", i + 1);
+    }
+
+    // strict fold: unparseable lines or unbalanced spans are errors
+    let sum = summarize(&text).expect("trace must summarize cleanly");
+    assert!(sum.lines > 0);
+
+    let epochs = sum.spans.get("train.epoch").expect("train.epoch spans");
+    // 3 session epochs + the halving rungs' training epochs
+    assert!(epochs.count >= 3, "epoch spans: {}", epochs.count);
+    assert!(!epochs.hist.is_empty());
+    assert!(epochs.hist.quantile(0.5) <= epochs.hist.quantile(0.99));
+
+    let batches_stat = sum.spans.get("serve.batch").expect("serve.batch spans");
+    assert!(batches_stat.count >= 1);
+    assert!(batches_stat.hist.quantile(0.5) <= batches_stat.hist.quantile(0.99));
+
+    assert!(sum.spans.get("halving.rung").map(|s| s.count).unwrap_or(0) >= 1);
+    assert_eq!(sum.spans.get("io.checkpoint").map(|s| s.count), Some(2));
+
+    let rows = sum.counters.get("train.rows").expect("train.rows counter");
+    assert!(rows.sum > 0.0);
+
+    // the CLI rendering of the same summary names both hot span kinds
+    let rendered = render(&sum);
+    assert!(rendered.contains("train.epoch"), "{rendered}");
+    assert!(rendered.contains("serve.batch"), "{rendered}");
+}
+
+#[test]
+fn disabled_sink_is_inert_and_captures_nothing() {
+    let _guard = lock();
+    trace::disable();
+    assert!(!trace::enabled());
+
+    // all entry points must be harmless no-ops when off
+    let mut sp = trace::span("train.epoch");
+    sp.field("epoch", 1usize);
+    sp.end();
+    trace::counter("train.rows", 128.0);
+    trace::gauge("peak_rss_bytes", 1.0);
+    trace::flush();
+
+    // a fresh capture sees nothing from before its generation
+    let cap = trace::init_capture();
+    trace::flush();
+    let before = capture_to_string(&cap);
+    assert!(before.is_empty(), "stale events leaked: {before}");
+    trace::disable();
+
+    // and nothing emitted after disable reaches the dead capture either
+    trace::counter("train.rows", 1.0);
+    trace::flush();
+    assert!(capture_to_string(&cap).is_empty());
+}
+
+#[test]
+fn span_fields_survive_into_end_events() {
+    let _guard = lock();
+    let cap = trace::init_capture();
+    let mut sp = trace::span("halving.rung");
+    sp.field("rung", 2usize);
+    sp.field("entering", 9usize);
+    sp.end();
+    trace::flush();
+    let text = capture_to_string(&cap);
+    trace::disable();
+
+    let end_line = text
+        .lines()
+        .find(|l| l.contains("\"ev\": \"end\"") || l.contains("\"ev\":\"end\""))
+        .expect("an end event");
+    let v = parallel_mlps::util::json::parse(end_line).unwrap();
+    assert_eq!(v.req("span").unwrap().as_str(), Some("halving.rung"));
+    assert_eq!(v.req("rung").unwrap().as_usize(), Some(2));
+    assert_eq!(v.req("entering").unwrap().as_usize(), Some(9));
+    assert!(v.req("dur_us").unwrap().as_f64().is_some());
+    let sum = summarize(&text).unwrap();
+    assert_eq!(sum.spans.get("halving.rung").map(|s| s.count), Some(1));
+}
