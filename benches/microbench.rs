@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo bench --bench microbench [-- --quick]`
 
-use parallel_mlps::bench_harness::{measure, BenchArgs};
+use parallel_mlps::bench_harness::{measure, BenchArgs, Measurement};
 use parallel_mlps::data;
 use parallel_mlps::metrics::Timer;
 use parallel_mlps::nn::act::ALL_ACTS;
@@ -18,17 +18,40 @@ use parallel_mlps::tensor::kernels::{self, Kernel, KernelConfig};
 use parallel_mlps::tensor::{matmul, scatter, Tensor};
 use parallel_mlps::util::rng::Rng;
 
+/// Ulp-bounded agreement gate for the reassociating simd kernel: bit
+/// equality is the wrong assert (FMA legitimately moves low-order
+/// bits), but anything beyond rounding noise means the timing below
+/// would be measuring a wrong kernel.
+fn assert_ulp_close(got: &[f32], want: &[f32], tag: &str) {
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let tol = 1e-4 * (1.0 + w.abs());
+        assert!(
+            (g - w).abs() <= tol,
+            "simd kernel disagreement on {tag}[{i}]: {g} vs {w}"
+        );
+    }
+}
+
 fn main() {
     let args = BenchArgs::from_env();
     let reps = if args.quick { 3 } else { 10 };
     let mut rng = Rng::new(1);
-    let mut results = Vec::new();
+    // (measurement, flop count per rep) — flops turn the ms column into
+    // a GFLOP/s column so speedups compare across shapes
+    let mut results: Vec<(Measurement, Option<f64>)> = Vec::new();
 
-    // --- naive vs blocked kernel on the fused training shapes --------------
+    // --- naive vs blocked vs simd kernel on the fused training shapes ------
     // the [B,F]x[F,H_pad] projections and the [H_pad,B,F]-class weight
     // grads are exactly what `pmlp train-bench` exercises; the blocked
-    // kernel must beat the naive oracle here (ISSUE 5 acceptance)
+    // kernel must beat the naive oracle here (ISSUE 5 acceptance) and
+    // simd must beat blocked on AVX2 hosts (ISSUE 8 acceptance)
     eprintln!("active kernel: {}", kernels::active().describe());
+    let mut kernel_axis = vec![Kernel::Naive, Kernel::Blocked];
+    if kernels::simd_available() {
+        kernel_axis.push(Kernel::Simd);
+    } else {
+        eprintln!("simd kernel column: skipped (this host lacks AVX2+FMA)");
+    }
     for &(m, k, n, tag) in &[
         (32usize, 16usize, 2560usize, "fwd fused [B,F]x[F,H_pad]"),
         (256, 64, 1024, "fwd fused big [B,F]x[F,H_pad]"),
@@ -38,7 +61,8 @@ fn main() {
         let mut b = Tensor::zeros(&[k, n]);
         rng.fill_normal(b.data_mut(), 0.0, 1.0);
         let mut c = Tensor::zeros(&[m, n]);
-        // sanity: the two kernels must agree bit-for-bit before timing
+        // sanity: the tier-1 kernels must agree bit-for-bit before
+        // timing; simd within the ulp bound
         let mut c2 = Tensor::zeros(&[m, n]);
         kernels::matmul_nn_with(KernelConfig::naive(), a.data(), b.data(), c.data_mut(), m, k, n, 1)
             .unwrap();
@@ -48,19 +72,36 @@ fn main() {
             c.data().iter().zip(c2.data()).all(|(x, y)| x.to_bits() == y.to_bits()),
             "kernel disagreement on {tag}"
         );
-        for kernel in [Kernel::Naive, Kernel::Blocked] {
+        if kernels::simd_available() {
+            kernels::matmul_nn_with(
+                KernelConfig::simd(),
+                a.data(),
+                b.data(),
+                c2.data_mut(),
+                m,
+                k,
+                n,
+                1,
+            )
+            .unwrap();
+            assert_ulp_close(c2.data(), c.data(), tag);
+        }
+        for &kernel in &kernel_axis {
             // time the autotuned tiles the `auto` default actually ships
             // (the header line above describes exactly this config)
             let cfg = kernels::active().with_kernel(kernel);
-            results.push(measure(
-                &format!("matmul_nn {:<7} {tag} [{m}x{k}x{n}]", kernel.name()),
-                2,
-                reps,
-                || {
-                    kernels::matmul_nn_with(cfg, a.data(), b.data(), c.data_mut(), m, k, n, 1)
-                        .unwrap();
-                    std::hint::black_box(c.data()[0]);
-                },
+            results.push((
+                measure(
+                    &format!("matmul_nn {:<7} {tag} [{m}x{k}x{n}]", kernel.name()),
+                    2,
+                    reps,
+                    || {
+                        kernels::matmul_nn_with(cfg, a.data(), b.data(), c.data_mut(), m, k, n, 1)
+                            .unwrap();
+                        std::hint::black_box(c.data()[0]);
+                    },
+                ),
+                Some(2.0 * m as f64 * k as f64 * n as f64),
             ));
         }
     }
@@ -72,17 +113,46 @@ fn main() {
         let mut b = Tensor::zeros(&[k, n]);
         rng.fill_normal(b.data_mut(), 0.0, 1.0);
         let mut c = Tensor::zeros(&[m, n]);
-        for kernel in [Kernel::Naive, Kernel::Blocked] {
+        if kernels::simd_available() {
+            let mut want = Tensor::zeros(&[m, n]);
+            kernels::matmul_tn_with(
+                KernelConfig::naive(),
+                a.data(),
+                b.data(),
+                want.data_mut(),
+                m,
+                k,
+                n,
+                1,
+            )
+            .unwrap();
+            kernels::matmul_tn_with(
+                KernelConfig::simd(),
+                a.data(),
+                b.data(),
+                c.data_mut(),
+                m,
+                k,
+                n,
+                1,
+            )
+            .unwrap();
+            assert_ulp_close(c.data(), want.data(), "dW1 fused tn");
+        }
+        for &kernel in &kernel_axis {
             let cfg = kernels::active().with_kernel(kernel);
-            results.push(measure(
-                &format!("matmul_tn {:<7} dW1 fused [{m}x{k}x{n}]", kernel.name()),
-                2,
-                reps,
-                || {
-                    kernels::matmul_tn_with(cfg, a.data(), b.data(), c.data_mut(), m, k, n, 1)
-                        .unwrap();
-                    std::hint::black_box(c.data()[0]);
-                },
+            results.push((
+                measure(
+                    &format!("matmul_tn {:<7} dW1 fused [{m}x{k}x{n}]", kernel.name()),
+                    2,
+                    reps,
+                    || {
+                        kernels::matmul_tn_with(cfg, a.data(), b.data(), c.data_mut(), m, k, n, 1)
+                            .unwrap();
+                        std::hint::black_box(c.data()[0]);
+                    },
+                ),
+                Some(2.0 * m as f64 * k as f64 * n as f64),
             ));
         }
     }
@@ -97,10 +167,13 @@ fn main() {
         rng.fill_normal(a.data_mut(), 0.0, 1.0);
         let mut b = Tensor::zeros(&[n, k]);
         rng.fill_normal(b.data_mut(), 0.0, 1.0);
-        results.push(measure(&format!("matmul_nt {tag} [{m}x{k}x{n}]"), 2, reps, || {
-            let c = matmul::nt(&a, &b, 1);
-            std::hint::black_box(c.data()[0]);
-        }));
+        results.push((
+            measure(&format!("matmul_nt {tag} [{m}x{k}x{n}]"), 2, reps, || {
+                let c = matmul::nt(&a, &b, 1);
+                std::hint::black_box(c.data()[0]);
+            }),
+            Some(2.0 * m as f64 * k as f64 * n as f64),
+        ));
     }
 
     // --- activation throughput (71k elements, per function) ---------------
@@ -108,10 +181,13 @@ fn main() {
     rng.fill_normal(&mut xs, 0.0, 1.0);
     let mut out = vec![0.0f32; xs.len()];
     for act in ALL_ACTS {
-        results.push(measure(&format!("act {:<11} 71k elems", act.name()), 1, reps, || {
-            act.apply_slice(&xs, &mut out);
-            std::hint::black_box(out[0]);
-        }));
+        results.push((
+            measure(&format!("act {:<11} 71k elems", act.name()), 1, reps, || {
+                act.apply_slice(&xs, &mut out);
+                std::hint::black_box(out[0]);
+            }),
+            None,
+        ));
     }
 
     // --- scatter-add: paper semantics vs contiguous segment sum -----------
@@ -133,21 +209,27 @@ fn main() {
             col += h;
         }
     }
-    results.push(measure("scatter_add_dim1 (indexed, paper form)", 1, reps, || {
-        let r = scatter::scatter_add_dim1(&src, &index, lay.m_pad());
-        std::hint::black_box(r.data()[0]);
-    }));
-    results.push(measure("segment_sum (contiguous, fused layout)", 1, reps, || {
-        let mut o = vec![0.0f32; spans.len()];
-        for row in 0..32 {
-            scatter::segment_sum_contiguous(
-                &src.data()[row * 2200..(row + 1) * 2200],
-                &spans,
-                &mut o,
-            );
-        }
-        std::hint::black_box(o[0]);
-    }));
+    results.push((
+        measure("scatter_add_dim1 (indexed, paper form)", 1, reps, || {
+            let r = scatter::scatter_add_dim1(&src, &index, lay.m_pad());
+            std::hint::black_box(r.data()[0]);
+        }),
+        None,
+    ));
+    results.push((
+        measure("segment_sum (contiguous, fused layout)", 1, reps, || {
+            let mut o = vec![0.0f32; spans.len()];
+            for row in 0..32 {
+                scatter::segment_sum_contiguous(
+                    &src.data()[row * 2200..(row + 1) * 2200],
+                    &spans,
+                    &mut o,
+                );
+            }
+            std::hint::black_box(o[0]);
+        }),
+        None,
+    ));
 
     // --- fused step vs sequential steps, end to end -------------------------
     let f = 10;
@@ -157,9 +239,12 @@ fn main() {
     let mut engine = ParallelEngine::new(lay.clone(), fused.clone(), Loss::Mse, f, o, b, 1);
     let ds = data::random_regression(b, f, o, &mut rng);
     let (x, y) = ds.batch(0, b);
-    results.push(measure("fused step (200 models, 1 batch)", 2, reps, || {
-        std::hint::black_box(engine.step(&x, &y, 0.01).len());
-    }));
+    results.push((
+        measure("fused step (200 models, 1 batch)", 2, reps, || {
+            std::hint::black_box(engine.step(&x, &y, 0.01).len());
+        }),
+        None,
+    ));
     let mut trainers: Vec<MlpTrainer> = (0..spec.n_models())
         .map(|m| {
             MlpTrainer::new(
@@ -171,11 +256,14 @@ fn main() {
             )
         })
         .collect();
-    results.push(measure("sequential steps (200 models, 1 batch)", 2, reps, || {
-        for t in trainers.iter_mut() {
-            std::hint::black_box(t.step(&x, &y, 0.01));
-        }
-    }));
+    results.push((
+        measure("sequential steps (200 models, 1 batch)", 2, reps, || {
+            for t in trainers.iter_mut() {
+                std::hint::black_box(t.step(&x, &y, 0.01));
+            }
+        }),
+        None,
+    ));
 
     // --- dataset batch slicing (the per-batch training hot path) -----------
     // one full epoch of contiguous batch() calls; the contiguous-copy
@@ -190,22 +278,31 @@ fn main() {
             "batch() diverged from the take() reference"
         );
     }
-    results.push(measure("dataset batch x64 (4096 rows, epoch of slices)", 2, reps, || {
-        let mut acc = 0f32;
-        let mut start = 0;
-        while start < big.len() {
-            let (x, y) = big.batch(start, 64);
-            acc += x.data()[0] + y.data()[0];
-            start += x.rows();
-        }
-        std::hint::black_box(acc);
-    }));
+    results.push((
+        measure("dataset batch x64 (4096 rows, epoch of slices)", 2, reps, || {
+            let mut acc = 0f32;
+            let mut start = 0;
+            while start < big.len() {
+                let (x, y) = big.batch(start, 64);
+                acc += x.data()[0] + y.data()[0];
+                start += x.rows();
+            }
+            std::hint::black_box(acc);
+        }),
+        None,
+    ));
 
     // --- report -------------------------------------------------------------
     let t = Timer::new();
     let mut report = String::from("## microbench\n\n```\n");
-    for r in &results {
+    for (r, flops) in &results {
         report.push_str(&r.summary());
+        match flops {
+            Some(fl) if r.stats.min() > 0.0 => {
+                report.push_str(&format!("  {:>8.2} GFLOP/s", fl / r.stats.min() / 1e9));
+            }
+            _ => {}
+        }
         report.push('\n');
     }
     report.push_str("```\n");

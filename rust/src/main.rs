@@ -101,13 +101,15 @@ a synthetic load — or, with --data, the CSV's rows normalized through
 the checkpoint's preprocessor — against the micro-batch server;
 train-bench records training throughput (models/s, rows/s) plus
 per-phase peak RSS and CPU time for shallow vs depth-2 vs depth-3
-pools at fixed seeds, under both matmul kernels (naive oracle vs
-blocked), into BENCH_train.json.
+pools at fixed seeds, under every available matmul kernel (naive
+oracle vs blocked vs simd on AVX2+FMA hosts), into BENCH_train.json.
 
 Env: PMLP_THREADS (worker count), PMLP_KERNEL (matmul kernel:
-naive|blocked|auto; auto = blocked with autotuned tile sizes; results
-are bit-identical across kernels), PMLP_ARTIFACTS (AOT artifact dir),
-PMLP_TRACE (trace event file, same as --trace).
+naive|blocked|simd|auto; auto probes tile sizes and, on AVX2+FMA
+hosts, the simd kernel; simd falls back to blocked with a warning on
+unsupported CPUs; naive/blocked are bit-identical to each other, simd
+is bounded-ulp close), PMLP_ARTIFACTS (AOT artifact dir), PMLP_TRACE
+(trace event file, same as --trace).
 ";
 
 fn main() {
@@ -853,11 +855,17 @@ fn train_bench(args: &Args) -> anyhow::Result<()> {
     let session =
         || TrainSession::builder().epochs(epochs).warmup(warmup).lr(0.05);
 
-    // both kernels at fixed seeds: the naive-vs-blocked training
-    // throughput IS the perf record this bench exists to keep honest
-    // (the kernel exactness contract guarantees identical losses)
-    eprintln!("autotuned blocked config: {}", kernels::active().describe());
-    let kernel_axis = [Kernel::Naive, Kernel::Blocked];
+    // every available kernel at fixed seeds: the naive-vs-blocked-vs-simd
+    // training throughput IS the perf record this bench exists to keep
+    // honest (tier-1 kernels have identical losses; simd is bounded-ulp
+    // close, far below anything that could reorder a ranking)
+    eprintln!("autotuned kernel config: {}", kernels::active().describe());
+    let mut kernel_axis = vec![Kernel::Naive, Kernel::Blocked];
+    if kernels::simd_available() {
+        kernel_axis.push(Kernel::Simd);
+    } else {
+        eprintln!("simd kernel column: skipped (this host lacks AVX2+FMA)");
+    }
     let mut cells: Vec<TrainBenchCell> = Vec::with_capacity(3 * kernel_axis.len());
 
     // per-phase resource accounting: reset the kernel's RSS high-water
@@ -875,7 +883,7 @@ fn train_bench(args: &Args) -> anyhow::Result<()> {
         (s.peak_rss_bytes, cpu)
     };
 
-    for kernel in kernel_axis {
+    for &kernel in &kernel_axis {
         // shallow fused pool (depth 1) through ParallelEngine
         {
             let spec = PoolSpec::from_grid(&hidden, &acts, 1)?;
@@ -994,10 +1002,8 @@ fn train_bench(args: &Args) -> anyhow::Result<()> {
     }
     println!("{}", t.to_markdown());
     for c in cells.iter().filter(|c| c.kernel == "naive") {
-        if let Some(blocked) = cells
-            .iter()
-            .find(|b| b.kernel == "blocked" && b.pool == c.pool)
-        {
+        let find = |k: &str| cells.iter().find(|b| b.kernel == k && b.pool == c.pool);
+        if let Some(blocked) = find("blocked") {
             println!(
                 "{}: blocked vs naive speedup {:.2}x ({:.0} -> {:.0} rows/s)",
                 c.pool,
@@ -1005,6 +1011,15 @@ fn train_bench(args: &Args) -> anyhow::Result<()> {
                 c.rows_per_s(),
                 blocked.rows_per_s()
             );
+            if let Some(simd) = find("simd") {
+                println!(
+                    "{}: simd vs blocked speedup {:.2}x ({:.0} -> {:.0} rows/s)",
+                    c.pool,
+                    blocked.avg_epoch_s / simd.avg_epoch_s.max(1e-12),
+                    blocked.rows_per_s(),
+                    simd.rows_per_s()
+                );
+            }
         }
     }
 
@@ -1115,6 +1130,32 @@ fn train_bench_json(
         None => Value::Null,
     };
     let opt_f = |v: Option<f64>| v.map(Value::from).unwrap_or(Value::Null);
+    // per-pool kernel speedups (epoch-time ratios): the acceptance
+    // record for a new kernel lives here, not in a shell transcript
+    let mut pools: Vec<&str> = Vec::new();
+    for c in cells {
+        if !pools.contains(&c.pool) {
+            pools.push(c.pool);
+        }
+    }
+    let epoch_s = |pool: &str, k: &str| {
+        cells.iter().find(|c| c.pool == pool && c.kernel == k).map(|c| c.avg_epoch_s)
+    };
+    let ratio = |num: Option<f64>, den: Option<f64>| match (num, den) {
+        (Some(a), Some(b)) if b > 0.0 => Value::from(a / b),
+        _ => Value::Null,
+    };
+    let kernel_speedups: Vec<Value> = pools
+        .iter()
+        .map(|&pool| {
+            obj()
+                .put("pool", pool)
+                .put("blocked_vs_naive", ratio(epoch_s(pool, "naive"), epoch_s(pool, "blocked")))
+                .put("simd_vs_blocked", ratio(epoch_s(pool, "blocked"), epoch_s(pool, "simd")))
+                .put("simd_vs_naive", ratio(epoch_s(pool, "naive"), epoch_s(pool, "simd")))
+                .build()
+        })
+        .collect();
     let runs: Vec<Value> = cells
         .iter()
         .map(|c| {
@@ -1145,6 +1186,8 @@ fn train_bench_json(
         .put("warmup", warmup)
         .put("threads", threads)
         .put("seed", seed)
+        .put("simd_available", kernels::simd_available())
+        .put("kernel_speedups", kernel_speedups)
         .put(
             "halving",
             obj()

@@ -1,16 +1,19 @@
-//! The at-startup tile probe.
+//! The at-startup kernel/tile probe.
 //!
 //! Measures every [`TILE_CANDIDATES`] entry on one fused-training-shaped
 //! `nt` product (a `[B, F] × [F, H]`-class shape: modest rows, long
-//! fused output axis) and returns the fastest. Cost is a handful of
-//! milliseconds, paid once per process on first kernel dispatch when
-//! `PMLP_KERNEL` is unset/`auto`.
+//! fused output axis) and returns the fastest. When the host supports
+//! AVX2+FMA the simd kernel joins the race over the same candidates, so
+//! `PMLP_KERNEL=auto` picks the fastest *kernel*, not just the fastest
+//! tile. Cost is a handful of milliseconds, paid once per process on
+//! first kernel dispatch when `PMLP_KERNEL` is unset/`auto`.
 //!
-//! The probe is a pure performance decision: the exactness contract in
-//! `mod.rs` guarantees every tile size produces identical bits, so a
-//! noisy measurement can pick a slower tile but never a wrong one.
+//! The probe is a pure performance decision: a noisy measurement can
+//! pick a slower config but never a wrong one — the tier-1 kernels are
+//! bit-identical for every tile, and a probe-selected simd kernel stays
+//! inside the tier-2 bounded-ulp contract (`mod.rs`).
 
-use super::{blocked, Tile, TILE_CANDIDATES};
+use super::{blocked, simd, Kernel, KernelConfig, Tile, TILE_CANDIDATES};
 use std::time::Instant;
 
 /// Probe shape: enough work to rank tiles, small enough to be free.
@@ -29,35 +32,66 @@ fn pattern(len: usize, salt: u32) -> Vec<f32> {
         .collect()
 }
 
-pub(super) fn pick_tile() -> Tile {
+/// Best-of-2 wall time (after one warmup) for one candidate config on
+/// the probe shape. `min` is the right statistic for a noisy
+/// single-shot probe.
+fn time_candidate(cfg: KernelConfig, a: &[f32], b: &[f32], c: &mut [f32]) -> f64 {
+    let run = |c: &mut [f32]| match cfg.kernel {
+        Kernel::Simd => simd::nt(a, b, c, PM, PK, PN, cfg.tile, 1),
+        _ => blocked::nt(a, b, c, PM, PK, PN, cfg.tile, 1),
+    };
+    run(c);
+    let mut t_min = f64::INFINITY;
+    for _ in 0..2 {
+        let t = Instant::now();
+        run(c);
+        t_min = t_min.min(t.elapsed().as_secs_f64());
+    }
+    // black-box the output so the multiply cannot be optimized away
+    std::hint::black_box(c[0]);
+    t_min
+}
+
+/// Race every candidate config and return the fastest. Candidates are
+/// `TILE_CANDIDATES × {blocked}` always, plus `TILE_CANDIDATES × {simd}`
+/// when `simd_ok`. Emits one `kernel.autotune` span whose `kernel`
+/// field names the winner.
+pub(super) fn pick_config(simd_ok: bool) -> KernelConfig {
     let mut probe_span = crate::obs::trace::span("kernel.autotune");
     let a = pattern(PM * PK, 1);
     let b = pattern(PN * PK, 2);
     let mut c = vec![0.0f32; PM * PN];
-    let mut best = TILE_CANDIDATES[0];
+    let mut kernels = vec![Kernel::Blocked];
+    if simd_ok {
+        kernels.push(Kernel::Simd);
+    }
+    let mut best = KernelConfig { kernel: Kernel::Blocked, tile: TILE_CANDIDATES[0] };
     let mut best_s = f64::INFINITY;
-    for &tile in &TILE_CANDIDATES {
-        // one warmup, then best-of-2 (min is the right statistic for a
-        // noisy single-shot probe)
-        blocked::nt(&a, &b, &mut c, PM, PK, PN, tile, 1);
-        let mut t_min = f64::INFINITY;
-        for _ in 0..2 {
-            let t = Instant::now();
-            blocked::nt(&a, &b, &mut c, PM, PK, PN, tile, 1);
-            t_min = t_min.min(t.elapsed().as_secs_f64());
-        }
-        // black-box the output so the multiply cannot be optimized away
-        std::hint::black_box(c[0]);
-        if t_min < best_s {
-            best_s = t_min;
-            best = tile;
+    let mut probed = 0usize;
+    for &kernel in &kernels {
+        for &tile in &TILE_CANDIDATES {
+            let cfg = KernelConfig { kernel, tile };
+            let t_min = time_candidate(cfg, &a, &b, &mut c);
+            probed += 1;
+            if t_min < best_s {
+                best_s = t_min;
+                best = cfg;
+            }
         }
     }
-    probe_span.field("nc", best.nc);
-    probe_span.field("kc", best.kc);
-    probe_span.field("candidates", TILE_CANDIDATES.len());
+    probe_span.field("kernel", best.kernel.name());
+    probe_span.field("nc", best.tile.nc);
+    probe_span.field("kc", best.tile.kc);
+    probe_span.field("candidates", probed);
     probe_span.end();
     best
+}
+
+/// Tile-only probe over the blocked kernel — kept for
+/// [`super::autotune_tile`] callers that want a tile without changing
+/// the kernel.
+pub(super) fn pick_tile() -> Tile {
+    pick_config(false).tile
 }
 
 #[cfg(test)]
@@ -71,6 +105,18 @@ mod tests {
         assert!(TILE_CANDIDATES.contains(&tile));
         // generous bound: the probe must stay a startup rounding error
         assert!(t.elapsed().as_secs_f64() < 2.0, "probe took {:?}", t.elapsed());
+    }
+
+    #[test]
+    fn config_probe_respects_the_feature_gate() {
+        let cfg = pick_config(false);
+        assert_eq!(cfg.kernel, Kernel::Blocked, "no-simd probe must stay blocked");
+        assert!(TILE_CANDIDATES.contains(&cfg.tile));
+        // With the gate open, either kernel may win on timing — but the
+        // result must still come from the candidate grid.
+        let cfg = pick_config(super::super::simd_available());
+        assert!(matches!(cfg.kernel, Kernel::Blocked | Kernel::Simd));
+        assert!(TILE_CANDIDATES.contains(&cfg.tile));
     }
 
     #[test]

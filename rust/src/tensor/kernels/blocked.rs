@@ -227,7 +227,7 @@ pub(super) fn nt(
 /// Scalar edge path for NT: accumulate `kk in k0..k1` onto the partial
 /// sums already parked in the slab (same order as the micro-kernel).
 #[allow(clippy::too_many_arguments)]
-fn edge_nt(
+pub(super) fn edge_nt(
     a: &[f32],
     b: &[f32],
     crows: &mut [f32],
@@ -298,7 +298,7 @@ pub(super) fn nn(
 }
 
 #[allow(clippy::too_many_arguments)]
-fn edge_nn(
+pub(super) fn edge_nn(
     a: &[f32],
     b: &[f32],
     crows: &mut [f32],
@@ -369,7 +369,7 @@ pub(super) fn tn(
 }
 
 #[allow(clippy::too_many_arguments)]
-fn edge_tn(
+pub(super) fn edge_tn(
     a: &[f32],
     b: &[f32],
     crows: &mut [f32],
@@ -455,7 +455,7 @@ pub(super) fn block_diag(
 /// Scalar edge path for the block-diagonal kernel (rows `i0..i1`, output
 /// columns `j0..j1` of one model block).
 #[allow(clippy::too_many_arguments)]
-fn edge_block(
+pub(super) fn edge_block(
     input: &[f32],
     w: &[f32],
     bias: &[f32],

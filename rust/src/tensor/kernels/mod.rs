@@ -1,39 +1,60 @@
 //! The matmul kernel subsystem: one dispatch point for every matrix
 //! product the crate computes.
 //!
-//! Two kernels live behind the [`Kernel`] enum:
+//! Three kernels live behind the [`Kernel`] enum:
 //!
 //! * [`Kernel::Naive`] — the reference implementation: a row-parallel
 //!   triple loop, one accumulator per output element, `k` ascending.
 //!   Always available; every other kernel is tested against it.
 //! * [`Kernel::Blocked`] — cache-blocked (`NC`/`KC` tiles) and
 //!   register-tiled (a 4×8 micro-kernel with an unrolled k-loop): the
-//!   hot path. Ericson & Mbuvha (1701.05130) show memory-bound kernels
-//!   dominate network-parallel training cost; this is where that cost
-//!   is paid down.
+//!   portable hot path. Ericson & Mbuvha (1701.05130) show memory-bound
+//!   kernels dominate network-parallel training cost; this is where
+//!   that cost is paid down.
+//! * [`Kernel::Simd`] — explicit x86_64 AVX2+FMA micro-kernels behind
+//!   the same NC/KC blocking, runtime-detected (see [`simd_available`]);
+//!   delegates to `Blocked` on unsupported CPUs, so the variant is safe
+//!   to select anywhere.
 //!
-//! **Exactness contract.** Every kernel computes every output element as
+//! **Exactness contract — two tiers.**
+//!
+//! *Tier 1 (bit-exact): `Naive` and `Blocked`.* Every output element is
 //! a *single-accumulator sum over `k` in ascending order* (bias, when a
-//! kernel takes one, is added once after the sum). No reassociation is
+//! kernel takes one, added once after the sum). No reassociation is
 //! permitted: splitting `k` into cache blocks keeps the running sum in
 //! `C`, so the addition order per element never changes. Consequences,
 //! which `rust/tests/kernels.rs` asserts at the bit level:
 //!
 //! * `Blocked` output is **bit-identical** to `Naive` output for every
-//!   shape (the "≤ 1 ulp where reassociation is allowed" escape hatch is
-//!   deliberately unused — nothing reassociates);
+//!   shape;
 //! * results are independent of the thread count (threads partition
 //!   output rows; no element's reduction crosses a thread);
 //! * results are independent of the tile sizes, so the autotune probe is
 //!   a pure performance decision and can never change training results.
 //!
+//! *Tier 2 (bounded-ulp): `Simd`.* FMA fuses multiply and add into one
+//! rounding and the k-vectorized reductions interleave 8 partial sums,
+//! so `Simd` output is only **bounded-ulp** close to the oracle —
+//! `rust/tests/kernels.rs` enforces a documented ulp/relative-epsilon
+//! bound over the same shape × tile × thread sweep, and
+//! `rust/tests/generative.rs` bounds the end-to-end training drift.
+//! Thread-count independence still holds exactly (row partitioning
+//! never touches per-element math), but tile sizes may legitimately
+//! move low-order bits (the k-slice boundaries move the horizontal
+//! reductions). Exact integer arithmetic stays exact under fusion, so
+//! the golden checkpoint fixture is bit-stable under every kernel.
+//!
 //! **Runtime selection.** The process-wide kernel comes from the
 //! `PMLP_KERNEL` env var, resolved once on first use:
 //!
-//! * unset or `auto` — `Blocked`, tile sizes picked by an at-startup
-//!   probe over [`TILE_CANDIDATES`] (see [`autotune`]);
+//! * unset or `auto` — the fastest config found by an at-startup probe
+//!   over [`TILE_CANDIDATES`] (`Blocked` everywhere; `Simd` candidates
+//!   join the probe when the CPU supports them — see [`autotune`]);
 //! * `blocked` — `Blocked` with [`Tile::DEFAULT`] (no probe; fully
 //!   deterministic startup);
+//! * `simd` — the AVX2+FMA kernel with [`Tile::DEFAULT`]; on CPUs
+//!   without AVX2+FMA this warns and falls back to `blocked` (never
+//!   panics);
 //! * `naive` — the reference kernel (the oracle, also the fallback for
 //!   debugging a suspected kernel bug);
 //! * anything else — a warning, then the `auto` behavior (mirrors how
@@ -53,6 +74,9 @@
 mod autotune;
 mod blocked;
 mod naive;
+mod simd;
+
+pub use simd::{SIMD_NR, SIMD_NT_COLS};
 
 use std::fmt;
 use std::sync::OnceLock;
@@ -67,8 +91,12 @@ pub const NR: usize = 8;
 pub enum Kernel {
     /// Reference row-parallel triple loop — the differential oracle.
     Naive,
-    /// Cache-blocked, register-tiled (4×8 micro-kernel) hot path.
+    /// Cache-blocked, register-tiled (4×8 micro-kernel) portable hot
+    /// path — bit-exact tier.
     Blocked,
+    /// AVX2+FMA micro-kernels (runtime-detected; delegates to
+    /// `Blocked` on unsupported CPUs) — bounded-ulp tier.
+    Simd,
 }
 
 impl Kernel {
@@ -76,14 +104,25 @@ impl Kernel {
         match self {
             Kernel::Naive => "naive",
             Kernel::Blocked => "blocked",
+            Kernel::Simd => "simd",
         }
     }
 }
 
-/// Cache-blocking tile sizes for the blocked kernel. `nc` bounds the
-/// output-column panel, `kc` the reduction slice kept hot per pass.
-/// Tiles are a pure performance knob: the exactness contract guarantees
-/// identical bits for every choice.
+/// Does this host support the `Simd` kernel's AVX2+FMA micro-kernels?
+/// Runtime-detected; `false` on non-x86_64 builds. Selecting
+/// [`Kernel::Simd`] when this is `false` is safe (it delegates to
+/// `Blocked`) but pointless.
+pub fn simd_available() -> bool {
+    simd::available()
+}
+
+/// Cache-blocking tile sizes for the blocked and simd kernels. `nc`
+/// bounds the output-column panel, `kc` the reduction slice kept hot
+/// per pass. For the tier-1 kernels tiles are a pure performance knob
+/// (identical bits for every choice); for `Simd` they may move
+/// low-order bits (k-slice boundaries change where horizontal
+/// reductions happen) while staying inside the bounded-ulp contract.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Tile {
     pub nc: usize,
@@ -122,6 +161,13 @@ impl KernelConfig {
         KernelConfig { kernel: Kernel::Blocked, tile: Tile::DEFAULT }
     }
 
+    /// The AVX2+FMA kernel with the default (un-probed) tile sizes.
+    /// Safe on any host — execution delegates to `Blocked` when the CPU
+    /// lacks the features (see [`simd_available`]).
+    pub fn simd() -> KernelConfig {
+        KernelConfig { kernel: Kernel::Simd, tile: Tile::DEFAULT }
+    }
+
     /// This config with the kernel swapped (tile kept).
     pub fn with_kernel(self, kernel: Kernel) -> KernelConfig {
         KernelConfig { kernel, ..self }
@@ -134,6 +180,10 @@ impl KernelConfig {
             Kernel::Blocked => {
                 format!("blocked (nc={}, kc={}, {MR}x{NR} micro-kernel)", self.tile.nc, self.tile.kc)
             }
+            Kernel::Simd => format!(
+                "simd (avx2+fma, nc={}, kc={}, {MR}x{SIMD_NT_COLS}/{MR}x{SIMD_NR} micro-kernels)",
+                self.tile.nc, self.tile.kc
+            ),
         }
     }
 }
@@ -143,7 +193,10 @@ impl KernelConfig {
 pub enum KernelChoice {
     Naive,
     Blocked,
-    /// Blocked with autotuned tiles (the default).
+    /// AVX2+FMA micro-kernels (falls back to `Blocked` off-x86).
+    Simd,
+    /// Fastest probed config — blocked everywhere, simd when supported
+    /// (the default).
     Auto,
 }
 
@@ -154,10 +207,40 @@ pub fn parse_kernel_env(v: &str) -> Result<KernelChoice, String> {
     match v.trim().to_ascii_lowercase().as_str() {
         "naive" => Ok(KernelChoice::Naive),
         "blocked" => Ok(KernelChoice::Blocked),
+        "simd" => Ok(KernelChoice::Simd),
         "auto" | "" => Ok(KernelChoice::Auto),
         other => Err(format!(
-            "unknown kernel {other:?} (expected naive, blocked or auto)"
+            "unknown kernel {other:?} (expected naive, blocked, simd or auto)"
         )),
+    }
+}
+
+/// Resolve a parsed choice into a concrete config, given whether the
+/// host supports the AVX2+FMA micro-kernels. Returns the config plus an
+/// optional warning the caller should surface (the only warning today:
+/// `simd` requested on a host without AVX2+FMA — we fall back to
+/// `blocked` rather than run the delegating shell under a misleading
+/// name). Split out from [`active`] so tests can cover both sides of
+/// the feature gate without racing on the process environment.
+pub fn resolve_choice(choice: KernelChoice, simd_ok: bool) -> (KernelConfig, Option<String>) {
+    match choice {
+        KernelChoice::Naive => (KernelConfig::naive(), None),
+        KernelChoice::Blocked => (KernelConfig::blocked(), None),
+        KernelChoice::Simd => {
+            if simd_ok {
+                (KernelConfig::simd(), None)
+            } else {
+                (
+                    KernelConfig::blocked(),
+                    Some(
+                        "PMLP_KERNEL=simd requested but this CPU lacks AVX2+FMA; \
+                         using blocked"
+                            .to_string(),
+                    ),
+                )
+            }
+        }
+        KernelChoice::Auto => (autotune::pick_config(simd_ok), None),
     }
 }
 
@@ -174,18 +257,16 @@ pub fn active() -> KernelConfig {
             Ok(v) => match parse_kernel_env(&v) {
                 Ok(c) => c,
                 Err(msg) => {
-                    eprintln!("warning: PMLP_KERNEL: {msg}; using blocked (autotuned)");
+                    eprintln!("warning: PMLP_KERNEL: {msg}; using auto (probed)");
                     KernelChoice::Auto
                 }
             },
         };
-        match choice {
-            KernelChoice::Naive => KernelConfig::naive(),
-            KernelChoice::Blocked => KernelConfig::blocked(),
-            KernelChoice::Auto => {
-                KernelConfig { kernel: Kernel::Blocked, tile: autotune::pick_tile() }
-            }
+        let (cfg, warn) = resolve_choice(choice, simd_available());
+        if let Some(msg) = warn {
+            eprintln!("warning: {msg}");
         }
+        cfg
     })
 }
 
@@ -268,6 +349,7 @@ pub fn matmul_nt_with(
     match cfg.kernel {
         Kernel::Naive => naive::nt(a, b, c, m, k, n, threads),
         Kernel::Blocked => blocked::nt(a, b, c, m, k, n, cfg.tile, threads),
+        Kernel::Simd => simd::nt(a, b, c, m, k, n, cfg.tile, threads),
     }
     Ok(())
 }
@@ -290,6 +372,7 @@ pub fn matmul_nn_with(
     match cfg.kernel {
         Kernel::Naive => naive::nn(a, b, c, m, k, n, threads),
         Kernel::Blocked => blocked::nn(a, b, c, m, k, n, cfg.tile, threads),
+        Kernel::Simd => simd::nn(a, b, c, m, k, n, cfg.tile, threads),
     }
     Ok(())
 }
@@ -312,6 +395,7 @@ pub fn matmul_tn_with(
     match cfg.kernel {
         Kernel::Naive => naive::tn(a, b, c, m, k, n, threads),
         Kernel::Blocked => blocked::tn(a, b, c, m, k, n, cfg.tile, threads),
+        Kernel::Simd => simd::tn(a, b, c, m, k, n, cfg.tile, threads),
     }
     Ok(())
 }
@@ -340,7 +424,8 @@ pub struct BlockDiag<'a> {
 /// `m` with a real block, threaded over batch rows. The per-element
 /// reduction follows the subsystem-wide exactness contract (`k`
 /// ascending, bias added once after the sum), so `Naive` and `Blocked`
-/// agree bit-for-bit at every thread count.
+/// agree bit-for-bit at every thread count; `Simd` agrees within the
+/// tier-2 bounded-ulp contract.
 #[allow(clippy::too_many_arguments)]
 pub fn block_diag_with(
     cfg: KernelConfig,
@@ -404,6 +489,7 @@ pub fn block_diag_with(
     match cfg.kernel {
         Kernel::Naive => naive::block_diag(input, w, bias, out, rows, w_in, w_out, bd, threads),
         Kernel::Blocked => blocked::block_diag(input, w, bias, out, rows, w_in, w_out, bd, threads),
+        Kernel::Simd => simd::block_diag(input, w, bias, out, rows, w_in, w_out, bd, threads),
     }
     Ok(())
 }
@@ -428,10 +514,42 @@ mod tests {
     fn env_values_parse() {
         assert_eq!(parse_kernel_env("naive"), Ok(KernelChoice::Naive));
         assert_eq!(parse_kernel_env(" Blocked "), Ok(KernelChoice::Blocked));
+        assert_eq!(parse_kernel_env("simd"), Ok(KernelChoice::Simd));
+        assert_eq!(parse_kernel_env(" SIMD "), Ok(KernelChoice::Simd));
         assert_eq!(parse_kernel_env("auto"), Ok(KernelChoice::Auto));
         assert_eq!(parse_kernel_env(""), Ok(KernelChoice::Auto));
         let err = parse_kernel_env("fast").unwrap_err();
         assert!(err.contains("unknown kernel"), "{err}");
+        assert!(err.contains("simd"), "error must list the simd option: {err}");
+    }
+
+    #[test]
+    fn simd_choice_falls_back_without_avx2() {
+        // Host without the features: warn + blocked, never panic.
+        let (cfg, warn) = resolve_choice(KernelChoice::Simd, false);
+        assert_eq!(cfg, KernelConfig::blocked());
+        let msg = warn.expect("fallback must carry a warning");
+        assert!(msg.contains("AVX2"), "{msg}");
+        // Host with the features: simd, no warning.
+        let (cfg, warn) = resolve_choice(KernelChoice::Simd, true);
+        assert_eq!(cfg, KernelConfig::simd());
+        assert!(warn.is_none());
+        // Explicit tier-1 choices never warn regardless of the host.
+        for ok in [false, true] {
+            assert_eq!(resolve_choice(KernelChoice::Naive, ok), (KernelConfig::naive(), None));
+            assert_eq!(
+                resolve_choice(KernelChoice::Blocked, ok),
+                (KernelConfig::blocked(), None)
+            );
+        }
+    }
+
+    #[test]
+    fn auto_without_simd_stays_blocked() {
+        let (cfg, warn) = resolve_choice(KernelChoice::Auto, false);
+        assert_eq!(cfg.kernel, Kernel::Blocked);
+        assert!(TILE_CANDIDATES.contains(&cfg.tile));
+        assert!(warn.is_none());
     }
 
     #[test]
@@ -442,6 +560,8 @@ mod tests {
         assert!(!a.describe().is_empty());
         assert!(!KernelConfig::naive().describe().is_empty());
         assert!(KernelConfig::blocked().describe().contains("blocked"));
+        assert!(KernelConfig::simd().describe().contains("avx2"));
+        assert_eq!(Kernel::Simd.name(), "simd");
     }
 
     #[test]

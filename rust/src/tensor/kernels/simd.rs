@@ -1,0 +1,602 @@
+//! The explicitly vectorized kernels: x86_64 AVX2+FMA micro-kernels,
+//! runtime feature-detected — the third `Kernel` variant.
+//!
+//! Structure (shared with `blocked`): threads partition **output rows**
+//! (`parallel_chunks`), `NC`-wide output-column panels and `KC`-deep
+//! reduction slices park running sums in `C` between passes, and a
+//! register micro-kernel does the inner work. What changes is the
+//! micro-kernel itself:
+//!
+//! * `nt` / `block_diag` (both operands row-major along `k`): a 4-row ×
+//!   2-column tile of 8 ymm accumulators, each vectorized **along `k`**
+//!   8 lanes wide with `vfmadd`, horizontally reduced per k-slice and a
+//!   scalar ragged tail;
+//! * `nn` / `tn` (B is `k`-major, its `n` lane contiguous): a 4-row ×
+//!   16-column (2 ymm per row) tile, one `_mm256_set1_ps` broadcast of
+//!   A per row per `kk` and `vfmadd` into per-element lane chains.
+//!
+//! **Exactness tier.** This kernel deliberately leaves the subsystem's
+//! bit-identity contract (`mod.rs`): `vfmadd` fuses multiply and add
+//! into one rounding, and the `nt`-family k-vectorization splits the
+//! reduction into 8 interleaved partial sums reduced at slice
+//! boundaries. Results are therefore only **bounded-ulp** close to the
+//! naive oracle — `rust/tests/kernels.rs` enforces the bound (second
+//! test tier) while naive/blocked stay bit-exact. Two invariants ARE
+//! preserved: results never depend on the thread count (threads
+//! partition output rows; per-element math depends only on the k
+//! slicing), and exact integer arithmetic stays exact (fusing or
+//! reassociating error-free operations is error-free — the golden
+//! checkpoint fixture relies on this).
+//!
+//! **Availability.** `available()` runtime-detects AVX2+FMA via
+//! `is_x86_feature_detected!` — no compile-time feature flags are
+//! needed to build. On CPUs (or architectures) without the features,
+//! every entry point silently delegates to `blocked`, so a
+//! `KernelConfig` carrying `Kernel::Simd` is safe everywhere and env
+//! selection can warn-and-fall-back instead of panicking.
+
+use super::{blocked, BlockDiag, Tile};
+
+/// Output columns per NT-family micro-tile (`k` is the vector axis).
+pub const SIMD_NT_COLS: usize = 2;
+/// Output columns per NN/TN micro-tile (two 8-lane ymm per row).
+pub const SIMD_NR: usize = 16;
+
+/// Does this host support the AVX2+FMA micro-kernels? Checked at
+/// runtime; `false` on non-x86_64 builds.
+pub(super) fn available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// `C[m,n] = A[m,k] · B[n,k]ᵀ` (falls back to `blocked` off-AVX2).
+#[allow(clippy::too_many_arguments)]
+pub(super) fn nt(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    tile: Tile,
+    threads: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if available() {
+            x86::nt(a, b, c, m, k, n, tile, threads);
+            return;
+        }
+    }
+    blocked::nt(a, b, c, m, k, n, tile, threads)
+}
+
+/// `C[m,n] = A[m,k] · B[k,n]` (falls back to `blocked` off-AVX2).
+#[allow(clippy::too_many_arguments)]
+pub(super) fn nn(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    tile: Tile,
+    threads: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if available() {
+            x86::nn(a, b, c, m, k, n, tile, threads);
+            return;
+        }
+    }
+    blocked::nn(a, b, c, m, k, n, tile, threads)
+}
+
+/// `C[m,n] = A[k,m]ᵀ · B[k,n]` (falls back to `blocked` off-AVX2).
+#[allow(clippy::too_many_arguments)]
+pub(super) fn tn(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    tile: Tile,
+    threads: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if available() {
+            x86::tn(a, b, c, m, k, n, tile, threads);
+            return;
+        }
+    }
+    blocked::tn(a, b, c, m, k, n, tile, threads)
+}
+
+/// Packed block-diagonal product (falls back to `blocked` off-AVX2).
+#[allow(clippy::too_many_arguments)]
+pub(super) fn block_diag(
+    input: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    rows: usize,
+    w_in: usize,
+    w_out: usize,
+    bd: &BlockDiag<'_>,
+    threads: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if available() {
+            x86::block_diag(input, w, bias, out, rows, w_in, w_out, bd, threads);
+            return;
+        }
+    }
+    blocked::block_diag(input, w, bias, out, rows, w_in, w_out, bd, threads)
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::super::{blocked, BlockDiag, Tile, MR};
+    use super::{SIMD_NR, SIMD_NT_COLS};
+    use crate::util::threadpool::{parallel_chunks, SendPtr};
+    use core::arch::x86_64::*;
+
+    /// f32 lanes per ymm register.
+    const LANES: usize = 8;
+
+    /// Horizontal sum of one ymm register (the per-element reduction at
+    /// k-slice boundaries in the NT-family micro-kernels).
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum256(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 0b01));
+        _mm_cvtss_f32(s)
+    }
+
+    /// NT-family micro-tile: 4 rows × 2 columns, `k` vectorized 8-wide
+    /// with FMA. Computes the k-slice `[k0, k1)` partial dot of row
+    /// `a0 + ii·astr` against row `b0 + jj·bstr` and **adds** it onto
+    /// the running totals parked in `crows` (element `(ii, jj)` at
+    /// `crow0 + ii·cstr + jj`). Ragged k-tail is scalar.
+    ///
+    /// SAFETY: caller guarantees `a0 + (MR-1)·astr + k1 <= a.len()`,
+    /// `b0 + (SIMD_NT_COLS-1)·bstr + k1 <= b.len()`, and the `crows`
+    /// tile in bounds; must only run on AVX2+FMA hosts.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn nt_tile(
+        a: &[f32],
+        a0: usize,
+        astr: usize,
+        b: &[f32],
+        b0: usize,
+        bstr: usize,
+        crows: &mut [f32],
+        crow0: usize,
+        cstr: usize,
+        k0: usize,
+        k1: usize,
+    ) {
+        let mut acc = [[_mm256_setzero_ps(); SIMD_NT_COLS]; MR];
+        let mut kk = k0;
+        while kk + LANES <= k1 {
+            let bv0 = _mm256_loadu_ps(b.as_ptr().add(b0 + kk));
+            let bv1 = _mm256_loadu_ps(b.as_ptr().add(b0 + bstr + kk));
+            for (ii, accrow) in acc.iter_mut().enumerate() {
+                let av = _mm256_loadu_ps(a.as_ptr().add(a0 + ii * astr + kk));
+                accrow[0] = _mm256_fmadd_ps(av, bv0, accrow[0]);
+                accrow[1] = _mm256_fmadd_ps(av, bv1, accrow[1]);
+            }
+            kk += LANES;
+        }
+        for (ii, accrow) in acc.iter().enumerate() {
+            for (jj, &accv) in accrow.iter().enumerate() {
+                let mut s = hsum256(accv);
+                for kt in kk..k1 {
+                    s += a[a0 + ii * astr + kt] * b[b0 + jj * bstr + kt];
+                }
+                crows[crow0 + ii * cstr + jj] += s;
+            }
+        }
+    }
+
+    /// NN micro-tile: 4 rows × 16 columns (2 ymm per row), one
+    /// `_mm256_set1_ps` broadcast of `a[(i+ii)·k + kk]` per row per
+    /// `kk`, FMA into per-element lane chains. The running C tile is
+    /// loaded/stored around the k-slice, so each output element keeps a
+    /// single in-order k chain (only the fused rounding differs from
+    /// the oracle).
+    ///
+    /// SAFETY: caller guarantees `(i+MR)·k <= a.len()`,
+    /// `kk·n + j + SIMD_NR <= b.len()` for all `kk < k1`, and the
+    /// `crows` tile in bounds; AVX2+FMA host only.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn nn_tile(
+        a: &[f32],
+        b: &[f32],
+        crows: &mut [f32],
+        crow0: usize,
+        cstr: usize,
+        i: usize,
+        j: usize,
+        k: usize,
+        n: usize,
+        k0: usize,
+        k1: usize,
+    ) {
+        let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+        for (ii, accrow) in acc.iter_mut().enumerate() {
+            let base = crow0 + ii * cstr;
+            accrow[0] = _mm256_loadu_ps(crows.as_ptr().add(base));
+            accrow[1] = _mm256_loadu_ps(crows.as_ptr().add(base + LANES));
+        }
+        for kk in k0..k1 {
+            let bv0 = _mm256_loadu_ps(b.as_ptr().add(kk * n + j));
+            let bv1 = _mm256_loadu_ps(b.as_ptr().add(kk * n + j + LANES));
+            for (ii, accrow) in acc.iter_mut().enumerate() {
+                let av = _mm256_set1_ps(*a.get_unchecked((i + ii) * k + kk));
+                accrow[0] = _mm256_fmadd_ps(av, bv0, accrow[0]);
+                accrow[1] = _mm256_fmadd_ps(av, bv1, accrow[1]);
+            }
+        }
+        for (ii, accrow) in acc.iter().enumerate() {
+            let base = crow0 + ii * cstr;
+            _mm256_storeu_ps(crows.as_mut_ptr().add(base), accrow[0]);
+            _mm256_storeu_ps(crows.as_mut_ptr().add(base + LANES), accrow[1]);
+        }
+    }
+
+    /// TN micro-tile: as [`nn_tile`] but A is `k`-major — the broadcast
+    /// reads `a[kk·m + i + ii]` (a rank-1 update per `kk`).
+    ///
+    /// SAFETY: caller guarantees `i + MR <= m`, `k1·m <= a.len()`,
+    /// `kk·n + j + SIMD_NR <= b.len()` for all `kk < k1`, and the
+    /// `crows` tile in bounds; AVX2+FMA host only.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn tn_tile(
+        a: &[f32],
+        b: &[f32],
+        crows: &mut [f32],
+        crow0: usize,
+        cstr: usize,
+        i: usize,
+        j: usize,
+        m: usize,
+        n: usize,
+        k0: usize,
+        k1: usize,
+    ) {
+        let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+        for (ii, accrow) in acc.iter_mut().enumerate() {
+            let base = crow0 + ii * cstr;
+            accrow[0] = _mm256_loadu_ps(crows.as_ptr().add(base));
+            accrow[1] = _mm256_loadu_ps(crows.as_ptr().add(base + LANES));
+        }
+        for kk in k0..k1 {
+            let bv0 = _mm256_loadu_ps(b.as_ptr().add(kk * n + j));
+            let bv1 = _mm256_loadu_ps(b.as_ptr().add(kk * n + j + LANES));
+            for (ii, accrow) in acc.iter_mut().enumerate() {
+                let av = _mm256_set1_ps(*a.get_unchecked(kk * m + i + ii));
+                accrow[0] = _mm256_fmadd_ps(av, bv0, accrow[0]);
+                accrow[1] = _mm256_fmadd_ps(av, bv1, accrow[1]);
+            }
+        }
+        for (ii, accrow) in acc.iter().enumerate() {
+            let base = crow0 + ii * cstr;
+            _mm256_storeu_ps(crows.as_mut_ptr().add(base), accrow[0]);
+            _mm256_storeu_ps(crows.as_mut_ptr().add(base + LANES), accrow[1]);
+        }
+    }
+
+    /// `C[m,n] = A[m,k] · B[n,k]ᵀ`.
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn nt(
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        tile: Tile,
+        threads: usize,
+    ) {
+        let cp = SendPtr(c.as_mut_ptr());
+        let nc = tile.nc.max(SIMD_NT_COLS);
+        let kc = tile.kc.max(1);
+        parallel_chunks(m, threads, MR, move |r0, r1| {
+            // SAFETY: rows [r0, r1) are owned exclusively by this chunk
+            let crows =
+                unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(r0 * n), (r1 - r0) * n) };
+            crows.iter_mut().for_each(|x| *x = 0.0);
+            let mut jc = 0;
+            while jc < n {
+                let jend = (jc + nc).min(n);
+                let mut ks = 0;
+                while ks < k.max(1) {
+                    let kend = (ks + kc).min(k);
+                    let mut i = r0;
+                    while i + MR <= r1 {
+                        let mut j = jc;
+                        while j + SIMD_NT_COLS <= jend {
+                            // SAFETY: full MR×2 tile, k-slice within k,
+                            // AVX2+FMA verified by the caller
+                            unsafe {
+                                nt_tile(
+                                    a,
+                                    i * k,
+                                    k,
+                                    b,
+                                    j * k,
+                                    k,
+                                    crows,
+                                    (i - r0) * n + j,
+                                    n,
+                                    ks,
+                                    kend,
+                                );
+                            }
+                            j += SIMD_NT_COLS;
+                        }
+                        blocked::edge_nt(a, b, crows, r0, i, i + MR, j, jend, ks, kend, k, n);
+                        i += MR;
+                    }
+                    blocked::edge_nt(a, b, crows, r0, i, r1, jc, jend, ks, kend, k, n);
+                    ks = kend.max(ks + 1);
+                }
+                jc = jend;
+            }
+        });
+    }
+
+    /// `C[m,n] = A[m,k] · B[k,n]`.
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn nn(
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        tile: Tile,
+        threads: usize,
+    ) {
+        let cp = SendPtr(c.as_mut_ptr());
+        let nc = tile.nc.max(SIMD_NR);
+        let kc = tile.kc.max(1);
+        parallel_chunks(m, threads, MR, move |r0, r1| {
+            let crows =
+                unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(r0 * n), (r1 - r0) * n) };
+            crows.iter_mut().for_each(|x| *x = 0.0);
+            let mut jc = 0;
+            while jc < n {
+                let jend = (jc + nc).min(n);
+                let mut ks = 0;
+                while ks < k.max(1) {
+                    let kend = (ks + kc).min(k);
+                    let mut i = r0;
+                    while i + MR <= r1 {
+                        let mut j = jc;
+                        while j + SIMD_NR <= jend {
+                            // SAFETY: full MR×16 tile in bounds; a is
+                            // indexed (i+ii)·k + kk with kk < k
+                            unsafe {
+                                nn_tile(
+                                    a,
+                                    b,
+                                    crows,
+                                    (i - r0) * n + j,
+                                    n,
+                                    i,
+                                    j,
+                                    k,
+                                    n,
+                                    ks,
+                                    kend,
+                                );
+                            }
+                            j += SIMD_NR;
+                        }
+                        blocked::edge_nn(a, b, crows, r0, i, i + MR, j, jend, ks, kend, k, n);
+                        i += MR;
+                    }
+                    blocked::edge_nn(a, b, crows, r0, i, r1, jc, jend, ks, kend, k, n);
+                    ks = kend.max(ks + 1);
+                }
+                jc = jend;
+            }
+        });
+    }
+
+    /// `C[m,n] = A[k,m]ᵀ · B[k,n]`.
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn tn(
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        tile: Tile,
+        threads: usize,
+    ) {
+        let cp = SendPtr(c.as_mut_ptr());
+        let nc = tile.nc.max(SIMD_NR);
+        let kc = tile.kc.max(1);
+        parallel_chunks(m, threads, MR, move |r0, r1| {
+            let crows =
+                unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(r0 * n), (r1 - r0) * n) };
+            crows.iter_mut().for_each(|x| *x = 0.0);
+            let mut jc = 0;
+            while jc < n {
+                let jend = (jc + nc).min(n);
+                let mut ks = 0;
+                while ks < k.max(1) {
+                    let kend = (ks + kc).min(k);
+                    let mut i = r0;
+                    while i + MR <= r1 {
+                        let mut j = jc;
+                        while j + SIMD_NR <= jend {
+                            // SAFETY: i + MR <= m (driver bound), kk < k
+                            unsafe {
+                                tn_tile(
+                                    a,
+                                    b,
+                                    crows,
+                                    (i - r0) * n + j,
+                                    n,
+                                    i,
+                                    j,
+                                    m,
+                                    n,
+                                    ks,
+                                    kend,
+                                );
+                            }
+                            j += SIMD_NR;
+                        }
+                        blocked::edge_tn(a, b, crows, r0, i, i + MR, j, jend, ks, kend, m, n);
+                        i += MR;
+                    }
+                    blocked::edge_tn(a, b, crows, r0, i, r1, jc, jend, ks, kend, m, n);
+                    ks = kend.max(ks + 1);
+                }
+                jc = jend;
+            }
+        });
+    }
+
+    /// NT-shaped micro-tile for one model block of the packed
+    /// block-diagonal product: single full pass over `fan_in` (no
+    /// k-blocking — blocks are one model's fan-in), bias added once
+    /// after the reduction, result **stored** (not accumulated).
+    ///
+    /// SAFETY: caller guarantees the full MR×2 tile and both packed
+    /// weight rows in bounds; AVX2+FMA host only.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn bd_tile(
+        input: &[f32],
+        in0: usize,
+        instr: usize,
+        w: &[f32],
+        w0: usize,
+        wstr: usize,
+        bias: &[f32],
+        bias0: usize,
+        orows: &mut [f32],
+        o0: usize,
+        ostr: usize,
+        fan_in: usize,
+    ) {
+        let mut acc = [[_mm256_setzero_ps(); SIMD_NT_COLS]; MR];
+        let mut kk = 0;
+        while kk + LANES <= fan_in {
+            let wv0 = _mm256_loadu_ps(w.as_ptr().add(w0 + kk));
+            let wv1 = _mm256_loadu_ps(w.as_ptr().add(w0 + wstr + kk));
+            for (ii, accrow) in acc.iter_mut().enumerate() {
+                let iv = _mm256_loadu_ps(input.as_ptr().add(in0 + ii * instr + kk));
+                accrow[0] = _mm256_fmadd_ps(iv, wv0, accrow[0]);
+                accrow[1] = _mm256_fmadd_ps(iv, wv1, accrow[1]);
+            }
+            kk += LANES;
+        }
+        for (ii, accrow) in acc.iter().enumerate() {
+            for (jj, &accv) in accrow.iter().enumerate() {
+                let mut s = hsum256(accv);
+                for kt in kk..fan_in {
+                    s += input[in0 + ii * instr + kt] * w[w0 + jj * wstr + kt];
+                }
+                orows[o0 + ii * ostr + jj] = s + bias[bias0 + jj];
+            }
+        }
+    }
+
+    /// Packed block-diagonal product, threaded over batch rows.
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn block_diag(
+        input: &[f32],
+        w: &[f32],
+        bias: &[f32],
+        out: &mut [f32],
+        rows: usize,
+        w_in: usize,
+        w_out: usize,
+        bd: &BlockDiag<'_>,
+        threads: usize,
+    ) {
+        let op = SendPtr(out.as_mut_ptr());
+        parallel_chunks(rows, threads, MR, move |r0, r1| {
+            // SAFETY: batch rows [r0, r1) are owned by this chunk
+            let orows = unsafe {
+                std::slice::from_raw_parts_mut(op.ptr().add(r0 * w_out), (r1 - r0) * w_out)
+            };
+            for (m, &(is, ie)) in bd.spans_in.iter().enumerate() {
+                let Some(off) = bd.offs[m] else { continue };
+                let (os, oe) = bd.spans_out[m];
+                let fan_in = ie - is;
+                let mut bi = r0;
+                while bi + MR <= r1 {
+                    let mut col = os;
+                    while col + SIMD_NT_COLS <= oe {
+                        // SAFETY: geometry validated by the dispatcher
+                        // (spans in bounds, packed rows within w)
+                        unsafe {
+                            bd_tile(
+                                input,
+                                bi * w_in + is,
+                                w_in,
+                                w,
+                                off + (col - os) * fan_in,
+                                fan_in,
+                                bias,
+                                col,
+                                orows,
+                                (bi - r0) * w_out + col,
+                                w_out,
+                                fan_in,
+                            );
+                        }
+                        col += SIMD_NT_COLS;
+                    }
+                    blocked::edge_block(
+                        input,
+                        w,
+                        bias,
+                        orows,
+                        r0,
+                        bi,
+                        bi + MR,
+                        col,
+                        oe,
+                        is,
+                        ie,
+                        off,
+                        os,
+                        w_in,
+                        w_out,
+                    );
+                    bi += MR;
+                }
+                blocked::edge_block(
+                    input, w, bias, orows, r0, bi, r1, os, oe, is, ie, off, os, w_in, w_out,
+                );
+            }
+        });
+    }
+}

@@ -168,6 +168,63 @@ fn blocked_kernel_training_is_bit_identical_to_naive_end_to_end() {
     }
 }
 
+#[test]
+fn simd_kernel_training_stays_within_tolerance_of_naive_end_to_end() {
+    // Tier-2 end-to-end contract: the simd kernel reassociates the
+    // k-sum (FMA + 8-lane partials), so trained parameters and losses
+    // drift from the naive run by rounding noise — but after full
+    // training runs that drift must stay far below anything that could
+    // change a model ranking. Same pool/data generator as the blocked
+    // bit-identity test above; only the comparison relaxes.
+    let mut meta = Rng::new(0xCAFF);
+    for trial in 0..6 {
+        let seed = meta.next_u64();
+        let mut rng = Rng::new(seed);
+        let spec = random_pool(&mut rng);
+        let (f, o, b) = (2 + rng.below(6), 1 + rng.below(3), 8usize);
+        let layout = PoolLayout::build(&spec);
+        let fused0 = init_pool(seed, &layout, f, o);
+        let ds = data::random_regression(b * 3, f, o, &mut rng);
+        let batches = BatchSet::new(&ds, b, true).unwrap();
+
+        let run = |kernel: Kernel, threads: usize| {
+            let mut e =
+                ParallelEngine::new(layout.clone(), fused0.clone(), Loss::Mse, f, o, b, threads);
+            e.set_kernel(kernel);
+            let mut losses = Vec::new();
+            for _ in 0..2 {
+                for (x, y) in &batches.batches {
+                    losses = e.step(x, y, 0.05);
+                }
+            }
+            (e.params_fused(), losses)
+        };
+        let (p_naive, l_naive) = run(Kernel::Naive, 1);
+        for threads in [1usize, 3] {
+            let (p_simd, l_simd) = run(Kernel::Simd, threads);
+            for (tag, a, s) in [
+                ("w1", &p_naive.w1, &p_simd.w1),
+                ("b1", &p_naive.b1, &p_simd.b1),
+                ("w2", &p_naive.w2, &p_simd.w2),
+                ("b2", &p_naive.b2, &p_simd.b2),
+            ] {
+                let diff = a.max_abs_diff(s);
+                assert!(
+                    diff < 5e-4,
+                    "trial {trial} (seed {seed:#x}): {tag} drifted {diff} under simd (t={threads})"
+                );
+            }
+            for (m, (ln, ls)) in l_naive.iter().zip(&l_simd).enumerate() {
+                let tol = 1e-3 * (1.0 + ln.abs());
+                assert!(
+                    (ln - ls).abs() <= tol,
+                    "trial {trial} model {m}: loss {ls} vs naive {ln} (t={threads})"
+                );
+            }
+        }
+    }
+}
+
 fn random_stack_pool(rng: &mut Rng) -> LayerStack {
     let n = 1 + rng.below(4);
     let models: Vec<StackModel> = (0..n)
@@ -214,6 +271,52 @@ fn blocked_kernel_stack_training_is_bit_identical_to_naive() {
             );
             for (m, (ln, lb)) in l_naive.iter().zip(&l_blocked).enumerate() {
                 assert_eq!(ln.to_bits(), lb.to_bits(), "trial {trial} model {m} loss");
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_kernel_stack_training_stays_within_tolerance_of_naive() {
+    // tier-2 analog of the stack bit-identity test: mixed depths,
+    // identity passthrough and the packed block-diagonal path all under
+    // the simd kernel, compared with a tolerance instead of bits
+    let mut meta = Rng::new(0xDEEF);
+    for trial in 0..6 {
+        let seed = meta.next_u64();
+        let mut rng = Rng::new(seed);
+        let stack = random_stack_pool(&mut rng);
+        let mut x = Tensor::zeros(&[10, 4]);
+        rng.fill_normal(x.data_mut(), 0.0, 1.0);
+        let mut y = Tensor::zeros(&[10, 2]);
+        rng.fill_normal(y.data_mut(), 0.0, 1.0);
+
+        let run = |kernel: Kernel, threads: usize| {
+            let kcfg = KernelConfig::naive().with_kernel(kernel);
+            let mut p = stack.init(seed);
+            let mut losses = Vec::new();
+            for _ in 0..3 {
+                losses = stack.step_with(kcfg, &mut p, &x, &y, Loss::Mse, 0.05, threads);
+            }
+            (p, losses)
+        };
+        let (p_naive, l_naive) = run(Kernel::Naive, 1);
+        for threads in [1usize, 4] {
+            let (p_simd, l_simd) = run(Kernel::Simd, threads);
+            for (l, (ln, ls)) in p_naive.layers.iter().zip(&p_simd.layers).enumerate() {
+                let dw = ln.w.max_abs_diff(&ls.w);
+                let db = ln.b.max_abs_diff(&ls.b);
+                assert!(
+                    dw < 5e-4 && db < 5e-4,
+                    "trial {trial} (seed {seed:#x}) layer {l}: simd drifted (w {dw}, b {db}, t={threads})"
+                );
+            }
+            for (m, (ln, ls)) in l_naive.iter().zip(&l_simd).enumerate() {
+                let tol = 1e-3 * (1.0 + ln.abs());
+                assert!(
+                    (ln - ls).abs() <= tol,
+                    "trial {trial} model {m}: loss {ls} vs naive {ln} (t={threads})"
+                );
             }
         }
     }

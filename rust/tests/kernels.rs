@@ -1,19 +1,38 @@
-//! Differential kernel harness: the blocked kernels against the naive
-//! oracle over seeded random shapes (ragged M/K/N, zero-size edges,
-//! mixed-depth stack layouts), across thread counts and tile sizes.
+//! Differential kernel harness: every non-oracle kernel against the
+//! naive oracle over seeded random shapes (ragged M/K/N, zero-size
+//! edges, mixed-depth stack layouts), across thread counts and tile
+//! sizes.
 //!
-//! The kernel subsystem's exactness contract (see
-//! `rust/src/tensor/kernels/mod.rs`) says every output element is a
-//! single-accumulator sum over `k` in ascending order — no
-//! reassociation anywhere. These tests therefore assert **exact bit
-//! equality**, not a ulp tolerance: the "≤ 1 ulp where reassociation is
-//! allowed" escape hatch is deliberately unused, and any future kernel
-//! that starts reassociating must either restore the order or come back
-//! here and document which comparisons relax to ulp bounds.
+//! Two exactness tiers (see `rust/src/tensor/kernels/mod.rs`):
+//!
+//! * **Tier 1 — bit-exact** (`Naive`, `Blocked`): every output element
+//!   is a single-accumulator sum over `k` in ascending order, no
+//!   reassociation anywhere, so these tests assert **exact bit
+//!   equality** across every shape, tile, and thread count.
+//! * **Tier 2 — bounded-ulp** (`Simd`): FMA fuses multiply+add into one
+//!   rounding and the NT-family kernels keep 8 interleaved partial sums
+//!   per element, so bits may differ from the oracle. The bound used
+//!   here: both kernels' forward error vs the exact sum is at most
+//!   `~k·eps·S` where `S = Σ|aᵢ||bᵢ| (+|bias|)` is the cancellation-free
+//!   magnitude of the reduction, so the two results differ by at most a
+//!   small multiple of that — `assert_simd_close` computes `S` with the
+//!   naive kernel on absolute-value operands and accepts
+//!   `|simd − naive| ≤ 16·(k+2)·eps·S`, OR'd with a 64-ulp escape for
+//!   tiny outputs. Non-finite results must classify identically
+//!   (NaN↔NaN, same-signed ∞). Thread-count invariance stays **bit
+//!   exact** even for `Simd` (threads partition output rows and never
+//!   touch per-element math); tile sizes may legitimately move `Simd`
+//!   low-order bits (k-slice boundaries move the horizontal
+//!   reductions), which is exactly why the sweep runs every stress tile
+//!   through the tolerance check.
 //!
 //! Thread counts: each dispatch is exercised at 1, 2 and 8 workers (the
 //! explicit-argument equivalent of `PMLP_THREADS` ∈ {1, 2, 8}; CI
 //! additionally runs the whole suite under the env-var matrix).
+//!
+//! On hosts without AVX2+FMA the `Simd` dispatch delegates to
+//! `Blocked`, so the tier-2 tests still run everywhere — they just
+//! degenerate into (already covered) bit-equality.
 
 use parallel_mlps::nn::act::ALL_ACTS;
 use parallel_mlps::nn::stack::{LayerStack, StackModel};
@@ -278,6 +297,269 @@ fn block_diag_direct_dispatch_matches_naive() {
             .unwrap();
             assert_eq!(bits(&got), bits(&want), "t={threads} tile={tile:?}");
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tier 2: the simd kernel against the oracle, bounded-ulp
+// ---------------------------------------------------------------------------
+
+/// Relative-bound constant: both kernels carry `≲ k·eps·S` forward
+/// error, so 16× the combined bound leaves slack without letting real
+/// bugs (wrong element, dropped k-slice) through — those miss by orders
+/// of magnitude, not ulps.
+const SIMD_REL_C: f32 = 16.0;
+/// Ulp escape hatch for outputs whose magnitude-oracle `S` underflows
+/// the relative bound (heavy cancellation near zero).
+const SIMD_MAX_ULPS: i64 = 64;
+
+/// Map a float to a lexicographically ordered integer so ulp distance
+/// is a subtraction (±0.0 both map to 0).
+fn ulp_key(x: f32) -> i64 {
+    let b = x.to_bits();
+    if b & 0x8000_0000 != 0 {
+        -((b & 0x7fff_ffff) as i64)
+    } else {
+        b as i64
+    }
+}
+
+/// Tier-2 comparison: `got` (simd) vs `want` (naive oracle), with
+/// `scale[i] = S` from the absolute-value magnitude oracle and `k` the
+/// reduction length. Bit-equal elements pass unconditionally, so
+/// untouched canary spans and the no-AVX2 delegation path are covered
+/// for free.
+fn assert_simd_close(got: &[f32], want: &[f32], scale: &[f32], k: usize, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length mismatch");
+    assert_eq!(got.len(), scale.len(), "{ctx}: scale oracle length mismatch");
+    for (i, ((&g, &w), &s)) in got.iter().zip(want).zip(scale).enumerate() {
+        if g.to_bits() == w.to_bits() {
+            continue;
+        }
+        if w.is_nan() {
+            assert!(g.is_nan(), "{ctx}[{i}]: oracle NaN, simd {g}");
+            continue;
+        }
+        if w.is_infinite() {
+            assert_eq!(g, w, "{ctx}[{i}]: oracle {w}, simd {g}");
+            continue;
+        }
+        assert!(g.is_finite(), "{ctx}[{i}]: oracle finite {w}, simd {g}");
+        let tol = SIMD_REL_C * (k as f32 + 2.0) * f32::EPSILON * s;
+        let diff = (g - w).abs();
+        let ulps = (ulp_key(g) - ulp_key(w)).abs();
+        assert!(
+            diff <= tol || ulps <= SIMD_MAX_ULPS,
+            "{ctx}[{i}]: |{g} - {w}| = {diff:e} exceeds tol {tol:e} \
+             ({ulps} ulps, scale {s:e}, k={k})"
+        );
+    }
+}
+
+#[test]
+fn simd_matches_naive_within_bound_across_shapes_threads_and_tiles() {
+    let mut rng = Rng::new(0x51AD);
+    let shapes = shape_sweep(&mut rng);
+    for (op_name, op) in ops() {
+        for &(m, k, n) in &shapes {
+            let (la, lb) = operand_lens(op_name, m, k, n);
+            let a = rand_vec(&mut rng, la);
+            let b = rand_vec(&mut rng, lb);
+            let abs_a: Vec<f32> = a.iter().map(|v| v.abs()).collect();
+            let abs_b: Vec<f32> = b.iter().map(|v| v.abs()).collect();
+            let mut want = vec![f32::NAN; m * n];
+            op(naive(), &a, &b, &mut want, m, k, n, 1).unwrap();
+            let mut scale = vec![0.0f32; m * n];
+            op(naive(), &abs_a, &abs_b, &mut scale, m, k, n, 1).unwrap();
+            for &threads in &THREADS {
+                for tile in stress_tiles() {
+                    let mut got = vec![f32::NAN; m * n];
+                    op(cfg(Kernel::Simd, tile), &a, &b, &mut got, m, k, n, threads).unwrap();
+                    assert_simd_close(
+                        &got,
+                        &want,
+                        &scale,
+                        k,
+                        &format!("{op_name} {m}x{k}x{n} t={threads} tile={tile:?}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_is_thread_count_invariant_bitwise() {
+    // Row partitioning never touches per-element math, so even the
+    // reassociating kernel must be bit-stable across thread counts.
+    let mut rng = Rng::new(0x51D7);
+    for (op_name, op) in ops() {
+        for &(m, k, n) in &[(5usize, 9usize, 9usize), (17, 31, 23), (32, 10, 160)] {
+            let (la, lb) = operand_lens(op_name, m, k, n);
+            let a = rand_vec(&mut rng, la);
+            let b = rand_vec(&mut rng, lb);
+            let mut want = vec![0.0f32; m * n];
+            op(KernelConfig::simd(), &a, &b, &mut want, m, k, n, 1).unwrap();
+            for &threads in &THREADS[1..] {
+                let mut got = vec![0.0f32; m * n];
+                op(KernelConfig::simd(), &a, &b, &mut got, m, k, n, threads).unwrap();
+                assert_eq!(
+                    bits(&got),
+                    bits(&want),
+                    "{op_name} {m}x{k}x{n}: simd thread count changed bits (t={threads})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_nonfinite_values_classify_identically() {
+    // Same canary layout as the tier-1 test: NaN/∞ must land in the
+    // same output positions (FMA may change NaN payloads, never
+    // placement — the simd kernels take no zero-skip shortcuts either).
+    let (m, k, n) = (6, 9, 17);
+    let mut rng = Rng::new(0xF1F2);
+    for (op_name, op) in ops() {
+        let (la, lb) = operand_lens(op_name, m, k, n);
+        let mut a = rand_vec(&mut rng, la);
+        let mut b = rand_vec(&mut rng, lb);
+        a[3] = f32::NAN;
+        a[7] = 0.0;
+        b[5] = f32::INFINITY;
+        b[11] = 0.0;
+        let mut want = vec![0.0f32; m * n];
+        op(naive(), &a, &b, &mut want, m, k, n, 1).unwrap();
+        assert!(want.iter().any(|v| !v.is_finite()), "{op_name}: canary never propagated");
+        for &threads in &THREADS {
+            let mut got = vec![0.0f32; m * n];
+            op(KernelConfig::simd(), &a, &b, &mut got, m, k, n, threads).unwrap();
+            for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    g.is_finite(),
+                    w.is_finite(),
+                    "{op_name}[{i}] t={threads}: finiteness diverged ({g} vs {w})"
+                );
+                if w.is_nan() {
+                    assert!(g.is_nan(), "{op_name}[{i}] t={threads}: {g} vs NaN");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_block_diag_matches_naive_within_bound() {
+    // Same geometry as the tier-1 block-diag test, including the
+    // identity gap (whose canary must survive the simd path untouched).
+    let mut rng = Rng::new(0xD1A7);
+    let spans_in = [(0usize, 3usize), (3, 7), (7, 8)];
+    let spans_out = [(0usize, 9usize), (9, 13), (13, 16)];
+    let offs = [Some(0usize), None, Some(9 * 3)];
+    let (w_in, w_out, rows) = (8usize, 16usize, 11usize);
+    let w = rand_vec(&mut rng, 9 * 3 + 3 * 1);
+    let bias = rand_vec(&mut rng, w_out);
+    let input = rand_vec(&mut rng, rows * w_in);
+    let abs_w: Vec<f32> = w.iter().map(|v| v.abs()).collect();
+    let abs_bias: Vec<f32> = bias.iter().map(|v| v.abs()).collect();
+    let abs_input: Vec<f32> = input.iter().map(|v| v.abs()).collect();
+    let bd = BlockDiag { spans_in: &spans_in, spans_out: &spans_out, offs: &offs };
+
+    let canary = 123.456f32;
+    let mut want = vec![canary; rows * w_out];
+    kernels::block_diag_with(naive(), &input, &w, &bias, &mut want, rows, w_in, w_out, &bd, 1)
+        .unwrap();
+    let mut scale = vec![canary; rows * w_out];
+    kernels::block_diag_with(
+        naive(),
+        &abs_input,
+        &abs_w,
+        &abs_bias,
+        &mut scale,
+        rows,
+        w_in,
+        w_out,
+        &bd,
+        1,
+    )
+    .unwrap();
+    // widest per-model fan-in bounds every element's reduction length
+    let k_max = spans_in.iter().map(|&(s, e)| e - s).max().unwrap();
+    for &threads in &THREADS {
+        for tile in stress_tiles() {
+            let mut got = vec![canary; rows * w_out];
+            kernels::block_diag_with(
+                cfg(Kernel::Simd, tile),
+                &input,
+                &w,
+                &bias,
+                &mut got,
+                rows,
+                w_in,
+                w_out,
+                &bd,
+                threads,
+            )
+            .unwrap();
+            for r in 0..rows {
+                for c in 9..13 {
+                    assert_eq!(
+                        got[r * w_out + c].to_bits(),
+                        canary.to_bits(),
+                        "identity span written at ({r},{c})"
+                    );
+                }
+            }
+            assert_simd_close(
+                &got,
+                &want,
+                &scale,
+                k_max,
+                &format!("block_diag t={threads} tile={tile:?}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn simd_stack_forward_stays_close_to_naive() {
+    // End-to-end through LayerStack: activations between layers compound
+    // the per-matmul drift, so this uses a looser (still tiny) relative
+    // bound rather than the per-reduction magnitude oracle.
+    let mut rng = Rng::new(0xB10D);
+    for trial in 0..8 {
+        let (stack, features, _) = random_stack(&mut rng);
+        let p = stack.init(rng.next_u64());
+        let b = 1 + rng.below(12);
+        let mut x = Tensor::zeros(&[b, features]);
+        rng.fill_normal(x.data_mut(), 0.0, 1.0);
+
+        let want = stack.forward_with(naive(), &p, &x, 1);
+        for &threads in &THREADS {
+            let got = stack.forward_with(KernelConfig::simd(), &p, &x, threads);
+            for (i, (&g, &w)) in got.data().iter().zip(want.data()).enumerate() {
+                let tol = 1e-3 * (1.0 + w.abs());
+                assert!(
+                    (g - w).abs() <= tol,
+                    "trial {trial}[{i}] t={threads}: simd stack drifted: {g} vs {w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_dispatch_reports_the_same_typed_errors() {
+    // Shape validation happens before kernel selection; the simd arm
+    // must not bypass it.
+    let (m, k, n) = (2usize, 3usize, 2usize);
+    for (op_name, op) in ops() {
+        let (la, lb) = operand_lens(op_name, m, k, n);
+        let good_b = vec![0.0f32; lb];
+        let mut good_c = vec![0.0f32; m * n];
+        let bad_a = vec![0.0f32; la + 1];
+        let e = op(KernelConfig::simd(), &bad_a, &good_b, &mut good_c, m, k, n, 1).unwrap_err();
+        assert_eq!(e.op(), format!("matmul_{op_name}"), "{e}");
     }
 }
 
