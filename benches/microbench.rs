@@ -18,11 +18,14 @@ use parallel_mlps::tensor::kernels::{self, Kernel, KernelConfig};
 use parallel_mlps::tensor::{matmul, scatter, Tensor};
 use parallel_mlps::util::rng::Rng;
 
-/// Ulp-bounded agreement gate for the reassociating simd kernel: bit
-/// equality is the wrong assert (FMA legitimately moves low-order
-/// bits), but anything beyond rounding noise means the timing below
-/// would be measuring a wrong kernel.
-fn assert_ulp_close(got: &[f32], want: &[f32], tag: &str) {
+/// Loose relative-tolerance smoke check for the reassociating simd
+/// kernel: bit equality is the wrong assert (FMA legitimately moves
+/// low-order bits), and this is deliberately NOT the acceptance bound —
+/// the strict `16·(k+2)·eps·S` magnitude-oracle / 64-ulp gate lives in
+/// `rust/tests/kernels.rs`. Here the fixed 1e-4 tolerance only guards
+/// against timing a wrong kernel (wrong element, dropped k-slice —
+/// misses by orders of magnitude, not ulps).
+fn assert_rel_close(got: &[f32], want: &[f32], tag: &str) {
     for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
         let tol = 1e-4 * (1.0 + w.abs());
         assert!(
@@ -62,7 +65,7 @@ fn main() {
         rng.fill_normal(b.data_mut(), 0.0, 1.0);
         let mut c = Tensor::zeros(&[m, n]);
         // sanity: the tier-1 kernels must agree bit-for-bit before
-        // timing; simd within the ulp bound
+        // timing; simd within the relative smoke tolerance
         let mut c2 = Tensor::zeros(&[m, n]);
         kernels::matmul_nn_with(KernelConfig::naive(), a.data(), b.data(), c.data_mut(), m, k, n, 1)
             .unwrap();
@@ -84,7 +87,7 @@ fn main() {
                 1,
             )
             .unwrap();
-            assert_ulp_close(c2.data(), c.data(), tag);
+            assert_rel_close(c2.data(), c.data(), tag);
         }
         for &kernel in &kernel_axis {
             // time the autotuned tiles the `auto` default actually ships
@@ -137,7 +140,7 @@ fn main() {
                 1,
             )
             .unwrap();
-            assert_ulp_close(c.data(), want.data(), "dW1 fused tn");
+            assert_rel_close(c.data(), want.data(), "dW1 fused tn");
         }
         for &kernel in &kernel_axis {
             let cfg = kernels::active().with_kernel(kernel);

@@ -23,7 +23,9 @@
 //! naive oracle — `rust/tests/kernels.rs` enforces the bound (second
 //! test tier) while naive/blocked stay bit-exact. Two invariants ARE
 //! preserved: results never depend on the thread count (threads
-//! partition output rows; per-element math depends only on the k
+//! partition output rows and `parallel_chunks` keeps chunk boundaries
+//! `MR`-aligned at every worker count, so each row keeps the same
+//! tile-vs-edge path and its per-element math depends only on the k
 //! slicing), and exact integer arithmetic stays exact (fusing or
 //! reassociating error-free operations is error-free — the golden
 //! checkpoint fixture relies on this).

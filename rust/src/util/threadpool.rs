@@ -53,8 +53,14 @@ where
     }
     let next = AtomicUsize::new(0);
     // dynamic scheduling: workers pull chunks, so ragged work (heterogeneous
-    // model sizes!) balances itself
-    let chunk = (len / (threads * 4)).max(min_chunk).max(1);
+    // model sizes!) balances itself. The chunk size is rounded UP to a
+    // multiple of min_chunk so chunk boundaries stay min_chunk-aligned at
+    // every thread count — the tiled kernels pass their micro-tile height
+    // (MR) as min_chunk and rely on this to keep each output row on the
+    // same tile-vs-edge code path regardless of worker count (the
+    // thread-count bit-invariance contract in tensor/kernels).
+    let min_chunk = min_chunk.max(1);
+    let chunk = (len / (threads * 4)).max(min_chunk).next_multiple_of(min_chunk);
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
@@ -120,6 +126,28 @@ mod tests {
             }
         });
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn chunk_starts_stay_min_chunk_aligned() {
+        // the tiled kernels rely on this for thread-count-invariant
+        // results; len=160 at 8 threads used to compute chunk=5, putting
+        // boundaries off the MR=4 grid
+        for &(len, threads, mc) in &[(160usize, 8usize, 4usize), (80, 4, 4), (1000, 3, 7)] {
+            let starts = std::sync::Mutex::new(Vec::new());
+            parallel_chunks(len, threads, mc, |s, e| {
+                starts.lock().unwrap().push((s, e));
+            });
+            let mut starts = starts.into_inner().unwrap();
+            starts.sort_unstable();
+            let mut covered = 0;
+            for (s, e) in starts {
+                assert_eq!(s % mc, 0, "len={len} t={threads} mc={mc}: start {s} misaligned");
+                assert_eq!(s, covered, "len={len} t={threads} mc={mc}: gap/overlap at {s}");
+                covered = e;
+            }
+            assert_eq!(covered, len);
+        }
     }
 
     #[test]

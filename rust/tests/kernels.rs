@@ -394,7 +394,18 @@ fn simd_is_thread_count_invariant_bitwise() {
     // reassociating kernel must be bit-stable across thread counts.
     let mut rng = Rng::new(0x51D7);
     for (op_name, op) in ops() {
-        for &(m, k, n) in &[(5usize, 9usize, 9usize), (17, 31, 23), (32, 10, 160)] {
+        // The small shapes clamp parallel_chunks to chunk == MR (trivially
+        // aligned); (80, …) and (160, …) are the regression shapes where
+        // len/(threads·4) exceeds MR and is NOT naturally a multiple of it
+        // (80 → 10 at 2 threads, 160 → 5 at 8 threads), so they fail unless
+        // parallel_chunks rounds its chunk size up to an MR multiple.
+        for &(m, k, n) in &[
+            (5usize, 9usize, 9usize),
+            (17, 31, 23),
+            (32, 10, 160),
+            (80, 17, 9),
+            (160, 33, 20),
+        ] {
             let (la, lb) = operand_lens(op_name, m, k, n);
             let a = rand_vec(&mut rng, la);
             let b = rand_vec(&mut rng, lb);
