@@ -124,6 +124,9 @@ impl BenchArgs {
 
 /// Locate the artifacts directory (env `PMLP_ARTIFACTS` or `./artifacts`).
 pub fn artifacts_dir() -> std::path::PathBuf {
+    // bench-only artifact sink, read in exactly one place by the
+    // harness — not a config surface worth centralizing:
+    // #[allow(pmlp::env_var)]
     if let Ok(p) = std::env::var("PMLP_ARTIFACTS") {
         return p.into();
     }

@@ -9,6 +9,11 @@
 //! subsystem records structured traces, latency histograms and resource
 //! usage across all of it. See the repository `README.md` for the
 //! quickstart and the strategy table.
+//!
+//! Every `unsafe` block in this crate carries a `// SAFETY:` comment and
+//! `unsafe fn` bodies get no implicit unsafe scope — both are enforced,
+//! the first by `pmlp-lint` (`cargo run -p pmlp-lint`), the second here:
+#![deny(unsafe_op_in_unsafe_fn)]
 pub mod bench_harness;
 pub mod config;
 pub mod coordinator;

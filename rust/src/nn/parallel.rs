@@ -204,12 +204,14 @@ impl ParallelEngine {
             let hact = SendPtr(self.hact.data_mut().as_mut_ptr());
             parallel_chunks(b, self.threads, 1, move |r0, r1| {
                 for bi in r0..r1 {
+                    // SAFETY: batch rows [r0, r1) are owned by this chunk
                     let prow = unsafe {
                         std::slice::from_raw_parts_mut(pre.ptr().add(bi * h_pad), h_pad)
                     };
                     for (p, &bv) in prow.iter_mut().zip(b1) {
                         *p += bv;
                     }
+                    // SAFETY: same disjoint batch rows, hact buffer
                     let hrow = unsafe {
                         std::slice::from_raw_parts_mut(hact.ptr().add(bi * h_pad), h_pad)
                     };
@@ -230,6 +232,7 @@ impl ParallelEngine {
             parallel_chunks(b, self.threads, 1, move |r0, r1| {
                 for bi in r0..r1 {
                     let hrow = &hact[bi * h_pad..(bi + 1) * h_pad];
+                    // SAFETY: batch rows [r0, r1) are owned by this chunk
                     let lrow = unsafe {
                         std::slice::from_raw_parts_mut(
                             logits.ptr().add(bi * m_pad * o),
@@ -287,6 +290,7 @@ impl ParallelEngine {
             parallel_chunks(b, self.threads, 1, move |r0, r1| {
                 for bi in r0..r1 {
                     let dlrow = &dl[bi * m_pad * o..(bi + 1) * m_pad * o];
+                    // SAFETY: batch rows [r0, r1) are owned by this chunk
                     let dhrow = unsafe {
                         std::slice::from_raw_parts_mut(dh.ptr().add(bi * h_pad), h_pad)
                     };
@@ -343,6 +347,7 @@ impl ParallelEngine {
             parallel_chunks(b, self.threads, 1, move |r0, r1| {
                 for bi in r0..r1 {
                     let prow = &pre[bi * h_pad..(bi + 1) * h_pad];
+                    // SAFETY: batch rows [r0, r1) are owned by this chunk
                     let dhrow = unsafe {
                         std::slice::from_raw_parts_mut(dh.ptr().add(bi * h_pad), h_pad)
                     };

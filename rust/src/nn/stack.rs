@@ -396,6 +396,7 @@ impl LayerStack {
             parallel_chunks(b, threads, 1, move |r0, r1| {
                 for bi in r0..r1 {
                     let prow = &pre[bi * w0..(bi + 1) * w0];
+                    // SAFETY: batch rows [r0, r1) are owned by this chunk
                     let hrow = unsafe { std::slice::from_raw_parts_mut(hp.ptr().add(bi * w0), w0) };
                     for (model, &(s, e)) in models.iter().zip(spans) {
                         model.act.apply_slice(&prow[s..e], &mut hrow[s..e]);
@@ -443,6 +444,7 @@ impl LayerStack {
                     for bi in r0..r1 {
                         let prow = &prev[bi * wprev..(bi + 1) * wprev];
                         let pre_row = &pre_dat[bi * wcur..(bi + 1) * wcur];
+                        // SAFETY: batch rows [r0, r1) are owned by this chunk
                         let hrow =
                             unsafe { std::slice::from_raw_parts_mut(hp.ptr().add(bi * wcur), wcur) };
                         for (m, model) in models.iter().enumerate() {
@@ -594,10 +596,13 @@ impl LayerStack {
                         };
                         for oi in 0..o {
                             let g = dydat[(bi * m_n + m) * o + oi];
+                            // SAFETY: model m's bias rows are owned by this chunk
                             unsafe { *dbp.ptr().add(m * o + oi) += g };
                             if g == 0.0 {
                                 continue;
                             }
+                            // SAFETY: model m's packed weight block is
+                            // owned by this chunk (blocks are disjoint)
                             let dwrow = unsafe {
                                 std::slice::from_raw_parts_mut(
                                     dwp.ptr().add(off + oi * last),
@@ -650,10 +655,14 @@ impl LayerStack {
                                     for (r, col) in (cs..ce).enumerate() {
                                         let g = dh_cur[bi * wcur + col]
                                             * models[m].act.grad(pre[bi * wcur + col]);
+                                        // SAFETY: col lies in model m's span,
+                                        // owned by this chunk
                                         unsafe { *dbp.ptr().add(col) += g };
                                         if g == 0.0 {
                                             continue;
                                         }
+                                        // SAFETY: model m's packed weight
+                                        // block is owned by this chunk
                                         let dwrow = unsafe {
                                             std::slice::from_raw_parts_mut(
                                                 dwp.ptr().add(off + r * fan_in),
@@ -670,6 +679,7 @@ impl LayerStack {
                             // identity: gradient passes straight through
                             None => {
                                 for bi in 0..b {
+                                    // SAFETY: disjoint spans across models
                                     let dprow = unsafe {
                                         std::slice::from_raw_parts_mut(
                                             dhp.ptr().add(bi * wprev + ps),
@@ -702,6 +712,7 @@ impl LayerStack {
                 for bi in r0..r1 {
                     let prow = &pre[bi * w0..(bi + 1) * w0];
                     let urow = &dh0[bi * w0..(bi + 1) * w0];
+                    // SAFETY: batch rows [r0, r1) are owned by this chunk
                     let drow =
                         unsafe { std::slice::from_raw_parts_mut(dp.ptr().add(bi * w0), w0) };
                     for (model, &(s, e)) in models.iter().zip(spans) {

@@ -75,6 +75,8 @@ impl PjrtRuntime {
 pub fn literal_f32(data: &[f32], dims: &[usize]) -> anyhow::Result<Literal> {
     let n: usize = dims.iter().product();
     anyhow::ensure!(n == data.len(), "literal dims {:?} vs data {}", dims, data.len());
+    // SAFETY: viewing an f32 slice as its raw bytes — same allocation,
+    // len*4 bytes, u8 has no alignment requirement, lifetime unchanged
     let bytes =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)

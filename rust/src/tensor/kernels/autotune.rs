@@ -38,7 +38,9 @@ fn pattern(len: usize, salt: u32) -> Vec<f32> {
 fn time_candidate(cfg: KernelConfig, a: &[f32], b: &[f32], c: &mut [f32]) -> f64 {
     let run = |c: &mut [f32]| match cfg.kernel {
         Kernel::Simd => simd::nt(a, b, c, PM, PK, PN, cfg.tile, 1),
-        _ => blocked::nt(a, b, c, PM, PK, PN, cfg.tile, 1),
+        // the probe races tiles for the tiled kernels only; naive has no
+        // tile axis, so its candidate config is timed as blocked
+        Kernel::Naive | Kernel::Blocked => blocked::nt(a, b, c, PM, PK, PN, cfg.tile, 1),
     };
     run(c);
     let mut t_min = f64::INFINITY;

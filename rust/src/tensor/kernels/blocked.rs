@@ -51,6 +51,7 @@ fn micro_dotrows(
                 *v = unsafe { *b.get_unchecked(b0 + jj * bstr + kk) };
             }
             for (ii, accrow) in acc.iter_mut().enumerate() {
+                // SAFETY: same driver guarantee, A side (debug-asserted above)
                 let av = unsafe { *a.get_unchecked(a0 + ii * astr + kk) };
                 for (cell, &bvj) in accrow.iter_mut().zip(&bv) {
                     *cell += av * bvj;
@@ -194,6 +195,7 @@ pub(super) fn nt(
     let nc = tile.nc.max(NR);
     let kc = tile.kc.max(1);
     parallel_chunks(m, threads, MR, move |r0, r1| {
+        debug_assert!(r0 % MR == 0, "nt chunk start {r0} off the MR={MR} grid");
         // SAFETY: rows [r0, r1) are owned exclusively by this chunk
         let crows =
             unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(r0 * n), (r1 - r0) * n) };
@@ -241,6 +243,12 @@ pub(super) fn edge_nt(
     k: usize,
     n: usize,
 ) {
+    // tile extents must stay inside the operands and the row slab: an
+    // edge call with i1/j1/k1 past the logical shape would read stale
+    // memory silently in release builds
+    debug_assert!(i0 >= r0 && j1 <= n && k1 <= k);
+    debug_assert!(i1 == i0 || (i1 - r0) * n <= crows.len());
+    debug_assert!(i1 == i0 || i1 * k <= a.len() + usize::from(k == 0));
     for i in i0..i1 {
         for j in j0..j1 {
             let mut acc = crows[(i - r0) * n + j];
@@ -268,6 +276,10 @@ pub(super) fn nn(
     let nc = tile.nc.max(NR);
     let kc = tile.kc.max(1);
     parallel_chunks(m, threads, MR, move |r0, r1| {
+        // chunk starts must sit on the MR grid or rows would switch
+        // between tile and edge paths with the thread count (PR-8 bug)
+        debug_assert!(r0 % MR == 0, "nn chunk start {r0} off the MR={MR} grid");
+        // SAFETY: rows [r0, r1) are owned exclusively by this chunk
         let crows =
             unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(r0 * n), (r1 - r0) * n) };
         crows.iter_mut().for_each(|x| *x = 0.0);
@@ -312,6 +324,8 @@ pub(super) fn edge_nn(
     k: usize,
     n: usize,
 ) {
+    debug_assert!(i0 >= r0 && j1 <= n && k1 <= k);
+    debug_assert!(i1 == i0 || (i1 - r0) * n <= crows.len());
     for i in i0..i1 {
         for j in j0..j1 {
             let mut acc = crows[(i - r0) * n + j];
@@ -339,6 +353,8 @@ pub(super) fn tn(
     let nc = tile.nc.max(NR);
     let kc = tile.kc.max(1);
     parallel_chunks(m, threads, MR, move |r0, r1| {
+        debug_assert!(r0 % MR == 0, "tn chunk start {r0} off the MR={MR} grid");
+        // SAFETY: rows [r0, r1) are owned exclusively by this chunk
         let crows =
             unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(r0 * n), (r1 - r0) * n) };
         crows.iter_mut().for_each(|x| *x = 0.0);
@@ -383,6 +399,9 @@ pub(super) fn edge_tn(
     m: usize,
     n: usize,
 ) {
+    debug_assert!(i0 >= r0 && i1 <= m && j1 <= n);
+    debug_assert!(i1 == i0 || (i1 - r0) * n <= crows.len());
+    debug_assert!(k1 == k0 || k1 * n <= b.len() + n);
     for i in i0..i1 {
         for j in j0..j1 {
             let mut acc = crows[(i - r0) * n + j];
@@ -413,6 +432,7 @@ pub(super) fn block_diag(
 ) {
     let op = SendPtr(out.as_mut_ptr());
     parallel_chunks(rows, threads, MR, move |r0, r1| {
+        debug_assert!(r0 % MR == 0, "block_diag chunk start {r0} off the MR={MR} grid");
         // SAFETY: batch rows [r0, r1) are owned by this chunk
         let orows =
             unsafe { std::slice::from_raw_parts_mut(op.ptr().add(r0 * w_out), (r1 - r0) * w_out) };
@@ -473,6 +493,9 @@ pub(super) fn edge_block(
     w_out: usize,
 ) {
     let fan_in = ie - is;
+    debug_assert!(i0 >= r0 && is <= ie && j0 >= os && j1 <= w_out);
+    debug_assert!(i1 == i0 || (i1 - r0) * w_out <= orows.len());
+    debug_assert!(j1 == j0 || off + (j1 - os) * fan_in <= w.len() + usize::from(fan_in == 0));
     for bi in i0..i1 {
         let irow = &input[bi * w_in + is..bi * w_in + ie];
         for col in j0..j1 {

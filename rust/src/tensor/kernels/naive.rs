@@ -37,6 +37,7 @@ pub(super) fn nn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usi
     let cp = SendPtr(c.as_mut_ptr());
     parallel_chunks(m, threads, 1, move |r0, r1| {
         for i in r0..r1 {
+            // SAFETY: rows [r0, r1) are owned exclusively by this chunk
             let crow = unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(i * n), n) };
             crow.iter_mut().for_each(|x| *x = 0.0);
             for (kk, &av) in a[i * k..(i + 1) * k].iter().enumerate() {
@@ -56,6 +57,7 @@ pub(super) fn tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usi
     let cp = SendPtr(c.as_mut_ptr());
     parallel_chunks(m, threads, 1, move |m0, m1| {
         for i in m0..m1 {
+            // SAFETY: rows [m0, m1) are owned exclusively by this chunk
             let crow = unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(i * n), n) };
             crow.iter_mut().for_each(|x| *x = 0.0);
             for kk in 0..k {

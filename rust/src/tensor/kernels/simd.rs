@@ -158,15 +158,26 @@ mod x86 {
 
     /// Horizontal sum of one ymm register (the per-element reduction at
     /// k-slice boundaries in the NT-family micro-kernels).
+    ///
+    /// SAFETY: callers must run on an AVX2+FMA host (the drivers check
+    /// `available()` before entering this module's kernels).
     #[inline]
     #[target_feature(enable = "avx2,fma")]
+    // under deny(unsafe_op_in_unsafe_fn) these register-only intrinsics
+    // need the explicit unsafe block on older toolchains; newer ones
+    // (1.87+) make them safe-in-context here, so the block is "unused"
+    #[allow(unused_unsafe)]
     unsafe fn hsum256(v: __m256) -> f32 {
-        let lo = _mm256_castps256_ps128(v);
-        let hi = _mm256_extractf128_ps(v, 1);
-        let s = _mm_add_ps(lo, hi);
-        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
-        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 0b01));
-        _mm_cvtss_f32(s)
+        // SAFETY: register-only lane shuffles/adds — no memory access;
+        // the target-feature obligation is discharged by the caller
+        unsafe {
+            let lo = _mm256_castps256_ps128(v);
+            let hi = _mm256_extractf128_ps(v, 1);
+            let s = _mm_add_ps(lo, hi);
+            let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+            let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 0b01));
+            _mm_cvtss_f32(s)
+        }
     }
 
     /// NT-family micro-tile: 4 rows × 2 columns, `k` vectorized 8-wide
@@ -193,25 +204,32 @@ mod x86 {
         k0: usize,
         k1: usize,
     ) {
-        let mut acc = [[_mm256_setzero_ps(); SIMD_NT_COLS]; MR];
-        let mut kk = k0;
-        while kk + LANES <= k1 {
-            let bv0 = _mm256_loadu_ps(b.as_ptr().add(b0 + kk));
-            let bv1 = _mm256_loadu_ps(b.as_ptr().add(b0 + bstr + kk));
-            for (ii, accrow) in acc.iter_mut().enumerate() {
-                let av = _mm256_loadu_ps(a.as_ptr().add(a0 + ii * astr + kk));
-                accrow[0] = _mm256_fmadd_ps(av, bv0, accrow[0]);
-                accrow[1] = _mm256_fmadd_ps(av, bv1, accrow[1]);
-            }
-            kk += LANES;
-        }
-        for (ii, accrow) in acc.iter().enumerate() {
-            for (jj, &accv) in accrow.iter().enumerate() {
-                let mut s = hsum256(accv);
-                for kt in kk..k1 {
-                    s += a[a0 + ii * astr + kt] * b[b0 + jj * bstr + kt];
+        debug_assert!(k1 == k0 || a0 + (MR - 1) * astr + k1 <= a.len());
+        debug_assert!(k1 == k0 || b0 + (SIMD_NT_COLS - 1) * bstr + k1 <= b.len());
+        debug_assert!(crow0 + (MR - 1) * cstr + SIMD_NT_COLS <= crows.len());
+        // SAFETY: the fn's contract (doc comment) puts every loadu inside
+        // a/b; the caller verified AVX2+FMA before dispatching here
+        unsafe {
+            let mut acc = [[_mm256_setzero_ps(); SIMD_NT_COLS]; MR];
+            let mut kk = k0;
+            while kk + LANES <= k1 {
+                let bv0 = _mm256_loadu_ps(b.as_ptr().add(b0 + kk));
+                let bv1 = _mm256_loadu_ps(b.as_ptr().add(b0 + bstr + kk));
+                for (ii, accrow) in acc.iter_mut().enumerate() {
+                    let av = _mm256_loadu_ps(a.as_ptr().add(a0 + ii * astr + kk));
+                    accrow[0] = _mm256_fmadd_ps(av, bv0, accrow[0]);
+                    accrow[1] = _mm256_fmadd_ps(av, bv1, accrow[1]);
                 }
-                crows[crow0 + ii * cstr + jj] += s;
+                kk += LANES;
+            }
+            for (ii, accrow) in acc.iter().enumerate() {
+                for (jj, &accv) in accrow.iter().enumerate() {
+                    let mut s = hsum256(accv);
+                    for kt in kk..k1 {
+                        s += a[a0 + ii * astr + kt] * b[b0 + jj * bstr + kt];
+                    }
+                    crows[crow0 + ii * cstr + jj] += s;
+                }
             }
         }
     }
@@ -241,25 +259,32 @@ mod x86 {
         k0: usize,
         k1: usize,
     ) {
-        let mut acc = [[_mm256_setzero_ps(); 2]; MR];
-        for (ii, accrow) in acc.iter_mut().enumerate() {
-            let base = crow0 + ii * cstr;
-            accrow[0] = _mm256_loadu_ps(crows.as_ptr().add(base));
-            accrow[1] = _mm256_loadu_ps(crows.as_ptr().add(base + LANES));
-        }
-        for kk in k0..k1 {
-            let bv0 = _mm256_loadu_ps(b.as_ptr().add(kk * n + j));
-            let bv1 = _mm256_loadu_ps(b.as_ptr().add(kk * n + j + LANES));
+        debug_assert!(k1 == k0 || (i + MR) * k <= a.len());
+        debug_assert!(k1 == k0 || (k1 - 1) * n + j + SIMD_NR <= b.len());
+        debug_assert!(crow0 + (MR - 1) * cstr + SIMD_NR <= crows.len());
+        // SAFETY: the fn's contract (doc comment) puts every load/store
+        // inside a/b/crows; AVX2+FMA verified by the caller
+        unsafe {
+            let mut acc = [[_mm256_setzero_ps(); 2]; MR];
             for (ii, accrow) in acc.iter_mut().enumerate() {
-                let av = _mm256_set1_ps(*a.get_unchecked((i + ii) * k + kk));
-                accrow[0] = _mm256_fmadd_ps(av, bv0, accrow[0]);
-                accrow[1] = _mm256_fmadd_ps(av, bv1, accrow[1]);
+                let base = crow0 + ii * cstr;
+                accrow[0] = _mm256_loadu_ps(crows.as_ptr().add(base));
+                accrow[1] = _mm256_loadu_ps(crows.as_ptr().add(base + LANES));
             }
-        }
-        for (ii, accrow) in acc.iter().enumerate() {
-            let base = crow0 + ii * cstr;
-            _mm256_storeu_ps(crows.as_mut_ptr().add(base), accrow[0]);
-            _mm256_storeu_ps(crows.as_mut_ptr().add(base + LANES), accrow[1]);
+            for kk in k0..k1 {
+                let bv0 = _mm256_loadu_ps(b.as_ptr().add(kk * n + j));
+                let bv1 = _mm256_loadu_ps(b.as_ptr().add(kk * n + j + LANES));
+                for (ii, accrow) in acc.iter_mut().enumerate() {
+                    let av = _mm256_set1_ps(*a.get_unchecked((i + ii) * k + kk));
+                    accrow[0] = _mm256_fmadd_ps(av, bv0, accrow[0]);
+                    accrow[1] = _mm256_fmadd_ps(av, bv1, accrow[1]);
+                }
+            }
+            for (ii, accrow) in acc.iter().enumerate() {
+                let base = crow0 + ii * cstr;
+                _mm256_storeu_ps(crows.as_mut_ptr().add(base), accrow[0]);
+                _mm256_storeu_ps(crows.as_mut_ptr().add(base + LANES), accrow[1]);
+            }
         }
     }
 
@@ -284,25 +309,32 @@ mod x86 {
         k0: usize,
         k1: usize,
     ) {
-        let mut acc = [[_mm256_setzero_ps(); 2]; MR];
-        for (ii, accrow) in acc.iter_mut().enumerate() {
-            let base = crow0 + ii * cstr;
-            accrow[0] = _mm256_loadu_ps(crows.as_ptr().add(base));
-            accrow[1] = _mm256_loadu_ps(crows.as_ptr().add(base + LANES));
-        }
-        for kk in k0..k1 {
-            let bv0 = _mm256_loadu_ps(b.as_ptr().add(kk * n + j));
-            let bv1 = _mm256_loadu_ps(b.as_ptr().add(kk * n + j + LANES));
+        debug_assert!(k1 == k0 || (k1 - 1) * m + i + MR <= a.len());
+        debug_assert!(k1 == k0 || (k1 - 1) * n + j + SIMD_NR <= b.len());
+        debug_assert!(crow0 + (MR - 1) * cstr + SIMD_NR <= crows.len());
+        // SAFETY: the fn's contract (doc comment) puts every load/store
+        // inside a/b/crows; AVX2+FMA verified by the caller
+        unsafe {
+            let mut acc = [[_mm256_setzero_ps(); 2]; MR];
             for (ii, accrow) in acc.iter_mut().enumerate() {
-                let av = _mm256_set1_ps(*a.get_unchecked(kk * m + i + ii));
-                accrow[0] = _mm256_fmadd_ps(av, bv0, accrow[0]);
-                accrow[1] = _mm256_fmadd_ps(av, bv1, accrow[1]);
+                let base = crow0 + ii * cstr;
+                accrow[0] = _mm256_loadu_ps(crows.as_ptr().add(base));
+                accrow[1] = _mm256_loadu_ps(crows.as_ptr().add(base + LANES));
             }
-        }
-        for (ii, accrow) in acc.iter().enumerate() {
-            let base = crow0 + ii * cstr;
-            _mm256_storeu_ps(crows.as_mut_ptr().add(base), accrow[0]);
-            _mm256_storeu_ps(crows.as_mut_ptr().add(base + LANES), accrow[1]);
+            for kk in k0..k1 {
+                let bv0 = _mm256_loadu_ps(b.as_ptr().add(kk * n + j));
+                let bv1 = _mm256_loadu_ps(b.as_ptr().add(kk * n + j + LANES));
+                for (ii, accrow) in acc.iter_mut().enumerate() {
+                    let av = _mm256_set1_ps(*a.get_unchecked(kk * m + i + ii));
+                    accrow[0] = _mm256_fmadd_ps(av, bv0, accrow[0]);
+                    accrow[1] = _mm256_fmadd_ps(av, bv1, accrow[1]);
+                }
+            }
+            for (ii, accrow) in acc.iter().enumerate() {
+                let base = crow0 + ii * cstr;
+                _mm256_storeu_ps(crows.as_mut_ptr().add(base), accrow[0]);
+                _mm256_storeu_ps(crows.as_mut_ptr().add(base + LANES), accrow[1]);
+            }
         }
     }
 
@@ -322,6 +354,7 @@ mod x86 {
         let nc = tile.nc.max(SIMD_NT_COLS);
         let kc = tile.kc.max(1);
         parallel_chunks(m, threads, MR, move |r0, r1| {
+            debug_assert!(r0 % MR == 0, "simd nt chunk start {r0} off the MR={MR} grid");
             // SAFETY: rows [r0, r1) are owned exclusively by this chunk
             let crows =
                 unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(r0 * n), (r1 - r0) * n) };
@@ -382,6 +415,8 @@ mod x86 {
         let nc = tile.nc.max(SIMD_NR);
         let kc = tile.kc.max(1);
         parallel_chunks(m, threads, MR, move |r0, r1| {
+            debug_assert!(r0 % MR == 0, "simd nn chunk start {r0} off the MR={MR} grid");
+            // SAFETY: rows [r0, r1) are owned exclusively by this chunk
             let crows =
                 unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(r0 * n), (r1 - r0) * n) };
             crows.iter_mut().for_each(|x| *x = 0.0);
@@ -441,6 +476,8 @@ mod x86 {
         let nc = tile.nc.max(SIMD_NR);
         let kc = tile.kc.max(1);
         parallel_chunks(m, threads, MR, move |r0, r1| {
+            debug_assert!(r0 % MR == 0, "simd tn chunk start {r0} off the MR={MR} grid");
+            // SAFETY: rows [r0, r1) are owned exclusively by this chunk
             let crows =
                 unsafe { std::slice::from_raw_parts_mut(cp.ptr().add(r0 * n), (r1 - r0) * n) };
             crows.iter_mut().for_each(|x| *x = 0.0);
@@ -506,25 +543,33 @@ mod x86 {
         ostr: usize,
         fan_in: usize,
     ) {
-        let mut acc = [[_mm256_setzero_ps(); SIMD_NT_COLS]; MR];
-        let mut kk = 0;
-        while kk + LANES <= fan_in {
-            let wv0 = _mm256_loadu_ps(w.as_ptr().add(w0 + kk));
-            let wv1 = _mm256_loadu_ps(w.as_ptr().add(w0 + wstr + kk));
-            for (ii, accrow) in acc.iter_mut().enumerate() {
-                let iv = _mm256_loadu_ps(input.as_ptr().add(in0 + ii * instr + kk));
-                accrow[0] = _mm256_fmadd_ps(iv, wv0, accrow[0]);
-                accrow[1] = _mm256_fmadd_ps(iv, wv1, accrow[1]);
-            }
-            kk += LANES;
-        }
-        for (ii, accrow) in acc.iter().enumerate() {
-            for (jj, &accv) in accrow.iter().enumerate() {
-                let mut s = hsum256(accv);
-                for kt in kk..fan_in {
-                    s += input[in0 + ii * instr + kt] * w[w0 + jj * wstr + kt];
+        debug_assert!(fan_in == 0 || in0 + (MR - 1) * instr + fan_in <= input.len());
+        debug_assert!(fan_in == 0 || w0 + (SIMD_NT_COLS - 1) * wstr + fan_in <= w.len());
+        debug_assert!(bias0 + SIMD_NT_COLS <= bias.len());
+        debug_assert!(o0 + (MR - 1) * ostr + SIMD_NT_COLS <= orows.len());
+        // SAFETY: the fn's contract (doc comment) puts every loadu inside
+        // input/w; AVX2+FMA verified by the caller
+        unsafe {
+            let mut acc = [[_mm256_setzero_ps(); SIMD_NT_COLS]; MR];
+            let mut kk = 0;
+            while kk + LANES <= fan_in {
+                let wv0 = _mm256_loadu_ps(w.as_ptr().add(w0 + kk));
+                let wv1 = _mm256_loadu_ps(w.as_ptr().add(w0 + wstr + kk));
+                for (ii, accrow) in acc.iter_mut().enumerate() {
+                    let iv = _mm256_loadu_ps(input.as_ptr().add(in0 + ii * instr + kk));
+                    accrow[0] = _mm256_fmadd_ps(iv, wv0, accrow[0]);
+                    accrow[1] = _mm256_fmadd_ps(iv, wv1, accrow[1]);
                 }
-                orows[o0 + ii * ostr + jj] = s + bias[bias0 + jj];
+                kk += LANES;
+            }
+            for (ii, accrow) in acc.iter().enumerate() {
+                for (jj, &accv) in accrow.iter().enumerate() {
+                    let mut s = hsum256(accv);
+                    for kt in kk..fan_in {
+                        s += input[in0 + ii * instr + kt] * w[w0 + jj * wstr + kt];
+                    }
+                    orows[o0 + ii * ostr + jj] = s + bias[bias0 + jj];
+                }
             }
         }
     }
@@ -544,6 +589,7 @@ mod x86 {
     ) {
         let op = SendPtr(out.as_mut_ptr());
         parallel_chunks(rows, threads, MR, move |r0, r1| {
+            debug_assert!(r0 % MR == 0, "simd block_diag chunk start {r0} off the MR={MR} grid");
             // SAFETY: batch rows [r0, r1) are owned by this chunk
             let orows = unsafe {
                 std::slice::from_raw_parts_mut(op.ptr().add(r0 * w_out), (r1 - r0) * w_out)

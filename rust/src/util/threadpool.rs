@@ -61,6 +61,10 @@ where
     // thread-count bit-invariance contract in tensor/kernels).
     let min_chunk = min_chunk.max(1);
     let chunk = (len / (threads * 4)).max(min_chunk).next_multiple_of(min_chunk);
+    debug_assert!(
+        chunk % min_chunk == 0 && chunk > 0,
+        "chunk {chunk} must be a positive multiple of min_chunk {min_chunk}"
+    );
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
@@ -68,6 +72,9 @@ where
                 if start >= len {
                     break;
                 }
+                // every chunk start stays on the min_chunk grid — the
+                // contract the tiled kernels' bit-invariance rests on
+                debug_assert!(start % min_chunk == 0, "chunk start {start} off the {min_chunk} grid");
                 let end = (start + chunk).min(len);
                 f(start, end);
             });
@@ -108,7 +115,13 @@ impl<T> SendPtr<T> {
         self.0
     }
 }
+// SAFETY: SendPtr is a plain pointer wrapper with no interior state; the
+// soundness obligation moves to each use site, which must write only
+// disjoint ranges (every use lives under `parallel_chunks`' disjoint
+// [start, end) chunks and carries its own SAFETY comment).
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: same argument as Send — `&SendPtr` only exposes a copy of the
+// pointer via `ptr()`; all writes through it are range-disjoint.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 #[cfg(test)]

@@ -1,0 +1,15 @@
+//! Fixture: decoys that must NOT trigger any rule — every pattern here
+//! lives in a string, comment, raw string, or char literal. Scanned
+//! under a determinism-critical virtual path to prove it.
+
+pub fn decoys() -> usize {
+    let a = "unsafe { *ptr } with no SAFETY argument at all";
+    let b = "std::thread::spawn(|| ()) and #[target_feature(enable = \"avx2\")]";
+    let c = r#"std::env::var("PMLP_X"), HashMap<K, V>, HashSet<T>"#;
+    // mentioning unsafe, thread::spawn, env::var, HashMap, HashSet or a
+    // wildcard `_ =>` arm over Kernel in a comment is always fine
+    let q = '"';
+    let tick = '\'';
+    /* match k { Kernel::Naive => 0, _ => 1 } — commented out, ignored */
+    a.len() + b.len() + c.len() + (q as usize) + (tick as usize)
+}

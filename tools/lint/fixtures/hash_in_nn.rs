@@ -1,0 +1,11 @@
+//! Fixture: `hash_collections` rule. Flagged under nn/; clean under runtime/.
+
+use std::collections::HashMap;
+
+pub fn histogram(xs: &[u32], map: &HashMap<u32, u32>) -> usize {
+    let mut seen = std::collections::HashSet::new();
+    for &x in xs {
+        seen.insert(*map.get(&x).unwrap_or(&x));
+    }
+    seen.len()
+}

@@ -1,0 +1,31 @@
+//! Fixture: `safety_comment` rule.
+
+pub fn naked(ptr: *const f32) -> f32 {
+    // this comment is not a safety argument
+    let x =
+        unsafe { *ptr };
+    x
+}
+
+/// Reads one f32.
+// SAFETY: caller guarantees `ptr` is valid and aligned for f32.
+pub unsafe fn covered_fn(ptr: *const f32) -> f32 {
+    // SAFETY: contract forwarded from `covered_fn`'s caller.
+    unsafe { *ptr }
+}
+
+pub fn same_line(p: *mut u8) { unsafe { *p = 0 } } // SAFETY: p valid per caller
+pub fn second(p: *mut u8) { unsafe { *p = 1 } }
+
+pub struct Wrap(*mut u8);
+
+// Suppressed: the hatch on the next line covers the impl below.
+// #[allow(pmlp::safety_comment)] demo of the escape hatch
+unsafe impl Send for Wrap {}
+
+pub fn continuation(q: *mut u8) -> u8 {
+    // SAFETY: q is valid and exclusively owned by the caller.
+    let v =
+        unsafe { *q };
+    v
+}

@@ -1,0 +1,10 @@
+//! Fixture: `env_var` rule. Clean under rust/src/config/.
+
+pub fn knob() -> bool {
+    std::env::var("PMLP_SECRET_KNOB").is_ok()
+}
+
+pub fn artifacts_dir() -> Option<String> {
+    // #[allow(pmlp::env_var)] bench-only artifact sink, not a config surface
+    std::env::var("PMLP_ARTIFACTS").ok()
+}

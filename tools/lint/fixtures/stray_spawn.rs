@@ -1,0 +1,8 @@
+//! Fixture: `thread_spawn` rule. Clean under util/threadpool.rs or serve/.
+
+pub fn fan_out() -> i32 {
+    let h = std::thread::spawn(|| 40 + 2);
+    // sleeping is fine anywhere; only spawn/scope/Builder are fenced
+    std::thread::sleep(std::time::Duration::from_millis(1));
+    h.join().unwrap()
+}

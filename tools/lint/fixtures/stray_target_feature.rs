@@ -1,0 +1,8 @@
+//! Fixture: `target_feature_location` rule. One violation anywhere
+//! except the audited home, rust/src/tensor/kernels/simd.rs.
+
+#[target_feature(enable = "avx2,fma")]
+// SAFETY: caller must ensure the host supports AVX2+FMA.
+pub unsafe fn stray_tile(x: &mut [f32]) {
+    x[0] += 1.0;
+}

@@ -1,0 +1,38 @@
+//! Fixture: `kernel_match_wildcard` rule.
+
+pub fn dispatch(k: Kernel) -> &'static str {
+    match k {
+        Kernel::Naive => "naive",
+        Kernel::Blocked => "blocked",
+        // forgot Simd and future AVX-512/NEON variants — the
+        // wildcard would silently swallow them:
+        _ => "other",
+    }
+}
+
+pub fn non_kernel(n: u32) -> &'static str {
+    match n {
+        0 => "zero",
+        _ => "many",
+    }
+}
+
+pub fn transitional(k: KernelChoice) -> bool {
+    match k {
+        KernelChoice::Auto => true,
+        // #[allow(pmlp::kernel_match_wildcard)] transitional shim, remove with NEON port
+        _ => false,
+    }
+}
+
+pub fn after_nested(k: Kernel, n: usize) -> usize {
+    match k {
+        // an arm whose body is itself a (non-kernel) match, separated by
+        // a comma from the wildcard that follows — still flagged:
+        Kernel::Simd => match n {
+            0 => 1,
+            _ => 8,
+        },
+        _ => 0,
+    }
+}

@@ -1,0 +1,787 @@
+//! `pmlp-lint` — the repo's zero-dependency static-analysis pass.
+//!
+//! A line/token-level Rust source scanner (no `syn`, no proc-macros —
+//! the same zero-dep philosophy as `data/csv.rs`) that walks
+//! `rust/src`, `benches` and `tools` and enforces invariants the
+//! compiler cannot express but the kernel subsystem's correctness
+//! contracts depend on. The PR-8 chunk-misalignment bug slipped
+//! through review precisely because nothing checked these rules
+//! mechanically; this crate is the mechanical check.
+//!
+//! ## Rule catalog
+//!
+//! | id | invariant |
+//! |----|-----------|
+//! | `safety_comment` | every `unsafe` block/fn/impl is immediately preceded by (or carries) a `SAFETY:` comment stating the discharged obligation |
+//! | `target_feature_location` | `#[target_feature]` functions live only in `rust/src/tensor/kernels/simd.rs` — one audited home for the intrinsics surface |
+//! | `thread_spawn` | no `std::thread::{spawn,scope,Builder}` outside `util/threadpool.rs` and `serve/` — ad-hoc threads bypass the chunk-alignment machinery that keeps results thread-count bit-invariant |
+//! | `env_var` | no `std::env::var` outside `config/`, `util/cli.rs` and the dispatch points (`util/threadpool.rs`, `tensor/kernels/mod.rs`, `obs/trace.rs`) — env reads stay centralized and testable |
+//! | `hash_collections` | no `HashMap`/`HashSet` in determinism-critical modules (`nn/`, `tensor/`, `pool/`, `selection/`) where iteration order could leak into results |
+//! | `kernel_match_wildcard` | no `_ =>` arms in `match`es over `Kernel`/`KernelChoice` — adding AVX-512/NEON variants must force every dispatch site to be revisited |
+//!
+//! ## Escape hatch
+//!
+//! A comment containing `#[allow(pmlp::<rule>)]` on the offending line
+//! or the line directly above suppresses that rule there:
+//!
+//! ```text
+//! // #[allow(pmlp::env_var)] bench-only knob, not a config surface
+//! if let Ok(p) = std::env::var("PMLP_ARTIFACTS") { ... }
+//! ```
+//!
+//! Use it sparingly and always with a justification after the marker —
+//! the hatch is grep-able, so every exemption stays auditable.
+//!
+//! ## How it works
+//!
+//! [`strip`] performs a single char-level pass that separates each line
+//! into *code* (string/char literals blanked, comments removed) and
+//! *comment text* (line, block and doc comments), handling nested block
+//! comments, raw strings and the `'a`-lifetime vs `'a'`-char-literal
+//! ambiguity. Rules then run over the stripped code — so `"unsafe"`
+//! inside a string literal can never false-positive — while the
+//! `SAFETY:`/escape-hatch checks read the comment channel. The
+//! `kernel_match_wildcard` rule is the only stateful one: a small
+//! brace/paren tracker reconstructs `match` bodies and their arm
+//! patterns, which is exactly enough syntax to know whether a `_ =>`
+//! arm belongs to a match whose patterns name `Kernel`/`KernelChoice`.
+//!
+//! ## Adding a rule
+//!
+//! 1. add the id to [`RULES`] with a one-line summary;
+//! 2. write a `fn rule_<id>(path, &Stripped, &mut Vec<Diagnostic>)`
+//!    and call it from [`scan_source`];
+//! 3. seed a violation in a fixture under `tools/lint/fixtures/` and
+//!    assert the exact `file:line` in `tools/lint/tests/lint.rs`
+//!    (plus one escape-hatched occurrence proving suppression works);
+//! 4. document the rule in the README's rule catalog.
+
+use std::fmt;
+use std::path::Path;
+
+/// One entry of the rule catalog.
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub summary: &'static str,
+}
+
+/// Every rule this lint knows, in diagnostic order.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "safety_comment",
+        summary: "every `unsafe` is immediately preceded by a SAFETY: comment",
+    },
+    RuleInfo {
+        id: "target_feature_location",
+        summary: "#[target_feature] only in rust/src/tensor/kernels/simd.rs",
+    },
+    RuleInfo {
+        id: "thread_spawn",
+        summary: "no std::thread::{spawn,scope,Builder} outside util/threadpool.rs and serve/",
+    },
+    RuleInfo {
+        id: "env_var",
+        summary: "no std::env::var outside config/, util/cli.rs and the dispatch points",
+    },
+    RuleInfo {
+        id: "hash_collections",
+        summary: "no HashMap/HashSet in determinism-critical modules (nn/, tensor/, pool/, selection/)",
+    },
+    RuleInfo {
+        id: "kernel_match_wildcard",
+        summary: "no `_ =>` arms in matches over Kernel/KernelChoice",
+    },
+];
+
+/// Modules where hash-iteration order could leak into training/serving
+/// results (rule `hash_collections`).
+const DETERMINISM_CRITICAL: &[&str] =
+    &["rust/src/nn/", "rust/src/tensor/", "rust/src/pool/", "rust/src/selection/"];
+
+/// The one audited home for explicit intrinsics
+/// (rule `target_feature_location`).
+const TARGET_FEATURE_HOME: &str = "rust/src/tensor/kernels/simd.rs";
+
+/// Files/prefixes allowed to create threads (rule `thread_spawn`).
+const THREAD_ALLOWED_FILES: &[&str] = &["rust/src/util/threadpool.rs"];
+const THREAD_ALLOWED_PREFIXES: &[&str] = &["rust/src/serve/"];
+
+/// Files/prefixes allowed to read the environment (rule `env_var`):
+/// configuration, the CLI layer, and the three dispatch points that
+/// resolve `PMLP_THREADS` / `PMLP_KERNEL` / `PMLP_TRACE` exactly once.
+const ENV_ALLOWED_FILES: &[&str] = &[
+    "rust/src/util/cli.rs",
+    "rust/src/util/threadpool.rs",
+    "rust/src/tensor/kernels/mod.rs",
+    "rust/src/obs/trace.rs",
+];
+const ENV_ALLOWED_PREFIXES: &[&str] = &["rust/src/config/"];
+
+/// A single rule violation at a file:line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Repo-relative path, `/`-separated.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule id from [`RULES`].
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: pmlp::{}: {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Source stripping: one pass separating code from comment text
+// ---------------------------------------------------------------------------
+
+/// Per-line split of a source file into code and comment channels.
+/// `code[i]` has string/char literal *contents* blanked (delimiters
+/// replaced by a space) and comments removed; `comments[i]` holds the
+/// text of every comment touching line `i` (line, block and doc).
+pub struct Stripped {
+    pub code: Vec<String>,
+    pub comments: Vec<String>,
+}
+
+/// Lexing state that can span lines.
+enum LexState {
+    Code,
+    Block(usize),
+    Str { escaped: bool },
+    RawStr { hashes: usize },
+}
+
+pub fn strip(source: &str) -> Stripped {
+    let chars: Vec<char> = source.chars().collect();
+    let mut code: Vec<String> = vec![String::new()];
+    let mut comments: Vec<String> = vec![String::new()];
+    let mut st = LexState::Code;
+    let mut i = 0;
+    // last code char emitted on the current construct — used to tell a
+    // raw-string prefix `r"` from an identifier ending in `r`
+    let mut prev_code = ' ';
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            code.push(String::new());
+            comments.push(String::new());
+            if let LexState::Str { escaped } = &mut st {
+                // multi-line string: `\` at end-of-line continues it
+                *escaped = false;
+            }
+            i += 1;
+            continue;
+        }
+        match &mut st {
+            LexState::Block(depth) => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    *depth += 1;
+                    comments.last_mut().unwrap().push_str("/*");
+                    i += 2;
+                } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    *depth -= 1;
+                    comments.last_mut().unwrap().push_str("*/");
+                    let done = *depth == 0;
+                    if done {
+                        st = LexState::Code;
+                    }
+                    i += 2;
+                } else {
+                    comments.last_mut().unwrap().push(c);
+                    i += 1;
+                }
+            }
+            LexState::Str { escaped } => {
+                if *escaped {
+                    *escaped = false;
+                } else if c == '\\' {
+                    *escaped = true;
+                } else if c == '"' {
+                    code.last_mut().unwrap().push(' ');
+                    st = LexState::Code;
+                }
+                i += 1;
+            }
+            LexState::RawStr { hashes } => {
+                if c == '"' && chars[i + 1..].iter().take(*hashes).filter(|&&h| h == '#').count() == *hashes {
+                    let skip = 1 + *hashes;
+                    code.last_mut().unwrap().push(' ');
+                    st = LexState::Code;
+                    i += skip;
+                } else {
+                    i += 1;
+                }
+            }
+            LexState::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    while i < chars.len() && chars[i] != '\n' {
+                        comments.last_mut().unwrap().push(chars[i]);
+                        i += 1;
+                    }
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = LexState::Block(1);
+                    comments.last_mut().unwrap().push_str("/*");
+                    i += 2;
+                } else if c == '"' {
+                    code.last_mut().unwrap().push(' ');
+                    st = LexState::Str { escaped: false };
+                    prev_code = ' ';
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !is_ident(prev_code) {
+                    // raw/byte string prefixes: r", r#", br", b", b'
+                    let mut j = i + 1;
+                    if c == 'b' && chars.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    let mut hashes = 0;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    let is_raw = (c == 'r' || chars.get(i + 1) == Some(&'r'))
+                        && chars.get(j) == Some(&'"');
+                    if is_raw {
+                        code.last_mut().unwrap().push(' ');
+                        st = LexState::RawStr { hashes };
+                        prev_code = ' ';
+                        i = j + 1;
+                    } else if c == 'b' && hashes == 0 && chars.get(i + 1) == Some(&'"') {
+                        code.last_mut().unwrap().push(' ');
+                        st = LexState::Str { escaped: false };
+                        prev_code = ' ';
+                        i += 2;
+                    } else if c == 'b' && hashes == 0 && chars.get(i + 1) == Some(&'\'') {
+                        i = skip_char_literal(&chars, i + 1);
+                        code.last_mut().unwrap().push(' ');
+                        prev_code = ' ';
+                    } else {
+                        code.last_mut().unwrap().push(c);
+                        prev_code = c;
+                        i += 1;
+                    }
+                } else if c == '\'' && !is_ident(prev_code) {
+                    // char literal vs lifetime: a literal closes with a
+                    // quote right after one (possibly escaped) char
+                    if chars.get(i + 1) == Some(&'\\')
+                        || (chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\''))
+                    {
+                        i = skip_char_literal(&chars, i);
+                        code.last_mut().unwrap().push(' ');
+                        prev_code = ' ';
+                    } else {
+                        // lifetime tick: drop it, keep scanning
+                        prev_code = '\'';
+                        i += 1;
+                    }
+                } else {
+                    code.last_mut().unwrap().push(c);
+                    prev_code = c;
+                    i += 1;
+                }
+            }
+        }
+    }
+    Stripped { code, comments }
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Skip a char literal starting at the opening `'` (index of the quote);
+/// returns the index just past the closing quote.
+fn skip_char_literal(chars: &[char], start: usize) -> usize {
+    let mut i = start + 1;
+    let mut escaped = false;
+    while i < chars.len() {
+        let c = chars[i];
+        if escaped {
+            escaped = false;
+        } else if c == '\\' {
+            escaped = true;
+        } else if c == '\'' {
+            return i + 1;
+        } else if c == '\n' {
+            return i; // malformed; bail at the line end
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Find `tok` in `line` as a whole token (chars adjacent to the match
+/// must not be identifier chars). Returns true on any occurrence.
+fn has_token(line: &str, tok: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = line[from..].find(tok) {
+        let at = from + pos;
+        let before_ok = at == 0 || !is_ident(line[..at].chars().next_back().unwrap());
+        let after = line[at + tok.len()..].chars().next();
+        let after_ok = after.map_or(true, |c| !is_ident(c));
+        if before_ok && after_ok {
+            return true;
+        }
+        from = at + tok.len().max(1);
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+fn push(diags: &mut Vec<Diagnostic>, path: &str, line: usize, rule: &'static str, msg: String) {
+    diags.push(Diagnostic { path: path.to_string(), line, rule, message: msg });
+}
+
+/// Rule `safety_comment`: every line whose code contains the `unsafe`
+/// token must carry a `SAFETY:` comment on the same line or in the
+/// comment/attribute run directly above it. The walk-up also crosses
+/// assignment-continuation lines (`let x =` with the `unsafe { … }` on
+/// the next line), so the comment may sit above the whole statement.
+fn rule_safety_comment(path: &str, s: &Stripped, diags: &mut Vec<Diagnostic>) {
+    for (i, code) in s.code.iter().enumerate() {
+        if !has_token(code, "unsafe") {
+            continue;
+        }
+        if s.comments[i].contains("SAFETY:") {
+            continue;
+        }
+        // walk upward through pure-comment, blank, attribute, and
+        // assignment-continuation lines
+        let mut j = i;
+        let mut covered = false;
+        while j > 0 {
+            j -= 1;
+            let cj = s.code[j].trim();
+            let qualifies = cj.is_empty()
+                || cj.starts_with("#[")
+                || cj.starts_with("#![")
+                || cj.ends_with('=');
+            if !qualifies {
+                break;
+            }
+            if s.comments[j].contains("SAFETY:") {
+                covered = true;
+                break;
+            }
+        }
+        if !covered {
+            push(
+                diags,
+                path,
+                i + 1,
+                "safety_comment",
+                "`unsafe` without an immediately preceding `// SAFETY:` comment stating the \
+                 invariant that makes it sound"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+/// Rule `target_feature_location`.
+fn rule_target_feature(path: &str, s: &Stripped, diags: &mut Vec<Diagnostic>) {
+    if path == TARGET_FEATURE_HOME {
+        return;
+    }
+    for (i, code) in s.code.iter().enumerate() {
+        if code.contains("#[target_feature") {
+            push(
+                diags,
+                path,
+                i + 1,
+                "target_feature_location",
+                format!("#[target_feature] functions live only in {TARGET_FEATURE_HOME}"),
+            );
+        }
+    }
+}
+
+/// Rule `thread_spawn`.
+fn rule_thread_spawn(path: &str, s: &Stripped, diags: &mut Vec<Diagnostic>) {
+    if THREAD_ALLOWED_FILES.contains(&path)
+        || THREAD_ALLOWED_PREFIXES.iter().any(|p| path.starts_with(p))
+    {
+        return;
+    }
+    for (i, code) in s.code.iter().enumerate() {
+        for tok in ["thread::spawn", "thread::scope", "thread::Builder"] {
+            if has_token(code, tok) {
+                push(
+                    diags,
+                    path,
+                    i + 1,
+                    "thread_spawn",
+                    format!(
+                        "std::{tok} outside util/threadpool.rs and serve/ — route work through \
+                         `parallel_chunks`/`parallel_map` so chunking stays MR-aligned and \
+                         results stay thread-count bit-invariant"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Rule `env_var`.
+fn rule_env_var(path: &str, s: &Stripped, diags: &mut Vec<Diagnostic>) {
+    if ENV_ALLOWED_FILES.contains(&path)
+        || ENV_ALLOWED_PREFIXES.iter().any(|p| path.starts_with(p))
+    {
+        return;
+    }
+    for (i, code) in s.code.iter().enumerate() {
+        for tok in ["env::var", "env::var_os", "env::vars", "env::vars_os"] {
+            if has_token(code, tok) {
+                push(
+                    diags,
+                    path,
+                    i + 1,
+                    "env_var",
+                    "std::env read outside config/, util/cli.rs and the PMLP_* dispatch points \
+                     — centralize it so behavior stays testable without mutating the process \
+                     environment"
+                        .to_string(),
+                );
+                break; // one diagnostic per line
+            }
+        }
+    }
+}
+
+/// Rule `hash_collections`.
+fn rule_hash_collections(path: &str, s: &Stripped, diags: &mut Vec<Diagnostic>) {
+    if !DETERMINISM_CRITICAL.iter().any(|p| path.starts_with(p)) {
+        return;
+    }
+    for (i, code) in s.code.iter().enumerate() {
+        for tok in ["HashMap", "HashSet"] {
+            if has_token(code, tok) {
+                push(
+                    diags,
+                    path,
+                    i + 1,
+                    "hash_collections",
+                    format!(
+                        "{tok} in a determinism-critical module — iteration order is \
+                         unspecified and could leak into training/serving results; use \
+                         BTreeMap/BTreeSet or a Vec keyed by index"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// One open `match` body being tracked by `rule_kernel_match_wildcard`.
+struct MatchCtx {
+    /// Brace depth inside the match body (arm level).
+    body_depth: usize,
+    /// Paren/bracket depth at the body's opening brace.
+    group_depth: usize,
+    /// Did any arm pattern name `Kernel`/`KernelChoice`?
+    is_kernel: bool,
+    /// Currently lexing an arm pattern (vs an arm body)?
+    in_pattern: bool,
+    /// Token text of the current pattern.
+    pattern: String,
+    /// Lines of `_ =>` arms seen so far (1-based).
+    wildcards: Vec<usize>,
+}
+
+/// Rule `kernel_match_wildcard`: a minimal brace/paren tracker that
+/// reconstructs match bodies and arm patterns from the stripped code —
+/// just enough syntax to tie a `_ =>` arm to a match whose patterns
+/// mention `Kernel`/`KernelChoice`.
+fn rule_kernel_match_wildcard(path: &str, s: &Stripped, diags: &mut Vec<Diagnostic>) {
+    let mut brace = 0usize;
+    let mut group = 0usize;
+    let mut pending: Vec<usize> = Vec::new(); // group depth at each `match` keyword
+    let mut stack: Vec<MatchCtx> = Vec::new();
+    for (li, line) in s.code.iter().enumerate() {
+        let chars: Vec<char> = line.chars().collect();
+        let mut i = 0;
+        while i < chars.len() {
+            let c = chars[i];
+            if is_ident(c) {
+                let start = i;
+                while i < chars.len() && is_ident(chars[i]) {
+                    i += 1;
+                }
+                let word: String = chars[start..i].iter().collect();
+                if word == "match" {
+                    pending.push(group);
+                }
+                if let Some(ctx) = stack.last_mut() {
+                    if ctx.in_pattern && brace >= ctx.body_depth {
+                        if word == "Kernel" || word == "KernelChoice" {
+                            ctx.is_kernel = true;
+                        }
+                        ctx.pattern.push_str(&word);
+                        ctx.pattern.push(' ');
+                    }
+                }
+                continue;
+            }
+            match c {
+                '(' | '[' => {
+                    group += 1;
+                    pattern_push(&mut stack, brace, c);
+                }
+                ')' | ']' => {
+                    group = group.saturating_sub(1);
+                    pattern_push(&mut stack, brace, c);
+                }
+                '{' => {
+                    if pending.last() == Some(&group) {
+                        pending.pop();
+                        brace += 1;
+                        stack.push(MatchCtx {
+                            body_depth: brace,
+                            group_depth: group,
+                            is_kernel: false,
+                            in_pattern: true,
+                            pattern: String::new(),
+                            wildcards: Vec::new(),
+                        });
+                    } else {
+                        pattern_push(&mut stack, brace, c);
+                        brace += 1;
+                    }
+                }
+                '}' => {
+                    brace = brace.saturating_sub(1);
+                    let closed = match stack.last() {
+                        Some(ctx) if brace < ctx.body_depth => true,
+                        _ => false,
+                    };
+                    if closed {
+                        let ctx = stack.pop().unwrap();
+                        if ctx.is_kernel {
+                            for l in ctx.wildcards {
+                                push(
+                                    diags,
+                                    path,
+                                    l,
+                                    "kernel_match_wildcard",
+                                    "wildcard `_ =>` arm in a match over Kernel/KernelChoice — \
+                                     enumerate every variant so adding AVX-512/NEON kernels \
+                                     forces this dispatch site to be revisited"
+                                        .to_string(),
+                                );
+                            }
+                        }
+                    }
+                    // back at arm level: either a struct pattern just
+                    // closed mid-pattern (keep accumulating), or an arm
+                    // body block ended (the next tokens start a pattern)
+                    if let Some(ctx) = stack.last_mut() {
+                        if brace == ctx.body_depth {
+                            if ctx.in_pattern {
+                                ctx.pattern.push('}');
+                            } else {
+                                ctx.in_pattern = true;
+                                ctx.pattern.clear();
+                            }
+                        }
+                    }
+                }
+                '=' if chars.get(i + 1) == Some(&'>') => {
+                    if let Some(ctx) = stack.last_mut() {
+                        if ctx.in_pattern
+                            && brace == ctx.body_depth
+                            && group == ctx.group_depth
+                        {
+                            let pat = ctx.pattern.trim().to_string();
+                            if pat == "_" || pat.starts_with("_ if") {
+                                ctx.wildcards.push(li + 1);
+                            }
+                            ctx.in_pattern = false;
+                            ctx.pattern.clear();
+                        }
+                    }
+                    i += 2;
+                    continue;
+                }
+                ',' => {
+                    if let Some(ctx) = stack.last_mut() {
+                        if brace == ctx.body_depth && group == ctx.group_depth {
+                            // an arm-level comma always separates arms
+                            // (top-level pattern commas only occur inside
+                            // parens/brackets): start a fresh pattern
+                            ctx.in_pattern = true;
+                            ctx.pattern.clear();
+                        } else if ctx.in_pattern {
+                            ctx.pattern.push(',');
+                        }
+                    }
+                }
+                '|' => pattern_push(&mut stack, brace, '|'),
+                _ => {}
+            }
+            i += 1;
+        }
+    }
+}
+
+fn pattern_push(stack: &mut [MatchCtx], brace: usize, c: char) {
+    if let Some(ctx) = stack.last_mut() {
+        if ctx.in_pattern && brace >= ctx.body_depth {
+            ctx.pattern.push(c);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------------
+
+/// Does a comment on the diagnostic's line (or the line above) carry the
+/// escape hatch for its rule?
+fn suppressed(s: &Stripped, d: &Diagnostic) -> bool {
+    let marker = format!("#[allow(pmlp::{})]", d.rule);
+    let at = d.line - 1; // 1-based -> index
+    if s.comments.get(at).is_some_and(|c| c.contains(&marker)) {
+        return true;
+    }
+    at > 0 && s.comments.get(at - 1).is_some_and(|c| c.contains(&marker))
+}
+
+/// Run every rule over one file. `rel_path` must be repo-relative with
+/// `/` separators — the path-scoped rules key off it.
+pub fn scan_source(rel_path: &str, source: &str) -> Vec<Diagnostic> {
+    let s = strip(source);
+    let mut diags = Vec::new();
+    rule_safety_comment(rel_path, &s, &mut diags);
+    rule_target_feature(rel_path, &s, &mut diags);
+    rule_thread_spawn(rel_path, &s, &mut diags);
+    rule_env_var(rel_path, &s, &mut diags);
+    rule_hash_collections(rel_path, &s, &mut diags);
+    rule_kernel_match_wildcard(rel_path, &s, &mut diags);
+    diags.retain(|d| !suppressed(&s, d));
+    diags.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    diags
+}
+
+/// What [`scan_repo`] found.
+pub struct Report {
+    pub diags: Vec<Diagnostic>,
+    pub files_scanned: usize,
+}
+
+/// Walk `rust/src`, `benches` and `tools` under `root` and scan every
+/// `.rs` file. The lint's own fixtures (`tools/lint/fixtures/`) hold
+/// seeded violations and are excluded; so are `target/` dirs.
+pub fn scan_repo(root: &Path) -> Result<Report, String> {
+    let mut files: Vec<String> = Vec::new();
+    for top in ["rust/src", "benches", "tools"] {
+        let dir = root.join(top);
+        if !dir.is_dir() {
+            if top == "rust/src" {
+                return Err(format!(
+                    "{} not found under {} — run from the repo root or pass --root",
+                    top,
+                    root.display()
+                ));
+            }
+            continue;
+        }
+        collect_rs(root, &dir, &mut files)?;
+    }
+    files.sort();
+    let mut diags = Vec::new();
+    let files_scanned = files.len();
+    for rel in &files {
+        let src = std::fs::read_to_string(root.join(rel))
+            .map_err(|e| format!("reading {rel}: {e}"))?;
+        diags.extend(scan_source(rel, &src));
+    }
+    diags.sort_by(|a, b| (a.path.clone(), a.line, a.rule).cmp(&(b.path.clone(), b.line, b.rule)));
+    Ok(Report { diags, files_scanned })
+}
+
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("reading dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("walking {}: {e}", dir.display()))?;
+        let path = entry.path();
+        let rel = rel_slashes(root, &path);
+        if path.is_dir() {
+            let name = entry.file_name();
+            if name == "target" || rel == "tools/lint/fixtures" {
+                continue;
+            }
+            collect_rs(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// Repo-relative path with `/` separators regardless of platform.
+fn rel_slashes(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strip_separates_comments_and_blanks_strings() {
+        let src = "let a = \"unsafe\"; // trailing note\n/* block\nspans */ let b = 1;\n";
+        let s = strip(src);
+        assert!(!s.code[0].contains("unsafe"), "string contents must be blanked");
+        assert!(s.code[0].contains("let a ="));
+        assert!(s.comments[0].contains("trailing note"));
+        assert!(s.comments[1].contains("spans") || s.comments[0].contains("block"));
+        assert!(s.code[2].contains("let b = 1;"));
+    }
+
+    #[test]
+    fn strip_handles_lifetimes_and_char_literals() {
+        let s = strip("fn f<'a>(x: &'a str) -> char { '\\'' }\nlet q = '\"'; let l: &'static str = \"y\";\n");
+        assert!(s.code[0].contains("fn f<"));
+        assert!(s.code[0].contains("a>(x:"), "lifetime tick dropped, ident kept: {}", s.code[0]);
+        assert!(!s.code[1].contains('"'), "char-literal quote must not open a string");
+        assert!(s.code[1].contains("static"));
+    }
+
+    #[test]
+    fn strip_handles_raw_strings_and_nesting() {
+        let s = strip("let r = r#\"has \"quotes\" and // not a comment\"#; // real\n/* outer /* inner */ still */ code();\n");
+        assert!(!s.code[0].contains("not a comment"));
+        assert!(s.comments[0].contains("real"));
+        assert!(s.code[1].contains("code();"));
+        assert!(!s.code[1].contains("still"));
+    }
+
+    #[test]
+    fn token_boundaries_respected() {
+        assert!(has_token("unsafe {", "unsafe"));
+        assert!(!has_token("unsafe_fn_count", "unsafe"));
+        assert!(!has_token("an_unsafe", "unsafe"));
+        assert!(has_token("std::thread::spawn(|| 1)", "thread::spawn"));
+        assert!(!has_token("megathread::spawner", "thread::spawn"));
+    }
+
+    #[test]
+    fn list_rules_is_consistent() {
+        assert_eq!(RULES.len(), 6);
+        let mut ids: Vec<&str> = RULES.iter().map(|r| r.id).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), 6, "rule ids must be unique");
+    }
+}

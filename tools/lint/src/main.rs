@@ -1,0 +1,77 @@
+//! CLI for `pmlp-lint`: scan the repo, print `file:line` diagnostics.
+//!
+//! Exit codes: 0 clean, 1 violations found, 2 usage/IO error.
+//! Self-cleanliness note: this binary takes its configuration from argv
+//! (`std::env::args`), never from `std::env::var` — the lint passes its
+//! own `env_var` rule without an escape hatch.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> &'static str {
+    "pmlp-lint: repo-invariant static analysis for the pmlp unsafe SIMD/threading core\n\
+     \n\
+     USAGE:\n\
+     \x20   cargo run -p pmlp-lint [-- OPTIONS]\n\
+     \n\
+     OPTIONS:\n\
+     \x20   --root <dir>    repo root to scan (default: current directory)\n\
+     \x20   --list-rules    print the rule catalog and exit\n\
+     \x20   -h, --help      this message\n\
+     \n\
+     Suppress a rule at one site with a comment containing\n\
+     `#[allow(pmlp::<rule>)]` on the offending line or the line above."
+}
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => {
+                    eprintln!("pmlp-lint: --root needs a directory argument\n\n{}", usage());
+                    return ExitCode::from(2);
+                }
+            },
+            "--list-rules" => {
+                for rule in pmlp_lint::RULES {
+                    println!("pmlp::{:<24} {}", rule.id, rule.summary);
+                }
+                return ExitCode::SUCCESS;
+            }
+            "-h" | "--help" => {
+                println!("{}", usage());
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("pmlp-lint: unknown argument `{other}`\n\n{}", usage());
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    match pmlp_lint::scan_repo(&root) {
+        Ok(report) => {
+            for d in &report.diags {
+                println!("{d}");
+            }
+            if report.diags.is_empty() {
+                eprintln!("pmlp-lint: {} files clean", report.files_scanned);
+                ExitCode::SUCCESS
+            } else {
+                eprintln!(
+                    "pmlp-lint: {} violation(s) across {} scanned files",
+                    report.diags.len(),
+                    report.files_scanned
+                );
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("pmlp-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

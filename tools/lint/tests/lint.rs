@@ -1,0 +1,118 @@
+//! `pmlp-lint` self-tests: each fixture seeds known violations and the
+//! assertions pin the exact `file:line` diagnostics, the path scoping
+//! of each rule, and the `#[allow(pmlp::<rule>)]` escape hatch.
+//!
+//! Fixtures live in `tools/lint/fixtures/` (excluded from the repo
+//! walk) and are scanned via `include_str!` under *virtual* paths, so
+//! one file can be asserted both inside and outside a rule's scope.
+
+use pmlp_lint::{scan_repo, scan_source, Diagnostic};
+
+/// (line, rule) pairs, in diagnostic order.
+fn shape(diags: &[Diagnostic]) -> Vec<(usize, &'static str)> {
+    diags.iter().map(|d| (d.line, d.rule)).collect()
+}
+
+#[test]
+fn missing_safety_fixture() {
+    let src = include_str!("../fixtures/missing_safety.rs");
+    let diags = scan_source("rust/src/util/fixture.rs", src);
+    // line 6: unsafe deref with only a non-SAFETY comment above (the
+    // walk-up crosses the `let x =` continuation line, then finds no
+    // SAFETY); line 18: second unsafe on a line whose neighbor's
+    // trailing SAFETY does not carry over. Lines 12/14/17 are covered,
+    // line 24 is escape-hatched, and line 29's `unsafe` is covered by
+    // the SAFETY comment above its `let v =` continuation.
+    assert_eq!(shape(&diags), vec![(6, "safety_comment"), (18, "safety_comment")]);
+    for d in &diags {
+        assert_eq!(d.path, "rust/src/util/fixture.rs");
+        assert!(d.to_string().starts_with("rust/src/util/fixture.rs:"), "{d}");
+        assert!(d.to_string().contains("pmlp::safety_comment"), "{d}");
+    }
+}
+
+#[test]
+fn stray_target_feature_fixture() {
+    let src = include_str!("../fixtures/stray_target_feature.rs");
+    let outside = scan_source("rust/src/nn/mlp_fixture.rs", src);
+    assert_eq!(shape(&outside), vec![(4, "target_feature_location")]);
+    // the same source is clean in the one audited home
+    let home = scan_source("rust/src/tensor/kernels/simd.rs", src);
+    assert!(home.is_empty(), "unexpected: {home:?}");
+}
+
+#[test]
+fn stray_spawn_fixture() {
+    let src = include_str!("../fixtures/stray_spawn.rs");
+    let outside = scan_source("rust/src/pool/workers.rs", src);
+    // only line 4 (spawn) — thread::sleep on line 6 is not fenced
+    assert_eq!(shape(&outside), vec![(4, "thread_spawn")]);
+    assert!(scan_source("rust/src/util/threadpool.rs", src).is_empty());
+    assert!(scan_source("rust/src/serve/batcher.rs", src).is_empty());
+}
+
+#[test]
+fn stray_env_fixture() {
+    let src = include_str!("../fixtures/stray_env.rs");
+    let outside = scan_source("rust/src/metrics/fixture.rs", src);
+    // line 4 flagged; line 9 carries the escape hatch on the line above
+    assert_eq!(shape(&outside), vec![(4, "env_var")]);
+    assert!(scan_source("rust/src/config/loader.rs", src).is_empty());
+}
+
+#[test]
+fn hash_in_nn_fixture() {
+    let src = include_str!("../fixtures/hash_in_nn.rs");
+    let inside = scan_source("rust/src/nn/cache.rs", src);
+    assert_eq!(
+        shape(&inside),
+        vec![(3, "hash_collections"), (5, "hash_collections"), (6, "hash_collections")]
+    );
+    // runtime/ is not determinism-critical (XLA handles hold HashMaps)
+    assert!(scan_source("rust/src/runtime/cache.rs", src).is_empty());
+}
+
+#[test]
+fn wildcard_kernel_fixture() {
+    let src = include_str!("../fixtures/wildcard_kernel.rs");
+    let diags = scan_source("rust/src/tensor/kernels/mod.rs", src);
+    // line 9: wildcard over Kernel. Line 16's wildcard is over a u32
+    // (fine); line 24's wildcard over KernelChoice is escape-hatched;
+    // line 36's wildcard follows a comma-separated nested-match arm
+    // (regression: the pattern buffer must reset at arm boundaries);
+    // line 34's inner wildcard is over a usize (fine).
+    assert_eq!(
+        shape(&diags),
+        vec![(9, "kernel_match_wildcard"), (36, "kernel_match_wildcard")]
+    );
+}
+
+#[test]
+fn decoys_fixture_is_silent() {
+    let src = include_str!("../fixtures/decoys.rs");
+    // scanned under a determinism-critical path so every rule is armed
+    let diags = scan_source("rust/src/nn/decoys.rs", src);
+    assert!(diags.is_empty(), "decoys must not trigger: {diags:?}");
+}
+
+#[test]
+fn repo_at_head_is_clean() {
+    // CARGO_MANIFEST_DIR = <repo>/tools/lint
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let report = scan_repo(&root).expect("repo walk");
+    assert!(
+        report.files_scanned >= 30,
+        "walk looks truncated: only {} files",
+        report.files_scanned
+    );
+    assert!(
+        report.diags.is_empty(),
+        "repo at HEAD must be lint-clean; found:\n{}",
+        report
+            .diags
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
