@@ -5,7 +5,9 @@
 //! * `train`       — run a config-driven experiment (`--config file.toml`)
 //! * `rank`        — train, then print only the top-k ranking table
 //! * `export`      — train, checkpoint the pool, extract the top-k winners
+//! * `serve`       — sharded HTTP serving of a checkpoint winner
 //! * `serve-bench` — offline load generator for the micro-batch server
+//!                   (plus `--sustained` open-loop runs with hot-swaps)
 //! * `train-bench` — training throughput: shallow vs depth-2 vs depth-3
 //! * `bench`       — regenerate a paper table (`--table 1|2`)
 //! * `inspect`     — pool/layout accounting (the §5 memory note) + artifacts
@@ -18,6 +20,7 @@
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Duration;
 
 use parallel_mlps::bench_harness::{artifacts_dir, BenchArgs};
 use parallel_mlps::config::{ExperimentConfig, Strategy};
@@ -40,9 +43,13 @@ use parallel_mlps::selection::{
     halving_run, report, top_k, top_k_indices, HalvingArm, HalvingConfig, RankedModel,
 };
 use parallel_mlps::serve::bench::{
-    render_reports, reports_json, run_load_with, synthetic_model, LoadSpec,
+    render_reports, render_sustained, reports_json, run_load_with, run_sustained,
+    sustained_json, synthetic_model, LoadSpec, SustainedSpec,
 };
-use parallel_mlps::serve::{ModelRegistry, ServableModel, ServeConfig};
+use parallel_mlps::serve::{
+    HttpConfig, HttpServer, ModelRegistry, ModelSlot, ServableModel, ServeConfig, ShardConfig,
+    ShardedServer,
+};
 use parallel_mlps::tensor::kernels::{self, Kernel};
 use parallel_mlps::util::cli::Args;
 
@@ -61,10 +68,17 @@ USAGE:
              [--halving [--eta N] [--rung-epochs N]]
   pmlp export --out FILE [--top K] (same training flags as train)
              [--halving [--eta N] [--rung-epochs N]]
+  pmlp serve [--ckpt FILE | --hidden N --features N --out-dim N]
+             [--addr HOST] [--port N] [--shards N] [--max-batch N]
+             [--queue-cap N] [--threads N] [--max-body BYTES]
+             [--duration-s F]
   pmlp serve-bench [--ckpt FILE | --hidden N --features N --out-dim N]
              [--data FILE.csv [--target COL]]
              [--rows N] [--clients N] [--depth N] [--batch-sizes a,b,c]
              [--threads N] [--queue-cap N] [--seed N] [--out FILE.json]
+             [--sustained [--duration-s F] [--rate RPS] [--swaps N]
+              [--shards N] [--max-batch N] [--verify]
+              [--slo-p99-ms F] [--slo-shed-frac F]]
   pmlp train-bench [--quick] [--samples N] [--epochs N] [--warmup N]
              [--batch N] [--threads N] [--seed N] [--out FILE.json]
   pmlp bench --table 1|2 [--quick] [--samples a,b] [--features a,b]
@@ -104,6 +118,17 @@ per-phase peak RSS and CPU time for shallow vs depth-2 vs depth-3
 pools at fixed seeds, under every available matmul kernel (naive
 oracle vs blocked vs simd on AVX2+FMA hosts), into BENCH_train.json.
 
+serve runs the sharded HTTP front end: N worker shards (connections
+round-robin over them), bounded queues that shed load with 503 instead
+of blocking, and zero-downtime checkpoint hot-swap (replies carry the
+serving generation). Endpoints: POST /predict {\"row\": [...]} or
+{\"rows\": [[...], ...]}, GET /healthz, GET /stats. serve-bench
+--sustained drives fixed-duration open-loop load against the same
+sharded engine with --swaps mid-run hot-swaps, and gates the result on
+an SLO (zero lost/incorrect responses, --slo-p99-ms, --slo-shed-frac);
+--verify pins the blocked kernel and bit-checks every response against
+a direct forward under the generation it claims.
+
 Env: PMLP_THREADS (worker count), PMLP_KERNEL (matmul kernel:
 naive|blocked|simd|auto; auto probes tile sizes and, on AVX2+FMA
 hosts, the simd kernel; simd falls back to blocked with a warning on
@@ -124,7 +149,7 @@ fn main() {
 }
 
 fn real_main() -> anyhow::Result<()> {
-    let args = Args::from_env(&["quick", "paper-scale", "verbose", "halving"])
+    let args = Args::from_env(&["quick", "paper-scale", "verbose", "halving", "sustained", "verify"])
         .map_err(|e| anyhow::anyhow!("{e}\n{USAGE}"))?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     // `trace summarize` reads a trace; tracing the reader into the very
@@ -139,6 +164,7 @@ fn real_main() -> anyhow::Result<()> {
         "train" => train(&args),
         "rank" => rank(&args),
         "export" => export(&args),
+        "serve" => serve(&args),
         "serve-bench" => serve_bench(&args),
         "train-bench" => train_bench(&args),
         "bench" => bench(&args),
@@ -600,6 +626,150 @@ fn export_halved(
     Ok(())
 }
 
+/// Resolve the model to serve: a checkpoint winner (`--ckpt`) or a
+/// synthetic one (`--hidden/--features/--out-dim`) — shared by `serve`
+/// and `serve-bench`.
+fn resolve_serve_model(args: &Args, seed: u64) -> anyhow::Result<(ServableModel, Option<Preprocessor>)> {
+    let parse = |e: String| anyhow::anyhow!(e);
+    match args.get("ckpt") {
+        Some(p) => {
+            let ckpt = PoolCheckpoint::load(Path::new(p))?;
+            let (winner, label) = match ckpt.winner() {
+                Some(w) => (w, "checkpoint winner"),
+                None => (0, "checkpoint stores no ranking; falling back to"),
+            };
+            let m = ServableModel::from_checkpoint(&ckpt, winner, format!("{p}#top1"))?;
+            println!(
+                "serving {label}: model {winner} (h={}, {} hidden layer(s), {}, F={}, O={})",
+                m.hidden(),
+                m.depth(),
+                m.act().name(),
+                m.features(),
+                m.out()
+            );
+            Ok((m, ckpt.preprocessor.clone()))
+        }
+        None => {
+            let hidden: usize = args.get_parse_or("hidden", 128).map_err(parse)?;
+            let features: usize = args.get_parse_or("features", 64).map_err(parse)?;
+            let out_dim: usize = args.get_parse_or("out-dim", 8).map_err(parse)?;
+            println!("serving synthetic winner: h={hidden}, relu, F={features}, O={out_dim}");
+            Ok(((*synthetic_model(hidden, features, out_dim, seed)).clone(), None))
+        }
+    }
+}
+
+/// `pmlp serve` — the sharded HTTP front end over a checkpoint winner.
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let parse = |e: String| anyhow::anyhow!(e);
+    let shards: usize = args.get_parse_or("shards", 4).map_err(parse)?;
+    let max_batch: usize = args.get_parse_or("max-batch", 64).map_err(parse)?;
+    let queue_cap: usize = args.get_parse_or("queue-cap", 1024).map_err(parse)?;
+    let threads: usize = args.get_parse_or("threads", 1).map_err(parse)?;
+    let addr = args.get_or("addr", "127.0.0.1").to_string();
+    let port: u16 = args.get_parse_or("port", 7878).map_err(parse)?;
+    let max_body: usize = args.get_parse_or("max-body", 1 << 20).map_err(parse)?;
+    let duration_s: f64 = args.get_parse_or("duration-s", 0.0).map_err(parse)?;
+    let seed: u64 = args.get_parse_or("seed", 42).map_err(parse)?;
+
+    let (model, _pre) = resolve_serve_model(args, seed)?;
+    eprintln!("matmul kernel: {}", kernels::active().describe());
+    let slot = ModelSlot::new(model);
+    let cfg = ShardConfig { shards, max_batch, queue_cap, threads, kernel: None };
+    let engine = Arc::new(ShardedServer::start(slot, cfg)?);
+    let http = HttpServer::start(engine.clone(), HttpConfig { addr, port, max_body })?;
+    println!(
+        "pmlp serve: listening on http://{} — {shards} shard(s), max_batch {max_batch}, \
+         queue_cap {queue_cap} (full queues shed with 503)",
+        http.local_addr()
+    );
+    println!("endpoints: POST /predict {{\"row\": [...]}} | GET /healthz | GET /stats");
+    if duration_s <= 0.0 {
+        eprintln!("serving until killed (pass --duration-s N to exit after N seconds)");
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs_f64(duration_s));
+    let hstats = http.shutdown();
+    let engine = Arc::try_unwrap(engine)
+        .map_err(|_| anyhow::anyhow!("engine still referenced at shutdown"))?;
+    let (totals, service) = engine.shutdown();
+    println!(
+        "served {} rows in {} batches (svc p99 {:.3} ms); {} http requests, {} 4xx, {} shed",
+        totals.rows,
+        totals.batches,
+        service.quantile(0.99) * 1e3,
+        hstats.requests,
+        hstats.client_errors,
+        hstats.shed
+    );
+    Ok(())
+}
+
+/// `pmlp serve-bench --sustained` — fixed-duration open-loop load with
+/// mid-run hot-swaps against the sharded server, gated on an SLO.
+fn serve_bench_sustained(args: &Args, model: &ServableModel) -> anyhow::Result<()> {
+    let parse = |e: String| anyhow::anyhow!(e);
+    let duration_s: f64 = args.get_parse_or("duration-s", 5.0).map_err(parse)?;
+    let rate_rps: f64 = args.get_parse_or("rate", 2000.0).map_err(parse)?;
+    let clients: usize = args.get_parse_or("clients", 4).map_err(parse)?;
+    let swaps: usize = args.get_parse_or("swaps", 3).map_err(parse)?;
+    let shards: usize = args.get_parse_or("shards", 4).map_err(parse)?;
+    let max_batch: usize = args.get_parse_or("max-batch", 64).map_err(parse)?;
+    let queue_cap: usize = args.get_parse_or("queue-cap", 1024).map_err(parse)?;
+    let threads: usize = args.get_parse_or("threads", 1).map_err(parse)?;
+    let seed: u64 = args.get_parse_or("seed", 42).map_err(parse)?;
+    let slo_p99_ms: f64 = args.get_parse_or("slo-p99-ms", 1000.0).map_err(parse)?;
+    let slo_shed_frac: f64 = args.get_parse_or("slo-shed-frac", 0.05).map_err(parse)?;
+    let verify = args.has_flag("verify");
+
+    let kernel = if verify {
+        eprintln!("--verify pins the blocked kernel (bit-exact tier; simd is bounded-ulp)");
+        Some(Kernel::Blocked)
+    } else {
+        None
+    };
+    let cfg = ShardConfig { shards, max_batch, queue_cap, threads, kernel };
+    eprintln!("matmul kernel: {}", cfg.kernel_config().describe());
+
+    // generation 1 is the resolved model; each swap promotes a copy
+    // with one bias nudged, so generations are bit-distinguishable and
+    // --verify proves replies never mix checkpoints
+    let mut generations = Vec::with_capacity(swaps + 1);
+    for k in 0..=swaps {
+        let mut m = model.clone();
+        m.name = format!("{}@gen{}", model.name, k + 1);
+        if k > 0 {
+            m.params.layers[0].b.data_mut()[0] += 1e-3 * k as f32;
+        }
+        generations.push(m);
+    }
+    let spec = SustainedSpec { duration_s, rate_rps, clients, verify, seed };
+    eprintln!(
+        "sustained: {duration_s}s @ {rate_rps} rows/s, {clients} clients, {shards} shards, \
+         {swaps} hot-swap(s){}",
+        if verify { ", bit-verifying every response" } else { "" }
+    );
+    let rep = run_sustained(generations, cfg, &spec)?;
+    print!("{}", render_sustained(&rep));
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, sustained_json(&spec, &cfg, &rep))
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        eprintln!("report written to {path}");
+    }
+    rep.check_slo(slo_p99_ms, slo_shed_frac, swaps)?;
+    println!(
+        "SLO met: answered+shed == submitted, 0 incorrect, {} swap(s), \
+         p99 {:.3} ms <= {slo_p99_ms} ms, shed {:.2}% <= {:.2}%",
+        rep.swaps,
+        rep.p99_ms,
+        rep.shed_frac() * 100.0,
+        slo_shed_frac * 100.0
+    );
+    Ok(())
+}
+
 /// Offline load generator: replay single-row predict traffic against the
 /// micro-batch server at several `max_batch` settings and compare.
 fn serve_bench(args: &Args) -> anyhow::Result<()> {
@@ -621,32 +791,11 @@ fn serve_bench(args: &Args) -> anyhow::Result<()> {
         "--batch-sizes must be positive integers"
     );
 
-    let (model, preprocessor) = match args.get("ckpt") {
-        Some(p) => {
-            let ckpt = PoolCheckpoint::load(Path::new(p))?;
-            let (winner, label) = match ckpt.winner() {
-                Some(w) => (w, "checkpoint winner"),
-                None => (0, "checkpoint stores no ranking; falling back to"),
-            };
-            let m = ServableModel::from_checkpoint(&ckpt, winner, format!("{p}#top1"))?;
-            println!(
-                "serving {label}: model {winner} (h={}, {} hidden layer(s), {}, F={}, O={})",
-                m.hidden(),
-                m.depth(),
-                m.act().name(),
-                m.features(),
-                m.out()
-            );
-            (Arc::new(m), ckpt.preprocessor.clone())
-        }
-        None => {
-            let hidden: usize = args.get_parse_or("hidden", 128).map_err(parse)?;
-            let features: usize = args.get_parse_or("features", 64).map_err(parse)?;
-            let out_dim: usize = args.get_parse_or("out-dim", 8).map_err(parse)?;
-            println!("serving synthetic winner: h={hidden}, relu, F={features}, O={out_dim}");
-            (synthetic_model(hidden, features, out_dim, seed), None)
-        }
-    };
+    let (model, preprocessor) = resolve_serve_model(args, seed)?;
+    if args.has_flag("sustained") {
+        return serve_bench_sustained(args, &model);
+    }
+    let model = Arc::new(model);
 
     // --data: replay the CSV's rows through the server instead of
     // uniform noise, normalized by the checkpoint's preprocessor when

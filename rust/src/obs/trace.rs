@@ -17,6 +17,14 @@
 //! append mode precisely so a train → rank → export → serve-bench
 //! pipeline can share one trace).
 //!
+//! Span kinds emitted today: `train.epoch`, `halving.rung`,
+//! `kernel.autotune`, `io.checkpoint`, `serve.batch` (fields `rows`,
+//! plus `shard` and `generation` from the sharded server) and
+//! `serve.swap` (field `generation` — one per checkpoint promotion
+//! through `serve::ModelSlot`). The sharded server also emits a
+//! `serve.shard<N>.depth` gauge per coalesced batch (post-drain queue
+//! depth, only when tracing is on) and a `serve.swaps` counter.
+//!
 //! Cost model: when disabled, [`span`]/[`counter`]/[`gauge`] touch one
 //! relaxed atomic and return inert values — no allocation, no lock, no
 //! clock read. When enabled, events serialize into a thread-local

@@ -8,14 +8,17 @@
 //! row count and the same quantile machinery serves bench reports,
 //! server-side service times and trace summaries.
 
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 use crate::metrics::{Histogram, Table};
 use crate::nn::act::Act;
 use crate::nn::init::init_model;
 use crate::serve::batcher::{ServeConfig, Server};
-use crate::serve::registry::ServableModel;
+use crate::serve::registry::{ModelSlot, ServableModel};
+use crate::serve::shard::{ShardConfig, ShardStats, ShardTicket, ShardedServer, SubmitError};
+use crate::tensor::kernels::Kernel;
+use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 /// Shape of one load run.
@@ -158,6 +161,372 @@ pub fn run_load_with(
         latency,
         service,
     })
+}
+
+/// Shape of one sustained-load run against the sharded server: a fixed
+/// wall-clock duration of open-loop traffic (clients pace submissions
+/// by the clock and never wait for responses before sending the next —
+/// no coordinated omission) with periodic checkpoint hot-swaps landing
+/// mid-run.
+#[derive(Clone, Copy, Debug)]
+pub struct SustainedSpec {
+    /// wall-clock length of the run
+    pub duration_s: f64,
+    /// total target submission rate across all clients (rows/s)
+    pub rate_rps: f64,
+    pub clients: usize,
+    /// bit-verify every response against a direct forward under the
+    /// reply's generation — requires a pinned bit-exact kernel
+    /// (`ShardConfig.kernel` = `Naive` or `Blocked`)
+    pub verify: bool,
+    pub seed: u64,
+}
+
+impl Default for SustainedSpec {
+    fn default() -> Self {
+        SustainedSpec { duration_s: 2.0, rate_rps: 2000.0, clients: 4, verify: false, seed: 42 }
+    }
+}
+
+/// What one sustained run measured. `check_slo` is the CI assertion.
+#[derive(Clone, Debug)]
+pub struct SustainedReport {
+    pub duration_s: f64,
+    pub target_rps: f64,
+    /// submissions attempted (answered + shed must equal this)
+    pub submitted: usize,
+    pub answered: usize,
+    /// submissions refused by admission control (`Overloaded`)
+    pub shed: usize,
+    /// verified responses whose bits disagreed with a direct forward
+    pub incorrect: usize,
+    /// hot-swaps that landed mid-run
+    pub swaps: usize,
+    pub start_generation: u64,
+    pub end_generation: u64,
+    pub rows_per_s: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    /// client-observed submit-to-response latency (seconds)
+    pub latency: Histogram,
+    /// per-batch service time merged across shards (seconds)
+    pub service: Histogram,
+    pub per_shard: Vec<ShardStats>,
+    /// deepest any shard queue got (admission-control headroom)
+    pub max_queue_depth: usize,
+}
+
+impl SustainedReport {
+    pub fn shed_frac(&self) -> f64 {
+        if self.submitted == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.submitted as f64
+        }
+    }
+
+    /// The SLO gate: every request accounted for (answered or shed —
+    /// never lost), zero incorrect responses, the promised hot-swaps
+    /// actually landed, p99 under budget, shed fraction under budget.
+    pub fn check_slo(
+        &self,
+        p99_ms_max: f64,
+        shed_frac_max: f64,
+        min_swaps: usize,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.answered + self.shed == self.submitted,
+            "request ledger leaks: {} answered + {} shed != {} submitted",
+            self.answered,
+            self.shed,
+            self.submitted
+        );
+        anyhow::ensure!(self.answered > 0, "no requests answered");
+        anyhow::ensure!(
+            self.incorrect == 0,
+            "{} responses failed bit-exact verification",
+            self.incorrect
+        );
+        anyhow::ensure!(
+            self.swaps >= min_swaps,
+            "only {} hot-swaps landed mid-run (SLO needs >= {min_swaps})",
+            self.swaps
+        );
+        anyhow::ensure!(
+            self.end_generation == self.start_generation + self.swaps as u64,
+            "generation ledger drifted: started at {}, {} swaps, ended at {}",
+            self.start_generation,
+            self.swaps,
+            self.end_generation
+        );
+        anyhow::ensure!(
+            self.p99_ms <= p99_ms_max,
+            "p99 latency {:.3} ms exceeds the {p99_ms_max:.3} ms SLO",
+            self.p99_ms
+        );
+        anyhow::ensure!(
+            self.shed_frac() <= shed_frac_max,
+            "shed fraction {:.4} exceeds the {shed_frac_max:.4} SLO",
+            self.shed_frac()
+        );
+        Ok(())
+    }
+}
+
+/// Drive open-loop sustained load against a fresh [`ShardedServer`].
+/// `generations[0]` serves from the start; each later entry is promoted
+/// mid-run at an even spacing, so a run with `generations.len() == 4`
+/// exercises 3 hot-swaps under live traffic. With `spec.verify` every
+/// response is recomputed under the generation it claims and compared
+/// bit-for-bit — the "zero dropped or incorrect responses" evidence.
+pub fn run_sustained(
+    generations: Vec<ServableModel>,
+    cfg: ShardConfig,
+    spec: &SustainedSpec,
+) -> anyhow::Result<SustainedReport> {
+    anyhow::ensure!(!generations.is_empty(), "need at least one model generation");
+    anyhow::ensure!(spec.duration_s > 0.0, "duration_s must be > 0");
+    anyhow::ensure!(spec.rate_rps > 0.0, "rate_rps must be > 0");
+    anyhow::ensure!(spec.clients >= 1, "clients must be >= 1");
+    let features = generations[0].features();
+    let out = generations[0].out();
+    anyhow::ensure!(
+        generations.iter().all(|m| m.features() == features && m.out() == out),
+        "every generation must share the wire contract ({features} features, {out} out)"
+    );
+    if spec.verify {
+        anyhow::ensure!(
+            matches!(cfg.kernel, Some(Kernel::Naive) | Some(Kernel::Blocked)),
+            "verify needs a pinned bit-exact kernel (naive or blocked); \
+             simd replies are bounded-ulp, not bit-reproducible per row"
+        );
+    }
+
+    let models = Arc::new(generations);
+    let slot = ModelSlot::new(models[0].clone());
+    let server = Arc::new(ShardedServer::start(slot, cfg)?);
+    let start_generation = server.generation();
+    let swaps_planned = models.len() - 1;
+    let kcfg = cfg.kernel_config();
+
+    let t0 = Instant::now();
+    // promoter: lands each later generation at an even spacing
+    let promoter = {
+        let server = server.clone();
+        let models = models.clone();
+        let duration = spec.duration_s;
+        std::thread::spawn(move || -> usize {
+            let gap = Duration::from_secs_f64(duration / (swaps_planned as f64 + 1.0));
+            let mut landed = 0usize;
+            for m in models.iter().skip(1) {
+                std::thread::sleep(gap);
+                if server.promote(m.clone()).is_ok() {
+                    landed += 1;
+                }
+            }
+            landed
+        })
+    };
+
+    // per client: a paced open-loop submitter plus a waiter draining its
+    // tickets, connected by a channel so pacing never blocks on waits
+    let interval_s = spec.clients as f64 / spec.rate_rps;
+    let mut submitters = Vec::with_capacity(spec.clients);
+    let mut waiters = Vec::with_capacity(spec.clients);
+    for c in 0..spec.clients {
+        let client = server.client();
+        let (tx, rx) = mpsc::channel::<(Instant, Option<Vec<f32>>, ShardTicket)>();
+        let (duration, seed, verify) = (spec.duration_s, spec.seed, spec.verify);
+        submitters.push(std::thread::spawn(move || -> (usize, usize) {
+            let mut root = Rng::new(seed);
+            let mut rng = root.fork(c as u64);
+            let mut row = vec![0.0f32; features];
+            let start = Instant::now();
+            let (mut submitted, mut shed) = (0usize, 0usize);
+            let mut n = 0u64;
+            loop {
+                let target = interval_s * n as f64;
+                if target >= duration {
+                    break;
+                }
+                let elapsed = start.elapsed().as_secs_f64();
+                if elapsed < target {
+                    std::thread::sleep(Duration::from_secs_f64(target - elapsed));
+                }
+                for v in row.iter_mut() {
+                    *v = rng.uniform_in(-1.0, 1.0);
+                }
+                submitted += 1;
+                match client.submit(&row) {
+                    Ok(t) => {
+                        let echo = if verify { Some(row.clone()) } else { None };
+                        let _ = tx.send((Instant::now(), echo, t));
+                    }
+                    Err(SubmitError::Overloaded { .. }) => shed += 1,
+                    Err(_) => break, // shutdown mid-run: the ledger will flag it
+                }
+                n += 1;
+            }
+            (submitted, shed)
+        }));
+        let models = models.clone();
+        waiters.push(std::thread::spawn(move || -> (Histogram, usize, usize) {
+            let mut lats = Histogram::new();
+            let (mut answered, mut incorrect) = (0usize, 0usize);
+            for (t, echo, ticket) in rx {
+                let Ok(p) = ticket.wait() else { continue };
+                lats.record(t.elapsed().as_secs_f64());
+                answered += 1;
+                if let Some(row) = echo {
+                    // recompute under the generation the reply claims
+                    let x = Tensor::from_vec(row, &[1, features]);
+                    let want = models[(p.generation - 1) as usize].predict_with(kcfg, &x, 1);
+                    let same = want.data().len() == p.logits.len()
+                        && want
+                            .data()
+                            .iter()
+                            .zip(&p.logits)
+                            .all(|(a, b)| a.to_bits() == b.to_bits());
+                    if !same {
+                        incorrect += 1;
+                    }
+                }
+            }
+            (lats, answered, incorrect)
+        }));
+    }
+
+    let (mut submitted, mut shed) = (0usize, 0usize);
+    for s in submitters {
+        let (sub, sh) = s.join().map_err(|_| anyhow::anyhow!("submitter panicked"))?;
+        submitted += sub;
+        shed += sh;
+    }
+    let mut latency = Histogram::new();
+    let (mut answered, mut incorrect) = (0usize, 0usize);
+    for w in waiters {
+        let (lats, ans, bad) = w.join().map_err(|_| anyhow::anyhow!("waiter panicked"))?;
+        latency.merge(&lats);
+        answered += ans;
+        incorrect += bad;
+    }
+    let swaps = promoter.join().map_err(|_| anyhow::anyhow!("promoter panicked"))?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let end_generation = server.generation();
+    let per_shard = server.stats();
+    let max_queue_depth = per_shard.iter().map(|s| s.max_depth_seen).max().unwrap_or(0);
+    let server = Arc::try_unwrap(server)
+        .map_err(|_| anyhow::anyhow!("server handle still referenced after join"))?;
+    let (_totals, service) = server.shutdown();
+
+    Ok(SustainedReport {
+        duration_s: spec.duration_s,
+        target_rps: spec.rate_rps,
+        submitted,
+        answered,
+        shed,
+        incorrect,
+        swaps,
+        start_generation,
+        end_generation,
+        rows_per_s: answered as f64 / wall_s.max(1e-9),
+        p50_ms: latency.quantile(0.50) * 1e3,
+        p99_ms: latency.quantile(0.99) * 1e3,
+        mean_ms: latency.mean() * 1e3,
+        latency,
+        service,
+        per_shard,
+        max_queue_depth,
+    })
+}
+
+/// Human-readable sustained-run summary (the `pmlp serve-bench
+/// --sustained` output).
+pub fn render_sustained(r: &SustainedReport) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "sustained load: {:.1}s @ {:.0} rows/s target, {} submitted\n",
+        r.duration_s, r.target_rps, r.submitted
+    ));
+    s.push_str(&format!(
+        "  answered {} ({:.0} rows/s), shed {} ({:.2}%), incorrect {}\n",
+        r.answered,
+        r.rows_per_s,
+        r.shed,
+        r.shed_frac() * 100.0,
+        r.incorrect
+    ));
+    s.push_str(&format!(
+        "  latency p50 {:.3} ms  p99 {:.3} ms  mean {:.3} ms\n",
+        r.p50_ms, r.p99_ms, r.mean_ms
+    ));
+    s.push_str(&format!(
+        "  hot-swaps {} (generation {} -> {}), max queue depth {}\n",
+        r.swaps, r.start_generation, r.end_generation, r.max_queue_depth
+    ));
+    for (i, sh) in r.per_shard.iter().enumerate() {
+        s.push_str(&format!(
+            "  shard {i}: rows {} batches {} mean_batch {:.1} shed {} max_depth {}\n",
+            sh.rows,
+            sh.batches,
+            sh.mean_batch(),
+            sh.shed,
+            sh.max_depth_seen
+        ));
+    }
+    s
+}
+
+/// JSON document for a sustained run, `util::json`-escaped like every
+/// other report the repo emits.
+pub fn sustained_json(spec: &SustainedSpec, cfg: &ShardConfig, r: &SustainedReport) -> String {
+    use crate::util::json::{obj, Value};
+    let shards: Vec<Value> = r
+        .per_shard
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            obj()
+                .put("shard", i)
+                .put("rows", s.rows)
+                .put("batches", s.batches)
+                .put("shed", s.shed)
+                .put("max_batch_seen", s.max_batch_seen)
+                .put("max_depth_seen", s.max_depth_seen)
+                .build()
+        })
+        .collect();
+    let doc = obj()
+        .put("bench", "serve-sustained")
+        .put("duration_s", r.duration_s)
+        .put("target_rps", r.target_rps)
+        .put("clients", spec.clients)
+        .put("verify", spec.verify)
+        .put("shards", cfg.shards)
+        .put("max_batch", cfg.max_batch)
+        .put("queue_cap", cfg.queue_cap)
+        .put("kernel", cfg.kernel_config().kernel.name())
+        .put("submitted", r.submitted)
+        .put("answered", r.answered)
+        .put("shed", r.shed)
+        .put("incorrect", r.incorrect)
+        .put("swaps", r.swaps)
+        .put("start_generation", r.start_generation)
+        .put("end_generation", r.end_generation)
+        .put("rows_per_s", r.rows_per_s)
+        .put("p50_ms", r.p50_ms)
+        .put("p99_ms", r.p99_ms)
+        .put("mean_ms", r.mean_ms)
+        .put("service_p50_ms", r.service.quantile(0.50) * 1e3)
+        .put("service_p99_ms", r.service.quantile(0.99) * 1e3)
+        .put("max_queue_depth", r.max_queue_depth)
+        .put("per_shard", Value::Arr(shards))
+        .build();
+    let mut text = doc.to_json();
+    text.push('\n');
+    text
 }
 
 /// Nearest-rank percentile over an ascending-sorted slice, `q` in [0, 1].
@@ -341,6 +710,70 @@ mod tests {
             v.req("model").unwrap().req("name").unwrap().as_str(),
             Some("a\"b\\c\n.ckpt#top1")
         );
+    }
+
+    fn gen_models(n: usize) -> Vec<ServableModel> {
+        (0..n)
+            .map(|i| {
+                ServableModel::shallow(
+                    format!("gen{}", i + 1),
+                    i,
+                    init_model(100 + i as u64, 0, 6, 4, 2),
+                    Act::Relu,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sustained_run_meets_ledger_and_swaps() {
+        let cfg = ShardConfig {
+            shards: 2,
+            max_batch: 8,
+            queue_cap: 256,
+            threads: 1,
+            kernel: Some(Kernel::Blocked),
+        };
+        let spec = SustainedSpec {
+            duration_s: 0.4,
+            rate_rps: 800.0,
+            clients: 2,
+            verify: true,
+            seed: 11,
+        };
+        let rep = run_sustained(gen_models(3), cfg, &spec).unwrap();
+        assert_eq!(rep.answered + rep.shed, rep.submitted);
+        assert_eq!(rep.incorrect, 0, "bit-verified responses must match");
+        assert_eq!(rep.swaps, 2);
+        assert_eq!(rep.end_generation, 3);
+        rep.check_slo(10_000.0, 0.5, 2).unwrap();
+        // and the gate actually bites
+        assert!(rep.check_slo(10_000.0, 0.5, 3).is_err(), "min_swaps above actual must fail");
+        assert!(rep.check_slo(0.0, 0.5, 2).is_err(), "impossible p99 budget must fail");
+        let text = render_sustained(&rep);
+        assert!(text.contains("hot-swaps 2"));
+        let doc = sustained_json(&spec, &cfg, &rep);
+        let v = crate::util::json::parse(&doc).unwrap();
+        assert_eq!(v.req("bench").unwrap().as_str(), Some("serve-sustained"));
+        assert_eq!(v.req("swaps").unwrap().as_usize(), Some(2));
+        assert_eq!(v.req("incorrect").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn sustained_verify_requires_bit_exact_kernel() {
+        let cfg = ShardConfig { kernel: None, ..ShardConfig::default() };
+        let spec = SustainedSpec { verify: true, duration_s: 0.1, ..SustainedSpec::default() };
+        let err = run_sustained(gen_models(1), cfg, &spec).unwrap_err().to_string();
+        assert!(err.contains("bit-exact"), "{err}");
+    }
+
+    #[test]
+    fn sustained_rejects_mismatched_generations() {
+        let mut models = gen_models(2);
+        models.push(ServableModel::shallow("wide", 2, init_model(7, 0, 6, 5, 2), Act::Relu));
+        let cfg = ShardConfig { kernel: Some(Kernel::Naive), ..ShardConfig::default() };
+        let spec = SustainedSpec { duration_s: 0.1, ..SustainedSpec::default() };
+        assert!(run_sustained(models, cfg, &spec).is_err());
     }
 
     #[test]

@@ -1,0 +1,577 @@
+//! A minimal zero-dependency HTTP/1.1 JSON front end over the sharded
+//! server — the network face of `pmlp serve`.
+//!
+//! Deliberately small, in the spirit of `data/csv.rs`: a hand-rolled
+//! request parser covering exactly what the API needs (request line,
+//! `Content-Length`, `Connection`), keep-alive by default, one handler
+//! thread per connection with a connection-pinned [`ShardClient`] so
+//! connections spread round-robin over shards and each connection's
+//! requests stay ordered.
+//!
+//! Endpoints:
+//!
+//! * `POST /predict` — body `{"row": [f32; F]}` for one row (reply
+//!   `{"generation": g, "logits": [...]}`) or `{"rows": [[f32; F], …]}`
+//!   for a batch (reply `{"generations": [...], "outputs": [[...], …]}`).
+//!   `503 {"error": "overloaded…"}` when the shard queue sheds the
+//!   request — the caller owns the retry.
+//! * `GET /healthz` — liveness plus the serving generation.
+//! * `GET /stats` — per-shard and HTTP counters.
+//!
+//! Malformed requests get `400`, unknown paths `404`, wrong methods
+//! `405`, and a body beyond `max_body` is refused with `413` *without
+//! reading it*. Shutdown is graceful: the listener stops accepting,
+//! in-flight requests are answered (with `Connection: close`), idle
+//! keep-alive connections are dropped, and [`HttpServer::shutdown`]
+//! blocks until the handlers drain.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::serve::shard::{ShardClient, ShardedServer, SubmitError};
+use crate::util::json::{self, obj, Value};
+
+/// HTTP front-end knobs.
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// bind address (loopback by default; set 0.0.0.0 to expose)
+    pub addr: String,
+    /// TCP port; 0 picks an ephemeral port (tests read it back via
+    /// [`HttpServer::port`])
+    pub port: u16,
+    /// largest accepted request body in bytes; beyond it → 413
+    pub max_body: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig { addr: "127.0.0.1".to_string(), port: 0, max_body: 1 << 20 }
+    }
+}
+
+/// Largest request head (request line + headers) we buffer.
+const MAX_HEAD: usize = 16 * 1024;
+/// Most rows one `POST /predict` may carry.
+const MAX_ROWS: usize = 1024;
+/// Socket read poll interval — how often a blocked reader rechecks the
+/// shutdown flag.
+const POLL: Duration = Duration::from_millis(50);
+/// Polls granted to a half-received request after shutdown begins
+/// (~2 s) before the connection is dropped.
+const SHUTDOWN_GRACE_POLLS: usize = 40;
+
+/// HTTP-layer counters (the serving-layer ones live in
+/// [`ShardedServer::stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HttpStats {
+    /// requests routed (any status)
+    pub requests: usize,
+    /// 4xx responses (malformed / wrong width / unknown path)
+    pub client_errors: usize,
+    /// 503 responses from shed load
+    pub shed: usize,
+}
+
+struct HttpShared {
+    engine: Arc<ShardedServer>,
+    shutdown: AtomicBool,
+    /// in-flight connection handlers; shutdown waits for 0
+    active: Mutex<usize>,
+    drained: Condvar,
+    requests: AtomicUsize,
+    client_errors: AtomicUsize,
+    shed: AtomicUsize,
+    max_body: usize,
+}
+
+/// A running HTTP front end. Dropping (or [`HttpServer::shutdown`])
+/// stops the listener and drains in-flight connections.
+pub struct HttpServer {
+    shared: Arc<HttpShared>,
+    local: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    pub fn start(engine: Arc<ShardedServer>, cfg: HttpConfig) -> anyhow::Result<HttpServer> {
+        anyhow::ensure!(cfg.max_body >= 1, "max_body must be >= 1");
+        let listener = TcpListener::bind((cfg.addr.as_str(), cfg.port))?;
+        let local = listener.local_addr()?;
+        let shared = Arc::new(HttpShared {
+            engine,
+            shutdown: AtomicBool::new(false),
+            active: Mutex::new(0),
+            drained: Condvar::new(),
+            requests: AtomicUsize::new(0),
+            client_errors: AtomicUsize::new(0),
+            shed: AtomicUsize::new(0),
+            max_body: cfg.max_body,
+        });
+        let accept = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("pmlp-http-accept".to_string())
+                .spawn(move || accept_loop(&listener, &shared))?
+        };
+        log::info!("serve: http listening on {local}");
+        Ok(HttpServer { shared, local, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves the ephemeral port when `port: 0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    pub fn port(&self) -> u16 {
+        self.local.port()
+    }
+
+    pub fn stats(&self) -> HttpStats {
+        HttpStats {
+            requests: self.shared.requests.load(Ordering::Relaxed),
+            client_errors: self.shared.client_errors.load(Ordering::Relaxed),
+            shed: self.shared.shed.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop accepting, answer every in-flight request, join the
+    /// listener and report final counters. Bounded wait (~10 s) on
+    /// handler drain so a wedged peer cannot hang shutdown forever.
+    pub fn shutdown(mut self) -> HttpStats {
+        self.finish();
+        self.stats()
+    }
+
+    fn finish(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        // wake the blocking accept() so it observes the flag
+        let _ = TcpStream::connect(self.local);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut active = self.shared.active.lock().unwrap();
+        while *active > 0 && Instant::now() < deadline {
+            let (guard, _) = self
+                .shared
+                .drained
+                .wait_timeout(active, Duration::from_millis(100))
+                .unwrap();
+            active = guard;
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, shared: &Arc<HttpShared>) {
+    for conn in listener.incoming() {
+        if shared.shutdown.load(Ordering::Acquire) {
+            return; // the shutdown wake-up connection lands here
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        // count before spawning so the shutdown drain-wait sees it
+        *shared.active.lock().unwrap() += 1;
+        let shared2 = shared.clone();
+        let spawned = std::thread::Builder::new()
+            .name("pmlp-http-conn".to_string())
+            .spawn(move || {
+                handle_conn(&shared2, stream);
+                let mut active = shared2.active.lock().unwrap();
+                *active -= 1;
+                if *active == 0 {
+                    shared2.drained.notify_all();
+                }
+            });
+        if spawned.is_err() {
+            *shared.active.lock().unwrap() -= 1;
+        }
+    }
+}
+
+fn handle_conn(shared: &Arc<HttpShared>, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(POLL)).is_err() {
+        return;
+    }
+    // connection-pinned client: requests on one connection stay ordered
+    // on one shard; connections spread round-robin over the shards
+    let client = shared.engine.client();
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        // ---- read up to the blank line ending the head ----
+        let head_end = match read_until_head_end(shared, &mut stream, &mut buf) {
+            ReadOutcome::Got(pos) => pos,
+            ReadOutcome::Close => return,
+            ReadOutcome::TooLarge => {
+                respond(&mut stream, 431, &err_body("request head too large"), true);
+                return;
+            }
+        };
+        let head = match std::str::from_utf8(&buf[..head_end]) {
+            Ok(s) => s.to_string(),
+            Err(_) => {
+                shared.client_errors.fetch_add(1, Ordering::Relaxed);
+                respond(&mut stream, 400, &err_body("request head is not UTF-8"), true);
+                return;
+            }
+        };
+        buf.drain(..head_end + 4); // head + the \r\n\r\n terminator
+
+        // ---- request line + the two headers the API speaks ----
+        let mut lines = head.split("\r\n");
+        let request_line = lines.next().unwrap_or("");
+        let mut parts = request_line.split(' ');
+        let (method, target) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(t), Some(v), None)
+                if !m.is_empty() && t.starts_with('/') && v.starts_with("HTTP/1.") =>
+            {
+                (m.to_string(), t.to_string())
+            }
+            _ => {
+                shared.client_errors.fetch_add(1, Ordering::Relaxed);
+                respond(&mut stream, 400, &err_body("malformed request line"), true);
+                return;
+            }
+        };
+        let mut content_length: usize = 0;
+        let mut want_close = false;
+        let mut bad_header = false;
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once(':') else {
+                bad_header = true;
+                break;
+            };
+            let key = k.trim().to_ascii_lowercase();
+            let val = v.trim();
+            if key == "content-length" {
+                match val.parse::<usize>() {
+                    Ok(n) => content_length = n,
+                    Err(_) => {
+                        bad_header = true;
+                        break;
+                    }
+                }
+            } else if key == "connection" && val.eq_ignore_ascii_case("close") {
+                want_close = true;
+            }
+        }
+        if bad_header {
+            shared.client_errors.fetch_add(1, Ordering::Relaxed);
+            respond(&mut stream, 400, &err_body("malformed header"), true);
+            return;
+        }
+        if content_length > shared.max_body {
+            // refuse before reading a single body byte
+            shared.client_errors.fetch_add(1, Ordering::Relaxed);
+            let msg = format!("body of {content_length} B exceeds max_body {} B", shared.max_body);
+            respond(&mut stream, 413, &err_body(&msg), true);
+            return;
+        }
+
+        // ---- body ----
+        match read_exact_len(shared, &mut stream, &mut buf, content_length) {
+            ReadOutcome::Got(_) => {}
+            ReadOutcome::Close | ReadOutcome::TooLarge => return,
+        }
+        let body_bytes: Vec<u8> = buf.drain(..content_length).collect();
+
+        // ---- route ----
+        shared.requests.fetch_add(1, Ordering::Relaxed);
+        let path = target.split('?').next().unwrap_or("").to_string();
+        let (status, body) = match std::str::from_utf8(&body_bytes) {
+            Ok(body_str) => route(shared, &client, &method, &path, body_str),
+            Err(_) => (400, err_body("body is not UTF-8")),
+        };
+        if (400..500).contains(&status) {
+            shared.client_errors.fetch_add(1, Ordering::Relaxed);
+        }
+        let shutting = shared.shutdown.load(Ordering::Acquire);
+        let close = want_close || shutting;
+        respond(&mut stream, status, &body, close);
+        if close {
+            return;
+        }
+    }
+}
+
+enum ReadOutcome {
+    /// head: byte offset of `\r\n\r\n`; body: the requested length
+    Got(usize),
+    Close,
+    TooLarge,
+}
+
+fn read_until_head_end(
+    shared: &HttpShared,
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+) -> ReadOutcome {
+    let mut grace = SHUTDOWN_GRACE_POLLS;
+    loop {
+        if let Some(pos) = find_head_end(buf) {
+            return ReadOutcome::Got(pos);
+        }
+        if buf.len() > MAX_HEAD {
+            return ReadOutcome::TooLarge;
+        }
+        match poll_read(shared, stream, buf, &mut grace, buf.is_empty()) {
+            PollRead::More => {}
+            PollRead::Close => return ReadOutcome::Close,
+        }
+    }
+}
+
+fn read_exact_len(
+    shared: &HttpShared,
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    len: usize,
+) -> ReadOutcome {
+    let mut grace = SHUTDOWN_GRACE_POLLS;
+    loop {
+        if buf.len() >= len {
+            return ReadOutcome::Got(len);
+        }
+        // a half-sent body is never "idle": always use the grace window
+        match poll_read(shared, stream, buf, &mut grace, false) {
+            PollRead::More => {}
+            PollRead::Close => return ReadOutcome::Close,
+        }
+    }
+}
+
+enum PollRead {
+    More,
+    Close,
+}
+
+/// One timeout-bounded read. `idle` marks a connection with no bytes of
+/// the next request yet — droppable immediately on shutdown, while a
+/// half-received request gets the grace window to finish arriving.
+fn poll_read(
+    shared: &HttpShared,
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    grace: &mut usize,
+    idle: bool,
+) -> PollRead {
+    let mut chunk = [0u8; 4096];
+    match stream.read(&mut chunk) {
+        Ok(0) => PollRead::Close, // peer closed
+        Ok(n) => {
+            buf.extend_from_slice(&chunk[..n]);
+            PollRead::More
+        }
+        Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+            if shared.shutdown.load(Ordering::Acquire) {
+                if idle {
+                    return PollRead::Close;
+                }
+                *grace -= 1;
+                if *grace == 0 {
+                    return PollRead::Close;
+                }
+            }
+            PollRead::More
+        }
+        Err(_) => PollRead::Close,
+    }
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn route(
+    shared: &HttpShared,
+    client: &ShardClient,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> (u16, String) {
+    match (method, path) {
+        ("GET", "/healthz") => (200, health_json(shared)),
+        ("GET", "/stats") => (200, stats_json(shared)),
+        ("POST", "/predict") => predict(shared, client, body),
+        (_, "/healthz" | "/stats" | "/predict") => (405, err_body("method not allowed")),
+        _ => (404, err_body("no such endpoint")),
+    }
+}
+
+fn health_json(shared: &HttpShared) -> String {
+    let (generation, model) = shared.engine.slot().load();
+    obj()
+        .put("status", "ok")
+        .put("model", model.name.as_str())
+        .put("generation", generation)
+        .put("shards", shared.engine.n_shards())
+        .put("features", shared.engine.features())
+        .build()
+        .to_json()
+}
+
+fn stats_json(shared: &HttpShared) -> String {
+    let shards: Vec<Value> = shared
+        .engine
+        .stats()
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            obj()
+                .put("shard", i)
+                .put("rows", s.rows)
+                .put("batches", s.batches)
+                .put("shed", s.shed)
+                .put("max_batch_seen", s.max_batch_seen)
+                .put("max_depth_seen", s.max_depth_seen)
+                .build()
+        })
+        .collect();
+    obj()
+        .put("generation", shared.engine.generation())
+        .put("queue_depths", shared.engine.queue_depths())
+        .put("shards", Value::Arr(shards))
+        .put(
+            "http",
+            obj()
+                .put("requests", shared.requests.load(Ordering::Relaxed))
+                .put("client_errors", shared.client_errors.load(Ordering::Relaxed))
+                .put("shed", shared.shed.load(Ordering::Relaxed))
+                .build(),
+        )
+        .build()
+        .to_json()
+}
+
+fn predict(shared: &HttpShared, client: &ShardClient, body: &str) -> (u16, String) {
+    let val = match json::parse(body) {
+        Ok(v) => v,
+        Err(e) => return (400, err_body(&format!("invalid JSON: {e}"))),
+    };
+    let (rows, single) = if let Some(r) = val.get("row") {
+        match parse_row(r) {
+            Ok(row) => (vec![row], true),
+            Err(msg) => return (400, err_body(&msg)),
+        }
+    } else if let Some(rs) = val.get("rows") {
+        let Some(arr) = rs.as_arr() else {
+            return (400, err_body("\"rows\" must be an array of number arrays"));
+        };
+        if arr.is_empty() {
+            return (400, err_body("\"rows\" is empty"));
+        }
+        if arr.len() > MAX_ROWS {
+            return (400, err_body(&format!("{} rows exceeds the {MAX_ROWS}-row cap", arr.len())));
+        }
+        let mut rows = Vec::with_capacity(arr.len());
+        for r in arr {
+            match parse_row(r) {
+                Ok(row) => rows.push(row),
+                Err(msg) => return (400, err_body(&msg)),
+            }
+        }
+        (rows, false)
+    } else {
+        return (400, err_body("body must carry \"row\" or \"rows\""));
+    };
+
+    // submit the whole request before waiting: one queue, order kept
+    let mut tickets = Vec::with_capacity(rows.len());
+    for row in &rows {
+        match client.submit(row) {
+            Ok(t) => tickets.push(t),
+            Err(SubmitError::Overloaded { shard, .. }) => {
+                // rows already accepted still get served; their tickets
+                // are simply dropped with the refused request
+                shared.shed.fetch_add(1, Ordering::Relaxed);
+                return (503, err_body(&format!("overloaded (shard {shard}); retry later")));
+            }
+            Err(SubmitError::WrongWidth { got, want }) => {
+                return (400, err_body(&format!("row has {got} features, model expects {want}")));
+            }
+            Err(SubmitError::ShutDown) => return (503, err_body("shutting down")),
+        }
+    }
+    let mut generations: Vec<u64> = Vec::with_capacity(tickets.len());
+    let mut outputs: Vec<Vec<f32>> = Vec::with_capacity(tickets.len());
+    for t in tickets {
+        match t.wait() {
+            Ok(p) => {
+                generations.push(p.generation);
+                outputs.push(p.logits);
+            }
+            Err(_) => return (503, err_body("shutting down")),
+        }
+    }
+    if single {
+        let body = obj()
+            .put("generation", generations[0])
+            .put("logits", outputs.swap_remove(0))
+            .build()
+            .to_json();
+        (200, body)
+    } else {
+        let body = obj()
+            .put("generations", generations)
+            .put("outputs", outputs)
+            .build()
+            .to_json();
+        (200, body)
+    }
+}
+
+fn parse_row(v: &Value) -> Result<Vec<f32>, String> {
+    let Some(arr) = v.as_arr() else {
+        return Err("a row must be an array of numbers".to_string());
+    };
+    let mut row = Vec::with_capacity(arr.len());
+    for x in arr {
+        match x.as_f64() {
+            Some(n) => row.push(n as f32),
+            None => return Err("a row must contain only numbers".to_string()),
+        }
+    }
+    Ok(row)
+}
+
+fn err_body(msg: &str) -> String {
+    obj().put("error", msg).build().to_json()
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        503 => "Service Unavailable",
+        _ => "Error",
+    }
+}
+
+fn respond(stream: &mut TcpStream, status: u16, body: &str, close: bool) {
+    let conn = if close { "close" } else { "keep-alive" };
+    let msg = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {conn}\r\n\r\n{body}",
+        reason(status),
+        body.len()
+    );
+    let _ = stream.write_all(msg.as_bytes());
+}

@@ -10,11 +10,26 @@
 //!   coalesces single-row predict requests into one `[B, F]` fused
 //!   forward: the serving-side version of the paper's "bigger matrices →
 //!   better locality" argument.
+//! * [`ShardedServer`] (`shard`) — serving v2: N independent batcher
+//!   shards with client-hashed routing, bounded queues that *shed* load
+//!   (typed [`SubmitError::Overloaded`]) instead of blocking, and
+//!   zero-downtime checkpoint hot-swap through a [`ModelSlot`]
+//!   (generation-tagged replies, never a torn read).
+//! * [`HttpServer`] (`http`) — a minimal zero-dep HTTP/1.1 JSON front
+//!   end over the shards: `POST /predict`, `GET /healthz`, `GET /stats`.
 //! * `bench` — an offline load generator reporting rows/s and p50/p99
-//!   latency for micro-batched vs. per-row dispatch.
+//!   latency for micro-batched vs. per-row dispatch, plus a sustained
+//!   open-loop harness measuring throughput/p99 under periodic hot-swap
+//!   with an SLO gate (`check_slo`) CI asserts.
 pub mod batcher;
 pub mod bench;
+pub mod http;
 pub mod registry;
+pub mod shard;
 
 pub use batcher::{Client, ServeConfig, ServeStats, Server, Ticket};
-pub use registry::{ModelRegistry, ServableModel};
+pub use http::{HttpConfig, HttpServer, HttpStats};
+pub use registry::{ModelRegistry, ModelSlot, ServableModel, SlotReader};
+pub use shard::{
+    Prediction, ShardClient, ShardConfig, ShardStats, ShardTicket, ShardedServer, SubmitError,
+};

@@ -9,7 +9,8 @@
 //! `pool/top2`, ...).
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::io::checkpoint::PoolCheckpoint;
 use crate::nn::act::Act;
@@ -167,6 +168,103 @@ impl ModelRegistry {
     }
 }
 
+/// The hot-swappable model cell the sharded server reads through.
+///
+/// A promotion replaces the whole `Arc<ServableModel>` under the slot
+/// mutex and *then* bumps the generation counter, so readers that cache
+/// `(generation, Arc)` pairs get atomicity for free: the published
+/// generation never runs ahead of the published weights, and a cloned
+/// `Arc` is immutable — a request served from one snapshot sees
+/// entirely-old or entirely-new weights, never a mix. The hot path
+/// (`SlotReader::current`) costs one `Acquire` load per batch; the
+/// mutex is touched only when the generation actually changed.
+///
+/// Generations start at 1 and increase by 1 per successful promotion.
+#[derive(Debug)]
+pub struct ModelSlot {
+    current: Mutex<Arc<ServableModel>>,
+    generation: AtomicU64,
+}
+
+impl ModelSlot {
+    pub fn new(model: ServableModel) -> Arc<ModelSlot> {
+        Arc::new(ModelSlot {
+            current: Mutex::new(Arc::new(model)),
+            generation: AtomicU64::new(1),
+        })
+    }
+
+    /// The generation of the most recently promoted model.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    /// A consistent `(generation, model)` snapshot. Both reads happen
+    /// under the slot mutex, so the pair can never be torn by a
+    /// concurrent [`ModelSlot::promote`].
+    pub fn load(&self) -> (u64, Arc<ServableModel>) {
+        let cur = self.current.lock().unwrap();
+        let gen = self.generation.load(Ordering::Acquire);
+        (gen, cur.clone())
+    }
+
+    /// Promote a new checkpoint into the slot mid-traffic. The
+    /// replacement must keep the wire contract: same input features and
+    /// output width as the incumbent (clients keep their row widths).
+    /// Returns the new generation.
+    pub fn promote(&self, model: ServableModel) -> anyhow::Result<u64> {
+        let mut cur = self.current.lock().unwrap();
+        anyhow::ensure!(
+            model.features() == cur.features() && model.out() == cur.out(),
+            "promotion of {:?} changes the wire contract: {}x{} -> {}x{} (features x out)",
+            model.name,
+            cur.features(),
+            cur.out(),
+            model.features(),
+            model.out()
+        );
+        let name = model.name.clone();
+        *cur = Arc::new(model);
+        // bump *after* the weights are published, still under the lock
+        let gen = self.generation.fetch_add(1, Ordering::AcqRel) + 1;
+        drop(cur);
+        let mut span = crate::obs::trace::span("serve.swap");
+        span.field("generation", gen as f64);
+        span.end();
+        crate::obs::trace::counter("serve.swaps", 1.0);
+        log::info!("serve: promoted {name:?} as generation {gen}");
+        Ok(gen)
+    }
+}
+
+/// A per-worker cached view of a [`ModelSlot`]: one atomic generation
+/// check per call, re-reading the slot (mutex) only on an actual swap.
+#[derive(Debug)]
+pub struct SlotReader {
+    slot: Arc<ModelSlot>,
+    gen: u64,
+    model: Arc<ServableModel>,
+}
+
+impl SlotReader {
+    pub fn new(slot: Arc<ModelSlot>) -> SlotReader {
+        let (gen, model) = slot.load();
+        SlotReader { slot, gen, model }
+    }
+
+    /// The freshest `(generation, model)` pair. A swap that lands after
+    /// the generation check is picked up on the next call — each caller
+    /// batch is served from exactly one snapshot.
+    pub fn current(&mut self) -> (u64, &Arc<ServableModel>) {
+        if self.slot.generation() != self.gen {
+            let (gen, model) = self.slot.load();
+            self.gen = gen;
+            self.model = model;
+        }
+        (self.gen, &self.model)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -265,5 +363,38 @@ mod tests {
         let x = Tensor::zeros(&[7, 3]);
         let y = model.predict(&x, 1);
         assert_eq!(y.shape(), &[7, 2]);
+    }
+
+    fn servable(seed: u64, features: usize, out: usize) -> ServableModel {
+        ServableModel::shallow("m", 0, init_model(seed, 0, 3, features, out), Act::Relu)
+    }
+
+    #[test]
+    fn slot_promote_bumps_generation_and_reader_tracks() {
+        let slot = ModelSlot::new(servable(1, 4, 2));
+        assert_eq!(slot.generation(), 1);
+        let mut reader = SlotReader::new(slot.clone());
+        let (g0, m0) = reader.current();
+        assert_eq!(g0, 1);
+        let w0 = m0.params.layers[0].w.data()[0];
+
+        let gen = slot.promote(servable(2, 4, 2)).unwrap();
+        assert_eq!(gen, 2);
+        let (g1, m1) = reader.current();
+        assert_eq!(g1, 2);
+        // different seed -> different weights: the reader really swapped
+        assert_ne!(w0.to_bits(), m1.params.layers[0].w.data()[0].to_bits());
+    }
+
+    #[test]
+    fn slot_promote_rejects_wire_contract_changes() {
+        let slot = ModelSlot::new(servable(1, 4, 2));
+        assert!(slot.promote(servable(2, 5, 2)).is_err(), "features must match");
+        assert!(slot.promote(servable(2, 4, 3)).is_err(), "out width must match");
+        // a failed promotion must not bump the generation
+        assert_eq!(slot.generation(), 1);
+        let (gen, model) = slot.load();
+        assert_eq!(gen, 1);
+        assert_eq!(model.features(), 4);
     }
 }

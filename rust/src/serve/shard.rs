@@ -1,0 +1,599 @@
+//! The sharded serving engine: N independent micro-batch workers, each
+//! owning a bounded request queue, reading the model through a
+//! hot-swappable [`ModelSlot`].
+//!
+//! The paper's independence property (§2) makes serving embarrassingly
+//! shardable: every prediction is one row·weight product with no
+//! cross-request state, so shards never need to talk to each other.
+//! Three deliberate policies:
+//!
+//! * **Client-hashed routing.** Each [`ShardClient`] is pinned to one
+//!   shard (round-robin at `client()` time), so a client's requests are
+//!   answered in submission order and there is no cross-shard
+//!   coordination on the hot path.
+//! * **Shed, don't block.** Queues are bounded and `submit` on a full
+//!   queue returns [`SubmitError::Overloaded`] immediately instead of
+//!   blocking the caller — admission control happens at the edge, and a
+//!   slow consumer cannot wedge the fleet. (Contrast with the
+//!   single-worker [`super::Server`], whose submitters block on
+//!   `not_full`.) Every *accepted* request is answered, including
+//!   through shutdown, which drains the queues before joining.
+//! * **Swap-tolerant reads.** Workers read the model via a
+//!   [`SlotReader`]: one atomic generation check per coalesced batch,
+//!   the slot mutex touched only when a promotion actually landed. A
+//!   batch is served from exactly one `(generation, Arc)` snapshot, so
+//!   no response ever mixes weights from two checkpoints; replies carry
+//!   the generation they were computed under so callers can verify.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::metrics::Histogram;
+use crate::obs::trace;
+use crate::serve::registry::{ModelSlot, ServableModel, SlotReader};
+use crate::tensor::kernels::{Kernel, KernelConfig};
+use crate::tensor::Tensor;
+
+/// Sharded-serving knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardConfig {
+    /// worker shards (each owns one queue + one thread)
+    pub shards: usize,
+    /// largest coalesced batch one fused forward serves
+    pub max_batch: usize,
+    /// bounded per-shard queue: a full queue sheds load (`Overloaded`)
+    pub queue_cap: usize,
+    /// threads for each shard's coalesced matmul (keep 1 unless shards
+    /// are few and batches large; shards already use one core each)
+    pub threads: usize,
+    /// pin the matmul kernel; `None` uses the process-wide
+    /// [`crate::tensor::kernels::active`] config. Tests pin `Naive` /
+    /// `Blocked` (the bit-exact tier) to prove shard-count invariance.
+    pub kernel: Option<Kernel>,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig { shards: 4, max_batch: 64, queue_cap: 1024, threads: 1, kernel: None }
+    }
+}
+
+impl ShardConfig {
+    /// The resolved matmul config workers dispatch through (the bench
+    /// harness recomputes expected logits under the same config).
+    pub fn kernel_config(&self) -> KernelConfig {
+        let active = crate::tensor::kernels::active();
+        match self.kernel {
+            None => active,
+            Some(k) => active.with_kernel(k),
+        }
+    }
+}
+
+/// Why a submission was refused. `Overloaded` is the load-shedding
+/// signal: the shard's bounded queue is full *right now*; the caller
+/// should back off or retry elsewhere, and the request cost nothing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// the target shard's queue is at capacity — request shed
+    Overloaded { shard: usize, queue_cap: usize },
+    /// request width does not match the model's feature count
+    WrongWidth { got: usize, want: usize },
+    /// the server is shutting down (or already gone)
+    ShutDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded { shard, queue_cap } => {
+                write!(f, "shard {shard} overloaded (queue at capacity {queue_cap}); request shed")
+            }
+            SubmitError::WrongWidth { got, want } => {
+                write!(f, "request has {got} features, model expects {want}")
+            }
+            SubmitError::ShutDown => write!(f, "server is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// One answered request: the logits plus the checkpoint generation they
+/// were computed under (see [`ModelSlot`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Prediction {
+    pub generation: u64,
+    pub logits: Vec<f32>,
+}
+
+struct Request {
+    row: Vec<f32>,
+    tx: mpsc::Sender<Prediction>,
+}
+
+struct ShardInner {
+    queue: VecDeque<Request>,
+    shutdown: bool,
+}
+
+struct Shard {
+    inner: Mutex<ShardInner>,
+    not_empty: Condvar,
+    /// live queue depth mirror, readable without the queue lock
+    depth: AtomicUsize,
+    rows: AtomicUsize,
+    batches: AtomicUsize,
+    shed: AtomicUsize,
+    max_batch_seen: AtomicUsize,
+    max_depth_seen: AtomicUsize,
+    /// per-batch service time (seconds), coalesce → answers delivered
+    service: Mutex<Histogram>,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            inner: Mutex::new(ShardInner { queue: VecDeque::new(), shutdown: false }),
+            not_empty: Condvar::new(),
+            depth: AtomicUsize::new(0),
+            rows: AtomicUsize::new(0),
+            batches: AtomicUsize::new(0),
+            shed: AtomicUsize::new(0),
+            max_batch_seen: AtomicUsize::new(0),
+            max_depth_seen: AtomicUsize::new(0),
+            service: Mutex::new(Histogram::new()),
+        }
+    }
+}
+
+/// Per-shard counters (also the shape of [`ShardedServer::totals`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardStats {
+    /// rows served (answered) by this shard
+    pub rows: usize,
+    /// coalesced batches executed
+    pub batches: usize,
+    /// submissions refused with `Overloaded`
+    pub shed: usize,
+    /// largest coalesced batch actually executed
+    pub max_batch_seen: usize,
+    /// deepest the bounded queue ever got
+    pub max_depth_seen: usize,
+}
+
+impl ShardStats {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.rows as f64 / self.batches as f64
+        }
+    }
+}
+
+/// The start gate: workers block here before their first batch so tests
+/// can fill a bounded queue deterministically, then release.
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn wait_open(&self) {
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+    }
+
+    fn release(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}
+
+/// A running sharded server. Dropping (or [`ShardedServer::shutdown`])
+/// refuses new submissions, drains every accepted request, then joins
+/// the workers.
+pub struct ShardedServer {
+    shards: Vec<Arc<Shard>>,
+    slot: Arc<ModelSlot>,
+    features: usize,
+    queue_cap: usize,
+    next_client: AtomicUsize,
+    gate: Arc<Gate>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// A cheap, cloneable submitter pinned to one shard.
+#[derive(Clone)]
+pub struct ShardClient {
+    shard: Arc<Shard>,
+    shard_idx: usize,
+    features: usize,
+    queue_cap: usize,
+}
+
+/// An in-flight prediction; [`ShardTicket::wait`] blocks for the answer.
+pub struct ShardTicket {
+    rx: mpsc::Receiver<Prediction>,
+}
+
+impl ShardTicket {
+    pub fn wait(self) -> Result<Prediction, SubmitError> {
+        self.rx.recv().map_err(|_| SubmitError::ShutDown)
+    }
+}
+
+impl ShardedServer {
+    /// Start with workers running (the normal path).
+    pub fn start(slot: Arc<ModelSlot>, cfg: ShardConfig) -> anyhow::Result<ShardedServer> {
+        let server = ShardedServer::start_held(slot, cfg)?;
+        server.release();
+        Ok(server)
+    }
+
+    /// Start with workers parked at the gate: submissions are accepted
+    /// (and shed once queues fill) but nothing is served until
+    /// [`ShardedServer::release`]. Tests use this to pin shed-load and
+    /// drain semantics deterministically.
+    pub fn start_held(slot: Arc<ModelSlot>, cfg: ShardConfig) -> anyhow::Result<ShardedServer> {
+        anyhow::ensure!(cfg.shards >= 1, "shards must be >= 1");
+        anyhow::ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        anyhow::ensure!(cfg.queue_cap >= 1, "queue_cap must be >= 1");
+        let threads = if cfg.threads == 0 {
+            crate::util::threadpool::num_threads()
+        } else {
+            cfg.threads
+        };
+        let kcfg = cfg.kernel_config();
+        let features = slot.load().1.features();
+        let gate = Arc::new(Gate { open: Mutex::new(false), cv: Condvar::new() });
+        let shards: Vec<Arc<Shard>> = (0..cfg.shards).map(|_| Arc::new(Shard::new())).collect();
+        let mut workers = Vec::with_capacity(cfg.shards);
+        for (idx, shard) in shards.iter().enumerate() {
+            let shard = shard.clone();
+            let reader = SlotReader::new(slot.clone());
+            let gate = gate.clone();
+            let max_batch = cfg.max_batch;
+            let handle = std::thread::Builder::new()
+                .name(format!("pmlp-shard-{idx}"))
+                .spawn(move || {
+                    gate.wait_open();
+                    shard_loop(idx, &shard, reader, kcfg, features, max_batch, threads);
+                })?;
+            workers.push(handle);
+        }
+        Ok(ShardedServer {
+            shards,
+            slot,
+            features,
+            queue_cap: cfg.queue_cap,
+            next_client: AtomicUsize::new(0),
+            gate,
+            workers,
+        })
+    }
+
+    /// Open the start gate (idempotent). No-op after [`start`].
+    pub fn release(&self) {
+        self.gate.release();
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn features(&self) -> usize {
+        self.features
+    }
+
+    /// The slot this server reads through (for promotions from outside).
+    pub fn slot(&self) -> &Arc<ModelSlot> {
+        &self.slot
+    }
+
+    /// The generation currently being served.
+    pub fn generation(&self) -> u64 {
+        self.slot.generation()
+    }
+
+    /// Promote a new checkpoint mid-traffic (see [`ModelSlot::promote`]).
+    pub fn promote(&self, model: ServableModel) -> anyhow::Result<u64> {
+        self.slot.promote(model)
+    }
+
+    /// A client pinned to the next shard round-robin. Connection-per-
+    /// client callers get an even spread; a client's own requests stay
+    /// ordered on its shard.
+    pub fn client(&self) -> ShardClient {
+        let idx = self.next_client.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        self.client_for(idx)
+    }
+
+    /// A client pinned to an explicit shard (tests target one queue).
+    pub fn client_for(&self, shard_idx: usize) -> ShardClient {
+        assert!(shard_idx < self.shards.len(), "shard {shard_idx} out of range");
+        ShardClient {
+            shard: self.shards[shard_idx].clone(),
+            shard_idx,
+            features: self.features,
+            queue_cap: self.queue_cap,
+        }
+    }
+
+    /// Live queue depths, one per shard (the gauge the sustained-load
+    /// harness samples).
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.depth.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Per-shard counters, indexed by shard id.
+    pub fn stats(&self) -> Vec<ShardStats> {
+        self.shards
+            .iter()
+            .map(|s| ShardStats {
+                rows: s.rows.load(Ordering::Relaxed),
+                batches: s.batches.load(Ordering::Relaxed),
+                shed: s.shed.load(Ordering::Relaxed),
+                max_batch_seen: s.max_batch_seen.load(Ordering::Relaxed),
+                max_depth_seen: s.max_depth_seen.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// Fleet totals: sums for the counters, maxes for the high-water
+    /// marks.
+    pub fn totals(&self) -> ShardStats {
+        let mut t = ShardStats::default();
+        for s in self.stats() {
+            t.rows += s.rows;
+            t.batches += s.batches;
+            t.shed += s.shed;
+            t.max_batch_seen = t.max_batch_seen.max(s.max_batch_seen);
+            t.max_depth_seen = t.max_depth_seen.max(s.max_depth_seen);
+        }
+        t
+    }
+
+    /// Merged per-batch service-time histogram across all shards.
+    pub fn service_latency(&self) -> Histogram {
+        let mut merged = Histogram::new();
+        for s in &self.shards {
+            merged.merge(&s.service.lock().unwrap());
+        }
+        merged
+    }
+
+    /// Refuse new submissions, answer everything already accepted, join
+    /// the workers and report the final totals.
+    pub fn shutdown(mut self) -> (ShardStats, Histogram) {
+        self.finish();
+        (self.totals(), self.service_latency())
+    }
+
+    fn finish(&mut self) {
+        for s in &self.shards {
+            s.inner.lock().unwrap().shutdown = true;
+            s.not_empty.notify_all();
+        }
+        // workers parked at the gate must still observe shutdown
+        self.gate.release();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ShardedServer {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+impl ShardClient {
+    /// Which shard this client is pinned to.
+    pub fn shard(&self) -> usize {
+        self.shard_idx
+    }
+
+    /// Enqueue one row. Never blocks: a full queue sheds the request
+    /// with [`SubmitError::Overloaded`] and the caller owns the retry
+    /// policy. An `Ok` is a promise — every accepted request is
+    /// answered, even through shutdown.
+    pub fn submit(&self, row: &[f32]) -> Result<ShardTicket, SubmitError> {
+        if row.len() != self.features {
+            return Err(SubmitError::WrongWidth { got: row.len(), want: self.features });
+        }
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut inner = self.shard.inner.lock().unwrap();
+            if inner.shutdown {
+                return Err(SubmitError::ShutDown);
+            }
+            if inner.queue.len() >= self.queue_cap {
+                drop(inner);
+                self.shard.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::Overloaded {
+                    shard: self.shard_idx,
+                    queue_cap: self.queue_cap,
+                });
+            }
+            inner.queue.push_back(Request { row: row.to_vec(), tx });
+            let depth = inner.queue.len();
+            self.shard.depth.store(depth, Ordering::Relaxed);
+            self.shard.max_depth_seen.fetch_max(depth, Ordering::Relaxed);
+        }
+        self.shard.not_empty.notify_one();
+        Ok(ShardTicket { rx })
+    }
+
+    /// Synchronous predict: submit one row and wait for its answer.
+    pub fn predict(&self, row: &[f32]) -> Result<Prediction, SubmitError> {
+        self.submit(row)?.wait()
+    }
+}
+
+fn shard_loop(
+    idx: usize,
+    shard: &Shard,
+    mut reader: SlotReader,
+    kcfg: KernelConfig,
+    features: usize,
+    max_batch: usize,
+    threads: usize,
+) {
+    loop {
+        let mut batch: Vec<Request> = Vec::with_capacity(max_batch);
+        {
+            let mut inner = shard.inner.lock().unwrap();
+            while inner.queue.is_empty() {
+                if inner.shutdown {
+                    shard.depth.store(0, Ordering::Relaxed);
+                    return; // queue drained, nothing can arrive anymore
+                }
+                inner = shard.not_empty.wait(inner).unwrap();
+            }
+            while batch.len() < max_batch {
+                match inner.queue.pop_front() {
+                    Some(r) => batch.push(r),
+                    None => break,
+                }
+            }
+            shard.depth.store(inner.queue.len(), Ordering::Relaxed);
+        }
+
+        // one snapshot serves the whole coalesced batch: the no-torn-
+        // reads guarantee is this line plus Arc immutability
+        let (generation, model) = reader.current();
+        let b = batch.len();
+        let t0 = Instant::now();
+        let mut sp = trace::span("serve.batch");
+        let mut x = Tensor::zeros(&[b, features]);
+        for (i, r) in batch.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(&r.row);
+        }
+        let logits = model.predict_with(kcfg, &x, threads);
+
+        shard.rows.fetch_add(b, Ordering::Relaxed);
+        shard.batches.fetch_add(1, Ordering::Relaxed);
+        shard.max_batch_seen.fetch_max(b, Ordering::Relaxed);
+        for (i, r) in batch.into_iter().enumerate() {
+            // a requester that dropped its ticket is not an error
+            let _ = r.tx.send(Prediction { generation, logits: logits.row(i).to_vec() });
+        }
+        sp.field("shard", idx);
+        sp.field("rows", b);
+        sp.field("generation", generation as f64);
+        sp.end();
+        if trace::enabled() {
+            let depth = shard.depth.load(Ordering::Relaxed) as f64;
+            trace::gauge(&format!("serve.shard{idx}.depth"), depth);
+        }
+        shard.service.lock().unwrap().record(t0.elapsed().as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::act::Act;
+    use crate::nn::init::init_model;
+
+    fn toy_slot() -> Arc<ModelSlot> {
+        ModelSlot::new(ServableModel::shallow("toy", 0, init_model(1, 0, 4, 3, 2), Act::Tanh))
+    }
+
+    #[test]
+    fn predict_round_trip_across_shards() {
+        let server = ShardedServer::start(toy_slot(), ShardConfig::default()).unwrap();
+        assert_eq!(server.n_shards(), 4);
+        // 8 clients round-robin over 4 shards; all answer
+        for i in 0..8 {
+            let c = server.client();
+            assert_eq!(c.shard(), i % 4);
+            let p = c.predict(&[i as f32, 0.5, -1.0]).unwrap();
+            assert_eq!(p.generation, 1);
+            assert_eq!(p.logits.len(), 2);
+        }
+        let (totals, hist) = server.shutdown();
+        assert_eq!(totals.rows, 8);
+        assert_eq!(totals.shed, 0);
+        assert_eq!(hist.count(), totals.batches as u64);
+    }
+
+    #[test]
+    fn wrong_width_is_typed() {
+        let server = ShardedServer::start(toy_slot(), ShardConfig::default()).unwrap();
+        let err = server.client().submit(&[1.0, 2.0]).unwrap_err();
+        assert_eq!(err, SubmitError::WrongWidth { got: 2, want: 3 });
+    }
+
+    #[test]
+    fn full_queue_sheds_instead_of_blocking() {
+        let cfg = ShardConfig { shards: 1, max_batch: 4, queue_cap: 2, threads: 1, kernel: None };
+        let server = ShardedServer::start_held(toy_slot(), cfg).unwrap();
+        let c = server.client_for(0);
+        let t0 = c.submit(&[0.0, 0.0, 0.0]).unwrap();
+        let t1 = c.submit(&[1.0, 0.0, 0.0]).unwrap();
+        // queue full: the third submit must shed, not block
+        let err = c.submit(&[2.0, 0.0, 0.0]).unwrap_err();
+        assert_eq!(err, SubmitError::Overloaded { shard: 0, queue_cap: 2 });
+        assert_eq!(server.queue_depths(), vec![2]);
+        server.release();
+        assert_eq!(t0.wait().unwrap().logits.len(), 2);
+        assert_eq!(t1.wait().unwrap().logits.len(), 2);
+        let (totals, _) = server.shutdown();
+        assert_eq!(totals.rows, 2);
+        assert_eq!(totals.shed, 1);
+        assert_eq!(totals.max_depth_seen, 2);
+    }
+
+    #[test]
+    fn accepted_requests_answered_through_shutdown() {
+        let cfg = ShardConfig { shards: 2, max_batch: 4, queue_cap: 64, threads: 1, kernel: None };
+        let server = ShardedServer::start_held(toy_slot(), cfg).unwrap();
+        let tickets: Vec<ShardTicket> = (0..16)
+            .map(|i| server.client().submit(&[i as f32, 0.0, 1.0]).unwrap())
+            .collect();
+        server.release();
+        let (totals, _) = server.shutdown(); // drains before joining
+        assert_eq!(totals.rows, 16);
+        for t in tickets {
+            assert_eq!(t.wait().unwrap().logits.len(), 2);
+        }
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors() {
+        let server = ShardedServer::start(toy_slot(), ShardConfig::default()).unwrap();
+        let client = server.client();
+        drop(server);
+        assert_eq!(client.submit(&[0.0; 3]).unwrap_err(), SubmitError::ShutDown);
+    }
+
+    #[test]
+    fn promote_serves_new_generation() {
+        let server = ShardedServer::start(toy_slot(), ShardConfig::default()).unwrap();
+        let c = server.client();
+        assert_eq!(c.predict(&[0.0; 3]).unwrap().generation, 1);
+        let gen = server
+            .promote(ServableModel::shallow("v2", 1, init_model(9, 0, 4, 3, 2), Act::Tanh))
+            .unwrap();
+        assert_eq!(gen, 2);
+        // the swap is picked up on the next batch
+        assert_eq!(c.predict(&[0.0; 3]).unwrap().generation, 2);
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let bad = ShardConfig { shards: 0, ..ShardConfig::default() };
+        assert!(ShardedServer::start(toy_slot(), bad).is_err());
+        let bad = ShardConfig { queue_cap: 0, ..ShardConfig::default() };
+        assert!(ShardedServer::start(toy_slot(), bad).is_err());
+    }
+}

@@ -49,6 +49,13 @@ fn stray_spawn_fixture() {
     assert_eq!(shape(&outside), vec![(4, "thread_spawn")]);
     assert!(scan_source("rust/src/util/threadpool.rs", src).is_empty());
     assert!(scan_source("rust/src/serve/batcher.rs", src).is_empty());
+    // serving v2 lives under the same audited prefix: shard workers and
+    // the per-connection HTTP handlers may spawn threads
+    assert!(scan_source("rust/src/serve/shard.rs", src).is_empty());
+    assert!(scan_source("rust/src/serve/http.rs", src).is_empty());
+    // but a serving helper that escaped the audited directory may not
+    let escaped = scan_source("rust/src/serve_helpers.rs", src);
+    assert_eq!(shape(&escaped), vec![(4, "thread_spawn")]);
 }
 
 #[test]
